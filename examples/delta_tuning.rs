@@ -1,0 +1,70 @@
+//! Delta tuning: pick the largest delta_mAP that keeps measured accuracy
+//! within a user-given budget of the strictest setting — the operational
+//! decision Insight #4 of the paper supports ("delta = 5 costs ~2% mAP
+//! for large energy savings").
+//!
+//! ```sh
+//! cargo run --release --example delta_tuning -- --router ED --budget 3.0
+//! ```
+
+use anyhow::Result;
+
+use ecore::config::ExperimentConfig;
+use ecore::dataset::coco;
+use ecore::experiments::serve::{deployed_store, run_router_with_delta};
+use ecore::experiments::Harness;
+use ecore::gateway::router_by_name;
+use ecore::util::cli::Args;
+use ecore::util::stats::pct_change;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let router = args.str_or("router", "ED");
+    let budget = args.f64_or("budget", 3.0); // acceptable mAP drop, points
+    let images = args.usize_or("images", 150);
+
+    let cfg = ExperimentConfig {
+        profile_per_group: 16,
+        coco_images: images,
+        ..Default::default()
+    };
+    let h = Harness::new(cfg)?;
+    let deployed = deployed_store(&h)?;
+    let spec = router_by_name(&router)
+        .ok_or_else(|| anyhow::anyhow!("unknown router {router}"))?;
+    let ds = coco::build(images, h.cfg.seed);
+
+    println!("tuning delta for {router}: accuracy budget {budget} mAP pts");
+    let strict = run_router_with_delta(&h, spec, &deployed, &ds, 0.0)?;
+    println!(
+        "delta=0 (strict): mAP {:.2}, energy {:.2} mWh",
+        strict.map(),
+        strict.total_energy_mwh()
+    );
+
+    let mut chosen = (0.0, strict.map(), strict.total_energy_mwh());
+    for delta in [5.0, 10.0, 15.0, 20.0, 25.0] {
+        let m = run_router_with_delta(&h, spec, &deployed, &ds, delta)?;
+        let drop = strict.map() - m.map();
+        let savings = pct_change(
+            strict.total_energy_mwh(),
+            m.total_energy_mwh(),
+        );
+        println!(
+            "delta={delta:<4} mAP {:.2} (drop {drop:+.2}) energy {:.2} mWh ({savings:+.1}%)",
+            m.map(),
+            m.total_energy_mwh()
+        );
+        if drop <= budget {
+            chosen = (delta, m.map(), m.total_energy_mwh());
+        }
+    }
+    println!(
+        "\nchosen delta = {} (mAP {:.2}, energy {:.2} mWh, {:+.1}% vs strict)",
+        chosen.0,
+        chosen.1,
+        chosen.2,
+        pct_change(strict.total_energy_mwh(), chosen.2)
+    );
+    Ok(())
+}

@@ -1,0 +1,27 @@
+//! Fleet profiling: run the offline profiler over the full 8-device x
+//! 8-model grid (or a custom fleet from a TOML config), print the Fig. 5
+//! Pareto table and the Table-1 testbed selection.
+//!
+//! ```sh
+//! cargo run --release --example fleet_profile -- [--profile-per-group 24]
+//! ```
+
+use anyhow::Result;
+
+use ecore::config::ExperimentConfig;
+use ecore::experiments::Harness;
+use ecore::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let mut cfg = ExperimentConfig {
+        profile_per_group: 24,
+        ..Default::default()
+    };
+    cfg.override_with(&args);
+
+    let h = Harness::new(cfg)?;
+    h.run("fig5")?;
+    h.run("table1")?;
+    Ok(())
+}

@@ -1,0 +1,55 @@
+//! Quickstart: the end-to-end ECORE driver.
+//!
+//! Loads the AOT artifacts, profiles the device fleet on a small
+//! synthetic set, selects the Table-1 testbed, deploys the node pool,
+//! serves 100 COCO-like images through the Edge-Detection (ED) router,
+//! and reports the paper's four metrics against the LE/HMG reference
+//! points. Run with:
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+
+use ecore::config::ExperimentConfig;
+use ecore::dataset::coco;
+use ecore::experiments::serve::{
+    deployed_store, print_panel, run_router_on_dataset,
+};
+use ecore::experiments::Harness;
+use ecore::gateway::router_by_name;
+
+fn main() -> Result<()> {
+    // 1) harness: PJRT engine + profiling cache under results/
+    let cfg = ExperimentConfig {
+        profile_per_group: 16, // small but enough for stable ordering
+        coco_images: 100,
+        ..Default::default()
+    };
+    let h = Harness::new(cfg)?;
+
+    // 2) profile the 8x8 fleet and restrict to the Table-1 testbed
+    let deployed = deployed_store(&h)?;
+    println!("deployed testbed ({} pairs):", deployed.pairs().len());
+    for p in deployed.pairs() {
+        println!("  {p}");
+    }
+
+    // 3) serve 100 images through three routers and compare
+    let ds = coco::build(h.cfg.coco_images, h.cfg.seed);
+    let mut runs = Vec::new();
+    for name in ["LE", "HMG", "ED"] {
+        let spec = router_by_name(name).unwrap();
+        let m = run_router_on_dataset(&h, spec, &deployed, &ds)?;
+        runs.push(m);
+    }
+    print_panel("quickstart", &runs);
+
+    let (secs, count) = h.engine.exec_stats();
+    println!(
+        "PJRT executed {count} inferences in {secs:.2}s wall ({:.1} ms each)",
+        1000.0 * secs / count.max(1) as f64
+    );
+    Ok(())
+}

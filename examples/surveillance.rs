@@ -1,0 +1,98 @@
+//! Surveillance scenario (the paper's motivating use-case, Fig. 1): a
+//! pedestrian-crossing camera feed served through the Output-Based (OB)
+//! router, which exploits temporal continuity to avoid per-frame
+//! estimation. Reports per-window metrics so the adaptation to crowd
+//! density is visible.
+//!
+//! ```sh
+//! cargo run --release --example surveillance -- [--frames 240]
+//! ```
+
+use anyhow::Result;
+
+use ecore::config::ExperimentConfig;
+use ecore::dataset::video;
+use ecore::experiments::serve::deployed_store;
+use ecore::experiments::Harness;
+use ecore::gateway::{router_by_name, Gateway};
+use ecore::metrics::RunMetrics;
+use ecore::nodes::NodePool;
+use ecore::util::cli::Args;
+use ecore::workload;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let frames_n = args.usize_or("frames", 240);
+    let window = args.usize_or("window", 60);
+
+    let cfg = ExperimentConfig {
+        profile_per_group: 16,
+        video_frames: frames_n,
+        ..Default::default()
+    };
+    let h = Harness::new(cfg)?;
+    let deployed = deployed_store(&h)?;
+
+    println!("generating {frames_n}-frame pedestrian stream...");
+    let frames = video::build_frames(frames_n, h.cfg.seed ^ 0x71DE);
+    let pseudo = workload::pseudo_annotate(&h.engine, &frames)?;
+
+    let pool = NodePool::deploy(
+        &h.engine,
+        &deployed.pairs(),
+        &ecore::devices::fleet(),
+        h.cfg.seed,
+    )?;
+    let mut gw = Gateway::new(
+        &h.engine,
+        router_by_name("OB").unwrap(),
+        deployed,
+        pool,
+        h.cfg.delta_map,
+        h.cfg.seed,
+    );
+
+    println!(
+        "{:>10} {:>8} {:>10} {:>12} {:>14}",
+        "window", "frames", "mean_objs", "energy_mWh", "latency_ms/frm"
+    );
+    let mut total = RunMetrics::new("OB");
+    for (wi, chunk) in frames.chunks(window).enumerate() {
+        let gts = &pseudo[wi * window..wi * window + chunk.len()];
+        let mut m = RunMetrics::new("OB");
+        for (scene, gt) in chunk.iter().zip(gts.iter()) {
+            gw.handle(&scene.image, gt.len(), gt, &mut m)?;
+        }
+        let mean_objs = chunk
+            .iter()
+            .map(|f| f.gt.len() as f64)
+            .sum::<f64>()
+            / chunk.len() as f64;
+        println!(
+            "{:>10} {:>8} {:>10.2} {:>12.3} {:>14.2}",
+            wi,
+            chunk.len(),
+            mean_objs,
+            m.total_energy_mwh(),
+            1000.0 * m.total_latency_s / chunk.len() as f64
+        );
+        // accumulate into the run total
+        total.backend_energy_mwh += m.backend_energy_mwh;
+        total.gateway_energy_mwh += m.gateway_energy_mwh;
+        total.total_latency_s += m.total_latency_s;
+        total.gateway_latency_s += m.gateway_latency_s;
+        total.images.extend(m.images);
+        total.requests += m.requests;
+        total.est_abs_err_sum += m.est_abs_err_sum;
+    }
+    println!(
+        "\ntotal: {} frames, mAP {:.2} (vs yolov8x pseudo-labels), \
+         {:.2} mWh, {:.2} s, mean estimation error {:.2}",
+        total.requests,
+        total.map(),
+        total.total_energy_mwh(),
+        total.total_latency_s,
+        total.mean_estimation_error()
+    );
+    Ok(())
+}

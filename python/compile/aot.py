@@ -1,0 +1,144 @@
+"""AOT compile path: lower every ECORE compute graph to HLO text.
+
+Run once via `make artifacts`; the Rust coordinator loads the artifacts
+through the PJRT C API and Python never appears on the request path.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Besides the `.hlo.txt` files this writes `manifest.json`, the contract
+between the build path and the Rust runtime: artifact shapes, decode
+parameters (thresholds, per-band box radii), and analytic FLOP counts
+for the device simulator.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+MANIFEST_VERSION = 2
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_fn(fn, in_shape):
+    spec = jax.ShapeDtypeStruct(in_shape, jnp.float32)
+    return jax.jit(fn).lower(spec)
+
+
+def _detector_entry(name: str, artifact_name: str | None = None) -> dict:
+    v = M.VARIANTS[name]
+    return {
+        "kind": "detector",
+        "file": f"{artifact_name or name}.hlo.txt",
+        "input": {"shape": [M.NATIVE_RES, M.NATIVE_RES], "dtype": "f32"},
+        "output": {
+            "shape": [2, v.k, v.res, v.res],
+            "dtype": "f32",
+        },
+        "params": {
+            "res": v.res,
+            "factor": v.factor,
+            "k": v.k,
+            "sigmas": M.pyramid_sigmas(v),
+            "band_radii_native": M.band_radii_native(v),
+            "threshold": v.threshold,
+        },
+        "flops": M.detector_flops(name),
+    }
+
+
+def build_manifest() -> dict:
+    models = {}
+    for name in M.VARIANTS:
+        models[name] = _detector_entry(name)
+    for alias, base in M.GATEWAY_MODELS.items():
+        models[alias] = _detector_entry(base, artifact_name=alias)
+        models[alias]["kind"] = "gateway_detector"
+    models["canny"] = {
+        "kind": "canny",
+        "file": "canny.hlo.txt",
+        "input": {"shape": [M.NATIVE_RES, M.NATIVE_RES], "dtype": "f32"},
+        "output": {"shape": [M.CANNY_RES, M.CANNY_RES], "dtype": "f32"},
+        "params": {
+            "res": M.CANNY_RES,
+            "factor": M.NATIVE_RES // M.CANNY_RES,
+            "sigma": M.CANNY_SIGMA,
+            "lo": M.CANNY_LO,
+            "hi": M.CANNY_HI,
+        },
+        "flops": M.canny_flops(),
+    }
+    return {
+        "version": MANIFEST_VERSION,
+        "native_res": M.NATIVE_RES,
+        "models": models,
+    }
+
+
+def _inputs_fingerprint() -> str:
+    """Hash of every compile-path source file; lets `make` skip rebuilds."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for root, _, files in sorted(os.walk(here)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--only", nargs="*", help="subset of artifact names to rebuild"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = build_manifest()
+    manifest["fingerprint"] = _inputs_fingerprint()
+
+    jobs: list[tuple[str, object]] = []
+    for name in M.VARIANTS:
+        jobs.append((name, M.make_detector(name)))
+    for alias, base in M.GATEWAY_MODELS.items():
+        jobs.append((alias, M.make_detector(base)))
+    jobs.append(("canny", M.make_canny()))
+
+    for name, fn in jobs:
+        if args.only and name not in args.only:
+            continue
+        path = os.path.join(args.out_dir, manifest["models"][name]["file"])
+        text = to_hlo_text(lower_fn(fn, (M.NATIVE_RES, M.NATIVE_RES)))
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""L1 Pallas kernel: separable Gaussian blur.
+
+Two row-/column-tiled 1-D convolution passes. Tiling rationale
+(DESIGN.md §Hardware-Adaptation): this is a stencil (VPU) workload, so
+blocks keep the 128-lane minor dimension whole and tile the major
+dimension. The horizontal pass tiles rows (each block holds full rows, so
+the conv along W needs no halo exchange); the vertical pass tiles columns
+(full columns per block). Edge padding happens inside the kernel body on
+the VMEM-resident block.
+
+All kernels lower with interpret=True: on this CPU-PJRT testbed the
+interpreter traces the body to plain HLO so the compiled artifact runs
+natively; real-TPU Mosaic lowering is a compile-only target (DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import gaussian_taps
+
+__all__ = ["blur1d", "blur2d"]
+
+# Major-dimension tile for the 1-D conv passes. 64 rows x 384 cols f32
+# = 96 KiB per block plus the padded copy — comfortably inside a 16 MiB
+# VMEM budget with double buffering.
+_TILE = 64
+
+
+def _conv_rows_kernel(x_ref, o_ref, *, taps):
+    """Convolve along the last axis of a [tile, W] block."""
+    x = x_ref[...]
+    radius = (len(taps) - 1) // 2
+    w = x.shape[1]
+    padded = jnp.pad(x, ((0, 0), (radius, radius)), mode="edge")
+    acc = jnp.zeros_like(x)
+    for i, t in enumerate(taps):
+        acc = acc + jnp.float32(t) * padded[:, i : i + w]
+    o_ref[...] = acc
+
+
+def _conv_cols_kernel(x_ref, o_ref, *, taps):
+    """Convolve along the first axis of a [H, tile] block."""
+    x = x_ref[...]
+    radius = (len(taps) - 1) // 2
+    h = x.shape[0]
+    padded = jnp.pad(x, ((radius, radius), (0, 0)), mode="edge")
+    acc = jnp.zeros_like(x)
+    for i, t in enumerate(taps):
+        acc = acc + jnp.float32(t) * padded[i : i + h, :]
+    o_ref[...] = acc
+
+
+def _tile(n: int) -> int:
+    """Largest tile <= _TILE that divides n (grid must tile exactly)."""
+    for cand in range(min(_TILE, n), 0, -1):
+        if n % cand == 0:
+            return cand
+    return 1
+
+
+def blur1d(img: jnp.ndarray, sigma: float, axis: int) -> jnp.ndarray:
+    """One 1-D Gaussian pass along `axis` of an [H, W] f32 image."""
+    taps = tuple(float(t) for t in gaussian_taps(sigma))
+    h, w = img.shape
+    if axis == 1:
+        th = _tile(h)
+        kernel = functools.partial(_conv_rows_kernel, taps=taps)
+        return pl.pallas_call(
+            kernel,
+            grid=(h // th,),
+            in_specs=[pl.BlockSpec((th, w), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((th, w), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((h, w), jnp.float32),
+            interpret=True,
+        )(img)
+    tw = _tile(w)
+    kernel = functools.partial(_conv_cols_kernel, taps=taps)
+    return pl.pallas_call(
+        kernel,
+        grid=(w // tw,),
+        in_specs=[pl.BlockSpec((h, tw), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((h, tw), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((h, w), jnp.float32),
+        interpret=True,
+    )(img)
+
+
+def blur2d(img: jnp.ndarray, sigma: float) -> jnp.ndarray:
+    """Separable Gaussian blur of an [H, W] f32 image (edge padded).
+
+    Matches `ref.blur2d_ref` exactly (same truncated taps).
+    """
+    return blur1d(blur1d(img, sigma, axis=1), sigma, axis=0)

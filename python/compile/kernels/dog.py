@@ -1,0 +1,58 @@
+"""L1 Pallas kernel: fused Difference-of-Gaussians + local-max heat map.
+
+Given the Gaussian pyramid [K+1, H, W], one grid step per scale computes
+the DoG band, splits it into bright (+) / dark (-) blob responses, and
+zeroes every pixel that is not the 3x3 local maximum of its response map
+— producing the sparse peak heat map the Rust decoder consumes.
+
+Two input refs alias the pyramid at consecutive scale indices (block
+shape [1, H, W], index maps k and k+1) so each grid step streams exactly
+the two scale planes it needs — the whole pyramid never has to sit in
+VMEM at once.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["dog_localmax"]
+
+
+def _maxpool3(r: jnp.ndarray) -> jnp.ndarray:
+    p = jnp.pad(r, ((1, 1), (1, 1)), mode="edge")
+    h, w = r.shape
+    m = r
+    for dy in range(3):
+        for dx in range(3):
+            m = jnp.maximum(m, p[dy : dy + h, dx : dx + w])
+    return m
+
+
+def _dog_kernel(lo_ref, hi_ref, o_ref):
+    d = lo_ref[0] - hi_ref[0]
+    for cls in range(2):
+        r = jnp.maximum(d if cls == 0 else -d, 0.0)
+        m = _maxpool3(r)
+        o_ref[cls, 0] = jnp.where(r >= m, r, 0.0)
+
+
+def dog_localmax(pyr: jnp.ndarray) -> jnp.ndarray:
+    """pyr: [K+1, H, W] f32 -> heat [2, K, H, W] f32.
+
+    Matches `ref.dog_localmax_ref` exactly.
+    """
+    k1, h, w = pyr.shape
+    k = k1 - 1
+    return pl.pallas_call(
+        _dog_kernel,
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec((1, h, w), lambda s: (s, 0, 0)),
+            pl.BlockSpec((1, h, w), lambda s: (s + 1, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((2, 1, h, w), lambda s: (0, s, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((2, k, h, w), jnp.float32),
+        interpret=True,
+    )(pyr, pyr)

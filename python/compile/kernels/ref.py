@@ -1,0 +1,158 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+Every Pallas kernel in this package has an exact reference here, written
+with plain jax.numpy ops and no Pallas machinery. The pytest suite asserts
+allclose between kernel and oracle over hypothesis-driven shape/parameter
+sweeps — this is the core correctness signal for Layer 1.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "gaussian_taps",
+    "blur2d_ref",
+    "dog_localmax_ref",
+    "sobel_nms_ref",
+    "avgpool_ref",
+]
+
+
+def gaussian_taps(sigma: float, max_radius: int = 64) -> np.ndarray:
+    """Normalized 1-D Gaussian taps, truncated at 2.5*sigma (capped).
+
+    The cap bounds HLO size for the largest pyramid scales; both the Pallas
+    kernel and this oracle share the same taps so truncation is consistent.
+    """
+    radius = min(int(math.ceil(2.5 * float(sigma))), max_radius)
+    radius = max(radius, 1)
+    xs = np.arange(-radius, radius + 1, dtype=np.float64)
+    t = np.exp(-0.5 * (xs / float(sigma)) ** 2)
+    t /= t.sum()
+    return t.astype(np.float32)
+
+
+def _pad_edge(x: jnp.ndarray, radius: int, axis: int) -> jnp.ndarray:
+    pad = [(0, 0), (0, 0)]
+    pad[axis] = (radius, radius)
+    return jnp.pad(x, pad, mode="edge")
+
+
+def _conv1d_ref(x: jnp.ndarray, taps: np.ndarray, axis: int) -> jnp.ndarray:
+    radius = (len(taps) - 1) // 2
+    padded = _pad_edge(x, radius, axis)
+    out = jnp.zeros_like(x)
+    n = x.shape[axis]
+    for i, w in enumerate(taps):
+        if axis == 0:
+            sl = padded[i : i + n, :]
+        else:
+            sl = padded[:, i : i + n]
+        out = out + jnp.float32(w) * sl
+    return out
+
+
+def blur2d_ref(img: jnp.ndarray, sigma: float) -> jnp.ndarray:
+    """Separable Gaussian blur with edge padding. img: [H, W] f32."""
+    taps = gaussian_taps(sigma)
+    return _conv1d_ref(_conv1d_ref(img, taps, axis=1), taps, axis=0)
+
+
+def _maxpool3_ref(r: jnp.ndarray) -> jnp.ndarray:
+    """3x3 max pool, edge padded (so border peaks survive)."""
+    p = jnp.pad(r, ((1, 1), (1, 1)), mode="edge")
+    h, w = r.shape
+    m = r
+    for dy in range(3):
+        for dx in range(3):
+            m = jnp.maximum(m, p[dy : dy + h, dx : dx + w])
+    return m
+
+
+def dog_localmax_ref(pyr: jnp.ndarray) -> jnp.ndarray:
+    """Difference-of-Gaussians + per-scale 3x3 local-max heat map.
+
+    pyr: [K+1, H, W] Gaussian pyramid (increasing sigma).
+    Returns heat: [2, K, H, W] where channel 0 = bright-blob responses,
+    channel 1 = dark-blob responses; a pixel is nonzero iff it is the
+    3x3 local maximum of its (class, scale) response map.
+    """
+    k1, h, w = pyr.shape
+    k = k1 - 1
+    out = []
+    for cls in range(2):
+        maps = []
+        for s in range(k):
+            d = pyr[s] - pyr[s + 1]
+            r = jnp.maximum(d if cls == 0 else -d, 0.0)
+            m = _maxpool3_ref(r)
+            maps.append(jnp.where(r >= m, r, 0.0))
+        out.append(jnp.stack(maps))
+    return jnp.stack(out)
+
+
+def sobel_nms_ref(img: jnp.ndarray, lo: float, hi: float) -> jnp.ndarray:
+    """Canny core: Sobel gradient -> direction-quantized NMS -> double
+    threshold. Returns [H, W] f32 with values 0 (none), 1 (weak), 2 (strong).
+
+    Hysteresis (weak-to-strong linking) is a graph traversal and lives in
+    the Rust estimator; this kernel produces its input.
+    """
+    h, w = img.shape
+    p = jnp.pad(img, ((1, 1), (1, 1)), mode="edge")
+
+    def sh(dy, dx):
+        return p[1 + dy : 1 + dy + h, 1 + dx : 1 + dx + w]
+
+    gx = (
+        (sh(-1, 1) + 2.0 * sh(0, 1) + sh(1, 1))
+        - (sh(-1, -1) + 2.0 * sh(0, -1) + sh(1, -1))
+    )
+    gy = (
+        (sh(1, -1) + 2.0 * sh(1, 0) + sh(1, 1))
+        - (sh(-1, -1) + 2.0 * sh(-1, 0) + sh(-1, 1))
+    )
+    mag = jnp.sqrt(gx * gx + gy * gy)
+
+    # Quantize direction into {0: E-W, 1: +45deg, 2: N-S, 3: -45deg} using
+    # tan(22.5)/tan(67.5) comparisons on |gy| vs |gx| without division.
+    ax, ay = jnp.abs(gx), jnp.abs(gy)
+    t1 = jnp.float32(0.41421356)  # tan(22.5 deg)
+    t2 = jnp.float32(2.41421356)  # tan(67.5 deg)
+    same_sign = (gx * gy) >= 0
+    d0 = ay <= t1 * ax
+    d2 = ay > t2 * ax
+    diag = (~d0) & (~d2)
+    d1 = diag & same_sign
+    d3 = diag & (~same_sign)
+
+    mp = jnp.pad(mag, ((1, 1), (1, 1)), mode="constant")
+
+    def msh(dy, dx):
+        return mp[1 + dy : 1 + dy + h, 1 + dx : 1 + dx + w]
+
+    keep = (
+        (d0 & (mag >= msh(0, 1)) & (mag >= msh(0, -1)))
+        | (d2 & (mag >= msh(1, 0)) & (mag >= msh(-1, 0)))
+        | (d1 & (mag >= msh(1, 1)) & (mag >= msh(-1, -1)))
+        | (d3 & (mag >= msh(1, -1)) & (mag >= msh(-1, 1)))
+    )
+    thinned = jnp.where(keep, mag, 0.0)
+    return jnp.where(
+        thinned >= hi, 2.0, jnp.where(thinned >= lo, 1.0, 0.0)
+    ).astype(jnp.float32)
+
+
+def avgpool_ref(img: jnp.ndarray, factor: int) -> jnp.ndarray:
+    """Non-overlapping average pool by integer factor. img: [H, W]."""
+    if factor == 1:
+        return img
+    h, w = img.shape
+    assert h % factor == 0 and w % factor == 0, (h, w, factor)
+    return img.reshape(h // factor, factor, w // factor, factor).mean(
+        axis=(1, 3)
+    )

@@ -1,0 +1,223 @@
+"""L2: the ECORE detector-family compute graphs (build-time JAX).
+
+The paper's eight object-detection models (SSD v1/Lite, EfficientDet-Lite
+0/1/2, YOLOv8 n/s/m) are substituted by a parametric multi-scale DoG blob
+detector family (DESIGN.md §3): each variant takes the native 384x384
+image, average-pools to its working resolution, builds an incremental
+Gaussian pyramid (L1 `blur2d` kernels), and emits the fused
+DoG + local-max heat map (L1 `dog_localmax`). Capacity ordering — working
+resolution and scale count — reproduces the paper's accuracy/complexity
+trade-off with *real* inference per request.
+
+Every function here is lowered once by `aot.py` to an HLO-text artifact;
+Python never runs on the request path.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from .kernels.blur import blur2d
+from .kernels.dog import dog_localmax
+from .kernels.sobel import sobel_nms
+
+__all__ = [
+    "NATIVE_RES",
+    "Variant",
+    "VARIANTS",
+    "GATEWAY_MODELS",
+    "pyramid_sigmas",
+    "band_radii_native",
+    "incremental_sigmas",
+    "make_pyramid",
+    "make_detector",
+    "make_canny",
+    "detector_flops",
+    "canny_flops",
+]
+
+# Native request resolution: every camera frame enters the system as a
+# [384, 384] f32 grayscale tensor. 384 is divisible by all working
+# resolutions (96, 128, 192, 384) so downsampling is an exact average pool.
+NATIVE_RES = 384
+
+# Canny (ED estimator) parameters — shared with the Rust gateway via the
+# artifact manifest. 96x96 keeps the ED estimator ~4x cheaper than the
+# SSD front-end (the paper's overhead ordering: ED < SF), at the price of
+# coarse counts on crowded scenes — exactly the paper's characterization.
+CANNY_RES = 96
+CANNY_SIGMA = 1.0
+CANNY_LO = 0.05
+CANNY_HI = 0.12
+
+
+@dataclass(frozen=True)
+class Variant:
+    """One detector variant (stands in for one paper model)."""
+
+    name: str
+    res: int  # working resolution (divides NATIVE_RES)
+    k: int  # number of DoG bands (pyramid has k+1 levels)
+    sigma0: float  # finest pyramid sigma, in working-res pixels
+    sigma_max: float  # coarsest pyramid sigma (sets the ratio)
+    threshold: float  # peak response decode threshold (Rust side)
+
+    @property
+    def factor(self) -> int:
+        return NATIVE_RES // self.res
+
+    @property
+    def ratio(self) -> float:
+        return (self.sigma_max / self.sigma0) ** (1.0 / self.k)
+
+
+def _v(name, res, k, sigma0, sigma_max, threshold=0.030) -> Variant:
+    return Variant(name, res, k, sigma0, sigma_max, threshold)
+
+
+# The eight backend models, ordered by capacity. sigma_max is chosen so
+# the coarsest band covers ~30 native-res pixels of blob radius at every
+# working resolution (sigma_max * factor ~= 30); see DESIGN.md §3.
+VARIANTS: dict[str, Variant] = {
+    v.name: v
+    for v in [
+        _v("ssd_v1", 96, 3, 1.4, 7.5),
+        _v("ssd_lite", 96, 4, 1.2, 7.5),
+        _v("effdet_lite0", 128, 4, 1.3, 10.0),
+        _v("effdet_lite1", 128, 5, 1.2, 10.0),
+        _v("effdet_lite2", 192, 5, 1.3, 15.0),
+        _v("yolov8n", 192, 6, 1.2, 15.0),
+        _v("yolov8s", 384, 6, 1.6, 30.0),
+        _v("yolov8m", 384, 7, 1.4, 30.0),
+        # yolov8x generates pseudo-ground-truth for the video dataset
+        # (paper §4.1.1); it is not a routing target.
+        _v("yolov8x", 384, 8, 1.3, 30.0, threshold=0.028),
+    ]
+}
+
+# Models that run *on the gateway*: the SSD-based front-end estimator (SF)
+# is the cheapest backend variant re-exported under its own artifact name.
+GATEWAY_MODELS = {"ssd_front": "ssd_v1"}
+
+
+def pyramid_sigmas(v: Variant) -> list[float]:
+    """Absolute sigmas of the k+1 pyramid levels (geometric ladder)."""
+    return [v.sigma0 * v.ratio**i for i in range(v.k + 1)]
+
+
+def band_radii_native(v: Variant) -> list[float]:
+    """Expected blob radius (native-res px) for each DoG band.
+
+    Band k sits between pyramid levels k and k+1, so its characteristic
+    sigma is their geometric mean; empirical calibration against planted
+    Gaussian bumps (python -m compile.calibrate) gives box half-extent
+    ~= 2.0 x that sigma (native px). The Rust decoder turns peak
+    (band, y, x) into a box with this radius.
+    """
+    s = pyramid_sigmas(v)
+    return [
+        2.0 * math.sqrt(s[i] * s[i + 1]) * v.factor for i in range(v.k)
+    ]
+
+
+def _avgpool(img: jnp.ndarray, factor: int) -> jnp.ndarray:
+    if factor == 1:
+        return img
+    h, w = img.shape
+    return img.reshape(h // factor, factor, w // factor, factor).mean(
+        axis=(1, 3)
+    )
+
+
+def incremental_sigmas(v: Variant) -> list[float]:
+    """Per-level *incremental* blur sigmas.
+
+    Level 0 blurs the raw image with sigma_0; level i+1 blurs level i with
+    sqrt(sigma_{i+1}^2 - sigma_i^2). Incremental blurring keeps every
+    conv's taps short — the perf-critical choice recorded in DESIGN.md
+    §Perf (absolute blurs at sigma ~30 would need ~150-tap convs).
+    """
+    s = pyramid_sigmas(v)
+    out = [s[0]]
+    for i in range(v.k):
+        out.append(math.sqrt(s[i + 1] ** 2 - s[i] ** 2))
+    return out
+
+
+def make_pyramid(img: jnp.ndarray, v: Variant) -> jnp.ndarray:
+    """[res, res] f32 -> Gaussian pyramid [k+1, res, res] via L1 blurs."""
+    inc = incremental_sigmas(v)
+    levels = [blur2d(img, inc[0])]
+    for d in inc[1:]:
+        levels.append(blur2d(levels[-1], d))
+    return jnp.stack(levels)
+
+
+def make_detector(name: str):
+    """Build the full detector graph for one variant.
+
+    Returns fn: [NATIVE_RES, NATIVE_RES] f32 -> (heat [2, k, res, res],)
+    The 1-tuple return matches the `return_tuple=True` lowering contract
+    the Rust loader unwraps with `to_tuple1()`.
+    """
+    v = VARIANTS[name]
+
+    def fn(img: jnp.ndarray):
+        x = _avgpool(img, v.factor)
+        pyr = make_pyramid(x, v)
+        return (dog_localmax(pyr),)
+
+    return fn
+
+
+def make_canny():
+    """Gateway ED-estimator graph.
+
+    [NATIVE_RES, NATIVE_RES] f32 -> (edge classes [CANNY_RES, CANNY_RES],)
+    with values {0: none, 1: weak, 2: strong}; hysteresis + contour
+    counting happen in the Rust estimator.
+    """
+
+    def fn(img: jnp.ndarray):
+        x = _avgpool(img, NATIVE_RES // CANNY_RES)
+        x = blur2d(x, CANNY_SIGMA)
+        return (sobel_nms(x, CANNY_LO, CANNY_HI),)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Analytic FLOP counts — consumed by the Rust device simulator, which maps
+# FLOPs through per-device throughput/power models to latency and energy.
+# ---------------------------------------------------------------------------
+
+
+def _taps_len(sigma: float, max_radius: int = 64) -> int:
+    radius = max(min(int(math.ceil(2.5 * sigma)), max_radius), 1)
+    return 2 * radius + 1
+
+
+def detector_flops(name: str) -> int:
+    """Total FLOPs for one forward pass of a detector variant."""
+    v = VARIANTS[name]
+    n = NATIVE_RES
+    flops = n * n  # average pool (~1 add/px)
+    px = v.res * v.res
+    for d in incremental_sigmas(v):
+        # separable blur: 2 passes x (mul+add per tap)
+        flops += px * 2 * 2 * _taps_len(d)
+    # DoG + relu + 3x3 maxpool + select, both classes, k bands
+    flops += v.k * px * 2 * (1 + 1 + 9 + 1)
+    return flops
+
+
+def canny_flops() -> int:
+    n, r = NATIVE_RES, CANNY_RES
+    px = r * r
+    flops = n * n
+    flops += px * 2 * 2 * _taps_len(CANNY_SIGMA)
+    flops += px * 40  # sobel (2x 3x3), magnitude, quantize, nms, threshold
+    return flops

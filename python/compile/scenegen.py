@@ -1,0 +1,132 @@
+"""Synthetic scene generator — Python twin of `rust/src/dataset/scene.rs`.
+
+Used at build time for kernel calibration and python tests. The Rust
+generator is the production one; the two are statistical equivalents
+(same object model, radius law, contrast ranges), not bit-identical.
+
+Scene model (DESIGN.md §3): grayscale 384x384, background 0.5 with smooth
+low-frequency variation plus white noise; N objects rendered as rotated
+anisotropic Gaussian bumps, bright (class 0) or dark (class 1). Crowded
+scenes force smaller radii — the natural mechanism by which low-capacity
+detectors lose accuracy on high object counts, mirroring the paper's
+Figure 2 phenomenon.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import numpy as np
+
+NATIVE_RES = 384
+NOISE_STD = 0.02
+BG_WAVE_AMP = 0.02
+CONTRAST_RANGE = (0.20, 0.60)
+MAX_PLACE_TRIES = 40
+
+
+@dataclass
+class SceneObject:
+    cx: float
+    cy: float
+    rx: float  # half-width of the ground-truth box
+    ry: float  # half-height
+    cls: int  # 0 bright, 1 dark
+    contrast: float
+    theta: float
+
+    @property
+    def box(self) -> tuple[float, float, float, float]:
+        return (
+            self.cx - self.rx,
+            self.cy - self.ry,
+            self.cx + self.rx,
+            self.cy + self.ry,
+        )
+
+
+def radius_range(n: int) -> tuple[float, float]:
+    """Radius law: more objects -> smaller objects (crowding).
+
+    Calibrated (compile/calibrate.py) so the low-capacity detectors keep
+    up on sparse scenes but miss a growing fraction of crowded-scene
+    objects — the paper's Figure 2 phenomenon.
+    """
+    if n <= 1:
+        return 16.0, 32.0
+    hi = 32.0 / (1.0 + 0.35 * (n - 1))
+    hi = max(hi, 8.0)
+    return max(5.0, hi / 2.5), hi
+
+
+def _boxes_overlap(a, b, slack: float = 4.0) -> bool:
+    return not (
+        a[2] + slack < b[0]
+        or b[2] + slack < a[0]
+        or a[3] + slack < b[1]
+        or b[3] + slack < a[1]
+    )
+
+
+def place_objects(n: int, rng: np.random.Generator) -> list[SceneObject]:
+    lo, hi = radius_range(n)
+    objs: list[SceneObject] = []
+    for _ in range(n):
+        for _try in range(MAX_PLACE_TRIES):
+            r = float(rng.uniform(lo, hi))
+            aspect = float(rng.uniform(0.75, 1.33))
+            rx, ry = r * aspect, r / aspect
+            margin = max(rx, ry) + 4.0
+            cx = float(rng.uniform(margin, NATIVE_RES - margin))
+            cy = float(rng.uniform(margin, NATIVE_RES - margin))
+            cand = SceneObject(
+                cx,
+                cy,
+                rx,
+                ry,
+                cls=int(rng.integers(0, 2)),
+                contrast=float(rng.uniform(*CONTRAST_RANGE)),
+                theta=float(rng.uniform(0, math.pi)),
+            )
+            if all(not _boxes_overlap(cand.box, o.box) for o in objs):
+                objs.append(cand)
+                break
+        # if placement failed after MAX_PLACE_TRIES the object is dropped;
+        # ground truth is whatever was actually rendered.
+    return objs
+
+
+def render(objs: list[SceneObject], rng: np.random.Generator) -> np.ndarray:
+    n = NATIVE_RES
+    yy, xx = np.mgrid[0:n, 0:n].astype(np.float32)
+    # smooth background
+    fx = float(rng.uniform(0.5, 2.0))
+    fy = float(rng.uniform(0.5, 2.0))
+    ph = float(rng.uniform(0, 2 * math.pi))
+    img = 0.5 + BG_WAVE_AMP * np.sin(
+        2 * math.pi * (fx * xx / n + fy * yy / n) + ph
+    ).astype(np.float32)
+    for o in objs:
+        # rotated anisotropic Gaussian bump; std = half-extent / 2 so the
+        # visible edge sits near the GT box boundary.
+        ct, st = math.cos(o.theta), math.sin(o.theta)
+        dx, dy = xx - o.cx, yy - o.cy
+        u = ct * dx + st * dy
+        v = -st * dx + ct * dy
+        sx, sy = o.rx / 2.0, o.ry / 2.0
+        bump = np.exp(-0.5 * ((u / sx) ** 2 + (v / sy) ** 2)).astype(
+            np.float32
+        )
+        sign = 1.0 if o.cls == 0 else -1.0
+        img += sign * o.contrast * bump
+    img += rng.normal(0.0, NOISE_STD, size=img.shape).astype(np.float32)
+    return np.clip(img, 0.0, 1.0).astype(np.float32)
+
+
+def make_scene(
+    n_objects: int, seed: int
+) -> tuple[np.ndarray, list[SceneObject]]:
+    rng = np.random.default_rng(seed)
+    objs = place_objects(n_objects, rng)
+    return render(objs, rng), objs

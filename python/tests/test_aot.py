@@ -1,0 +1,47 @@
+"""AOT pipeline tests: lowering produces loadable HLO text with the
+shapes the manifest promises (the build half of the interchange contract;
+the Rust runtime tests exercise the load half against artifacts/)."""
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model as M
+
+
+def test_lowered_hlo_text_structure():
+    low = aot.lower_fn(M.make_detector("ssd_v1"), (384, 384))
+    text = aot.to_hlo_text(low)
+    # HLO text module with an entry computation
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # input parameter and tuple root carry the manifest shapes (HLO text
+    # annotates layouts, hence the {…} suffixes)
+    assert "f32[384,384]{1,0} parameter(0)" in text
+    v = M.VARIANTS["ssd_v1"]
+    heat = f"f32[2,{v.k},{v.res},{v.res}]"
+    # 1-tuple return convention (the rust loader calls to_tuple1)
+    assert f"ROOT" in text
+    assert f"({heat}{{3,2,1,0}}) tuple(" in text
+
+
+def test_canny_lowering_shapes():
+    text = aot.to_hlo_text(aot.lower_fn(M.make_canny(), (384, 384)))
+    assert f"f32[{M.CANNY_RES},{M.CANNY_RES}]" in text.replace("{1,0}", "")
+
+
+def test_lowering_is_deterministic():
+    f = M.make_detector("ssd_lite")
+    a = aot.to_hlo_text(aot.lower_fn(f, (384, 384)))
+    b = aot.to_hlo_text(aot.lower_fn(f, (384, 384)))
+    assert a == b
+
+
+def test_detector_jit_matches_unjitted():
+    import numpy as np
+
+    rng = np.random.default_rng(3)
+    img = jnp.asarray(rng.random((384, 384), dtype=np.float32))
+    fn = M.make_detector("ssd_v1")
+    eager = fn(img)[0]
+    jitted = jax.jit(fn)(img)[0]
+    np.testing.assert_allclose(eager, jitted, atol=1e-5)

@@ -1,0 +1,170 @@
+"""L1 kernel-vs-oracle tests: the core correctness signal.
+
+Hypothesis sweeps shapes/parameters; every Pallas kernel must match its
+pure-jnp reference to float32 tolerance.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.blur import blur1d, blur2d
+from compile.kernels.dog import dog_localmax
+from compile.kernels.sobel import sobel_nms
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _img(h, w, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.random((h, w), dtype=np.float32))
+
+
+# --- blur ---------------------------------------------------------------
+
+
+@given(
+    h=st.sampled_from([8, 17, 32, 61, 96]),
+    w=st.sampled_from([8, 23, 64, 96]),
+    sigma=st.floats(0.6, 12.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_blur2d_matches_ref(h, w, sigma, seed):
+    img = _img(h, w, seed)
+    got = blur2d(img, sigma)
+    want = ref.blur2d_ref(img, sigma)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+@given(
+    axis=st.sampled_from([0, 1]),
+    sigma=st.floats(0.5, 30.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_blur1d_matches_ref_single_axis(axis, sigma, seed):
+    img = _img(48, 48, seed)
+    got = blur1d(img, sigma, axis=axis)
+    taps = ref.gaussian_taps(sigma)
+    want = ref._conv1d_ref(img, taps, axis=axis)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+def test_blur_preserves_constant_image():
+    img = jnp.full((32, 32), 0.7, jnp.float32)
+    out = blur2d(img, 3.0)
+    np.testing.assert_allclose(out, img, atol=1e-5)
+
+
+def test_blur_mass_preserved_interior():
+    # normalized taps: the mean over the full image is preserved up to
+    # edge-padding effects; with a constant border it is exact.
+    img = _img(64, 64, 3)
+    out = blur2d(img, 2.0)
+    assert abs(float(out.mean()) - float(img.mean())) < 1e-3
+
+
+def test_gaussian_taps_normalized_and_symmetric():
+    for sigma in (0.5, 1.7, 8.0, 40.0):
+        t = ref.gaussian_taps(sigma)
+        assert abs(t.sum() - 1.0) < 1e-6
+        np.testing.assert_allclose(t, t[::-1])
+        assert len(t) % 2 == 1
+
+
+def test_gaussian_taps_radius_cap():
+    assert len(ref.gaussian_taps(100.0)) == 2 * 64 + 1
+
+
+# --- dog_localmax -------------------------------------------------------
+
+
+@given(
+    k=st.integers(1, 5),
+    h=st.sampled_from([8, 24, 48]),
+    w=st.sampled_from([8, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dog_localmax_matches_ref(k, h, w, seed):
+    rng = np.random.default_rng(seed)
+    pyr = jnp.asarray(rng.random((k + 1, h, w), dtype=np.float32))
+    got = dog_localmax(pyr)
+    want = ref.dog_localmax_ref(pyr)
+    assert got.shape == (2, k, h, w)
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+def test_dog_localmax_peaks_are_sparse_local_maxima():
+    rng = np.random.default_rng(7)
+    pyr = jnp.asarray(rng.random((3, 32, 32), dtype=np.float32))
+    heat = np.asarray(dog_localmax(pyr))
+    # every nonzero entry must be >= its 3x3 neighbourhood in the
+    # corresponding response map
+    d = np.asarray(pyr)[:-1] - np.asarray(pyr)[1:]
+    for cls in range(2):
+        r = np.maximum(d if cls == 0 else -d, 0.0)
+        for s in range(2):
+            ys, xs = np.nonzero(heat[cls, s])
+            for y, x in zip(ys, xs):
+                y0, y1 = max(0, y - 1), min(32, y + 2)
+                x0, x1 = max(0, x - 1), min(32, x + 2)
+                assert heat[cls, s, y, x] >= r[s, y0:y1, x0:x1].max() - 1e-6
+
+
+def test_dog_localmax_constant_pyramid_is_silent():
+    pyr = jnp.ones((4, 16, 16), jnp.float32)
+    assert float(jnp.abs(dog_localmax(pyr)).max()) == 0.0
+
+
+# --- sobel_nms ----------------------------------------------------------
+
+
+@given(
+    h=st.sampled_from([8, 33, 64]),
+    w=st.sampled_from([8, 48]),
+    lo=st.floats(0.02, 0.2),
+    hi_delta=st.floats(0.01, 0.3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sobel_nms_matches_ref(h, w, lo, hi_delta, seed):
+    img = _img(h, w, seed)
+    hi = lo + hi_delta
+    got = sobel_nms(img, lo, hi)
+    want = ref.sobel_nms_ref(img, lo, hi)
+    np.testing.assert_allclose(got, want, atol=0)
+
+
+def test_sobel_nms_output_values_are_classes():
+    img = _img(32, 32, 11)
+    out = np.asarray(sobel_nms(img, 0.05, 0.15))
+    assert set(np.unique(out)).issubset({0.0, 1.0, 2.0})
+
+
+def test_sobel_nms_flat_image_no_edges():
+    img = jnp.full((24, 24), 0.4, jnp.float32)
+    assert float(sobel_nms(img, 0.05, 0.15).max()) == 0.0
+
+
+def test_sobel_nms_step_edge_detected():
+    img = np.full((32, 32), 0.2, np.float32)
+    img[:, 16:] = 0.8
+    out = np.asarray(sobel_nms(jnp.asarray(img), 0.05, 0.5))
+    # a strong vertical edge: strong pixels along a thin column
+    cols = np.nonzero((out == 2.0).any(axis=0))[0]
+    assert len(cols) >= 1
+    assert all(14 <= c <= 17 for c in cols)
+    # thinned: at most 2 columns survive NMS
+    assert len(cols) <= 2
+
+
+# --- avgpool ref --------------------------------------------------------
+
+
+@pytest.mark.parametrize("factor", [1, 2, 3, 4])
+def test_avgpool_ref_mean_preserved(factor):
+    img = _img(24, 24, 5)
+    out = ref.avgpool_ref(img, factor)
+    assert out.shape == (24 // factor, 24 // factor)
+    assert abs(float(out.mean()) - float(img.mean())) < 1e-6

@@ -1,0 +1,53 @@
+"""Manifest contract tests: the JSON handed to the Rust runtime must be
+complete and internally consistent."""
+
+import json
+
+from compile import aot, model as M
+
+
+def test_manifest_structure():
+    m = aot.build_manifest()
+    assert m["version"] == aot.MANIFEST_VERSION
+    assert m["native_res"] == M.NATIVE_RES
+    models = m["models"]
+    # 9 detectors + ssd_front alias + canny
+    assert len(models) == len(M.VARIANTS) + len(M.GATEWAY_MODELS) + 1
+    for name, v in M.VARIANTS.items():
+        e = models[name]
+        assert e["kind"] == "detector"
+        assert e["file"] == f"{name}.hlo.txt"
+        assert e["input"]["shape"] == [M.NATIVE_RES, M.NATIVE_RES]
+        assert e["output"]["shape"] == [2, v.k, v.res, v.res]
+        assert e["params"]["threshold"] == v.threshold
+        assert len(e["params"]["band_radii_native"]) == v.k
+        assert len(e["params"]["sigmas"]) == v.k + 1
+        assert e["flops"] > 0
+
+
+def test_manifest_gateway_models_mirror_base():
+    m = aot.build_manifest()["models"]
+    for alias, base in M.GATEWAY_MODELS.items():
+        assert m[alias]["kind"] == "gateway_detector"
+        assert m[alias]["file"] == f"{alias}.hlo.txt"
+        assert m[alias]["params"] == m[base]["params"]
+        assert m[alias]["flops"] == m[base]["flops"]
+
+
+def test_manifest_canny_entry():
+    e = aot.build_manifest()["models"]["canny"]
+    assert e["kind"] == "canny"
+    assert e["output"]["shape"] == [M.CANNY_RES, M.CANNY_RES]
+    p = e["params"]
+    assert p["lo"] < p["hi"]
+    assert p["factor"] * p["res"] == M.NATIVE_RES
+
+
+def test_manifest_is_json_serializable():
+    s = json.dumps(aot.build_manifest())
+    round_tripped = json.loads(s)
+    assert round_tripped["native_res"] == M.NATIVE_RES
+
+
+def test_fingerprint_stable():
+    assert aot._inputs_fingerprint() == aot._inputs_fingerprint()

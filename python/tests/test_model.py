@@ -1,0 +1,155 @@
+"""L2 model tests: variant registry invariants, pyramid correctness,
+detector output shapes, end-to-end detection of planted objects, Canny
+pipeline behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import scenegen
+from compile.kernels import ref
+
+
+def test_variant_registry_complete():
+    # the 8 paper models + yolov8x pseudo-GT generator
+    assert len(M.VARIANTS) == 9
+    for v in M.VARIANTS.values():
+        assert M.NATIVE_RES % v.res == 0
+        assert v.k >= 3
+        assert 0 < v.sigma0 < v.sigma_max
+        assert v.threshold > 0
+
+
+def test_sigma_ladder_geometric_and_bounded():
+    for v in M.VARIANTS.values():
+        s = M.pyramid_sigmas(v)
+        assert len(s) == v.k + 1
+        assert abs(s[0] - v.sigma0) < 1e-9
+        assert abs(s[-1] - v.sigma_max) < 1e-6
+        ratios = [s[i + 1] / s[i] for i in range(v.k)]
+        assert all(abs(r - ratios[0]) < 1e-9 for r in ratios)
+        # coarsest blur stays within the taps-truncation comfort zone
+        assert v.sigma_max <= 30.0 + 1e-9
+
+
+def test_band_radii_increasing_and_cover_target_range():
+    for v in M.VARIANTS.values():
+        radii = M.band_radii_native(v)
+        assert all(b > a for a, b in zip(radii, radii[1:]))
+        # every variant must cover the sparse-scene radius range [16, 32]
+        assert radii[0] <= 16.0
+        assert radii[-1] >= 32.0
+
+
+def test_incremental_sigmas_compose():
+    for v in M.VARIANTS.values():
+        inc = M.incremental_sigmas(v)
+        acc = 0.0
+        absolute = M.pyramid_sigmas(v)
+        for i, d in enumerate(inc):
+            acc = (acc**2 + d**2) ** 0.5
+            assert abs(acc - absolute[i]) < 1e-6
+
+
+def test_pyramid_matches_incremental_ref():
+    v = M.VARIANTS["ssd_v1"]
+    rng = np.random.default_rng(0)
+    img = jnp.asarray(rng.random((v.res, v.res), dtype=np.float32))
+    pyr = M.make_pyramid(img, v)
+    inc = M.incremental_sigmas(v)
+    level = ref.blur2d_ref(img, inc[0])
+    np.testing.assert_allclose(pyr[0], level, atol=1e-5)
+    for i, d in enumerate(inc[1:], start=1):
+        level = ref.blur2d_ref(level, d)
+        np.testing.assert_allclose(pyr[i], level, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", list(M.VARIANTS))
+def test_detector_output_shape(name):
+    v = M.VARIANTS[name]
+    fn = jax.jit(M.make_detector(name))
+    img = jnp.zeros((M.NATIVE_RES, M.NATIVE_RES), jnp.float32)
+    out = fn(img)
+    assert isinstance(out, tuple) and len(out) == 1
+    assert out[0].shape == (2, v.k, v.res, v.res)
+
+
+def test_detector_finds_planted_blob():
+    # a single high-contrast blob must produce a dominant peak near its
+    # centre, at every capacity level
+    for name in ("ssd_v1", "yolov8m"):
+        v = M.VARIANTS[name]
+        img = np.full((384, 384), 0.5, np.float32)
+        yy, xx = np.mgrid[0:384, 0:384].astype(np.float32)
+        s = 20.0 / 2
+        img += 0.5 * np.exp(
+            -0.5 * (((xx - 150) / s) ** 2 + ((yy - 220) / s) ** 2)
+        ).astype(np.float32)
+        heat = np.asarray(jax.jit(M.make_detector(name))(img)[0])
+        c, b, y, x = np.unravel_index(np.argmax(heat), heat.shape)
+        assert c == 0  # bright
+        assert heat[c, b, y, x] > v.threshold
+        assert abs(y * v.factor - 220) <= 2 * v.factor
+        assert abs(x * v.factor - 150) <= 2 * v.factor
+
+
+def test_detector_dark_blob_lands_in_class1():
+    img = np.full((384, 384), 0.6, np.float32)
+    yy, xx = np.mgrid[0:384, 0:384].astype(np.float32)
+    img -= 0.5 * np.exp(
+        -0.5 * (((xx - 192) / 9) ** 2 + ((yy - 192) / 9) ** 2)
+    ).astype(np.float32)
+    heat = np.asarray(jax.jit(M.make_detector("yolov8n"))(img)[0])
+    c, *_ = np.unravel_index(np.argmax(heat), heat.shape)
+    assert c == 1
+
+
+def test_capacity_gradient_on_crowded_scene():
+    """The paper's core phenomenon: high-capacity models respond above
+    threshold to small objects that low-capacity models miss."""
+    img, objs = scenegen.make_scene(8, seed=42)
+    assert len(objs) >= 6
+    strong = np.asarray(jax.jit(M.make_detector("yolov8m"))(img)[0])
+    weak = np.asarray(jax.jit(M.make_detector("ssd_v1"))(img)[0])
+    n_strong = int(
+        (strong > M.VARIANTS["yolov8m"].threshold).sum()
+    )
+    n_weak = int((weak > M.VARIANTS["ssd_v1"].threshold).sum())
+    assert n_strong > n_weak
+
+
+def test_canny_output_shape_and_classes():
+    fn = jax.jit(M.make_canny())
+    img, _ = scenegen.make_scene(3, seed=1)
+    out = np.asarray(fn(img)[0])
+    assert out.shape == (M.CANNY_RES, M.CANNY_RES)
+    assert set(np.unique(out)).issubset({0.0, 1.0, 2.0})
+
+
+def test_canny_rings_scale_with_object_count():
+    fn = jax.jit(M.make_canny())
+    img1, o1 = scenegen.make_scene(1, seed=5)
+    img6, o6 = scenegen.make_scene(6, seed=5)
+    e1 = float((np.asarray(fn(img1)[0]) == 2.0).sum())
+    e6 = float((np.asarray(fn(img6)[0]) == 2.0).sum())
+    assert len(o6) > len(o1)
+    assert e6 > e1  # more objects -> more strong edge pixels
+
+
+def test_flops_monotone_with_capacity():
+    order = [
+        "ssd_v1",
+        "ssd_lite",
+        "effdet_lite0",
+        "effdet_lite1",
+        "effdet_lite2",
+        "yolov8n",
+        "yolov8s",
+        "yolov8m",
+        "yolov8x",
+    ]
+    flops = [M.detector_flops(n) for n in order]
+    assert all(b > a for a, b in zip(flops, flops[1:]))
+    assert M.canny_flops() < flops[0]  # ED estimator cheaper than any model

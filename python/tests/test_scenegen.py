@@ -1,0 +1,59 @@
+"""Scene-generator tests (Python twin of rust/src/dataset/scene.rs)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import scenegen
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+@given(n=st.integers(0, 12), seed=st.integers(0, 10_000))
+def test_scene_bounds_and_shape(n, seed):
+    img, objs = scenegen.make_scene(n, seed)
+    assert img.shape == (scenegen.NATIVE_RES, scenegen.NATIVE_RES)
+    assert img.dtype == np.float32
+    assert float(img.min()) >= 0.0 and float(img.max()) <= 1.0
+    assert len(objs) <= n
+
+
+@given(n=st.integers(1, 10), seed=st.integers(0, 10_000))
+def test_objects_within_frame_and_separated(n, seed):
+    _, objs = scenegen.make_scene(n, seed)
+    for o in objs:
+        x0, y0, x1, y1 = o.box
+        assert 0 <= x0 < x1 <= scenegen.NATIVE_RES
+        assert 0 <= y0 < y1 <= scenegen.NATIVE_RES
+    for i, a in enumerate(objs):
+        for b in objs[i + 1 :]:
+            assert not scenegen._boxes_overlap(a.box, b.box, slack=0.0)
+
+
+def test_radius_law_monotone():
+    prev_hi = float("inf")
+    for n in range(1, 15):
+        lo, hi = scenegen.radius_range(n)
+        assert lo <= hi
+        assert hi <= prev_hi
+        prev_hi = hi
+    assert scenegen.radius_range(1)[1] == 32.0
+    assert scenegen.radius_range(12)[0] >= 5.0
+
+
+def test_determinism_by_seed():
+    a, oa = scenegen.make_scene(4, 123)
+    b, ob = scenegen.make_scene(4, 123)
+    np.testing.assert_array_equal(a, b)
+    assert [o.box for o in oa] == [o.box for o in ob]
+    c, _ = scenegen.make_scene(4, 124)
+    assert not np.array_equal(a, c)
+
+
+def test_contrast_and_classes_present():
+    _, objs = scenegen.make_scene(10, 7)
+    classes = {o.cls for o in objs}
+    assert classes.issubset({0, 1})
+    for o in objs:
+        lo, hi = scenegen.CONTRAST_RANGE
+        assert lo <= o.contrast <= hi

@@ -1,0 +1,25 @@
+//! Scene generation throughput: dataset rendering runs once per request
+//! in every experiment, so it must stay cheap relative to inference.
+
+use ecore::dataset::{scene, video, SceneSpec};
+use ecore::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("dataset");
+    for n in [0usize, 1, 4, 12] {
+        let name = format!("render_{n}_objects");
+        let mut seed = 0u64;
+        b.run(&name, || {
+            seed += 1;
+            black_box(scene::render_spec(&SceneSpec {
+                id: 0,
+                seed,
+                n_objects: n,
+            }))
+        });
+    }
+    b.run("video_30_frames", || {
+        black_box(video::build_frames(30, 5))
+    });
+    b.finish();
+}

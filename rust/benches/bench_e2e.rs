@@ -1,0 +1,76 @@
+//! End-to-end request latency through the gateway: scene render →
+//! estimate → route → PJRT inference → decode → metrics. One case per
+//! router configuration over the real deployed testbed, plus per-model
+//! raw inference costs — the numbers behind EXPERIMENTS.md §Perf.
+
+use ecore::config::ExperimentConfig;
+use ecore::dataset::{scene, SceneSpec};
+use ecore::experiments::serve::deployed_store;
+use ecore::experiments::Harness;
+use ecore::gateway::{router_by_name, Gateway};
+use ecore::metrics::RunMetrics;
+use ecore::nodes::NodePool;
+use ecore::util::bench::{black_box, Bench};
+
+fn main() {
+    let cfg = ExperimentConfig {
+        profile_per_group: 12,
+        ..Default::default()
+    };
+    let h = Harness::new(cfg).unwrap();
+    let deployed = deployed_store(&h).unwrap();
+    let mut b = Bench::new("e2e");
+
+    // raw engine inference per model class
+    let img = scene::render_spec(&SceneSpec {
+        id: 0,
+        seed: 3,
+        n_objects: 4,
+    });
+    for model in ["ssd_v1", "effdet_lite2", "yolov8n", "yolov8m"] {
+        let name = format!("infer_{model}");
+        b.run(&name, || {
+            black_box(h.engine.infer(model, &img.image).unwrap())
+        });
+    }
+
+    // full gateway round-trips
+    for router in ["LE", "HMG", "ED", "SF", "OB", "Orc"] {
+        let pool = NodePool::deploy(
+            &h.engine,
+            &deployed.pairs(),
+            &ecore::devices::fleet(),
+            1,
+        )
+        .unwrap();
+        let mut gw = Gateway::new(
+            &h.engine,
+            router_by_name(router).unwrap(),
+            deployed.clone(),
+            pool,
+            5.0,
+            1,
+        );
+        let mut m = RunMetrics::new(router);
+        let name = format!("gateway_{router}");
+        let mut seed = 0u64;
+        b.run(&name, || {
+            seed += 1;
+            let s = scene::render_spec(&SceneSpec {
+                id: 0,
+                seed,
+                n_objects: (seed % 8) as usize,
+            });
+            black_box(
+                gw.handle(&s.image, s.gt.len(), &s.gt, &mut m).unwrap(),
+            )
+        });
+    }
+
+    let (secs, count) = h.engine.exec_stats();
+    println!(
+        "engine totals: {count} inferences, {:.1} ms mean",
+        1000.0 * secs / count.max(1) as f64
+    );
+    b.finish();
+}

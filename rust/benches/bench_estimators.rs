@@ -1,0 +1,58 @@
+//! Estimator cost per image: ED (canny artifact + contour counting),
+//! SF (front-end detector + decode), OB/Oracle (free). These are the
+//! real-wall-clock counterparts of the simulated gateway-overhead
+//! figures.
+
+use ecore::dataset::{scene, SceneSpec};
+use ecore::devices::gateway_spec;
+use ecore::estimators::{ed, Estimator, EstimatorKind};
+use ecore::runtime::Engine;
+use ecore::util::bench::{black_box, Bench};
+
+fn main() {
+    let engine = Engine::new(&ecore::default_artifacts_dir()).unwrap();
+    let gw = gateway_spec();
+    let mut b = Bench::new("estimators");
+
+    let sparse = scene::render_spec(&SceneSpec {
+        id: 0,
+        seed: 7,
+        n_objects: 1,
+    });
+    let crowded = scene::render_spec(&SceneSpec {
+        id: 1,
+        seed: 8,
+        n_objects: 8,
+    });
+
+    for kind in [
+        EstimatorKind::Oracle,
+        EstimatorKind::OutputBased,
+        EstimatorKind::EdgeDetection,
+        EstimatorKind::SsdFront,
+    ] {
+        let mut est = Estimator::new(kind);
+        let name = format!("{}_sparse", kind.label());
+        b.run(&name, || {
+            black_box(
+                est.estimate(&engine, &gw, &sparse.image, 1).unwrap(),
+            )
+        });
+        let mut est = Estimator::new(kind);
+        let name = format!("{}_crowded", kind.label());
+        b.run(&name, || {
+            black_box(
+                est.estimate(&engine, &gw, &crowded.image, 8).unwrap(),
+            )
+        });
+    }
+
+    // contour counting alone (the non-HLO part of ED)
+    let edges = engine.infer("canny", &crowded.image).unwrap();
+    let cfg = ed::EdConfig::default();
+    b.run("ed_count_contours", || {
+        black_box(ed::count_contours(&edges, 96, &cfg))
+    });
+
+    b.finish();
+}

@@ -1,0 +1,64 @@
+//! mAP evaluator throughput: the profiler's inner loop evaluates
+//! 8 models x 4 scales x 5 groups, so evaluation speed bounds how large
+//! the profiling sets can be.
+
+use ecore::dataset::GtBox;
+use ecore::detection::map::{map_coco, ImageEval};
+use ecore::detection::{BBox, Detection};
+use ecore::util::bench::{black_box, Bench};
+use ecore::util::rng::Rng;
+
+fn synth_images(n_images: usize, objs: usize, seed: u64) -> Vec<ImageEval> {
+    let mut rng = Rng::new(seed);
+    (0..n_images)
+        .map(|_| {
+            let gt: Vec<GtBox> = (0..objs)
+                .map(|_| {
+                    let x = rng.range(20.0, 350.0);
+                    let y = rng.range(20.0, 350.0);
+                    let r = rng.range(6.0, 24.0);
+                    GtBox {
+                        x0: x - r,
+                        y0: y - r,
+                        x1: x + r,
+                        y1: y + r,
+                        cls: rng.below(2) as usize,
+                    }
+                })
+                .collect();
+            // predictions: noisy copies of GT + 1 false positive
+            let mut dets: Vec<Detection> = gt
+                .iter()
+                .map(|g| Detection {
+                    bbox: BBox::new(
+                        g.x0 + rng.range(-3.0, 3.0),
+                        g.y0 + rng.range(-3.0, 3.0),
+                        g.x1 + rng.range(-3.0, 3.0),
+                        g.y1 + rng.range(-3.0, 3.0),
+                    ),
+                    score: rng.f32(),
+                    cls: g.cls,
+                })
+                .collect();
+            dets.push(Detection {
+                bbox: BBox::new(1.0, 1.0, 12.0, 12.0),
+                score: rng.f32() * 0.3,
+                cls: 0,
+            });
+            ImageEval { dets, gt }
+        })
+        .collect()
+}
+
+fn main() {
+    let mut b = Bench::new("map");
+    for (name, images, objs) in [
+        ("50img_x3obj", 50, 3),
+        ("200img_x3obj", 200, 3),
+        ("50img_x10obj", 50, 10),
+    ] {
+        let evals = synth_images(images, objs, 11);
+        b.run(name, || black_box(map_coco(&evals, 2).map));
+    }
+    b.finish();
+}

@@ -1,0 +1,74 @@
+//! Router decision latency per strategy — the gateway-overhead
+//! microbenchmark backing the §4.2 overhead table. The routing hot path
+//! must stay far below estimator and inference costs.
+
+use ecore::router::{
+    GreedyRouter, GroupRules, PairKey, PairProfile, Policy, PolicyKind,
+    ProfileStore,
+};
+use ecore::util::bench::{black_box, Bench};
+use ecore::util::rng::Rng;
+
+fn synthetic_store(pairs: usize, groups: usize) -> ProfileStore {
+    let mut rng = Rng::new(42);
+    let mut rows = Vec::new();
+    for p in 0..pairs {
+        for g in 0..groups {
+            rows.push(PairProfile {
+                pair: PairKey::new(&format!("model{p}"), &format!("dev{p}")),
+                group: g,
+                map: rng.range(10.0, 60.0),
+                latency_s: rng.range(0.005, 0.5),
+                energy_mwh: rng.range(0.001, 0.1),
+            });
+        }
+    }
+    ProfileStore::new(rows)
+}
+
+fn main() {
+    let mut b = Bench::new("routing");
+
+    // Algorithm 1 at deployed-pool scale (the production case)
+    let store = synthetic_store(7, 5);
+    let greedy = GreedyRouter::new(5.0);
+    let mut g = 0usize;
+    b.run("greedy_pool7", || {
+        g = (g + 1) % 5;
+        black_box(greedy.route(&store, g))
+    });
+
+    // Algorithm 1 over the full 64-pair grid
+    let store64 = synthetic_store(64, 5);
+    b.run("greedy_grid64", || {
+        g = (g + 1) % 5;
+        black_box(greedy.route(&store64, g))
+    });
+
+    // every baseline policy at pool scale
+    for kind in [
+        PolicyKind::RoundRobin,
+        PolicyKind::Random,
+        PolicyKind::LowestEnergy,
+        PolicyKind::LowestInference,
+        PolicyKind::HighestMap,
+        PolicyKind::HighestMapPerGroup,
+    ] {
+        let mut policy = Policy::new(kind, &store, 5.0, 7);
+        let name = format!("policy_{}", kind.label());
+        b.run(&name, || {
+            g = (g + 1) % 5;
+            black_box(policy.route(&store, g))
+        });
+    }
+
+    // group rule lookup
+    let rules = GroupRules::paper_default();
+    let mut c = 0usize;
+    b.run("group_lookup", || {
+        c = (c + 1) % 23;
+        black_box(rules.group_of(c))
+    });
+
+    b.finish();
+}

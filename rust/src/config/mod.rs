@@ -1,0 +1,320 @@
+//! Config system: typed experiment/serving configuration with a minimal
+//! TOML-subset parser (no external `toml` crate in this registry).
+//!
+//! Supported syntax: `[section]` headers, `key = value` with string,
+//! integer/float, boolean, and flat-array values, `#` comments.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// A parsed value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|x| x as usize)
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_str_list(&self) -> Option<Vec<String>> {
+        match self {
+            Value::Arr(v) => v
+                .iter()
+                .map(|x| x.as_str().map(|s| s.to_string()))
+                .collect(),
+            _ => None,
+        }
+    }
+}
+
+/// `section.key -> value` table.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    entries: BTreeMap<String, Value>,
+}
+
+impl Table {
+    pub fn parse(text: &str) -> Result<Table> {
+        let mut t = Table::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) =
+                line.strip_prefix('[').and_then(|s| s.strip_suffix(']'))
+            {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            t.entries.insert(key, parse_value(v.trim(), lineno + 1)?);
+        }
+        Ok(t)
+    }
+
+    pub fn load(path: &Path) -> Result<Table> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key)
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.as_usize()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // respect '#' inside quoted strings
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<Value> {
+    if s.starts_with('"') {
+        let inner = s
+            .strip_prefix('"')
+            .and_then(|x| x.strip_suffix('"'))
+            .with_context(|| format!("line {lineno}: unterminated string"))?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body
+            .strip_suffix(']')
+            .with_context(|| format!("line {lineno}: unterminated array"))?;
+        let mut items = Vec::new();
+        let trimmed = body.trim();
+        if !trimmed.is_empty() {
+            for item in split_top_level(trimmed) {
+                items.push(parse_value(item.trim(), lineno)?);
+            }
+        }
+        return Ok(Value::Arr(items));
+    }
+    if let Ok(x) = s.parse::<f64>() {
+        return Ok(Value::Num(x));
+    }
+    bail!("line {lineno}: cannot parse value '{s}'")
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+/// Typed experiment configuration with defaults matching the paper.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub artifacts_dir: String,
+    /// delta_mAP tolerance (0–100 scale).
+    pub delta_map: f64,
+    /// Images for the full-COCO experiment.
+    pub coco_images: usize,
+    /// Images per group for the balanced sorted dataset.
+    pub balanced_per_group: usize,
+    /// Frames for the video experiment.
+    pub video_frames: usize,
+    /// Profiling images per group.
+    pub profile_per_group: usize,
+    pub seed: u64,
+    pub routers: Vec<String>,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: String::new(),
+            delta_map: 5.0,
+            coco_images: 600,
+            balanced_per_group: 60,
+            video_frames: 300,
+            profile_per_group: 40,
+            seed: 7,
+            routers: ["Orc", "RR", "Rnd", "LE", "LI", "HM", "HMG", "ED", "SF", "OB"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn from_table(t: &Table) -> Self {
+        let d = Self::default();
+        Self {
+            artifacts_dir: t.str_or("experiment.artifacts_dir", &d.artifacts_dir),
+            delta_map: t.f64_or("experiment.delta_map", d.delta_map),
+            coco_images: t.usize_or("experiment.coco_images", d.coco_images),
+            balanced_per_group: t
+                .usize_or("experiment.balanced_per_group", d.balanced_per_group),
+            video_frames: t.usize_or("experiment.video_frames", d.video_frames),
+            profile_per_group: t
+                .usize_or("experiment.profile_per_group", d.profile_per_group),
+            seed: t.f64_or("experiment.seed", d.seed as f64) as u64,
+            routers: t
+                .get("experiment.routers")
+                .and_then(|v| v.as_str_list())
+                .unwrap_or(d.routers),
+        }
+    }
+
+    /// Apply CLI overrides on top (CLI wins over file, file over default).
+    pub fn override_with(&mut self, args: &crate::util::cli::Args) {
+        self.delta_map = args.f64_or("delta", self.delta_map);
+        self.coco_images = args.usize_or("images", self.coco_images);
+        self.balanced_per_group =
+            args.usize_or("per-group", self.balanced_per_group);
+        self.video_frames = args.usize_or("frames", self.video_frames);
+        self.profile_per_group =
+            args.usize_or("profile-per-group", self.profile_per_group);
+        self.seed = args.u64_or("seed", self.seed);
+        if args.get("routers").is_some() {
+            self.routers = args.list_or("routers", &[]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let t = Table::parse(
+            r#"
+# top comment
+title = "ecore"
+[experiment]
+delta_map = 5.0          # margin
+coco_images = 600
+verbose = true
+routers = ["ED", "OB"]
+"#,
+        )
+        .unwrap();
+        assert_eq!(t.str_or("title", ""), "ecore");
+        assert_eq!(t.f64_or("experiment.delta_map", 0.0), 5.0);
+        assert_eq!(t.usize_or("experiment.coco_images", 0), 600);
+        assert!(t.bool_or("experiment.verbose", false));
+        assert_eq!(
+            t.get("experiment.routers").unwrap().as_str_list().unwrap(),
+            vec!["ED", "OB"]
+        );
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Table::parse("key without equals").is_err());
+        assert!(Table::parse("x = [1, 2").is_err());
+        assert!(Table::parse("x = @wat").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let t = Table::parse(r##"x = "a#b" # real comment"##).unwrap();
+        assert_eq!(t.str_or("x", ""), "a#b");
+    }
+
+    #[test]
+    fn experiment_config_defaults_and_table() {
+        let t = Table::parse("[experiment]\ndelta_map = 10\n").unwrap();
+        let c = ExperimentConfig::from_table(&t);
+        assert_eq!(c.delta_map, 10.0);
+        assert_eq!(c.coco_images, ExperimentConfig::default().coco_images);
+        assert_eq!(c.routers.len(), 10);
+    }
+
+    #[test]
+    fn cli_overrides_win() {
+        let mut c = ExperimentConfig::default();
+        let args = crate::util::cli::Args::parse(
+            ["--delta", "15", "--routers", "ED,OB"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        c.override_with(&args);
+        assert_eq!(c.delta_map, 15.0);
+        assert_eq!(c.routers, vec!["ED", "OB"]);
+    }
+}

@@ -1,0 +1,76 @@
+//! The balanced *sorted* dataset (paper §4.1.1): five object-count groups
+//! ('0', '1', '2', '3', '4 or more'), 200 images each, sent to the
+//! gateway **ordered by group** — the workload shape that favours the
+//! output-based (OB) estimator.
+
+use super::{Dataset, SceneSpec};
+use crate::util::rng::Rng;
+
+/// Representative object counts per group. Group 5 ("4 or more") draws
+/// counts uniformly from 4..=9 like the paper's bucket.
+pub const GROUP_COUNTS: [usize; 5] = [0, 1, 2, 3, 4];
+
+/// Build the balanced sorted dataset: `per_group` images per group,
+/// ordered group 0 first.
+pub fn build(per_group: usize, seed: u64) -> Dataset {
+    let base = Rng::new(seed);
+    let mut specs = Vec::with_capacity(5 * per_group);
+    let mut id = 0usize;
+    for (gi, &count) in GROUP_COUNTS.iter().enumerate() {
+        for j in 0..per_group {
+            let mut r = base.derive((gi * 1_000_003 + j) as u64);
+            let n_objects = if gi == 4 {
+                4 + r.below(6) as usize // 4..=9
+            } else {
+                count
+            };
+            specs.push(SceneSpec {
+                id,
+                seed: r.next_u64(),
+                n_objects,
+            });
+            id += 1;
+        }
+    }
+    Dataset {
+        name: format!("balanced_sorted_{}x{per_group}", GROUP_COUNTS.len()),
+        specs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn five_groups_sorted_and_sized() {
+        let d = build(200, 3);
+        assert_eq!(d.len(), 1000);
+        for (i, s) in d.specs.iter().enumerate() {
+            let group = i / 200;
+            if group < 4 {
+                assert_eq!(s.n_objects, group, "index {i}");
+            } else {
+                assert!((4..=9).contains(&s.n_objects), "index {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn sorted_by_group_nondecreasing_bucket() {
+        let d = build(50, 9);
+        let bucket =
+            |n: usize| -> usize { n.min(4) };
+        let buckets: Vec<usize> =
+            d.specs.iter().map(|s| bucket(s.n_objects)).collect();
+        for w in buckets.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(build(10, 5).specs, build(10, 5).specs);
+        assert_ne!(build(10, 5).specs, build(10, 6).specs);
+    }
+}

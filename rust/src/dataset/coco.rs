@@ -1,0 +1,124 @@
+//! "COCO validation" twin: a 5 000-image dataset whose per-image object
+//! counts follow the long-tailed distribution of the real COCO val set
+//! (paper Fig. 4): a small zero-object mass, a mode at 1–2 objects, and a
+//! long tail out past 15 objects.
+
+use super::{Dataset, SceneSpec};
+use crate::util::rng::Rng;
+
+/// Unnormalized weights for object counts 0..=MAX_COUNT, shaped after the
+/// paper's Fig. 4 histogram of COCO val 2017.
+pub const COUNT_WEIGHTS: [f64; 21] = [
+    2.0,  // 0 objects
+    17.0, // 1
+    14.5, // 2
+    11.5, // 3
+    9.5,  // 4
+    7.5,  // 5
+    6.0,  // 6
+    5.0,  // 7
+    4.0,  // 8
+    3.3,  // 9
+    2.8,  // 10
+    2.3,  // 11
+    1.9,  // 12
+    1.6,  // 13
+    1.3,  // 14
+    1.1,  // 15
+    0.9,  // 16
+    0.8,  // 17
+    0.7,  // 18
+    0.6,  // 19
+    2.7,  // 20 ("20+" bucket)
+];
+
+pub const MAX_COUNT: usize = COUNT_WEIGHTS.len() - 1;
+
+/// Sample one object count from the Fig. 4 distribution.
+pub fn sample_count(rng: &mut Rng) -> usize {
+    rng.weighted(&COUNT_WEIGHTS)
+}
+
+/// Build the synthetic COCO validation dataset.
+pub fn build(n_images: usize, seed: u64) -> Dataset {
+    let base = Rng::new(seed);
+    let mut specs = Vec::with_capacity(n_images);
+    for id in 0..n_images {
+        let mut r = base.derive(id as u64);
+        let n_objects = sample_count(&mut r);
+        specs.push(SceneSpec {
+            id,
+            seed: r.next_u64(),
+            n_objects,
+        });
+    }
+    Dataset {
+        name: format!("coco_val_{n_images}"),
+        specs,
+    }
+}
+
+/// Histogram of requested object counts (for the Fig. 4 experiment).
+pub fn count_histogram(d: &Dataset) -> Vec<usize> {
+    let mut h = vec![0usize; MAX_COUNT + 1];
+    for s in &d.specs {
+        h[s.n_objects.min(MAX_COUNT)] += 1;
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distribution_matches_weights() {
+        let d = build(20_000, 42);
+        let h = count_histogram(&d);
+        let total: f64 = COUNT_WEIGHTS.iter().sum();
+        for (count, (&got, &w)) in
+            h.iter().zip(COUNT_WEIGHTS.iter()).enumerate()
+        {
+            let expect = 20_000.0 * w / total;
+            // 5-sigma binomial tolerance
+            let sigma = (expect * (1.0 - w / total)).sqrt();
+            assert!(
+                (got as f64 - expect).abs() < 5.0 * sigma + 5.0,
+                "count {count}: got {got}, expected ~{expect:.0}"
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_and_distinct_scenes() {
+        let a = build(100, 7);
+        let b = build(100, 7);
+        assert_eq!(a.specs, b.specs);
+        let c = build(100, 8);
+        assert_ne!(a.specs, c.specs);
+        // ids are sequential
+        for (i, s) in a.specs.iter().enumerate() {
+            assert_eq!(s.id, i);
+        }
+        // seeds differ per image
+        let mut seeds: Vec<u64> = a.specs.iter().map(|s| s.seed).collect();
+        seeds.sort();
+        seeds.dedup();
+        assert_eq!(seeds.len(), 100);
+    }
+
+    #[test]
+    fn mode_is_one_object() {
+        let d = build(10_000, 1);
+        let h = count_histogram(&d);
+        let mode = h
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &c)| c)
+            .map(|(i, _)| i)
+            .unwrap();
+        assert_eq!(mode, 1);
+        // zero-object images are rare but present
+        assert!(h[0] > 0 && h[0] < h[1]);
+    }
+}

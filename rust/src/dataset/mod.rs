@@ -1,0 +1,133 @@
+//! Dataset substrate: synthetic stand-ins for the paper's three datasets.
+//!
+//! * [`coco`] — "COCO validation" twin: 5 000 scene specs whose
+//!   object-count distribution follows Fig. 4 of the paper.
+//! * [`balanced`] — the balanced *sorted* dataset: 5 groups x 200 images,
+//!   ordered by group (paper §4.1.1).
+//! * [`video`] — pedestrian-crossing video twin: temporally persistent
+//!   object tracks rendered frame by frame.
+//! * [`scene`] — the procedural scene generator itself (statistical twin
+//!   of `python/compile/scenegen.py`).
+//!
+//! Images are rendered lazily from compact [`SceneSpec`]s so a 5 000-image
+//! dataset costs bytes, not gigabytes.
+
+pub mod balanced;
+pub mod coco;
+pub mod scene;
+pub mod video;
+
+/// Native image resolution (must match the manifest's `native_res`).
+pub const NATIVE_RES: usize = 384;
+
+/// Number of object classes (bright blobs / dark blobs).
+pub const NUM_CLASSES: usize = 2;
+
+/// One ground-truth object.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GtBox {
+    pub x0: f64,
+    pub y0: f64,
+    pub x1: f64,
+    pub y1: f64,
+    pub cls: usize,
+}
+
+impl GtBox {
+    pub fn width(&self) -> f64 {
+        self.x1 - self.x0
+    }
+
+    pub fn height(&self) -> f64 {
+        self.y1 - self.y0
+    }
+
+    pub fn area(&self) -> f64 {
+        self.width() * self.height()
+    }
+}
+
+/// Compact description of one dataset image; rendering is deterministic
+/// in (seed, n_objects).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SceneSpec {
+    pub id: usize,
+    pub seed: u64,
+    pub n_objects: usize,
+}
+
+/// A rendered scene: image + exact ground truth.
+#[derive(Clone, Debug)]
+pub struct Scene {
+    pub id: usize,
+    pub image: Vec<f32>,
+    pub gt: Vec<GtBox>,
+}
+
+impl Scene {
+    /// True object count (objects actually rendered; crowded scenes may
+    /// drop unplaceable objects, and ground truth reflects that).
+    pub fn object_count(&self) -> usize {
+        self.gt.len()
+    }
+}
+
+/// A dataset = ordered scene specs (rendered on demand).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub specs: Vec<SceneSpec>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    pub fn render(&self, idx: usize) -> Scene {
+        scene::render_spec(&self.specs[idx])
+    }
+
+    pub fn iter_scenes(&self) -> impl Iterator<Item = Scene> + '_ {
+        self.specs.iter().map(|s| scene::render_spec(s))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gt_box_geometry() {
+        let b = GtBox {
+            x0: 10.0,
+            y0: 20.0,
+            x1: 30.0,
+            y1: 60.0,
+            cls: 0,
+        };
+        assert_eq!(b.width(), 20.0);
+        assert_eq!(b.height(), 40.0);
+        assert_eq!(b.area(), 800.0);
+    }
+
+    #[test]
+    fn dataset_render_is_deterministic() {
+        let d = Dataset {
+            name: "t".into(),
+            specs: vec![SceneSpec {
+                id: 0,
+                seed: 7,
+                n_objects: 3,
+            }],
+        };
+        let a = d.render(0);
+        let b = d.render(0);
+        assert_eq!(a.image, b.image);
+        assert_eq!(a.gt, b.gt);
+    }
+}

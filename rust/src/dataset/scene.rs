@@ -1,0 +1,311 @@
+//! Procedural scene generator — production twin of
+//! `python/compile/scenegen.py` (statistically equivalent object model;
+//! see DESIGN.md §3 for why this preserves the paper's phenomena).
+//!
+//! Scenes are grayscale [`NATIVE_RES`]² images: a smooth sinusoidal
+//! background plus white noise, with N rotated anisotropic Gaussian bumps
+//! (bright = class 0, dark = class 1). The crowding law shrinks object
+//! radii as N grows, which is what makes low-capacity detectors lose
+//! accuracy on crowded scenes (paper Fig. 2).
+
+use super::{GtBox, Scene, SceneSpec, NATIVE_RES};
+use crate::util::rng::Rng;
+
+pub const NOISE_STD: f64 = 0.02;
+pub const BG_WAVE_AMP: f64 = 0.02;
+pub const CONTRAST_LO: f64 = 0.20;
+pub const CONTRAST_HI: f64 = 0.60;
+const MAX_PLACE_TRIES: usize = 40;
+const PLACEMENT_SLACK: f64 = 4.0;
+
+/// One placed (not yet rendered) object.
+#[derive(Clone, Copy, Debug)]
+pub struct PlacedObject {
+    pub cx: f64,
+    pub cy: f64,
+    pub rx: f64,
+    pub ry: f64,
+    pub cls: usize,
+    pub contrast: f64,
+    pub theta: f64,
+}
+
+impl PlacedObject {
+    pub fn gt(&self) -> GtBox {
+        GtBox {
+            x0: self.cx - self.rx,
+            y0: self.cy - self.ry,
+            x1: self.cx + self.rx,
+            y1: self.cy + self.ry,
+            cls: self.cls,
+        }
+    }
+}
+
+/// Radius law: more objects -> smaller objects (crowding). Mirrors
+/// `scenegen.radius_range`.
+pub fn radius_range(n: usize) -> (f64, f64) {
+    if n <= 1 {
+        return (16.0, 32.0);
+    }
+    let hi = (32.0 / (1.0 + 0.35 * (n as f64 - 1.0))).max(8.0);
+    ((hi / 2.5).max(5.0), hi)
+}
+
+fn boxes_overlap(a: &GtBox, b: &GtBox, slack: f64) -> bool {
+    !(a.x1 + slack < b.x0
+        || b.x1 + slack < a.x0
+        || a.y1 + slack < b.y0
+        || b.y1 + slack < a.y0)
+}
+
+/// Rejection-sample non-overlapping object placements. Objects that fail
+/// placement after `MAX_PLACE_TRIES` are dropped (ground truth reflects
+/// what is actually rendered).
+pub fn place_objects(n: usize, rng: &mut Rng) -> Vec<PlacedObject> {
+    let (lo, hi) = radius_range(n);
+    let mut objs: Vec<PlacedObject> = Vec::with_capacity(n);
+    for _ in 0..n {
+        for _try in 0..MAX_PLACE_TRIES {
+            let r = rng.range(lo, hi);
+            let aspect = rng.range(0.75, 1.33);
+            let (rx, ry) = (r * aspect, r / aspect);
+            let margin = rx.max(ry) + 4.0;
+            let span = NATIVE_RES as f64 - 2.0 * margin;
+            if span <= 0.0 {
+                break;
+            }
+            let cx = margin + rng.f64() * span;
+            let cy = margin + rng.f64() * span;
+            let cand = PlacedObject {
+                cx,
+                cy,
+                rx,
+                ry,
+                cls: rng.below(2) as usize,
+                contrast: rng.range(CONTRAST_LO, CONTRAST_HI),
+                theta: rng.range(0.0, std::f64::consts::PI),
+            };
+            let cand_gt = cand.gt();
+            if objs
+                .iter()
+                .all(|o| !boxes_overlap(&o.gt(), &cand_gt, PLACEMENT_SLACK))
+            {
+                objs.push(cand);
+                break;
+            }
+        }
+    }
+    objs
+}
+
+/// Render placed objects into an image (with background + noise).
+pub fn render(objs: &[PlacedObject], rng: &mut Rng) -> Vec<f32> {
+    let n = NATIVE_RES;
+    let mut img = vec![0.0f32; n * n];
+
+    // smooth sinusoidal background. The wave argument is linear in x, so
+    // each row is generated with the angle-addition recurrence
+    // sin(a+d) = sin a cos d + cos a sin d — one sin/cos pair per ROW
+    // instead of one sin per PIXEL (EXPERIMENTS.md §Perf).
+    let fx = rng.range(0.5, 2.0);
+    let fy = rng.range(0.5, 2.0);
+    let ph = rng.range(0.0, 2.0 * std::f64::consts::PI);
+    let two_pi = 2.0 * std::f64::consts::PI;
+    let dx = two_pi * fx / n as f64;
+    let (sin_dx, cos_dx) = dx.sin_cos();
+    for y in 0..n {
+        let a0 = two_pi * fy * y as f64 / n as f64 + ph;
+        let (mut s, mut c) = a0.sin_cos();
+        let row = &mut img[y * n..(y + 1) * n];
+        for v in row.iter_mut() {
+            *v = (0.5 + BG_WAVE_AMP * s) as f32;
+            let s2 = s * cos_dx + c * sin_dx;
+            c = c * cos_dx - s * sin_dx;
+            s = s2;
+        }
+    }
+
+    // objects: evaluate each bump only inside its 4-sigma bounding window
+    for o in objs {
+        let (ct, st) = (o.theta.cos(), o.theta.sin());
+        let (sx, sy) = (o.rx / 2.0, o.ry / 2.0);
+        let ext = 4.0 * sx.max(sy);
+        let x0 = ((o.cx - ext).floor().max(0.0)) as usize;
+        let x1 = ((o.cx + ext).ceil().min(n as f64 - 1.0)) as usize;
+        let y0 = ((o.cy - ext).floor().max(0.0)) as usize;
+        let y1 = ((o.cy + ext).ceil().min(n as f64 - 1.0)) as usize;
+        let sign = if o.cls == 0 { 1.0 } else { -1.0 };
+        let amp = sign * o.contrast;
+        for y in y0..=y1 {
+            let dy = y as f64 - o.cy;
+            for x in x0..=x1 {
+                let dx = x as f64 - o.cx;
+                let u = (ct * dx + st * dy) / sx;
+                let v = (-st * dx + ct * dy) / sy;
+                let e = (-0.5 * (u * u + v * v)).exp();
+                img[y * n + x] += (amp * e) as f32;
+            }
+        }
+    }
+
+    // white noise + clamp (paired Box-Muller: half the ln/sqrt calls)
+    let mut i = 0;
+    while i + 1 < img.len() {
+        let (n1, n2) = rng.normal_pair();
+        img[i] = (img[i] + (NOISE_STD * n1) as f32).clamp(0.0, 1.0);
+        img[i + 1] =
+            (img[i + 1] + (NOISE_STD * n2) as f32).clamp(0.0, 1.0);
+        i += 2;
+    }
+    if i < img.len() {
+        img[i] =
+            (img[i] + (NOISE_STD * rng.normal()) as f32).clamp(0.0, 1.0);
+    }
+    img
+}
+
+/// Render a full scene from its spec (deterministic).
+pub fn render_spec(spec: &SceneSpec) -> Scene {
+    let mut rng = Rng::new(spec.seed);
+    let objs = place_objects(spec.n_objects, &mut rng);
+    let image = render(&objs, &mut rng);
+    Scene {
+        id: spec.id,
+        image,
+        gt: objs.iter().map(|o| o.gt()).collect(),
+    }
+}
+
+/// Render a scene from explicit objects (used by the video generator,
+/// where object state evolves across frames).
+pub fn render_objects(id: usize, objs: &[PlacedObject], rng: &mut Rng) -> Scene {
+    Scene {
+        id,
+        image: render(objs, rng),
+        gt: objs.iter().map(|o| o.gt()).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall_ok;
+
+    #[test]
+    fn radius_law_monotone_nonincreasing() {
+        let mut prev = f64::INFINITY;
+        for n in 1..20 {
+            let (lo, hi) = radius_range(n);
+            assert!(lo <= hi);
+            assert!(hi <= prev);
+            assert!(lo >= 5.0);
+            prev = hi;
+        }
+        assert_eq!(radius_range(1), (16.0, 32.0));
+    }
+
+    #[test]
+    fn prop_scenes_bounded_and_gt_in_frame() {
+        forall_ok(
+            11,
+            25,
+            |r| SceneSpec {
+                id: 0,
+                seed: r.next_u64(),
+                n_objects: r.below(12) as usize,
+            },
+            |spec| {
+                let s = render_spec(spec);
+                if s.image.len() != NATIVE_RES * NATIVE_RES {
+                    return Err("bad image size".into());
+                }
+                if !s.image.iter().all(|&v| (0.0..=1.0).contains(&v)) {
+                    return Err("pixel out of [0,1]".into());
+                }
+                if s.gt.len() > spec.n_objects {
+                    return Err("more GT than requested".into());
+                }
+                for g in &s.gt {
+                    if g.x0 < 0.0
+                        || g.y0 < 0.0
+                        || g.x1 > NATIVE_RES as f64
+                        || g.y1 > NATIVE_RES as f64
+                        || g.x0 >= g.x1
+                        || g.y0 >= g.y1
+                    {
+                        return Err(format!("bad gt {g:?}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_placed_objects_never_overlap() {
+        forall_ok(
+            13,
+            30,
+            |r| (r.next_u64(), 1 + r.below(10) as usize),
+            |&(seed, n)| {
+                let mut rng = Rng::new(seed);
+                let objs = place_objects(n, &mut rng);
+                for (i, a) in objs.iter().enumerate() {
+                    for b in objs.iter().skip(i + 1) {
+                        if boxes_overlap(&a.gt(), &b.gt(), 0.0) {
+                            return Err(format!(
+                                "overlap {:?} {:?}",
+                                a.gt(),
+                                b.gt()
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn bright_object_raises_mean_dark_lowers() {
+        let base = SceneSpec {
+            id: 0,
+            seed: 5,
+            n_objects: 0,
+        };
+        let empty = render_spec(&base);
+        let mean = |img: &[f32]| {
+            img.iter().map(|&v| v as f64).sum::<f64>() / img.len() as f64
+        };
+        let m0 = mean(&empty.image);
+        assert!((m0 - 0.5).abs() < 0.01, "empty mean {m0}");
+
+        let mut rng = Rng::new(1);
+        let bright = PlacedObject {
+            cx: 192.0,
+            cy: 192.0,
+            rx: 30.0,
+            ry: 30.0,
+            cls: 0,
+            contrast: 0.6,
+            theta: 0.0,
+        };
+        let s = render_objects(0, &[bright], &mut rng);
+        assert!(mean(&s.image) > m0 + 0.001);
+        let dark = PlacedObject {
+            cls: 1,
+            ..bright
+        };
+        let mut rng = Rng::new(1);
+        let s = render_objects(0, &[dark], &mut rng);
+        assert!(mean(&s.image) < m0 - 0.001);
+    }
+
+    #[test]
+    fn crowded_scene_places_most_objects() {
+        let mut rng = Rng::new(99);
+        let objs = place_objects(16, &mut rng);
+        assert!(objs.len() >= 12, "only placed {}", objs.len());
+    }
+}

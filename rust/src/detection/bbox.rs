@@ -1,0 +1,138 @@
+//! Axis-aligned bounding boxes and IoU.
+
+/// Axis-aligned box in native-resolution pixel coordinates.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BBox {
+    pub x0: f64,
+    pub y0: f64,
+    pub x1: f64,
+    pub y1: f64,
+}
+
+impl BBox {
+    pub fn new(x0: f64, y0: f64, x1: f64, y1: f64) -> Self {
+        Self { x0, y0, x1, y1 }
+    }
+
+    pub fn from_center(cx: f64, cy: f64, rx: f64, ry: f64) -> Self {
+        Self {
+            x0: cx - rx,
+            y0: cy - ry,
+            x1: cx + rx,
+            y1: cy + ry,
+        }
+    }
+
+    pub fn area(&self) -> f64 {
+        (self.x1 - self.x0).max(0.0) * (self.y1 - self.y0).max(0.0)
+    }
+
+    pub fn center(&self) -> (f64, f64) {
+        ((self.x0 + self.x1) / 2.0, (self.y0 + self.y1) / 2.0)
+    }
+
+    pub fn intersection_area(&self, other: &BBox) -> f64 {
+        let ix = (self.x1.min(other.x1) - self.x0.max(other.x0)).max(0.0);
+        let iy = (self.y1.min(other.y1) - self.y0.max(other.y0)).max(0.0);
+        ix * iy
+    }
+}
+
+/// Intersection-over-union; 0.0 when the union is empty.
+pub fn iou(a: &BBox, b: &BBox) -> f64 {
+    let inter = a.intersection_area(b);
+    let union = a.area() + b.area() - inter;
+    if union > 0.0 {
+        inter / union
+    } else {
+        0.0
+    }
+}
+
+impl From<&crate::dataset::GtBox> for BBox {
+    fn from(g: &crate::dataset::GtBox) -> Self {
+        BBox::new(g.x0, g.y0, g.x1, g.y1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall_ok;
+    use crate::util::rng::Rng;
+
+    fn random_box(r: &mut Rng) -> BBox {
+        let x0 = r.range(0.0, 300.0);
+        let y0 = r.range(0.0, 300.0);
+        BBox::new(x0, y0, x0 + r.range(1.0, 80.0), y0 + r.range(1.0, 80.0))
+    }
+
+    #[test]
+    fn identical_boxes_iou_one() {
+        let b = BBox::new(10.0, 10.0, 50.0, 40.0);
+        assert!((iou(&b, &b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn disjoint_boxes_iou_zero() {
+        let a = BBox::new(0.0, 0.0, 10.0, 10.0);
+        let b = BBox::new(20.0, 20.0, 30.0, 30.0);
+        assert_eq!(iou(&a, &b), 0.0);
+    }
+
+    #[test]
+    fn half_overlap_known_value() {
+        let a = BBox::new(0.0, 0.0, 10.0, 10.0);
+        let b = BBox::new(5.0, 0.0, 15.0, 10.0);
+        // inter 50, union 150
+        assert!((iou(&a, &b) - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prop_iou_symmetric_and_bounded() {
+        forall_ok(
+            21,
+            200,
+            |r| (random_box(r), random_box(r)),
+            |(a, b)| {
+                let ab = iou(a, b);
+                let ba = iou(b, a);
+                if (ab - ba).abs() > 1e-12 {
+                    return Err(format!("asymmetric {ab} {ba}"));
+                }
+                if !(0.0..=1.0).contains(&ab) {
+                    return Err(format!("out of bounds {ab}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_iou_one_iff_equal_for_nested() {
+        forall_ok(
+            22,
+            100,
+            |r| random_box(r),
+            |b| {
+                let shrunk = BBox::new(
+                    b.x0 + 0.5,
+                    b.y0 + 0.5,
+                    b.x1,
+                    b.y1,
+                );
+                if iou(b, &shrunk) >= 1.0 {
+                    return Err("shrunk box iou must be < 1".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn from_center_roundtrip() {
+        let b = BBox::from_center(100.0, 50.0, 20.0, 10.0);
+        assert_eq!(b, BBox::new(80.0, 40.0, 120.0, 60.0));
+        assert_eq!(b.center(), (100.0, 50.0));
+    }
+}

@@ -1,0 +1,181 @@
+//! Heat-map decoding: model output [2, K, R, R] → detections.
+//!
+//! Mirrors `python/compile/calibrate.py::decode` (the build-time
+//! calibration tool): threshold the sparse local-max heat map, turn each
+//! peak (class, band, y, x) into a box using the manifest's per-band
+//! radii, then greedy center-distance NMS across bands and classes — a
+//! blob responds in 2–3 adjacent bands and casts an opposite-class ring;
+//! both fall inside the winner's radius, while true neighbours are
+//! separated by the scene placement law.
+
+use super::bbox::BBox;
+use crate::models::ModelMeta;
+
+/// One decoded detection.
+#[derive(Clone, Copy, Debug)]
+pub struct Detection {
+    pub bbox: BBox,
+    pub score: f32,
+    pub cls: usize,
+}
+
+/// Suppression factor: a candidate whose center lies within
+/// `NMS_RADIUS_FACTOR * max(r_kept, r_cand)` of a kept center is dropped.
+const NMS_RADIUS_FACTOR: f64 = 0.9;
+
+/// Decode a detector heat map. `threshold_scale` models deployment
+/// framework effects (e.g. int8 quantization on the Coral TPU raises the
+/// effective decode threshold; see `devices`).
+pub fn decode_heatmap(
+    heat: &[f32],
+    meta: &ModelMeta,
+    threshold_scale: f64,
+) -> Vec<Detection> {
+    let (k, res, f) = (meta.k, meta.res, meta.factor as f64);
+    debug_assert_eq!(heat.len(), 2 * k * res * res);
+    let thr = (meta.threshold * threshold_scale) as f32;
+
+    let mut cands: Vec<Detection> = Vec::new();
+    let plane = res * res;
+    for cls in 0..2 {
+        for band in 0..k {
+            let radius = meta.band_radii_native[band];
+            let base = (cls * k + band) * plane;
+            let slab = &heat[base..base + plane];
+            for (i, &v) in slab.iter().enumerate() {
+                if v > thr {
+                    let y = (i / res) as f64;
+                    let x = (i % res) as f64;
+                    let cx = (x + 0.5) * f;
+                    let cy = (y + 0.5) * f;
+                    cands.push(Detection {
+                        bbox: BBox::from_center(cx, cy, radius, radius),
+                        score: v,
+                        cls,
+                    });
+                }
+            }
+        }
+    }
+    nms_center_distance(cands)
+}
+
+/// Greedy center-distance NMS (score-descending).
+pub fn nms_center_distance(mut cands: Vec<Detection>) -> Vec<Detection> {
+    cands.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+    let mut kept: Vec<Detection> = Vec::new();
+    'cand: for d in cands {
+        let (cx, cy) = d.bbox.center();
+        let r = (d.bbox.x1 - d.bbox.x0) / 2.0;
+        for kpt in &kept {
+            let (kx, ky) = kpt.bbox.center();
+            let kr = (kpt.bbox.x1 - kpt.bbox.x0) / 2.0;
+            let lim = NMS_RADIUS_FACTOR * r.max(kr);
+            let (dx, dy) = (cx - kx, cy - ky);
+            if dx * dx + dy * dy < lim * lim {
+                continue 'cand;
+            }
+        }
+        kept.push(d);
+    }
+    kept
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{ModelKind, ModelMeta};
+    use std::path::PathBuf;
+
+    fn test_meta(k: usize, res: usize, factor: usize) -> ModelMeta {
+        ModelMeta {
+            name: "test".into(),
+            kind: ModelKind::Detector,
+            file: PathBuf::new(),
+            input_shape: vec![res * factor, res * factor],
+            output_shape: vec![2, k, res, res],
+            flops: 1.0,
+            res,
+            factor,
+            k,
+            sigmas: (0..=k).map(|i| 1.5 * 1.6f64.powi(i as i32)).collect(),
+            band_radii_native: (0..k)
+                .map(|i| 4.0 * 1.6f64.powi(i as i32))
+                .collect(),
+            threshold: 0.03,
+            canny_lo: 0.0,
+            canny_hi: 0.0,
+        }
+    }
+
+    #[test]
+    fn empty_heat_no_detections() {
+        let meta = test_meta(3, 16, 4);
+        let heat = vec![0.0f32; 2 * 3 * 16 * 16];
+        assert!(decode_heatmap(&heat, &meta, 1.0).is_empty());
+    }
+
+    #[test]
+    fn single_peak_decodes_to_expected_box() {
+        let meta = test_meta(3, 16, 4);
+        let mut heat = vec![0.0f32; 2 * 3 * 16 * 16];
+        // class 1, band 2, y=8, x=4
+        let idx = ((1 * 3 + 2) * 16 + 8) * 16 + 4;
+        heat[idx] = 0.2;
+        let dets = decode_heatmap(&heat, &meta, 1.0);
+        assert_eq!(dets.len(), 1);
+        let d = dets[0];
+        assert_eq!(d.cls, 1);
+        assert!((d.score - 0.2).abs() < 1e-6);
+        let (cx, cy) = d.bbox.center();
+        assert_eq!((cx, cy), (4.5 * 4.0, 8.5 * 4.0));
+        let r = meta.band_radii_native[2];
+        assert!(((d.bbox.x1 - d.bbox.x0) / 2.0 - r).abs() < 1e-9);
+    }
+
+    #[test]
+    fn subthreshold_peak_ignored_and_scale_respected() {
+        let meta = test_meta(2, 8, 4);
+        let mut heat = vec![0.0f32; 2 * 2 * 8 * 8];
+        heat[5] = 0.035;
+        assert_eq!(decode_heatmap(&heat, &meta, 1.0).len(), 1);
+        // a framework threshold scale of 1.3 pushes it below threshold
+        assert_eq!(decode_heatmap(&heat, &meta, 1.3).len(), 0);
+    }
+
+    #[test]
+    fn nms_suppresses_cross_band_duplicates() {
+        let meta = test_meta(3, 16, 4);
+        let mut heat = vec![0.0f32; 2 * 3 * 16 * 16];
+        let plane = 16 * 16;
+        // same spatial location in band 0 (weak) and band 1 (strong)
+        heat[0 * plane + 8 * 16 + 8] = 0.1;
+        heat[1 * plane + 8 * 16 + 8] = 0.3;
+        let dets = decode_heatmap(&heat, &meta, 1.0);
+        assert_eq!(dets.len(), 1);
+        assert!((dets[0].score - 0.3).abs() < 1e-6);
+    }
+
+    #[test]
+    fn nms_keeps_separated_objects() {
+        let meta = test_meta(3, 32, 4);
+        let mut heat = vec![0.0f32; 2 * 3 * 32 * 32];
+        let plane = 32 * 32;
+        heat[0 * plane + 4 * 32 + 4] = 0.2; // (18, 18) native
+        heat[0 * plane + 28 * 32 + 28] = 0.25; // (114, 114) native
+        let dets = decode_heatmap(&heat, &meta, 1.0);
+        assert_eq!(dets.len(), 2);
+    }
+
+    #[test]
+    fn nms_idempotent() {
+        let meta = test_meta(3, 16, 4);
+        let mut heat = vec![0.0f32; 2 * 3 * 16 * 16];
+        for i in [5, 40, 300, 700, 1400] {
+            heat[i] = 0.1 + i as f32 * 1e-4;
+        }
+        let once = decode_heatmap(&heat, &meta, 1.0);
+        let twice = nms_center_distance(once.clone());
+        assert_eq!(once.len(), twice.len());
+    }
+}

@@ -1,0 +1,391 @@
+//! COCO-style mAP evaluator (the paper's FiftyOne substitute).
+//!
+//! AP per (class, IoU threshold) via greedy score-descending matching and
+//! 101-point interpolated precision–recall integration; mAP averages over
+//! IoU thresholds 0.50:0.05:0.95 and over classes that have ground truth.
+//! Reported on the 0–100 scale like the paper.
+
+use super::bbox::{iou, BBox};
+use super::decode::Detection;
+use crate::dataset::GtBox;
+
+/// IoU thresholds 0.50:0.05:0.95 (COCO primary metric).
+pub const IOU_THRESHOLDS: [f64; 10] =
+    [0.50, 0.55, 0.60, 0.65, 0.70, 0.75, 0.80, 0.85, 0.90, 0.95];
+
+/// Predictions and ground truth for one image.
+#[derive(Clone, Debug, Default)]
+pub struct ImageEval {
+    pub dets: Vec<Detection>,
+    pub gt: Vec<GtBox>,
+}
+
+#[derive(Clone, Debug)]
+pub struct MapResult {
+    /// mAP@[.50:.95] on the 0–100 scale.
+    pub map: f64,
+    /// mAP@0.50 only.
+    pub map50: f64,
+    /// per-class AP@[.50:.95] (classes without GT are None).
+    pub per_class: Vec<Option<f64>>,
+}
+
+/// Evaluate mAP over a set of images.
+///
+/// Images with no ground truth contribute their false positives to the
+/// precision denominator (standard COCO behaviour). If *no* image has
+/// ground truth, returns the empty-set convention score: 100 if there are
+/// no detections either, else 0 (used for the paper's group-'0' slice).
+pub fn map_coco(images: &[ImageEval], num_classes: usize) -> MapResult {
+    let any_gt = images.iter().any(|im| !im.gt.is_empty());
+    if !any_gt {
+        let any_det = images.iter().any(|im| !im.dets.is_empty());
+        let score = if any_det { 0.0 } else { 100.0 };
+        return MapResult {
+            map: score,
+            map50: score,
+            per_class: vec![None; num_classes],
+        };
+    }
+
+    let mut per_class: Vec<Option<f64>> = Vec::with_capacity(num_classes);
+    let mut per_class50: Vec<Option<f64>> = Vec::with_capacity(num_classes);
+    for cls in 0..num_classes {
+        let has_gt = images
+            .iter()
+            .any(|im| im.gt.iter().any(|g| g.cls == cls));
+        if !has_gt {
+            per_class.push(None);
+            per_class50.push(None);
+            continue;
+        }
+        let mut aps = Vec::with_capacity(IOU_THRESHOLDS.len());
+        for &thr in &IOU_THRESHOLDS {
+            aps.push(ap_single(images, cls, thr));
+        }
+        per_class50.push(Some(aps[0]));
+        per_class
+            .push(Some(aps.iter().sum::<f64>() / aps.len() as f64));
+    }
+
+    let avg = |v: &[Option<f64>]| {
+        let present: Vec<f64> = v.iter().filter_map(|x| *x).collect();
+        if present.is_empty() {
+            0.0
+        } else {
+            present.iter().sum::<f64>() / present.len() as f64
+        }
+    };
+    MapResult {
+        map: 100.0 * avg(&per_class),
+        map50: 100.0 * avg(&per_class50),
+        per_class: per_class
+            .iter()
+            .map(|x| x.map(|v| 100.0 * v))
+            .collect(),
+    }
+}
+
+/// AP for one class at one IoU threshold (0–1 scale).
+fn ap_single(images: &[ImageEval], cls: usize, iou_thr: f64) -> f64 {
+    // gather (score, image_idx, bbox) for this class
+    let mut dets: Vec<(f32, usize, BBox)> = Vec::new();
+    let mut total_gt = 0usize;
+    for (i, im) in images.iter().enumerate() {
+        total_gt += im.gt.iter().filter(|g| g.cls == cls).count();
+        for d in im.dets.iter().filter(|d| d.cls == cls) {
+            dets.push((d.score, i, d.bbox));
+        }
+    }
+    if total_gt == 0 {
+        return 0.0;
+    }
+    dets.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+
+    // greedy matching: each GT may be matched once per threshold pass
+    let mut matched: Vec<Vec<bool>> = images
+        .iter()
+        .map(|im| vec![false; im.gt.len()])
+        .collect();
+    let mut tp = vec![false; dets.len()];
+    for (di, &(_, img_idx, ref bb)) in dets.iter().enumerate() {
+        let im = &images[img_idx];
+        let mut best = 0.0;
+        let mut best_gi = usize::MAX;
+        for (gi, g) in im.gt.iter().enumerate() {
+            if g.cls != cls || matched[img_idx][gi] {
+                continue;
+            }
+            let v = iou(bb, &BBox::from(g));
+            if v > best {
+                best = v;
+                best_gi = gi;
+            }
+        }
+        if best >= iou_thr && best_gi != usize::MAX {
+            matched[img_idx][best_gi] = true;
+            tp[di] = true;
+        }
+    }
+
+    // precision-recall curve + 101-point interpolation
+    let mut cum_tp = 0usize;
+    let mut precisions = Vec::with_capacity(dets.len());
+    let mut recalls = Vec::with_capacity(dets.len());
+    for (i, &is_tp) in tp.iter().enumerate() {
+        if is_tp {
+            cum_tp += 1;
+        }
+        precisions.push(cum_tp as f64 / (i + 1) as f64);
+        recalls.push(cum_tp as f64 / total_gt as f64);
+    }
+    // make precision monotone non-increasing from the right
+    for i in (0..precisions.len().saturating_sub(1)).rev() {
+        if precisions[i] < precisions[i + 1] {
+            precisions[i] = precisions[i + 1];
+        }
+    }
+    let mut ap = 0.0;
+    let mut det_i = 0usize;
+    for r in 0..=100 {
+        let r = r as f64 / 100.0;
+        while det_i < recalls.len() && recalls[det_i] < r {
+            det_i += 1;
+        }
+        if det_i < precisions.len() {
+            ap += precisions[det_i];
+        }
+    }
+    ap / 101.0
+}
+
+/// Paper group-'0' helper: share of images with zero detections, 0–100.
+pub fn empty_image_score(images: &[ImageEval]) -> f64 {
+    if images.is_empty() {
+        return 100.0;
+    }
+    let clean = images.iter().filter(|im| im.dets.is_empty()).count();
+    100.0 * clean as f64 / images.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall_ok;
+    use crate::util::rng::Rng;
+
+    fn det(x: f64, y: f64, r: f64, score: f32, cls: usize) -> Detection {
+        Detection {
+            bbox: BBox::from_center(x, y, r, r),
+            score,
+            cls,
+        }
+    }
+
+    fn gt(x: f64, y: f64, r: f64, cls: usize) -> GtBox {
+        GtBox {
+            x0: x - r,
+            y0: y - r,
+            x1: x + r,
+            y1: y + r,
+            cls,
+        }
+    }
+
+    #[test]
+    fn perfect_predictions_score_100() {
+        let images = vec![ImageEval {
+            dets: vec![det(50.0, 50.0, 10.0, 0.9, 0), det(150.0, 150.0, 20.0, 0.8, 1)],
+            gt: vec![gt(50.0, 50.0, 10.0, 0), gt(150.0, 150.0, 20.0, 1)],
+        }];
+        let r = map_coco(&images, 2);
+        assert!((r.map - 100.0).abs() < 1e-9, "map={}", r.map);
+        assert!((r.map50 - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn no_predictions_score_0_with_gt() {
+        let images = vec![ImageEval {
+            dets: vec![],
+            gt: vec![gt(50.0, 50.0, 10.0, 0)],
+        }];
+        assert_eq!(map_coco(&images, 2).map, 0.0);
+    }
+
+    #[test]
+    fn empty_everything_scores_100() {
+        let images = vec![ImageEval::default()];
+        assert_eq!(map_coco(&images, 2).map, 100.0);
+        // false positives on empty images score 0
+        let images = vec![ImageEval {
+            dets: vec![det(10.0, 10.0, 5.0, 0.5, 0)],
+            gt: vec![],
+        }];
+        assert_eq!(map_coco(&images, 2).map, 0.0);
+    }
+
+    #[test]
+    fn localization_error_reduces_map_not_map50() {
+        let exact = vec![ImageEval {
+            dets: vec![det(50.0, 50.0, 10.0, 0.9, 0)],
+            gt: vec![gt(50.0, 50.0, 10.0, 0)],
+        }];
+        // shifted by 4px: IoU ~0.67 -> passes 0.5/0.65, fails higher
+        let shifted = vec![ImageEval {
+            dets: vec![det(54.0, 50.0, 10.0, 0.9, 0)],
+            gt: vec![gt(50.0, 50.0, 10.0, 0)],
+        }];
+        let re = map_coco(&exact, 2);
+        let rs = map_coco(&shifted, 2);
+        assert!((rs.map50 - 100.0).abs() < 1e-9);
+        assert!(rs.map < re.map);
+    }
+
+    #[test]
+    fn false_positive_lowers_precision() {
+        let clean = vec![ImageEval {
+            dets: vec![det(50.0, 50.0, 10.0, 0.9, 0)],
+            gt: vec![gt(50.0, 50.0, 10.0, 0)],
+        }];
+        // extra high-scoring FP ranked first
+        let noisy = vec![ImageEval {
+            dets: vec![
+                det(300.0, 300.0, 10.0, 0.95, 0),
+                det(50.0, 50.0, 10.0, 0.9, 0),
+            ],
+            gt: vec![gt(50.0, 50.0, 10.0, 0)],
+        }];
+        assert!(map_coco(&noisy, 2).map < map_coco(&clean, 2).map);
+    }
+
+    #[test]
+    fn low_scored_fp_hurts_less_than_high_scored_fp() {
+        let gt_img = |fp_score: f32| {
+            vec![ImageEval {
+                dets: vec![
+                    det(300.0, 300.0, 10.0, fp_score, 0),
+                    det(50.0, 50.0, 10.0, 0.9, 0),
+                ],
+                gt: vec![gt(50.0, 50.0, 10.0, 0)],
+            }]
+        };
+        let low = map_coco(&gt_img(0.1), 2).map;
+        let high = map_coco(&gt_img(0.99), 2).map;
+        assert!(low > high);
+    }
+
+    #[test]
+    fn duplicate_detection_is_fp() {
+        // a duplicate ranked between two true positives drags down the
+        // precision reached at full recall (COCO semantics: a second
+        // match to an already-matched GT is a false positive).
+        let with_dup = vec![ImageEval {
+            dets: vec![
+                det(50.0, 50.0, 10.0, 0.9, 0),
+                det(50.0, 50.0, 10.0, 0.8, 0), // duplicate -> FP
+                det(150.0, 150.0, 10.0, 0.7, 0),
+            ],
+            gt: vec![gt(50.0, 50.0, 10.0, 0), gt(150.0, 150.0, 10.0, 0)],
+        }];
+        let without = vec![ImageEval {
+            dets: vec![
+                det(50.0, 50.0, 10.0, 0.9, 0),
+                det(150.0, 150.0, 10.0, 0.7, 0),
+            ],
+            gt: vec![gt(50.0, 50.0, 10.0, 0), gt(150.0, 150.0, 10.0, 0)],
+        }];
+        let r_dup = map_coco(&with_dup, 2);
+        let r_clean = map_coco(&without, 2);
+        assert!((r_clean.map - 100.0).abs() < 1e-9);
+        assert!(r_dup.map < r_clean.map);
+    }
+
+    #[test]
+    fn class_confusion_scores_zero() {
+        let images = vec![ImageEval {
+            dets: vec![det(50.0, 50.0, 10.0, 0.9, 1)],
+            gt: vec![gt(50.0, 50.0, 10.0, 0)],
+        }];
+        assert_eq!(map_coco(&images, 2).map, 0.0);
+    }
+
+    #[test]
+    fn prop_map_bounded_and_permutation_invariant() {
+        forall_ok(
+            31,
+            30,
+            |r: &mut Rng| {
+                let n_img = 1 + r.below(4) as usize;
+                let mut images = Vec::new();
+                for _ in 0..n_img {
+                    let n_gt = r.below(4) as usize;
+                    let n_det = r.below(6) as usize;
+                    let gt_boxes: Vec<GtBox> = (0..n_gt)
+                        .map(|_| {
+                            gt(
+                                r.range(30.0, 350.0),
+                                r.range(30.0, 350.0),
+                                r.range(5.0, 25.0),
+                                r.below(2) as usize,
+                            )
+                        })
+                        .collect();
+                    let dets: Vec<Detection> = (0..n_det)
+                        .map(|_| {
+                            det(
+                                r.range(30.0, 350.0),
+                                r.range(30.0, 350.0),
+                                r.range(5.0, 25.0),
+                                r.f32(),
+                                r.below(2) as usize,
+                            )
+                        })
+                        .collect();
+                    images.push(ImageEval {
+                        dets,
+                        gt: gt_boxes,
+                    });
+                }
+                images
+            },
+            |images| {
+                let r1 = map_coco(images, 2);
+                if !(0.0..=100.0).contains(&r1.map) {
+                    return Err(format!("map out of range: {}", r1.map));
+                }
+                if r1.map50 + 1e-9 < r1.map {
+                    return Err(format!(
+                        "map50 {} < map {}",
+                        r1.map50, r1.map
+                    ));
+                }
+                let mut rev: Vec<ImageEval> =
+                    images.iter().rev().cloned().collect();
+                // also shuffle detections within images
+                for im in rev.iter_mut() {
+                    im.dets.reverse();
+                }
+                let r2 = map_coco(&rev, 2);
+                if (r1.map - r2.map).abs() > 1e-9 {
+                    return Err(format!(
+                        "not permutation invariant: {} vs {}",
+                        r1.map, r2.map
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn empty_image_score_counts_clean_images() {
+        let images = vec![
+            ImageEval::default(),
+            ImageEval {
+                dets: vec![det(10.0, 10.0, 4.0, 0.4, 0)],
+                gt: vec![],
+            },
+        ];
+        assert_eq!(empty_image_score(&images), 50.0);
+    }
+}

@@ -1,0 +1,11 @@
+//! Detection substrate: boxes + IoU, heat-map decoding (model output →
+//! detections), and a COCO-style mAP evaluator (the paper's FiftyOne
+//! substitute).
+
+pub mod bbox;
+pub mod decode;
+pub mod map;
+
+pub use bbox::{iou, BBox};
+pub use decode::{decode_heatmap, Detection};
+pub use map::{map_coco, MapResult};

@@ -1,0 +1,195 @@
+//! Runtime drift — the paper's Future Work #1 ("dynamic profiling to
+//! account for runtime variability such as temperature, battery state,
+//! and background load").
+//!
+//! [`DriftModel`] evolves a device's effective throughput and power over
+//! simulated time: sustained utilization raises temperature, thermal
+//! throttling cuts throughput; battery droop raises effective dynamic
+//! power on battery-fed boards; background load adds a slow random walk.
+//! The `ablation_drift` experiment shows static profiles going stale
+//! against a drifting fleet and periodic re-profiling recovering most of
+//! the loss.
+
+use super::DeviceSpec;
+use crate::util::rng::Rng;
+
+/// Drift parameters (per device).
+#[derive(Clone, Debug)]
+pub struct DriftConfig {
+    /// Temperature rise per busy-second, °C.
+    pub heat_per_busy_s: f64,
+    /// Cooling per idle-second back toward ambient, °C.
+    pub cool_per_idle_s: f64,
+    /// Throttling threshold, °C above ambient.
+    pub throttle_at: f64,
+    /// Throughput multiplier when fully throttled.
+    pub throttle_floor: f64,
+    /// Battery droop: +W of effective dynamic power per busy-hour.
+    pub battery_droop_w_per_h: f64,
+    /// Std-dev of the background-load random walk (multiplier).
+    pub load_walk_std: f64,
+}
+
+impl Default for DriftConfig {
+    fn default() -> Self {
+        Self {
+            heat_per_busy_s: 0.8,
+            cool_per_idle_s: 0.25,
+            throttle_at: 15.0,
+            throttle_floor: 0.55,
+            battery_droop_w_per_h: 0.4,
+            load_walk_std: 0.01,
+        }
+    }
+}
+
+/// Mutable drift state wrapping a base [`DeviceSpec`].
+#[derive(Clone, Debug)]
+pub struct DriftModel {
+    pub base: DeviceSpec,
+    pub cfg: DriftConfig,
+    /// Degrees above ambient.
+    temp: f64,
+    /// Cumulative busy time (s).
+    busy_s: f64,
+    /// Background-load multiplier on service time (>= 1).
+    load: f64,
+    rng: Rng,
+}
+
+impl DriftModel {
+    pub fn new(base: DeviceSpec, cfg: DriftConfig, seed: u64) -> Self {
+        Self {
+            base,
+            cfg,
+            temp: 0.0,
+            busy_s: 0.0,
+            load: 1.0,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Throughput multiplier from thermal state (1.0 = cold).
+    pub fn throttle_factor(&self) -> f64 {
+        if self.temp <= self.cfg.throttle_at {
+            1.0
+        } else {
+            // linear decay down to the floor over another `throttle_at` °C
+            let over = (self.temp - self.cfg.throttle_at) / self.cfg.throttle_at;
+            (1.0 - over).clamp(self.cfg.throttle_floor, 1.0)
+        }
+    }
+
+    /// Effective extra dynamic power from battery droop (W).
+    pub fn droop_w(&self) -> f64 {
+        self.cfg.battery_droop_w_per_h * self.busy_s / 3600.0
+    }
+
+    /// Account one request: `base_latency_s` of busy time preceded by
+    /// `idle_s` of idle. Returns (actual latency, actual energy) after
+    /// drift effects.
+    pub fn step(
+        &mut self,
+        base_latency_s: f64,
+        base_energy_mwh: f64,
+        idle_s: f64,
+    ) -> (f64, f64) {
+        // cool during idle
+        self.temp =
+            (self.temp - self.cfg.cool_per_idle_s * idle_s).max(0.0);
+        // background-load random walk
+        self.load = (self.load
+            + self.cfg.load_walk_std * self.rng.normal())
+        .clamp(1.0, 1.5);
+
+        let slow = self.load / self.throttle_factor();
+        let latency = base_latency_s * slow;
+        // droop adds power proportionally to the busy window
+        let droop_mwh = self.droop_w() * latency / 3.6;
+        let energy = base_energy_mwh * slow + droop_mwh;
+
+        self.temp += self.cfg.heat_per_busy_s * latency;
+        self.busy_s += latency;
+        (latency, energy)
+    }
+
+    pub fn temperature(&self) -> f64 {
+        self.temp
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devices;
+
+    fn model() -> DriftModel {
+        DriftModel::new(
+            devices::find(&devices::fleet(), "pi5").unwrap(),
+            DriftConfig::default(),
+            1,
+        )
+    }
+
+    #[test]
+    fn cold_device_matches_base_closely() {
+        let mut m = model();
+        let (lat, e) = m.step(0.1, 0.05, 10.0);
+        assert!((lat - 0.1).abs() < 0.1 * 0.05, "lat {lat}");
+        assert!((e - 0.05).abs() < 0.05 * 0.06, "e {e}");
+    }
+
+    #[test]
+    fn sustained_load_throttles_and_slows() {
+        let mut m = model();
+        let mut first = 0.0;
+        let mut last = 0.0;
+        for i in 0..600 {
+            let (lat, _) = m.step(0.1, 0.05, 0.0);
+            if i == 0 {
+                first = lat;
+            }
+            last = lat;
+        }
+        assert!(m.temperature() > m.cfg.throttle_at);
+        assert!(
+            last > first * 1.2,
+            "no throttling: first {first}, last {last}"
+        );
+        assert!(m.throttle_factor() < 1.0);
+        assert!(m.throttle_factor() >= m.cfg.throttle_floor);
+    }
+
+    #[test]
+    fn idle_time_cools_back_down() {
+        let mut m = model();
+        for _ in 0..600 {
+            m.step(0.1, 0.05, 0.0);
+        }
+        let hot = m.temperature();
+        m.step(0.001, 0.001, 600.0);
+        assert!(m.temperature() < hot * 0.2, "did not cool");
+    }
+
+    #[test]
+    fn battery_droop_accumulates() {
+        let mut m = model();
+        for _ in 0..200 {
+            m.step(1.0, 0.5, 0.0);
+        }
+        assert!(m.droop_w() > 0.01);
+        // energy with droop exceeds the pure slowdown-scaled energy
+        let slow = m.load / m.throttle_factor();
+        let (_, e) = m.step(1.0, 0.5, 0.0);
+        assert!(e > 0.5 * slow);
+    }
+
+    #[test]
+    fn drift_is_deterministic_per_seed() {
+        let mut a = model();
+        let mut b = model();
+        for _ in 0..50 {
+            assert_eq!(a.step(0.05, 0.02, 0.01), b.step(0.05, 0.02, 0.01));
+        }
+    }
+}

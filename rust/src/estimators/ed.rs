@@ -1,0 +1,204 @@
+//! ED estimator back half: hysteresis linking + contour counting over the
+//! Canny edge-class map produced by the `canny` HLO artifact.
+//!
+//! The artifact emits per-pixel classes {0: none, 1: weak, 2: strong}.
+//! This module (1) links weak pixels 8-connected to strong seeds
+//! (classic Canny hysteresis — graph traversal, so it lives in Rust, not
+//! in the data-parallel kernel), (2) groups surviving pixels into
+//! connected components, (3) merges components whose bounding boxes
+//! nearly touch (one object's ring can shatter into arcs after NMS
+//! thinning), and (4) counts the merged contours with enough support.
+
+/// Tunables for contour counting.
+#[derive(Clone, Copy, Debug)]
+pub struct EdConfig {
+    /// Minimum pixels for a contour to count as an object boundary.
+    pub min_contour_px: usize,
+    /// Merge components whose bounding boxes come within this distance.
+    pub merge_dist_px: f64,
+}
+
+impl Default for EdConfig {
+    fn default() -> Self {
+        Self {
+            min_contour_px: 8,
+            merge_dist_px: 4.0,
+        }
+    }
+}
+
+/// Count contours in an edge-class map of size `res` x `res`.
+pub fn count_contours(edges: &[f32], res: usize, cfg: &EdConfig) -> usize {
+    debug_assert_eq!(edges.len(), res * res);
+
+    // 1) hysteresis: BFS from strong pixels through weak neighbours,
+    //    labelling components as we go.
+    let mut label = vec![0u32; res * res]; // 0 = unvisited/none
+    let mut next_label = 0u32;
+    let mut queue: Vec<usize> = Vec::new();
+    let mut comp_pixels: Vec<usize> = Vec::new(); // per-label pixel count
+    let mut comp_bbox: Vec<(usize, usize, usize, usize)> = Vec::new();
+
+    for start in 0..res * res {
+        if edges[start] != 2.0 || label[start] != 0 {
+            continue;
+        }
+        next_label += 1;
+        let l = next_label;
+        queue.clear();
+        queue.push(start);
+        label[start] = l;
+        let (mut n_px, mut bb) =
+            (0usize, (usize::MAX, usize::MAX, 0usize, 0usize));
+        while let Some(i) = queue.pop() {
+            n_px += 1;
+            let (y, x) = (i / res, i % res);
+            bb = (bb.0.min(x), bb.1.min(y), bb.2.max(x), bb.3.max(y));
+            for dy in -1i64..=1 {
+                for dx in -1i64..=1 {
+                    if dy == 0 && dx == 0 {
+                        continue;
+                    }
+                    let (ny, nx) = (y as i64 + dy, x as i64 + dx);
+                    if ny < 0 || nx < 0 || ny >= res as i64 || nx >= res as i64
+                    {
+                        continue;
+                    }
+                    let j = ny as usize * res + nx as usize;
+                    // hysteresis: weak pixels join only via a linked chain
+                    if label[j] == 0 && edges[j] >= 1.0 {
+                        label[j] = l;
+                        queue.push(j);
+                    }
+                }
+            }
+        }
+        comp_pixels.push(n_px);
+        comp_bbox.push(bb);
+    }
+
+    // 2) merge near-touching components (broken rings) via union-find on
+    //    bbox proximity.
+    let n = comp_pixels.len();
+    let mut parent: Vec<usize> = (0..n).collect();
+    fn find(parent: &mut Vec<usize>, i: usize) -> usize {
+        if parent[i] != i {
+            let r = find(parent, parent[i]);
+            parent[i] = r;
+        }
+        parent[i]
+    }
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let a = comp_bbox[i];
+            let b = comp_bbox[j];
+            let gap_x = if a.2 < b.0 {
+                (b.0 - a.2) as f64
+            } else if b.2 < a.0 {
+                (a.0 - b.2) as f64
+            } else {
+                0.0
+            };
+            let gap_y = if a.3 < b.1 {
+                (b.1 - a.3) as f64
+            } else if b.3 < a.1 {
+                (a.1 - b.3) as f64
+            } else {
+                0.0
+            };
+            if gap_x <= cfg.merge_dist_px && gap_y <= cfg.merge_dist_px {
+                let (ri, rj) = (find(&mut parent, i), find(&mut parent, j));
+                if ri != rj {
+                    parent[ri] = rj;
+                }
+            }
+        }
+    }
+
+    // 3) count merged contours with enough pixel support
+    let mut merged_px: std::collections::BTreeMap<usize, usize> =
+        std::collections::BTreeMap::new();
+    for i in 0..n {
+        let r = find(&mut parent, i);
+        *merged_px.entry(r).or_default() += comp_pixels[i];
+    }
+    merged_px
+        .values()
+        .filter(|&&px| px >= cfg.min_contour_px)
+        .count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ring(edges: &mut [f32], res: usize, cx: f64, cy: f64, r: f64) {
+        // rasterize a 1px circle of strong pixels
+        let steps = (r * 12.0) as usize + 16;
+        for s in 0..steps {
+            let a = s as f64 / steps as f64 * std::f64::consts::TAU;
+            let x = (cx + r * a.cos()).round() as i64;
+            let y = (cy + r * a.sin()).round() as i64;
+            if x >= 0 && y >= 0 && (x as usize) < res && (y as usize) < res {
+                edges[y as usize * res + x as usize] = 2.0;
+            }
+        }
+    }
+
+    #[test]
+    fn empty_map_counts_zero() {
+        let edges = vec![0.0f32; 96 * 96];
+        assert_eq!(count_contours(&edges, 96, &EdConfig::default()), 0);
+    }
+
+    #[test]
+    fn single_ring_counts_one() {
+        let mut edges = vec![0.0f32; 96 * 96];
+        ring(&mut edges, 96, 48.0, 48.0, 10.0);
+        assert_eq!(count_contours(&edges, 96, &EdConfig::default()), 1);
+    }
+
+    #[test]
+    fn three_separated_rings_count_three() {
+        let mut edges = vec![0.0f32; 96 * 96];
+        ring(&mut edges, 96, 20.0, 20.0, 8.0);
+        ring(&mut edges, 96, 70.0, 20.0, 8.0);
+        ring(&mut edges, 96, 48.0, 70.0, 8.0);
+        assert_eq!(count_contours(&edges, 96, &EdConfig::default()), 3);
+    }
+
+    #[test]
+    fn broken_ring_merges_to_one() {
+        let mut edges = vec![0.0f32; 96 * 96];
+        ring(&mut edges, 96, 48.0, 48.0, 10.0);
+        // punch two 2px gaps
+        for dx in 0..2usize {
+            edges[48 * 96 + (58 - dx)] = 0.0;
+            edges[(48 + 10) * 96 + 48 + dx] = 0.0;
+        }
+        assert_eq!(count_contours(&edges, 96, &EdConfig::default()), 1);
+    }
+
+    #[test]
+    fn weak_pixels_join_only_via_strong_seed() {
+        let mut edges = vec![0.0f32; 96 * 96];
+        // an isolated weak-only blob: never counted
+        for y in 10..14 {
+            for x in 10..14 {
+                edges[y * 96 + x] = 1.0;
+            }
+        }
+        assert_eq!(count_contours(&edges, 96, &EdConfig::default()), 0);
+        // add one strong seed inside -> now linked and counted
+        edges[12 * 96 + 12] = 2.0;
+        assert_eq!(count_contours(&edges, 96, &EdConfig::default()), 1);
+    }
+
+    #[test]
+    fn tiny_specks_filtered() {
+        let mut edges = vec![0.0f32; 96 * 96];
+        edges[5 * 96 + 5] = 2.0; // 1px noise speck
+        edges[60 * 96 + 60] = 2.0;
+        assert_eq!(count_contours(&edges, 96, &EdConfig::default()), 0);
+    }
+}

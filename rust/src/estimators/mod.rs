@@ -1,0 +1,200 @@
+//! Object-count estimators (paper §3.3): the lightweight gateway-side
+//! component that feeds Algorithm 1.
+//!
+//! * `Oracle` — ground-truth count (ideal benchmark).
+//! * `EdgeDetection` (ED) — Canny edge map (AOT HLO artifact) +
+//!   hysteresis linking + contour counting ([`ed`]).
+//! * `SsdFront` (SF) — tiny detector at the gateway ([`sf`]).
+//! * `OutputBased` (OB) — reuse the previous response's detection count.
+//!
+//! Every estimate carries a [`GatewayCost`] so experiments can isolate
+//! router overhead exactly as the paper's §4.2 "Gateway Overhead" metric.
+
+pub mod ed;
+pub mod sf;
+
+use crate::detection::decode_heatmap;
+use crate::devices::DeviceSpec;
+use crate::models;
+use crate::runtime::Engine;
+use anyhow::Result;
+
+/// Gateway-side cost of producing one estimate.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GatewayCost {
+    pub latency_s: f64,
+    pub energy_mwh: f64,
+}
+
+/// Estimator kinds, including the paper's short labels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EstimatorKind {
+    Oracle,
+    EdgeDetection,
+    SsdFront,
+    OutputBased,
+}
+
+impl EstimatorKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            EstimatorKind::Oracle => "Orc",
+            EstimatorKind::EdgeDetection => "ED",
+            EstimatorKind::SsdFront => "SF",
+            EstimatorKind::OutputBased => "OB",
+        }
+    }
+}
+
+/// A stateful estimator instance.
+pub struct Estimator {
+    kind: EstimatorKind,
+    /// OB state: the object count observed in the previous response.
+    last_count: usize,
+    ed: ed::EdConfig,
+}
+
+impl Estimator {
+    pub fn new(kind: EstimatorKind) -> Self {
+        Self {
+            kind,
+            last_count: 0, // paper: OB starts from a default estimate of 0
+            ed: ed::EdConfig::default(),
+        }
+    }
+
+    pub fn kind(&self) -> EstimatorKind {
+        self.kind
+    }
+
+    /// Estimate the number of objects in `image`.
+    ///
+    /// `true_count` is consumed only by the Oracle (the paper passes the
+    /// ground-truth count as request metadata for that benchmark).
+    pub fn estimate(
+        &mut self,
+        engine: &Engine,
+        gateway: &DeviceSpec,
+        image: &[f32],
+        true_count: usize,
+    ) -> Result<(usize, GatewayCost)> {
+        match self.kind {
+            EstimatorKind::Oracle => Ok((true_count, GatewayCost::default())),
+            EstimatorKind::OutputBased => {
+                Ok((self.last_count, GatewayCost::default()))
+            }
+            EstimatorKind::EdgeDetection => {
+                let meta = engine.meta(models::CANNY_MODEL)?;
+                let edges = engine.infer(models::CANNY_MODEL, image)?;
+                let count =
+                    ed::count_contours(&edges, meta.res, &self.ed);
+                let p = gateway.profile(&meta);
+                Ok((
+                    count,
+                    GatewayCost {
+                        latency_s: p.latency_s,
+                        energy_mwh: p.energy_mwh,
+                    },
+                ))
+            }
+            EstimatorKind::SsdFront => {
+                let meta = engine.meta(models::FRONTEND_MODEL)?;
+                let heat = engine.infer(models::FRONTEND_MODEL, image)?;
+                let dets = decode_heatmap(&heat, &meta, 1.0);
+                let p = gateway.profile(&meta);
+                Ok((
+                    dets.len(),
+                    GatewayCost {
+                        latency_s: p.latency_s,
+                        energy_mwh: p.energy_mwh,
+                    },
+                ))
+            }
+        }
+    }
+
+    /// Feed back the detection count returned by the routed backend
+    /// (drives the OB estimator; a no-op for the others).
+    pub fn observe_response(&mut self, detected_count: usize) {
+        self.last_count = detected_count;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::scene;
+    use crate::dataset::SceneSpec;
+    use crate::devices::gateway_spec;
+
+    fn engine() -> Engine {
+        Engine::new(&crate::default_artifacts_dir()).unwrap()
+    }
+
+    #[test]
+    fn oracle_returns_truth_at_zero_cost() {
+        let e = engine();
+        let g = gateway_spec();
+        let mut est = Estimator::new(EstimatorKind::Oracle);
+        let img = vec![0.5f32; 384 * 384];
+        let (c, cost) = est.estimate(&e, &g, &img, 7).unwrap();
+        assert_eq!(c, 7);
+        assert_eq!(cost.latency_s, 0.0);
+        assert_eq!(cost.energy_mwh, 0.0);
+    }
+
+    #[test]
+    fn output_based_replays_observations() {
+        let e = engine();
+        let g = gateway_spec();
+        let mut est = Estimator::new(EstimatorKind::OutputBased);
+        let img = vec![0.5f32; 384 * 384];
+        // default estimate is 0
+        assert_eq!(est.estimate(&e, &g, &img, 9).unwrap().0, 0);
+        est.observe_response(4);
+        assert_eq!(est.estimate(&e, &g, &img, 9).unwrap().0, 4);
+        est.observe_response(2);
+        assert_eq!(est.estimate(&e, &g, &img, 9).unwrap().0, 2);
+    }
+
+    #[test]
+    fn ed_and_sf_track_scene_density() {
+        let e = engine();
+        let g = gateway_spec();
+        let sparse = scene::render_spec(&SceneSpec {
+            id: 0,
+            seed: 21,
+            n_objects: 1,
+        });
+        let crowded = scene::render_spec(&SceneSpec {
+            id: 1,
+            seed: 22,
+            n_objects: 8,
+        });
+        for kind in [EstimatorKind::EdgeDetection, EstimatorKind::SsdFront] {
+            let mut est = Estimator::new(kind);
+            let (c_sparse, cost) =
+                est.estimate(&e, &g, &sparse.image, 1).unwrap();
+            let (c_crowded, _) =
+                est.estimate(&e, &g, &crowded.image, 8).unwrap();
+            assert!(cost.latency_s > 0.0 && cost.energy_mwh > 0.0);
+            assert!(
+                c_crowded > c_sparse,
+                "{kind:?}: sparse {c_sparse} vs crowded {c_crowded}"
+            );
+        }
+    }
+
+    #[test]
+    fn ed_cheaper_than_sf() {
+        let e = engine();
+        let g = gateway_spec();
+        let img = vec![0.5f32; 384 * 384];
+        let mut ed = Estimator::new(EstimatorKind::EdgeDetection);
+        let mut sf = Estimator::new(EstimatorKind::SsdFront);
+        let (_, ce) = ed.estimate(&e, &g, &img, 0).unwrap();
+        let (_, cs) = sf.estimate(&e, &g, &img, 0).unwrap();
+        assert!(ce.energy_mwh < cs.energy_mwh);
+        assert!(ce.latency_s < cs.latency_s);
+    }
+}

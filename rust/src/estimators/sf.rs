@@ -1,0 +1,28 @@
+//! SF estimator helpers: the SSD-based front-end shares the backend
+//! decode path (`detection::decode_heatmap` on the `ssd_front` artifact);
+//! this module only adds the count extraction and a calibration hook.
+
+use crate::detection::Detection;
+
+/// Object count from front-end detections. Kept as its own function so
+/// calibration (e.g. discounting low-score detections) has a seam.
+pub fn count_from_detections(dets: &[Detection]) -> usize {
+    dets.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::detection::BBox;
+
+    #[test]
+    fn counts_detections() {
+        let d = |s: f32| Detection {
+            bbox: BBox::new(0.0, 0.0, 10.0, 10.0),
+            score: s,
+            cls: 0,
+        };
+        assert_eq!(count_from_detections(&[]), 0);
+        assert_eq!(count_from_detections(&[d(0.5), d(0.2)]), 2);
+    }
+}

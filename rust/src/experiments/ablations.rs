@@ -1,0 +1,325 @@
+//! Ablations beyond the paper's headline evaluation — each one probes a
+//! design choice DESIGN.md calls out, or implements a Future-Work item:
+//!
+//! * `ablation_groups`   — group-rule granularity (2 / 5 / 9 groups).
+//! * `ablation_batch`    — request-level vs batch-level routing (FW #2).
+//! * `ablation_weighted` — Algorithm 1 vs weighted multi-objective (FW #3).
+//! * `ablation_drift`    — static profiles vs drifting fleet vs periodic
+//!                         re-profiling (FW #1).
+//! * `ablation_failover` — node-failure injection and fallback cost.
+
+use anyhow::Result;
+
+use super::serve::deployed_store;
+use super::Harness;
+use crate::dataset::coco;
+use crate::devices::drift::DriftConfig;
+use crate::gateway::{router_by_name, Gateway};
+use crate::metrics::RunMetrics;
+use crate::nodes::NodePool;
+use crate::router::{
+    GroupRules, PairKey, ProfileStore, WeightedRouter, Weights,
+};
+use crate::router::group::GroupRule;
+use crate::util::json::Json;
+use crate::workload;
+
+fn fresh_gateway<'e>(
+    h: &'e Harness,
+    router: &str,
+    deployed: &ProfileStore,
+    delta: f64,
+) -> Result<Gateway<'e>> {
+    let pool = NodePool::deploy(
+        &h.engine,
+        &deployed.pairs(),
+        &crate::devices::fleet(),
+        h.cfg.seed,
+    )?;
+    Ok(Gateway::new(
+        &h.engine,
+        router_by_name(router).unwrap(),
+        deployed.clone(),
+        pool,
+        delta,
+        h.cfg.seed,
+    ))
+}
+
+/// Group-rule granularity: coarser rules blunt the router's adaptivity,
+/// finer rules add nothing once groups resolve the accuracy cliffs.
+pub fn ablation_groups(h: &Harness) -> Result<()> {
+    let n = (h.cfg.coco_images / 2).max(80);
+    let ds = coco::build(n, h.cfg.seed ^ 0xAB1);
+    let full = h.profiles()?;
+
+    // regroup the store's rows under coarser/finer rules by re-keying
+    // profiled groups through a mapping on representative counts.
+    let rule_sets: Vec<(&str, GroupRules)> = vec![
+        (
+            "2 groups (0-1 | 2+)",
+            GroupRules::new(vec![
+                GroupRule { lo: 0, hi: 1, label: 0 },
+                GroupRule { lo: 2, hi: usize::MAX, label: 1 },
+            ])
+            .unwrap(),
+        ),
+        ("5 groups (paper)", GroupRules::paper_default()),
+    ];
+
+    println!("--- ablation_groups ({n} images) ---");
+    println!(
+        "{:<22} {:>8} {:>12} {:>12}",
+        "rules", "mAP", "energy_mWh", "latency_s"
+    );
+    let mut out = Vec::new();
+    for (name, rules) in &rule_sets {
+        // collapse profiled groups through the rule set: profiled group g
+        // (representative count = g, 4 => "4+") maps to rules.group_of
+        let mut rows = Vec::new();
+        for r in full.rows() {
+            let mut nr = r.clone();
+            nr.group = rules.group_of(r.group); // representative counts
+            rows.push(nr);
+        }
+        // aggregate duplicate (pair, group) rows by mean mAP
+        let mut agg: std::collections::BTreeMap<(PairKey, usize), (f64, f64, f64, usize)> =
+            std::collections::BTreeMap::new();
+        for r in rows {
+            let e = agg
+                .entry((r.pair.clone(), r.group))
+                .or_insert((0.0, 0.0, 0.0, 0));
+            e.0 += r.map;
+            e.1 += r.latency_s;
+            e.2 += r.energy_mwh;
+            e.3 += 1;
+        }
+        let store = ProfileStore::new(
+            agg.into_iter()
+                .map(|((pair, group), (m, l, e, c))| {
+                    crate::router::PairProfile {
+                        pair,
+                        group,
+                        map: m / c as f64,
+                        latency_s: l / c as f64,
+                        energy_mwh: e / c as f64,
+                    }
+                })
+                .collect(),
+        );
+        let testbed = crate::profiling::testbed::pool(
+            &crate::profiling::testbed::select(&store),
+        );
+        let deployed = store.restrict(&testbed);
+        let mut gw = fresh_gateway(h, "Orc", &deployed, h.cfg.delta_map)?;
+        // the gateway must bucket oracle counts with the SAME rules that
+        // key this store's rows
+        gw.set_rules(rules.clone());
+        let m = workload::run_dataset(&mut gw, &ds)?;
+        println!(
+            "{:<22} {:>8.2} {:>12.2} {:>12.2}",
+            name,
+            m.map(),
+            m.total_energy_mwh(),
+            m.total_latency_s
+        );
+        out.push(Json::obj(vec![
+            ("rules", Json::str(name)),
+            ("map", Json::num(m.map())),
+            ("energy_mwh", Json::num(m.total_energy_mwh())),
+            ("latency_s", Json::num(m.total_latency_s)),
+        ]));
+    }
+    h.save_json("ablation_groups", &Json::Arr(out))
+}
+
+/// Request-level vs batch-level routing (Future Work #2).
+pub fn ablation_batch(h: &Harness) -> Result<()> {
+    let n = (h.cfg.coco_images / 2).max(80);
+    let ds = coco::build(n, h.cfg.seed ^ 0xAB2);
+    let deployed = deployed_store(h)?;
+
+    println!("--- ablation_batch ({n} images) ---");
+    println!(
+        "{:<14} {:>8} {:>12} {:>12} {:>10}",
+        "mode", "mAP", "energy_mWh", "latency_s", "gw_mWh"
+    );
+    let mut out = Vec::new();
+
+    // per-request baseline
+    let mut gw = fresh_gateway(h, "ED", &deployed, h.cfg.delta_map)?;
+    let per_req = workload::run_dataset(&mut gw, &ds)?;
+
+    // batched: window of 8 consecutive requests, one decision per batch
+    for batch in [4usize, 8] {
+        let mut gw = fresh_gateway(h, "ED", &deployed, h.cfg.delta_map)?;
+        let mut m = RunMetrics::new("ED-batch");
+        let scenes: Vec<_> = ds.iter_scenes().collect();
+        for chunk in scenes.chunks(batch) {
+            let images: Vec<(Vec<f32>, usize, Vec<crate::dataset::GtBox>)> =
+                chunk
+                    .iter()
+                    .map(|s| (s.image.clone(), s.gt.len(), s.gt.clone()))
+                    .collect();
+            gw.handle_batch(&images, &mut m)?;
+        }
+        println!(
+            "{:<14} {:>8.2} {:>12.2} {:>12.2} {:>10.3}",
+            format!("batch={batch}"),
+            m.map(),
+            m.total_energy_mwh(),
+            m.total_latency_s,
+            m.gateway_energy_mwh
+        );
+        out.push(Json::obj(vec![
+            ("mode", Json::str(&format!("batch{batch}"))),
+            ("map", Json::num(m.map())),
+            ("energy_mwh", Json::num(m.total_energy_mwh())),
+            ("latency_s", Json::num(m.total_latency_s)),
+        ]));
+    }
+    println!(
+        "{:<14} {:>8.2} {:>12.2} {:>12.2} {:>10.3}",
+        "per-request",
+        per_req.map(),
+        per_req.total_energy_mwh(),
+        per_req.total_latency_s,
+        per_req.gateway_energy_mwh
+    );
+    out.push(Json::obj(vec![
+        ("mode", Json::str("per_request")),
+        ("map", Json::num(per_req.map())),
+        ("energy_mwh", Json::num(per_req.total_energy_mwh())),
+        ("latency_s", Json::num(per_req.total_latency_s)),
+    ]));
+    h.save_json("ablation_batch", &Json::Arr(out))
+}
+
+/// Algorithm 1 vs weighted scalarization (Future Work #3).
+pub fn ablation_weighted(h: &Harness) -> Result<()> {
+    let deployed = deployed_store(h)?;
+    println!("--- ablation_weighted (per-group route choices) ---");
+    let greedy = crate::router::GreedyRouter::new(h.cfg.delta_map);
+    let settings = [
+        ("energy-heavy", Weights { energy: 3.0, latency: 0.2, accuracy: 1.0 }),
+        ("balanced", Weights { energy: 1.0, latency: 1.0, accuracy: 1.0 }),
+        ("accuracy-heavy", Weights { energy: 0.3, latency: 0.2, accuracy: 3.0 }),
+    ];
+    let mut out = Vec::new();
+    for g in deployed.groups() {
+        let gchoice = greedy.route(&deployed, g);
+        print!("group {g}: greedy={}", gchoice.as_ref().map(|p| p.to_string()).unwrap_or_default());
+        let mut row = vec![
+            ("group", Json::num(g as f64)),
+            (
+                "greedy",
+                Json::str(&gchoice.map(|p| p.to_string()).unwrap_or_default()),
+            ),
+        ];
+        for (name, w) in &settings {
+            let c = WeightedRouter::new(*w)
+                .route(&deployed, g)
+                .map(|p| p.to_string())
+                .unwrap_or_default();
+            print!("  {name}={c}");
+            row.push((*name, Json::str(&c)));
+        }
+        println!();
+        out.push(Json::obj(row));
+    }
+    h.save_json("ablation_weighted", &Json::Arr(out))
+}
+
+/// Static profiles on a drifting fleet vs periodic re-profiling (FW #1).
+pub fn ablation_drift(h: &Harness) -> Result<()> {
+    let n = (h.cfg.coco_images / 2).max(100);
+    let ds = coco::build(n, h.cfg.seed ^ 0xAB4);
+    let deployed = deployed_store(h)?;
+
+    println!("--- ablation_drift ({n} images) ---");
+    println!(
+        "{:<22} {:>8} {:>12} {:>12}",
+        "fleet", "mAP", "energy_mWh", "latency_s"
+    );
+    let mut out = Vec::new();
+
+    // static fleet (the paper's assumption)
+    let mut gw = fresh_gateway(h, "Orc", &deployed, h.cfg.delta_map)?;
+    let m_static = workload::run_dataset(&mut gw, &ds)?;
+
+    // drifting fleet, original profiles (stale)
+    let mut gw = fresh_gateway(h, "Orc", &deployed, h.cfg.delta_map)?;
+    gw.pool_mut().enable_drift(&DriftConfig::default(), h.cfg.seed);
+    let m_drift = workload::run_dataset(&mut gw, &ds)?;
+
+    for (name, m) in [
+        ("static (paper)", &m_static),
+        ("drifting, stale profiles", &m_drift),
+    ] {
+        println!(
+            "{:<26} {:>8.2} {:>12.2} {:>12.2}",
+            name,
+            m.map(),
+            m.total_energy_mwh(),
+            m.total_latency_s
+        );
+        out.push(Json::obj(vec![
+            ("fleet", Json::str(name)),
+            ("map", Json::num(m.map())),
+            ("energy_mwh", Json::num(m.total_energy_mwh())),
+            ("latency_s", Json::num(m.total_latency_s)),
+        ]));
+    }
+    let excess = crate::util::stats::pct_change(
+        m_static.total_energy_mwh(),
+        m_drift.total_energy_mwh(),
+    );
+    println!("drift cost: {excess:+.1}% energy over the static assumption");
+    h.save_json("ablation_drift", &Json::Arr(out))
+}
+
+/// Failure injection: kill the greedy router's favourite pair mid-run
+/// and measure the fallback's cost.
+pub fn ablation_failover(h: &Harness) -> Result<()> {
+    let n = (h.cfg.coco_images / 2).max(100);
+    let ds = coco::build(n, h.cfg.seed ^ 0xAB5);
+    let deployed = deployed_store(h)?;
+
+    // find the greedy favourite for the crowded group and kill it
+    let greedy = crate::router::GreedyRouter::new(h.cfg.delta_map);
+    let favourite = greedy
+        .route(&deployed, 4)
+        .ok_or_else(|| anyhow::anyhow!("no crowded-group route"))?;
+
+    println!("--- ablation_failover ({n} images, killing {favourite}) ---");
+    let mut out = Vec::new();
+    for (name, kill) in [("healthy", false), ("favourite down", true)] {
+        let mut gw = fresh_gateway(h, "Orc", &deployed, h.cfg.delta_map)?;
+        if kill {
+            assert!(gw.pool_mut().set_health(&favourite, false));
+        }
+        let m = workload::run_dataset(&mut gw, &ds)?;
+        println!(
+            "{:<18} mAP {:>6.2}  energy {:>8.2}  fallbacks {}",
+            name,
+            m.map(),
+            m.total_energy_mwh(),
+            gw.fallbacks
+        );
+        out.push(Json::obj(vec![
+            ("scenario", Json::str(name)),
+            ("map", Json::num(m.map())),
+            ("energy_mwh", Json::num(m.total_energy_mwh())),
+            ("fallbacks", Json::num(gw.fallbacks as f64)),
+        ]));
+    }
+    h.save_json("ablation_failover", &Json::Arr(out))
+}
+
+pub fn run_all(h: &Harness) -> Result<()> {
+    ablation_groups(h)?;
+    ablation_batch(h)?;
+    ablation_weighted(h)?;
+    ablation_drift(h)?;
+    ablation_failover(h)
+}

@@ -1,0 +1,146 @@
+//! Experiment drivers: one per paper table/figure (DESIGN.md §5).
+//!
+//! | id        | paper artefact                                   |
+//! |-----------|--------------------------------------------------|
+//! | `fig2`    | prelim: energy & mAP, 1-obj vs 4+-obj groups     |
+//! | `fig4`    | COCO object-count distribution                   |
+//! | `fig5`    | 64-pair Pareto grid (energy vs mAP)              |
+//! | `table1`  | testbed selection (per-metric champions)         |
+//! | `fig6`    | full-COCO router comparison @ delta=5            |
+//! | `fig7`    | balanced-sorted dataset comparison               |
+//! | `fig8`    | pedestrian-video comparison                      |
+//! | `fig9`    | delta_mAP sweep x {Orc, ED, SF, OB}              |
+//! | `overhead`| gateway overhead per router (§4.2)               |
+//!
+//! Every driver prints the paper-style table and writes
+//! `results/<id>.json` for downstream plotting.
+
+pub mod ablations;
+pub mod serve;
+pub mod static_figs;
+pub mod sweep;
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ExperimentConfig;
+use crate::devices;
+use crate::profiling::{self, ProfilerConfig};
+use crate::router::{GroupRules, ProfileStore};
+use crate::runtime::Engine;
+use crate::util::json::Json;
+
+pub const ALL_EXPERIMENTS: [&str; 9] = [
+    "fig2", "fig4", "fig5", "table1", "fig6", "fig7", "fig8", "fig9",
+    "overhead",
+];
+
+/// Shared experiment context.
+pub struct Harness {
+    pub engine: Engine,
+    pub cfg: ExperimentConfig,
+    pub out_dir: PathBuf,
+    /// Cached full profiling grid.
+    profiles: std::cell::RefCell<Option<ProfileStore>>,
+}
+
+impl Harness {
+    pub fn new(cfg: ExperimentConfig) -> Result<Self> {
+        let artifacts = if cfg.artifacts_dir.is_empty() {
+            crate::default_artifacts_dir()
+        } else {
+            PathBuf::from(&cfg.artifacts_dir)
+        };
+        let out_dir = artifacts
+            .parent()
+            .unwrap_or(std::path::Path::new("."))
+            .join("results");
+        std::fs::create_dir_all(&out_dir)?;
+        Ok(Self {
+            engine: Engine::new(&artifacts)
+                .context("starting PJRT engine")?,
+            cfg,
+            out_dir,
+            profiles: std::cell::RefCell::new(None),
+        })
+    }
+
+    /// The full 8x8x5 profiling grid, computed once per process and
+    /// persisted to `results/profiles.json` (reused across runs unless
+    /// the config's profiling parameters changed).
+    pub fn profiles(&self) -> Result<ProfileStore> {
+        if let Some(p) = self.profiles.borrow().as_ref() {
+            return Ok(p.clone());
+        }
+        // bump PROFILE_CACHE_VERSION whenever the device model or decode
+        // path changes — the cache key must reflect everything that
+        // determines profile contents.
+        const PROFILE_CACHE_VERSION: u32 = 3;
+        let path = self.out_dir.join(format!(
+            "profiles_v{PROFILE_CACHE_VERSION}_g{}_s{}.json",
+            self.cfg.profile_per_group, self.cfg.seed
+        ));
+        let store = if path.exists() {
+            ProfileStore::load(&path)?
+        } else {
+            eprintln!(
+                "[profiling] building 8x8x5 grid ({} images/group)...",
+                self.cfg.profile_per_group
+            );
+            let store = profiling::profile_fleet(
+                &self.engine,
+                &devices::fleet(),
+                &GroupRules::paper_default(),
+                &ProfilerConfig {
+                    images_per_group: self.cfg.profile_per_group,
+                    seed: self.cfg.seed ^ 0xF0F1_u64,
+                    ..Default::default()
+                },
+            )?;
+            store.save(&path)?;
+            store
+        };
+        *self.profiles.borrow_mut() = Some(store.clone());
+        Ok(store)
+    }
+
+    pub fn save_json(&self, id: &str, j: &Json) -> Result<()> {
+        let path = self.out_dir.join(format!("{id}.json"));
+        std::fs::write(&path, j.pretty())?;
+        eprintln!("[{id}] wrote {}", path.display());
+        Ok(())
+    }
+
+    /// Dispatch one experiment by id.
+    pub fn run(&self, id: &str) -> Result<()> {
+        match id {
+            "fig2" => static_figs::fig2(self),
+            "fig4" => static_figs::fig4(self),
+            "fig5" => static_figs::fig5(self),
+            "table1" => static_figs::table1(self),
+            "fig6" => serve::fig6(self),
+            "fig7" => serve::fig7(self),
+            "fig8" => serve::fig8(self),
+            "fig9" => sweep::fig9(self),
+            "overhead" => serve::overhead(self),
+            "ablation_groups" => ablations::ablation_groups(self),
+            "ablation_batch" => ablations::ablation_batch(self),
+            "ablation_weighted" => ablations::ablation_weighted(self),
+            "ablation_drift" => ablations::ablation_drift(self),
+            "ablation_failover" => ablations::ablation_failover(self),
+            "ablations" => ablations::run_all(self),
+            "all" => {
+                for e in ALL_EXPERIMENTS {
+                    eprintln!("=== experiment {e} ===");
+                    self.run(e)?;
+                }
+                Ok(())
+            }
+            other => bail!(
+                "unknown experiment '{other}' (known: {})",
+                ALL_EXPERIMENTS.join(", ")
+            ),
+        }
+    }
+}

@@ -1,0 +1,241 @@
+//! Serving experiments: the router-comparison panels (Figs. 6, 7, 8) and
+//! the gateway-overhead table (§4.2).
+//!
+//! Each run deploys the Table-1 node pool, wires one router
+//! configuration, drives the closed-loop workload over the dataset, and
+//! reports (mAP, total latency, dynamic energy, gateway overhead) — the
+//! same rows the paper's figures plot.
+
+use anyhow::Result;
+
+use super::Harness;
+use crate::dataset::{balanced, coco, video, Dataset};
+use crate::gateway::{paper_routers, router_by_name, Gateway, RouterSpec};
+use crate::metrics::{render_table, RunMetrics};
+use crate::nodes::NodePool;
+use crate::profiling::testbed;
+use crate::router::ProfileStore;
+use crate::util::json::Json;
+use crate::util::stats::pct_change;
+use crate::workload;
+
+/// Deploy pool + run one router over a dataset.
+pub fn run_router_on_dataset(
+    h: &Harness,
+    spec: RouterSpec,
+    deployed: &ProfileStore,
+    dataset: &Dataset,
+) -> Result<RunMetrics> {
+    run_router_with_delta(h, spec, deployed, dataset, h.cfg.delta_map)
+}
+
+/// Same, with an explicit delta_mAP (used by the Fig. 9 sweep).
+pub fn run_router_with_delta(
+    h: &Harness,
+    spec: RouterSpec,
+    deployed: &ProfileStore,
+    dataset: &Dataset,
+    delta_map: f64,
+) -> Result<RunMetrics> {
+    let pool = NodePool::deploy(
+        &h.engine,
+        &deployed.pairs(),
+        &crate::devices::fleet(),
+        h.cfg.seed,
+    )?;
+    let mut gw = Gateway::new(
+        &h.engine,
+        spec,
+        deployed.clone(),
+        pool,
+        delta_map,
+        h.cfg.seed,
+    );
+    workload::run_dataset(&mut gw, dataset)
+}
+
+/// The deployed testbed store: full grid restricted to Table-1 pairs.
+pub fn deployed_store(h: &Harness) -> Result<ProfileStore> {
+    let full = h.profiles()?;
+    let rows = testbed::select(&full);
+    Ok(full.restrict(&testbed::pool(&rows)))
+}
+
+fn selected_routers(h: &Harness) -> Vec<RouterSpec> {
+    h.cfg
+        .routers
+        .iter()
+        .filter_map(|n| router_by_name(n))
+        .collect()
+}
+
+/// Shared panel driver for figs 6/7/8.
+///
+/// Scenes are rendered ONCE and shared across all router runs (a ~10x
+/// reduction in renderer work for the ten-router panels; see
+/// EXPERIMENTS.md §Perf).
+fn router_panel(
+    h: &Harness,
+    id: &str,
+    dataset: &Dataset,
+) -> Result<Vec<RunMetrics>> {
+    let deployed = deployed_store(h)?;
+    eprintln!(
+        "[{id}] pool: {} pairs, dataset: {} ({} images), delta={}",
+        deployed.pairs().len(),
+        dataset.name,
+        dataset.len(),
+        h.cfg.delta_map
+    );
+    let scenes: Vec<crate::dataset::Scene> =
+        dataset.iter_scenes().collect();
+    let gts: Vec<Vec<crate::dataset::GtBox>> =
+        scenes.iter().map(|s| s.gt.clone()).collect();
+    let mut runs = Vec::new();
+    for spec in selected_routers(h) {
+        let pool = NodePool::deploy(
+            &h.engine,
+            &deployed.pairs(),
+            &crate::devices::fleet(),
+            h.cfg.seed,
+        )?;
+        let mut gw = Gateway::new(
+            &h.engine,
+            spec,
+            deployed.clone(),
+            pool,
+            h.cfg.delta_map,
+            h.cfg.seed,
+        );
+        let m = workload::run_frames(&mut gw, &scenes, &gts)?;
+        eprintln!(
+            "[{id}] {:<4} mAP={:6.2} energy={:9.2} mWh latency={:8.2} s",
+            m.label,
+            m.map(),
+            m.total_energy_mwh(),
+            m.total_latency_s
+        );
+        runs.push(m);
+    }
+    print_panel(id, &runs);
+    let j = Json::Arr(runs.iter().map(|m| m.to_json()).collect());
+    h.save_json(id, &j)?;
+    Ok(runs)
+}
+
+/// Print the table plus paper-shape normalized comparisons.
+pub fn print_panel(id: &str, runs: &[RunMetrics]) {
+    let refs: Vec<&RunMetrics> = runs.iter().collect();
+    println!("--- {id} ---");
+    println!("{}", render_table(&refs));
+    let find = |label: &str| runs.iter().find(|m| m.label == label);
+    if let (Some(le), Some(hmg)) = (find("LE"), find("HMG")) {
+        println!(
+            "reference points: LE energy = {:.2} mWh (lower bound), HMG mAP = {:.2} (upper bound)",
+            le.total_energy_mwh(),
+            hmg.map()
+        );
+        for m in runs {
+            println!(
+                "  {:<4} energy +{:.0}% vs LE | mAP {:+.1}% vs HMG | energy {:+.0}% vs HMG",
+                m.label,
+                pct_change(le.total_energy_mwh(), m.total_energy_mwh()),
+                pct_change(hmg.map(), m.map()),
+                pct_change(hmg.total_energy_mwh(), m.total_energy_mwh()),
+            );
+        }
+    }
+}
+
+/// Fig. 6: full synthetic-COCO comparison.
+pub fn fig6(h: &Harness) -> Result<()> {
+    let ds = coco::build(h.cfg.coco_images, h.cfg.seed ^ 0xC0C0);
+    router_panel(h, "fig6", &ds)?;
+    Ok(())
+}
+
+/// Fig. 7: balanced sorted dataset.
+pub fn fig7(h: &Harness) -> Result<()> {
+    let ds = balanced::build(h.cfg.balanced_per_group, h.cfg.seed ^ 0xBA1A);
+    router_panel(h, "fig7", &ds)?;
+    Ok(())
+}
+
+/// Fig. 8: pedestrian video with pseudo ground truth from yolov8x.
+pub fn fig8(h: &Harness) -> Result<()> {
+    let frames = video::build_frames(h.cfg.video_frames, h.cfg.seed ^ 0x71DE);
+    let pseudo = workload::pseudo_annotate(&h.engine, &frames)?;
+    let deployed = deployed_store(h)?;
+    eprintln!(
+        "[fig8] {} frames, pool {} pairs",
+        frames.len(),
+        deployed.pairs().len()
+    );
+    let mut runs = Vec::new();
+    for spec in selected_routers(h) {
+        let pool = NodePool::deploy(
+            &h.engine,
+            &deployed.pairs(),
+            &crate::devices::fleet(),
+            h.cfg.seed,
+        )?;
+        let mut gw = Gateway::new(
+            &h.engine,
+            spec,
+            deployed.clone(),
+            pool,
+            h.cfg.delta_map,
+            h.cfg.seed,
+        );
+        let m = workload::run_frames(&mut gw, &frames, &pseudo)?;
+        eprintln!(
+            "[fig8] {:<4} mAP={:6.2} energy={:9.2} latency={:8.2}",
+            m.label,
+            m.map(),
+            m.total_energy_mwh(),
+            m.total_latency_s
+        );
+        runs.push(m);
+    }
+    print_panel("fig8", &runs);
+    let j = Json::Arr(runs.iter().map(|m| m.to_json()).collect());
+    h.save_json("fig8", &j)?;
+    Ok(())
+}
+
+/// §4.2 gateway-overhead table: per-router estimation cost, isolated.
+pub fn overhead(h: &Harness) -> Result<()> {
+    let n = (h.cfg.coco_images / 4).max(50);
+    let ds = coco::build(n, h.cfg.seed ^ 0x0EAD);
+    let deployed = deployed_store(h)?;
+    println!("--- overhead (per-request gateway cost over {n} images) ---");
+    println!(
+        "{:<6} {:>14} {:>14} {:>10}",
+        "router", "gw_energy_uWh", "gw_latency_ms", "est_err"
+    );
+    let mut rows = Vec::new();
+    for spec in paper_routers() {
+        let m = run_router_on_dataset(h, spec, &deployed, &ds)?;
+        println!(
+            "{:<6} {:>14.3} {:>14.3} {:>10.2}",
+            m.label,
+            1000.0 * m.gateway_energy_mwh / m.requests as f64,
+            1000.0 * m.gateway_latency_s / m.requests as f64,
+            m.mean_estimation_error()
+        );
+        rows.push(Json::obj(vec![
+            ("router", Json::str(&m.label)),
+            (
+                "gw_energy_mwh_per_req",
+                Json::num(m.gateway_energy_mwh / m.requests as f64),
+            ),
+            (
+                "gw_latency_s_per_req",
+                Json::num(m.gateway_latency_s / m.requests as f64),
+            ),
+            ("est_err", Json::num(m.mean_estimation_error())),
+        ]));
+    }
+    h.save_json("overhead", &Json::Arr(rows))?;
+    Ok(())
+}

@@ -1,0 +1,230 @@
+//! Static (non-serving) experiments: Fig. 2 (motivating prelim), Fig. 4
+//! (count distribution), Fig. 5 (64-pair Pareto grid), Table 1 (testbed
+//! selection).
+
+use anyhow::Result;
+
+use super::Harness;
+use crate::dataset::{coco, Dataset, SceneSpec};
+use crate::detection::decode_heatmap;
+use crate::detection::map::{map_coco, ImageEval};
+use crate::devices;
+use crate::profiling::testbed;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Fig. 2: SSD-Lite vs YOLOv8n on single-object vs 4+-object images —
+/// similar accuracy when sparse, ~2x mAP gap when crowded, while the
+/// light model's energy stays ~50% lower.
+pub fn fig2(h: &Harness) -> Result<()> {
+    let n = h.cfg.profile_per_group.max(24);
+    let models = ["ssd_lite", "yolov8n"];
+    let device = devices::find(&devices::fleet(), "pi5").unwrap();
+
+    let build_group = |n_objects_choices: &[usize], tag: u64| -> Dataset {
+        let base = Rng::new(h.cfg.seed ^ tag);
+        Dataset {
+            name: format!("fig2_{tag}"),
+            specs: (0..n)
+                .map(|j| {
+                    let mut r = base.derive(j as u64);
+                    let n_objects = n_objects_choices
+                        [r.below(n_objects_choices.len() as u64) as usize];
+                    SceneSpec {
+                        id: j,
+                        seed: r.next_u64(),
+                        n_objects,
+                    }
+                })
+                .collect(),
+        }
+    };
+    let groups = [
+        ("single", build_group(&[1], 0xF2A)),
+        ("4plus", build_group(&[4, 5, 6, 7, 8], 0xF2B)),
+    ];
+
+    println!("--- fig2 (prelim: accuracy & energy by scene complexity) ---");
+    println!(
+        "{:<10} {:<9} {:>8} {:>16}",
+        "model", "group", "mAP", "energy_mWh/img"
+    );
+    let mut out = Vec::new();
+    for model in models {
+        let meta = h.engine.meta(model)?;
+        let prof = device.profile(&meta);
+        for (gname, ds) in &groups {
+            let mut evals = Vec::with_capacity(ds.len());
+            for scene in ds.iter_scenes() {
+                let heat = h.engine.infer(model, &scene.image)?;
+                evals.push(ImageEval {
+                    dets: decode_heatmap(&heat, &meta, prof.threshold_scale),
+                    gt: scene.gt.clone(),
+                });
+            }
+            let map = map_coco(&evals, crate::dataset::NUM_CLASSES).map;
+            println!(
+                "{:<10} {:<9} {:>8.2} {:>16.4}",
+                model, gname, map, prof.energy_mwh
+            );
+            out.push(Json::obj(vec![
+                ("model", Json::str(model)),
+                ("group", Json::str(gname)),
+                ("map", Json::num(map)),
+                ("energy_mwh_per_image", Json::num(prof.energy_mwh)),
+            ]));
+        }
+    }
+    h.save_json("fig2", &Json::Arr(out))
+}
+
+/// Fig. 4: object-count distribution of the synthetic COCO val set.
+pub fn fig4(h: &Harness) -> Result<()> {
+    let ds = coco::build(5000, h.cfg.seed ^ 0xC0C0);
+    let hist = coco::count_histogram(&ds);
+    println!("--- fig4 (object-count distribution, 5000 images) ---");
+    let max = *hist.iter().max().unwrap() as f64;
+    for (count, &images) in hist.iter().enumerate() {
+        let bar = "#".repeat((40.0 * images as f64 / max) as usize);
+        let label = if count == coco::MAX_COUNT {
+            format!("{count}+")
+        } else {
+            format!("{count}")
+        };
+        println!("{label:>3} | {images:>4} {bar}");
+    }
+    h.save_json(
+        "fig4",
+        &Json::obj(vec![(
+            "histogram",
+            Json::arr_f64(
+                &hist.iter().map(|&x| x as f64).collect::<Vec<_>>(),
+            ),
+        )]),
+    )
+}
+
+/// Fig. 5: the 64-combination accuracy–energy grid with Pareto marking.
+pub fn fig5(h: &Harness) -> Result<()> {
+    let store = h.profiles()?;
+    // aggregate per pair: mean mAP over groups 1..4 (group 0 is the
+    // clean-image score, not a detection metric), energy per inference
+    let pairs = store.pairs();
+    #[derive(Clone)]
+    struct Row {
+        pair: crate::router::PairKey,
+        map: f64,
+        energy: f64,
+        latency: f64,
+    }
+    let mut rows: Vec<Row> = pairs
+        .iter()
+        .map(|p| {
+            let maps: Vec<f64> = (1..=4)
+                .filter_map(|g| store.lookup(p, g).map(|r| r.map))
+                .collect();
+            let any = store.lookup(p, 1).unwrap();
+            Row {
+                pair: p.clone(),
+                map: maps.iter().sum::<f64>() / maps.len() as f64,
+                energy: any.energy_mwh,
+                latency: any.latency_s,
+            }
+        })
+        .collect();
+    rows.sort_by(|a, b| a.energy.partial_cmp(&b.energy).unwrap());
+    // Pareto front: minimal energy, maximal mAP
+    let mut best_map = f64::NEG_INFINITY;
+    let mut pareto = vec![false; rows.len()];
+    for (i, r) in rows.iter().enumerate() {
+        if r.map > best_map {
+            best_map = r.map;
+            pareto[i] = true;
+        }
+    }
+    println!("--- fig5 (64 model-device pairs: energy vs mAP) ---");
+    println!(
+        "{:<30} {:>10} {:>10} {:>10}  pareto",
+        "pair", "mAP", "mWh/img", "lat_ms"
+    );
+    let mut out = Vec::new();
+    for (i, r) in rows.iter().enumerate() {
+        println!(
+            "{:<30} {:>10.2} {:>10.4} {:>10.2}  {}",
+            r.pair.to_string(),
+            r.map,
+            r.energy,
+            1000.0 * r.latency,
+            if pareto[i] { "*" } else { "" }
+        );
+        out.push(Json::obj(vec![
+            ("model", Json::str(&r.pair.model)),
+            ("device", Json::str(&r.pair.device)),
+            ("map", Json::num(r.map)),
+            ("energy_mwh", Json::num(r.energy)),
+            ("latency_s", Json::num(r.latency)),
+            ("pareto", Json::Bool(pareto[i])),
+        ]));
+    }
+    println!(
+        "pareto-front pairs: {}",
+        pareto.iter().filter(|&&x| x).count()
+    );
+    // the paper's scatter, in ASCII: energy (x, log10 mWh) vs mAP (y)
+    let front: Vec<(f64, f64)> = rows
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| pareto[*i])
+        .map(|(_, r)| (r.energy.log10(), r.map))
+        .collect();
+    let rest: Vec<(f64, f64)> = rows
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| !pareto[*i])
+        .map(|(_, r)| (r.energy.log10(), r.map))
+        .collect();
+    println!(
+        "{}",
+        crate::util::chart::line_chart(
+            "fig5: log10(energy mWh/img) vs mAP",
+            &[("pareto front", front), ("dominated", rest)],
+            64,
+            18,
+        )
+    );
+    h.save_json("fig5", &Json::Arr(out))
+}
+
+/// Table 1: per-metric champions (the deployed testbed).
+pub fn table1(h: &Harness) -> Result<()> {
+    let store = h.profiles()?;
+    let rows = testbed::select(&store);
+    println!("--- table1 (testbed selection) ---");
+    println!("{:<12} {:<30} {:>12}", "metric", "pair", "value");
+    let mut out = Vec::new();
+    for r in &rows {
+        let device =
+            devices::find(&devices::fleet(), &r.pair.device).unwrap();
+        let meta = h.engine.meta(&r.pair.model)?;
+        let fw = device.profile(&meta).framework;
+        println!(
+            "{:<12} {:<30} {:>12.4}   ({})",
+            r.metric,
+            r.pair.to_string(),
+            r.value,
+            fw.label()
+        );
+        out.push(Json::obj(vec![
+            ("metric", Json::str(&r.metric)),
+            ("model", Json::str(&r.pair.model)),
+            ("device", Json::str(&r.pair.device)),
+            ("framework", Json::str(fw.label())),
+            ("value", Json::num(r.value)),
+        ]));
+    }
+    println!(
+        "deployed pool: {} unique pairs",
+        testbed::pool(&rows).len()
+    );
+    h.save_json("table1", &Json::Arr(out))
+}

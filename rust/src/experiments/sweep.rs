@@ -1,0 +1,72 @@
+//! Fig. 9: delta_mAP sweep — Oracle and the three proposed routers at
+//! delta in {0, 5, 10, 15, 20, 25}, reporting mAP / latency / energy per
+//! setting (paper §4.3.4, Insight #4).
+
+use anyhow::Result;
+
+use super::serve::deployed_store;
+use super::Harness;
+use crate::dataset::coco;
+use crate::gateway::router_by_name;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+pub const DELTAS: [f64; 6] = [0.0, 5.0, 10.0, 15.0, 20.0, 25.0];
+pub const SWEEP_ROUTERS: [&str; 4] = ["Orc", "ED", "SF", "OB"];
+
+pub fn fig9(h: &Harness) -> Result<()> {
+    // a lighter dataset than fig6: the sweep runs 24 full configurations
+    let n = (h.cfg.coco_images / 2).max(100);
+    let ds = coco::build(n, h.cfg.seed ^ 0xC0C0);
+    let deployed = deployed_store(h)?;
+
+    println!("--- fig9 (delta_mAP sweep over {n} images) ---");
+    println!(
+        "{:<6} {:>6} {:>8} {:>12} {:>12}",
+        "router", "delta", "mAP", "energy_mWh", "latency_s"
+    );
+    let mut out = Vec::new();
+    let mut energy_series: BTreeMap<&str, Vec<(f64, f64)>> =
+        BTreeMap::new();
+    for name in SWEEP_ROUTERS {
+        let spec = router_by_name(name).unwrap();
+        for delta in DELTAS {
+            let m = super::serve::run_router_with_delta(
+                h, spec, &deployed, &ds, delta,
+            )?;
+            println!(
+                "{:<6} {:>6.0} {:>8.2} {:>12.2} {:>12.2}",
+                name,
+                delta,
+                m.map(),
+                m.total_energy_mwh(),
+                m.total_latency_s
+            );
+            energy_series
+                .entry(name)
+                .or_default()
+                .push((delta, m.total_energy_mwh()));
+            out.push(Json::obj(vec![
+                ("router", Json::str(name)),
+                ("delta", Json::num(delta)),
+                ("map", Json::num(m.map())),
+                ("energy_mwh", Json::num(m.total_energy_mwh())),
+                ("latency_s", Json::num(m.total_latency_s)),
+            ]));
+        }
+    }
+    let series: Vec<(&str, Vec<(f64, f64)>)> = energy_series
+        .iter()
+        .map(|(k, v)| (*k, v.clone()))
+        .collect();
+    println!(
+        "{}",
+        crate::util::chart::line_chart(
+            "fig9: energy (mWh) vs delta_mAP",
+            &series,
+            60,
+            14,
+        )
+    );
+    h.save_json("fig9", &Json::Arr(out))
+}

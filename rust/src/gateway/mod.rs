@@ -1,0 +1,425 @@
+//! The gateway: ECORE's serving loop (paper Fig. 3).
+//!
+//! Per request: estimate object count → map to group (group rules) →
+//! route (policy) → dispatch to the chosen edge node → collect detections
+//! and feed the count back to the estimator (OB). All gateway-side costs
+//! are accounted separately so experiments can report the paper's
+//! "Gateway Overhead" metric.
+
+use anyhow::{Context, Result};
+
+use crate::dataset::GtBox;
+use crate::detection::map::ImageEval;
+use crate::devices::{self, DeviceSpec};
+use crate::estimators::{Estimator, EstimatorKind};
+use crate::metrics::RunMetrics;
+use crate::nodes::NodePool;
+use crate::router::{GroupRules, PairKey, Policy, PolicyKind, ProfileStore};
+use crate::runtime::Engine;
+
+/// One of the paper's ten evaluated router configurations: an estimator
+/// plus a routing policy.
+#[derive(Clone, Copy, Debug)]
+pub struct RouterSpec {
+    pub name: &'static str,
+    pub estimator: EstimatorKind,
+    pub policy: PolicyKind,
+}
+
+/// The ten configurations of §4.2 (Orc, RR, Rnd, LE, LI, HM, HMG + the
+/// proposed ED, SF, OB). Baselines that ignore the object count get the
+/// Oracle estimator, which costs nothing at the gateway; HMG genuinely
+/// consumes the oracle group as in the paper.
+pub fn paper_routers() -> Vec<RouterSpec> {
+    use EstimatorKind as E;
+    use PolicyKind as P;
+    vec![
+        RouterSpec { name: "Orc", estimator: E::Oracle, policy: P::Greedy },
+        RouterSpec { name: "RR", estimator: E::Oracle, policy: P::RoundRobin },
+        RouterSpec { name: "Rnd", estimator: E::Oracle, policy: P::Random },
+        RouterSpec { name: "LE", estimator: E::Oracle, policy: P::LowestEnergy },
+        RouterSpec { name: "LI", estimator: E::Oracle, policy: P::LowestInference },
+        RouterSpec { name: "HM", estimator: E::Oracle, policy: P::HighestMap },
+        RouterSpec { name: "HMG", estimator: E::Oracle, policy: P::HighestMapPerGroup },
+        RouterSpec { name: "ED", estimator: E::EdgeDetection, policy: P::Greedy },
+        RouterSpec { name: "SF", estimator: E::SsdFront, policy: P::Greedy },
+        RouterSpec { name: "OB", estimator: E::OutputBased, policy: P::Greedy },
+    ]
+}
+
+pub fn router_by_name(name: &str) -> Option<RouterSpec> {
+    paper_routers()
+        .into_iter()
+        .find(|r| r.name.eq_ignore_ascii_case(name))
+}
+
+/// Outcome of one request, as seen by the workload driver.
+#[derive(Clone, Debug)]
+pub struct RequestOutcome {
+    pub pair: PairKey,
+    pub group: usize,
+    pub estimate: usize,
+    pub detections: usize,
+}
+
+/// A fully wired gateway.
+pub struct Gateway<'e> {
+    engine: &'e Engine,
+    gateway_dev: DeviceSpec,
+    rules: GroupRules,
+    estimator: Estimator,
+    policy: Policy,
+    store: ProfileStore,
+    pool: NodePool,
+    pub spec: RouterSpec,
+    /// Virtual clock (s): advances with each closed-loop request; feeds
+    /// idle-time cooling in drifting node pools.
+    now_s: f64,
+    /// Requests that needed a fallback re-route (failed primary node).
+    pub fallbacks: usize,
+}
+
+impl<'e> Gateway<'e> {
+    /// Wire a gateway for one router configuration over a deployed pool.
+    ///
+    /// `store` must already be restricted to the deployed pairs (the
+    /// router can only choose endpoints that exist).
+    pub fn new(
+        engine: &'e Engine,
+        spec: RouterSpec,
+        store: ProfileStore,
+        pool: NodePool,
+        delta_map: f64,
+        seed: u64,
+    ) -> Self {
+        Self {
+            engine,
+            gateway_dev: devices::gateway_spec(),
+            rules: GroupRules::paper_default(),
+            estimator: Estimator::new(spec.estimator),
+            policy: Policy::new(spec.policy, &store, delta_map, seed),
+            store,
+            pool,
+            spec,
+            now_s: 0.0,
+            fallbacks: 0,
+        }
+    }
+
+    pub fn pool_mut(&mut self) -> &mut NodePool {
+        &mut self.pool
+    }
+
+    /// Replace the gateway's group rules (must match the store's group
+    /// labels — used by the group-granularity ablation).
+    pub fn set_rules(&mut self, rules: GroupRules) {
+        self.rules = rules;
+    }
+
+    pub fn virtual_now(&self) -> f64 {
+        self.now_s
+    }
+
+    pub fn pool(&self) -> &NodePool {
+        &self.pool
+    }
+
+    /// Handle one request end to end, recording into `metrics`.
+    ///
+    /// `true_count` and `gt` are evaluation-side information: the former
+    /// feeds the Oracle estimator (as request metadata, like the paper),
+    /// the latter is used only for accuracy accounting.
+    pub fn handle(
+        &mut self,
+        image: &[f32],
+        true_count: usize,
+        gt: &[GtBox],
+        metrics: &mut RunMetrics,
+    ) -> Result<RequestOutcome> {
+        // 1) estimate + group
+        let (estimate, cost) = self.estimator.estimate(
+            self.engine,
+            &self.gateway_dev,
+            image,
+            true_count,
+        )?;
+        let group = self.rules.group_of(estimate);
+
+        // 2) route, skipping unhealthy endpoints: if the chosen node is
+        //    down, re-route over the store with that pair removed (the
+        //    next-best feasible pair), like a health-checked LB.
+        let mut store_view = self.store.clone();
+        let mut pair = self
+            .policy
+            .route(&store_view, group)
+            .context("policy returned no endpoint")?;
+        let mut attempts = 0;
+        while !self.pool.is_healthy(&pair) {
+            self.fallbacks += 1;
+            attempts += 1;
+            anyhow::ensure!(
+                attempts <= self.pool.len(),
+                "all deployed nodes are down"
+            );
+            let remaining: Vec<_> = store_view
+                .pairs()
+                .into_iter()
+                .filter(|p| p != &pair)
+                .collect();
+            store_view = store_view.restrict(&remaining);
+            pair = self
+                .policy
+                .route(&store_view, group)
+                .context("no healthy endpoint for group")?;
+        }
+
+        // 3) dispatch on the virtual clock
+        let now = self.now_s;
+        let node = self
+            .pool
+            .get(&pair)
+            .with_context(|| format!("no deployed node for {pair}"))?;
+        let resp = node.process_at(self.engine, image, now)?;
+
+        // 4) feed back to the estimator (OB)
+        self.estimator.observe_response(resp.detections.len());
+
+        let n_det = resp.detections.len();
+        self.now_s +=
+            cost.latency_s + resp.latency_s + devices::NETWORK_S;
+        metrics.record_request(
+            &pair,
+            group,
+            estimate,
+            true_count,
+            cost.latency_s,
+            cost.energy_mwh,
+            resp.latency_s,
+            resp.energy_mwh,
+            devices::NETWORK_S,
+            ImageEval {
+                dets: resp.detections,
+                gt: gt.to_vec(),
+            },
+        );
+        Ok(RequestOutcome {
+            pair,
+            group,
+            estimate,
+            detections: n_det,
+        })
+    }
+}
+
+/// Batch-level routing (paper Future Work #2): estimate once on a batch
+/// representative, route the whole batch to one pair, and amortize the
+/// per-request preprocessing.
+pub struct BatchOutcome {
+    pub pair: PairKey,
+    pub group: usize,
+    pub detections_per_image: Vec<usize>,
+}
+
+impl<'e> Gateway<'e> {
+    /// Handle a batch of images with one routing decision.
+    ///
+    /// The estimator sees only the first image; the chosen node serves
+    /// the whole batch back-to-back (device stays warm: the preprocess
+    /// share of latency/energy after the first request is discounted by
+    /// `BATCH_PREPROCESS_DISCOUNT`, modelling pipelined decode).
+    pub fn handle_batch(
+        &mut self,
+        images: &[(Vec<f32>, usize, Vec<GtBox>)],
+        metrics: &mut RunMetrics,
+    ) -> Result<BatchOutcome> {
+        const BATCH_PREPROCESS_DISCOUNT: f64 = 0.6;
+        anyhow::ensure!(!images.is_empty(), "empty batch");
+        let (first_img, first_count, _) = &images[0];
+        let (estimate, cost) = self.estimator.estimate(
+            self.engine,
+            &self.gateway_dev,
+            first_img,
+            *first_count,
+        )?;
+        let group = self.rules.group_of(estimate);
+        let pair = self
+            .policy
+            .route(&self.store, group)
+            .context("policy returned no endpoint")?;
+        let now = self.now_s;
+        let node = self
+            .pool
+            .get(&pair)
+            .with_context(|| format!("no deployed node for {pair}"))?;
+        let mut dets_per_image = Vec::with_capacity(images.len());
+        for (i, (img, true_count, gt)) in images.iter().enumerate() {
+            let mut resp = node.process_at(self.engine, img, now)?;
+            if i > 0 {
+                // amortized preprocessing within the batch
+                let save_s = node.device().preprocess_s
+                    * BATCH_PREPROCESS_DISCOUNT;
+                let save_mwh = node.device().cpu_dyn_power_w * save_s / 3.6;
+                resp.latency_s = (resp.latency_s - save_s).max(0.0);
+                resp.energy_mwh = (resp.energy_mwh - save_mwh).max(0.0);
+            }
+            let gw_cost = if i == 0 { cost } else { Default::default() };
+            self.now_s += gw_cost.latency_s + resp.latency_s;
+            dets_per_image.push(resp.detections.len());
+            metrics.record_request(
+                &pair,
+                group,
+                estimate,
+                *true_count,
+                gw_cost.latency_s,
+                gw_cost.energy_mwh,
+                resp.latency_s,
+                resp.energy_mwh,
+                if i == 0 { devices::NETWORK_S } else { 0.0 },
+                ImageEval {
+                    dets: resp.detections,
+                    gt: gt.clone(),
+                },
+            );
+        }
+        if let Some(&last) = dets_per_image.last() {
+            self.estimator.observe_response(last);
+        }
+        Ok(BatchOutcome {
+            pair,
+            group,
+            detections_per_image: dets_per_image,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::{scene, SceneSpec};
+    use crate::devices::fleet;
+    use crate::router::{PairProfile, ProfileStore};
+
+    fn engine() -> Engine {
+        Engine::new(&crate::default_artifacts_dir()).unwrap()
+    }
+
+    fn tiny_store() -> ProfileStore {
+        let mut rows = Vec::new();
+        for g in 0..5 {
+            rows.push(PairProfile {
+                pair: PairKey::new("ssd_v1", "jetson_orin_nano"),
+                group: g,
+                map: 50.0,
+                latency_s: 0.005,
+                energy_mwh: 0.002,
+            });
+            rows.push(PairProfile {
+                pair: PairKey::new("yolov8n", "pi5_aihat"),
+                group: g,
+                map: if g >= 3 { 80.0 } else { 52.0 },
+                latency_s: 0.03,
+                energy_mwh: 0.03,
+            });
+        }
+        ProfileStore::new(rows)
+    }
+
+    #[test]
+    fn oracle_greedy_routes_by_group() {
+        let e = engine();
+        let store = tiny_store();
+        let pool = NodePool::deploy(&e, &store.pairs(), &fleet(), 1).unwrap();
+        let mut gw = Gateway::new(
+            &e,
+            router_by_name("Orc").unwrap(),
+            store,
+            pool,
+            5.0,
+            1,
+        );
+        let mut m = RunMetrics::new("Orc");
+        let sparse = scene::render_spec(&SceneSpec {
+            id: 0,
+            seed: 1,
+            n_objects: 1,
+        });
+        let out = gw
+            .handle(&sparse.image, 1, &sparse.gt, &mut m)
+            .unwrap();
+        // group 1: cheap pair wins within delta (52 - 5 = 47 <= 50)
+        assert_eq!(out.pair, PairKey::new("ssd_v1", "jetson_orin_nano"));
+        assert_eq!(out.group, 1);
+
+        let crowded = scene::render_spec(&SceneSpec {
+            id: 1,
+            seed: 2,
+            n_objects: 6,
+        });
+        let out = gw
+            .handle(&crowded.image, crowded.gt.len(), &crowded.gt, &mut m)
+            .unwrap();
+        // group 4: only the big pair is within delta of 80
+        assert_eq!(out.pair, PairKey::new("yolov8n", "pi5_aihat"));
+        assert_eq!(m.requests, 2);
+        assert!(m.total_energy_mwh() > 0.0);
+    }
+
+    #[test]
+    fn ob_estimator_follows_backend_counts() {
+        let e = engine();
+        let store = tiny_store();
+        let pool = NodePool::deploy(&e, &store.pairs(), &fleet(), 1).unwrap();
+        let mut gw = Gateway::new(
+            &e,
+            router_by_name("OB").unwrap(),
+            store,
+            pool,
+            5.0,
+            1,
+        );
+        let mut m = RunMetrics::new("OB");
+        let crowded = scene::render_spec(&SceneSpec {
+            id: 0,
+            seed: 9,
+            n_objects: 7,
+        });
+        // first request: default estimate 0 -> group 0
+        let o1 = gw
+            .handle(&crowded.image, 7, &crowded.gt, &mut m)
+            .unwrap();
+        assert_eq!(o1.estimate, 0);
+        // second request: estimate = detections of the previous response
+        let o2 = gw
+            .handle(&crowded.image, 7, &crowded.gt, &mut m)
+            .unwrap();
+        assert_eq!(o2.estimate, o1.detections);
+    }
+
+    #[test]
+    fn gateway_overhead_only_for_estimating_routers() {
+        let e = engine();
+        let img = vec![0.5f32; 384 * 384];
+        for (name, expect_cost) in
+            [("LE", false), ("ED", true), ("SF", true), ("OB", false)]
+        {
+            let store = tiny_store();
+            let pool =
+                NodePool::deploy(&e, &store.pairs(), &fleet(), 1).unwrap();
+            let mut gw = Gateway::new(
+                &e,
+                router_by_name(name).unwrap(),
+                store,
+                pool,
+                5.0,
+                1,
+            );
+            let mut m = RunMetrics::new(name);
+            gw.handle(&img, 0, &[], &mut m).unwrap();
+            assert_eq!(
+                m.gateway_energy_mwh > 0.0,
+                expect_cost,
+                "router {name}"
+            );
+        }
+    }
+}

@@ -1,0 +1,47 @@
+//! # ECORE — Energy-Conscious Optimized Routing for DL Models at the Edge
+//!
+//! Reproduction of Alqahtani et al. (SENSYS 2025) as a three-layer
+//! Rust + JAX + Pallas system. This crate is Layer 3: the coordinator.
+//! It routes image requests across a pool of simulated heterogeneous edge
+//! devices, each executing a real AOT-compiled detector artifact through
+//! PJRT; Python exists only on the build path (`python/compile/`).
+//!
+//! Module map (see DESIGN.md §4 for the full inventory):
+//!
+//! * [`util`] — substrates: deterministic RNG, JSON, CLI, bench, prop.
+//! * [`models`] — artifact manifest registry (build-path contract).
+//! * [`runtime`] — PJRT engine: HLO-text load, compile cache, inference.
+//! * [`dataset`] — synthetic COCO-like scenes, balanced/sorted set, video.
+//! * [`detection`] — boxes, IoU, heat-map decode, COCO-style mAP.
+//! * [`devices`] — edge-device energy/latency simulator (8 devices).
+//! * [`profiling`] — offline per-(model, device, group) profiler.
+//! * [`router`] — Algorithm 1 greedy router + the six baselines.
+//! * [`estimators`] — object-count estimators: Oracle, ED, SF, OB.
+//! * [`nodes`] — backend edge-node pool bound to the PJRT engine.
+//! * [`gateway`] — the serving loop gluing estimator → router → node.
+//! * [`workload`] — closed-loop (piggy-backed) request driver.
+//! * [`metrics`] — energy/latency/accuracy accounting and reports.
+//! * [`experiments`] — one driver per paper table/figure.
+
+pub mod config;
+pub mod dataset;
+pub mod detection;
+pub mod devices;
+pub mod estimators;
+pub mod experiments;
+pub mod gateway;
+pub mod metrics;
+pub mod models;
+pub mod nodes;
+pub mod profiling;
+pub mod router;
+pub mod runtime;
+pub mod util;
+pub mod workload;
+
+use std::path::PathBuf;
+
+/// Default artifacts directory: `<crate root>/artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

@@ -1,0 +1,135 @@
+//! `ecore` — leader entrypoint.
+//!
+//! Subcommands:
+//!   profile     build the 8x8x5 profiling grid and print Table-1 picks
+//!   experiment  run a paper experiment: fig2|fig4|fig5|table1|fig6|fig7|
+//!               fig8|fig9|overhead|all
+//!   serve       route one dataset through a chosen router and report
+//!   list        list models, devices, routers
+//!
+//! Common options: --delta <mAP pts> --images <n> --per-group <n>
+//! --frames <n> --profile-per-group <n> --seed <n> --routers a,b,c
+//! --config <file.toml>
+
+use anyhow::Result;
+
+use ecore::config::{ExperimentConfig, Table};
+use ecore::experiments::{Harness, ALL_EXPERIMENTS};
+use ecore::gateway::{paper_routers, router_by_name};
+use ecore::util::cli::Args;
+
+const USAGE: &str = "\
+ecore — energy-conscious optimized routing (paper reproduction)
+
+USAGE:
+  ecore profile    [--profile-per-group N] [--seed S]
+  ecore experiment <id|all> [--images N] [--delta D] [--routers a,b,c]
+  ecore serve      [--router ED] [--dataset coco|balanced] [--images N]
+  ecore list
+
+experiments: fig2 fig4 fig5 table1 fig6 fig7 fig8 fig9 overhead
+";
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "help" {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let cmd = argv[0].clone();
+    let args = Args::parse(argv.into_iter().skip(1));
+
+    let mut cfg = match args.get("config") {
+        Some(path) => {
+            ExperimentConfig::from_table(&Table::load(path.as_ref())?)
+        }
+        None => ExperimentConfig::default(),
+    };
+    cfg.override_with(&args);
+
+    match cmd.as_str() {
+        "profile" => {
+            let h = Harness::new(cfg)?;
+            let store = h.profiles()?;
+            println!(
+                "profiled {} rows over {} pairs",
+                store.rows().len(),
+                store.pairs().len()
+            );
+            h.run("table1")
+        }
+        "experiment" => {
+            let id = args
+                .positional
+                .first()
+                .map(|s| s.as_str())
+                .unwrap_or("all");
+            let h = Harness::new(cfg)?;
+            h.run(id)
+        }
+        "serve" => {
+            let router = args.str_or("router", "ED");
+            let spec = router_by_name(&router).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown router '{router}' (known: {})",
+                    paper_routers()
+                        .iter()
+                        .map(|r| r.name)
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })?;
+            let h = Harness::new(cfg)?;
+            let deployed = ecore::experiments::serve::deployed_store(&h)?;
+            let dataset = match args.str_or("dataset", "coco").as_str() {
+                "balanced" => ecore::dataset::balanced::build(
+                    h.cfg.balanced_per_group,
+                    h.cfg.seed,
+                ),
+                "coco" => ecore::dataset::coco::build(
+                    h.cfg.coco_images,
+                    h.cfg.seed,
+                ),
+                other => anyhow::bail!(
+                    "unknown dataset '{other}' (coco|balanced; video is fig8)"
+                ),
+            };
+            let m = ecore::experiments::serve::run_router_on_dataset(
+                &h, spec, &deployed, &dataset,
+            )?;
+            ecore::experiments::serve::print_panel("serve", &[m]);
+            Ok(())
+        }
+        "list" => {
+            let h = Harness::new(cfg)?;
+            println!("experiments: {}", ALL_EXPERIMENTS.join(" "));
+            println!(
+                "routers: {}",
+                paper_routers()
+                    .iter()
+                    .map(|r| r.name)
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            );
+            println!("devices:");
+            for d in ecore::devices::fleet() {
+                println!("  {:<18} accel={:?}", d.name, d.accel);
+            }
+            println!("models:");
+            for m in h.engine.registry().backend_models() {
+                println!(
+                    "  {:<14} res={} k={} flops={:.1}M",
+                    m.name,
+                    m.res,
+                    m.k,
+                    m.flops / 1e6
+                );
+            }
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,221 @@
+//! Metrics accounting: per-run energy / latency / accuracy aggregation
+//! with gateway overhead isolated (paper §4.2's four primary metrics),
+//! plus report rendering helpers shared by the experiment drivers.
+
+use std::collections::BTreeMap;
+
+use crate::detection::map::{map_coco, ImageEval};
+use crate::router::PairKey;
+use crate::util::json::Json;
+
+/// Accumulated measurements for one routing run.
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    pub label: String,
+    /// Dynamic energy spent on backend inference (mWh).
+    pub backend_energy_mwh: f64,
+    /// Dynamic energy spent in the gateway on estimation (mWh).
+    pub gateway_energy_mwh: f64,
+    /// Total virtual wall-clock of the closed loop (s): network +
+    /// estimation + inference, request after request.
+    pub total_latency_s: f64,
+    /// Portion of latency spent in the gateway (s).
+    pub gateway_latency_s: f64,
+    /// Per-image evaluation records for accuracy.
+    pub images: Vec<ImageEval>,
+    /// Requests routed per pair.
+    pub per_pair: BTreeMap<String, usize>,
+    /// Requests per estimated group.
+    pub per_group: BTreeMap<usize, usize>,
+    /// Estimation error statistics (|estimate - truth|).
+    pub est_abs_err_sum: f64,
+    pub requests: usize,
+}
+
+impl RunMetrics {
+    pub fn new(label: &str) -> Self {
+        Self {
+            label: label.to_string(),
+            ..Default::default()
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn record_request(
+        &mut self,
+        pair: &PairKey,
+        group: usize,
+        estimate: usize,
+        truth: usize,
+        gateway_latency_s: f64,
+        gateway_energy_mwh: f64,
+        backend_latency_s: f64,
+        backend_energy_mwh: f64,
+        network_s: f64,
+        eval: ImageEval,
+    ) {
+        self.requests += 1;
+        *self.per_pair.entry(pair.to_string()).or_default() += 1;
+        *self.per_group.entry(group).or_default() += 1;
+        self.gateway_latency_s += gateway_latency_s;
+        self.gateway_energy_mwh += gateway_energy_mwh;
+        self.backend_energy_mwh += backend_energy_mwh;
+        self.total_latency_s +=
+            gateway_latency_s + backend_latency_s + network_s;
+        self.est_abs_err_sum += estimate.abs_diff(truth) as f64;
+        self.images.push(eval);
+    }
+
+    /// Total dynamic energy (paper's headline energy metric).
+    pub fn total_energy_mwh(&self) -> f64 {
+        self.backend_energy_mwh + self.gateway_energy_mwh
+    }
+
+    /// COCO mAP over all recorded images (0–100).
+    pub fn map(&self) -> f64 {
+        map_coco(&self.images, crate::dataset::NUM_CLASSES).map
+    }
+
+    pub fn mean_estimation_error(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.est_abs_err_sum / self.requests as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::str(&self.label)),
+            ("requests", Json::num(self.requests as f64)),
+            ("map", Json::num(self.map())),
+            ("total_energy_mwh", Json::num(self.total_energy_mwh())),
+            (
+                "backend_energy_mwh",
+                Json::num(self.backend_energy_mwh),
+            ),
+            (
+                "gateway_energy_mwh",
+                Json::num(self.gateway_energy_mwh),
+            ),
+            ("total_latency_s", Json::num(self.total_latency_s)),
+            ("gateway_latency_s", Json::num(self.gateway_latency_s)),
+            (
+                "mean_est_abs_err",
+                Json::num(self.mean_estimation_error()),
+            ),
+            (
+                "per_pair",
+                Json::Obj(
+                    self.per_pair
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::num(*v as f64)))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Render a comparison table (one row per run) the way the paper's
+/// figures report: mAP, total latency, dynamic energy, gateway overhead.
+pub fn render_table(runs: &[&RunMetrics]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<6} {:>8} {:>12} {:>12} {:>12} {:>12} {:>8}\n",
+        "router",
+        "mAP",
+        "energy_mWh",
+        "latency_s",
+        "gw_mWh",
+        "gw_s",
+        "est_err"
+    ));
+    for r in runs {
+        out.push_str(&format!(
+            "{:<6} {:>8.2} {:>12.2} {:>12.2} {:>12.3} {:>12.2} {:>8.2}\n",
+            r.label,
+            r.map(),
+            r.total_energy_mwh(),
+            r.total_latency_s,
+            r.gateway_energy_mwh,
+            r.gateway_latency_s,
+            r.mean_estimation_error(),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::detection::{BBox, Detection};
+    use crate::dataset::GtBox;
+
+    fn eval_perfect() -> ImageEval {
+        ImageEval {
+            dets: vec![Detection {
+                bbox: BBox::new(10.0, 10.0, 30.0, 30.0),
+                score: 0.9,
+                cls: 0,
+            }],
+            gt: vec![GtBox {
+                x0: 10.0,
+                y0: 10.0,
+                x1: 30.0,
+                y1: 30.0,
+                cls: 0,
+            }],
+        }
+    }
+
+    #[test]
+    fn accumulates_and_reports() {
+        let mut m = RunMetrics::new("ED");
+        let pair = PairKey::new("ssd_v1", "pi5");
+        m.record_request(
+            &pair,
+            1,
+            1,
+            1,
+            0.002,
+            0.001,
+            0.050,
+            0.04,
+            0.0035,
+            eval_perfect(),
+        );
+        m.record_request(
+            &pair,
+            2,
+            3,
+            2,
+            0.002,
+            0.001,
+            0.060,
+            0.05,
+            0.0035,
+            eval_perfect(),
+        );
+        assert_eq!(m.requests, 2);
+        assert!((m.total_energy_mwh() - 0.092).abs() < 1e-12);
+        assert!(
+            (m.total_latency_s - (0.002 * 2.0 + 0.11 + 0.007)).abs() < 1e-12
+        );
+        assert_eq!(m.per_pair["ssd_v1@pi5"], 2);
+        assert!((m.mean_estimation_error() - 0.5).abs() < 1e-12);
+        assert!((m.map() - 100.0).abs() < 1e-9);
+        let j = m.to_json();
+        assert_eq!(j.req("requests").unwrap().as_usize(), Some(2));
+    }
+
+    #[test]
+    fn table_renders_all_runs() {
+        let a = RunMetrics::new("LE");
+        let b = RunMetrics::new("HMG");
+        let t = render_table(&[&a, &b]);
+        assert!(t.contains("LE"));
+        assert!(t.contains("HMG"));
+        assert_eq!(t.lines().count(), 3);
+    }
+}

@@ -1,0 +1,263 @@
+//! Model registry: typed view of the AOT artifact manifest.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.json` describing
+//! every compiled HLO artifact (shapes, decode parameters, FLOP counts).
+//! This module parses it into a `ModelRegistry`, the single source of
+//! truth the runtime, profiler, router, and device simulator all share.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// The eight routable backend models, in capacity order. `yolov8x` exists
+/// in the manifest as the video pseudo-ground-truth generator but is not a
+/// routing target (paper §4.1.1).
+pub const BACKEND_MODELS: [&str; 8] = [
+    "ssd_v1",
+    "ssd_lite",
+    "effdet_lite0",
+    "effdet_lite1",
+    "effdet_lite2",
+    "yolov8n",
+    "yolov8s",
+    "yolov8m",
+];
+
+/// Pseudo-ground-truth model for the video dataset.
+pub const GT_MODEL: &str = "yolov8x";
+/// The SSD-based front-end estimator model (runs on the gateway).
+pub const FRONTEND_MODEL: &str = "ssd_front";
+/// The Canny edge-map artifact (runs on the gateway).
+pub const CANNY_MODEL: &str = "canny";
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum ModelKind {
+    Detector,
+    GatewayDetector,
+    Canny,
+}
+
+/// Metadata for one compiled artifact.
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub name: String,
+    pub kind: ModelKind,
+    pub file: PathBuf,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+    pub flops: f64,
+    /// Detector decode parameters (empty for canny).
+    pub res: usize,
+    pub factor: usize,
+    pub k: usize,
+    pub sigmas: Vec<f64>,
+    pub band_radii_native: Vec<f64>,
+    pub threshold: f64,
+    /// Canny-specific double thresholds.
+    pub canny_lo: f64,
+    pub canny_hi: f64,
+}
+
+impl ModelMeta {
+    pub fn input_len(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    pub fn output_len(&self) -> usize {
+        self.output_shape.iter().product()
+    }
+}
+
+/// Registry of every artifact in a manifest.
+#[derive(Clone, Debug)]
+pub struct ModelRegistry {
+    pub native_res: usize,
+    pub version: usize,
+    models: BTreeMap<String, ModelMeta>,
+    pub artifacts_dir: PathBuf,
+}
+
+impl ModelRegistry {
+    /// Load `<artifacts_dir>/manifest.json`.
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_json(&text, artifacts_dir)
+    }
+
+    pub fn from_json(text: &str, artifacts_dir: &Path) -> Result<Self> {
+        let root = json::parse(text).context("parsing manifest.json")?;
+        let version = root.req("version")?.as_usize().context("version")?;
+        let native_res =
+            root.req("native_res")?.as_usize().context("native_res")?;
+        let mut models = BTreeMap::new();
+        let model_objs = root
+            .req("models")?
+            .as_obj()
+            .context("models must be an object")?;
+        for (name, entry) in model_objs {
+            models.insert(
+                name.clone(),
+                parse_model(name, entry, artifacts_dir)?,
+            );
+        }
+        let reg = Self {
+            native_res,
+            version,
+            models,
+            artifacts_dir: artifacts_dir.to_path_buf(),
+        };
+        reg.validate()?;
+        Ok(reg)
+    }
+
+    fn validate(&self) -> Result<()> {
+        for name in BACKEND_MODELS {
+            if !self.models.contains_key(name) {
+                bail!("manifest missing backend model '{name}'");
+            }
+        }
+        for name in [GT_MODEL, FRONTEND_MODEL, CANNY_MODEL] {
+            if !self.models.contains_key(name) {
+                bail!("manifest missing model '{name}'");
+            }
+        }
+        for m in self.models.values() {
+            if m.kind != ModelKind::Canny {
+                if m.band_radii_native.len() != m.k {
+                    bail!("{}: band radii/k mismatch", m.name);
+                }
+                if m.sigmas.len() != m.k + 1 {
+                    bail!("{}: sigma ladder length mismatch", m.name);
+                }
+                if m.output_shape != vec![2, m.k, m.res, m.res] {
+                    bail!("{}: unexpected output shape", m.name);
+                }
+            }
+            if m.input_shape != vec![self.native_res, self.native_res] {
+                bail!("{}: unexpected input shape", m.name);
+            }
+            if m.flops <= 0.0 {
+                bail!("{}: non-positive flops", m.name);
+            }
+        }
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ModelMeta> {
+        self.models
+            .get(name)
+            .with_context(|| format!("unknown model '{name}'"))
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.models.keys().map(|s| s.as_str())
+    }
+
+    pub fn backend_models(&self) -> Vec<&ModelMeta> {
+        BACKEND_MODELS
+            .iter()
+            .map(|n| self.models.get(*n).expect("validated"))
+            .collect()
+    }
+}
+
+fn parse_model(name: &str, entry: &Json, dir: &Path) -> Result<ModelMeta> {
+    let kind = match entry.req("kind")?.as_str() {
+        Some("detector") => ModelKind::Detector,
+        Some("gateway_detector") => ModelKind::GatewayDetector,
+        Some("canny") => ModelKind::Canny,
+        other => bail!("{name}: unknown kind {other:?}"),
+    };
+    let file = dir.join(
+        entry
+            .req("file")?
+            .as_str()
+            .context("file must be a string")?,
+    );
+    let shape_of = |j: &Json, key: &str| -> Result<Vec<usize>> {
+        Ok(j.req(key)?
+            .req("shape")?
+            .f64s()
+            .context("shape")?
+            .into_iter()
+            .map(|x| x as usize)
+            .collect())
+    };
+    let params = entry.req("params")?;
+    let getf = |key: &str| -> f64 {
+        params.get(key).and_then(|v| v.as_f64()).unwrap_or(0.0)
+    };
+    Ok(ModelMeta {
+        name: name.to_string(),
+        kind,
+        file,
+        input_shape: shape_of(entry, "input")?,
+        output_shape: shape_of(entry, "output")?,
+        flops: entry.req("flops")?.as_f64().context("flops")?,
+        res: getf("res") as usize,
+        factor: getf("factor") as usize,
+        k: getf("k") as usize,
+        sigmas: params.get("sigmas").and_then(|v| v.f64s()).unwrap_or_default(),
+        band_radii_native: params
+            .get("band_radii_native")
+            .and_then(|v| v.f64s())
+            .unwrap_or_default(),
+        threshold: getf("threshold"),
+        canny_lo: getf("lo"),
+        canny_hi: getf("hi"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let reg = ModelRegistry::load(&artifacts_dir()).unwrap();
+        assert_eq!(reg.native_res, 384);
+        assert_eq!(reg.backend_models().len(), 8);
+        let ssd = reg.get("ssd_v1").unwrap();
+        assert_eq!(ssd.res, 96);
+        assert_eq!(ssd.factor, 4);
+        assert_eq!(ssd.k, 3);
+        assert!(ssd.threshold > 0.0);
+        let canny = reg.get(CANNY_MODEL).unwrap();
+        assert_eq!(canny.kind, ModelKind::Canny);
+        assert!(canny.canny_lo < canny.canny_hi);
+    }
+
+    #[test]
+    fn backend_models_flops_monotone() {
+        let reg = ModelRegistry::load(&artifacts_dir()).unwrap();
+        let flops: Vec<f64> =
+            reg.backend_models().iter().map(|m| m.flops).collect();
+        for w in flops.windows(2) {
+            assert!(w[1] > w[0], "flops not monotone: {flops:?}");
+        }
+    }
+
+    #[test]
+    fn unknown_model_is_error() {
+        let reg = ModelRegistry::load(&artifacts_dir()).unwrap();
+        assert!(reg.get("resnet50").is_err());
+    }
+
+    #[test]
+    fn rejects_incomplete_manifest() {
+        let r = ModelRegistry::from_json(
+            r#"{"version": 2, "native_res": 384, "models": {}}"#,
+            Path::new("/tmp"),
+        );
+        assert!(r.is_err());
+    }
+}

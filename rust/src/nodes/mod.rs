@@ -1,0 +1,295 @@
+//! Backend edge-node pool.
+//!
+//! Each [`EdgeNode`] binds one detector artifact to one simulated device:
+//! a request executes *real* PJRT inference (accuracy is measured, never
+//! tabulated) while latency/energy come from the device model, with a
+//! small deterministic per-request jitter for realism. The pool is the
+//! deployed testbed (Table 1 pairs).
+
+use anyhow::Result;
+
+use crate::detection::{decode_heatmap, Detection};
+use crate::devices::drift::{DriftConfig, DriftModel};
+use crate::devices::{DeviceSpec, ExecProfile};
+use crate::models::ModelMeta;
+use crate::router::PairKey;
+use crate::runtime::Engine;
+use crate::util::rng::Rng;
+
+/// Multiplicative latency jitter amplitude (+/-3%).
+const JITTER: f64 = 0.03;
+
+/// Result of processing one request on a node.
+#[derive(Clone, Debug)]
+pub struct NodeResponse {
+    pub detections: Vec<Detection>,
+    /// Simulated service time on the device (s).
+    pub latency_s: f64,
+    /// Simulated dynamic energy (mWh).
+    pub energy_mwh: f64,
+}
+
+/// One deployed (model, device) endpoint.
+pub struct EdgeNode {
+    pub pair: PairKey,
+    meta: ModelMeta,
+    device: DeviceSpec,
+    base: ExecProfile,
+    rng: Rng,
+    pub requests_served: usize,
+    /// Health flag: failed nodes reject requests and the gateway falls
+    /// back to the next-best feasible pair (failure injection in tests).
+    pub healthy: bool,
+    /// Optional runtime drift (paper Future Work #1); None = static.
+    drift: Option<DriftModel>,
+    /// Virtual timestamp of the last service completion (for idle gaps).
+    last_busy_end_s: f64,
+    /// Reusable output buffer (avoids one large copy per request).
+    heat_buf: Vec<f32>,
+}
+
+impl EdgeNode {
+    pub fn new(
+        engine: &Engine,
+        pair: PairKey,
+        device: DeviceSpec,
+        seed: u64,
+    ) -> Result<Self> {
+        let meta = engine.meta(&pair.model)?;
+        let base = device.profile(&meta);
+        Ok(Self {
+            pair,
+            meta,
+            device,
+            base,
+            rng: Rng::new(seed),
+            requests_served: 0,
+            healthy: true,
+            drift: None,
+            last_busy_end_s: 0.0,
+            heat_buf: Vec::new(),
+        })
+    }
+
+    /// Enable runtime drift (thermal throttling, battery droop,
+    /// background load) on this node.
+    pub fn enable_drift(&mut self, cfg: DriftConfig, seed: u64) {
+        self.drift = Some(DriftModel::new(self.device.clone(), cfg, seed));
+    }
+
+    /// Current drift temperature (0 for static nodes) — metrics hook.
+    pub fn temperature(&self) -> f64 {
+        self.drift.as_ref().map(|d| d.temperature()).unwrap_or(0.0)
+    }
+
+    pub fn device(&self) -> &DeviceSpec {
+        &self.device
+    }
+
+    /// Process one image: real inference + simulated cost.
+    ///
+    /// `now_s` is the gateway's virtual clock, used to account idle
+    /// cooling in the drift model (pass 0.0 when drift is off).
+    pub fn process_at(
+        &mut self,
+        engine: &Engine,
+        image: &[f32],
+        now_s: f64,
+    ) -> Result<NodeResponse> {
+        anyhow::ensure!(self.healthy, "node {} is down", self.pair);
+        let mut heat = std::mem::take(&mut self.heat_buf);
+        engine.infer_into(&self.pair.model, image, &mut heat)?;
+        let detections =
+            decode_heatmap(&heat, &self.meta, self.base.threshold_scale);
+        self.heat_buf = heat;
+        let jitter = 1.0 + JITTER * (2.0 * self.rng.f64() - 1.0);
+        let mut latency_s = self.base.latency_s * jitter;
+        let mut energy_mwh = self.base.energy_mwh * jitter;
+        if let Some(d) = self.drift.as_mut() {
+            let idle = (now_s - self.last_busy_end_s).max(0.0);
+            let (l, e) = d.step(latency_s, energy_mwh, idle);
+            latency_s = l;
+            energy_mwh = e;
+            self.last_busy_end_s = now_s + latency_s;
+        }
+        self.requests_served += 1;
+        Ok(NodeResponse {
+            detections,
+            latency_s,
+            energy_mwh,
+        })
+    }
+
+    /// Process with no drift-clock context.
+    pub fn process(&mut self, engine: &Engine, image: &[f32]) -> Result<NodeResponse> {
+        self.process_at(engine, image, 0.0)
+    }
+}
+
+/// The deployed pool, indexed by pair.
+pub struct NodePool {
+    nodes: Vec<EdgeNode>,
+}
+
+impl NodePool {
+    /// Deploy one node per pair; preloads every artifact.
+    pub fn deploy(
+        engine: &Engine,
+        pairs: &[PairKey],
+        fleet: &[DeviceSpec],
+        seed: u64,
+    ) -> Result<Self> {
+        let mut nodes = Vec::with_capacity(pairs.len());
+        for (i, pair) in pairs.iter().enumerate() {
+            let device = crate::devices::find(fleet, &pair.device)
+                .ok_or_else(|| {
+                    anyhow::anyhow!("unknown device '{}'", pair.device)
+                })?;
+            nodes.push(EdgeNode::new(
+                engine,
+                pair.clone(),
+                device,
+                seed.wrapping_add(i as u64),
+            )?);
+        }
+        let names: Vec<&str> =
+            pairs.iter().map(|p| p.model.as_str()).collect();
+        engine.preload(&names)?;
+        Ok(Self { nodes })
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn get(&mut self, pair: &PairKey) -> Option<&mut EdgeNode> {
+        self.nodes.iter_mut().find(|n| &n.pair == pair)
+    }
+
+    pub fn nodes(&self) -> &[EdgeNode] {
+        &self.nodes
+    }
+
+    pub fn nodes_mut(&mut self) -> &mut [EdgeNode] {
+        &mut self.nodes
+    }
+
+    /// Enable drift on every node (distinct seeds).
+    pub fn enable_drift(&mut self, cfg: &DriftConfig, seed: u64) {
+        for (i, n) in self.nodes.iter_mut().enumerate() {
+            n.enable_drift(cfg.clone(), seed.wrapping_add(i as u64));
+        }
+    }
+
+    /// Mark one pair unhealthy (failure injection). Returns true if the
+    /// pair existed.
+    pub fn set_health(&mut self, pair: &PairKey, healthy: bool) -> bool {
+        if let Some(n) = self.nodes.iter_mut().find(|n| &n.pair == pair) {
+            n.healthy = healthy;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn is_healthy(&self, pair: &PairKey) -> bool {
+        self.nodes
+            .iter()
+            .find(|n| &n.pair == pair)
+            .map(|n| n.healthy)
+            .unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::{scene, SceneSpec};
+    use crate::devices;
+
+    fn engine() -> Engine {
+        Engine::new(&crate::default_artifacts_dir()).unwrap()
+    }
+
+    #[test]
+    fn node_processes_and_costs_match_device_model() {
+        let e = engine();
+        let fleet = devices::fleet();
+        let pair = PairKey::new("ssd_v1", "pi5");
+        let mut node = EdgeNode::new(
+            &e,
+            pair,
+            devices::find(&fleet, "pi5").unwrap(),
+            1,
+        )
+        .unwrap();
+        let s = scene::render_spec(&SceneSpec {
+            id: 0,
+            seed: 3,
+            n_objects: 1,
+        });
+        let r = node.process(&e, &s.image).unwrap();
+        let base = node.base;
+        assert!((r.latency_s - base.latency_s).abs()
+            <= JITTER * base.latency_s + 1e-12);
+        assert!((r.energy_mwh - base.energy_mwh).abs()
+            <= JITTER * base.energy_mwh + 1e-12);
+        assert_eq!(node.requests_served, 1);
+    }
+
+    #[test]
+    fn pool_deploys_and_routes_by_pair() {
+        let e = engine();
+        let fleet = devices::fleet();
+        let pairs = vec![
+            PairKey::new("ssd_v1", "jetson_orin_nano"),
+            PairKey::new("yolov8n", "pi5_aihat"),
+        ];
+        let mut pool = NodePool::deploy(&e, &pairs, &fleet, 5).unwrap();
+        assert_eq!(pool.len(), 2);
+        assert!(pool.get(&pairs[1]).is_some());
+        assert!(pool.get(&PairKey::new("ssd_v1", "pi3")).is_none());
+        let img = vec![0.5f32; 384 * 384];
+        let r = pool
+            .get(&pairs[0])
+            .unwrap()
+            .process(&e, &img)
+            .unwrap();
+        assert!(r.detections.is_empty()); // constant image
+        assert!(r.latency_s > 0.0);
+    }
+
+    #[test]
+    fn quantized_node_detects_fewer_weak_objects_than_fp32() {
+        // same model on pi5 (fp32) vs pi5_tpu (int8 threshold scale):
+        // across a crowded scene the quantized path never finds MORE
+        let e = engine();
+        let fleet = devices::fleet();
+        let mut cpu = EdgeNode::new(
+            &e,
+            PairKey::new("ssd_lite", "pi5"),
+            devices::find(&fleet, "pi5").unwrap(),
+            1,
+        )
+        .unwrap();
+        let mut tpu = EdgeNode::new(
+            &e,
+            PairKey::new("ssd_lite", "pi5_tpu"),
+            devices::find(&fleet, "pi5_tpu").unwrap(),
+            1,
+        )
+        .unwrap();
+        let s = scene::render_spec(&SceneSpec {
+            id: 0,
+            seed: 42,
+            n_objects: 6,
+        });
+        let n_cpu = cpu.process(&e, &s.image).unwrap().detections.len();
+        let n_tpu = tpu.process(&e, &s.image).unwrap().detections.len();
+        assert!(n_tpu <= n_cpu, "tpu {n_tpu} > cpu {n_cpu}");
+    }
+}

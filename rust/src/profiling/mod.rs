@@ -1,0 +1,234 @@
+//! Offline profiler (paper §3.1: "each pair is profiled in advance").
+//!
+//! For every backend model, the profiler runs *real* inference over a
+//! per-group profiling set and decodes the heat maps once per distinct
+//! framework threshold-scale, then joins the measured per-group accuracy
+//! with the device simulator's latency/energy to produce the full
+//! 8 models x 8 devices x 5 groups [`ProfileStore`] (the Fig. 5 grid).
+//!
+//! Key economy: accuracy depends on the device only through its framework
+//! threshold scale, so inference runs once per (model, image) and decode
+//! runs once per (model, scale) — 8xN executions instead of 64xN.
+
+pub mod testbed;
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::dataset::{Dataset, SceneSpec};
+use crate::detection::map::{empty_image_score, map_coco, ImageEval};
+use crate::detection::decode_heatmap;
+use crate::devices::DeviceSpec;
+use crate::models::BACKEND_MODELS;
+use crate::router::{GroupRules, PairKey, PairProfile, ProfileStore};
+use crate::runtime::Engine;
+use crate::util::rng::Rng;
+
+/// Profiling configuration.
+#[derive(Clone, Debug)]
+pub struct ProfilerConfig {
+    /// Images per object-count group.
+    pub images_per_group: usize,
+    pub seed: u64,
+    /// Counts sampled for the '4 or more' group.
+    pub crowd_counts: Vec<usize>,
+}
+
+impl Default for ProfilerConfig {
+    fn default() -> Self {
+        Self {
+            images_per_group: 40,
+            seed: 0xEC02E_u64,
+            crowd_counts: vec![4, 5, 6, 7, 8, 10],
+        }
+    }
+}
+
+/// Build the profiling dataset: `images_per_group` scenes per group.
+pub fn profiling_dataset(
+    rules: &GroupRules,
+    cfg: &ProfilerConfig,
+) -> Vec<(usize, Dataset)> {
+    let base = Rng::new(cfg.seed);
+    let mut out = Vec::new();
+    for label in rules.labels() {
+        let mut specs = Vec::with_capacity(cfg.images_per_group);
+        for j in 0..cfg.images_per_group {
+            let mut r = base.derive((label * 7_000_003 + j) as u64);
+            let n_objects = if label == 4 {
+                cfg.crowd_counts
+                    [r.below(cfg.crowd_counts.len() as u64) as usize]
+            } else {
+                rules.representative(label).unwrap_or(label)
+            };
+            specs.push(SceneSpec {
+                id: label * 100_000 + j,
+                seed: r.next_u64(),
+                n_objects,
+            });
+        }
+        out.push((
+            label,
+            Dataset {
+                name: format!("profiling_g{label}"),
+                specs,
+            },
+        ));
+    }
+    out
+}
+
+/// Run the full profiling pass over a fleet.
+pub fn profile_fleet(
+    engine: &Engine,
+    fleet: &[DeviceSpec],
+    rules: &GroupRules,
+    cfg: &ProfilerConfig,
+) -> Result<ProfileStore> {
+    let groups = profiling_dataset(rules, cfg);
+
+    // distinct threshold scales across the fleet (device -> scale dedup)
+    let mut scales: Vec<f64> = Vec::new();
+    for d in fleet {
+        for m in BACKEND_MODELS {
+            let meta = engine.meta(m)?;
+            let s = d.profile(&meta).threshold_scale;
+            if !scales.iter().any(|&x| (x - s).abs() < 1e-12) {
+                scales.push(s);
+            }
+        }
+    }
+    scales.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+    // measured accuracy: (model, scale_idx, group) -> mAP
+    let mut acc: BTreeMap<(String, usize, usize), f64> = BTreeMap::new();
+    for model in BACKEND_MODELS {
+        let meta = engine.meta(model)?;
+        for (label, ds) in &groups {
+            // evals[scale_idx] accumulates per-image results
+            let mut evals: Vec<Vec<ImageEval>> =
+                vec![Vec::with_capacity(ds.len()); scales.len()];
+            for scene in ds.iter_scenes() {
+                let heat = engine.infer(model, &scene.image)?;
+                for (si, &scale) in scales.iter().enumerate() {
+                    evals[si].push(ImageEval {
+                        dets: decode_heatmap(&heat, &meta, scale),
+                        gt: scene.gt.clone(),
+                    });
+                }
+            }
+            for (si, ev) in evals.iter().enumerate() {
+                // group '0' has no ground truth: use the paper-style
+                // clean-image score; otherwise COCO mAP.
+                let map = if *label == 0 {
+                    empty_image_score(ev)
+                } else {
+                    map_coco(ev, crate::dataset::NUM_CLASSES).map
+                };
+                acc.insert((model.to_string(), si, *label), map);
+            }
+        }
+    }
+
+    // join with the device model
+    let mut rows = Vec::new();
+    for d in fleet {
+        for model in BACKEND_MODELS {
+            let meta = engine.meta(model)?;
+            let p = d.profile(&meta);
+            let si = scales
+                .iter()
+                .position(|&x| (x - p.threshold_scale).abs() < 1e-12)
+                .expect("scale collected above");
+            for (label, _) in &groups {
+                let map = acc[&(model.to_string(), si, *label)];
+                rows.push(PairProfile {
+                    pair: PairKey::new(model, d.name),
+                    group: *label,
+                    map,
+                    latency_s: p.latency_s,
+                    energy_mwh: p.energy_mwh,
+                });
+            }
+        }
+    }
+    Ok(ProfileStore::new(rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devices;
+
+    #[test]
+    fn profiling_dataset_group_counts_match_rules() {
+        let rules = GroupRules::paper_default();
+        let cfg = ProfilerConfig {
+            images_per_group: 5,
+            ..Default::default()
+        };
+        let groups = profiling_dataset(&rules, &cfg);
+        assert_eq!(groups.len(), 5);
+        for (label, ds) in &groups {
+            assert_eq!(ds.len(), 5);
+            for spec in &ds.specs {
+                assert_eq!(rules.group_of(spec.n_objects), *label);
+            }
+        }
+    }
+
+    #[test]
+    fn profile_small_fleet_structure_and_phenomena() {
+        let engine = Engine::new(&crate::default_artifacts_dir()).unwrap();
+        let fleet = devices::fleet();
+        let rules = GroupRules::paper_default();
+        let cfg = ProfilerConfig {
+            images_per_group: 6,
+            seed: 99,
+            crowd_counts: vec![5, 7],
+        };
+        let store = profile_fleet(&engine, &fleet, &rules, &cfg).unwrap();
+        // full grid: 8 models x 8 devices x 5 groups
+        assert_eq!(store.rows().len(), 8 * 8 * 5);
+
+        // paper Fig. 2 phenomenon in the measured profiles: on the
+        // crowded group, the big model beats the small one by a wide
+        // margin; on the single-object group they are comparable.
+        let big = store
+            .lookup(&PairKey::new("yolov8m", "pi5"), 4)
+            .unwrap()
+            .map;
+        let small = store
+            .lookup(&PairKey::new("ssd_v1", "pi5"), 4)
+            .unwrap()
+            .map;
+        assert!(
+            big > small + 15.0,
+            "crowded: yolov8m {big} vs ssd_v1 {small}"
+        );
+        let big1 = store
+            .lookup(&PairKey::new("yolov8m", "pi5"), 1)
+            .unwrap()
+            .map;
+        let small1 = store
+            .lookup(&PairKey::new("ssd_v1", "pi5"), 1)
+            .unwrap()
+            .map;
+        assert!(
+            (big1 - small1).abs() < 25.0,
+            "sparse gap too large: {big1} vs {small1}"
+        );
+
+        // energy identical across groups for a fixed pair (paper §4.1.2)
+        let e0 = store
+            .lookup(&PairKey::new("yolov8n", "pi4"), 0)
+            .unwrap()
+            .energy_mwh;
+        let e4 = store
+            .lookup(&PairKey::new("yolov8n", "pi4"), 4)
+            .unwrap()
+            .energy_mwh;
+        assert_eq!(e0, e4);
+    }
+}

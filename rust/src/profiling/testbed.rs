@@ -1,0 +1,109 @@
+//! Testbed selection (paper §4.1.2, Table 1): from the full 64-pair
+//! profiling grid, keep only pairs that are champions in at least one
+//! dimension — global energy, global latency, and per-group mAP — i.e.
+//! the pairs on or near the Pareto front that the paper deploys.
+
+use crate::router::{PairKey, ProfileStore};
+
+/// One selected testbed row (mirrors the paper's Table 1).
+#[derive(Clone, Debug)]
+pub struct TestbedRow {
+    pub metric: String,
+    pub pair: PairKey,
+    pub value: f64,
+}
+
+/// Pick the Table 1 pairs from a full profiling grid.
+pub fn select(store: &ProfileStore) -> Vec<TestbedRow> {
+    let mut rows = Vec::new();
+    let pairs = store.pairs();
+
+    let mean = |pair: &PairKey, f: &dyn Fn(&crate::router::PairProfile) -> f64| {
+        let vals: Vec<f64> = store
+            .rows()
+            .iter()
+            .filter(|r| &r.pair == pair)
+            .map(|r| f(r))
+            .collect();
+        vals.iter().sum::<f64>() / vals.len().max(1) as f64
+    };
+
+    // global energy champion
+    if let Some(p) = pairs.iter().min_by(|a, b| {
+        mean(a, &|r| r.energy_mwh)
+            .partial_cmp(&mean(b, &|r| r.energy_mwh))
+            .unwrap()
+    }) {
+        rows.push(TestbedRow {
+            metric: "energy".into(),
+            pair: p.clone(),
+            value: mean(p, &|r| r.energy_mwh),
+        });
+    }
+    // global latency champion
+    if let Some(p) = pairs.iter().min_by(|a, b| {
+        mean(a, &|r| r.latency_s)
+            .partial_cmp(&mean(b, &|r| r.latency_s))
+            .unwrap()
+    }) {
+        rows.push(TestbedRow {
+            metric: "latency".into(),
+            pair: p.clone(),
+            value: mean(p, &|r| r.latency_s),
+        });
+    }
+    // per-group mAP champions (ties broken by lower energy)
+    for g in store.groups() {
+        let best = store.group_rows(g).into_iter().max_by(|a, b| {
+            (a.map, -a.energy_mwh)
+                .partial_cmp(&(b.map, -b.energy_mwh))
+                .unwrap()
+        });
+        if let Some(r) = best {
+            rows.push(TestbedRow {
+                metric: format!("map_g{g}"),
+                pair: r.pair.clone(),
+                value: r.map,
+            });
+        }
+    }
+    rows
+}
+
+/// Unique pairs from a testbed selection — the deployed node pool.
+pub fn pool(rows: &[TestbedRow]) -> Vec<PairKey> {
+    let mut pairs: Vec<PairKey> =
+        rows.iter().map(|r| r.pair.clone()).collect();
+    pairs.sort();
+    pairs.dedup();
+    pairs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::router::store::test_store;
+
+    #[test]
+    fn selects_champions_per_metric() {
+        let s = test_store();
+        let rows = select(&s);
+        // energy + latency + 2 groups
+        assert_eq!(rows.len(), 4);
+        let energy = rows.iter().find(|r| r.metric == "energy").unwrap();
+        assert_eq!(energy.pair, PairKey::new("small", "dev_a"));
+        let g1 = rows.iter().find(|r| r.metric == "map_g1").unwrap();
+        assert_eq!(g1.pair, PairKey::new("big", "dev_a"));
+    }
+
+    #[test]
+    fn pool_is_unique_and_sorted() {
+        let s = test_store();
+        let p = pool(&select(&s));
+        let mut q = p.clone();
+        q.sort();
+        q.dedup();
+        assert_eq!(p, q);
+        assert!(p.len() >= 2);
+    }
+}

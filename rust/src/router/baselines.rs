@@ -1,0 +1,212 @@
+//! Routing policies: the greedy router plus the paper's six baselines
+//! (§4.2). A policy maps (estimated group) → (model, device) pair over a
+//! deployed node pool; estimator choice is orthogonal and lives in
+//! `estimators`.
+
+use super::greedy::GreedyRouter;
+use super::store::{PairKey, ProfileStore};
+use crate::util::rng::Rng;
+
+/// All routing strategies evaluated in the paper.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// Algorithm 1 over the estimated group (used by Orc/ED/SF/OB).
+    Greedy,
+    /// Round-robin over the deployed pairs.
+    RoundRobin,
+    /// Uniform random pair.
+    Random,
+    /// Always the globally lowest-energy pair.
+    LowestEnergy,
+    /// Always the lowest-latency pair.
+    LowestInference,
+    /// Highest overall mAP, group-agnostic.
+    HighestMap,
+    /// Highest mAP within the estimated group.
+    HighestMapPerGroup,
+}
+
+impl PolicyKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            PolicyKind::Greedy => "greedy",
+            PolicyKind::RoundRobin => "RR",
+            PolicyKind::Random => "Rnd",
+            PolicyKind::LowestEnergy => "LE",
+            PolicyKind::LowestInference => "LI",
+            PolicyKind::HighestMap => "HM",
+            PolicyKind::HighestMapPerGroup => "HMG",
+        }
+    }
+}
+
+/// A stateful policy instance.
+///
+/// Every strategy derives its choices from the store passed to
+/// `route()`, so a restricted store (e.g. with failed nodes removed by
+/// the gateway's fallback path) is honoured by all of them. Routing
+/// stays O(deployed pairs) per request — nanoseconds next to estimation
+/// and inference (see bench_routing).
+pub struct Policy {
+    kind: PolicyKind,
+    greedy: GreedyRouter,
+    rr_next: usize,
+    rng: Rng,
+}
+
+impl Policy {
+    pub fn new(
+        kind: PolicyKind,
+        _store: &ProfileStore,
+        delta_map: f64,
+        seed: u64,
+    ) -> Self {
+        Self {
+            kind,
+            greedy: GreedyRouter::new(delta_map),
+            rr_next: 0,
+            rng: Rng::new(seed ^ 0x9e37_79b9),
+        }
+    }
+
+    pub fn kind(&self) -> PolicyKind {
+        self.kind
+    }
+
+    /// Route one request. `group` is the estimated object-count group
+    /// (ignored by the group-agnostic baselines).
+    pub fn route(&mut self, store: &ProfileStore, group: usize) -> Option<PairKey> {
+        let pairs = store.pairs();
+        if pairs.is_empty() {
+            return None;
+        }
+        match self.kind {
+            PolicyKind::Greedy => self.greedy.route(store, group),
+            PolicyKind::RoundRobin => {
+                let p = pairs[self.rr_next % pairs.len()].clone();
+                self.rr_next += 1;
+                Some(p)
+            }
+            PolicyKind::Random => {
+                let i = self.rng.below(pairs.len() as u64) as usize;
+                Some(pairs[i].clone())
+            }
+            PolicyKind::LowestEnergy => min_by_metric(&pairs, |p| {
+                mean_metric(store, p, |r| r.energy_mwh)
+            }),
+            PolicyKind::LowestInference => min_by_metric(&pairs, |p| {
+                mean_metric(store, p, |r| r.latency_s)
+            }),
+            PolicyKind::HighestMap => {
+                min_by_metric(&pairs, |p| -store.overall_map(p))
+            }
+            PolicyKind::HighestMapPerGroup => store
+                .group_rows(group)
+                .into_iter()
+                .max_by(|a, b| a.map.partial_cmp(&b.map).unwrap())
+                .map(|r| r.pair.clone()),
+        }
+    }
+}
+
+fn mean_metric(
+    store: &ProfileStore,
+    pair: &PairKey,
+    f: impl Fn(&super::store::PairProfile) -> f64,
+) -> f64 {
+    let vals: Vec<f64> = store
+        .rows()
+        .iter()
+        .filter(|r| &r.pair == pair)
+        .map(f)
+        .collect();
+    if vals.is_empty() {
+        f64::INFINITY
+    } else {
+        vals.iter().sum::<f64>() / vals.len() as f64
+    }
+}
+
+fn min_by_metric(
+    pairs: &[PairKey],
+    metric: impl Fn(&PairKey) -> f64,
+) -> Option<PairKey> {
+    pairs
+        .iter()
+        .min_by(|a, b| metric(a).partial_cmp(&metric(b)).unwrap())
+        .cloned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::router::store::test_store;
+
+    #[test]
+    fn round_robin_cycles_all_pairs() {
+        let s = test_store();
+        let mut p = Policy::new(PolicyKind::RoundRobin, &s, 5.0, 1);
+        let n = s.pairs().len();
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..n {
+            seen.insert(p.route(&s, 0).unwrap());
+        }
+        assert_eq!(seen.len(), n);
+        // cycle repeats
+        assert_eq!(p.route(&s, 0), Some(s.pairs()[0].clone()));
+    }
+
+    #[test]
+    fn random_hits_every_pair_eventually() {
+        let s = test_store();
+        let mut p = Policy::new(PolicyKind::Random, &s, 5.0, 7);
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..200 {
+            seen.insert(p.route(&s, 0).unwrap());
+        }
+        assert_eq!(seen.len(), s.pairs().len());
+    }
+
+    #[test]
+    fn lowest_energy_is_static_minimum() {
+        let s = test_store();
+        let mut p = Policy::new(PolicyKind::LowestEnergy, &s, 5.0, 1);
+        // small@dev_a has energy 1.0 in both groups
+        for g in [0, 1, 0] {
+            assert_eq!(p.route(&s, g), Some(PairKey::new("small", "dev_a")));
+        }
+    }
+
+    #[test]
+    fn lowest_inference_picks_fastest() {
+        let s = test_store();
+        let mut p = Policy::new(PolicyKind::LowestInference, &s, 5.0, 1);
+        assert_eq!(p.route(&s, 1), Some(PairKey::new("small", "dev_a")));
+    }
+
+    #[test]
+    fn highest_map_is_group_agnostic() {
+        let s = test_store();
+        let mut p = Policy::new(PolicyKind::HighestMap, &s, 5.0, 1);
+        // overall mAP: big@dev_a = 56, big@dev_b = 54.5, small = 40
+        for g in [0, 1] {
+            assert_eq!(p.route(&s, g), Some(PairKey::new("big", "dev_a")));
+        }
+    }
+
+    #[test]
+    fn hmg_switches_with_group() {
+        let s = test_store();
+        let mut p = Policy::new(PolicyKind::HighestMapPerGroup, &s, 5.0, 1);
+        // group 0 best: big@dev_a (52); group 1 best: big@dev_a (60)
+        assert_eq!(p.route(&s, 0), Some(PairKey::new("big", "dev_a")));
+        assert_eq!(p.route(&s, 1), Some(PairKey::new("big", "dev_a")));
+    }
+
+    #[test]
+    fn greedy_policy_delegates_to_algorithm1() {
+        let s = test_store();
+        let mut p = Policy::new(PolicyKind::Greedy, &s, 30.0, 1);
+        assert_eq!(p.route(&s, 1), Some(PairKey::new("small", "dev_a")));
+    }
+}

@@ -1,0 +1,176 @@
+//! Algorithm 1: the greedy routing algorithm.
+//!
+//! Given an estimated object-count group G and the profiling table, the
+//! router (1) filters to rows of group G, (2) computes
+//! `mAP_max = max_i mAP_i`, (3) forms the feasible set
+//! `F = { i : mAP_i >= mAP_max - delta_mAP }`, and (4) returns
+//! `argmin_{i in F} e_i`. Theorem 3.1 (optimality) holds because after
+//! filtering the problem is an unconstrained 1-D minimization over
+//! independent profiled values; the property tests below check the
+//! theorem's claim against brute force.
+
+use super::store::{PairKey, ProfileStore};
+
+#[derive(Clone, Debug)]
+pub struct GreedyRouter {
+    /// Accuracy tolerance margin, mAP points on the 0–100 scale.
+    pub delta_map: f64,
+}
+
+impl GreedyRouter {
+    pub fn new(delta_map: f64) -> Self {
+        Self { delta_map }
+    }
+
+    /// Route one request. Returns the chosen pair, or None if the group
+    /// has no profiled rows.
+    pub fn route(&self, store: &ProfileStore, group: usize) -> Option<PairKey> {
+        let rows = store.group_rows(group);
+        if rows.is_empty() {
+            return None;
+        }
+        // lines 10-11: max achievable mAP and the feasibility threshold
+        let map_max = rows
+            .iter()
+            .map(|r| r.map)
+            .fold(f64::NEG_INFINITY, f64::max);
+        let map_min = map_max - self.delta_map;
+        // lines 12-14: filter, then pick the lowest-energy row
+        rows.into_iter()
+            .filter(|r| r.map >= map_min)
+            .min_by(|a, b| a.energy_mwh.partial_cmp(&b.energy_mwh).unwrap())
+            .map(|r| r.pair.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::router::store::{test_store, PairProfile};
+    use crate::util::prop::forall_ok;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn strict_delta_zero_picks_best_map() {
+        let s = test_store();
+        let r = GreedyRouter::new(0.0);
+        // group 1: best mAP is ("big", "dev_a") at 60.0
+        assert_eq!(r.route(&s, 1), Some(PairKey::new("big", "dev_a")));
+    }
+
+    #[test]
+    fn relaxed_delta_switches_to_cheaper_pair() {
+        let s = test_store();
+        // group 1: delta 5 admits big@dev_b (58.0, energy 4) -> cheaper
+        assert_eq!(
+            GreedyRouter::new(5.0).route(&s, 1),
+            Some(PairKey::new("big", "dev_b"))
+        );
+        // delta 30 admits small@dev_a (30.0, energy 1)
+        assert_eq!(
+            GreedyRouter::new(30.0).route(&s, 1),
+            Some(PairKey::new("small", "dev_a"))
+        );
+    }
+
+    #[test]
+    fn unknown_group_routes_none() {
+        let s = test_store();
+        assert_eq!(GreedyRouter::new(5.0).route(&s, 9), None);
+    }
+
+    fn random_store(r: &mut Rng) -> ProfileStore {
+        let n_pairs = 2 + r.below(8) as usize;
+        let mut rows = Vec::new();
+        for p in 0..n_pairs {
+            for g in 0..3usize {
+                rows.push(PairProfile {
+                    pair: PairKey::new(&format!("m{p}"), "d"),
+                    group: g,
+                    map: r.range(0.0, 100.0),
+                    latency_s: r.range(0.001, 1.0),
+                    energy_mwh: r.range(0.1, 10.0),
+                });
+            }
+        }
+        ProfileStore::new(rows)
+    }
+
+    /// Theorem 3.1: the greedy choice equals the brute-force optimum of
+    /// the constrained problem, and satisfies all constraints.
+    #[test]
+    fn prop_matches_brute_force_and_respects_constraints() {
+        forall_ok(
+            51,
+            200,
+            |r| {
+                let delta = [0.0, 5.0, 10.0, 25.0][r.below(4) as usize];
+                (random_store(r), delta, r.below(3) as usize)
+            },
+            |(store, delta, group)| {
+                let got = GreedyRouter::new(*delta)
+                    .route(store, *group)
+                    .ok_or("no route")?;
+                let rows = store.group_rows(*group);
+                let map_max = rows
+                    .iter()
+                    .map(|r| r.map)
+                    .fold(f64::NEG_INFINITY, f64::max);
+                let feasible: Vec<_> = rows
+                    .iter()
+                    .filter(|r| r.map >= map_max - delta)
+                    .collect();
+                let brute = feasible
+                    .iter()
+                    .min_by(|a, b| {
+                        a.energy_mwh.partial_cmp(&b.energy_mwh).unwrap()
+                    })
+                    .unwrap();
+                // (i) result is in the group and feasible
+                let chosen = store
+                    .lookup(&got, *group)
+                    .ok_or("chosen pair not in group")?;
+                if chosen.map < map_max - delta - 1e-12 {
+                    return Err(format!(
+                        "constraint violated: {} < {} - {}",
+                        chosen.map, map_max, delta
+                    ));
+                }
+                // (ii) no feasible row has strictly lower energy
+                if chosen.energy_mwh > brute.energy_mwh + 1e-12 {
+                    return Err(format!(
+                        "not optimal: {} > {}",
+                        chosen.energy_mwh, brute.energy_mwh
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Monotonicity: widening delta never increases chosen energy.
+    #[test]
+    fn prop_energy_monotone_in_delta() {
+        forall_ok(
+            52,
+            150,
+            |r| random_store(r),
+            |store| {
+                let mut prev = f64::INFINITY;
+                for delta in [0.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0] {
+                    let pair = GreedyRouter::new(delta)
+                        .route(store, 0)
+                        .ok_or("no route")?;
+                    let e = store.lookup(&pair, 0).unwrap().energy_mwh;
+                    if e > prev + 1e-12 {
+                        return Err(format!(
+                            "energy increased with delta: {e} > {prev}"
+                        ));
+                    }
+                    prev = e;
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,148 @@
+//! Object-count group rules (Algorithm 1, lines 1–7).
+//!
+//! A rule set maps an estimated object count to a group label via ordered
+//! numeric ranges. The paper's configuration is five groups:
+//! '0', '1', '2', '3', '4 or more'.
+
+/// One rule: counts in `lo..=hi` belong to `label`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GroupRule {
+    pub lo: usize,
+    /// Inclusive upper bound; `usize::MAX` encodes "or more".
+    pub hi: usize,
+    pub label: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct GroupRules {
+    rules: Vec<GroupRule>,
+}
+
+impl GroupRules {
+    /// The paper's five-group configuration.
+    pub fn paper_default() -> Self {
+        Self {
+            rules: vec![
+                GroupRule { lo: 0, hi: 0, label: 0 },
+                GroupRule { lo: 1, hi: 1, label: 1 },
+                GroupRule { lo: 2, hi: 2, label: 2 },
+                GroupRule { lo: 3, hi: 3, label: 3 },
+                GroupRule { lo: 4, hi: usize::MAX, label: 4 },
+            ],
+        }
+    }
+
+    /// Build custom rules; validates totality and non-overlap over 0..=max.
+    pub fn new(rules: Vec<GroupRule>) -> Result<Self, String> {
+        let mut sorted = rules.clone();
+        sorted.sort_by_key(|r| r.lo);
+        let mut expect = 0usize;
+        for r in &sorted {
+            if r.lo > r.hi {
+                return Err(format!("rule {r:?}: empty range"));
+            }
+            if r.lo != expect {
+                return Err(format!(
+                    "rules not contiguous at count {expect} (rule {r:?})"
+                ));
+            }
+            if r.hi == usize::MAX {
+                expect = usize::MAX;
+            } else {
+                expect = r.hi + 1;
+            }
+        }
+        if expect != usize::MAX {
+            return Err("rules do not cover all counts (missing tail)".into());
+        }
+        Ok(Self { rules })
+    }
+
+    /// Algorithm 1 group lookup.
+    pub fn group_of(&self, count: usize) -> usize {
+        for r in &self.rules {
+            if count >= r.lo && count <= r.hi {
+                return r.label;
+            }
+        }
+        unreachable!("rules are total by construction")
+    }
+
+    pub fn num_groups(&self) -> usize {
+        self.rules.len()
+    }
+
+    /// A representative count for a group (for tests / synthetic sets).
+    pub fn representative(&self, label: usize) -> Option<usize> {
+        self.rules.iter().find(|r| r.label == label).map(|r| r.lo)
+    }
+
+    pub fn labels(&self) -> Vec<usize> {
+        self.rules.iter().map(|r| r.label).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn paper_default_mapping() {
+        let g = GroupRules::paper_default();
+        assert_eq!(g.group_of(0), 0);
+        assert_eq!(g.group_of(1), 1);
+        assert_eq!(g.group_of(2), 2);
+        assert_eq!(g.group_of(3), 3);
+        assert_eq!(g.group_of(4), 4);
+        assert_eq!(g.group_of(19), 4);
+        assert_eq!(g.group_of(usize::MAX), 4);
+        assert_eq!(g.num_groups(), 5);
+    }
+
+    #[test]
+    fn prop_total_cover() {
+        let g = GroupRules::paper_default();
+        forall(
+            41,
+            500,
+            |r| r.below(1000) as usize,
+            |&c| g.group_of(c) < g.num_groups(),
+        );
+    }
+
+    #[test]
+    fn rejects_gap() {
+        let r = GroupRules::new(vec![
+            GroupRule { lo: 0, hi: 0, label: 0 },
+            GroupRule { lo: 2, hi: usize::MAX, label: 1 },
+        ]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn rejects_overlap() {
+        let r = GroupRules::new(vec![
+            GroupRule { lo: 0, hi: 2, label: 0 },
+            GroupRule { lo: 2, hi: usize::MAX, label: 1 },
+        ]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn rejects_missing_tail() {
+        let r = GroupRules::new(vec![GroupRule { lo: 0, hi: 5, label: 0 }]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn accepts_coarser_grouping() {
+        let g = GroupRules::new(vec![
+            GroupRule { lo: 0, hi: 1, label: 0 },
+            GroupRule { lo: 2, hi: usize::MAX, label: 1 },
+        ])
+        .unwrap();
+        assert_eq!(g.group_of(1), 0);
+        assert_eq!(g.group_of(2), 1);
+    }
+}

@@ -1,0 +1,15 @@
+//! The paper's routing layer: object-count group rules, the profiling
+//! data store, Algorithm 1 (greedy energy-min under an accuracy margin),
+//! and the six baseline policies.
+
+pub mod baselines;
+pub mod greedy;
+pub mod group;
+pub mod store;
+pub mod weighted;
+
+pub use baselines::{Policy, PolicyKind};
+pub use greedy::GreedyRouter;
+pub use group::GroupRules;
+pub use store::{PairKey, PairProfile, ProfileStore};
+pub use weighted::{pareto_front, WeightedRouter, Weights};

@@ -1,0 +1,262 @@
+//! Profiling data store: the offline-measured
+//! (model, device, group) → (mAP, latency, energy) table Algorithm 1
+//! consumes, with JSON persistence and group-indexed lookups.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// A (model, device) pair identity.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct PairKey {
+    pub model: String,
+    pub device: String,
+}
+
+impl PairKey {
+    pub fn new(model: &str, device: &str) -> Self {
+        Self {
+            model: model.to_string(),
+            device: device.to_string(),
+        }
+    }
+}
+
+impl std::fmt::Display for PairKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}@{}", self.model, self.device)
+    }
+}
+
+/// One profiled row (paper §3.1: mAP_i, t_i, e_i, g_i).
+#[derive(Clone, Debug)]
+pub struct PairProfile {
+    pub pair: PairKey,
+    pub group: usize,
+    /// mAP on the 0–100 scale (group-'0' rows hold the empty-image score).
+    pub map: f64,
+    pub latency_s: f64,
+    pub energy_mwh: f64,
+}
+
+/// The full profiling table.
+#[derive(Clone, Debug, Default)]
+pub struct ProfileStore {
+    rows: Vec<PairProfile>,
+    by_group: BTreeMap<usize, Vec<usize>>,
+}
+
+impl ProfileStore {
+    pub fn new(rows: Vec<PairProfile>) -> Self {
+        let mut s = Self {
+            rows,
+            by_group: BTreeMap::new(),
+        };
+        s.reindex();
+        s
+    }
+
+    fn reindex(&mut self) {
+        self.by_group.clear();
+        for (i, r) in self.rows.iter().enumerate() {
+            self.by_group.entry(r.group).or_default().push(i);
+        }
+    }
+
+    pub fn rows(&self) -> &[PairProfile] {
+        &self.rows
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn groups(&self) -> Vec<usize> {
+        self.by_group.keys().copied().collect()
+    }
+
+    /// All rows for one group (Algorithm 1 line 8).
+    pub fn group_rows(&self, group: usize) -> Vec<&PairProfile> {
+        self.by_group
+            .get(&group)
+            .map(|idxs| idxs.iter().map(|&i| &self.rows[i]).collect())
+            .unwrap_or_default()
+    }
+
+    /// Unique pairs present in the store.
+    pub fn pairs(&self) -> Vec<PairKey> {
+        let mut v: Vec<PairKey> =
+            self.rows.iter().map(|r| r.pair.clone()).collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+
+    /// Row for a specific (pair, group).
+    pub fn lookup(&self, pair: &PairKey, group: usize) -> Option<&PairProfile> {
+        self.group_rows(group)
+            .into_iter()
+            .find(|r| &r.pair == pair)
+    }
+
+    /// Mean mAP of a pair across groups (used by the HM baseline).
+    pub fn overall_map(&self, pair: &PairKey) -> f64 {
+        let vals: Vec<f64> = self
+            .rows
+            .iter()
+            .filter(|r| &r.pair == pair)
+            .map(|r| r.map)
+            .collect();
+        if vals.is_empty() {
+            0.0
+        } else {
+            vals.iter().sum::<f64>() / vals.len() as f64
+        }
+    }
+
+    /// Restrict the store to a subset of pairs (the deployed testbed).
+    pub fn restrict(&self, pairs: &[PairKey]) -> ProfileStore {
+        ProfileStore::new(
+            self.rows
+                .iter()
+                .filter(|r| pairs.contains(&r.pair))
+                .cloned()
+                .collect(),
+        )
+    }
+
+    // ---- persistence ----------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.rows
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("model", Json::str(&r.pair.model)),
+                        ("device", Json::str(&r.pair.device)),
+                        ("group", Json::num(r.group as f64)),
+                        ("map", Json::num(r.map)),
+                        ("latency_s", Json::num(r.latency_s)),
+                        ("energy_mwh", Json::num(r.energy_mwh)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let arr = j.as_arr().context("profile store must be an array")?;
+        let mut rows = Vec::with_capacity(arr.len());
+        for item in arr {
+            rows.push(PairProfile {
+                pair: PairKey::new(
+                    item.req("model")?.as_str().context("model")?,
+                    item.req("device")?.as_str().context("device")?,
+                ),
+                group: item.req("group")?.as_usize().context("group")?,
+                map: item.req("map")?.as_f64().context("map")?,
+                latency_s: item
+                    .req("latency_s")?
+                    .as_f64()
+                    .context("latency_s")?,
+                energy_mwh: item
+                    .req("energy_mwh")?
+                    .as_f64()
+                    .context("energy_mwh")?,
+            });
+        }
+        Ok(Self::new(rows))
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().pretty())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_json(&json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+pub(crate) fn test_store() -> ProfileStore {
+    // Small hand-built table with known structure: 3 pairs x 2 groups.
+    let row = |m: &str, d: &str, g: usize, map: f64, lat: f64, e: f64| {
+        PairProfile {
+            pair: PairKey::new(m, d),
+            group: g,
+            map,
+            latency_s: lat,
+            energy_mwh: e,
+        }
+    };
+    ProfileStore::new(vec![
+        row("small", "dev_a", 0, 50.0, 0.010, 1.0),
+        row("small", "dev_a", 1, 30.0, 0.010, 1.0),
+        row("big", "dev_a", 0, 52.0, 0.100, 9.0),
+        row("big", "dev_a", 1, 60.0, 0.100, 9.0),
+        row("big", "dev_b", 0, 51.0, 0.050, 4.0),
+        row("big", "dev_b", 1, 58.0, 0.050, 4.0),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn group_index_and_pairs() {
+        let s = test_store();
+        assert_eq!(s.groups(), vec![0, 1]);
+        assert_eq!(s.group_rows(0).len(), 3);
+        assert_eq!(s.pairs().len(), 3);
+        assert!(s.group_rows(7).is_empty());
+    }
+
+    #[test]
+    fn lookup_and_overall_map() {
+        let s = test_store();
+        let k = PairKey::new("big", "dev_a");
+        assert_eq!(s.lookup(&k, 1).unwrap().map, 60.0);
+        assert!((s.overall_map(&k) - 56.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn restrict_drops_other_pairs() {
+        let s = test_store();
+        let keep = vec![PairKey::new("small", "dev_a")];
+        let r = s.restrict(&keep);
+        assert_eq!(r.pairs(), keep);
+        assert_eq!(r.rows().len(), 2);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let s = test_store();
+        let j = s.to_json();
+        let back = ProfileStore::from_json(&j).unwrap();
+        assert_eq!(back.rows().len(), s.rows().len());
+        for (a, b) in s.rows().iter().zip(back.rows().iter()) {
+            assert_eq!(a.pair, b.pair);
+            assert_eq!(a.group, b.group);
+            assert!((a.map - b.map).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("ecore_store_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("profiles.json");
+        let s = test_store();
+        s.save(&p).unwrap();
+        let back = ProfileStore::load(&p).unwrap();
+        assert_eq!(back.rows().len(), s.rows().len());
+    }
+}

@@ -1,0 +1,189 @@
+//! Multi-objective weighted routing — the paper's Future Work #3
+//! ("incorporating multi-objective optimization techniques, such as
+//! Pareto-based or weighted approaches").
+//!
+//! Instead of Algorithm 1's lexicographic scheme (filter by accuracy,
+//! then minimize energy), [`WeightedRouter`] scalarizes the three
+//! objectives with user weights over *normalized* per-group metrics, and
+//! [`pareto_front`] exposes the non-dominated set for inspection. The
+//! `ablation_weighted` experiment compares both against the greedy
+//! router across weight settings.
+
+use super::store::{PairKey, PairProfile, ProfileStore};
+
+/// Objective weights (will be normalized; larger = more important).
+#[derive(Clone, Copy, Debug)]
+pub struct Weights {
+    pub energy: f64,
+    pub latency: f64,
+    pub accuracy: f64,
+}
+
+impl Default for Weights {
+    fn default() -> Self {
+        Self {
+            energy: 1.0,
+            latency: 0.0,
+            accuracy: 1.0,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct WeightedRouter {
+    pub weights: Weights,
+}
+
+impl WeightedRouter {
+    pub fn new(weights: Weights) -> Self {
+        Self { weights }
+    }
+
+    /// Score = w_e * ê + w_l * t̂ − w_a * m̂ over min-max normalized group
+    /// metrics; the minimizer wins. Returns None for unknown groups.
+    pub fn route(&self, store: &ProfileStore, group: usize) -> Option<PairKey> {
+        let rows = store.group_rows(group);
+        if rows.is_empty() {
+            return None;
+        }
+        let norm = |f: &dyn Fn(&PairProfile) -> f64| {
+            let vals: Vec<f64> = rows.iter().map(|r| f(r)).collect();
+            let lo = vals.iter().cloned().fold(f64::INFINITY, f64::min);
+            let hi = vals.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let span = (hi - lo).max(1e-12);
+            vals.into_iter()
+                .map(|v| (v - lo) / span)
+                .collect::<Vec<f64>>()
+        };
+        let e = norm(&|r| r.energy_mwh);
+        let t = norm(&|r| r.latency_s);
+        let m = norm(&|r| r.map);
+        let w = self.weights;
+        let total = (w.energy + w.latency + w.accuracy).max(1e-12);
+        rows.iter()
+            .enumerate()
+            .min_by(|(i, _), (j, _)| {
+                let si = (w.energy * e[*i] + w.latency * t[*i]
+                    - w.accuracy * m[*i])
+                    / total;
+                let sj = (w.energy * e[*j] + w.latency * t[*j]
+                    - w.accuracy * m[*j])
+                    / total;
+                si.partial_cmp(&sj).unwrap()
+            })
+            .map(|(_, r)| r.pair.clone())
+    }
+}
+
+/// Non-dominated (energy↓, latency↓, mAP↑) rows of one group.
+pub fn pareto_front<'a>(
+    store: &'a ProfileStore,
+    group: usize,
+) -> Vec<&'a PairProfile> {
+    let rows = store.group_rows(group);
+    rows.iter()
+        .filter(|a| {
+            !rows.iter().any(|b| {
+                // b dominates a
+                b.energy_mwh <= a.energy_mwh
+                    && b.latency_s <= a.latency_s
+                    && b.map >= a.map
+                    && (b.energy_mwh < a.energy_mwh
+                        || b.latency_s < a.latency_s
+                        || b.map > a.map)
+            })
+        })
+        .copied()
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::router::store::test_store;
+    use crate::util::prop::forall_ok;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn accuracy_only_weights_pick_best_map() {
+        let s = test_store();
+        let r = WeightedRouter::new(Weights {
+            energy: 0.0,
+            latency: 0.0,
+            accuracy: 1.0,
+        });
+        // group 1 best mAP = big@dev_a
+        assert_eq!(r.route(&s, 1), Some(PairKey::new("big", "dev_a")));
+    }
+
+    #[test]
+    fn energy_only_weights_pick_cheapest() {
+        let s = test_store();
+        let r = WeightedRouter::new(Weights {
+            energy: 1.0,
+            latency: 0.0,
+            accuracy: 0.0,
+        });
+        assert_eq!(r.route(&s, 1), Some(PairKey::new("small", "dev_a")));
+    }
+
+    #[test]
+    fn latency_weight_shifts_choice() {
+        let s = test_store();
+        let r = WeightedRouter::new(Weights {
+            energy: 0.2,
+            latency: 5.0,
+            accuracy: 0.2,
+        });
+        // small@dev_a has the lowest latency (0.010)
+        assert_eq!(r.route(&s, 0), Some(PairKey::new("small", "dev_a")));
+    }
+
+    #[test]
+    fn pareto_front_excludes_dominated() {
+        let s = test_store();
+        // group 1: small(30,1.0,.01) big@a(60,9,.1) big@b(58,4,.05)
+        // none dominates another -> all three on the front
+        let front = pareto_front(&s, 1);
+        assert_eq!(front.len(), 3);
+    }
+
+    #[test]
+    fn prop_weighted_choice_is_on_pareto_front() {
+        // a scalarized optimum is always non-dominated
+        forall_ok(
+            61,
+            100,
+            |r: &mut Rng| {
+                let mut rows = Vec::new();
+                for p in 0..(2 + r.below(6)) {
+                    rows.push(PairProfile {
+                        pair: PairKey::new(&format!("m{p}"), "d"),
+                        group: 0,
+                        map: r.range(0.0, 100.0),
+                        latency_s: r.range(0.001, 1.0),
+                        energy_mwh: r.range(0.1, 10.0),
+                    });
+                }
+                let w = Weights {
+                    energy: r.range(0.05, 1.0),
+                    latency: r.range(0.05, 1.0),
+                    accuracy: r.range(0.05, 1.0),
+                };
+                (ProfileStore::new(rows), w)
+            },
+            |(store, w)| {
+                let choice = WeightedRouter::new(*w)
+                    .route(store, 0)
+                    .ok_or("no route")?;
+                let front = pareto_front(store, 0);
+                if !front.iter().any(|r| r.pair == choice) {
+                    return Err(format!(
+                        "choice {choice} not on the pareto front"
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,255 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! `Engine` wraps a `PjRtClient` (CPU) and a cache of compiled
+//! executables, one per artifact. The hot path is
+//! `Engine::infer(name, &input) -> &[f32]`: one host-to-literal copy, one
+//! PJRT execution, one literal-to-host copy into a reusable per-model
+//! output buffer (no per-request allocation after warm-up).
+//!
+//! PJRT handles are raw pointers (`!Send`), so an `Engine` lives on one
+//! thread; the coordinator is built around that (DESIGN.md §4 runtime).
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::models::{ModelMeta, ModelRegistry};
+
+/// One compiled artifact plus its reusable output buffer.
+struct LoadedModel {
+    exe: xla::PjRtLoadedExecutable,
+    meta: ModelMeta,
+}
+
+/// PJRT engine: compiles artifacts on first use and caches executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+    registry: ModelRegistry,
+    loaded: RefCell<BTreeMap<String, std::rc::Rc<LoadedModel>>>,
+    /// Cumulative wall time spent inside PJRT execution (profiling aid).
+    exec_nanos: std::cell::Cell<u64>,
+    exec_count: std::cell::Cell<u64>,
+}
+
+impl Engine {
+    /// Create a CPU engine over an artifact directory.
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let registry = ModelRegistry::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self {
+            client,
+            registry,
+            loaded: RefCell::new(BTreeMap::new()),
+            exec_nanos: std::cell::Cell::new(0),
+            exec_count: std::cell::Cell::new(0),
+        })
+    }
+
+    pub fn registry(&self) -> &ModelRegistry {
+        &self.registry
+    }
+
+    /// Compile (or fetch the cached) executable for `name`.
+    fn load(&self, name: &str) -> Result<std::rc::Rc<LoadedModel>> {
+        if let Some(m) = self.loaded.borrow().get(name) {
+            return Ok(m.clone());
+        }
+        let meta = self.registry.get(name)?.clone();
+        let proto = xla::HloModuleProto::from_text_file(&meta.file)
+            .map_err(|e| {
+                anyhow::anyhow!("loading {}: {e:?}", meta.file.display())
+            })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
+        let model = std::rc::Rc::new(LoadedModel { exe, meta });
+        self.loaded
+            .borrow_mut()
+            .insert(name.to_string(), model.clone());
+        Ok(model)
+    }
+
+    /// Eagerly compile a set of models (warm-up before serving).
+    pub fn preload(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.load(n)?;
+        }
+        Ok(())
+    }
+
+    /// Run one inference, returning an owned copy of the output.
+    ///
+    /// Hot paths should prefer [`Engine::infer_into`], which writes into
+    /// a caller-owned buffer and avoids the output copy (up to ~8 MB per
+    /// request for the largest model) — see EXPERIMENTS.md §Perf.
+    pub fn infer(&self, name: &str, input: &[f32]) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        self.infer_into(name, input, &mut out)?;
+        Ok(out)
+    }
+
+    /// Run one inference into `out` (resized to the output length).
+    pub fn infer_into(
+        &self,
+        name: &str,
+        input: &[f32],
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let model = self.load(name)?;
+        anyhow::ensure!(
+            input.len() == model.meta.input_len(),
+            "{name}: input length {} != expected {}",
+            input.len(),
+            model.meta.input_len()
+        );
+        let dims: Vec<usize> =
+            model.meta.input_shape.iter().copied().collect();
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(
+                input.as_ptr() as *const u8,
+                std::mem::size_of_val(input),
+            )
+        };
+        let lit = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            &dims,
+            bytes,
+        )
+        .map_err(|e| anyhow::anyhow!("literal for {name}: {e:?}"))?;
+
+        let t0 = std::time::Instant::now();
+        let result = model
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?;
+        let out_lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch {name}: {e:?}"))?
+            // artifacts are lowered with return_tuple=True -> 1-tuple
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("untuple {name}: {e:?}"))?;
+        self.exec_nanos.set(
+            self.exec_nanos.get() + t0.elapsed().as_nanos() as u64,
+        );
+        self.exec_count.set(self.exec_count.get() + 1);
+
+        out.resize(model.meta.output_len(), 0.0);
+        out_lit
+            .copy_raw_to::<f32>(out)
+            .map_err(|e| anyhow::anyhow!("copy out {name}: {e:?}"))?;
+        Ok(())
+    }
+
+    /// (total PJRT execution seconds, execution count) since startup.
+    pub fn exec_stats(&self) -> (f64, u64) {
+        (
+            self.exec_nanos.get() as f64 * 1e-9,
+            self.exec_count.get(),
+        )
+    }
+
+    /// Output shape of a model, for decoders.
+    pub fn meta(&self, name: &str) -> Result<ModelMeta> {
+        Ok(self.registry.get(name)?.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn engine() -> Engine {
+        Engine::new(&artifacts_dir()).expect("engine")
+    }
+
+    #[test]
+    fn infer_ssd_v1_shapes_and_finiteness() {
+        let e = engine();
+        let input = vec![0.5f32; 384 * 384];
+        let out = e.infer("ssd_v1", &input).unwrap();
+        assert_eq!(out.len(), 2 * 3 * 96 * 96);
+        assert!(out.iter().all(|x| x.is_finite()));
+        // constant image -> no DoG response anywhere
+        assert!(out.iter().all(|&x| x.abs() < 1e-4));
+    }
+
+    #[test]
+    fn infer_detects_planted_bright_blob() {
+        let e = engine();
+        let mut img = vec![0.5f32; 384 * 384];
+        // gaussian bump radius ~20 at (192, 192)
+        for y in 0..384 {
+            for x in 0..384 {
+                let dx = x as f32 - 192.0;
+                let dy = y as f32 - 192.0;
+                let s = 10.0f32;
+                img[y * 384 + x] +=
+                    0.45 * (-0.5 * (dx * dx + dy * dy) / (s * s)).exp();
+            }
+        }
+        let out = e.infer("yolov8n", &img).unwrap();
+        let meta = e.meta("yolov8n").unwrap();
+        let (mut best, mut arg) = (0.0f32, 0usize);
+        for (i, &v) in out.iter().enumerate() {
+            if v > best {
+                best = v;
+                arg = i;
+            }
+        }
+        assert!(best > meta.threshold as f32, "peak {best}");
+        // index -> (cls, band, y, x)
+        let res = meta.res;
+        let cls = arg / (meta.k * res * res);
+        let rem = arg % (meta.k * res * res);
+        let y = (rem % (res * res)) / res;
+        let x = rem % res;
+        assert_eq!(cls, 0);
+        let f = meta.factor;
+        assert!((y * f).abs_diff(192) <= 2 * f, "y={y}");
+        assert!((x * f).abs_diff(192) <= 2 * f, "x={x}");
+    }
+
+    #[test]
+    fn wrong_input_length_is_error() {
+        let e = engine();
+        assert!(e.infer("ssd_v1", &[0.0; 10]).is_err());
+    }
+
+    #[test]
+    fn canny_artifact_runs() {
+        let e = engine();
+        let mut img = vec![0.2f32; 384 * 384];
+        for y in 0..384 {
+            for x in 192..384 {
+                img[y * 384 + x] = 0.8;
+            }
+        }
+        let out = e.infer("canny", &img).unwrap();
+        assert_eq!(out.len(), 96 * 96);
+        assert!(out.iter().any(|&v| v == 2.0), "strong edge expected");
+        assert!(out
+            .iter()
+            .all(|&v| v == 0.0 || v == 1.0 || v == 2.0));
+    }
+
+    #[test]
+    fn exec_stats_accumulate() {
+        let e = engine();
+        let input = vec![0.5f32; 384 * 384];
+        e.infer("ssd_v1", &input).unwrap();
+        e.infer("ssd_v1", &input).unwrap();
+        let (secs, count) = e.exec_stats();
+        assert_eq!(count, 2);
+        assert!(secs > 0.0);
+    }
+}

@@ -1,0 +1,143 @@
+//! Micro-benchmark harness substrate (no external `criterion` available).
+//!
+//! Provides warmup + calibrated measurement loops with median/p10/p90
+//! reporting, plus a tiny `black_box` shim. Each file in `rust/benches/`
+//! is a `harness = false` binary built on this module, so `cargo bench`
+//! runs them all and prints one table per bench target.
+
+use std::hint::black_box as std_black_box;
+use std::time::{Duration, Instant};
+
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub median: Duration,
+    pub p10: Duration,
+    pub p90: Duration,
+    pub mean: Duration,
+}
+
+impl BenchResult {
+    pub fn throughput_per_sec(&self) -> f64 {
+        if self.median.as_secs_f64() > 0.0 {
+            1.0 / self.median.as_secs_f64()
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+pub struct Bench {
+    /// Target total measurement time per case.
+    pub budget: Duration,
+    /// Number of timed samples to collect.
+    pub samples: usize,
+    results: Vec<BenchResult>,
+    group: String,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new("bench")
+    }
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        // honor `cargo bench -- --quick` for CI smoke runs
+        let quick = std::env::args().any(|a| a == "--quick");
+        Self {
+            budget: if quick {
+                Duration::from_millis(200)
+            } else {
+                Duration::from_secs(1)
+            },
+            samples: if quick { 10 } else { 30 },
+            results: Vec::new(),
+            group: group.to_string(),
+        }
+    }
+
+    /// Benchmark `f`, which performs ONE unit of work per call.
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) {
+        // warmup + calibration: find iters/sample so a sample ~= budget/samples
+        let t0 = Instant::now();
+        let mut calib_iters = 0u64;
+        while t0.elapsed() < self.budget / 10 {
+            black_box(f());
+            calib_iters += 1;
+        }
+        let per_call = t0.elapsed().as_secs_f64() / calib_iters.max(1) as f64;
+        let target_sample = self.budget.as_secs_f64() / self.samples as f64;
+        let iters = ((target_sample / per_call.max(1e-9)) as u64).clamp(1, 1_000_000);
+
+        let mut times: Vec<Duration> = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                black_box(f());
+            }
+            times.push(t.elapsed() / iters as u32);
+        }
+        times.sort();
+        let median = times[times.len() / 2];
+        let p10 = times[times.len() / 10];
+        let p90 = times[times.len() * 9 / 10];
+        let mean = times.iter().sum::<Duration>() / times.len() as u32;
+        let r = BenchResult {
+            name: name.to_string(),
+            iters,
+            median,
+            p10,
+            p90,
+            mean,
+        };
+        println!(
+            "{:<44} median {:>12?}  p10 {:>12?}  p90 {:>12?}  ({} iters/sample)",
+            format!("{}/{}", self.group, r.name),
+            r.median,
+            r.p10,
+            r.p90,
+            r.iters
+        );
+        self.results.push(r);
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    pub fn finish(self) {
+        println!(
+            "{}: {} case(s) measured",
+            self.group,
+            self.results.len()
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench::new("t");
+        b.budget = Duration::from_millis(50);
+        b.samples = 5;
+        // black_box inside the loop body so release builds can neither
+        // const-fold nor closed-form the reduction; keeps per-call time
+        // well above the Duration division granularity.
+        b.run("xor_fold_4k", || {
+            (0..4096u64).fold(0u64, |acc, i| acc ^ black_box(i))
+        });
+        assert_eq!(b.results().len(), 1);
+        assert!(b.results()[0].iters >= 1);
+        assert!(b.results()[0].median > Duration::ZERO);
+    }
+}

@@ -1,0 +1,118 @@
+//! ASCII chart substrate: line series and scatter plots for terminal
+//! rendering of the paper's figures (Fig. 5 Pareto scatter, Fig. 9 delta
+//! sweep lines) without any plotting dependency.
+
+/// Render one or more named (x, y) series as an ASCII line/point chart.
+pub fn line_chart(
+    title: &str,
+    series: &[(&str, Vec<(f64, f64)>)],
+    width: usize,
+    height: usize,
+) -> String {
+    let pts: Vec<(f64, f64)> = series
+        .iter()
+        .flat_map(|(_, s)| s.iter().copied())
+        .collect();
+    if pts.is_empty() {
+        return format!("{title}\n(no data)\n");
+    }
+    let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y) in &pts {
+        x0 = x0.min(x);
+        x1 = x1.max(x);
+        y0 = y0.min(y);
+        y1 = y1.max(y);
+    }
+    if (x1 - x0).abs() < 1e-12 {
+        x1 = x0 + 1.0;
+    }
+    if (y1 - y0).abs() < 1e-12 {
+        y1 = y0 + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    let marks = ['*', 'o', '+', 'x', '#', '@', '%', '&'];
+    for (si, (_, s)) in series.iter().enumerate() {
+        let m = marks[si % marks.len()];
+        for &(x, y) in s {
+            let cx = ((x - x0) / (x1 - x0) * (width - 1) as f64) as usize;
+            let cy = ((y - y0) / (y1 - y0) * (height - 1) as f64) as usize;
+            grid[height - 1 - cy][cx] = m;
+        }
+    }
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    for (si, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!(
+            "  {} = {}\n",
+            marks[si % marks.len()],
+            name
+        ));
+    }
+    out.push_str(&format!("{y1:>10.2} ┤\n"));
+    for row in &grid {
+        out.push_str("           │");
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!("{y0:>10.2} └"));
+    out.push_str(&"─".repeat(width));
+    out.push('\n');
+    out.push_str(&format!(
+        "            {:<10.3}{:>width$.3}\n",
+        x0,
+        x1,
+        width = width.saturating_sub(10)
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_points_within_frame() {
+        let s = line_chart(
+            "t",
+            &[("a", vec![(0.0, 0.0), (1.0, 1.0), (2.0, 4.0)])],
+            30,
+            10,
+        );
+        assert!(s.contains('*'));
+        assert!(s.contains("a"));
+        assert_eq!(s.lines().filter(|l| l.contains('│')).count(), 10);
+    }
+
+    #[test]
+    fn two_series_get_distinct_marks() {
+        let s = line_chart(
+            "t",
+            &[
+                ("a", vec![(0.0, 0.0)]),
+                ("b", vec![(1.0, 1.0)]),
+            ],
+            20,
+            5,
+        );
+        assert!(s.contains('*') && s.contains('o'));
+    }
+
+    #[test]
+    fn empty_series_no_panic() {
+        let s = line_chart("t", &[("a", vec![])], 10, 5);
+        assert!(s.contains("no data"));
+    }
+
+    #[test]
+    fn constant_series_no_divide_by_zero() {
+        let s = line_chart(
+            "t",
+            &[("a", vec![(1.0, 2.0), (1.0, 2.0)])],
+            10,
+            5,
+        );
+        assert!(s.contains('*'));
+    }
+}

@@ -1,0 +1,143 @@
+//! CLI argument-parsing substrate (no external `clap` available).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! generates usage text from declared options. Used by the `ecore` binary
+//! and every example/experiment driver.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse a raw argv tail (everything after the program/subcommand).
+    ///
+    /// `--name token` is ambiguous between a flag followed by a
+    /// positional and an option with a value; `known_flags` resolves it
+    /// (anything listed there never consumes the next token).
+    pub fn parse_with_flags<I: IntoIterator<Item = String>>(
+        argv: I,
+        known_flags: &[&str],
+    ) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if !known_flags.contains(&body)
+                    && it
+                        .peek()
+                        .map(|n| !n.starts_with("--"))
+                        .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// `parse_with_flags` with the flag vocabulary used across ECORE's
+    /// binaries, so `--verbose out.json` parses as flag + positional.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        Self::parse_with_flags(
+            argv,
+            &["verbose", "quick", "full", "help", "quiet", "no-cache"],
+        )
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated list option.
+    pub fn list_or(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.get(name) {
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn parses_mixed_forms() {
+        let a = args(&[
+            "profile",
+            "--images",
+            "500",
+            "--delta=5",
+            "--verbose",
+            "out.json",
+        ]);
+        assert_eq!(a.positional, vec!["profile", "out.json"]);
+        assert_eq!(a.usize_or("images", 0), 500);
+        assert_eq!(a.f64_or("delta", 0.0), 5.0);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = args(&[]);
+        assert_eq!(a.usize_or("n", 7), 7);
+        assert_eq!(a.str_or("name", "x"), "x");
+        assert_eq!(a.list_or("routers", &["ed", "ob"]), vec!["ed", "ob"]);
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = args(&["--routers", "orc, ed,ob"]);
+        assert_eq!(a.list_or("routers", &[]), vec!["orc", "ed", "ob"]);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = args(&["--quick", "--full"]);
+        assert!(a.flag("quick") && a.flag("full"));
+        assert!(a.options.is_empty());
+    }
+}

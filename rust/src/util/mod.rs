@@ -1,0 +1,10 @@
+//! Shared substrates: deterministic RNG, JSON, micro-bench harness,
+//! property-testing loop, CLI argument parsing, and small stats helpers.
+
+pub mod bench;
+pub mod chart;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,73 @@
+//! Property-testing substrate (no external `proptest` available).
+//!
+//! `forall(seed, cases, gen, prop)` runs `prop` over `cases` random inputs
+//! drawn by `gen`; on failure it reports the failing case index and the
+//! generator seed so the case replays deterministically. Shrinking is
+//! intentionally simple: inputs carry their seed, which is enough to
+//! reproduce and debug in this codebase's fully-deterministic setting.
+
+use super::rng::Rng;
+
+/// Run a property over `cases` generated inputs. Panics (with replay
+/// information) on the first falsified case.
+pub fn forall<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    for case in 0..cases {
+        let mut rng = Rng::new(seed).derive(case as u64);
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property falsified at case {case} (seed {seed}): {input:?}"
+            );
+        }
+    }
+}
+
+/// Like `forall` but the property returns Result with a message.
+pub fn forall_ok<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let mut rng = Rng::new(seed).derive(case as u64);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property falsified at case {case} (seed {seed}): {msg}\ninput: {input:?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        forall(1, 50, |r| r.below(100), |&x| x < 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "property falsified")]
+    fn fails_false_property() {
+        forall(2, 50, |r| r.below(100), |&x| x < 50);
+    }
+
+    #[test]
+    fn forall_ok_reports_message() {
+        forall_ok(3, 10, |r| r.f64(), |&x| {
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+}

@@ -1,0 +1,148 @@
+//! Closed-loop workload driver — the paper's Locust substitute (§4.2):
+//! requests are sent "back-to-back in a piggybacked fashion", each fired
+//! only after the previous response arrives, so total latency is the sum
+//! of per-request service times on a virtual clock.
+
+use anyhow::Result;
+
+use crate::dataset::{Dataset, Scene};
+use crate::gateway::Gateway;
+use crate::metrics::RunMetrics;
+
+/// Drive a gateway over a (lazily rendered) dataset.
+pub fn run_dataset(
+    gw: &mut Gateway<'_>,
+    dataset: &Dataset,
+) -> Result<RunMetrics> {
+    let mut m = RunMetrics::new(gw.spec.name);
+    for scene in dataset.iter_scenes() {
+        gw.handle(&scene.image, scene.gt.len(), &scene.gt, &mut m)?;
+    }
+    Ok(m)
+}
+
+/// Drive a gateway over pre-rendered frames with *pseudo* ground truth
+/// (the video protocol: labels come from the biggest model, §4.1.1).
+pub fn run_frames(
+    gw: &mut Gateway<'_>,
+    frames: &[Scene],
+    pseudo_gt: &[Vec<crate::dataset::GtBox>],
+) -> Result<RunMetrics> {
+    anyhow::ensure!(frames.len() == pseudo_gt.len());
+    let mut m = RunMetrics::new(gw.spec.name);
+    for (scene, gt) in frames.iter().zip(pseudo_gt.iter()) {
+        gw.handle(&scene.image, gt.len(), gt, &mut m)?;
+    }
+    Ok(m)
+}
+
+/// Generate pseudo ground truth for frames by running the reference
+/// model (yolov8x) — mirrors the paper's annotation protocol.
+pub fn pseudo_annotate(
+    engine: &crate::runtime::Engine,
+    frames: &[Scene],
+) -> Result<Vec<Vec<crate::dataset::GtBox>>> {
+    use crate::dataset::GtBox;
+    let meta = engine.meta(crate::models::GT_MODEL)?;
+    let mut out = Vec::with_capacity(frames.len());
+    for f in frames {
+        let heat = engine.infer(crate::models::GT_MODEL, &f.image)?;
+        let dets = crate::detection::decode_heatmap(&heat, &meta, 1.0);
+        out.push(
+            dets.into_iter()
+                .map(|d| GtBox {
+                    x0: d.bbox.x0,
+                    y0: d.bbox.y0,
+                    x1: d.bbox.x1,
+                    y1: d.bbox.y1,
+                    cls: d.cls,
+                })
+                .collect(),
+        );
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::{coco, video};
+    use crate::devices::fleet;
+    use crate::gateway::router_by_name;
+    use crate::nodes::NodePool;
+    use crate::router::{PairKey, PairProfile, ProfileStore};
+    use crate::runtime::Engine;
+
+    fn engine() -> Engine {
+        Engine::new(&crate::default_artifacts_dir()).unwrap()
+    }
+
+    fn store() -> ProfileStore {
+        let mut rows = Vec::new();
+        for g in 0..5 {
+            rows.push(PairProfile {
+                pair: PairKey::new("ssd_v1", "jetson_orin_nano"),
+                group: g,
+                map: 50.0,
+                latency_s: 0.005,
+                energy_mwh: 0.002,
+            });
+            rows.push(PairProfile {
+                pair: PairKey::new("yolov8n", "pi5"),
+                group: g,
+                map: if g >= 2 { 75.0 } else { 51.0 },
+                latency_s: 0.05,
+                energy_mwh: 0.05,
+            });
+        }
+        ProfileStore::new(rows)
+    }
+
+    #[test]
+    fn closed_loop_latency_is_sum_of_requests() {
+        let e = engine();
+        let s = store();
+        let pool = NodePool::deploy(&e, &s.pairs(), &fleet(), 3).unwrap();
+        let mut gw = Gateway::new(
+            &e,
+            router_by_name("LE").unwrap(),
+            s,
+            pool,
+            5.0,
+            3,
+        );
+        let ds = coco::build(5, 77);
+        let m = run_dataset(&mut gw, &ds).unwrap();
+        assert_eq!(m.requests, 5);
+        // LE always routes to the jetson pair: closed-loop total latency
+        // = 5 x (device service time +- 3% jitter + network)
+        let jetson = crate::devices::find(&fleet(), "jetson_orin_nano")
+            .unwrap();
+        let meta = e.meta("ssd_v1").unwrap();
+        let per_req = jetson.profile(&meta).latency_s;
+        let expect = 5.0 * (per_req + crate::devices::NETWORK_S);
+        assert!(
+            (m.total_latency_s - expect).abs() < 5.0 * per_req * 0.04,
+            "latency {} vs expect {expect}",
+            m.total_latency_s
+        );
+    }
+
+    #[test]
+    fn video_pseudo_annotation_close_to_truth() {
+        let e = engine();
+        let frames = video::build_frames(6, 4);
+        let gts = pseudo_annotate(&e, &frames).unwrap();
+        assert_eq!(gts.len(), 6);
+        // pseudo labels should track true counts closely on these
+        // well-separated pedestrian scenes
+        let mut total_err = 0usize;
+        for (f, gt) in frames.iter().zip(gts.iter()) {
+            total_err += f.gt.len().abs_diff(gt.len());
+        }
+        assert!(
+            total_err <= frames.len(),
+            "pseudo-GT count error too large: {total_err}"
+        );
+    }
+}

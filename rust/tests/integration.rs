@@ -1,0 +1,283 @@
+//! Cross-module integration tests: artifacts → engine → profiler →
+//! testbed → gateway → metrics, exercised end to end on small workloads.
+
+use ecore::config::ExperimentConfig;
+use ecore::dataset::{balanced, coco, video};
+use ecore::devices::fleet;
+use ecore::experiments::serve::{
+    deployed_store, run_router_on_dataset, run_router_with_delta,
+};
+use ecore::experiments::Harness;
+use ecore::gateway::{paper_routers, router_by_name, Gateway};
+use ecore::nodes::NodePool;
+use ecore::profiling::testbed;
+use ecore::workload;
+
+fn harness() -> Harness {
+    // tiny profiling set: fast but structurally faithful
+    let cfg = ExperimentConfig {
+        profile_per_group: 8,
+        coco_images: 30,
+        balanced_per_group: 6,
+        video_frames: 20,
+        seed: 1234,
+        ..Default::default()
+    };
+    Harness::new(cfg).unwrap()
+}
+
+#[test]
+fn full_pipeline_profiles_selects_and_serves() {
+    let h = harness();
+
+    // profiling grid is complete
+    let store = h.profiles().unwrap();
+    assert_eq!(store.rows().len(), 8 * 8 * 5);
+    assert_eq!(store.pairs().len(), 64);
+
+    // testbed selection picks champions incl. the paper's structure
+    let rows = testbed::select(&store);
+    let energy_champ = rows.iter().find(|r| r.metric == "energy").unwrap();
+    assert_eq!(energy_champ.pair.model, "ssd_v1");
+    assert_eq!(energy_champ.pair.device, "jetson_orin_nano");
+    let latency_champ =
+        rows.iter().find(|r| r.metric == "latency").unwrap();
+    assert_eq!(latency_champ.pair.device, "pi5_tpu");
+
+    // crowded-scene mAP champion must be a high-capacity model
+    let crowded = rows.iter().find(|r| r.metric == "map_g4").unwrap();
+    assert!(
+        crowded.pair.model.starts_with("yolov8"),
+        "crowded champion {:?}",
+        crowded.pair
+    );
+
+    // serve a small dataset through every router without error
+    let deployed = deployed_store(&h).unwrap();
+    let ds = coco::build(10, 42);
+    for spec in paper_routers() {
+        let m = run_router_on_dataset(&h, spec, &deployed, &ds).unwrap();
+        assert_eq!(m.requests, 10, "{}", spec.name);
+        assert!(m.total_energy_mwh() > 0.0);
+        assert!(m.total_latency_s > 0.0);
+    }
+}
+
+#[test]
+fn paper_shape_holds_on_small_run() {
+    let h = harness();
+    let deployed = deployed_store(&h).unwrap();
+    let ds = coco::build(h.cfg.coco_images, h.cfg.seed);
+
+    let run = |name: &str| {
+        run_router_on_dataset(
+            &h,
+            router_by_name(name).unwrap(),
+            &deployed,
+            &ds,
+        )
+        .unwrap()
+    };
+    let le = run("LE");
+    let li = run("LI");
+    let hmg = run("HMG");
+    let ed = run("ED");
+
+    // LE is the energy lower bound; LI the latency lower bound
+    for m in [&li, &hmg, &ed] {
+        assert!(m.total_energy_mwh() >= le.total_energy_mwh() * 0.99);
+        assert!(m.total_latency_s >= li.total_latency_s * 0.99);
+    }
+    // HMG beats LE on accuracy by a wide margin
+    assert!(hmg.map() > le.map() + 10.0);
+    // the proposed ED lands near HMG accuracy at lower energy
+    assert!(ed.map() > hmg.map() - 6.0);
+    assert!(ed.total_energy_mwh() < hmg.total_energy_mwh());
+    // ED pays a gateway overhead, LE doesn't
+    assert!(ed.gateway_energy_mwh > 0.0);
+    assert_eq!(le.gateway_energy_mwh, 0.0);
+}
+
+#[test]
+fn delta_relaxation_reduces_energy_monotonically() {
+    let h = harness();
+    let deployed = deployed_store(&h).unwrap();
+    let ds = coco::build(20, 9);
+    let spec = router_by_name("Orc").unwrap();
+    let mut prev = f64::INFINITY;
+    for delta in [0.0, 10.0, 30.0] {
+        let m =
+            run_router_with_delta(&h, spec, &deployed, &ds, delta).unwrap();
+        assert!(
+            m.total_energy_mwh() <= prev * 1.05,
+            "delta {delta}: energy went up: {} > {prev}",
+            m.total_energy_mwh()
+        );
+        prev = m.total_energy_mwh();
+    }
+}
+
+#[test]
+fn ob_wins_on_sorted_dataset_vs_shuffled() {
+    // the paper's Insight #2: OB thrives when consecutive images share
+    // object counts. Compare OB estimation error on sorted vs COCO.
+    let h = harness();
+    let deployed = deployed_store(&h).unwrap();
+    let sorted = balanced::build(6, 3);
+    let shuffled = coco::build(30, 3);
+    let spec = router_by_name("OB").unwrap();
+    let m_sorted =
+        run_router_on_dataset(&h, spec, &deployed, &sorted).unwrap();
+    let m_shuf =
+        run_router_on_dataset(&h, spec, &deployed, &shuffled).unwrap();
+    assert!(
+        m_sorted.mean_estimation_error() < m_shuf.mean_estimation_error(),
+        "sorted {} vs shuffled {}",
+        m_sorted.mean_estimation_error(),
+        m_shuf.mean_estimation_error()
+    );
+}
+
+#[test]
+fn video_protocol_runs_with_pseudo_labels() {
+    let h = harness();
+    let deployed = deployed_store(&h).unwrap();
+    let frames = video::build_frames(h.cfg.video_frames, 5);
+    let pseudo = workload::pseudo_annotate(&h.engine, &frames).unwrap();
+    let pool =
+        NodePool::deploy(&h.engine, &deployed.pairs(), &fleet(), 1).unwrap();
+    let mut gw = Gateway::new(
+        &h.engine,
+        router_by_name("OB").unwrap(),
+        deployed,
+        pool,
+        5.0,
+        1,
+    );
+    let m = workload::run_frames(&mut gw, &frames, &pseudo).unwrap();
+    assert_eq!(m.requests, frames.len());
+    // OB on temporally-continuous video: small estimation error
+    assert!(
+        m.mean_estimation_error() < 2.0,
+        "estimation error {}",
+        m.mean_estimation_error()
+    );
+    // accuracy against pseudo labels should be solid (the router picks
+    // strong models for crowded frames)
+    assert!(m.map() > 30.0, "video mAP {}", m.map());
+}
+
+#[test]
+fn failover_reroutes_when_node_dies() {
+    let h = harness();
+    let deployed = deployed_store(&h).unwrap();
+    let ds = coco::build(12, 5);
+    let spec = router_by_name("Orc").unwrap();
+    let pool = NodePool::deploy(
+        &h.engine,
+        &deployed.pairs(),
+        &fleet(),
+        1,
+    )
+    .unwrap();
+    let mut gw = Gateway::new(&h.engine, spec, deployed.clone(), pool, 5.0, 1);
+    // kill the crowded-group favourite
+    let favourite = ecore::router::GreedyRouter::new(5.0)
+        .route(&deployed, 4)
+        .unwrap();
+    assert!(gw.pool_mut().set_health(&favourite, false));
+    let m = workload::run_dataset(&mut gw, &ds).unwrap();
+    assert_eq!(m.requests, 12);
+    assert!(gw.fallbacks > 0, "expected fallbacks");
+    // the dead pair served nothing
+    assert!(!m.per_pair.contains_key(&favourite.to_string()));
+}
+
+#[test]
+fn all_nodes_down_is_an_error() {
+    let h = harness();
+    let deployed = deployed_store(&h).unwrap();
+    let pool =
+        NodePool::deploy(&h.engine, &deployed.pairs(), &fleet(), 1).unwrap();
+    let mut gw = Gateway::new(
+        &h.engine,
+        router_by_name("Orc").unwrap(),
+        deployed.clone(),
+        pool,
+        5.0,
+        1,
+    );
+    for p in deployed.pairs() {
+        gw.pool_mut().set_health(&p, false);
+    }
+    let s = ecore::dataset::scene::render_spec(&ecore::dataset::SceneSpec {
+        id: 0,
+        seed: 1,
+        n_objects: 1,
+    });
+    let mut m = ecore::metrics::RunMetrics::new("t");
+    assert!(gw.handle(&s.image, 1, &s.gt, &mut m).is_err());
+}
+
+#[test]
+fn batch_routing_saves_energy_at_equal_accuracy_shape() {
+    let h = harness();
+    let deployed = deployed_store(&h).unwrap();
+    let ds = coco::build(16, 6);
+    let scenes: Vec<_> = ds.iter_scenes().collect();
+
+    // per-request
+    let spec = router_by_name("Orc").unwrap();
+    let m_req =
+        run_router_on_dataset(&h, spec, &deployed, &ds).unwrap();
+
+    // batched (4)
+    let pool =
+        NodePool::deploy(&h.engine, &deployed.pairs(), &fleet(), 1).unwrap();
+    let mut gw = Gateway::new(&h.engine, spec, deployed.clone(), pool, 5.0, 1);
+    let mut m_batch = ecore::metrics::RunMetrics::new("batch");
+    for chunk in scenes.chunks(4) {
+        let images: Vec<_> = chunk
+            .iter()
+            .map(|s| (s.image.clone(), s.gt.len(), s.gt.clone()))
+            .collect();
+        gw.handle_batch(&images, &mut m_batch).unwrap();
+    }
+    assert_eq!(m_batch.requests, 16);
+    assert!(
+        m_batch.total_energy_mwh() < m_req.total_energy_mwh(),
+        "batching should amortize preprocessing: {} vs {}",
+        m_batch.total_energy_mwh(),
+        m_req.total_energy_mwh()
+    );
+}
+
+#[test]
+fn drifting_pool_costs_more_than_static() {
+    let h = harness();
+    let deployed = deployed_store(&h).unwrap();
+    let ds = coco::build(40, 8);
+    let spec = router_by_name("LE").unwrap();
+
+    let m_static =
+        run_router_on_dataset(&h, spec, &deployed, &ds).unwrap();
+
+    let pool =
+        NodePool::deploy(&h.engine, &deployed.pairs(), &fleet(), 1).unwrap();
+    let mut gw = Gateway::new(&h.engine, spec, deployed.clone(), pool, 5.0, 1);
+    gw.pool_mut().enable_drift(
+        &ecore::devices::drift::DriftConfig {
+            heat_per_busy_s: 50.0, // aggressive: throttle quickly
+            cool_per_idle_s: 0.0,
+            ..Default::default()
+        },
+        3,
+    );
+    let m_drift = workload::run_dataset(&mut gw, &ds).unwrap();
+    assert!(
+        m_drift.total_latency_s > m_static.total_latency_s,
+        "drift should slow the run: {} vs {}",
+        m_drift.total_latency_s,
+        m_static.total_latency_s
+    );
+}

@@ -1,0 +1,214 @@
+//! Property tests over the in-tree substrates: JSON round-trips under
+//! randomized structured values, profile-store invariants, chart
+//! robustness, and config/CLI interactions — the failure-injection side
+//! of the "build every substrate" rule.
+
+use ecore::router::{PairKey, PairProfile, ProfileStore};
+use ecore::util::json::{self, Json};
+use ecore::util::prop::forall_ok;
+use ecore::util::rng::Rng;
+
+fn random_json(r: &mut Rng, depth: usize) -> Json {
+    match if depth == 0 { r.below(4) } else { r.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(r.below(2) == 0),
+        2 => {
+            // round-trippable numbers: f64 with limited precision
+            let x = (r.range(-1e9, 1e9) * 1e3).round() / 1e3;
+            Json::Num(x)
+        }
+        3 => {
+            let len = r.below(12) as usize;
+            let s: String = (0..len)
+                .map(|_| {
+                    let c = r.below(96) as u8 + 32;
+                    c as char
+                })
+                .collect();
+            Json::Str(s)
+        }
+        4 => Json::Arr(
+            (0..r.below(5)).map(|_| random_json(r, depth - 1)).collect(),
+        ),
+        _ => Json::Obj(
+            (0..r.below(5))
+                .map(|i| {
+                    (format!("k{i}"), random_json(r, depth - 1))
+                })
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_fuzz() {
+    forall_ok(
+        71,
+        300,
+        |r| random_json(r, 3),
+        |v| {
+            let text = v.dump();
+            let back = json::parse(&text)
+                .map_err(|e| format!("reparse failed: {e} for {text}"))?;
+            if &back != v {
+                return Err(format!("roundtrip mismatch: {text}"));
+            }
+            // pretty form must parse to the same value too
+            let back2 = json::parse(&v.pretty())
+                .map_err(|e| format!("pretty reparse: {e}"))?;
+            if &back2 != v {
+                return Err("pretty mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_json_parser_never_panics_on_garbage() {
+    forall_ok(
+        72,
+        500,
+        |r| {
+            let len = r.below(40) as usize;
+            (0..len)
+                .map(|_| (r.below(128) as u8) as char)
+                .collect::<String>()
+        },
+        |s| {
+            let _ = json::parse(s); // must return, never panic
+            Ok(())
+        },
+    );
+}
+
+fn random_store(r: &mut Rng) -> ProfileStore {
+    let pairs = 1 + r.below(10) as usize;
+    let groups = 1 + r.below(5) as usize;
+    let mut rows = Vec::new();
+    for p in 0..pairs {
+        for g in 0..groups {
+            rows.push(PairProfile {
+                pair: PairKey::new(&format!("m{p}"), &format!("d{}", p % 3)),
+                group: g,
+                map: r.range(0.0, 100.0),
+                latency_s: r.range(1e-4, 2.0),
+                energy_mwh: r.range(1e-4, 1.0),
+            });
+        }
+    }
+    ProfileStore::new(rows)
+}
+
+#[test]
+fn prop_store_roundtrip_and_restrict_invariants() {
+    forall_ok(
+        73,
+        100,
+        |r| random_store(r),
+        |store| {
+            // JSON persistence round-trip preserves every row
+            let back = ProfileStore::from_json(&store.to_json())
+                .map_err(|e| e.to_string())?;
+            if back.rows().len() != store.rows().len() {
+                return Err("row count changed".into());
+            }
+            // restricting to all pairs is identity on the pair set
+            let all = store.pairs();
+            let same = store.restrict(&all);
+            if same.pairs() != all {
+                return Err("restrict(all) changed pairs".into());
+            }
+            // restricting to one pair leaves only its rows
+            let one = vec![all[0].clone()];
+            let r1 = store.restrict(&one);
+            if !r1.rows().iter().all(|row| row.pair == all[0]) {
+                return Err("restrict leaked foreign rows".into());
+            }
+            // group index is consistent
+            for g in store.groups() {
+                if store.group_rows(g).is_empty() {
+                    return Err(format!("indexed group {g} empty"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_chart_never_panics() {
+    forall_ok(
+        74,
+        100,
+        |r| {
+            let n = r.below(20) as usize;
+            let pts: Vec<(f64, f64)> = (0..n)
+                .map(|_| (r.range(-1e6, 1e6), r.range(-1e6, 1e6)))
+                .collect();
+            pts
+        },
+        |pts| {
+            let s = ecore::util::chart::line_chart(
+                "fuzz",
+                &[("s", pts.clone())],
+                40,
+                10,
+            );
+            if s.is_empty() {
+                return Err("empty chart".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_config_table_parse_stability() {
+    // generated key=value files always parse, and parsed numbers survive
+    forall_ok(
+        75,
+        100,
+        |r| {
+            let n = 1 + r.below(6) as usize;
+            let mut text = String::from("[s]\n");
+            let mut vals = Vec::new();
+            for i in 0..n {
+                let v = (r.range(-1e6, 1e6) * 100.0).round() / 100.0;
+                text.push_str(&format!("k{i} = {v}\n"));
+                vals.push(v);
+            }
+            (text, vals)
+        },
+        |(text, vals)| {
+            let t = ecore::config::Table::parse(text)
+                .map_err(|e| e.to_string())?;
+            for (i, v) in vals.iter().enumerate() {
+                let got = t.f64_or(&format!("s.k{i}"), f64::NAN);
+                if (got - v).abs() > 1e-9 {
+                    return Err(format!("k{i}: {got} != {v}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_group_rules_agree_with_store_labels() {
+    use ecore::router::GroupRules;
+    let rules = GroupRules::paper_default();
+    forall_ok(
+        76,
+        200,
+        |r| r.below(50) as usize,
+        |&count| {
+            let g = rules.group_of(count);
+            let expect = if count >= 4 { 4 } else { count };
+            if g != expect {
+                return Err(format!("count {count} -> group {g}"));
+            }
+            Ok(())
+        },
+    );
+}
