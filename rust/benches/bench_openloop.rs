@@ -1,0 +1,76 @@
+//! Open-loop simulator throughput: full discrete-event runs (arrival
+//! sampling → route with occupancy check → PJRT service → completion
+//! bookkeeping) over the real deployed testbed, at a low rate (no
+//! queueing, the closed-loop-equivalent regime) and at saturation
+//! (deep queues, fallback re-routes). The spread between the two is the
+//! pure event-queue + queueing-layer overhead.
+
+use ecore::config::ExperimentConfig;
+use ecore::dataset::{coco, GtBox, Scene};
+use ecore::experiments::serve::deployed_store;
+use ecore::experiments::Harness;
+use ecore::gateway::{router_by_name, Gateway};
+use ecore::nodes::NodePool;
+use ecore::util::bench::{black_box, Bench};
+use ecore::workload::openloop::{
+    run_frames, ArrivalProcess, OpenLoopConfig,
+};
+
+fn main() {
+    let cfg = ExperimentConfig {
+        profile_per_group: 12,
+        ..Default::default()
+    };
+    let h = Harness::new(cfg).unwrap();
+    let deployed = deployed_store(&h).unwrap();
+    let ds = coco::build(24, 7);
+    let frames: Vec<Scene> = ds.iter_scenes().collect();
+    let gts: Vec<Vec<GtBox>> =
+        frames.iter().map(|s| s.gt.clone()).collect();
+
+    let mut b = Bench::new("openloop");
+    for (router, rate, cap) in [
+        ("LE", 2.0, 8),
+        ("LE", 500.0, 64),
+        ("ED", 500.0, 64),
+        ("HMG", 500.0, 4),
+    ] {
+        let name = format!("{router}_rate{rate}_cap{cap}");
+        b.run(&name, || {
+            let pool = NodePool::deploy(
+                &h.engine,
+                &deployed.pairs(),
+                &ecore::devices::fleet(),
+                1,
+            )
+            .unwrap();
+            let mut gw = Gateway::new(
+                &h.engine,
+                router_by_name(router).unwrap(),
+                deployed.clone(),
+                pool,
+                5.0,
+                1,
+            );
+            let report = run_frames(
+                &mut gw,
+                &frames,
+                &gts,
+                &OpenLoopConfig {
+                    arrivals: ArrivalProcess::Poisson { rate_rps: rate },
+                    queue_capacity: cap,
+                    seed: 3,
+                },
+            )
+            .unwrap();
+            black_box(report.metrics.requests)
+        });
+    }
+
+    let (secs, count) = h.engine.exec_stats();
+    println!(
+        "engine totals: {count} inferences, {:.1} ms mean",
+        1000.0 * secs / count.max(1) as f64
+    );
+    b.finish();
+}

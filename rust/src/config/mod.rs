@@ -53,6 +53,13 @@ impl Value {
             _ => None,
         }
     }
+
+    pub fn as_f64_list(&self) -> Option<Vec<f64>> {
+        match self {
+            Value::Arr(v) => v.iter().map(|x| x.as_f64()).collect(),
+            _ => None,
+        }
+    }
 }
 
 /// `section.key -> value` table.
@@ -199,6 +206,13 @@ pub struct ExperimentConfig {
     pub profile_per_group: usize,
     pub seed: u64,
     pub routers: Vec<String>,
+    /// Open-loop serving: Poisson arrival rate for `serve --open-loop`
+    /// (req/s).
+    pub rate_rps: f64,
+    /// Open-loop serving: bounded per-node FIFO capacity.
+    pub queue_capacity: usize,
+    /// Arrival rates swept by the `openloop` saturation experiment.
+    pub open_rates: Vec<f64>,
 }
 
 impl Default for ExperimentConfig {
@@ -215,6 +229,9 @@ impl Default for ExperimentConfig {
                 .iter()
                 .map(|s| s.to_string())
                 .collect(),
+            rate_rps: 8.0,
+            queue_capacity: 8,
+            open_rates: vec![2.0, 8.0, 32.0],
         }
     }
 }
@@ -236,6 +253,13 @@ impl ExperimentConfig {
                 .get("experiment.routers")
                 .and_then(|v| v.as_str_list())
                 .unwrap_or(d.routers),
+            rate_rps: t.f64_or("experiment.rate_rps", d.rate_rps),
+            queue_capacity: t
+                .usize_or("experiment.queue_capacity", d.queue_capacity),
+            open_rates: t
+                .get("experiment.open_rates")
+                .and_then(|v| v.as_f64_list())
+                .unwrap_or(d.open_rates),
         }
     }
 
@@ -251,6 +275,12 @@ impl ExperimentConfig {
         self.seed = args.u64_or("seed", self.seed);
         if args.get("routers").is_some() {
             self.routers = args.list_or("routers", &[]);
+        }
+        self.rate_rps = args.f64_or("rate", self.rate_rps);
+        self.queue_capacity =
+            args.usize_or("queue-cap", self.queue_capacity);
+        if args.get("rates").is_some() {
+            self.open_rates = args.f64_list_or("rates", &[]);
         }
     }
 }

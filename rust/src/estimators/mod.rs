@@ -29,9 +29,23 @@ pub struct GatewayCost {
 /// Estimator kinds, including the paper's short labels.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum EstimatorKind {
+    /// §4.2 "Orc": the idealized benchmark — the ground-truth object
+    /// count arrives as request metadata, so estimation is free and
+    /// exact. Upper-bounds what any count estimator can contribute.
+    /// Also the stand-in estimator for the count-agnostic baselines
+    /// (RR, Rnd, LE, LI, HM) and the group input of HMG.
     Oracle,
+    /// §4.2 "ED" (paper §3.3.1): Canny edge map computed at the gateway
+    /// (AOT HLO artifact) + hysteresis linking + contour counting. The
+    /// cheapest *image-deriving* estimator — coarse counts, tiny cost.
     EdgeDetection,
+    /// §4.2 "SF" (paper §3.3.2): a tiny SSD front-end detector run at
+    /// the gateway; its detection count is the estimate. More accurate
+    /// than ED and proportionally more expensive.
     SsdFront,
+    /// §4.2 "OB" (paper §3.3.3): output-based feedback — reuse the
+    /// detection count of the *previous* routed response as the next
+    /// estimate. Zero gateway cost, one-request lag; starts at 0.
     OutputBased,
 }
 

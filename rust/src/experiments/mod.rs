@@ -11,11 +11,13 @@
 //! | `fig8`    | pedestrian-video comparison                      |
 //! | `fig9`    | delta_mAP sweep x {Orc, ED, SF, OB}              |
 //! | `overhead`| gateway overhead per router (§4.2)               |
+//! | `openloop`| open-loop saturation sweep (beyond the paper)    |
 //!
 //! Every driver prints the paper-style table and writes
 //! `results/<id>.json` for downstream plotting.
 
 pub mod ablations;
+pub mod openloop;
 pub mod serve;
 pub mod static_figs;
 pub mod sweep;
@@ -31,9 +33,9 @@ use crate::router::{GroupRules, ProfileStore};
 use crate::runtime::Engine;
 use crate::util::json::Json;
 
-pub const ALL_EXPERIMENTS: [&str; 9] = [
+pub const ALL_EXPERIMENTS: [&str; 10] = [
     "fig2", "fig4", "fig5", "table1", "fig6", "fig7", "fig8", "fig9",
-    "overhead",
+    "overhead", "openloop",
 ];
 
 /// Shared experiment context.
@@ -124,6 +126,7 @@ impl Harness {
             "fig8" => serve::fig8(self),
             "fig9" => sweep::fig9(self),
             "overhead" => serve::overhead(self),
+            "openloop" => openloop::openloop(self),
             "ablation_groups" => ablations::ablation_groups(self),
             "ablation_batch" => ablations::ablation_batch(self),
             "ablation_weighted" => ablations::ablation_weighted(self),

@@ -1,0 +1,135 @@
+//! Open-loop saturation sweep: all configured routers under rising
+//! Poisson arrival rates (DESIGN.md §6).
+//!
+//! For each (router, rate) cell the driver deploys a fresh Table-1
+//! pool, replays the same pre-rendered scene set through the
+//! discrete-event simulator, and reports tail latency (p50/p95/p99),
+//! mean queueing delay, shed requests, and fallback re-routes alongside
+//! the paper's energy/accuracy metrics. This is the experiment where
+//! policy choice shows up as *queueing* behaviour: single-endpoint
+//! policies (LE, LI, HM) saturate their champion node first, while the
+//! group-aware policies spread load across the pool.
+
+use anyhow::Result;
+
+use super::serve::{build_gateway, deployed_store, selected_routers};
+use super::Harness;
+use crate::dataset::{coco, GtBox, Scene};
+use crate::util::json::Json;
+use crate::workload::openloop::{
+    ArrivalProcess, OpenLoopConfig, OpenLoopReport,
+};
+
+/// Run one (router, rate) cell over shared pre-rendered frames.
+fn run_cell(
+    h: &Harness,
+    spec: crate::gateway::RouterSpec,
+    deployed: &crate::router::ProfileStore,
+    frames: &[Scene],
+    gts: &[Vec<GtBox>],
+    rate_rps: f64,
+) -> Result<OpenLoopReport> {
+    let mut gw = build_gateway(h, spec, deployed, h.cfg.delta_map)?;
+    crate::workload::openloop::run_frames(
+        &mut gw,
+        frames,
+        gts,
+        &OpenLoopConfig {
+            arrivals: ArrivalProcess::Poisson { rate_rps },
+            queue_capacity: h.cfg.queue_capacity,
+            seed: h.cfg.seed,
+        },
+    )
+    .map(|mut report| {
+        report.metrics.label = format!("{}@{rate_rps}", spec.name);
+        report
+    })
+}
+
+/// The `openloop` experiment: sweep arrival rate x router.
+pub fn openloop(h: &Harness) -> Result<()> {
+    // a quarter of the closed-loop panel size: the sweep runs
+    // routers x rates full cells. `--images` is honored down to 1.
+    let n = (h.cfg.coco_images / 4).max(1);
+    let ds = coco::build(n, h.cfg.seed ^ 0x0BE1);
+    let deployed = deployed_store(h)?;
+    let frames: Vec<Scene> = ds.iter_scenes().collect();
+    let gts: Vec<Vec<GtBox>> =
+        frames.iter().map(|s| s.gt.clone()).collect();
+    let rates = &h.cfg.open_rates;
+    eprintln!(
+        "[openloop] pool: {} pairs, {} images, rates {:?} req/s, queue cap {}",
+        deployed.pairs().len(),
+        frames.len(),
+        rates,
+        h.cfg.queue_capacity
+    );
+    println!("--- openloop (saturation sweep over {n} images) ---");
+    println!(
+        "{:<6} {:>8} {:>9} {:>9} {:>9} {:>10} {:>6} {:>6} {:>8} {:>12}",
+        "router",
+        "rate",
+        "p50_ms",
+        "p95_ms",
+        "p99_ms",
+        "qdelay_ms",
+        "drop",
+        "fallbk",
+        "mAP",
+        "energy_mWh"
+    );
+    let mut rows = Vec::new();
+    for &rate in rates {
+        for spec in selected_routers(h) {
+            let report = run_cell(h, spec, &deployed, &frames, &gts, rate)?;
+            let m = &report.metrics;
+            println!(
+                "{:<6} {:>8.1} {:>9.1} {:>9.1} {:>9.1} {:>10.1} {:>6} {:>6} {:>8.2} {:>12.2}",
+                spec.name,
+                rate,
+                1000.0 * m.latency_percentile(50.0),
+                1000.0 * m.latency_percentile(95.0),
+                1000.0 * m.latency_percentile(99.0),
+                1000.0 * m.mean_queue_delay_s(),
+                report.dropped,
+                report.fallbacks,
+                m.map(),
+                m.total_energy_mwh(),
+            );
+            rows.push(Json::obj(vec![
+                ("router", Json::str(spec.name)),
+                ("rate_rps", Json::num(rate)),
+                ("requests", Json::num(m.requests as f64)),
+                ("dropped", Json::num(report.dropped as f64)),
+                ("fallbacks", Json::num(report.fallbacks as f64)),
+                (
+                    "peak_in_flight",
+                    Json::num(report.peak_in_flight as f64),
+                ),
+                ("makespan_s", Json::num(report.makespan_s)),
+                ("goodput_rps", Json::num(report.goodput_rps())),
+                (
+                    "latency_p50_s",
+                    Json::num(m.latency_percentile(50.0)),
+                ),
+                (
+                    "latency_p95_s",
+                    Json::num(m.latency_percentile(95.0)),
+                ),
+                (
+                    "latency_p99_s",
+                    Json::num(m.latency_percentile(99.0)),
+                ),
+                ("queue_delay_s", Json::num(m.queue_delay_s)),
+                (
+                    "mean_queue_delay_s",
+                    Json::num(m.mean_queue_delay_s()),
+                ),
+                ("map", Json::num(m.map())),
+                ("energy_mwh", Json::num(m.total_energy_mwh())),
+            ]));
+        }
+        println!();
+    }
+    h.save_json("openloop", &Json::Arr(rows))
+}

@@ -19,6 +19,32 @@ use crate::util::json::Json;
 use crate::util::stats::pct_change;
 use crate::workload;
 
+/// Deploy a fresh pool over `deployed`'s pairs and wire one router —
+/// the single construction point shared by the closed-loop panels, the
+/// open-loop sweep, and the `serve` CLI, so every driver builds its
+/// gateway from the same fleet/seed recipe.
+pub fn build_gateway<'e>(
+    h: &'e Harness,
+    spec: RouterSpec,
+    deployed: &ProfileStore,
+    delta_map: f64,
+) -> Result<Gateway<'e>> {
+    let pool = NodePool::deploy(
+        &h.engine,
+        &deployed.pairs(),
+        &crate::devices::fleet(),
+        h.cfg.seed,
+    )?;
+    Ok(Gateway::new(
+        &h.engine,
+        spec,
+        deployed.clone(),
+        pool,
+        delta_map,
+        h.cfg.seed,
+    ))
+}
+
 /// Deploy pool + run one router over a dataset.
 pub fn run_router_on_dataset(
     h: &Harness,
@@ -37,20 +63,7 @@ pub fn run_router_with_delta(
     dataset: &Dataset,
     delta_map: f64,
 ) -> Result<RunMetrics> {
-    let pool = NodePool::deploy(
-        &h.engine,
-        &deployed.pairs(),
-        &crate::devices::fleet(),
-        h.cfg.seed,
-    )?;
-    let mut gw = Gateway::new(
-        &h.engine,
-        spec,
-        deployed.clone(),
-        pool,
-        delta_map,
-        h.cfg.seed,
-    );
+    let mut gw = build_gateway(h, spec, deployed, delta_map)?;
     workload::run_dataset(&mut gw, dataset)
 }
 
@@ -61,7 +74,7 @@ pub fn deployed_store(h: &Harness) -> Result<ProfileStore> {
     Ok(full.restrict(&testbed::pool(&rows)))
 }
 
-fn selected_routers(h: &Harness) -> Vec<RouterSpec> {
+pub(crate) fn selected_routers(h: &Harness) -> Vec<RouterSpec> {
     h.cfg
         .routers
         .iter()
@@ -93,20 +106,7 @@ fn router_panel(
         scenes.iter().map(|s| s.gt.clone()).collect();
     let mut runs = Vec::new();
     for spec in selected_routers(h) {
-        let pool = NodePool::deploy(
-            &h.engine,
-            &deployed.pairs(),
-            &crate::devices::fleet(),
-            h.cfg.seed,
-        )?;
-        let mut gw = Gateway::new(
-            &h.engine,
-            spec,
-            deployed.clone(),
-            pool,
-            h.cfg.delta_map,
-            h.cfg.seed,
-        );
+        let mut gw = build_gateway(h, spec, &deployed, h.cfg.delta_map)?;
         let m = workload::run_frames(&mut gw, &scenes, &gts)?;
         eprintln!(
             "[{id}] {:<4} mAP={:6.2} energy={:9.2} mWh latency={:8.2} s",
@@ -173,20 +173,7 @@ pub fn fig8(h: &Harness) -> Result<()> {
     );
     let mut runs = Vec::new();
     for spec in selected_routers(h) {
-        let pool = NodePool::deploy(
-            &h.engine,
-            &deployed.pairs(),
-            &crate::devices::fleet(),
-            h.cfg.seed,
-        )?;
-        let mut gw = Gateway::new(
-            &h.engine,
-            spec,
-            deployed.clone(),
-            pool,
-            h.cfg.delta_map,
-            h.cfg.seed,
-        );
+        let mut gw = build_gateway(h, spec, &deployed, h.cfg.delta_map)?;
         let m = workload::run_frames(&mut gw, &frames, &pseudo)?;
         eprintln!(
             "[fig8] {:<4} mAP={:6.2} energy={:9.2} latency={:8.2}",

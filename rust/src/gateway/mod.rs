@@ -11,9 +11,9 @@ use anyhow::{Context, Result};
 use crate::dataset::GtBox;
 use crate::detection::map::ImageEval;
 use crate::devices::{self, DeviceSpec};
-use crate::estimators::{Estimator, EstimatorKind};
+use crate::estimators::{Estimator, EstimatorKind, GatewayCost};
 use crate::metrics::RunMetrics;
-use crate::nodes::NodePool;
+use crate::nodes::{NodePool, NodeResponse};
 use crate::router::{GroupRules, PairKey, Policy, PolicyKind, ProfileStore};
 use crate::runtime::Engine;
 
@@ -60,6 +60,35 @@ pub struct RequestOutcome {
     pub group: usize,
     pub estimate: usize,
     pub detections: usize,
+}
+
+/// Marker error returned by [`Gateway::route`] when every feasible
+/// endpoint is down or at queue capacity. Open-loop drivers downcast
+/// to this (`err.is::<NoEndpoint>()`) to shed the request; any other
+/// routing error is real infrastructure failure and must propagate.
+#[derive(Clone, Copy, Debug)]
+pub struct NoEndpoint;
+
+impl std::fmt::Display for NoEndpoint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "no available endpoint: all deployed nodes are down or at queue capacity")
+    }
+}
+
+impl std::error::Error for NoEndpoint {}
+
+/// A routing decision: the admission-time half of a request, produced
+/// by [`Gateway::route`] and consumed by [`Gateway::finish`] once the
+/// backend response is in. Carrying the gateway-side estimation cost
+/// here lets the open-loop driver account it at arrival time while the
+/// dispatch happens arbitrarily later on the event clock.
+#[derive(Clone, Debug)]
+pub struct RoutedRequest {
+    pub pair: PairKey,
+    pub group: usize,
+    pub estimate: usize,
+    pub true_count: usize,
+    pub cost: GatewayCost,
 }
 
 /// A fully wired gateway.
@@ -124,7 +153,121 @@ impl<'e> Gateway<'e> {
         &self.pool
     }
 
-    /// Handle one request end to end, recording into `metrics`.
+    /// Admission phase: estimate + group + policy routing, skipping
+    /// unavailable endpoints. If the chosen node is down — or, in open
+    /// loop, its bounded queue is full — re-route over the store with
+    /// that pair removed (the next-best feasible pair), like a
+    /// health-checked LB. Re-routes count toward `fallbacks` once
+    /// routing succeeds; exhausting every endpoint yields the typed
+    /// [`NoEndpoint`] error (open-loop drivers shed on it).
+    ///
+    /// `true_count` is evaluation-side information feeding the Oracle
+    /// estimator (as request metadata, like the paper).
+    pub fn route(
+        &mut self,
+        image: &[f32],
+        true_count: usize,
+    ) -> Result<RoutedRequest> {
+        let (estimate, cost) = self.estimator.estimate(
+            self.engine,
+            &self.gateway_dev,
+            image,
+            true_count,
+        )?;
+        let group = self.rules.group_of(estimate);
+
+        let mut store_view = self.store.clone();
+        let mut pair = self
+            .policy
+            .route(&store_view, group)
+            .context("policy returned no endpoint")?;
+        // attempts are committed to `self.fallbacks` only when routing
+        // succeeds: re-routes that end in a shed request rescued
+        // nothing and must not inflate the fallback metric.
+        let mut attempts = 0;
+        while !self.pool.is_available(&pair) {
+            attempts += 1;
+            if attempts > self.pool.len() {
+                return Err(anyhow::Error::new(NoEndpoint));
+            }
+            let remaining: Vec<_> = store_view
+                .pairs()
+                .into_iter()
+                .filter(|p| p != &pair)
+                .collect();
+            store_view = store_view.restrict(&remaining);
+            pair = match self.policy.route(&store_view, group) {
+                Some(p) => p,
+                None => return Err(anyhow::Error::new(NoEndpoint)),
+            };
+        }
+        self.fallbacks += attempts;
+        Ok(RoutedRequest {
+            pair,
+            group,
+            estimate,
+            true_count,
+            cost,
+        })
+    }
+
+    /// Dispatch phase: execute one request on the routed node at time
+    /// `now_s` on the virtual clock (open-loop drivers pass their event
+    /// time; the closed loop passes its serial clock).
+    pub fn serve(
+        &mut self,
+        pair: &PairKey,
+        image: &[f32],
+        now_s: f64,
+    ) -> Result<NodeResponse> {
+        let node = self
+            .pool
+            .get(pair)
+            .with_context(|| format!("no deployed node for {pair}"))?;
+        node.process_at(self.engine, image, now_s)
+    }
+
+    /// Completion phase: feed the response back to the estimator (OB)
+    /// and record the request into `metrics`. `queue_delay_s` is the
+    /// time the request waited in the node's FIFO (0 in closed loop);
+    /// `gt` is used only for accuracy accounting.
+    pub fn finish(
+        &mut self,
+        routed: &RoutedRequest,
+        resp: NodeResponse,
+        gt: &[GtBox],
+        queue_delay_s: f64,
+        metrics: &mut RunMetrics,
+    ) -> RequestOutcome {
+        self.estimator.observe_response(resp.detections.len());
+        let n_det = resp.detections.len();
+        metrics.record_request(
+            &routed.pair,
+            routed.group,
+            routed.estimate,
+            routed.true_count,
+            routed.cost.latency_s,
+            routed.cost.energy_mwh,
+            resp.latency_s,
+            resp.energy_mwh,
+            devices::NETWORK_S,
+            ImageEval {
+                dets: resp.detections,
+                gt: gt.to_vec(),
+            },
+        );
+        metrics.record_queue_delay(queue_delay_s);
+        RequestOutcome {
+            pair: routed.pair.clone(),
+            group: routed.group,
+            estimate: routed.estimate,
+            detections: n_det,
+        }
+    }
+
+    /// Handle one request end to end, recording into `metrics` — the
+    /// closed-loop path: route, serve immediately on the serial virtual
+    /// clock, finish with zero queueing delay.
     ///
     /// `true_count` and `gt` are evaluation-side information: the former
     /// feeds the Oracle estimator (as request metadata, like the paper),
@@ -136,78 +279,11 @@ impl<'e> Gateway<'e> {
         gt: &[GtBox],
         metrics: &mut RunMetrics,
     ) -> Result<RequestOutcome> {
-        // 1) estimate + group
-        let (estimate, cost) = self.estimator.estimate(
-            self.engine,
-            &self.gateway_dev,
-            image,
-            true_count,
-        )?;
-        let group = self.rules.group_of(estimate);
-
-        // 2) route, skipping unhealthy endpoints: if the chosen node is
-        //    down, re-route over the store with that pair removed (the
-        //    next-best feasible pair), like a health-checked LB.
-        let mut store_view = self.store.clone();
-        let mut pair = self
-            .policy
-            .route(&store_view, group)
-            .context("policy returned no endpoint")?;
-        let mut attempts = 0;
-        while !self.pool.is_healthy(&pair) {
-            self.fallbacks += 1;
-            attempts += 1;
-            anyhow::ensure!(
-                attempts <= self.pool.len(),
-                "all deployed nodes are down"
-            );
-            let remaining: Vec<_> = store_view
-                .pairs()
-                .into_iter()
-                .filter(|p| p != &pair)
-                .collect();
-            store_view = store_view.restrict(&remaining);
-            pair = self
-                .policy
-                .route(&store_view, group)
-                .context("no healthy endpoint for group")?;
-        }
-
-        // 3) dispatch on the virtual clock
-        let now = self.now_s;
-        let node = self
-            .pool
-            .get(&pair)
-            .with_context(|| format!("no deployed node for {pair}"))?;
-        let resp = node.process_at(self.engine, image, now)?;
-
-        // 4) feed back to the estimator (OB)
-        self.estimator.observe_response(resp.detections.len());
-
-        let n_det = resp.detections.len();
+        let routed = self.route(image, true_count)?;
+        let resp = self.serve(&routed.pair, image, self.now_s)?;
         self.now_s +=
-            cost.latency_s + resp.latency_s + devices::NETWORK_S;
-        metrics.record_request(
-            &pair,
-            group,
-            estimate,
-            true_count,
-            cost.latency_s,
-            cost.energy_mwh,
-            resp.latency_s,
-            resp.energy_mwh,
-            devices::NETWORK_S,
-            ImageEval {
-                dets: resp.detections,
-                gt: gt.to_vec(),
-            },
-        );
-        Ok(RequestOutcome {
-            pair,
-            group,
-            estimate,
-            detections: n_det,
-        })
+            routed.cost.latency_s + resp.latency_s + devices::NETWORK_S;
+        Ok(self.finish(&routed, resp, gt, 0.0, metrics))
     }
 }
 

@@ -19,9 +19,11 @@
 //! * [`estimators`] — object-count estimators: Oracle, ED, SF, OB.
 //! * [`nodes`] — backend edge-node pool bound to the PJRT engine.
 //! * [`gateway`] — the serving loop gluing estimator → router → node.
-//! * [`workload`] — closed-loop (piggy-backed) request driver.
+//! * [`workload`] — closed-loop (piggy-backed) request driver, plus the
+//!   open-loop discrete-event concurrent driver ([`workload::openloop`]).
 //! * [`metrics`] — energy/latency/accuracy accounting and reports.
-//! * [`experiments`] — one driver per paper table/figure.
+//! * [`experiments`] — one driver per paper table/figure, plus the
+//!   open-loop saturation sweep.
 
 pub mod config;
 pub mod dataset;

@@ -3,13 +3,15 @@
 //! Subcommands:
 //!   profile     build the 8x8x5 profiling grid and print Table-1 picks
 //!   experiment  run a paper experiment: fig2|fig4|fig5|table1|fig6|fig7|
-//!               fig8|fig9|overhead|all
-//!   serve       route one dataset through a chosen router and report
+//!               fig8|fig9|overhead|openloop|all
+//!   serve       route one dataset through a chosen router and report;
+//!               `--open-loop` switches to concurrent Poisson arrivals
 //!   list        list models, devices, routers
 //!
 //! Common options: --delta <mAP pts> --images <n> --per-group <n>
 //! --frames <n> --profile-per-group <n> --seed <n> --routers a,b,c
-//! --config <file.toml>
+//! --config <file.toml>; open-loop options: --rate <req/s>
+//! --queue-cap <n> --rates r1,r2,r3
 
 use anyhow::Result;
 
@@ -24,10 +26,12 @@ ecore — energy-conscious optimized routing (paper reproduction)
 USAGE:
   ecore profile    [--profile-per-group N] [--seed S]
   ecore experiment <id|all> [--images N] [--delta D] [--routers a,b,c]
+                   [--rates r1,r2,r3] [--queue-cap N]
   ecore serve      [--router ED] [--dataset coco|balanced] [--images N]
+                   [--open-loop] [--rate R] [--queue-cap N]
   ecore list
 
-experiments: fig2 fig4 fig5 table1 fig6 fig7 fig8 fig9 overhead
+experiments: fig2 fig4 fig5 table1 fig6 fig7 fig8 fig9 overhead openloop
 ";
 
 fn main() -> Result<()> {
@@ -94,6 +98,55 @@ fn main() -> Result<()> {
                     "unknown dataset '{other}' (coco|balanced; video is fig8)"
                 ),
             };
+            if args.flag("open-loop") {
+                let mut gw = ecore::experiments::serve::build_gateway(
+                    &h,
+                    spec,
+                    &deployed,
+                    h.cfg.delta_map,
+                )?;
+                let report = ecore::workload::openloop::run_dataset(
+                    &mut gw,
+                    &dataset,
+                    &ecore::workload::openloop::OpenLoopConfig {
+                        arrivals:
+                            ecore::workload::openloop::ArrivalProcess::Poisson {
+                                rate_rps: h.cfg.rate_rps,
+                            },
+                        queue_capacity: h.cfg.queue_capacity,
+                        seed: h.cfg.seed,
+                    },
+                )?;
+                let m = &report.metrics;
+                println!(
+                    "--- serve --open-loop ({} @ {} req/s, queue cap {}) ---",
+                    spec.name, h.cfg.rate_rps, h.cfg.queue_capacity
+                );
+                println!(
+                    "served {}/{} (dropped {}, fallbacks {}), goodput {:.2} req/s over {:.2} s",
+                    m.requests,
+                    report.offered,
+                    report.dropped,
+                    report.fallbacks,
+                    report.goodput_rps(),
+                    report.makespan_s
+                );
+                println!(
+                    "latency p50/p95/p99 = {:.1}/{:.1}/{:.1} ms, mean queue delay {:.1} ms, peak in-flight {}",
+                    1000.0 * m.latency_percentile(50.0),
+                    1000.0 * m.latency_percentile(95.0),
+                    1000.0 * m.latency_percentile(99.0),
+                    1000.0 * m.mean_queue_delay_s(),
+                    report.peak_in_flight
+                );
+                println!(
+                    "mAP {:.2}, energy {:.2} mWh (gateway {:.3} mWh)",
+                    m.map(),
+                    m.total_energy_mwh(),
+                    m.gateway_energy_mwh
+                );
+                return Ok(());
+            }
             let m = ecore::experiments::serve::run_router_on_dataset(
                 &h, spec, &deployed, &dataset,
             )?;

@@ -7,6 +7,7 @@ use std::collections::BTreeMap;
 use crate::detection::map::{map_coco, ImageEval};
 use crate::router::PairKey;
 use crate::util::json::Json;
+use crate::util::stats::percentile;
 
 /// Accumulated measurements for one routing run.
 #[derive(Clone, Debug, Default)]
@@ -30,6 +31,13 @@ pub struct RunMetrics {
     /// Estimation error statistics (|estimate - truth|).
     pub est_abs_err_sum: f64,
     pub requests: usize,
+    /// Total open-loop queueing delay (s): time spent waiting in a
+    /// node's bounded FIFO before service. Always 0 under the
+    /// closed-loop protocol (one request in flight at a time).
+    pub queue_delay_s: f64,
+    /// Per-request end-to-end latency samples (gateway + queueing +
+    /// service + network), for the p50/p95/p99 tail reports.
+    pub latency_samples: Vec<f64>,
 }
 
 impl RunMetrics {
@@ -62,8 +70,22 @@ impl RunMetrics {
         self.backend_energy_mwh += backend_energy_mwh;
         self.total_latency_s +=
             gateway_latency_s + backend_latency_s + network_s;
+        self.latency_samples
+            .push(gateway_latency_s + backend_latency_s + network_s);
         self.est_abs_err_sum += estimate.abs_diff(truth) as f64;
         self.images.push(eval);
+    }
+
+    /// Account queueing delay for the most recently recorded request
+    /// (open-loop runs call this right after `record_request`). The
+    /// delay joins both the request's end-to-end latency sample and the
+    /// run's total latency.
+    pub fn record_queue_delay(&mut self, delay_s: f64) {
+        self.queue_delay_s += delay_s;
+        self.total_latency_s += delay_s;
+        if let Some(last) = self.latency_samples.last_mut() {
+            *last += delay_s;
+        }
     }
 
     /// Total dynamic energy (paper's headline energy metric).
@@ -84,6 +106,20 @@ impl RunMetrics {
         }
     }
 
+    /// End-to-end latency percentile, `p` in [0, 100].
+    pub fn latency_percentile(&self, p: f64) -> f64 {
+        percentile(&self.latency_samples, p)
+    }
+
+    /// Mean per-request queueing delay (s); 0 for closed-loop runs.
+    pub fn mean_queue_delay_s(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.queue_delay_s / self.requests as f64
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("label", Json::str(&self.label)),
@@ -100,6 +136,10 @@ impl RunMetrics {
             ),
             ("total_latency_s", Json::num(self.total_latency_s)),
             ("gateway_latency_s", Json::num(self.gateway_latency_s)),
+            ("queue_delay_s", Json::num(self.queue_delay_s)),
+            ("latency_p50_s", Json::num(self.latency_percentile(50.0))),
+            ("latency_p95_s", Json::num(self.latency_percentile(95.0))),
+            ("latency_p99_s", Json::num(self.latency_percentile(99.0))),
             (
                 "mean_est_abs_err",
                 Json::num(self.mean_estimation_error()),
@@ -207,6 +247,38 @@ mod tests {
         assert!((m.map() - 100.0).abs() < 1e-9);
         let j = m.to_json();
         assert_eq!(j.req("requests").unwrap().as_usize(), Some(2));
+    }
+
+    #[test]
+    fn queue_delay_and_percentiles() {
+        let mut m = RunMetrics::new("open");
+        let pair = PairKey::new("ssd_v1", "pi5");
+        for i in 0..4 {
+            m.record_request(
+                &pair,
+                0,
+                0,
+                0,
+                0.0,
+                0.0,
+                0.010 * (i + 1) as f64,
+                0.001,
+                0.0,
+                eval_perfect(),
+            );
+            m.record_queue_delay(0.005 * i as f64);
+        }
+        // samples: 0.010, 0.025, 0.040, 0.055
+        assert!((m.queue_delay_s - 0.030).abs() < 1e-12);
+        assert!((m.mean_queue_delay_s() - 0.0075).abs() < 1e-12);
+        assert!((m.latency_percentile(0.0) - 0.010).abs() < 1e-12);
+        assert!((m.latency_percentile(50.0) - 0.0325).abs() < 1e-12);
+        assert!((m.latency_percentile(100.0) - 0.055).abs() < 1e-12);
+        // queue delay joins the total-latency accounting
+        assert!((m.total_latency_s - 0.130).abs() < 1e-12);
+        let j = m.to_json();
+        assert!(j.req("latency_p95_s").is_ok());
+        assert!(j.req("queue_delay_s").is_ok());
     }
 
     #[test]

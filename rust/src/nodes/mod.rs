@@ -19,6 +19,12 @@ use crate::util::rng::Rng;
 /// Multiplicative latency jitter amplitude (+/-3%).
 const JITTER: f64 = 0.03;
 
+/// Default bounded per-node FIFO capacity (in-service slot included).
+/// Closed-loop runs never hold more than one request in the system, so
+/// any capacity >= 1 leaves the piggybacked protocol untouched; the
+/// open-loop driver overrides this via [`NodePool::set_queue_capacity`].
+pub const DEFAULT_QUEUE_CAPACITY: usize = 8;
+
 /// Result of processing one request on a node.
 #[derive(Clone, Debug)]
 pub struct NodeResponse {
@@ -40,6 +46,10 @@ pub struct EdgeNode {
     /// Health flag: failed nodes reject requests and the gateway falls
     /// back to the next-best feasible pair (failure injection in tests).
     pub healthy: bool,
+    /// Requests currently in this node's system (queued + in service).
+    /// Maintained by the open-loop driver via [`NodePool::acquire`] /
+    /// [`NodePool::release`]; stays 0 under the closed-loop protocol.
+    pub in_flight: usize,
     /// Optional runtime drift (paper Future Work #1); None = static.
     drift: Option<DriftModel>,
     /// Virtual timestamp of the last service completion (for idle gaps).
@@ -65,6 +75,7 @@ impl EdgeNode {
             rng: Rng::new(seed),
             requests_served: 0,
             healthy: true,
+            in_flight: 0,
             drift: None,
             last_busy_end_s: 0.0,
             heat_buf: Vec::new(),
@@ -129,6 +140,8 @@ impl EdgeNode {
 /// The deployed pool, indexed by pair.
 pub struct NodePool {
     nodes: Vec<EdgeNode>,
+    /// Bounded FIFO capacity shared by every node (queued + in service).
+    queue_capacity: usize,
 }
 
 impl NodePool {
@@ -155,7 +168,10 @@ impl NodePool {
         let names: Vec<&str> =
             pairs.iter().map(|p| p.model.as_str()).collect();
         engine.preload(&names)?;
-        Ok(Self { nodes })
+        Ok(Self {
+            nodes,
+            queue_capacity: DEFAULT_QUEUE_CAPACITY,
+        })
     }
 
     pub fn len(&self) -> usize {
@@ -196,12 +212,66 @@ impl NodePool {
         }
     }
 
+    /// Health only — ignores queue occupancy. Admission decisions
+    /// should use [`NodePool::is_available`] instead.
     pub fn is_healthy(&self, pair: &PairKey) -> bool {
         self.nodes
             .iter()
             .find(|n| &n.pair == pair)
             .map(|n| n.healthy)
             .unwrap_or(false)
+    }
+
+    /// Bounded FIFO capacity per node (queued + in service).
+    pub fn queue_capacity(&self) -> usize {
+        self.queue_capacity
+    }
+
+    /// Set the per-node queue bound (>= 1). The open-loop driver sets
+    /// this from its config; the closed loop never exceeds depth 1.
+    pub fn set_queue_capacity(&mut self, capacity: usize) {
+        self.queue_capacity = capacity.max(1);
+    }
+
+    /// Requests currently in `pair`'s system (queued + in service);
+    /// 0 for unknown pairs.
+    pub fn queue_depth(&self, pair: &PairKey) -> usize {
+        self.nodes
+            .iter()
+            .find(|n| &n.pair == pair)
+            .map(|n| n.in_flight)
+            .unwrap_or(0)
+    }
+
+    /// Can `pair` accept a new request? Healthy *and* below the queue
+    /// bound — the routing-time admission check for both loops (closed
+    /// loop: depth is always 0, so this reduces to the health check).
+    pub fn is_available(&self, pair: &PairKey) -> bool {
+        self.nodes
+            .iter()
+            .find(|n| &n.pair == pair)
+            .map(|n| n.healthy && n.in_flight < self.queue_capacity)
+            .unwrap_or(false)
+    }
+
+    /// Claim one queue slot on `pair` (arrival admitted by the router).
+    /// Returns false if the pair is unknown or already at capacity.
+    pub fn acquire(&mut self, pair: &PairKey) -> bool {
+        let cap = self.queue_capacity;
+        if let Some(n) = self.nodes.iter_mut().find(|n| &n.pair == pair) {
+            if n.in_flight < cap {
+                n.in_flight += 1;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Free one queue slot on `pair` (response left the system).
+    pub fn release(&mut self, pair: &PairKey) {
+        if let Some(n) = self.nodes.iter_mut().find(|n| &n.pair == pair) {
+            n.in_flight = n.in_flight.saturating_sub(1);
+        }
     }
 }
 
@@ -261,6 +331,33 @@ mod tests {
             .unwrap();
         assert!(r.detections.is_empty()); // constant image
         assert!(r.latency_s > 0.0);
+    }
+
+    #[test]
+    fn queue_occupancy_bounds_availability() {
+        let e = engine();
+        let fleet = devices::fleet();
+        let pair = PairKey::new("ssd_v1", "jetson_orin_nano");
+        let mut pool =
+            NodePool::deploy(&e, &[pair.clone()], &fleet, 1).unwrap();
+        pool.set_queue_capacity(2);
+        assert_eq!(pool.queue_depth(&pair), 0);
+        assert!(pool.is_available(&pair));
+        assert!(pool.acquire(&pair));
+        assert!(pool.acquire(&pair));
+        // at capacity: full, and a further acquire is rejected
+        assert_eq!(pool.queue_depth(&pair), 2);
+        assert!(!pool.is_available(&pair));
+        assert!(!pool.acquire(&pair));
+        pool.release(&pair);
+        assert!(pool.is_available(&pair));
+        // unhealthy trumps free capacity
+        pool.set_health(&pair, false);
+        assert!(!pool.is_available(&pair));
+        // unknown pairs are never available and release is a no-op
+        let ghost = PairKey::new("ssd_v1", "pi3");
+        assert!(!pool.is_available(&ghost));
+        pool.release(&ghost);
     }
 
     #[test]

@@ -10,19 +10,29 @@ use crate::util::rng::Rng;
 /// All routing strategies evaluated in the paper.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PolicyKind {
-    /// Algorithm 1 over the estimated group (used by Orc/ED/SF/OB).
+    /// The paper's proposed Algorithm 1 (§3.2): within the estimated
+    /// group, keep pairs whose mAP is within `delta_mAP` of the group
+    /// maximum and pick the lowest-energy survivor. Backs the §4.2
+    /// "Orc", "ED", "SF", and "OB" router configurations (which differ
+    /// only in their estimator).
     Greedy,
-    /// Round-robin over the deployed pairs.
+    /// §4.2 baseline "RR": round-robin over the deployed pairs,
+    /// count-agnostic. The classic fairness baseline.
     RoundRobin,
-    /// Uniform random pair.
+    /// §4.2 baseline "Rnd": uniform random pair per request,
+    /// count-agnostic.
     Random,
-    /// Always the globally lowest-energy pair.
+    /// §4.2 baseline "LE": always the pair with the lowest mean
+    /// profiled energy — the energy lower bound of every panel.
     LowestEnergy,
-    /// Always the lowest-latency pair.
+    /// §4.2 baseline "LI": always the pair with the lowest mean
+    /// profiled inference latency.
     LowestInference,
-    /// Highest overall mAP, group-agnostic.
+    /// §4.2 baseline "HM": the pair with the highest overall mAP,
+    /// group-agnostic — the accuracy-centric static choice.
     HighestMap,
-    /// Highest mAP within the estimated group.
+    /// §4.2 baseline "HMG": the highest-mAP pair *within the estimated
+    /// group* — the accuracy upper bound the paper normalizes against.
     HighestMapPerGroup,
 }
 

@@ -52,7 +52,15 @@ impl Args {
     pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
         Self::parse_with_flags(
             argv,
-            &["verbose", "quick", "full", "help", "quiet", "no-cache"],
+            &[
+                "verbose",
+                "quick",
+                "full",
+                "help",
+                "quiet",
+                "no-cache",
+                "open-loop",
+            ],
         )
     }
 
@@ -91,6 +99,17 @@ impl Args {
         match self.get(name) {
             Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
             None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    /// Comma-separated numeric list option (non-numeric items skipped).
+    pub fn f64_list_or(&self, name: &str, default: &[f64]) -> Vec<f64> {
+        match self.get(name) {
+            Some(v) => v
+                .split(',')
+                .filter_map(|s| s.trim().parse().ok())
+                .collect(),
+            None => default.to_vec(),
         }
     }
 }
@@ -132,6 +151,20 @@ mod tests {
     fn list_parsing() {
         let a = args(&["--routers", "orc, ed,ob"]);
         assert_eq!(a.list_or("routers", &[]), vec!["orc", "ed", "ob"]);
+    }
+
+    #[test]
+    fn f64_list_parsing() {
+        let a = args(&["--rates", "2, 8,32.5"]);
+        assert_eq!(a.f64_list_or("rates", &[]), vec![2.0, 8.0, 32.5]);
+        assert_eq!(a.f64_list_or("missing", &[1.5]), vec![1.5]);
+    }
+
+    #[test]
+    fn open_loop_is_a_flag() {
+        let a = args(&["--open-loop", "serve-me"]);
+        assert!(a.flag("open-loop"));
+        assert_eq!(a.positional, vec!["serve-me"]);
     }
 
     #[test]

@@ -1,7 +1,16 @@
-//! Closed-loop workload driver — the paper's Locust substitute (§4.2):
-//! requests are sent "back-to-back in a piggybacked fashion", each fired
-//! only after the previous response arrives, so total latency is the sum
-//! of per-request service times on a virtual clock.
+//! Workload drivers.
+//!
+//! The functions in this module implement the *closed-loop* protocol —
+//! the paper's Locust substitute (§4.2): requests are sent
+//! "back-to-back in a piggybacked fashion", each fired only after the
+//! previous response arrives, so total latency is the sum of
+//! per-request service times on a virtual clock.
+//!
+//! [`openloop`] is the concurrent-serving counterpart: a discrete-event
+//! simulator firing Poisson/paced/trace arrivals at a configurable rate
+//! with bounded per-node FIFO queues (DESIGN.md §6).
+
+pub mod openloop;
 
 use anyhow::Result;
 

@@ -1,0 +1,552 @@
+//! Open-loop concurrent workload driver (DESIGN.md §6).
+//!
+//! Where the closed loop fires each request only after the previous
+//! response arrives, the open loop models *offered* traffic: arrivals
+//! fire at a configurable rate regardless of completions, many requests
+//! are in flight at once, and each edge node serves a bounded FIFO
+//! queue. Busy nodes accumulate queueing delay; a full queue triggers
+//! the gateway's existing fallback re-route path, and a request finding
+//! every feasible queue full is dropped (load shedding). This is the
+//! regime where the paper's routing policies actually diverge under
+//! load — a router that piles requests onto the single lowest-energy
+//! node pays for it in tail latency once the arrival rate approaches
+//! that node's service rate.
+//!
+//! The driver is a deterministic discrete-event simulator: a binary
+//! min-heap of (virtual time, sequence) events over the same virtual
+//! clock the rest of ECORE uses. Arrival times come from a seeded
+//! [`ArrivalProcess`]; service times come from the node models (real
+//! PJRT inference + simulated device cost), so a whole run replays
+//! bit-identically from its seeds.
+
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap, VecDeque};
+
+use anyhow::Result;
+
+use crate::dataset::{Dataset, GtBox, Scene};
+use crate::devices;
+use crate::gateway::{Gateway, RoutedRequest};
+use crate::metrics::RunMetrics;
+use crate::nodes::NodeResponse;
+use crate::router::PairKey;
+use crate::util::rng::Rng;
+
+/// How requests arrive at the gateway.
+#[derive(Clone, Debug)]
+pub enum ArrivalProcess {
+    /// Poisson arrivals: exponential inter-arrival times at `rate_rps`.
+    Poisson { rate_rps: f64 },
+    /// Deterministic pacing: one arrival every `gap_s` seconds.
+    Uniform { gap_s: f64 },
+    /// Trace replay: explicit arrival timestamps (s), nondecreasing.
+    /// Extra requests beyond the trace reuse its last gap.
+    Trace(Vec<f64>),
+}
+
+impl ArrivalProcess {
+    /// Materialize `n` arrival timestamps, deterministic in `seed`.
+    pub fn times(&self, n: usize, seed: u64) -> Vec<f64> {
+        match self {
+            ArrivalProcess::Poisson { rate_rps } => {
+                let mut rng = Rng::new(seed ^ 0x09E2_7A11);
+                let mut t = 0.0;
+                (0..n)
+                    .map(|_| {
+                        // inverse-CDF exponential sample; 1 - u in (0, 1]
+                        t += -(1.0 - rng.f64()).ln() / rate_rps.max(1e-9);
+                        t
+                    })
+                    .collect()
+            }
+            ArrivalProcess::Uniform { gap_s } => {
+                (0..n).map(|i| (i + 1) as f64 * gap_s).collect()
+            }
+            ArrivalProcess::Trace(ts) => {
+                let mut out: Vec<f64> = ts.iter().copied().take(n).collect();
+                let last_gap = match ts.len() {
+                    0 => 1.0,
+                    1 => ts[0],
+                    k => ts[k - 1] - ts[k - 2],
+                };
+                while out.len() < n {
+                    let last = out.last().copied().unwrap_or(0.0);
+                    out.push(last + last_gap.max(1e-9));
+                }
+                out
+            }
+        }
+    }
+}
+
+/// Configuration of one open-loop run.
+#[derive(Clone, Debug)]
+pub struct OpenLoopConfig {
+    pub arrivals: ArrivalProcess,
+    /// Bounded per-node FIFO capacity (the in-service slot included).
+    pub queue_capacity: usize,
+    /// Seed for the arrival process (independent of the gateway seed).
+    pub seed: u64,
+}
+
+impl Default for OpenLoopConfig {
+    fn default() -> Self {
+        Self {
+            arrivals: ArrivalProcess::Poisson { rate_rps: 8.0 },
+            queue_capacity: 8,
+            seed: 7,
+        }
+    }
+}
+
+/// Outcome of one open-loop run.
+#[derive(Clone, Debug)]
+pub struct OpenLoopReport {
+    /// Per-request accounting (energy, accuracy, queue delay, latency
+    /// percentiles) over the *served* requests.
+    pub metrics: RunMetrics,
+    /// Requests offered by the arrival process (served + dropped).
+    pub offered: usize,
+    /// Requests shed because every feasible queue was full.
+    pub dropped: usize,
+    /// Virtual time at which the last response left the system (s).
+    pub makespan_s: f64,
+    /// Peak number of requests simultaneously in the system.
+    pub peak_in_flight: usize,
+    /// Fallback re-routes during this run (down or queue-full nodes),
+    /// snapshotted from the gateway's cumulative counter.
+    pub fallbacks: usize,
+}
+
+impl OpenLoopReport {
+    /// Served throughput over the run's virtual wall-clock (req/s).
+    pub fn goodput_rps(&self) -> f64 {
+        if self.makespan_s > 0.0 {
+            self.metrics.requests as f64 / self.makespan_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// One event on the virtual clock. Ordered by (time, sequence) so ties
+/// resolve in insertion order and the whole run is deterministic.
+struct Event {
+    t: f64,
+    seq: u64,
+    kind: EventKind,
+}
+
+enum EventKind {
+    /// Request `idx` arrives at the gateway.
+    Arrival(usize),
+    /// The in-service request on this node's queue completes.
+    Completion(PairKey),
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq && self.t.total_cmp(&other.t).is_eq()
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.t.total_cmp(&other.t).then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// A request admitted to a node's FIFO, waiting for service.
+struct Pending {
+    routed: RoutedRequest,
+    idx: usize,
+    arrival_s: f64,
+}
+
+/// The request a node is currently serving; the inference already ran
+/// (its result is part of the completion event's payload).
+struct InService {
+    routed: RoutedRequest,
+    idx: usize,
+    arrival_s: f64,
+    start_s: f64,
+    resp: NodeResponse,
+}
+
+/// Per-node serving state: one in-service slot + FIFO backlog.
+#[derive(Default)]
+struct NodeQueue {
+    serving: Option<InService>,
+    backlog: VecDeque<Pending>,
+}
+
+/// Drive a gateway over pre-rendered frames under open-loop arrivals.
+///
+/// `pseudo_gt[i]` doubles as the evaluation ground truth and the Oracle
+/// estimator's request metadata, exactly like the closed-loop driver.
+pub fn run_frames(
+    gw: &mut Gateway<'_>,
+    frames: &[Scene],
+    pseudo_gt: &[Vec<GtBox>],
+    cfg: &OpenLoopConfig,
+) -> Result<OpenLoopReport> {
+    anyhow::ensure!(frames.len() == pseudo_gt.len());
+    gw.pool_mut().set_queue_capacity(cfg.queue_capacity);
+    let fallbacks_before = gw.fallbacks;
+
+    let mut metrics = RunMetrics::new(gw.spec.name);
+    let mut heap: BinaryHeap<Reverse<Event>> = BinaryHeap::new();
+    let mut queues: BTreeMap<PairKey, NodeQueue> = BTreeMap::new();
+    let mut seq = 0u64;
+    for (idx, t) in cfg
+        .arrivals
+        .times(frames.len(), cfg.seed)
+        .into_iter()
+        .enumerate()
+    {
+        heap.push(Reverse(Event {
+            t,
+            seq,
+            kind: EventKind::Arrival(idx),
+        }));
+        seq += 1;
+    }
+
+    let mut dropped = 0usize;
+    let mut in_flight = 0usize;
+    let mut peak_in_flight = 0usize;
+    let mut makespan_s = 0.0f64;
+
+    while let Some(Reverse(ev)) = heap.pop() {
+        match ev.kind {
+            EventKind::Arrival(idx) => {
+                let scene = &frames[idx];
+                let true_count = pseudo_gt[idx].len();
+                // route() observes per-node occupancy: full or unhealthy
+                // nodes are skipped via the fallback path; if no feasible
+                // endpoint has a free slot, the request is shed. Any
+                // other routing error (estimator inference failure,
+                // misconfigured store) is real and aborts the run.
+                let routed = match gw.route(&scene.image, true_count) {
+                    Ok(r) => r,
+                    Err(e) if e.is::<crate::gateway::NoEndpoint>() => {
+                        dropped += 1;
+                        continue;
+                    }
+                    Err(e) => return Err(e),
+                };
+                let admitted = gw.pool_mut().acquire(&routed.pair);
+                debug_assert!(
+                    admitted,
+                    "route() returned a pair without a free slot"
+                );
+                in_flight += 1;
+                peak_in_flight = peak_in_flight.max(in_flight);
+                let pair = routed.pair.clone();
+                queues.entry(pair.clone()).or_default().backlog.push_back(
+                    Pending {
+                        routed,
+                        idx,
+                        arrival_s: ev.t,
+                    },
+                );
+                start_next(gw, frames, &mut queues, &mut heap, &mut seq, &pair, ev.t)?;
+            }
+            EventKind::Completion(pair) => {
+                let q = queues
+                    .get_mut(&pair)
+                    .expect("completion for unknown queue");
+                let done = q
+                    .serving
+                    .take()
+                    .expect("completion with no in-service request");
+                gw.pool_mut().release(&pair);
+                in_flight -= 1;
+                makespan_s = makespan_s.max(ev.t);
+                // FIFO wait: service start minus the moment the request
+                // cleared gateway-side estimation.
+                let queue_delay_s = (done.start_s
+                    - (done.arrival_s + done.routed.cost.latency_s))
+                    .max(0.0);
+                gw.finish(
+                    &done.routed,
+                    done.resp,
+                    &pseudo_gt[done.idx],
+                    queue_delay_s,
+                    &mut metrics,
+                );
+                start_next(gw, frames, &mut queues, &mut heap, &mut seq, &pair, ev.t)?;
+            }
+        }
+    }
+
+    Ok(OpenLoopReport {
+        metrics,
+        offered: frames.len(),
+        dropped,
+        makespan_s,
+        peak_in_flight,
+        fallbacks: gw.fallbacks - fallbacks_before,
+    })
+}
+
+/// If `pair` is idle and has backlog, begin serving the head request at
+/// `now_s` and schedule its completion. Service cannot begin before the
+/// request's gateway-side estimation has finished.
+#[allow(clippy::too_many_arguments)]
+fn start_next(
+    gw: &mut Gateway<'_>,
+    frames: &[Scene],
+    queues: &mut BTreeMap<PairKey, NodeQueue>,
+    heap: &mut BinaryHeap<Reverse<Event>>,
+    seq: &mut u64,
+    pair: &PairKey,
+    now_s: f64,
+) -> Result<()> {
+    let q = queues.get_mut(pair).expect("start_next on unknown queue");
+    if q.serving.is_some() {
+        return Ok(());
+    }
+    let Some(p) = q.backlog.pop_front() else {
+        return Ok(());
+    };
+    let start_s = now_s.max(p.arrival_s + p.routed.cost.latency_s);
+    let resp = gw.serve(pair, &frames[p.idx].image, start_s)?;
+    let done_s = start_s + resp.latency_s + devices::NETWORK_S;
+    heap.push(Reverse(Event {
+        t: done_s,
+        seq: *seq,
+        kind: EventKind::Completion(pair.clone()),
+    }));
+    *seq += 1;
+    // re-borrow: gw.serve() above needed &mut Gateway exclusively
+    queues.get_mut(pair).expect("queue vanished").serving =
+        Some(InService {
+            routed: p.routed,
+            idx: p.idx,
+            arrival_s: p.arrival_s,
+            start_s,
+            resp,
+        });
+    Ok(())
+}
+
+/// Render a dataset up front and drive it open loop (the per-scene
+/// render cost must not sit on the event clock's critical path).
+pub fn run_dataset(
+    gw: &mut Gateway<'_>,
+    dataset: &Dataset,
+    cfg: &OpenLoopConfig,
+) -> Result<OpenLoopReport> {
+    let frames: Vec<Scene> = dataset.iter_scenes().collect();
+    let gts: Vec<Vec<GtBox>> =
+        frames.iter().map(|s| s.gt.clone()).collect();
+    run_frames(gw, &frames, &gts, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::coco;
+    use crate::devices::fleet;
+    use crate::gateway::router_by_name;
+    use crate::nodes::NodePool;
+    use crate::router::{PairProfile, ProfileStore};
+    use crate::runtime::Engine;
+    use crate::workload;
+
+    fn engine() -> Engine {
+        Engine::new(&crate::default_artifacts_dir()).unwrap()
+    }
+
+    fn store() -> ProfileStore {
+        let mut rows = Vec::new();
+        for g in 0..5 {
+            rows.push(PairProfile {
+                pair: PairKey::new("ssd_v1", "jetson_orin_nano"),
+                group: g,
+                map: 50.0,
+                latency_s: 0.005,
+                energy_mwh: 0.002,
+            });
+            rows.push(PairProfile {
+                pair: PairKey::new("yolov8n", "pi5"),
+                group: g,
+                map: if g >= 2 { 75.0 } else { 51.0 },
+                latency_s: 0.05,
+                energy_mwh: 0.05,
+            });
+        }
+        ProfileStore::new(rows)
+    }
+
+    fn gateway<'e>(e: &'e Engine, router: &str, seed: u64) -> Gateway<'e> {
+        let s = store();
+        let pool =
+            NodePool::deploy(e, &s.pairs(), &fleet(), seed).unwrap();
+        Gateway::new(e, router_by_name(router).unwrap(), s, pool, 5.0, seed)
+    }
+
+    #[test]
+    fn arrival_processes_are_deterministic_and_ordered() {
+        let p = ArrivalProcess::Poisson { rate_rps: 20.0 };
+        let a = p.times(50, 9);
+        let b = p.times(50, 9);
+        assert_eq!(a, b);
+        assert!(a.windows(2).all(|w| w[0] <= w[1]));
+        assert_ne!(a, p.times(50, 10));
+        // mean inter-arrival ~ 1/rate
+        let mean_gap = a.last().unwrap() / 50.0;
+        assert!((mean_gap - 0.05).abs() < 0.03, "mean gap {mean_gap}");
+
+        let u = ArrivalProcess::Uniform { gap_s: 0.5 }.times(3, 0);
+        assert_eq!(u, vec![0.5, 1.0, 1.5]);
+
+        let tr = ArrivalProcess::Trace(vec![0.1, 0.3]).times(4, 0);
+        assert_eq!(tr, vec![0.1, 0.3, 0.5, 0.7]);
+    }
+
+    #[test]
+    fn low_rate_open_loop_converges_to_closed_loop() {
+        // satellite test (a): with arrivals far slower than service,
+        // at most one request is ever in flight, so the open loop must
+        // reproduce the closed loop's metrics exactly (same estimator,
+        // policy, and jitter RNG sequences).
+        let e = engine();
+        let ds = coco::build(12, 77);
+        for router in ["LE", "RR", "OB"] {
+            let mut closed = gateway(&e, router, 3);
+            let m_closed =
+                workload::run_dataset(&mut closed, &ds).unwrap();
+
+            let mut open = gateway(&e, router, 3);
+            let report = run_dataset(
+                &mut open,
+                &ds,
+                &OpenLoopConfig {
+                    // 5 s between arrivals vs ~tens of ms of service:
+                    // deterministic pacing guarantees zero overlap
+                    arrivals: ArrivalProcess::Uniform { gap_s: 5.0 },
+                    queue_capacity: 8,
+                    seed: 5,
+                },
+            )
+            .unwrap();
+            let m_open = &report.metrics;
+
+            assert_eq!(report.dropped, 0, "{router}");
+            assert_eq!(report.peak_in_flight, 1, "{router}");
+            assert_eq!(m_open.requests, m_closed.requests, "{router}");
+            assert_eq!(m_open.queue_delay_s, 0.0, "{router}");
+            assert_eq!(m_open.per_pair, m_closed.per_pair, "{router}");
+            assert!(
+                (m_open.total_latency_s - m_closed.total_latency_s).abs()
+                    < 1e-9,
+                "{router}: open {} vs closed {}",
+                m_open.total_latency_s,
+                m_closed.total_latency_s
+            );
+            assert!(
+                (m_open.total_energy_mwh() - m_closed.total_energy_mwh())
+                    .abs()
+                    < 1e-9,
+                "{router}"
+            );
+        }
+    }
+
+    #[test]
+    fn queueing_delay_is_monotone_in_arrival_rate() {
+        // satellite test (b): same workload, rising offered load =>
+        // nondecreasing mean queueing delay. Capacity is large enough
+        // that nothing is shed, so every run serves the same requests.
+        let e = engine();
+        let ds = coco::build(30, 41);
+        let mut delays = Vec::new();
+        for rate in [1.0, 25.0, 400.0] {
+            let mut gw = gateway(&e, "LE", 3);
+            let report = run_dataset(
+                &mut gw,
+                &ds,
+                &OpenLoopConfig {
+                    arrivals: ArrivalProcess::Poisson { rate_rps: rate },
+                    queue_capacity: 64,
+                    seed: 11,
+                },
+            )
+            .unwrap();
+            assert_eq!(report.dropped, 0, "rate {rate}");
+            delays.push(report.metrics.mean_queue_delay_s());
+        }
+        assert!(
+            delays.windows(2).all(|w| w[0] <= w[1]),
+            "queue delay not monotone: {delays:?}"
+        );
+        // and the saturated end genuinely queues
+        assert!(delays[2] > 0.0, "{delays:?}");
+    }
+
+    #[test]
+    fn bounded_queue_overflow_falls_back_then_sheds() {
+        // satellite test (c): capacity 1 and near-simultaneous arrivals.
+        // LE always prefers the jetson pair, so the second arrival finds
+        // it full and must fall back to the other pair (fallbacks += 1);
+        // once both single-slot queues are full, arrivals are dropped.
+        let e = engine();
+        let ds = coco::build(10, 13);
+        let mut gw = gateway(&e, "LE", 3);
+        let report = run_dataset(
+            &mut gw,
+            &ds,
+            &OpenLoopConfig {
+                arrivals: ArrivalProcess::Uniform { gap_s: 1e-6 },
+                queue_capacity: 1,
+                seed: 2,
+            },
+        )
+        .unwrap();
+        assert!(gw.fallbacks > 0, "expected overflow fallbacks");
+        assert!(report.dropped > 0, "expected load shedding");
+        assert_eq!(
+            report.metrics.requests + report.dropped,
+            report.offered
+        );
+        // both pairs ended up serving traffic
+        assert_eq!(report.metrics.per_pair.len(), 2);
+    }
+
+    #[test]
+    fn open_loop_replays_bit_identically_from_seeds() {
+        let e = engine();
+        let ds = coco::build(15, 99);
+        let run = |e: &Engine| {
+            let mut gw = gateway(e, "ED", 3);
+            run_dataset(
+                &mut gw,
+                &ds,
+                &OpenLoopConfig {
+                    arrivals: ArrivalProcess::Poisson { rate_rps: 40.0 },
+                    queue_capacity: 4,
+                    seed: 17,
+                },
+            )
+            .unwrap()
+        };
+        let a = run(&e);
+        let b = run(&e);
+        assert_eq!(a.metrics.requests, b.metrics.requests);
+        assert_eq!(a.dropped, b.dropped);
+        assert_eq!(a.makespan_s, b.makespan_s);
+        assert_eq!(a.metrics.total_latency_s, b.metrics.total_latency_s);
+        assert_eq!(a.metrics.queue_delay_s, b.metrics.queue_delay_s);
+        assert_eq!(
+            a.metrics.latency_samples,
+            b.metrics.latency_samples
+        );
+    }
+}
