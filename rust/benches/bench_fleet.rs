@@ -1,0 +1,89 @@
+//! Fleet simulator throughput: full sharded discrete-event runs
+//! (synthesis → dispatch with cross-shard fallback → PJRT service →
+//! completion bookkeeping) over the real deployed testbed, at fleet
+//! sizes up to 200 nodes / 8 shards. Reports events/sec (arrival +
+//! completion events over wall time) per configuration, plus the usual
+//! median/p10/p90 table from the in-tree harness.
+
+use std::time::Instant;
+
+use ecore::config::ExperimentConfig;
+use ecore::dataset::{coco, GtBox, Scene};
+use ecore::experiments::serve::deployed_store;
+use ecore::experiments::Harness;
+use ecore::fleet::{run_frames, DispatchPolicy, FleetBuilder, FleetConfig};
+use ecore::gateway::router_by_name;
+use ecore::util::bench::{black_box, Bench};
+use ecore::workload::openloop::ArrivalProcess;
+
+fn main() {
+    let cfg = ExperimentConfig {
+        profile_per_group: 12,
+        ..Default::default()
+    };
+    let h = Harness::new(cfg).unwrap();
+    let deployed = deployed_store(&h).unwrap();
+    let ds = coco::build(24, 7);
+    let frames: Vec<Scene> = ds.iter_scenes().collect();
+    let gts: Vec<Vec<GtBox>> =
+        frames.iter().map(|s| s.gt.clone()).collect();
+
+    let mut b = Bench::new("fleet");
+    for (nodes, shards, dispatch) in [
+        (24, 2, DispatchPolicy::LeastLoaded),
+        (96, 8, DispatchPolicy::LeastLoaded),
+        (96, 8, DispatchPolicy::Hash),
+        (200, 8, DispatchPolicy::LeastLoaded),
+    ] {
+        let name = format!("n{nodes}_k{shards}_{}", dispatch.label());
+        let run_once = || {
+            let mut fl = FleetBuilder::new(&h.engine, deployed.clone())
+                .build(
+                    router_by_name("ED").unwrap(),
+                    5.0,
+                    &FleetConfig {
+                        n_nodes: nodes,
+                        n_shards: shards,
+                        perturb: 0.15,
+                        queue_capacity: 8,
+                        dispatch,
+                        n_sources: 32,
+                        seed: 1,
+                        drift: None,
+                    },
+                )
+                .unwrap();
+            run_frames(
+                &mut fl,
+                &frames,
+                &gts,
+                &ArrivalProcess::Poisson { rate_rps: 400.0 },
+                3,
+            )
+            .unwrap()
+        };
+        // headline number: simulator events processed per wall second
+        // (one arrival per offered request + one completion per served)
+        let t0 = Instant::now();
+        let report = run_once();
+        let wall = t0.elapsed().as_secs_f64();
+        let events = report.offered + report.requests();
+        println!(
+            "{:<24} {:>10.0} events/sec  ({} events: {} served, {} dropped, xshard {})",
+            name,
+            events as f64 / wall.max(1e-9),
+            events,
+            report.requests(),
+            report.dropped,
+            report.cross_shard_fallbacks
+        );
+        b.run(&name, || black_box(run_once().requests()));
+    }
+
+    let (secs, count) = h.engine.exec_stats();
+    println!(
+        "engine totals: {count} inferences, {:.1} ms mean",
+        1000.0 * secs / count.max(1) as f64
+    );
+    b.finish();
+}

@@ -213,6 +213,23 @@ pub struct ExperimentConfig {
     pub queue_capacity: usize,
     /// Arrival rates swept by the `openloop` saturation experiment.
     pub open_rates: Vec<f64>,
+    /// Fleet sweep: synthesized fleet sizes (total nodes).
+    pub fleet_sizes: Vec<usize>,
+    /// Fleet sweep: gateway shard counts.
+    pub fleet_shards: Vec<usize>,
+    /// Fleet sweep: routers compared per cell.
+    pub fleet_routers: Vec<String>,
+    /// Fleet sweep: Poisson arrival rate (req/s).
+    pub fleet_rate_rps: f64,
+    /// Fleet sweep: offered requests per cell.
+    pub fleet_requests: usize,
+    /// Fleet synthesis: ± fractional perturbation of per-node
+    /// throughput and power (silicon binning variation).
+    pub fleet_perturb: f64,
+    /// Shard dispatch policy: `hash` | `least` | `sticky`.
+    pub fleet_dispatch: String,
+    /// Distinct request sources (sticky-dispatch granularity).
+    pub fleet_sources: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -232,6 +249,17 @@ impl Default for ExperimentConfig {
             rate_rps: 8.0,
             queue_capacity: 8,
             open_rates: vec![2.0, 8.0, 32.0],
+            fleet_sizes: vec![24, 200],
+            fleet_shards: vec![2, 8],
+            fleet_routers: ["LE", "HMG", "ED"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+            fleet_rate_rps: 60.0,
+            fleet_requests: 120,
+            fleet_perturb: 0.15,
+            fleet_dispatch: "least".to_string(),
+            fleet_sources: 32,
         }
     }
 }
@@ -260,6 +288,30 @@ impl ExperimentConfig {
                 .get("experiment.open_rates")
                 .and_then(|v| v.as_f64_list())
                 .unwrap_or(d.open_rates),
+            fleet_sizes: t
+                .get("experiment.fleet_sizes")
+                .and_then(|v| v.as_f64_list())
+                .map(|v| v.iter().map(|&x| x as usize).collect())
+                .unwrap_or(d.fleet_sizes),
+            fleet_shards: t
+                .get("experiment.fleet_shards")
+                .and_then(|v| v.as_f64_list())
+                .map(|v| v.iter().map(|&x| x as usize).collect())
+                .unwrap_or(d.fleet_shards),
+            fleet_routers: t
+                .get("experiment.fleet_routers")
+                .and_then(|v| v.as_str_list())
+                .unwrap_or(d.fleet_routers),
+            fleet_rate_rps: t
+                .f64_or("experiment.fleet_rate_rps", d.fleet_rate_rps),
+            fleet_requests: t
+                .usize_or("experiment.fleet_requests", d.fleet_requests),
+            fleet_perturb: t
+                .f64_or("experiment.fleet_perturb", d.fleet_perturb),
+            fleet_dispatch: t
+                .str_or("experiment.fleet_dispatch", &d.fleet_dispatch),
+            fleet_sources: t
+                .usize_or("experiment.fleet_sources", d.fleet_sources),
         }
     }
 
@@ -282,6 +334,25 @@ impl ExperimentConfig {
         if args.get("rates").is_some() {
             self.open_rates = args.f64_list_or("rates", &[]);
         }
+        if args.get("fleet-sizes").is_some() {
+            self.fleet_sizes = args.usize_list_or("fleet-sizes", &[]);
+        }
+        if args.get("fleet-shards").is_some() {
+            self.fleet_shards = args.usize_list_or("fleet-shards", &[]);
+        }
+        if args.get("fleet-routers").is_some() {
+            self.fleet_routers = args.list_or("fleet-routers", &[]);
+        }
+        self.fleet_rate_rps = args.f64_or("fleet-rate", self.fleet_rate_rps);
+        self.fleet_requests =
+            args.usize_or("fleet-requests", self.fleet_requests);
+        self.fleet_perturb =
+            args.f64_or("fleet-perturb", self.fleet_perturb);
+        if let Some(d) = args.get("dispatch") {
+            self.fleet_dispatch = d.to_string();
+        }
+        self.fleet_sources =
+            args.usize_or("fleet-sources", self.fleet_sources);
     }
 }
 
@@ -333,6 +404,39 @@ routers = ["ED", "OB"]
         assert_eq!(c.delta_map, 10.0);
         assert_eq!(c.coco_images, ExperimentConfig::default().coco_images);
         assert_eq!(c.routers.len(), 10);
+    }
+
+    #[test]
+    fn fleet_keys_parse_and_override() {
+        let t = Table::parse(
+            "[experiment]\nfleet_sizes = [8, 16]\nfleet_dispatch = \"hash\"\nfleet_rate_rps = 25\n",
+        )
+        .unwrap();
+        let mut c = ExperimentConfig::from_table(&t);
+        assert_eq!(c.fleet_sizes, vec![8, 16]);
+        assert_eq!(c.fleet_dispatch, "hash");
+        assert_eq!(c.fleet_rate_rps, 25.0);
+        // unset keys keep defaults
+        let d = ExperimentConfig::default();
+        assert_eq!(c.fleet_shards, d.fleet_shards);
+        assert_eq!(c.fleet_requests, d.fleet_requests);
+        // CLI wins over file
+        let args = crate::util::cli::Args::parse(
+            [
+                "--fleet-shards",
+                "2,4",
+                "--dispatch",
+                "sticky",
+                "--fleet-requests",
+                "9",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+        );
+        c.override_with(&args);
+        assert_eq!(c.fleet_shards, vec![2, 4]);
+        assert_eq!(c.fleet_dispatch, "sticky");
+        assert_eq!(c.fleet_requests, 9);
     }
 
     #[test]

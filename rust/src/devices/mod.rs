@@ -124,6 +124,21 @@ impl DeviceSpec {
         }
     }
 
+    /// A copy of this spec with compute throughput scaled by `speed`
+    /// and dynamic power by `power`. Fleet synthesis models per-unit
+    /// variation of nominally identical boards (silicon binning,
+    /// cooling, supply quality) this way; fixed preprocessing and
+    /// dispatch overheads are left unchanged.
+    pub fn scaled(&self, speed: f64, power: f64) -> DeviceSpec {
+        DeviceSpec {
+            cpu_mflops: self.cpu_mflops * speed,
+            accel_mflops: self.accel_mflops * speed,
+            cpu_dyn_power_w: self.cpu_dyn_power_w * power,
+            accel_dyn_power_w: self.accel_dyn_power_w * power,
+            ..self.clone()
+        }
+    }
+
     /// Simulated latency/energy/framework for one inference of `meta`.
     pub fn profile(&self, meta: &ModelMeta) -> ExecProfile {
         let mflops = meta.flops / 1e6;
@@ -386,6 +401,25 @@ mod tests {
         assert_eq!(pi5_tpu.profile(yolo_s).framework, Framework::TfLite);
         let hat = find(&f, "pi5_aihat").unwrap();
         assert_eq!(hat.profile(yolo_s).framework, Framework::Hef);
+    }
+
+    #[test]
+    fn scaled_spec_shifts_profile_in_the_right_direction() {
+        let reg = registry();
+        let m = reg.get("yolov8n").unwrap();
+        let pi5 = find(&fleet(), "pi5").unwrap();
+        let base = pi5.profile(m);
+        // faster silicon: lower latency, same dispatch overheads
+        let fast = pi5.scaled(2.0, 1.0).profile(m);
+        assert!(fast.latency_s < base.latency_s);
+        // hotter unit: same latency, more energy
+        let hot = pi5.scaled(1.0, 2.0).profile(m);
+        assert_eq!(hot.latency_s, base.latency_s);
+        assert!(hot.energy_mwh > base.energy_mwh);
+        // identity scaling is a no-op
+        let same = pi5.scaled(1.0, 1.0).profile(m);
+        assert_eq!(same.latency_s, base.latency_s);
+        assert_eq!(same.energy_mwh, base.energy_mwh);
     }
 
     #[test]

@@ -1,0 +1,123 @@
+//! Fleet sweep: sharded multi-gateway serving over synthesized
+//! heterogeneous fleets (DESIGN.md §8).
+//!
+//! For each (fleet size, shard count, router) cell the driver
+//! synthesizes a fresh fleet from the deployed Table-1 store, replays
+//! the same pre-rendered request set through the shared-heap
+//! discrete-event simulator, and reports goodput, tail latency,
+//! queueing delay, sheds, cross-shard fallbacks, shard imbalance, and
+//! energy per request. This is where dispatch policy and shard count
+//! become first-class experimental variables: a hash front-end keeps
+//! shards independent but wastes capacity under skew, least-loaded
+//! chases the global optimum at the cost of affinity, and sticky trades
+//! balance for per-source estimator locality.
+
+use anyhow::{Context, Result};
+
+use super::serve::deployed_store;
+use super::Harness;
+use crate::dataset::{coco, GtBox, Scene};
+use crate::fleet::{run_frames, DispatchPolicy, FleetBuilder, FleetConfig};
+use crate::gateway::router_by_name;
+use crate::util::json::Json;
+use crate::workload::openloop::ArrivalProcess;
+
+/// The `fleet` experiment: sweep fleet size x shard count x router.
+pub fn fleet(h: &Harness) -> Result<()> {
+    let n = h.cfg.fleet_requests.max(1);
+    let ds = coco::build(n, h.cfg.seed ^ 0xF1EE);
+    let frames: Vec<Scene> = ds.iter_scenes().collect();
+    let gts: Vec<Vec<GtBox>> =
+        frames.iter().map(|s| s.gt.clone()).collect();
+    let base = deployed_store(h)?;
+    let dispatch =
+        DispatchPolicy::parse(&h.cfg.fleet_dispatch).with_context(|| {
+            format!(
+                "unknown dispatch policy '{}' (hash|least|sticky)",
+                h.cfg.fleet_dispatch
+            )
+        })?;
+    eprintln!(
+        "[fleet] base {} pairs, {} requests @ {} req/s, dispatch {}, perturb ±{:.0}%",
+        base.pairs().len(),
+        n,
+        h.cfg.fleet_rate_rps,
+        dispatch.label(),
+        100.0 * h.cfg.fleet_perturb
+    );
+    println!("--- fleet (size x shards x router sweep over {n} requests) ---");
+    println!(
+        "{:<6} {:>6} {:>7} {:>9} {:>9} {:>10} {:>6} {:>7} {:>10} {:>12} {:>8}",
+        "router",
+        "nodes",
+        "shards",
+        "goodput",
+        "p99_ms",
+        "qdelay_ms",
+        "drop",
+        "xshard",
+        "imbalance",
+        "mWh_per_req",
+        "mAP"
+    );
+    let mut rows = Vec::new();
+    for &size in &h.cfg.fleet_sizes {
+        for &k in &h.cfg.fleet_shards {
+            if k == 0 || k > size {
+                continue;
+            }
+            for name in &h.cfg.fleet_routers {
+                let spec = router_by_name(name)
+                    .with_context(|| format!("unknown router '{name}'"))?;
+                let mut fl = FleetBuilder::new(&h.engine, base.clone())
+                    .build(
+                        spec,
+                        h.cfg.delta_map,
+                        &FleetConfig {
+                            n_nodes: size,
+                            n_shards: k,
+                            perturb: h.cfg.fleet_perturb,
+                            queue_capacity: h.cfg.queue_capacity,
+                            dispatch,
+                            n_sources: h.cfg.fleet_sources,
+                            seed: h.cfg.seed,
+                            drift: None,
+                        },
+                    )?;
+                let report = run_frames(
+                    &mut fl,
+                    &frames,
+                    &gts,
+                    &ArrivalProcess::Poisson {
+                        rate_rps: h.cfg.fleet_rate_rps,
+                    },
+                    h.cfg.seed,
+                )?;
+                println!(
+                    "{:<6} {:>6} {:>7} {:>9.2} {:>9.1} {:>10.1} {:>6} {:>7} {:>10.2} {:>12.4} {:>8.2}",
+                    spec.name,
+                    size,
+                    k,
+                    report.goodput_rps(),
+                    1000.0 * report.latency_percentile(99.0),
+                    1000.0 * report.mean_queue_delay_s(),
+                    report.dropped,
+                    report.cross_shard_fallbacks,
+                    report.shard_imbalance(),
+                    report.energy_per_request_mwh(),
+                    report.map(),
+                );
+                rows.push(Json::obj(vec![
+                    ("router", Json::str(spec.name)),
+                    ("nodes", Json::num(size as f64)),
+                    ("shards", Json::num(k as f64)),
+                    ("dispatch", Json::str(dispatch.label())),
+                    ("rate_rps", Json::num(h.cfg.fleet_rate_rps)),
+                    ("report", report.to_json()),
+                ]));
+            }
+        }
+        println!();
+    }
+    h.save_json("fleet", &Json::Arr(rows))
+}

@@ -12,11 +12,13 @@
 //! | `fig9`    | delta_mAP sweep x {Orc, ED, SF, OB}              |
 //! | `overhead`| gateway overhead per router (§4.2)               |
 //! | `openloop`| open-loop saturation sweep (beyond the paper)    |
+//! | `fleet`   | sharded multi-gateway fleet sweep (beyond paper) |
 //!
 //! Every driver prints the paper-style table and writes
 //! `results/<id>.json` for downstream plotting.
 
 pub mod ablations;
+pub mod fleet;
 pub mod openloop;
 pub mod serve;
 pub mod static_figs;
@@ -33,9 +35,9 @@ use crate::router::{GroupRules, ProfileStore};
 use crate::runtime::Engine;
 use crate::util::json::Json;
 
-pub const ALL_EXPERIMENTS: [&str; 10] = [
+pub const ALL_EXPERIMENTS: [&str; 11] = [
     "fig2", "fig4", "fig5", "table1", "fig6", "fig7", "fig8", "fig9",
-    "overhead", "openloop",
+    "overhead", "openloop", "fleet",
 ];
 
 /// Shared experiment context.
@@ -127,6 +129,7 @@ impl Harness {
             "fig9" => sweep::fig9(self),
             "overhead" => serve::overhead(self),
             "openloop" => openloop::openloop(self),
+            "fleet" => fleet::fleet(self),
             "ablation_groups" => ablations::ablation_groups(self),
             "ablation_batch" => ablations::ablation_batch(self),
             "ablation_weighted" => ablations::ablation_weighted(self),

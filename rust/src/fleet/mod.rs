@@ -1,0 +1,956 @@
+//! Fleet-scale sharded serving (DESIGN.md §8).
+//!
+//! The paper evaluates one gateway over a six-pair testbed. ECORE's
+//! smart-city setting is the opposite shape: many gateways, each
+//! fronting a slice of a large heterogeneous device pool. This module
+//! scales the open-loop subsystem to that regime:
+//!
+//! * [`FleetBuilder`] synthesizes an N-node fleet by replicating the
+//!   base testbed pairs and perturbing each unit's silicon (throughput)
+//!   and power draw through the seeded RNG — no two nodes are exactly
+//!   alike, like a real deployment of nominally identical boards.
+//! * Nodes are partitioned across K gateway **shards**. Each shard is a
+//!   full [`Gateway`]: its own [`ProfileStore`] (rows scaled to its
+//!   nodes' perturbations), its own estimator state, its own policy RNG.
+//! * A [`DispatchPolicy`] picks the shard for each arriving request
+//!   (hash, least-loaded, or sticky-by-source) and defines the
+//!   **cross-shard fallback** order: a request that finds its shard
+//!   saturated re-routes to the next shard before being shed.
+//! * One shared event heap drives all shards on the same virtual clock
+//!   as [`crate::workload::openloop`], so whole fleet runs replay
+//!   bit-identically from their seeds (the golden-trace tests pin this).
+
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap, VecDeque};
+
+use anyhow::{Context, Result};
+
+use crate::dataset::{Dataset, GtBox, Scene};
+use crate::detection::map::{map_coco, ImageEval};
+use crate::devices;
+use crate::devices::drift::DriftConfig;
+use crate::gateway::{Gateway, NoEndpoint, RoutedRequest, RouterSpec};
+use crate::metrics::RunMetrics;
+use crate::nodes::{EdgeNode, NodePool, NodeResponse};
+use crate::router::{PairKey, PairProfile, ProfileStore};
+use crate::runtime::Engine;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::stats::{percentile, percentiles};
+use crate::workload::openloop::ArrivalProcess;
+
+/// How the fleet front-end assigns an arriving request to a shard.
+///
+/// Every policy returns a full visit order, not just a primary shard:
+/// position 0 is the dispatch choice and the rest is the cross-shard
+/// fallback sequence tried when earlier shards are saturated.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DispatchPolicy {
+    /// Stateless hash of the request index — uniform spread, no
+    /// affinity, the classic L4 load-balancer baseline.
+    Hash,
+    /// Fewest requests currently in flight (queued + in service) wins;
+    /// ties break toward the lower shard index.
+    LeastLoaded,
+    /// Hash of the request's *source* id, so all traffic from one
+    /// source lands on one shard (cache/OB-estimator affinity).
+    Sticky,
+}
+
+impl DispatchPolicy {
+    /// Parse a config/CLI name: `hash`, `least`, or `sticky`.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "hash" => Some(Self::Hash),
+            "least" | "least-loaded" | "least_loaded" => {
+                Some(Self::LeastLoaded)
+            }
+            "sticky" | "sticky-by-source" => Some(Self::Sticky),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Hash => "hash",
+            Self::LeastLoaded => "least",
+            Self::Sticky => "sticky",
+        }
+    }
+
+    /// Shard visit order for request `idx` given per-shard in-flight
+    /// counts: primary shard first, then the cross-shard fallback
+    /// sequence. Deterministic in its inputs.
+    pub fn order(
+        &self,
+        idx: usize,
+        n_sources: usize,
+        in_flight: &[usize],
+    ) -> Vec<usize> {
+        let k = in_flight.len();
+        if k == 0 {
+            return Vec::new();
+        }
+        match self {
+            DispatchPolicy::Hash => {
+                rotation(mix64(idx as u64 ^ 0x00D1_57A7) as usize % k, k)
+            }
+            DispatchPolicy::Sticky => {
+                let source = idx % n_sources.max(1);
+                rotation(mix64(source as u64 ^ 0x0057_1C4B) as usize % k, k)
+            }
+            DispatchPolicy::LeastLoaded => {
+                let mut order: Vec<usize> = (0..k).collect();
+                order.sort_by_key(|&s| (in_flight[s], s));
+                order
+            }
+        }
+    }
+}
+
+fn rotation(start: usize, k: usize) -> Vec<usize> {
+    (0..k).map(|i| (start + i) % k).collect()
+}
+
+/// SplitMix64 finalizer — stateless integer mixing for shard hashing.
+fn mix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Shape of one synthesized fleet.
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    /// Total synthesized nodes, spread round-robin over the base pairs.
+    pub n_nodes: usize,
+    /// Gateway shards the nodes are partitioned across.
+    pub n_shards: usize,
+    /// ± fractional perturbation of each unit's throughput and dynamic
+    /// power (silicon binning / cooling variation); 0 = identical units.
+    pub perturb: f64,
+    /// Bounded per-node FIFO capacity (in-service slot included).
+    pub queue_capacity: usize,
+    pub dispatch: DispatchPolicy,
+    /// Distinct request sources (sticky-dispatch granularity).
+    pub n_sources: usize,
+    /// Seed for synthesis (node perturbations, jitter, shard policies).
+    pub seed: u64,
+    /// Optional per-node runtime drift (paper Future Work #1).
+    pub drift: Option<DriftConfig>,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        Self {
+            n_nodes: 24,
+            n_shards: 4,
+            perturb: 0.15,
+            queue_capacity: 8,
+            dispatch: DispatchPolicy::LeastLoaded,
+            n_sources: 16,
+            seed: 7,
+            drift: None,
+        }
+    }
+}
+
+/// Synthesizes sharded fleets from a base profiling store (normally the
+/// deployed Table-1 testbed store).
+pub struct FleetBuilder<'e> {
+    engine: &'e Engine,
+    base: ProfileStore,
+}
+
+impl<'e> FleetBuilder<'e> {
+    pub fn new(engine: &'e Engine, base: ProfileStore) -> Self {
+        Self { engine, base }
+    }
+
+    /// Build an N-node / K-shard fleet wired for one router config.
+    ///
+    /// Node `i` replicates base pair `i % pairs` with a unique identity
+    /// (`model@device#i`), a device perturbed by the seeded RNG, and
+    /// profile rows rescaled to first order (latency ∝ 1/speed, energy
+    /// ∝ power/speed, mAP unchanged — the framework and decode
+    /// threshold are those of the base device). Shards get the nodes
+    /// round-robin, so every shard sees the same mix of base pairs.
+    pub fn build(
+        &self,
+        spec: RouterSpec,
+        delta_map: f64,
+        cfg: &FleetConfig,
+    ) -> Result<Fleet<'e>> {
+        anyhow::ensure!(cfg.n_shards >= 1, "fleet needs at least one shard");
+        anyhow::ensure!(
+            cfg.n_nodes >= cfg.n_shards,
+            "fewer nodes ({}) than shards ({})",
+            cfg.n_nodes,
+            cfg.n_shards
+        );
+        anyhow::ensure!(
+            (0.0..0.95).contains(&cfg.perturb),
+            "perturb {} outside [0, 0.95)",
+            cfg.perturb
+        );
+        let base_pairs = self.base.pairs();
+        anyhow::ensure!(!base_pairs.is_empty(), "base profile store is empty");
+        let base_fleet = devices::fleet();
+
+        let mut shard_nodes: Vec<Vec<EdgeNode>> =
+            (0..cfg.n_shards).map(|_| Vec::new()).collect();
+        let mut shard_rows: Vec<Vec<PairProfile>> =
+            (0..cfg.n_shards).map(|_| Vec::new()).collect();
+        let rng = Rng::new(cfg.seed ^ 0xF1EE_7B0A);
+        for i in 0..cfg.n_nodes {
+            let bp = &base_pairs[i % base_pairs.len()];
+            let base_dev = devices::find(&base_fleet, &bp.device)
+                .with_context(|| {
+                    format!("unknown base device '{}'", bp.device)
+                })?;
+            let mut r = rng.derive(i as u64);
+            let speed = 1.0 + cfg.perturb * (2.0 * r.f64() - 1.0);
+            let power = 1.0 + cfg.perturb * (2.0 * r.f64() - 1.0);
+            let dev = base_dev.scaled(speed, power);
+            let pair =
+                PairKey::new(&bp.model, &format!("{}#{:04}", bp.device, i));
+            let mut node = EdgeNode::new(
+                self.engine,
+                pair.clone(),
+                dev,
+                cfg.seed.wrapping_add(i as u64),
+            )?;
+            if let Some(dc) = &cfg.drift {
+                node.enable_drift(dc.clone(), cfg.seed ^ mix64(i as u64));
+            }
+            let shard = i % cfg.n_shards;
+            for row in self.base.rows().iter().filter(|row| &row.pair == bp)
+            {
+                shard_rows[shard].push(PairProfile {
+                    pair: pair.clone(),
+                    group: row.group,
+                    map: row.map,
+                    latency_s: row.latency_s / speed,
+                    energy_mwh: row.energy_mwh * power / speed,
+                });
+            }
+            shard_nodes[shard].push(node);
+        }
+
+        let mut models: Vec<&str> =
+            base_pairs.iter().map(|p| p.model.as_str()).collect();
+        models.sort();
+        models.dedup();
+        self.engine.preload(&models)?;
+
+        let mut shards = Vec::with_capacity(cfg.n_shards);
+        for (s, (nodes, rows)) in
+            shard_nodes.into_iter().zip(shard_rows).enumerate()
+        {
+            let mut pool = NodePool::from_nodes(nodes);
+            pool.set_queue_capacity(cfg.queue_capacity);
+            shards.push(Gateway::new(
+                self.engine,
+                spec,
+                ProfileStore::new(rows),
+                pool,
+                delta_map,
+                cfg.seed ^ mix64(0x0005_1A2D + s as u64),
+            ));
+        }
+        Ok(Fleet {
+            shards,
+            dispatch: cfg.dispatch,
+            n_sources: cfg.n_sources.max(1),
+            n_nodes: cfg.n_nodes,
+        })
+    }
+}
+
+/// A built fleet: K shard gateways plus the dispatch front-end.
+pub struct Fleet<'e> {
+    shards: Vec<Gateway<'e>>,
+    dispatch: DispatchPolicy,
+    n_sources: usize,
+    n_nodes: usize,
+}
+
+impl<'e> Fleet<'e> {
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.n_nodes
+    }
+
+    pub fn dispatch(&self) -> DispatchPolicy {
+        self.dispatch
+    }
+
+    pub fn shards(&self) -> &[Gateway<'e>] {
+        &self.shards
+    }
+
+    pub fn shards_mut(&mut self) -> &mut [Gateway<'e>] {
+        &mut self.shards
+    }
+}
+
+/// Outcome of one fleet run.
+#[derive(Clone, Debug)]
+pub struct FleetReport {
+    /// Per-shard request accounting, index-aligned with the shards.
+    pub per_shard: Vec<RunMetrics>,
+    /// Requests offered by the arrival process (served + dropped).
+    pub offered: usize,
+    /// Requests shed because every shard was saturated.
+    pub dropped: usize,
+    /// Within-shard fallback re-routes (down or queue-full nodes).
+    pub node_fallbacks: usize,
+    /// Requests that left their dispatch shard for another because the
+    /// primary was saturated.
+    pub cross_shard_fallbacks: usize,
+    /// Virtual time at which the last response left the system (s).
+    pub makespan_s: f64,
+    /// Peak requests simultaneously in the system, fleet-wide.
+    pub peak_in_flight: usize,
+}
+
+impl FleetReport {
+    /// Served requests across all shards.
+    pub fn requests(&self) -> usize {
+        self.per_shard.iter().map(|m| m.requests).sum()
+    }
+
+    /// Served throughput over the run's virtual wall-clock (req/s).
+    pub fn goodput_rps(&self) -> f64 {
+        if self.makespan_s > 0.0 {
+            self.requests() as f64 / self.makespan_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn total_energy_mwh(&self) -> f64 {
+        self.per_shard.iter().map(|m| m.total_energy_mwh()).sum()
+    }
+
+    pub fn energy_per_request_mwh(&self) -> f64 {
+        let n = self.requests();
+        if n > 0 {
+            self.total_energy_mwh() / n as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// All shards' end-to-end latency samples merged (unsorted).
+    fn merged_samples(&self) -> Vec<f64> {
+        self.per_shard
+            .iter()
+            .flat_map(|m| m.latency_samples.iter().copied())
+            .collect()
+    }
+
+    /// End-to-end latency percentile over all shards' samples merged.
+    /// For several percentiles at once, prefer
+    /// [`FleetReport::latency_percentiles`] (one merge + sort).
+    pub fn latency_percentile(&self, p: f64) -> f64 {
+        percentile(&self.merged_samples(), p)
+    }
+
+    /// Several merged-sample percentiles from a single merge + sort.
+    pub fn latency_percentiles(&self, ps: &[f64]) -> Vec<f64> {
+        percentiles(&self.merged_samples(), ps)
+    }
+
+    /// Mean per-request queueing delay across the fleet (s).
+    pub fn mean_queue_delay_s(&self) -> f64 {
+        let n = self.requests();
+        if n > 0 {
+            self.per_shard.iter().map(|m| m.queue_delay_s).sum::<f64>()
+                / n as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// COCO mAP over every image served by any shard (0–100).
+    pub fn map(&self) -> f64 {
+        let images: Vec<ImageEval> = self
+            .per_shard
+            .iter()
+            .flat_map(|m| m.images.iter().cloned())
+            .collect();
+        map_coco(&images, crate::dataset::NUM_CLASSES).map
+    }
+
+    /// Max/mean served requests per shard: 1.0 is perfectly balanced,
+    /// K means one shard took everything; 0.0 when nothing was served.
+    pub fn shard_imbalance(&self) -> f64 {
+        let total = self.requests();
+        if total == 0 || self.per_shard.is_empty() {
+            return 0.0;
+        }
+        let mean = total as f64 / self.per_shard.len() as f64;
+        let max =
+            self.per_shard.iter().map(|m| m.requests).max().unwrap_or(0);
+        max as f64 / mean
+    }
+
+    /// Stable JSON report (field order fixed by the Json substrate's
+    /// BTreeMap) — the golden-trace determinism tests compare this dump
+    /// byte for byte.
+    pub fn to_json(&self) -> Json {
+        let pcts = self.latency_percentiles(&[50.0, 95.0, 99.0]);
+        Json::obj(vec![
+            ("offered", Json::num(self.offered as f64)),
+            ("requests", Json::num(self.requests() as f64)),
+            ("dropped", Json::num(self.dropped as f64)),
+            ("node_fallbacks", Json::num(self.node_fallbacks as f64)),
+            (
+                "cross_shard_fallbacks",
+                Json::num(self.cross_shard_fallbacks as f64),
+            ),
+            ("makespan_s", Json::num(self.makespan_s)),
+            ("peak_in_flight", Json::num(self.peak_in_flight as f64)),
+            ("goodput_rps", Json::num(self.goodput_rps())),
+            ("latency_p50_s", Json::num(pcts[0])),
+            ("latency_p95_s", Json::num(pcts[1])),
+            ("latency_p99_s", Json::num(pcts[2])),
+            (
+                "mean_queue_delay_s",
+                Json::num(self.mean_queue_delay_s()),
+            ),
+            ("energy_mwh", Json::num(self.total_energy_mwh())),
+            (
+                "energy_per_request_mwh",
+                Json::num(self.energy_per_request_mwh()),
+            ),
+            ("map", Json::num(self.map())),
+            ("shard_imbalance", Json::num(self.shard_imbalance())),
+            (
+                "shards",
+                Json::Arr(
+                    self.per_shard.iter().map(|m| m.to_json()).collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// One event on the shared virtual clock; ordered by (time, sequence)
+/// so ties resolve in insertion order — a shard-aware copy of the
+/// `workload::openloop` event machinery. A fix to the ordering,
+/// queue-delay formula, or completion scheduling must land in both
+/// copies; the golden-trace tests pin each side's behavior.
+struct Event {
+    t: f64,
+    seq: u64,
+    kind: EventKind,
+}
+
+enum EventKind {
+    /// Request `idx` arrives at the fleet front-end.
+    Arrival(usize),
+    /// The in-service request on `pair` (owned by `shard`) completes.
+    Completion { shard: usize, pair: PairKey },
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq && self.t.total_cmp(&other.t).is_eq()
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.t.total_cmp(&other.t).then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// A request admitted to a node's FIFO, waiting for service.
+struct Pending {
+    routed: RoutedRequest,
+    idx: usize,
+    arrival_s: f64,
+}
+
+/// The request a node is currently serving.
+struct InService {
+    routed: RoutedRequest,
+    idx: usize,
+    arrival_s: f64,
+    start_s: f64,
+    resp: NodeResponse,
+}
+
+/// Per-node serving state: one in-service slot + FIFO backlog.
+#[derive(Default)]
+struct NodeQueue {
+    serving: Option<InService>,
+    backlog: VecDeque<Pending>,
+}
+
+/// Drive a fleet over pre-rendered frames under open-loop arrivals.
+///
+/// Per arrival: the dispatch policy yields a shard visit order; the
+/// first shard whose gateway admits the request (it has a healthy node
+/// with a free queue slot for the estimated group) wins. Visits beyond
+/// the first count as cross-shard fallbacks; exhausting every shard
+/// sheds the request. Completions release the slot, record metrics on
+/// the serving shard, and start that node's next queued request.
+pub fn run_frames(
+    fleet: &mut Fleet<'_>,
+    frames: &[Scene],
+    pseudo_gt: &[Vec<GtBox>],
+    arrivals: &ArrivalProcess,
+    seed: u64,
+) -> Result<FleetReport> {
+    anyhow::ensure!(frames.len() == pseudo_gt.len());
+    let k = fleet.shards.len();
+    let fallbacks_before: Vec<usize> =
+        fleet.shards.iter().map(|g| g.fallbacks).collect();
+    let mut metrics: Vec<RunMetrics> = (0..k)
+        .map(|s| {
+            RunMetrics::new(&format!("{}-s{s}", fleet.shards[s].spec.name))
+        })
+        .collect();
+    let mut queues: Vec<BTreeMap<PairKey, NodeQueue>> =
+        (0..k).map(|_| BTreeMap::new()).collect();
+    let mut heap: BinaryHeap<Reverse<Event>> = BinaryHeap::new();
+    let mut seq = 0u64;
+    for (idx, t) in
+        arrivals.times(frames.len(), seed).into_iter().enumerate()
+    {
+        heap.push(Reverse(Event {
+            t,
+            seq,
+            kind: EventKind::Arrival(idx),
+        }));
+        seq += 1;
+    }
+
+    let mut dropped = 0usize;
+    let mut cross_shard_fallbacks = 0usize;
+    let mut in_flight = vec![0usize; k];
+    let mut total_in_flight = 0usize;
+    let mut peak_in_flight = 0usize;
+    let mut makespan_s = 0.0f64;
+
+    while let Some(Reverse(ev)) = heap.pop() {
+        match ev.kind {
+            EventKind::Arrival(idx) => {
+                let scene = &frames[idx];
+                let true_count = pseudo_gt[idx].len();
+                let order =
+                    fleet.dispatch.order(idx, fleet.n_sources, &in_flight);
+                let mut admitted: Option<(usize, RoutedRequest)> = None;
+                for (attempt, &s) in order.iter().enumerate() {
+                    match fleet.shards[s].route(&scene.image, true_count) {
+                        Ok(routed) => {
+                            cross_shard_fallbacks += attempt;
+                            admitted = Some((s, routed));
+                            break;
+                        }
+                        Err(e) if e.is::<NoEndpoint>() => continue,
+                        Err(e) => return Err(e),
+                    }
+                }
+                let Some((s, routed)) = admitted else {
+                    dropped += 1;
+                    continue;
+                };
+                let ok = fleet.shards[s].pool_mut().acquire(&routed.pair);
+                debug_assert!(
+                    ok,
+                    "route() returned a pair without a free slot"
+                );
+                in_flight[s] += 1;
+                total_in_flight += 1;
+                peak_in_flight = peak_in_flight.max(total_in_flight);
+                let pair = routed.pair.clone();
+                queues[s].entry(pair.clone()).or_default().backlog.push_back(
+                    Pending {
+                        routed,
+                        idx,
+                        arrival_s: ev.t,
+                    },
+                );
+                start_next(
+                    &mut fleet.shards[s],
+                    s,
+                    frames,
+                    &mut queues[s],
+                    &mut heap,
+                    &mut seq,
+                    &pair,
+                    ev.t,
+                )?;
+            }
+            EventKind::Completion { shard: s, pair } => {
+                let done = queues[s]
+                    .get_mut(&pair)
+                    .expect("completion for unknown queue")
+                    .serving
+                    .take()
+                    .expect("completion with no in-service request");
+                fleet.shards[s].pool_mut().release(&pair);
+                in_flight[s] -= 1;
+                total_in_flight -= 1;
+                makespan_s = makespan_s.max(ev.t);
+                let queue_delay_s = (done.start_s
+                    - (done.arrival_s + done.routed.cost.latency_s))
+                    .max(0.0);
+                fleet.shards[s].finish(
+                    &done.routed,
+                    done.resp,
+                    &pseudo_gt[done.idx],
+                    queue_delay_s,
+                    &mut metrics[s],
+                );
+                start_next(
+                    &mut fleet.shards[s],
+                    s,
+                    frames,
+                    &mut queues[s],
+                    &mut heap,
+                    &mut seq,
+                    &pair,
+                    ev.t,
+                )?;
+            }
+        }
+    }
+
+    let node_fallbacks = fleet
+        .shards
+        .iter()
+        .zip(&fallbacks_before)
+        .map(|(g, &before)| g.fallbacks - before)
+        .sum();
+    Ok(FleetReport {
+        per_shard: metrics,
+        offered: frames.len(),
+        dropped,
+        node_fallbacks,
+        cross_shard_fallbacks,
+        makespan_s,
+        peak_in_flight,
+    })
+}
+
+/// If `pair` (on shard `shard`) is idle and has backlog, begin serving
+/// the head request at `now_s` and schedule its completion.
+#[allow(clippy::too_many_arguments)]
+fn start_next(
+    gw: &mut Gateway<'_>,
+    shard: usize,
+    frames: &[Scene],
+    queues: &mut BTreeMap<PairKey, NodeQueue>,
+    heap: &mut BinaryHeap<Reverse<Event>>,
+    seq: &mut u64,
+    pair: &PairKey,
+    now_s: f64,
+) -> Result<()> {
+    let q = queues.get_mut(pair).expect("start_next on unknown queue");
+    if q.serving.is_some() {
+        return Ok(());
+    }
+    let Some(p) = q.backlog.pop_front() else {
+        return Ok(());
+    };
+    let start_s = now_s.max(p.arrival_s + p.routed.cost.latency_s);
+    let resp = gw.serve(pair, &frames[p.idx].image, start_s)?;
+    let done_s = start_s + resp.latency_s + devices::NETWORK_S;
+    heap.push(Reverse(Event {
+        t: done_s,
+        seq: *seq,
+        kind: EventKind::Completion {
+            shard,
+            pair: pair.clone(),
+        },
+    }));
+    *seq += 1;
+    // re-borrow: gw.serve() above needed &mut Gateway exclusively
+    queues.get_mut(pair).expect("queue vanished").serving =
+        Some(InService {
+            routed: p.routed,
+            idx: p.idx,
+            arrival_s: p.arrival_s,
+            start_s,
+            resp,
+        });
+    Ok(())
+}
+
+/// Render a dataset up front and drive it through the fleet.
+pub fn run_dataset(
+    fleet: &mut Fleet<'_>,
+    dataset: &Dataset,
+    arrivals: &ArrivalProcess,
+    seed: u64,
+) -> Result<FleetReport> {
+    let frames: Vec<Scene> = dataset.iter_scenes().collect();
+    let gts: Vec<Vec<GtBox>> =
+        frames.iter().map(|s| s.gt.clone()).collect();
+    run_frames(fleet, &frames, &gts, arrivals, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::coco;
+    use crate::gateway::router_by_name;
+
+    fn engine() -> Engine {
+        Engine::new(&crate::default_artifacts_dir()).unwrap()
+    }
+
+    fn base_store() -> ProfileStore {
+        let mut rows = Vec::new();
+        for g in 0..5 {
+            rows.push(PairProfile {
+                pair: PairKey::new("ssd_v1", "jetson_orin_nano"),
+                group: g,
+                map: 50.0,
+                latency_s: 0.005,
+                energy_mwh: 0.002,
+            });
+            rows.push(PairProfile {
+                pair: PairKey::new("yolov8n", "pi5"),
+                group: g,
+                map: if g >= 2 { 75.0 } else { 51.0 },
+                latency_s: 0.05,
+                energy_mwh: 0.05,
+            });
+        }
+        ProfileStore::new(rows)
+    }
+
+    fn build_fleet<'e>(
+        e: &'e Engine,
+        router: &str,
+        cfg: &FleetConfig,
+    ) -> Fleet<'e> {
+        FleetBuilder::new(e, base_store())
+            .build(router_by_name(router).unwrap(), 5.0, cfg)
+            .unwrap()
+    }
+
+    #[test]
+    fn builder_scales_to_200_nodes_over_8_shards() {
+        let e = engine();
+        let cfg = FleetConfig {
+            n_nodes: 200,
+            n_shards: 8,
+            ..Default::default()
+        };
+        let fleet = build_fleet(&e, "LE", &cfg);
+        assert_eq!(fleet.n_shards(), 8);
+        assert_eq!(fleet.n_nodes(), 200);
+        let mut all_pairs: Vec<PairKey> = Vec::new();
+        for gw in fleet.shards() {
+            let pairs = gw.store().pairs();
+            assert_eq!(pairs.len(), 25, "round-robin partition");
+            // every profiled node exists (and is healthy) in the pool
+            for p in &pairs {
+                assert!(gw.pool().is_healthy(p), "{p} missing from pool");
+            }
+            // 2 base pairs x 5 groups per node
+            assert_eq!(gw.store().rows().len(), 25 * 5);
+            all_pairs.extend(pairs);
+        }
+        let n = all_pairs.len();
+        all_pairs.sort();
+        all_pairs.dedup();
+        assert_eq!(all_pairs.len(), n, "node identities must be unique");
+        assert_eq!(n, 200);
+    }
+
+    #[test]
+    fn builder_rejects_degenerate_shapes() {
+        let e = engine();
+        let b = FleetBuilder::new(&e, base_store());
+        let spec = router_by_name("LE").unwrap();
+        for cfg in [
+            FleetConfig { n_shards: 0, ..Default::default() },
+            FleetConfig { n_nodes: 2, n_shards: 4, ..Default::default() },
+            FleetConfig { perturb: 1.5, ..Default::default() },
+        ] {
+            assert!(b.build(spec, 5.0, &cfg).is_err(), "{cfg:?}");
+        }
+    }
+
+    #[test]
+    fn low_rate_fleet_serves_everything_without_fallbacks() {
+        let e = engine();
+        let ds = coco::build(10, 5);
+        let cfg = FleetConfig {
+            n_nodes: 8,
+            n_shards: 2,
+            queue_capacity: 4,
+            ..Default::default()
+        };
+        let mut fl = build_fleet(&e, "LE", &cfg);
+        let report = run_dataset(
+            &mut fl,
+            &ds,
+            &ArrivalProcess::Uniform { gap_s: 5.0 },
+            3,
+        )
+        .unwrap();
+        assert_eq!(report.offered, 10);
+        assert_eq!(report.requests(), 10);
+        assert_eq!(report.dropped, 0);
+        assert_eq!(report.cross_shard_fallbacks, 0);
+        assert_eq!(report.peak_in_flight, 1);
+        assert_eq!(report.mean_queue_delay_s(), 0.0);
+        assert!(report.makespan_s > 0.0);
+        assert!(report.total_energy_mwh() > 0.0);
+    }
+
+    #[test]
+    fn saturated_fleet_falls_back_across_shards_then_sheds() {
+        let e = engine();
+        let ds = coco::build(12, 13);
+        // sticky dispatch + one source: every arrival targets the same
+        // primary shard, so saturation must spill across shards before
+        // anything is shed. Capacity 1 on 2x2 nodes = 4 total slots.
+        let cfg = FleetConfig {
+            n_nodes: 4,
+            n_shards: 2,
+            queue_capacity: 1,
+            dispatch: DispatchPolicy::Sticky,
+            n_sources: 1,
+            ..Default::default()
+        };
+        let mut fl = build_fleet(&e, "LE", &cfg);
+        let report = run_dataset(
+            &mut fl,
+            &ds,
+            &ArrivalProcess::Uniform { gap_s: 1e-6 },
+            2,
+        )
+        .unwrap();
+        assert!(
+            report.cross_shard_fallbacks > 0,
+            "expected cross-shard spill"
+        );
+        assert!(report.dropped > 0, "expected load shedding");
+        assert_eq!(report.requests() + report.dropped, report.offered);
+        // both shards ended up serving traffic
+        assert!(report.per_shard.iter().all(|m| m.requests > 0));
+        // every acquired slot was released: the driver's O(1) counters
+        // agree with the pools' ground-truth occupancy scan
+        assert_eq!(
+            fl.shards()
+                .iter()
+                .map(|g| g.pool().total_in_flight())
+                .sum::<usize>(),
+            0
+        );
+    }
+
+    #[test]
+    fn fleet_replays_bit_identically_from_seeds() {
+        let e = engine();
+        let ds = coco::build(16, 99);
+        let run = |e: &Engine| {
+            let cfg = FleetConfig {
+                n_nodes: 12,
+                n_shards: 3,
+                queue_capacity: 2,
+                ..Default::default()
+            };
+            let mut fl = build_fleet(e, "ED", &cfg);
+            run_dataset(
+                &mut fl,
+                &ds,
+                &ArrivalProcess::Poisson { rate_rps: 300.0 },
+                17,
+            )
+            .unwrap()
+            .to_json()
+            .dump()
+        };
+        assert_eq!(run(&e), run(&e));
+    }
+
+    #[test]
+    fn dispatch_orders_are_deterministic_and_complete() {
+        use std::collections::BTreeSet;
+        let in_flight = [3usize, 0, 5, 1];
+        for d in [
+            DispatchPolicy::Hash,
+            DispatchPolicy::LeastLoaded,
+            DispatchPolicy::Sticky,
+        ] {
+            let o = d.order(9, 4, &in_flight);
+            let mut sorted = o.clone();
+            sorted.sort();
+            assert_eq!(sorted, vec![0, 1, 2, 3], "{d:?} must cover");
+            assert_eq!(o, d.order(9, 4, &in_flight), "{d:?} deterministic");
+        }
+        // least-loaded visits shards in load order
+        assert_eq!(
+            DispatchPolicy::LeastLoaded.order(0, 4, &in_flight),
+            vec![1, 3, 0, 2]
+        );
+        // sticky: requests from the same source share an order
+        assert_eq!(
+            DispatchPolicy::Sticky.order(2, 4, &in_flight),
+            DispatchPolicy::Sticky.order(6, 4, &in_flight)
+        );
+        // hash spreads primaries across every shard eventually
+        let mut seen = BTreeSet::new();
+        for idx in 0..64 {
+            seen.insert(DispatchPolicy::Hash.order(idx, 4, &in_flight)[0]);
+        }
+        assert_eq!(seen.len(), 4);
+        // parsing round-trips the labels
+        for d in [
+            DispatchPolicy::Hash,
+            DispatchPolicy::LeastLoaded,
+            DispatchPolicy::Sticky,
+        ] {
+            assert_eq!(DispatchPolicy::parse(d.label()), Some(d));
+        }
+        assert_eq!(DispatchPolicy::parse("wat"), None);
+    }
+
+    #[test]
+    fn report_imbalance_and_json_shape() {
+        let mut m0 = RunMetrics::new("s0");
+        m0.requests = 6;
+        let mut m1 = RunMetrics::new("s1");
+        m1.requests = 2;
+        let report = FleetReport {
+            per_shard: vec![m0, m1],
+            offered: 9,
+            dropped: 1,
+            node_fallbacks: 0,
+            cross_shard_fallbacks: 3,
+            makespan_s: 4.0,
+            peak_in_flight: 5,
+        };
+        assert_eq!(report.requests(), 8);
+        assert!((report.shard_imbalance() - 1.5).abs() < 1e-12);
+        assert!((report.goodput_rps() - 2.0).abs() < 1e-12);
+        let j = report.to_json();
+        assert_eq!(j.req("requests").unwrap().as_usize(), Some(8));
+        assert_eq!(j.req("dropped").unwrap().as_usize(), Some(1));
+        assert_eq!(
+            j.req("cross_shard_fallbacks").unwrap().as_usize(),
+            Some(3)
+        );
+        assert_eq!(j.req("shards").unwrap().as_arr().unwrap().len(), 2);
+    }
+}

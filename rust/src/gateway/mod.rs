@@ -153,6 +153,12 @@ impl<'e> Gateway<'e> {
         &self.pool
     }
 
+    /// The profiling table this gateway routes over (a fleet shard's
+    /// store covers exactly its own nodes).
+    pub fn store(&self) -> &ProfileStore {
+        &self.store
+    }
+
     /// Admission phase: estimate + group + policy routing, skipping
     /// unavailable endpoints. If the chosen node is down — or, in open
     /// loop, its bounded queue is full — re-route over the store with

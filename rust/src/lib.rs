@@ -21,9 +21,11 @@
 //! * [`gateway`] — the serving loop gluing estimator → router → node.
 //! * [`workload`] — closed-loop (piggy-backed) request driver, plus the
 //!   open-loop discrete-event concurrent driver ([`workload::openloop`]).
+//! * [`fleet`] — multi-gateway sharded serving: synthesized N-node
+//!   fleets partitioned over K shard gateways with cross-shard fallback.
 //! * [`metrics`] — energy/latency/accuracy accounting and reports.
 //! * [`experiments`] — one driver per paper table/figure, plus the
-//!   open-loop saturation sweep.
+//!   open-loop saturation and fleet sweeps.
 
 pub mod config;
 pub mod dataset;
@@ -31,6 +33,7 @@ pub mod detection;
 pub mod devices;
 pub mod estimators;
 pub mod experiments;
+pub mod fleet;
 pub mod gateway;
 pub mod metrics;
 pub mod models;

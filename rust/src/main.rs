@@ -5,13 +5,17 @@
 //!   experiment  run a paper experiment: fig2|fig4|fig5|table1|fig6|fig7|
 //!               fig8|fig9|overhead|openloop|all
 //!   serve       route one dataset through a chosen router and report;
-//!               `--open-loop` switches to concurrent Poisson arrivals
+//!               `--open-loop` switches to concurrent Poisson arrivals,
+//!               `--fleet` to sharded multi-gateway fleet serving
 //!   list        list models, devices, routers
 //!
 //! Common options: --delta <mAP pts> --images <n> --per-group <n>
 //! --frames <n> --profile-per-group <n> --seed <n> --routers a,b,c
 //! --config <file.toml>; open-loop options: --rate <req/s>
-//! --queue-cap <n> --rates r1,r2,r3
+//! --queue-cap <n> --rates r1,r2,r3; fleet options: --nodes <n>
+//! --shards <k> --dispatch hash|least|sticky, and for the sweep
+//! --fleet-sizes a,b --fleet-shards a,b --fleet-routers a,b
+//! --fleet-rate <req/s> --fleet-requests <n> --fleet-perturb <f>
 
 use anyhow::Result;
 
@@ -27,11 +31,17 @@ USAGE:
   ecore profile    [--profile-per-group N] [--seed S]
   ecore experiment <id|all> [--images N] [--delta D] [--routers a,b,c]
                    [--rates r1,r2,r3] [--queue-cap N]
+                   [--fleet-sizes a,b] [--fleet-shards a,b]
+                   [--fleet-routers a,b] [--fleet-rate R]
+                   [--fleet-requests N] [--dispatch hash|least|sticky]
   ecore serve      [--router ED] [--dataset coco|balanced] [--images N]
                    [--open-loop] [--rate R] [--queue-cap N]
+                   [--fleet] [--nodes N] [--shards K]
+                   [--dispatch hash|least|sticky]
   ecore list
 
 experiments: fig2 fig4 fig5 table1 fig6 fig7 fig8 fig9 overhead openloop
+             fleet
 ";
 
 fn main() -> Result<()> {
@@ -98,6 +108,74 @@ fn main() -> Result<()> {
                     "unknown dataset '{other}' (coco|balanced; video is fig8)"
                 ),
             };
+            if args.flag("fleet") {
+                let dispatch_s =
+                    args.str_or("dispatch", &h.cfg.fleet_dispatch);
+                let dispatch =
+                    ecore::fleet::DispatchPolicy::parse(&dispatch_s)
+                        .ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "unknown dispatch '{dispatch_s}' (hash|least|sticky)"
+                            )
+                        })?;
+                let fleet_cfg = ecore::fleet::FleetConfig {
+                    n_nodes: args.usize_or("nodes", 24),
+                    n_shards: args.usize_or("shards", 4),
+                    perturb: h.cfg.fleet_perturb,
+                    queue_capacity: h.cfg.queue_capacity,
+                    dispatch,
+                    n_sources: h.cfg.fleet_sources,
+                    seed: h.cfg.seed,
+                    drift: None,
+                };
+                let mut fl = ecore::fleet::FleetBuilder::new(
+                    &h.engine,
+                    deployed.clone(),
+                )
+                .build(spec, h.cfg.delta_map, &fleet_cfg)?;
+                let report = ecore::fleet::run_dataset(
+                    &mut fl,
+                    &dataset,
+                    &ecore::workload::openloop::ArrivalProcess::Poisson {
+                        rate_rps: h.cfg.rate_rps,
+                    },
+                    h.cfg.seed,
+                )?;
+                println!(
+                    "--- serve --fleet ({} over {} nodes / {} shards, {} dispatch, {} req/s) ---",
+                    spec.name,
+                    fleet_cfg.n_nodes,
+                    fleet_cfg.n_shards,
+                    dispatch.label(),
+                    h.cfg.rate_rps
+                );
+                println!(
+                    "served {}/{} (dropped {}, node fallbacks {}, cross-shard {}), goodput {:.2} req/s over {:.2} s",
+                    report.requests(),
+                    report.offered,
+                    report.dropped,
+                    report.node_fallbacks,
+                    report.cross_shard_fallbacks,
+                    report.goodput_rps(),
+                    report.makespan_s
+                );
+                println!(
+                    "latency p50/p95/p99 = {:.1}/{:.1}/{:.1} ms, mean queue delay {:.1} ms, shard imbalance {:.2}, peak in-flight {}",
+                    1000.0 * report.latency_percentile(50.0),
+                    1000.0 * report.latency_percentile(95.0),
+                    1000.0 * report.latency_percentile(99.0),
+                    1000.0 * report.mean_queue_delay_s(),
+                    report.shard_imbalance(),
+                    report.peak_in_flight
+                );
+                println!(
+                    "mAP {:.2}, energy {:.2} mWh ({:.4} mWh/request)",
+                    report.map(),
+                    report.total_energy_mwh(),
+                    report.energy_per_request_mwh()
+                );
+                return Ok(());
+            }
             if args.flag("open-loop") {
                 let mut gw = ecore::experiments::serve::build_gateway(
                     &h,

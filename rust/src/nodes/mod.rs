@@ -174,6 +174,26 @@ impl NodePool {
         })
     }
 
+    /// Wrap already-constructed nodes. The fleet builder uses this:
+    /// synthesized nodes carry per-unit perturbed `DeviceSpec`s that
+    /// exist nowhere in the base device table, so `deploy`'s
+    /// lookup-by-name path does not apply. Callers are responsible for
+    /// preloading the artifacts the nodes reference.
+    pub fn from_nodes(nodes: Vec<EdgeNode>) -> Self {
+        Self {
+            nodes,
+            queue_capacity: DEFAULT_QUEUE_CAPACITY,
+        }
+    }
+
+    /// Requests currently in this pool's system across all nodes
+    /// (queued + in service). The fleet driver keeps its own O(1)
+    /// per-shard counters for dispatch; this scan is the ground truth
+    /// those counters are checked against (and a monitoring hook).
+    pub fn total_in_flight(&self) -> usize {
+        self.nodes.iter().map(|n| n.in_flight).sum()
+    }
+
     pub fn len(&self) -> usize {
         self.nodes.len()
     }
@@ -358,6 +378,33 @@ mod tests {
         let ghost = PairKey::new("ssd_v1", "pi3");
         assert!(!pool.is_available(&ghost));
         pool.release(&ghost);
+    }
+
+    #[test]
+    fn from_nodes_pool_tracks_occupancy() {
+        let e = engine();
+        let fleet = devices::fleet();
+        let spec = devices::find(&fleet, "pi5").unwrap();
+        // synthesized identities: same model/device class, unique keys
+        let a = PairKey::new("ssd_v1", "pi5#0000");
+        let b = PairKey::new("ssd_v1", "pi5#0001");
+        let nodes = vec![
+            EdgeNode::new(&e, a.clone(), spec.clone(), 1).unwrap(),
+            EdgeNode::new(&e, b.clone(), spec.scaled(1.2, 0.9), 2)
+                .unwrap(),
+        ];
+        let mut pool = NodePool::from_nodes(nodes);
+        assert_eq!(pool.len(), 2);
+        assert_eq!(pool.queue_capacity(), DEFAULT_QUEUE_CAPACITY);
+        assert!(pool.is_available(&a));
+        assert!(pool.is_available(&b));
+        assert_eq!(pool.total_in_flight(), 0);
+        assert!(pool.acquire(&a));
+        assert!(pool.acquire(&b));
+        assert!(pool.acquire(&b));
+        assert_eq!(pool.total_in_flight(), 3);
+        pool.release(&a);
+        assert_eq!(pool.total_in_flight(), 2);
     }
 
     #[test]

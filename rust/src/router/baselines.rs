@@ -113,7 +113,13 @@ impl Policy {
             PolicyKind::HighestMapPerGroup => store
                 .group_rows(group)
                 .into_iter()
-                .max_by(|a, b| a.map.partial_cmp(&b.map).unwrap())
+                // total order, mAP ties toward the lower pair key —
+                // NaN-safe and independent of row order
+                .max_by(|a, b| {
+                    a.map
+                        .total_cmp(&b.map)
+                        .then_with(|| b.pair.cmp(&a.pair))
+                })
                 .map(|r| r.pair.clone()),
         }
     }
@@ -141,9 +147,13 @@ fn min_by_metric(
     pairs: &[PairKey],
     metric: impl Fn(&PairKey) -> f64,
 ) -> Option<PairKey> {
+    // total order with a pair-key tiebreak: NaN cannot panic the
+    // comparison, and metric ties resolve deterministically
     pairs
         .iter()
-        .min_by(|a, b| metric(a).partial_cmp(&metric(b)).unwrap())
+        .min_by(|a, b| {
+            metric(a).total_cmp(&metric(b)).then_with(|| a.cmp(b))
+        })
         .cloned()
 }
 

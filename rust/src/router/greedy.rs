@@ -35,10 +35,17 @@ impl GreedyRouter {
             .map(|r| r.map)
             .fold(f64::NEG_INFINITY, f64::max);
         let map_min = map_max - self.delta_map;
-        // lines 12-14: filter, then pick the lowest-energy row
+        // lines 12-14: filter, then pick the lowest-energy row. The
+        // comparison is total (NaN-safe — non-finite rows are also
+        // rejected at ProfileStore insertion) and energy ties break by
+        // pair key, so the choice is independent of row order.
         rows.into_iter()
             .filter(|r| r.map >= map_min)
-            .min_by(|a, b| a.energy_mwh.partial_cmp(&b.energy_mwh).unwrap())
+            .min_by(|a, b| {
+                a.energy_mwh
+                    .total_cmp(&b.energy_mwh)
+                    .then_with(|| a.pair.cmp(&b.pair))
+            })
             .map(|r| r.pair.clone())
     }
 }
@@ -77,6 +84,47 @@ mod tests {
     fn unknown_group_routes_none() {
         let s = test_store();
         assert_eq!(GreedyRouter::new(5.0).route(&s, 9), None);
+    }
+
+    #[test]
+    fn nan_energy_rows_cannot_poison_routing() {
+        // regression: `min_by(partial_cmp().unwrap())` panicked when a
+        // NaN energy row entered the table; non-finite rows are now
+        // rejected at ProfileStore insertion and the comparison itself
+        // is total, so a poisoned profiling dump degrades gracefully.
+        let row = |m: &str, map: f64, lat: f64, e: f64| PairProfile {
+            pair: PairKey::new(m, "d"),
+            group: 0,
+            map,
+            latency_s: lat,
+            energy_mwh: e,
+        };
+        let s = ProfileStore::new(vec![
+            row("ok", 50.0, 0.01, 1.0),
+            row("nan_energy", 60.0, 0.01, f64::NAN),
+            row("inf_latency", 55.0, f64::INFINITY, 0.5),
+            row("nan_map", f64::NAN, 0.01, 0.1),
+        ]);
+        assert_eq!(s.rows().len(), 1);
+        let got = GreedyRouter::new(100.0).route(&s, 0);
+        assert_eq!(got, Some(PairKey::new("ok", "d")));
+    }
+
+    #[test]
+    fn equal_energy_ties_break_by_pair_key() {
+        let row = |m: &str| PairProfile {
+            pair: PairKey::new(m, "d"),
+            group: 0,
+            map: 50.0,
+            latency_s: 0.01,
+            energy_mwh: 1.0,
+        };
+        // identical rows under both insertion orders -> same winner
+        let fwd = ProfileStore::new(vec![row("a"), row("b"), row("c")]);
+        let rev = ProfileStore::new(vec![row("c"), row("b"), row("a")]);
+        let r = GreedyRouter::new(5.0);
+        assert_eq!(r.route(&fwd, 0), Some(PairKey::new("a", "d")));
+        assert_eq!(r.route(&fwd, 0), r.route(&rev, 0));
     }
 
     fn random_store(r: &mut Rng) -> ProfileStore {

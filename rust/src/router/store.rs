@@ -50,7 +50,20 @@ pub struct ProfileStore {
 }
 
 impl ProfileStore {
+    /// Build a store from profiled rows. Rows with a non-finite
+    /// measurement (NaN/±inf mAP, latency, or energy) are rejected
+    /// here: one poisoned row would otherwise make every downstream
+    /// float comparison (Algorithm 1, baselines, testbed selection)
+    /// unreliable.
     pub fn new(rows: Vec<PairProfile>) -> Self {
+        let rows = rows
+            .into_iter()
+            .filter(|r| {
+                r.map.is_finite()
+                    && r.latency_s.is_finite()
+                    && r.energy_mwh.is_finite()
+            })
+            .collect();
         let mut s = Self {
             rows,
             by_group: BTreeMap::new(),
@@ -225,6 +238,35 @@ mod tests {
         let k = PairKey::new("big", "dev_a");
         assert_eq!(s.lookup(&k, 1).unwrap().map, 60.0);
         assert!((s.overall_map(&k) - 56.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn non_finite_rows_rejected_at_insertion() {
+        let mut rows = vec![PairProfile {
+            pair: PairKey::new("ok", "d"),
+            group: 0,
+            map: 40.0,
+            latency_s: 0.02,
+            energy_mwh: 2.0,
+        }];
+        for (map, lat, e) in [
+            (f64::NAN, 0.01, 1.0),
+            (50.0, f64::INFINITY, 1.0),
+            (50.0, 0.01, f64::NEG_INFINITY),
+        ] {
+            rows.push(PairProfile {
+                pair: PairKey::new("bad", "d"),
+                group: 0,
+                map,
+                latency_s: lat,
+                energy_mwh: e,
+            });
+        }
+        let s = ProfileStore::new(rows);
+        assert_eq!(s.rows().len(), 1);
+        assert_eq!(s.pairs(), vec![PairKey::new("ok", "d")]);
+        // the group index never references a rejected row
+        assert_eq!(s.group_rows(0).len(), 1);
     }
 
     #[test]

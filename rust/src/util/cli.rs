@@ -60,6 +60,7 @@ impl Args {
                 "quiet",
                 "no-cache",
                 "open-loop",
+                "fleet",
             ],
         )
     }
@@ -104,6 +105,17 @@ impl Args {
 
     /// Comma-separated numeric list option (non-numeric items skipped).
     pub fn f64_list_or(&self, name: &str, default: &[f64]) -> Vec<f64> {
+        match self.get(name) {
+            Some(v) => v
+                .split(',')
+                .filter_map(|s| s.trim().parse().ok())
+                .collect(),
+            None => default.to_vec(),
+        }
+    }
+
+    /// Comma-separated integer list option (non-numeric items skipped).
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Vec<usize> {
         match self.get(name) {
             Some(v) => v
                 .split(',')
@@ -165,6 +177,15 @@ mod tests {
         let a = args(&["--open-loop", "serve-me"]);
         assert!(a.flag("open-loop"));
         assert_eq!(a.positional, vec!["serve-me"]);
+    }
+
+    #[test]
+    fn fleet_is_a_flag_and_usize_lists_parse() {
+        let a = args(&["--fleet", "coco", "--fleet-sizes", "8, 16,x,200"]);
+        assert!(a.flag("fleet"));
+        assert_eq!(a.positional, vec!["coco"]);
+        assert_eq!(a.usize_list_or("fleet-sizes", &[]), vec![8, 16, 200]);
+        assert_eq!(a.usize_list_or("missing", &[4]), vec![4]);
     }
 
     #[test]

@@ -25,7 +25,22 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
+    percentile_of_sorted(&v, p)
+}
+
+/// Several percentiles from one copy + sort (reports query p50/p95/p99
+/// together; sorting the sample set once instead of per query).
+pub fn percentiles(xs: &[f64], ps: &[f64]) -> Vec<f64> {
+    if xs.is_empty() {
+        return vec![0.0; ps.len()];
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.total_cmp(b));
+    ps.iter().map(|&p| percentile_of_sorted(&v, p)).collect()
+}
+
+fn percentile_of_sorted(v: &[f64], p: f64) -> f64 {
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -63,6 +78,22 @@ mod tests {
         assert_eq!(percentile(&xs, 50.0), 3.0);
         assert_eq!(percentile(&xs, 100.0), 5.0);
         assert_eq!(percentile(&xs, 25.0), 2.0);
+    }
+
+    #[test]
+    fn batched_percentiles_match_single_queries() {
+        // `super::` path: the sibling test fn `percentiles` shadows
+        // the glob-imported function inside this module
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        let ps = [0.0, 25.0, 50.0, 100.0];
+        let batch = super::percentiles(&xs, &ps);
+        for (i, &p) in ps.iter().enumerate() {
+            assert_eq!(batch[i], percentile(&xs, p));
+        }
+        assert_eq!(
+            super::percentiles(&[], &[50.0, 99.0]),
+            vec![0.0, 0.0]
+        );
     }
 
     #[test]

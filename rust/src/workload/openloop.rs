@@ -127,10 +127,31 @@ impl OpenLoopReport {
             0.0
         }
     }
+
+    /// Stable JSON report (field order fixed by the Json substrate's
+    /// BTreeMap) — the golden-trace determinism tests compare this dump
+    /// byte for byte across runs.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("offered", Json::num(self.offered as f64)),
+            ("dropped", Json::num(self.dropped as f64)),
+            ("fallbacks", Json::num(self.fallbacks as f64)),
+            ("makespan_s", Json::num(self.makespan_s)),
+            ("peak_in_flight", Json::num(self.peak_in_flight as f64)),
+            ("goodput_rps", Json::num(self.goodput_rps())),
+            ("metrics", self.metrics.to_json()),
+        ])
+    }
 }
 
 /// One event on the virtual clock. Ordered by (time, sequence) so ties
 /// resolve in insertion order and the whole run is deterministic.
+///
+/// NOTE: `fleet::run_frames` carries a shard-aware copy of this event
+/// machinery (ordering, queue-delay formula, completion scheduling).
+/// A fix to either copy must land in both — the golden-trace tests pin
+/// each side's behavior.
 struct Event {
     t: f64,
     seq: u64,

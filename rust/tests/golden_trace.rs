@@ -1,0 +1,143 @@
+//! Golden-trace determinism tests: fixed-seed open-loop and fleet runs
+//! must serialize their reports bit-identically across two in-process
+//! runs, and a golden file pins the serialized trace across commits so
+//! silent behavior drift (router, device model, event ordering, JSON
+//! substrate) fails loudly.
+//!
+//! The golden files bootstrap on first run: if
+//! `rust/tests/golden/<name>.json` is absent it is written and the test
+//! passes (check the file in); afterwards the dump is compared byte for
+//! byte. To accept an *intentional* behavior change, delete the golden
+//! file, re-run the test, and commit the regenerated file.
+
+use std::path::PathBuf;
+
+use ecore::fleet::{self, DispatchPolicy, FleetBuilder, FleetConfig};
+use ecore::gateway::{router_by_name, Gateway};
+use ecore::nodes::NodePool;
+use ecore::router::{PairKey, PairProfile, ProfileStore};
+use ecore::runtime::Engine;
+use ecore::workload::openloop::{self, ArrivalProcess, OpenLoopConfig};
+
+fn engine() -> Engine {
+    Engine::new(&ecore::default_artifacts_dir()).unwrap()
+}
+
+fn base_store() -> ProfileStore {
+    let mut rows = Vec::new();
+    for g in 0..5 {
+        rows.push(PairProfile {
+            pair: PairKey::new("ssd_v1", "jetson_orin_nano"),
+            group: g,
+            map: 50.0,
+            latency_s: 0.005,
+            energy_mwh: 0.002,
+        });
+        rows.push(PairProfile {
+            pair: PairKey::new("yolov8n", "pi5"),
+            group: g,
+            map: if g >= 2 { 75.0 } else { 51.0 },
+            latency_s: 0.05,
+            energy_mwh: 0.05,
+        });
+    }
+    ProfileStore::new(rows)
+}
+
+/// One fixed-seed open-loop run (saturating enough to exercise
+/// queueing, fallbacks, and shedding), serialized.
+fn openloop_dump(e: &Engine) -> String {
+    let ds = ecore::dataset::coco::build(14, 99);
+    let store = base_store();
+    let pool =
+        NodePool::deploy(e, &store.pairs(), &ecore::devices::fleet(), 3)
+            .unwrap();
+    let mut gw =
+        Gateway::new(e, router_by_name("ED").unwrap(), store, pool, 5.0, 3);
+    let report = openloop::run_dataset(
+        &mut gw,
+        &ds,
+        &OpenLoopConfig {
+            arrivals: ArrivalProcess::Poisson { rate_rps: 60.0 },
+            queue_capacity: 4,
+            seed: 17,
+        },
+    )
+    .unwrap();
+    report.to_json().pretty()
+}
+
+/// One fixed-seed fleet run (12 perturbed nodes over 3 shards, tight
+/// queues so cross-shard fallback fires), serialized.
+fn fleet_dump(e: &Engine) -> String {
+    let ds = ecore::dataset::coco::build(14, 55);
+    let mut fl = FleetBuilder::new(e, base_store())
+        .build(
+            router_by_name("OB").unwrap(),
+            5.0,
+            &FleetConfig {
+                n_nodes: 12,
+                n_shards: 3,
+                perturb: 0.2,
+                queue_capacity: 2,
+                dispatch: DispatchPolicy::LeastLoaded,
+                n_sources: 4,
+                seed: 9,
+                drift: None,
+            },
+        )
+        .unwrap();
+    let report = fleet::run_dataset(
+        &mut fl,
+        &ds,
+        &ArrivalProcess::Poisson { rate_rps: 120.0 },
+        9,
+    )
+    .unwrap();
+    report.to_json().pretty()
+}
+
+#[test]
+fn open_loop_report_serializes_bit_identically_across_runs() {
+    let e = engine();
+    assert_eq!(openloop_dump(&e), openloop_dump(&e));
+}
+
+#[test]
+fn fleet_report_serializes_bit_identically_across_runs() {
+    let e = engine();
+    assert_eq!(fleet_dump(&e), fleet_dump(&e));
+}
+
+fn check_golden(name: &str, dump: &str) {
+    let dir =
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("{name}.json"));
+    if path.exists() {
+        let golden = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(
+            golden,
+            dump,
+            "{name}: trace drifted from the checked-in golden at {}. \
+             If the behavior change is intentional, delete the file, \
+             re-run, and commit the regenerated golden.",
+            path.display()
+        );
+    } else {
+        std::fs::write(&path, dump).unwrap();
+        eprintln!("[golden] bootstrapped {}", path.display());
+    }
+}
+
+#[test]
+fn golden_openloop_trace_is_pinned() {
+    let e = engine();
+    check_golden("openloop_trace", &openloop_dump(&e));
+}
+
+#[test]
+fn golden_fleet_trace_is_pinned() {
+    let e = engine();
+    check_golden("fleet_trace", &fleet_dump(&e));
+}

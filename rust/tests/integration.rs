@@ -9,9 +9,43 @@ use ecore::experiments::serve::{
 };
 use ecore::experiments::Harness;
 use ecore::gateway::{paper_routers, router_by_name, Gateway};
+use ecore::metrics::RunMetrics;
 use ecore::nodes::NodePool;
 use ecore::profiling::testbed;
+use ecore::router::{PairKey, PairProfile, ProfileStore};
+use ecore::runtime::Engine;
 use ecore::workload;
+use ecore::workload::openloop::{ArrivalProcess, OpenLoopConfig};
+
+/// Tiny hand-built deployment (no profiling grid needed): two pairs
+/// covering all five groups, matching the shape used by the workload
+/// and openloop module tests.
+fn tiny_store() -> ProfileStore {
+    let mut rows = Vec::new();
+    for g in 0..5 {
+        rows.push(PairProfile {
+            pair: PairKey::new("ssd_v1", "jetson_orin_nano"),
+            group: g,
+            map: 50.0,
+            latency_s: 0.005,
+            energy_mwh: 0.002,
+        });
+        rows.push(PairProfile {
+            pair: PairKey::new("yolov8n", "pi5"),
+            group: g,
+            map: if g >= 2 { 75.0 } else { 51.0 },
+            latency_s: 0.05,
+            energy_mwh: 0.05,
+        });
+    }
+    ProfileStore::new(rows)
+}
+
+fn tiny_gateway<'e>(e: &'e Engine, router: &str) -> Gateway<'e> {
+    let store = tiny_store();
+    let pool = NodePool::deploy(e, &store.pairs(), &fleet(), 1).unwrap();
+    Gateway::new(e, router_by_name(router).unwrap(), store, pool, 5.0, 1)
+}
 
 fn harness() -> Harness {
     // tiny profiling set: fast but structurally faithful
@@ -165,6 +199,112 @@ fn video_protocol_runs_with_pseudo_labels() {
     // accuracy against pseudo labels should be solid (the router picks
     // strong models for crowded frames)
     assert!(m.map() > 30.0, "video mAP {}", m.map());
+}
+
+#[test]
+fn ob_estimator_starts_at_zero_and_lags_by_one_request() {
+    // OB semantics (paper §3.3.3): the estimate for request i is the
+    // backend detection count of request i-1; the very first request
+    // uses the default estimate 0. Checked request by request against
+    // the gateway's observed outcomes.
+    let e = Engine::new(&ecore::default_artifacts_dir()).unwrap();
+    let mut gw = tiny_gateway(&e, "OB");
+    let mut m = RunMetrics::new("OB");
+    let ds = coco::build(6, 91);
+    let mut prev_detections: Option<usize> = None;
+    for scene in ds.iter_scenes() {
+        let out = gw
+            .handle(&scene.image, scene.gt.len(), &scene.gt, &mut m)
+            .unwrap();
+        match prev_detections {
+            None => assert_eq!(out.estimate, 0, "OB must start at 0"),
+            Some(prev) => assert_eq!(
+                out.estimate, prev,
+                "OB estimate must equal the previous response's count"
+            ),
+        }
+        prev_detections = Some(out.detections);
+    }
+    // OB never runs gateway-side inference
+    assert_eq!(m.gateway_energy_mwh, 0.0);
+    assert_eq!(m.gateway_latency_s, 0.0);
+}
+
+#[test]
+fn gateway_cost_is_accounted_exactly_once_per_request() {
+    // The estimator's GatewayCost is charged at route() time and must
+    // land in RunMetrics exactly once per served request — neither
+    // dropped on the open-loop path nor double-counted by fallback
+    // re-routing. ED/SF costs are deterministic per model, so the run
+    // totals must equal requests x per-request profile exactly.
+    let e = Engine::new(&ecore::default_artifacts_dir()).unwrap();
+    let n = 5usize;
+    let ds = coco::build(n, 17);
+    for (router, model) in [
+        ("ED", ecore::models::CANNY_MODEL),
+        ("SF", ecore::models::FRONTEND_MODEL),
+    ] {
+        let per = ecore::devices::gateway_spec()
+            .profile(&e.meta(model).unwrap());
+        // closed loop
+        let mut gw = tiny_gateway(&e, router);
+        let mut m = RunMetrics::new(router);
+        for scene in ds.iter_scenes() {
+            gw.handle(&scene.image, scene.gt.len(), &scene.gt, &mut m)
+                .unwrap();
+        }
+        assert_eq!(m.requests, n);
+        assert!(
+            (m.gateway_energy_mwh - n as f64 * per.energy_mwh).abs()
+                < 1e-9,
+            "{router}: closed-loop gateway energy {} != {n} x {}",
+            m.gateway_energy_mwh,
+            per.energy_mwh
+        );
+        assert!(
+            (m.gateway_latency_s - n as f64 * per.latency_s).abs() < 1e-9,
+            "{router}: closed-loop gateway latency"
+        );
+        // open loop (no shedding at this gentle pacing): still exactly
+        // once per *served* request
+        let mut gw = tiny_gateway(&e, router);
+        let report = ecore::workload::openloop::run_dataset(
+            &mut gw,
+            &ds,
+            &OpenLoopConfig {
+                arrivals: ArrivalProcess::Uniform { gap_s: 2.0 },
+                queue_capacity: 8,
+                seed: 4,
+            },
+        )
+        .unwrap();
+        assert_eq!(report.dropped, 0);
+        let m = &report.metrics;
+        assert!(
+            (m.gateway_energy_mwh
+                - m.requests as f64 * per.energy_mwh)
+                .abs()
+                < 1e-9,
+            "{router}: open-loop gateway energy"
+        );
+        assert!(
+            (m.gateway_latency_s - m.requests as f64 * per.latency_s)
+                .abs()
+                < 1e-9,
+            "{router}: open-loop gateway latency"
+        );
+    }
+    // count-agnostic and feedback routers pay nothing at the gateway
+    for router in ["LE", "OB"] {
+        let mut gw = tiny_gateway(&e, router);
+        let mut m = RunMetrics::new(router);
+        for scene in ds.iter_scenes() {
+            gw.handle(&scene.image, scene.gt.len(), &scene.gt, &mut m)
+                .unwrap();
+        }
+        assert_eq!(m.gateway_energy_mwh, 0.0, "{router}");
+        assert_eq!(m.gateway_latency_s, 0.0, "{router}");
+    }
 }
 
 #[test]

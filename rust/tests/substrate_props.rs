@@ -3,7 +3,7 @@
 //! robustness, and config/CLI interactions — the failure-injection side
 //! of the "build every substrate" rule.
 
-use ecore::router::{PairKey, PairProfile, ProfileStore};
+use ecore::router::{GreedyRouter, PairKey, PairProfile, ProfileStore};
 use ecore::util::json::{self, Json};
 use ecore::util::prop::forall_ok;
 use ecore::util::rng::Rng;
@@ -133,6 +133,174 @@ fn prop_store_roundtrip_and_restrict_invariants() {
             }
             Ok(())
         },
+    );
+}
+
+// ---- Algorithm 1 edge cases (paper §3.2 / Theorem 3.1) -------------------
+
+/// Check the greedy choice against the brute-force optimum of the
+/// constrained problem on one (store, delta, group) instance.
+fn check_theorem_31(
+    store: &ProfileStore,
+    delta: f64,
+    group: usize,
+) -> Result<(), String> {
+    let rows = store.group_rows(group);
+    let got = match GreedyRouter::new(delta).route(store, group) {
+        Some(p) => p,
+        None if rows.is_empty() => return Ok(()),
+        None => return Err("no route for a non-empty group".into()),
+    };
+    let map_max = rows
+        .iter()
+        .map(|r| r.map)
+        .fold(f64::NEG_INFINITY, f64::max);
+    let chosen = rows
+        .iter()
+        .find(|r| r.pair == got)
+        .ok_or("chosen pair not in group")?;
+    // (i) feasibility: within delta of the group's best mAP
+    if chosen.map < map_max - delta - 1e-12 {
+        return Err(format!(
+            "constraint violated: {} < {map_max} - {delta}",
+            chosen.map
+        ));
+    }
+    // (ii) optimality: no feasible row has strictly lower energy
+    let brute = rows
+        .iter()
+        .filter(|r| r.map >= map_max - delta)
+        .map(|r| r.energy_mwh)
+        .fold(f64::INFINITY, f64::min);
+    if chosen.energy_mwh > brute + 1e-12 {
+        return Err(format!(
+            "not optimal: {} > {brute}",
+            chosen.energy_mwh
+        ));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_greedy_tie_break_is_row_order_independent() {
+    // energies and mAPs drawn from coarse grids so exact ties are
+    // common; the routed pair must not depend on row insertion order.
+    forall_ok(
+        81,
+        200,
+        |r| {
+            let n = 3 + r.below(6) as usize;
+            let mut rows = Vec::new();
+            for p in 0..n {
+                rows.push(PairProfile {
+                    pair: PairKey::new(&format!("m{p}"), "d"),
+                    group: 0,
+                    map: 50.0 + (r.below(5) * 10) as f64,
+                    latency_s: 0.01,
+                    energy_mwh: (1 + r.below(4)) as f64 * 0.5,
+                });
+            }
+            let mut shuffled = rows.clone();
+            r.shuffle(&mut shuffled);
+            let delta = (r.below(4) * 10) as f64;
+            (rows, shuffled, delta)
+        },
+        |(rows, shuffled, delta)| {
+            let a = GreedyRouter::new(*delta)
+                .route(&ProfileStore::new(rows.clone()), 0);
+            let b = GreedyRouter::new(*delta)
+                .route(&ProfileStore::new(shuffled.clone()), 0);
+            if a != b {
+                return Err(format!("order-dependent: {a:?} vs {b:?}"));
+            }
+            if a.is_none() {
+                return Err("no route".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_greedy_delta_extremes() {
+    // delta = 0: accuracy-first, the choice achieves the group's
+    // mAP_max exactly. delta >= mAP_max: the margin constraint is
+    // vacuous and the choice is the group's pure energy minimum.
+    forall_ok(
+        82,
+        150,
+        |r| random_store(r),
+        |store| {
+            for g in store.groups() {
+                let rows = store.group_rows(g);
+                let map_max = rows
+                    .iter()
+                    .map(|r| r.map)
+                    .fold(f64::NEG_INFINITY, f64::max);
+
+                let tight = GreedyRouter::new(0.0)
+                    .route(store, g)
+                    .ok_or("no route at delta 0")?;
+                let chosen = rows
+                    .iter()
+                    .find(|r| r.pair == tight)
+                    .ok_or("delta-0 choice not in group")?;
+                if (chosen.map - map_max).abs() > 1e-12 {
+                    return Err(format!(
+                        "delta 0 chose mAP {} != max {map_max}",
+                        chosen.map
+                    ));
+                }
+
+                let loose = GreedyRouter::new(101.0)
+                    .route(store, g)
+                    .ok_or("no route at delta 101")?;
+                let min_e = rows
+                    .iter()
+                    .map(|r| r.energy_mwh)
+                    .fold(f64::INFINITY, f64::min);
+                let got = rows
+                    .iter()
+                    .find(|r| r.pair == loose)
+                    .ok_or("loose choice not in group")?
+                    .energy_mwh;
+                if (got - min_e).abs() > 1e-12 {
+                    return Err(format!(
+                        "vacuous delta chose energy {got} != min {min_e}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_theorem_31_holds_on_randomly_perturbed_stores() {
+    // Theorem 3.1 re-checked after perturbing every measurement of a
+    // random store by ±1% — the equivalence with brute force must be
+    // stable under measurement noise, not an artifact of one grid.
+    forall_ok(
+        83,
+        150,
+        |r| {
+            let base = random_store(r);
+            let rows: Vec<PairProfile> = base
+                .rows()
+                .iter()
+                .map(|row| PairProfile {
+                    pair: row.pair.clone(),
+                    group: row.group,
+                    map: (row.map * r.range(0.99, 1.01)).min(100.0),
+                    latency_s: row.latency_s * r.range(0.99, 1.01),
+                    energy_mwh: row.energy_mwh * r.range(0.99, 1.01),
+                })
+                .collect();
+            let delta = [0.0, 5.0, 25.0][r.below(3) as usize];
+            let group = r.below(6) as usize;
+            (ProfileStore::new(rows), delta, group)
+        },
+        |(store, delta, group)| check_theorem_31(store, *delta, *group),
     );
 }
 
