@@ -1,0 +1,102 @@
+//! Churn simulator throughput: full open-loop discrete-event runs over
+//! the real deployed testbed with the lifecycle layer active — seeded
+//! crash/rejoin injection, per-probe membership updates, stale-view
+//! dispatch failures, and the resilience policies. The spread against
+//! `bench_openloop`'s saturated configuration is the pure cost of the
+//! churn machinery (failure timeline, probe events, copy accounting);
+//! the policy rows show what retrying and hedging cost on top.
+
+use ecore::config::ExperimentConfig;
+use ecore::dataset::{coco, GtBox, Scene};
+use ecore::experiments::serve::deployed_store;
+use ecore::experiments::Harness;
+use ecore::gateway::{router_by_name, Gateway};
+use ecore::lifecycle::{ChurnConfig, ResiliencePolicy};
+use ecore::nodes::NodePool;
+use ecore::util::bench::{black_box, Bench};
+use ecore::workload::openloop::{
+    run_frames, ArrivalProcess, OpenLoopConfig,
+};
+
+fn main() {
+    let cfg = ExperimentConfig {
+        profile_per_group: 12,
+        ..Default::default()
+    };
+    let h = Harness::new(cfg).unwrap();
+    let deployed = deployed_store(&h).unwrap();
+    let ds = coco::build(24, 7);
+    let frames: Vec<Scene> = ds.iter_scenes().collect();
+    let gts: Vec<Vec<GtBox>> =
+        frames.iter().map(|s| s.gt.clone()).collect();
+
+    let mut b = Bench::new("churn");
+    for (name, churn) in [
+        ("no_churn", None),
+        (
+            "retry_avail80",
+            Some(ChurnConfig {
+                mtbf_s: 0.8,
+                mttr_s: 0.2,
+                probe_interval_s: 0.05,
+                probe_timeout_s: 0.02,
+                suspect_after: 1,
+                policy: ResiliencePolicy::Retry { budget: 4 },
+                retry_backoff_s: 0.05,
+                horizon_slack_s: 2.0,
+                ..Default::default()
+            }),
+        ),
+        (
+            "hedge_avail80",
+            Some(ChurnConfig {
+                mtbf_s: 0.8,
+                mttr_s: 0.2,
+                probe_interval_s: 0.05,
+                probe_timeout_s: 0.02,
+                suspect_after: 1,
+                policy: ResiliencePolicy::Hedge,
+                horizon_slack_s: 2.0,
+                ..Default::default()
+            }),
+        ),
+    ] {
+        b.run(name, || {
+            let pool = NodePool::deploy(
+                &h.engine,
+                &deployed.pairs(),
+                &ecore::devices::fleet(),
+                1,
+            )
+            .unwrap();
+            let mut gw = Gateway::new(
+                &h.engine,
+                router_by_name("ED").unwrap(),
+                deployed.clone(),
+                pool,
+                5.0,
+                1,
+            );
+            let report = run_frames(
+                &mut gw,
+                &frames,
+                &gts,
+                &OpenLoopConfig {
+                    arrivals: ArrivalProcess::Poisson { rate_rps: 500.0 },
+                    queue_capacity: 8,
+                    seed: 3,
+                    churn: churn.clone(),
+                },
+            )
+            .unwrap();
+            black_box(report.metrics.requests + report.lost())
+        });
+    }
+
+    let (secs, count) = h.engine.exec_stats();
+    println!(
+        "engine totals: {count} inferences, {:.1} ms mean",
+        1000.0 * secs / count.max(1) as f64
+    );
+    b.finish();
+}

@@ -50,6 +50,7 @@ fn main() {
                         n_sources: 32,
                         seed: 1,
                         drift: None,
+                        churn: None,
                     },
                 )
                 .unwrap();

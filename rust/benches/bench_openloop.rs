@@ -60,6 +60,7 @@ fn main() {
                     arrivals: ArrivalProcess::Poisson { rate_rps: rate },
                     queue_capacity: cap,
                     seed: 3,
+                    churn: None,
                 },
             )
             .unwrap();

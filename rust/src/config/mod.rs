@@ -230,6 +230,38 @@ pub struct ExperimentConfig {
     pub fleet_dispatch: String,
     /// Distinct request sources (sticky-dispatch granularity).
     pub fleet_sources: usize,
+    /// Churn: mean time between failures per node (s) for `serve
+    /// --churn`; the `churn` experiment derives MTBF from
+    /// `churn_availability` instead.
+    pub churn_mtbf_s: f64,
+    /// Churn: mean time to repair per node (s).
+    pub churn_mttr_s: f64,
+    /// Churn: gateway health-probe period (s).
+    pub churn_probe_interval_s: f64,
+    /// Churn: probe timeout (s) before results reach the membership.
+    pub churn_probe_timeout_s: f64,
+    /// Churn: consecutive missed probes before Suspect becomes Down.
+    pub churn_suspect_after: usize,
+    /// Churn: warm-up window after an observed recovery (s).
+    pub churn_warmup_s: f64,
+    /// Churn: cost inflation at the start of the warm-up window.
+    pub churn_warmup_penalty: f64,
+    /// Churn: resilience policy: `drop` | `retry` | `hedge`.
+    pub churn_policy: String,
+    /// Churn: max re-dispatches per request under the retry policy.
+    pub churn_retry_budget: usize,
+    /// Churn: backoff before a retry re-enters routing (s).
+    pub churn_retry_backoff_s: f64,
+    /// Churn sweep: steady-state availability levels (1.0 = no churn).
+    pub churn_availability: Vec<f64>,
+    /// Churn sweep: resilience policies compared per cell.
+    pub churn_policies: Vec<String>,
+    /// Churn sweep: routers compared per cell (all ten by default).
+    pub churn_routers: Vec<String>,
+    /// Churn sweep: Poisson arrival rate (req/s).
+    pub churn_rate_rps: f64,
+    /// Churn sweep: offered requests per cell.
+    pub churn_requests: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -260,6 +292,27 @@ impl Default for ExperimentConfig {
             fleet_perturb: 0.15,
             fleet_dispatch: "least".to_string(),
             fleet_sources: 32,
+            churn_mtbf_s: 16.0,
+            churn_mttr_s: 4.0,
+            churn_probe_interval_s: 0.5,
+            churn_probe_timeout_s: 0.2,
+            churn_suspect_after: 2,
+            churn_warmup_s: 3.0,
+            churn_warmup_penalty: 0.5,
+            churn_policy: "retry".to_string(),
+            churn_retry_budget: 4,
+            churn_retry_backoff_s: 0.25,
+            churn_availability: vec![1.0, 0.9, 0.8],
+            churn_policies: ["drop", "retry", "hedge"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+            churn_routers: ["Orc", "RR", "Rnd", "LE", "LI", "HM", "HMG", "ED", "SF", "OB"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+            churn_rate_rps: 8.0,
+            churn_requests: 60,
         }
     }
 }
@@ -312,6 +365,52 @@ impl ExperimentConfig {
                 .str_or("experiment.fleet_dispatch", &d.fleet_dispatch),
             fleet_sources: t
                 .usize_or("experiment.fleet_sources", d.fleet_sources),
+            churn_mtbf_s: t.f64_or("experiment.churn_mtbf_s", d.churn_mtbf_s),
+            churn_mttr_s: t.f64_or("experiment.churn_mttr_s", d.churn_mttr_s),
+            churn_probe_interval_s: t.f64_or(
+                "experiment.churn_probe_interval_s",
+                d.churn_probe_interval_s,
+            ),
+            churn_probe_timeout_s: t.f64_or(
+                "experiment.churn_probe_timeout_s",
+                d.churn_probe_timeout_s,
+            ),
+            churn_suspect_after: t.usize_or(
+                "experiment.churn_suspect_after",
+                d.churn_suspect_after,
+            ),
+            churn_warmup_s: t
+                .f64_or("experiment.churn_warmup_s", d.churn_warmup_s),
+            churn_warmup_penalty: t.f64_or(
+                "experiment.churn_warmup_penalty",
+                d.churn_warmup_penalty,
+            ),
+            churn_policy: t
+                .str_or("experiment.churn_policy", &d.churn_policy),
+            churn_retry_budget: t.usize_or(
+                "experiment.churn_retry_budget",
+                d.churn_retry_budget,
+            ),
+            churn_retry_backoff_s: t.f64_or(
+                "experiment.churn_retry_backoff_s",
+                d.churn_retry_backoff_s,
+            ),
+            churn_availability: t
+                .get("experiment.churn_availability")
+                .and_then(|v| v.as_f64_list())
+                .unwrap_or(d.churn_availability),
+            churn_policies: t
+                .get("experiment.churn_policies")
+                .and_then(|v| v.as_str_list())
+                .unwrap_or(d.churn_policies),
+            churn_routers: t
+                .get("experiment.churn_routers")
+                .and_then(|v| v.as_str_list())
+                .unwrap_or(d.churn_routers),
+            churn_rate_rps: t
+                .f64_or("experiment.churn_rate_rps", d.churn_rate_rps),
+            churn_requests: t
+                .usize_or("experiment.churn_requests", d.churn_requests),
         }
     }
 
@@ -353,6 +452,68 @@ impl ExperimentConfig {
         }
         self.fleet_sources =
             args.usize_or("fleet-sources", self.fleet_sources);
+        self.churn_mtbf_s = args.f64_or("mtbf", self.churn_mtbf_s);
+        self.churn_mttr_s = args.f64_or("mttr", self.churn_mttr_s);
+        self.churn_probe_interval_s =
+            args.f64_or("probe-interval", self.churn_probe_interval_s);
+        self.churn_probe_timeout_s =
+            args.f64_or("probe-timeout", self.churn_probe_timeout_s);
+        self.churn_suspect_after =
+            args.usize_or("suspect-after", self.churn_suspect_after);
+        self.churn_warmup_s = args.f64_or("warmup", self.churn_warmup_s);
+        if let Some(p) = args.get("resilience") {
+            self.churn_policy = p.to_string();
+        }
+        self.churn_retry_budget =
+            args.usize_or("retry-budget", self.churn_retry_budget);
+        self.churn_retry_backoff_s =
+            args.f64_or("retry-backoff", self.churn_retry_backoff_s);
+        if args.get("churn-availability").is_some() {
+            self.churn_availability =
+                args.f64_list_or("churn-availability", &[]);
+        }
+        if args.get("churn-policies").is_some() {
+            self.churn_policies = args.list_or("churn-policies", &[]);
+        }
+        if args.get("churn-routers").is_some() {
+            self.churn_routers = args.list_or("churn-routers", &[]);
+        }
+        self.churn_rate_rps =
+            args.f64_or("churn-rate", self.churn_rate_rps);
+        self.churn_requests =
+            args.usize_or("churn-requests", self.churn_requests);
+    }
+
+    /// Materialize the churn keys into a [`ChurnConfig`] (the `serve
+    /// --churn` path; the `churn` experiment overrides `mtbf_s` per
+    /// availability level via [`mtbf_for_availability`]).
+    ///
+    /// [`mtbf_for_availability`]: crate::lifecycle::mtbf_for_availability
+    pub fn churn_config(&self) -> Result<crate::lifecycle::ChurnConfig> {
+        let policy = crate::lifecycle::ResiliencePolicy::parse(
+            &self.churn_policy,
+            self.churn_retry_budget,
+        )
+        .with_context(|| {
+            format!(
+                "unknown resilience policy '{}' (drop|retry|hedge)",
+                self.churn_policy
+            )
+        })?;
+        Ok(crate::lifecycle::ChurnConfig {
+            mtbf_s: self.churn_mtbf_s,
+            mttr_s: self.churn_mttr_s,
+            probe_interval_s: self.churn_probe_interval_s,
+            probe_timeout_s: self.churn_probe_timeout_s,
+            suspect_after: self.churn_suspect_after.max(1),
+            warmup_s: self.churn_warmup_s,
+            warmup_penalty: self.churn_warmup_penalty,
+            policy,
+            retry_backoff_s: self.churn_retry_backoff_s,
+            horizon_slack_s: crate::lifecycle::ChurnConfig::default()
+                .horizon_slack_s,
+            seed: self.seed ^ 0xC4A2,
+        })
     }
 }
 
@@ -437,6 +598,52 @@ routers = ["ED", "OB"]
         assert_eq!(c.fleet_shards, vec![2, 4]);
         assert_eq!(c.fleet_dispatch, "sticky");
         assert_eq!(c.fleet_requests, 9);
+    }
+
+    #[test]
+    fn churn_keys_parse_override_and_materialize() {
+        let t = Table::parse(
+            "[experiment]\nchurn_mttr_s = 2\nchurn_policy = \"hedge\"\nchurn_availability = [1.0, 0.75]\n",
+        )
+        .unwrap();
+        let mut c = ExperimentConfig::from_table(&t);
+        assert_eq!(c.churn_mttr_s, 2.0);
+        assert_eq!(c.churn_policy, "hedge");
+        assert_eq!(c.churn_availability, vec![1.0, 0.75]);
+        let d = ExperimentConfig::default();
+        assert_eq!(c.churn_mtbf_s, d.churn_mtbf_s);
+        assert_eq!(c.churn_routers.len(), 10);
+        // CLI wins over file
+        let args = crate::util::cli::Args::parse(
+            [
+                "--resilience",
+                "retry",
+                "--retry-budget",
+                "7",
+                "--mtbf",
+                "9.5",
+                "--churn-policies",
+                "drop,retry",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+        );
+        c.override_with(&args);
+        assert_eq!(c.churn_policy, "retry");
+        assert_eq!(c.churn_retry_budget, 7);
+        assert_eq!(c.churn_mtbf_s, 9.5);
+        assert_eq!(c.churn_policies, vec!["drop", "retry"]);
+        // materializes into a typed ChurnConfig
+        let cc = c.churn_config().unwrap();
+        assert_eq!(
+            cc.policy,
+            crate::lifecycle::ResiliencePolicy::Retry { budget: 7 }
+        );
+        assert_eq!(cc.mtbf_s, 9.5);
+        assert_eq!(cc.mttr_s, 2.0);
+        // bad policy is a typed error
+        c.churn_policy = "wat".into();
+        assert!(c.churn_config().is_err());
     }
 
     #[test]

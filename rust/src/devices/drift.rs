@@ -116,6 +116,14 @@ impl DriftModel {
     pub fn temperature(&self) -> f64 {
         self.temp
     }
+
+    /// Reboot (node lifecycle rejoin): thermal state and background
+    /// load reset — a freshly booted board is cold and quiet. Battery
+    /// droop persists, since cumulative busy time survives a reboot.
+    pub fn reboot(&mut self) {
+        self.temp = 0.0;
+        self.load = 1.0;
+    }
 }
 
 #[cfg(test)]
@@ -182,6 +190,22 @@ mod tests {
         let slow = m.load / m.throttle_factor();
         let (_, e) = m.step(1.0, 0.5, 0.0);
         assert!(e > 0.5 * slow);
+    }
+
+    #[test]
+    fn reboot_resets_thermal_state_but_not_droop() {
+        let mut m = model();
+        for _ in 0..600 {
+            m.step(0.1, 0.05, 0.0);
+        }
+        assert!(m.temperature() > m.cfg.throttle_at);
+        let droop = m.droop_w();
+        assert!(droop > 0.0);
+        m.reboot();
+        assert_eq!(m.temperature(), 0.0);
+        assert_eq!(m.throttle_factor(), 1.0);
+        // busy time (and thus battery droop) survives the reboot
+        assert_eq!(m.droop_w(), droop);
     }
 
     #[test]

@@ -1,0 +1,129 @@
+//! Churn sweep: router survivability under node failures (DESIGN.md
+//! §9).
+//!
+//! For each (availability, router, resilience policy) cell the driver
+//! deploys a fresh Table-1 pool, switches the gateway to probe-driven
+//! membership, replays the same pre-rendered request set through the
+//! open-loop simulator with a seeded crash/rejoin timeline (MTBF
+//! derived from the availability level, MTTR fixed), and reports
+//! goodput, tail latency, energy per request, shed/lost/retried/hedged
+//! counts, crash count, and mean time-to-recover. Availability 1.0 is
+//! the no-churn baseline every policy is measured against — the
+//! headline question is how much of that goodput each policy buys back
+//! on a degraded fleet, and at what energy cost (hedging pays double).
+
+use anyhow::{Context, Result};
+
+use super::serve::{build_gateway, deployed_store};
+use super::Harness;
+use crate::dataset::{coco, GtBox, Scene};
+use crate::gateway::router_by_name;
+use crate::lifecycle::{mtbf_for_availability, ChurnConfig, ResiliencePolicy};
+use crate::util::json::Json;
+use crate::workload::openloop::{self, ArrivalProcess, OpenLoopConfig};
+
+/// The `churn` experiment: sweep availability x router x policy.
+pub fn churn(h: &Harness) -> Result<()> {
+    let n = h.cfg.churn_requests.max(1);
+    let ds = coco::build(n, h.cfg.seed ^ 0xC4A5);
+    let frames: Vec<Scene> = ds.iter_scenes().collect();
+    let gts: Vec<Vec<GtBox>> =
+        frames.iter().map(|s| s.gt.clone()).collect();
+    let deployed = deployed_store(h)?;
+    let base = h.cfg.churn_config()?;
+    eprintln!(
+        "[churn] pool {} pairs, {} requests @ {} req/s, mttr {} s, probes every {} s (timeout {} s)",
+        deployed.pairs().len(),
+        n,
+        h.cfg.churn_rate_rps,
+        base.mttr_s,
+        base.probe_interval_s,
+        base.probe_timeout_s
+    );
+    println!(
+        "--- churn (availability x router x resilience over {n} requests) ---"
+    );
+    println!(
+        "{:<6} {:>6} {:>7} {:>9} {:>9} {:>12} {:>5} {:>5} {:>6} {:>6} {:>8} {:>8}",
+        "router",
+        "avail",
+        "policy",
+        "goodput",
+        "p99_ms",
+        "mWh_per_req",
+        "drop",
+        "lost",
+        "retry",
+        "hedge",
+        "crashes",
+        "ttr_s"
+    );
+    let mut rows = Vec::new();
+    for &avail in &h.cfg.churn_availability {
+        // every policy is swept at every availability — including 1.0,
+        // because hedging differs even without crashes (it duplicates
+        // every request), so each policy needs its own no-churn
+        // baseline cell
+        for name in &h.cfg.churn_routers {
+            let spec = router_by_name(name)
+                .with_context(|| format!("unknown router '{name}'"))?;
+            for pname in &h.cfg.churn_policies {
+                let policy = ResiliencePolicy::parse(
+                    pname,
+                    h.cfg.churn_retry_budget,
+                )
+                .with_context(|| {
+                    format!(
+                        "unknown resilience policy '{pname}' (drop|retry|hedge)"
+                    )
+                })?;
+                let churn_cfg = ChurnConfig {
+                    mtbf_s: mtbf_for_availability(avail, base.mttr_s),
+                    policy,
+                    ..base.clone()
+                };
+                let mut gw =
+                    build_gateway(h, spec, &deployed, h.cfg.delta_map)?;
+                let report = openloop::run_frames(
+                    &mut gw,
+                    &frames,
+                    &gts,
+                    &OpenLoopConfig {
+                        arrivals: ArrivalProcess::Poisson {
+                            rate_rps: h.cfg.churn_rate_rps,
+                        },
+                        queue_capacity: h.cfg.queue_capacity,
+                        seed: h.cfg.seed,
+                        churn: Some(churn_cfg),
+                    },
+                )?;
+                let c =
+                    report.churn.clone().expect("churn report missing");
+                println!(
+                    "{:<6} {:>6.2} {:>7} {:>9.2} {:>9.1} {:>12.4} {:>5} {:>5} {:>6} {:>6} {:>8} {:>8.2}",
+                    spec.name,
+                    avail,
+                    policy.label(),
+                    report.goodput_rps(),
+                    1000.0 * report.metrics.latency_percentile(99.0),
+                    report.energy_per_request_mwh(),
+                    report.dropped,
+                    c.lost,
+                    c.retried,
+                    c.hedged,
+                    c.crashes,
+                    c.mean_time_to_recover_s,
+                );
+                rows.push(Json::obj(vec![
+                    ("router", Json::str(spec.name)),
+                    ("availability", Json::num(avail)),
+                    ("policy", Json::str(policy.label())),
+                    ("rate_rps", Json::num(h.cfg.churn_rate_rps)),
+                    ("report", report.to_json()),
+                ]));
+            }
+        }
+        println!();
+    }
+    h.save_json("churn", &Json::Arr(rows))
+}

@@ -82,6 +82,7 @@ pub fn fleet(h: &Harness) -> Result<()> {
                             n_sources: h.cfg.fleet_sources,
                             seed: h.cfg.seed,
                             drift: None,
+                            churn: None,
                         },
                     )?;
                 let report = run_frames(

@@ -13,11 +13,13 @@
 //! | `overhead`| gateway overhead per router (§4.2)               |
 //! | `openloop`| open-loop saturation sweep (beyond the paper)    |
 //! | `fleet`   | sharded multi-gateway fleet sweep (beyond paper) |
+//! | `churn`   | router survivability under node churn (§9)       |
 //!
 //! Every driver prints the paper-style table and writes
 //! `results/<id>.json` for downstream plotting.
 
 pub mod ablations;
+pub mod churn;
 pub mod fleet;
 pub mod openloop;
 pub mod serve;
@@ -35,9 +37,9 @@ use crate::router::{GroupRules, ProfileStore};
 use crate::runtime::Engine;
 use crate::util::json::Json;
 
-pub const ALL_EXPERIMENTS: [&str; 11] = [
+pub const ALL_EXPERIMENTS: [&str; 12] = [
     "fig2", "fig4", "fig5", "table1", "fig6", "fig7", "fig8", "fig9",
-    "overhead", "openloop", "fleet",
+    "overhead", "openloop", "fleet", "churn",
 ];
 
 /// Shared experiment context.
@@ -130,6 +132,7 @@ impl Harness {
             "overhead" => serve::overhead(self),
             "openloop" => openloop::openloop(self),
             "fleet" => fleet::fleet(self),
+            "churn" => churn::churn(self),
             "ablation_groups" => ablations::ablation_groups(self),
             "ablation_batch" => ablations::ablation_batch(self),
             "ablation_weighted" => ablations::ablation_weighted(self),

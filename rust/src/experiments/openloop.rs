@@ -38,6 +38,7 @@ fn run_cell(
             arrivals: ArrivalProcess::Poisson { rate_rps },
             queue_capacity: h.cfg.queue_capacity,
             seed: h.cfg.seed,
+            churn: None,
         },
     )
     .map(|mut report| {

@@ -30,8 +30,12 @@ use crate::detection::map::{map_coco, ImageEval};
 use crate::devices;
 use crate::devices::drift::DriftConfig;
 use crate::gateway::{Gateway, NoEndpoint, RoutedRequest, RouterSpec};
+use crate::lifecycle::{
+    self, ChurnConfig, ChurnReport, ChurnState, LossOutcome,
+    ResiliencePolicy,
+};
 use crate::metrics::RunMetrics;
-use crate::nodes::{EdgeNode, NodePool, NodeResponse};
+use crate::nodes::{EdgeNode, NodeDown, NodePool, NodeResponse};
 use crate::router::{PairKey, PairProfile, ProfileStore};
 use crate::runtime::Engine;
 use crate::util::json::Json;
@@ -139,6 +143,10 @@ pub struct FleetConfig {
     pub seed: u64,
     /// Optional per-node runtime drift (paper Future Work #1).
     pub drift: Option<DriftConfig>,
+    /// Optional node churn (DESIGN.md §9): ground-truth crash/rejoin
+    /// events on the shared heap, per-shard probe-driven membership,
+    /// and a resilience policy for requests lost to crashes.
+    pub churn: Option<ChurnConfig>,
 }
 
 impl Default for FleetConfig {
@@ -152,6 +160,7 @@ impl Default for FleetConfig {
             n_sources: 16,
             seed: 7,
             drift: None,
+            churn: None,
         }
     }
 }
@@ -202,6 +211,8 @@ impl<'e> FleetBuilder<'e> {
             (0..cfg.n_shards).map(|_| Vec::new()).collect();
         let mut shard_rows: Vec<Vec<PairProfile>> =
             (0..cfg.n_shards).map(|_| Vec::new()).collect();
+        let mut node_homes: Vec<(usize, PairKey)> =
+            Vec::with_capacity(cfg.n_nodes);
         let rng = Rng::new(cfg.seed ^ 0xF1EE_7B0A);
         for i in 0..cfg.n_nodes {
             let bp = &base_pairs[i % base_pairs.len()];
@@ -225,6 +236,7 @@ impl<'e> FleetBuilder<'e> {
                 node.enable_drift(dc.clone(), cfg.seed ^ mix64(i as u64));
             }
             let shard = i % cfg.n_shards;
+            node_homes.push((shard, pair.clone()));
             for row in self.base.rows().iter().filter(|row| &row.pair == bp)
             {
                 shard_rows[shard].push(PairProfile {
@@ -250,20 +262,26 @@ impl<'e> FleetBuilder<'e> {
         {
             let mut pool = NodePool::from_nodes(nodes);
             pool.set_queue_capacity(cfg.queue_capacity);
-            shards.push(Gateway::new(
+            let mut gw = Gateway::new(
                 self.engine,
                 spec,
                 ProfileStore::new(rows),
                 pool,
                 delta_map,
                 cfg.seed ^ mix64(0x0005_1A2D + s as u64),
-            ));
+            );
+            if let Some(c) = &cfg.churn {
+                gw.enable_churn(c);
+            }
+            shards.push(gw);
         }
         Ok(Fleet {
             shards,
             dispatch: cfg.dispatch,
             n_sources: cfg.n_sources.max(1),
             n_nodes: cfg.n_nodes,
+            churn: cfg.churn.clone(),
+            node_homes,
         })
     }
 }
@@ -274,6 +292,11 @@ pub struct Fleet<'e> {
     dispatch: DispatchPolicy,
     n_sources: usize,
     n_nodes: usize,
+    /// Churn scenario the fleet was built with (drives `run_frames`).
+    churn: Option<ChurnConfig>,
+    /// Global synthesis index → (owning shard, node identity): how the
+    /// ground-truth failure timeline addresses nodes.
+    node_homes: Vec<(usize, PairKey)>,
 }
 
 impl<'e> Fleet<'e> {
@@ -316,12 +339,20 @@ pub struct FleetReport {
     pub makespan_s: f64,
     /// Peak requests simultaneously in the system, fleet-wide.
     pub peak_in_flight: usize,
+    /// Churn accounting — present exactly when the fleet was built with
+    /// a lifecycle config. `requests + dropped + lost == offered`.
+    pub churn: Option<ChurnReport>,
 }
 
 impl FleetReport {
     /// Served requests across all shards.
     pub fn requests(&self) -> usize {
         self.per_shard.iter().map(|m| m.requests).sum()
+    }
+
+    /// Requests permanently lost to node crashes (0 without churn).
+    pub fn lost(&self) -> usize {
+        self.churn.as_ref().map(|c| c.lost).unwrap_or(0)
     }
 
     /// Served throughput over the run's virtual wall-clock (req/s).
@@ -405,10 +436,11 @@ impl FleetReport {
     /// byte for byte.
     pub fn to_json(&self) -> Json {
         let pcts = self.latency_percentiles(&[50.0, 95.0, 99.0]);
-        Json::obj(vec![
+        let mut fields = vec![
             ("offered", Json::num(self.offered as f64)),
             ("requests", Json::num(self.requests() as f64)),
             ("dropped", Json::num(self.dropped as f64)),
+            ("lost", Json::num(self.lost() as f64)),
             ("node_fallbacks", Json::num(self.node_fallbacks as f64)),
             (
                 "cross_shard_fallbacks",
@@ -437,7 +469,11 @@ impl FleetReport {
                     self.per_shard.iter().map(|m| m.to_json()).collect(),
                 ),
             ),
-        ])
+        ];
+        if let Some(c) = &self.churn {
+            fields.push(("churn", c.to_json()));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -456,7 +492,24 @@ enum EventKind {
     /// Request `idx` arrives at the fleet front-end.
     Arrival(usize),
     /// The in-service request on `pair` (owned by `shard`) completes.
-    Completion { shard: usize, pair: PairKey },
+    /// `token` identifies the service instance: completions of requests
+    /// lost to a crash are stale (token mismatch) and ignored.
+    Completion {
+        shard: usize,
+        pair: PairKey,
+        token: u64,
+    },
+    /// Ground-truth crash of synthesized node `node` (churn only).
+    Crash(usize),
+    /// Ground-truth rejoin of synthesized node `node`.
+    Rejoin(usize),
+    /// Shard `shard`'s periodic health probe fires (snapshot now,
+    /// results apply after the probe timeout).
+    Probe { shard: usize },
+    /// Probe responses (shard pool order) reach that shard's view.
+    ProbeResult { shard: usize, responses: Vec<bool> },
+    /// Re-dispatch of request `idx` lost to a crash (retry policy).
+    Retry(usize),
 }
 
 impl PartialEq for Event {
@@ -481,6 +534,8 @@ struct Pending {
     routed: RoutedRequest,
     idx: usize,
     arrival_s: f64,
+    /// This copy is a hedged duplicate (its completion may be waste).
+    hedge: bool,
 }
 
 /// The request a node is currently serving.
@@ -490,6 +545,9 @@ struct InService {
     arrival_s: f64,
     start_s: f64,
     resp: NodeResponse,
+    /// Matches the scheduled completion event (stale-event guard).
+    token: u64,
+    hedge: bool,
 }
 
 /// Per-node serving state: one in-service slot + FIFO backlog.
@@ -497,6 +555,55 @@ struct InService {
 struct NodeQueue {
     serving: Option<InService>,
     backlog: VecDeque<Pending>,
+}
+
+/// Mutable simulator state threaded through the event handlers.
+struct SimState {
+    queues: Vec<BTreeMap<PairKey, NodeQueue>>,
+    heap: BinaryHeap<Reverse<Event>>,
+    seq: u64,
+    dropped: usize,
+    cross_shard_fallbacks: usize,
+    in_flight: Vec<usize>,
+    total_in_flight: usize,
+    peak_in_flight: usize,
+    makespan_s: f64,
+}
+
+impl SimState {
+    fn new(k: usize) -> Self {
+        Self {
+            queues: (0..k).map(|_| BTreeMap::new()).collect(),
+            heap: BinaryHeap::new(),
+            seq: 0,
+            dropped: 0,
+            cross_shard_fallbacks: 0,
+            in_flight: vec![0; k],
+            total_in_flight: 0,
+            peak_in_flight: 0,
+            makespan_s: 0.0,
+        }
+    }
+
+    fn push(&mut self, t: f64, kind: EventKind) {
+        self.heap.push(Reverse(Event {
+            t,
+            seq: self.seq,
+            kind,
+        }));
+        self.seq += 1;
+    }
+}
+
+/// Driver-side churn context (shard-aware twin of the one in
+/// `workload::openloop`).
+struct ChurnDriver {
+    /// Global synthesis index → (owning shard, node identity).
+    homes: Vec<(usize, PairKey)>,
+    /// Pool-ordered node identities per shard (probe snapshots).
+    shard_pairs: Vec<Vec<PairKey>>,
+    probe_timeout_s: f64,
+    state: ChurnState,
 }
 
 /// Drive a fleet over pre-rendered frames under open-loop arrivals.
@@ -523,109 +630,265 @@ pub fn run_frames(
             RunMetrics::new(&format!("{}-s{s}", fleet.shards[s].spec.name))
         })
         .collect();
-    let mut queues: Vec<BTreeMap<PairKey, NodeQueue>> =
-        (0..k).map(|_| BTreeMap::new()).collect();
-    let mut heap: BinaryHeap<Reverse<Event>> = BinaryHeap::new();
-    let mut seq = 0u64;
-    for (idx, t) in
-        arrivals.times(frames.len(), seed).into_iter().enumerate()
-    {
-        heap.push(Reverse(Event {
-            t,
-            seq,
-            kind: EventKind::Arrival(idx),
-        }));
-        seq += 1;
+    let mut sim = SimState::new(k);
+    let arrival_times = arrivals.times(frames.len(), seed);
+    let horizon_s = arrival_times.last().copied().unwrap_or(0.0)
+        + fleet
+            .churn
+            .as_ref()
+            .map(|c| c.horizon_slack_s)
+            .unwrap_or(0.0);
+    for (idx, t) in arrival_times.into_iter().enumerate() {
+        sim.push(t, EventKind::Arrival(idx));
     }
 
-    let mut dropped = 0usize;
-    let mut cross_shard_fallbacks = 0usize;
-    let mut in_flight = vec![0usize; k];
-    let mut total_in_flight = 0usize;
-    let mut peak_in_flight = 0usize;
-    let mut makespan_s = 0.0f64;
+    // churn runs: the ground-truth failure timeline addresses nodes by
+    // their global synthesis index; each shard probes only its own
+    // pool. The shard gateways were switched to membership routing at
+    // build time. Without churn nothing below adds a single event.
+    let mut churn = match fleet.churn.clone() {
+        Some(c) => {
+            for ev in lifecycle::failure_schedule(
+                fleet.node_homes.len(),
+                horizon_s,
+                &c,
+            ) {
+                let kind = if ev.up {
+                    EventKind::Rejoin(ev.node)
+                } else {
+                    EventKind::Crash(ev.node)
+                };
+                sim.push(ev.t, kind);
+            }
+            let gap = c.probe_interval_s.max(1e-6);
+            for s in 0..k {
+                let mut t = gap;
+                while t < horizon_s {
+                    sim.push(t, EventKind::Probe { shard: s });
+                    t += gap;
+                }
+            }
+            let shard_pairs: Vec<Vec<PairKey>> = fleet
+                .shards
+                .iter()
+                .map(|g| {
+                    g.pool()
+                        .nodes()
+                        .iter()
+                        .map(|n| n.pair.clone())
+                        .collect()
+                })
+                .collect();
+            Some(ChurnDriver {
+                homes: fleet.node_homes.clone(),
+                shard_pairs,
+                probe_timeout_s: c.probe_timeout_s,
+                state: ChurnState::new(
+                    frames.len(),
+                    c.policy,
+                    c.retry_backoff_s,
+                ),
+            })
+        }
+        None => None,
+    };
 
-    while let Some(Reverse(ev)) = heap.pop() {
+    while let Some(Reverse(ev)) = sim.heap.pop() {
         match ev.kind {
             EventKind::Arrival(idx) => {
-                let scene = &frames[idx];
-                let true_count = pseudo_gt[idx].len();
-                let order =
-                    fleet.dispatch.order(idx, fleet.n_sources, &in_flight);
-                let mut admitted: Option<(usize, RoutedRequest)> = None;
-                for (attempt, &s) in order.iter().enumerate() {
-                    match fleet.shards[s].route(&scene.image, true_count) {
-                        Ok(routed) => {
-                            cross_shard_fallbacks += attempt;
-                            admitted = Some((s, routed));
-                            break;
+                let Some((s, routed)) =
+                    try_place(fleet, frames, pseudo_gt, &mut sim, idx, ev.t)?
+                else {
+                    match churn.as_mut() {
+                        Some(ch)
+                            if matches!(
+                                ch.state.policy(),
+                                ResiliencePolicy::Retry { .. }
+                            ) =>
+                        {
+                            if let LossOutcome::RetryAt(t) =
+                                ch.state.placement_failed(idx, ev.t)
+                            {
+                                sim.push(t, EventKind::Retry(idx));
+                            }
                         }
-                        Err(e) if e.is::<NoEndpoint>() => continue,
-                        Err(e) => return Err(e),
+                        _ => sim.dropped += 1,
                     }
-                }
-                let Some((s, routed)) = admitted else {
-                    dropped += 1;
                     continue;
                 };
-                let ok = fleet.shards[s].pool_mut().acquire(&routed.pair);
-                debug_assert!(
-                    ok,
-                    "route() returned a pair without a free slot"
-                );
-                in_flight[s] += 1;
-                total_in_flight += 1;
-                peak_in_flight = peak_in_flight.max(total_in_flight);
-                let pair = routed.pair.clone();
-                queues[s].entry(pair.clone()).or_default().backlog.push_back(
-                    Pending {
-                        routed,
+                // proactive hedging stays within the winning shard (the
+                // duplicate reuses the primary's estimate)
+                let dup = match churn.as_ref() {
+                    Some(ch)
+                        if ch.state.policy()
+                            == ResiliencePolicy::Hedge =>
+                    {
+                        fleet.shards[s]
+                            .route_secondary(&routed, ev.t)
+                            .map(|p| RoutedRequest {
+                                pair: p,
+                                ..routed.clone()
+                            })
+                    }
+                    _ => None,
+                };
+                // register BOTH copies before admitting either: the
+                // primary can die synchronously at dispatch (stale
+                // view), and its loss must see the hedge as a live
+                // sibling, not declare the request lost.
+                if let Some(ch) = churn.as_mut() {
+                    ch.state.dispatched(idx);
+                    if dup.is_some() {
+                        ch.state.hedge_dispatched(idx);
+                    }
+                }
+                admit_copy(
+                    &mut fleet.shards[s],
+                    s,
+                    frames,
+                    &mut sim,
+                    &mut churn,
+                    routed,
+                    idx,
+                    ev.t,
+                    false,
+                )?;
+                if let Some(d) = dup {
+                    admit_copy(
+                        &mut fleet.shards[s],
+                        s,
+                        frames,
+                        &mut sim,
+                        &mut churn,
+                        d,
                         idx,
-                        arrival_s: ev.t,
-                    },
-                );
+                        ev.t,
+                        true,
+                    )?;
+                }
+            }
+            EventKind::Retry(idx) => {
+                let placed =
+                    try_place(fleet, frames, pseudo_gt, &mut sim, idx, ev.t)?;
+                let ch = churn.as_mut().expect("retry without churn");
+                let Some((s, routed)) = placed else {
+                    if let LossOutcome::RetryAt(t) =
+                        ch.state.placement_failed(idx, ev.t)
+                    {
+                        sim.push(t, EventKind::Retry(idx));
+                    }
+                    continue;
+                };
+                ch.state.retry_dispatched(idx);
+                admit_copy(
+                    &mut fleet.shards[s],
+                    s,
+                    frames,
+                    &mut sim,
+                    &mut churn,
+                    routed,
+                    idx,
+                    ev.t,
+                    false,
+                )?;
+            }
+            EventKind::Completion {
+                shard: s,
+                pair,
+                token,
+            } => {
+                let q = sim.queues[s]
+                    .get_mut(&pair)
+                    .expect("completion for unknown queue");
+                if q.serving.as_ref().map(|x| x.token) != Some(token) {
+                    // in-service request was lost to a crash after this
+                    // completion was scheduled — stale event
+                    debug_assert!(
+                        churn.is_some(),
+                        "stale completion without churn"
+                    );
+                    continue;
+                }
+                let done = q.serving.take().expect("token just matched");
+                fleet.shards[s].pool_mut().release(&pair);
+                sim.in_flight[s] -= 1;
+                sim.total_in_flight -= 1;
+                sim.makespan_s = sim.makespan_s.max(ev.t);
+                let winner = match churn.as_mut() {
+                    Some(ch) => ch.state.copy_completed(
+                        done.idx,
+                        done.resp.energy_mwh,
+                        done.hedge,
+                    ),
+                    None => true,
+                };
+                if winner {
+                    let queue_delay_s = (done.start_s
+                        - (done.arrival_s + done.routed.cost.latency_s))
+                        .max(0.0);
+                    fleet.shards[s].finish(
+                        &done.routed,
+                        done.resp,
+                        &pseudo_gt[done.idx],
+                        queue_delay_s,
+                        &mut metrics[s],
+                    );
+                }
                 start_next(
                     &mut fleet.shards[s],
                     s,
                     frames,
-                    &mut queues[s],
-                    &mut heap,
-                    &mut seq,
+                    &mut sim,
+                    &mut churn,
                     &pair,
                     ev.t,
                 )?;
             }
-            EventKind::Completion { shard: s, pair } => {
-                let done = queues[s]
-                    .get_mut(&pair)
-                    .expect("completion for unknown queue")
-                    .serving
-                    .take()
-                    .expect("completion with no in-service request");
-                fleet.shards[s].pool_mut().release(&pair);
-                in_flight[s] -= 1;
-                total_in_flight -= 1;
-                makespan_s = makespan_s.max(ev.t);
-                let queue_delay_s = (done.start_s
-                    - (done.arrival_s + done.routed.cost.latency_s))
-                    .max(0.0);
-                fleet.shards[s].finish(
-                    &done.routed,
-                    done.resp,
-                    &pseudo_gt[done.idx],
-                    queue_delay_s,
-                    &mut metrics[s],
+            EventKind::Crash(node) => {
+                let ch = churn.as_mut().expect("crash without churn");
+                let (s, pair) = ch.homes[node].clone();
+                ch.state.crashes += 1;
+                let gw = &mut fleet.shards[s];
+                gw.pool_mut().set_health(&pair, false);
+                if let Some(m) = gw.membership_mut() {
+                    m.ground_truth_changed(&pair, false, ev.t);
+                }
+                lose_queued(gw, s, &mut sim, &mut ch.state, &pair, None, ev.t);
+            }
+            EventKind::Rejoin(node) => {
+                let ch = churn.as_ref().expect("rejoin without churn");
+                let (s, pair) = ch.homes[node].clone();
+                let gw = &mut fleet.shards[s];
+                gw.pool_mut().set_health(&pair, true);
+                if let Some(n) = gw.pool_mut().get(&pair) {
+                    n.on_rejoin(ev.t);
+                }
+                if let Some(m) = gw.membership_mut() {
+                    m.ground_truth_changed(&pair, true, ev.t);
+                }
+            }
+            EventKind::Probe { shard } => {
+                let ch = churn.as_ref().expect("probe without churn");
+                let gw = &fleet.shards[shard];
+                let responses: Vec<bool> = ch.shard_pairs[shard]
+                    .iter()
+                    .map(|p| gw.pool().is_healthy(p))
+                    .collect();
+                let timeout = ch.probe_timeout_s;
+                sim.push(
+                    ev.t + timeout,
+                    EventKind::ProbeResult { shard, responses },
                 );
-                start_next(
-                    &mut fleet.shards[s],
-                    s,
-                    frames,
-                    &mut queues[s],
-                    &mut heap,
-                    &mut seq,
-                    &pair,
-                    ev.t,
-                )?;
+            }
+            EventKind::ProbeResult { shard, responses } => {
+                let ch = churn.as_ref().expect("probe without churn");
+                let m = fleet.shards[shard]
+                    .membership_mut()
+                    .expect("churn shard lost its membership");
+                for (p, up) in ch.shard_pairs[shard].iter().zip(&responses)
+                {
+                    m.observe_probe(p, *up, ev.t);
+                }
             }
         }
     }
@@ -636,31 +899,102 @@ pub fn run_frames(
         .zip(&fallbacks_before)
         .map(|(g, &before)| g.fallbacks - before)
         .sum();
+    let churn_report = churn.map(|c| {
+        ChurnReport::collect(
+            &c.state,
+            fleet.shards.iter().filter_map(|g| g.membership()),
+        )
+    });
     Ok(FleetReport {
         per_shard: metrics,
         offered: frames.len(),
-        dropped,
+        dropped: sim.dropped,
         node_fallbacks,
-        cross_shard_fallbacks,
-        makespan_s,
-        peak_in_flight,
+        cross_shard_fallbacks: sim.cross_shard_fallbacks,
+        makespan_s: sim.makespan_s,
+        peak_in_flight: sim.peak_in_flight,
+        churn: churn_report,
     })
 }
 
+/// Walk the dispatch order until a shard admits request `idx`; spills
+/// beyond the first shard count as cross-shard fallbacks only when
+/// placement succeeds.
+fn try_place(
+    fleet: &mut Fleet<'_>,
+    frames: &[Scene],
+    pseudo_gt: &[Vec<GtBox>],
+    sim: &mut SimState,
+    idx: usize,
+    now_s: f64,
+) -> Result<Option<(usize, RoutedRequest)>> {
+    let order = fleet.dispatch.order(idx, fleet.n_sources, &sim.in_flight);
+    for (attempt, &s) in order.iter().enumerate() {
+        match fleet.shards[s].route_at(
+            &frames[idx].image,
+            pseudo_gt[idx].len(),
+            now_s,
+        ) {
+            Ok(routed) => {
+                sim.cross_shard_fallbacks += attempt;
+                return Ok(Some((s, routed)));
+            }
+            Err(e) if e.is::<NoEndpoint>() => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(None)
+}
+
+/// Admit one routed copy of request `idx` into its pair's FIFO on
+/// `shard` at time `t` and try to start service.
+#[allow(clippy::too_many_arguments)]
+fn admit_copy(
+    gw: &mut Gateway<'_>,
+    shard: usize,
+    frames: &[Scene],
+    sim: &mut SimState,
+    churn: &mut Option<ChurnDriver>,
+    routed: RoutedRequest,
+    idx: usize,
+    t: f64,
+    hedge: bool,
+) -> Result<()> {
+    let admitted = gw.pool_mut().acquire(&routed.pair);
+    debug_assert!(admitted, "route() returned a pair without a free slot");
+    sim.in_flight[shard] += 1;
+    sim.total_in_flight += 1;
+    sim.peak_in_flight = sim.peak_in_flight.max(sim.total_in_flight);
+    let pair = routed.pair.clone();
+    sim.queues[shard].entry(pair.clone()).or_default().backlog.push_back(
+        Pending {
+            routed,
+            idx,
+            arrival_s: t,
+            hedge,
+        },
+    );
+    start_next(gw, shard, frames, sim, churn, &pair, t)
+}
+
 /// If `pair` (on shard `shard`) is idle and has backlog, begin serving
-/// the head request at `now_s` and schedule its completion.
+/// the head request at `now_s` and schedule its completion. Under
+/// churn, a dispatch that discovers a dead node loses everything queued
+/// there through the resilience policy and feeds the failure back to
+/// the shard's membership as passive health evidence.
 #[allow(clippy::too_many_arguments)]
 fn start_next(
     gw: &mut Gateway<'_>,
     shard: usize,
     frames: &[Scene],
-    queues: &mut BTreeMap<PairKey, NodeQueue>,
-    heap: &mut BinaryHeap<Reverse<Event>>,
-    seq: &mut u64,
+    sim: &mut SimState,
+    churn: &mut Option<ChurnDriver>,
     pair: &PairKey,
     now_s: f64,
 ) -> Result<()> {
-    let q = queues.get_mut(pair).expect("start_next on unknown queue");
+    let q = sim.queues[shard]
+        .get_mut(pair)
+        .expect("start_next on unknown queue");
     if q.serving.is_some() {
         return Ok(());
     }
@@ -668,27 +1002,77 @@ fn start_next(
         return Ok(());
     };
     let start_s = now_s.max(p.arrival_s + p.routed.cost.latency_s);
-    let resp = gw.serve(pair, &frames[p.idx].image, start_s)?;
-    let done_s = start_s + resp.latency_s + devices::NETWORK_S;
-    heap.push(Reverse(Event {
-        t: done_s,
-        seq: *seq,
-        kind: EventKind::Completion {
+    let resp = match gw.serve(pair, &frames[p.idx].image, start_s) {
+        Ok(r) => r,
+        Err(e) if churn.is_some() && e.is::<NodeDown>() => {
+            if let Some(m) = gw.membership_mut() {
+                m.observe_dispatch_failure(pair, now_s);
+            }
+            let ch = churn.as_mut().expect("checked above");
+            lose_queued(gw, shard, sim, &mut ch.state, pair, Some(p), now_s);
+            return Ok(());
+        }
+        Err(e) => return Err(e),
+    };
+    let token = sim.seq;
+    sim.push(
+        start_s + resp.latency_s + devices::NETWORK_S,
+        EventKind::Completion {
             shard,
             pair: pair.clone(),
+            token,
         },
-    }));
-    *seq += 1;
+    );
     // re-borrow: gw.serve() above needed &mut Gateway exclusively
-    queues.get_mut(pair).expect("queue vanished").serving =
+    sim.queues[shard].get_mut(pair).expect("queue vanished").serving =
         Some(InService {
             routed: p.routed,
             idx: p.idx,
             arrival_s: p.arrival_s,
             start_s,
             resp,
+            token,
+            hedge: p.hedge,
         });
     Ok(())
+}
+
+/// Drain every copy on `pair`'s queue (shard-local) — the in-service
+/// request, an optional already-popped head, and the backlog —
+/// releasing slots and feeding each loss through the resilience policy.
+#[allow(clippy::too_many_arguments)]
+fn lose_queued(
+    gw: &mut Gateway<'_>,
+    shard: usize,
+    sim: &mut SimState,
+    state: &mut ChurnState,
+    pair: &PairKey,
+    head: Option<Pending>,
+    now_s: f64,
+) {
+    let mut idxs: Vec<usize> = Vec::new();
+    if let Some(q) = sim.queues[shard].get_mut(pair) {
+        if let Some(s) = q.serving.take() {
+            idxs.push(s.idx);
+        }
+        if let Some(p) = &head {
+            idxs.push(p.idx);
+        }
+        while let Some(p) = q.backlog.pop_front() {
+            idxs.push(p.idx);
+        }
+    } else if let Some(p) = &head {
+        idxs.push(p.idx);
+    }
+    for idx in idxs {
+        gw.pool_mut().release(pair);
+        sim.in_flight[shard] -= 1;
+        sim.total_in_flight -= 1;
+        match state.copy_lost(idx, now_s) {
+            LossOutcome::RetryAt(t) => sim.push(t, EventKind::Retry(idx)),
+            LossOutcome::Absorbed | LossOutcome::Lost => {}
+        }
+    }
 }
 
 /// Render a dataset up front and drive it through the fleet.
@@ -885,6 +1269,128 @@ mod tests {
     }
 
     #[test]
+    fn fleet_churn_crashes_lose_and_recover_deterministically() {
+        // both the retry and hedge policies: crashes fire, every
+        // request is accounted exactly once (served, shed, or lost —
+        // hedged duplicates never double-count), replay is
+        // bit-identical, and no slot leaks.
+        let e = engine();
+        let ds = coco::build(24, 33);
+        for policy in [
+            ResiliencePolicy::Retry { budget: 4 },
+            ResiliencePolicy::Hedge,
+        ] {
+            let churn = ChurnConfig {
+                mtbf_s: 0.05,
+                mttr_s: 0.1,
+                probe_interval_s: 0.02,
+                probe_timeout_s: 0.01,
+                suspect_after: 1,
+                warmup_s: 0.05,
+                policy,
+                retry_backoff_s: 0.02,
+                horizon_slack_s: 1.0,
+                seed: 3,
+                ..Default::default()
+            };
+            let run = |e: &Engine| {
+                let cfg = FleetConfig {
+                    n_nodes: 6,
+                    n_shards: 2,
+                    queue_capacity: 2,
+                    churn: Some(churn.clone()),
+                    ..Default::default()
+                };
+                let mut fl = build_fleet(e, "LE", &cfg);
+                let report = run_dataset(
+                    &mut fl,
+                    &ds,
+                    &ArrivalProcess::Poisson { rate_rps: 300.0 },
+                    21,
+                )
+                .unwrap();
+                // every slot released despite crashes mid-service
+                assert_eq!(
+                    fl.shards()
+                        .iter()
+                        .map(|g| g.pool().total_in_flight())
+                        .sum::<usize>(),
+                    0,
+                    "{policy:?}"
+                );
+                report
+            };
+            let a = run(&e);
+            let c = a.churn.as_ref().expect("churn report");
+            assert!(c.crashes > 0, "{policy:?}: no crash within the run");
+            assert_eq!(
+                a.requests() + a.dropped + c.lost,
+                a.offered,
+                "{policy:?}: every request must be served, shed, or lost"
+            );
+            // bit-identical replay, churn block included
+            let b = run(&e);
+            assert_eq!(a.to_json().dump(), b.to_json().dump());
+        }
+    }
+
+    #[test]
+    fn drifting_fleet_diverges_deterministically_from_static() {
+        // satellite: FleetConfig::drift -> EdgeNode::enable_drift had no
+        // coverage. A drifting fleet must (a) replay bit-identically,
+        // (b) diverge from the static fleet on the same workload, and
+        // (c) give nodes distinct drift streams (per-node seeds differ).
+        let e = engine();
+        let ds = coco::build(30, 71);
+        let run = |drift: Option<DriftConfig>| {
+            let cfg = FleetConfig {
+                n_nodes: 4,
+                n_shards: 2,
+                queue_capacity: 16,
+                perturb: 0.0, // identical silicon: only drift differs
+                drift,
+                ..Default::default()
+            };
+            let mut fl = build_fleet(&e, "LE", &cfg);
+            let report = run_dataset(
+                &mut fl,
+                &ds,
+                &ArrivalProcess::Poisson { rate_rps: 500.0 },
+                13,
+            )
+            .unwrap();
+            let temps: Vec<f64> = fl
+                .shards()
+                .iter()
+                .flat_map(|g| g.pool().nodes())
+                .filter(|n| n.requests_served > 0)
+                .map(|n| n.temperature())
+                .collect();
+            (report.to_json().dump(), temps)
+        };
+        let (stat, stat_temps) = run(None);
+        let (drift_a, temps_a) = run(Some(DriftConfig::default()));
+        let (drift_b, temps_b) = run(Some(DriftConfig::default()));
+        assert_eq!(drift_a, drift_b, "drift must be deterministic");
+        assert_eq!(temps_a, temps_b);
+        assert_ne!(
+            stat, drift_a,
+            "drifting fleet must diverge from the static one"
+        );
+        // static nodes report zero temperature; drifting served nodes
+        // heat up, and with identical silicon + per-node seeds their
+        // trajectories must differ
+        assert!(stat_temps.iter().all(|&t| t == 0.0));
+        assert!(temps_a.iter().any(|&t| t > 0.0));
+        assert!(temps_a.len() >= 2, "need >= 2 served nodes");
+        let first = temps_a[0];
+        assert!(
+            temps_a.iter().any(|&t| (t - first).abs() > 1e-12),
+            "per-node drift seeds must differ: {temps_a:?}"
+        );
+    }
+
+    #[test]
     fn dispatch_orders_are_deterministic_and_complete() {
         use std::collections::BTreeSet;
         let in_flight = [3usize, 0, 5, 1];
@@ -940,6 +1446,7 @@ mod tests {
             cross_shard_fallbacks: 3,
             makespan_s: 4.0,
             peak_in_flight: 5,
+            churn: None,
         };
         assert_eq!(report.requests(), 8);
         assert!((report.shard_imbalance() - 1.5).abs() < 1e-12);

@@ -12,6 +12,7 @@ use crate::dataset::GtBox;
 use crate::detection::map::ImageEval;
 use crate::devices::{self, DeviceSpec};
 use crate::estimators::{Estimator, EstimatorKind, GatewayCost};
+use crate::lifecycle::{ChurnConfig, Membership};
 use crate::metrics::RunMetrics;
 use crate::nodes::{NodePool, NodeResponse};
 use crate::router::{GroupRules, PairKey, Policy, PolicyKind, ProfileStore};
@@ -106,6 +107,12 @@ pub struct Gateway<'e> {
     now_s: f64,
     /// Requests that needed a fallback re-route (failed primary node).
     pub fallbacks: usize,
+    /// Probe-driven membership (churn runs only, DESIGN.md §9). When
+    /// present, routing admissibility reads this *believed* health view
+    /// instead of ground-truth node health, and warming (recently
+    /// rejoined) nodes route with cost-aged profile rows. `None` keeps
+    /// the pre-churn behavior bit for bit.
+    membership: Option<Membership>,
 }
 
 impl<'e> Gateway<'e> {
@@ -132,7 +139,26 @@ impl<'e> Gateway<'e> {
             spec,
             now_s: 0.0,
             fallbacks: 0,
+            membership: None,
         }
+    }
+
+    /// Switch this gateway to probe-driven membership over its deployed
+    /// pool (all nodes start believed-Up). Routing stops reading
+    /// ground-truth health; only probe results and dispatch failures
+    /// fed through [`Gateway::membership_mut`] move the view.
+    pub fn enable_churn(&mut self, cfg: &ChurnConfig) {
+        let pairs: Vec<PairKey> =
+            self.pool.nodes().iter().map(|n| n.pair.clone()).collect();
+        self.membership = Some(Membership::new(&pairs, cfg));
+    }
+
+    pub fn membership(&self) -> Option<&Membership> {
+        self.membership.as_ref()
+    }
+
+    pub fn membership_mut(&mut self) -> Option<&mut Membership> {
+        self.membership.as_mut()
     }
 
     pub fn pool_mut(&mut self) -> &mut NodePool {
@@ -174,6 +200,20 @@ impl<'e> Gateway<'e> {
         image: &[f32],
         true_count: usize,
     ) -> Result<RoutedRequest> {
+        let now_s = self.now_s;
+        self.route_at(image, true_count, now_s)
+    }
+
+    /// [`Gateway::route`] at an explicit virtual time (open-loop and
+    /// fleet drivers pass their event clock). The time only matters
+    /// under churn, where warm-up aging of recently rejoined nodes is a
+    /// function of `now_s`.
+    pub fn route_at(
+        &mut self,
+        image: &[f32],
+        true_count: usize,
+        now_s: f64,
+    ) -> Result<RoutedRequest> {
         let (estimate, cost) = self.estimator.estimate(
             self.engine,
             &self.gateway_dev,
@@ -182,7 +222,7 @@ impl<'e> Gateway<'e> {
         )?;
         let group = self.rules.group_of(estimate);
 
-        let mut store_view = self.store.clone();
+        let mut store_view = self.routing_store(now_s);
         let mut pair = self
             .policy
             .route(&store_view, group)
@@ -191,7 +231,7 @@ impl<'e> Gateway<'e> {
         // succeeds: re-routes that end in a shed request rescued
         // nothing and must not inflate the fallback metric.
         let mut attempts = 0;
-        while !self.pool.is_available(&pair) {
+        while !self.endpoint_admits(&pair) {
             attempts += 1;
             if attempts > self.pool.len() {
                 return Err(anyhow::Error::new(NoEndpoint));
@@ -215,6 +255,65 @@ impl<'e> Gateway<'e> {
             true_count,
             cost,
         })
+    }
+
+    /// Pick the second-best admissible pair for a hedged duplicate of
+    /// `routed`: re-run the policy over the routing store with the
+    /// primary pair removed, walking the same fallback sequence. No
+    /// estimator cost is charged — the duplicate reuses the primary's
+    /// estimate — and the walk does not touch the `fallbacks` counter.
+    pub fn route_secondary(
+        &mut self,
+        routed: &RoutedRequest,
+        now_s: f64,
+    ) -> Option<PairKey> {
+        let mut store_view = self.routing_store(now_s);
+        let mut exclude = routed.pair.clone();
+        loop {
+            let remaining: Vec<PairKey> = store_view
+                .pairs()
+                .into_iter()
+                .filter(|p| p != &exclude)
+                .collect();
+            if remaining.is_empty() {
+                return None;
+            }
+            store_view = store_view.restrict(&remaining);
+            let pair = self.policy.route(&store_view, routed.group)?;
+            if self.endpoint_admits(&pair) {
+                return Some(pair);
+            }
+            exclude = pair;
+        }
+    }
+
+    /// Routing-time admissibility of one endpoint. Without churn this
+    /// is ground truth (`NodePool::is_available`); with churn it is the
+    /// probe-driven *believed* health plus the (locally exact) queue
+    /// occupancy — the gateway can and does admit onto a node that is
+    /// already dead, paying for the stale view at dispatch.
+    fn endpoint_admits(&self, pair: &PairKey) -> bool {
+        match &self.membership {
+            Some(m) => m.believed_up(pair) && self.pool.has_slot(pair),
+            None => self.pool.is_available(pair),
+        }
+    }
+
+    /// The table the policy routes over right now: the shard store,
+    /// with warming nodes' rows cost-aged by the membership view
+    /// (lifecycle warm-up — a rejoining node looks expensive until its
+    /// window closes, so routers ease traffic back onto it).
+    fn routing_store(&self, now_s: f64) -> ProfileStore {
+        let mut view = self.store.clone();
+        if let Some(m) = &self.membership {
+            for pair in view.pairs() {
+                let mult = m.cost_multiplier(&pair, now_s);
+                if mult > 1.0 {
+                    view.scale_pair(&pair, mult, mult);
+                }
+            }
+        }
+        view
     }
 
     /// Dispatch phase: execute one request on the routed node at time
@@ -475,6 +574,71 @@ mod tests {
             .handle(&crowded.image, 7, &crowded.gt, &mut m)
             .unwrap();
         assert_eq!(o2.estimate, o1.detections);
+    }
+
+    #[test]
+    fn churn_gateway_routes_on_believed_health_not_ground_truth() {
+        let e = engine();
+        let store = tiny_store();
+        let pool =
+            NodePool::deploy(&e, &store.pairs(), &fleet(), 1).unwrap();
+        let mut gw = Gateway::new(
+            &e,
+            router_by_name("LE").unwrap(),
+            store,
+            pool,
+            5.0,
+            1,
+        );
+        let cheap = PairKey::new("ssd_v1", "jetson_orin_nano");
+        let big = PairKey::new("yolov8n", "pi5_aihat");
+        gw.enable_churn(&crate::lifecycle::ChurnConfig {
+            suspect_after: 2,
+            warmup_s: 2.0,
+            // huge warm-up penalty so aging visibly flips LE's choice
+            warmup_penalty: 40.0,
+            ..Default::default()
+        });
+        let img = vec![0.5f32; 384 * 384];
+        // believed Up: LE picks the cheap pair
+        assert_eq!(gw.route_at(&img, 0, 0.0).unwrap().pair, cheap);
+        // ground truth down but no probe noticed yet: still routed
+        // there (the stale-view cost this subsystem exists to model)
+        gw.pool_mut().set_health(&cheap, false);
+        assert_eq!(gw.route_at(&img, 0, 0.1).unwrap().pair, cheap);
+        // two missed probes: believed Down, routing avoids it
+        gw.membership_mut().unwrap().observe_probe(&cheap, false, 0.2);
+        gw.membership_mut().unwrap().observe_probe(&cheap, false, 0.3);
+        assert_eq!(gw.route_at(&img, 0, 0.4).unwrap().pair, big);
+        // rejoin observed: Warming until 3.0, aged rows keep LE away
+        gw.pool_mut().set_health(&cheap, true);
+        gw.membership_mut().unwrap().observe_probe(&cheap, true, 1.0);
+        assert_eq!(gw.route_at(&img, 0, 1.0).unwrap().pair, big);
+        // after the warm-up window the cheap pair wins again
+        assert_eq!(gw.route_at(&img, 0, 3.5).unwrap().pair, cheap);
+    }
+
+    #[test]
+    fn route_secondary_picks_a_distinct_admissible_pair() {
+        let e = engine();
+        let store = tiny_store();
+        let pool =
+            NodePool::deploy(&e, &store.pairs(), &fleet(), 1).unwrap();
+        let mut gw = Gateway::new(
+            &e,
+            router_by_name("LE").unwrap(),
+            store,
+            pool,
+            5.0,
+            1,
+        );
+        let img = vec![0.5f32; 384 * 384];
+        let routed = gw.route(&img, 0).unwrap();
+        let second = gw.route_secondary(&routed, 0.0).unwrap();
+        assert_ne!(second, routed.pair, "hedge must use a distinct pair");
+        // with the only alternative down there is no hedge target
+        gw.pool_mut().set_health(&second, false);
+        assert!(gw.route_secondary(&routed, 0.0).is_none());
     }
 
     #[test]

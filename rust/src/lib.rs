@@ -19,6 +19,9 @@
 //! * [`estimators`] — object-count estimators: Oracle, ED, SF, OB.
 //! * [`nodes`] — backend edge-node pool bound to the PJRT engine.
 //! * [`gateway`] — the serving loop gluing estimator → router → node.
+//! * [`lifecycle`] — node churn: seeded failure/recovery process,
+//!   probe-driven membership (stale health views), resilience policies
+//!   (drop / retry / hedge) for requests lost to crashes.
 //! * [`workload`] — closed-loop (piggy-backed) request driver, plus the
 //!   open-loop discrete-event concurrent driver ([`workload::openloop`]).
 //! * [`fleet`] — multi-gateway sharded serving: synthesized N-node
@@ -35,6 +38,7 @@ pub mod estimators;
 pub mod experiments;
 pub mod fleet;
 pub mod gateway;
+pub mod lifecycle;
 pub mod metrics;
 pub mod models;
 pub mod nodes;

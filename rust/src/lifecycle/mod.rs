@@ -1,0 +1,826 @@
+//! Node lifecycle under churn (DESIGN.md §9).
+//!
+//! The paper evaluates routing on a fixed, always-healthy testbed; a
+//! production edge fleet is the opposite — devices crash, overheat,
+//! reboot, and rejoin constantly. This module makes that a first-class
+//! scenario axis for every router:
+//!
+//! * [`failure_schedule`] samples each node's alternating up/down
+//!   renewal process (exponential MTBF/MTTR from the seeded RNG) on the
+//!   shared virtual clock, so the open-loop and fleet simulators can
+//!   inject ground-truth crash/rejoin events into their event heaps.
+//! * [`Membership`] is the gateway's *believed* view of node health,
+//!   fed only by periodic probes (and data-path dispatch failures) —
+//!   never by ground truth. Routing therefore operates on a stale view:
+//!   between a crash and its detection the gateway keeps dispatching to
+//!   a dead node and pays for it.
+//! * [`ResiliencePolicy`] decides what happens to requests lost to a
+//!   crash: drop them, retry with a bounded budget, or (proactively)
+//!   hedge every request with a duplicate on the second-best pair.
+//! * [`ChurnState`] tracks the copies of each request in flight so the
+//!   drivers can account lost / retried / hedged outcomes exactly once
+//!   per request; [`ChurnReport`] is the serialized summary.
+//!
+//! Everything here is deterministic in its seeds; golden-trace tests
+//! pin whole churn runs byte for byte.
+
+use std::collections::BTreeMap;
+
+use crate::router::PairKey;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// How the gateway handles a request whose in-flight copy is lost to a
+/// node crash (or that cannot be placed at arrival under churn).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ResiliencePolicy {
+    /// Lost requests are gone; the cheapest policy and the baseline the
+    /// others are measured against.
+    Drop,
+    /// Re-route a lost request after a backoff, at most `budget` times;
+    /// exhausting the budget loses it.
+    Retry { budget: usize },
+    /// Dispatch a duplicate of every request to the second-best
+    /// admissible pair. Either copy completing serves the request; a
+    /// crash only loses it when *both* copies die. No retries.
+    Hedge,
+}
+
+impl ResiliencePolicy {
+    /// Parse a config/CLI name: `drop`, `retry`, or `hedge`.
+    /// `retry_budget` parameterizes the retry variant.
+    pub fn parse(s: &str, retry_budget: usize) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "drop" => Some(Self::Drop),
+            "retry" => Some(Self::Retry { budget: retry_budget }),
+            "hedge" => Some(Self::Hedge),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Drop => "drop",
+            Self::Retry { .. } => "retry",
+            Self::Hedge => "hedge",
+        }
+    }
+}
+
+/// Parameters of one churn scenario: the ground-truth failure process,
+/// the probe loop that (belatedly) observes it, the warm-up window for
+/// rejoining nodes, and the resilience policy.
+#[derive(Clone, Debug)]
+pub struct ChurnConfig {
+    /// Mean time between failures per node (s); `INFINITY` = no churn
+    /// (membership and probes still run, nothing ever crashes).
+    pub mtbf_s: f64,
+    /// Mean time to repair per node (s).
+    pub mttr_s: f64,
+    /// Gateway health-probe period (s).
+    pub probe_interval_s: f64,
+    /// Probe timeout (s): probe results — responses and misses alike —
+    /// reach the membership view this long after the probe fires.
+    pub probe_timeout_s: f64,
+    /// Consecutive missed probes before a Suspect node is marked Down
+    /// (>= 1; 1 means the first miss is terminal).
+    pub suspect_after: usize,
+    /// Warm-up window after a recovery is observed (s): the node is
+    /// routable again but its profile rows are aged (cost-inflated)
+    /// until the window closes.
+    pub warmup_s: f64,
+    /// Cost inflation at the start of the warm-up window (0.5 = +50%
+    /// believed latency/energy), decaying linearly to 0 over
+    /// `warmup_s`.
+    pub warmup_penalty: f64,
+    pub policy: ResiliencePolicy,
+    /// Delay before a retry re-enters routing (s).
+    pub retry_backoff_s: f64,
+    /// How far past the last arrival the failure/probe timelines extend
+    /// (s) — bounds the event heap; late completions past the horizon
+    /// simply see a frozen membership view.
+    pub horizon_slack_s: f64,
+    /// Seed of the failure process (independent of arrivals/jitter).
+    pub seed: u64,
+}
+
+impl Default for ChurnConfig {
+    fn default() -> Self {
+        Self {
+            mtbf_s: 60.0,
+            mttr_s: 4.0,
+            probe_interval_s: 0.5,
+            probe_timeout_s: 0.2,
+            suspect_after: 2,
+            warmup_s: 3.0,
+            warmup_penalty: 0.5,
+            policy: ResiliencePolicy::Retry { budget: 4 },
+            retry_backoff_s: 0.25,
+            horizon_slack_s: 30.0,
+            seed: 11,
+        }
+    }
+}
+
+/// MTBF yielding a target steady-state availability for a given MTTR:
+/// availability = MTBF / (MTBF + MTTR). `availability >= 1` maps to
+/// `INFINITY` (the no-churn baseline).
+pub fn mtbf_for_availability(availability: f64, mttr_s: f64) -> f64 {
+    if availability >= 1.0 {
+        f64::INFINITY
+    } else {
+        mttr_s * availability / (1.0 - availability).max(1e-9)
+    }
+}
+
+/// One ground-truth health flip in the failure/recovery process.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FailureEvent {
+    pub t: f64,
+    /// Node index in pool order (fleet: global synthesis index).
+    pub node: usize,
+    /// `true` = rejoin, `false` = crash.
+    pub up: bool,
+}
+
+fn exp_sample(rng: &mut Rng, mean_s: f64) -> f64 {
+    -(1.0 - rng.f64()).ln() * mean_s
+}
+
+/// Sample every node's alternating crash/rejoin timeline up to
+/// `horizon_s`. Nodes start up; each draws an exponential time to
+/// failure (mean `mtbf_s`) then an exponential repair (mean `mttr_s`),
+/// repeating. Per-node streams are derived from the churn seed, so the
+/// schedule is deterministic and independent of node count changes
+/// elsewhere. Sorted by `(t, node)`.
+pub fn failure_schedule(
+    n_nodes: usize,
+    horizon_s: f64,
+    cfg: &ChurnConfig,
+) -> Vec<FailureEvent> {
+    let mut events = Vec::new();
+    if !cfg.mtbf_s.is_finite() || cfg.mtbf_s <= 0.0 || n_nodes == 0 {
+        return events;
+    }
+    let base = Rng::new(cfg.seed ^ 0x11FE_C7C1E);
+    for node in 0..n_nodes {
+        let mut rng = base.derive(node as u64);
+        let mut t = 0.0;
+        loop {
+            t += exp_sample(&mut rng, cfg.mtbf_s);
+            if t >= horizon_s {
+                break;
+            }
+            events.push(FailureEvent { t, node, up: false });
+            t += exp_sample(&mut rng, cfg.mttr_s.max(1e-6));
+            if t >= horizon_s {
+                break;
+            }
+            events.push(FailureEvent { t, node, up: true });
+        }
+    }
+    events.sort_by(|a, b| a.t.total_cmp(&b.t).then(a.node.cmp(&b.node)));
+    events
+}
+
+/// A gateway's belief about one node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MemberState {
+    /// Responding to probes; fully routable.
+    Up,
+    /// Missed at least one probe (or failed a dispatch) but not yet
+    /// declared Down; still routable — the grey zone where stale views
+    /// lose requests.
+    Suspect,
+    /// Declared dead after `suspect_after` consecutive misses; excluded
+    /// from routing until a probe answers again.
+    Down,
+    /// Responding again after Down; routable, but profile rows are aged
+    /// (cost-inflated) until the warm-up window closes.
+    Warming,
+}
+
+#[derive(Clone, Debug)]
+struct MemberEntry {
+    state: MemberState,
+    misses: usize,
+    warmup_until: f64,
+    /// Ground-truth crash/rejoin timestamps, recorded by the driver for
+    /// detection/recovery latency accounting only — routing never reads
+    /// them (that is the whole point of the probe layer).
+    crashed_at: Option<f64>,
+    rejoined_at: Option<f64>,
+}
+
+/// Probe-driven membership: the stale health view one gateway routes
+/// on. Updated only by [`Membership::observe_probe`] (scheduled probe
+/// results) and [`Membership::observe_dispatch_failure`] (data-path
+/// evidence); ground truth reaches it exclusively as accounting
+/// metadata via [`Membership::ground_truth_changed`].
+#[derive(Clone, Debug)]
+pub struct Membership {
+    entries: BTreeMap<PairKey, MemberEntry>,
+    suspect_after: usize,
+    warmup_s: f64,
+    warmup_penalty: f64,
+    detect_sum_s: f64,
+    detect_count: usize,
+    recover_sum_s: f64,
+    recover_count: usize,
+}
+
+impl Membership {
+    pub fn new(pairs: &[PairKey], cfg: &ChurnConfig) -> Self {
+        Self {
+            entries: pairs
+                .iter()
+                .map(|p| {
+                    (
+                        p.clone(),
+                        MemberEntry {
+                            state: MemberState::Up,
+                            misses: 0,
+                            warmup_until: 0.0,
+                            crashed_at: None,
+                            rejoined_at: None,
+                        },
+                    )
+                })
+                .collect(),
+            suspect_after: cfg.suspect_after.max(1),
+            warmup_s: cfg.warmup_s.max(1e-9),
+            warmup_penalty: cfg.warmup_penalty.max(0.0),
+            detect_sum_s: 0.0,
+            detect_count: 0,
+            recover_sum_s: 0.0,
+            recover_count: 0,
+        }
+    }
+
+    pub fn state(&self, pair: &PairKey) -> Option<MemberState> {
+        self.entries.get(pair).map(|e| e.state)
+    }
+
+    /// Routable under the believed view: everything but Down. Suspect
+    /// nodes still take traffic (hysteresis); unknown pairs do not.
+    pub fn believed_up(&self, pair: &PairKey) -> bool {
+        self.entries
+            .get(pair)
+            .map(|e| e.state != MemberState::Down)
+            .unwrap_or(false)
+    }
+
+    /// Believed cost multiplier for routing: 1.0 normally; during a
+    /// warm-up window, `1 + penalty * remaining/warmup_s` (the aged
+    /// profile a rejoining node routes with).
+    pub fn cost_multiplier(&self, pair: &PairKey, now_s: f64) -> f64 {
+        match self.entries.get(pair) {
+            Some(e)
+                if e.state == MemberState::Warming
+                    && now_s < e.warmup_until =>
+            {
+                1.0 + self.warmup_penalty * (e.warmup_until - now_s)
+                    / self.warmup_s
+            }
+            _ => 1.0,
+        }
+    }
+
+    /// Apply one probe result (fires `probe_timeout_s` after the probe
+    /// sampled ground truth — the caller schedules that delay).
+    pub fn observe_probe(&mut self, pair: &PairKey, responded: bool, now_s: f64) {
+        let suspect_after = self.suspect_after;
+        let warmup_s = self.warmup_s;
+        let Some(e) = self.entries.get_mut(pair) else {
+            return;
+        };
+        if responded {
+            e.misses = 0;
+            match e.state {
+                MemberState::Down => {
+                    e.state = MemberState::Warming;
+                    e.warmup_until = now_s + warmup_s;
+                    e.crashed_at = None;
+                    if let Some(rj) = e.rejoined_at.take() {
+                        self.recover_sum_s += (now_s - rj).max(0.0);
+                        self.recover_count += 1;
+                    }
+                }
+                MemberState::Suspect => e.state = MemberState::Up,
+                MemberState::Warming => {
+                    if now_s >= e.warmup_until {
+                        e.state = MemberState::Up;
+                    }
+                }
+                MemberState::Up => {}
+            }
+        } else {
+            e.misses += 1;
+            if e.state != MemberState::Down {
+                if e.misses >= suspect_after {
+                    e.state = MemberState::Down;
+                    if let Some(ca) = e.crashed_at.take() {
+                        self.detect_sum_s += (now_s - ca).max(0.0);
+                        self.detect_count += 1;
+                    }
+                } else {
+                    e.state = MemberState::Suspect;
+                }
+            }
+        }
+    }
+
+    /// A dispatch to `pair` found it dead: data-path evidence counts
+    /// like a missed probe (passive health checking), so the gateway
+    /// stops feeding a crashed node before the next probe cycle.
+    pub fn observe_dispatch_failure(&mut self, pair: &PairKey, now_s: f64) {
+        self.observe_probe(pair, false, now_s);
+    }
+
+    /// Accounting-only hook: the driver records ground-truth flips so
+    /// detection (crash → Down) and recovery (rejoin → routable) delays
+    /// can be reported. Never read by routing.
+    pub fn ground_truth_changed(&mut self, pair: &PairKey, up: bool, now_s: f64) {
+        if let Some(e) = self.entries.get_mut(pair) {
+            if up {
+                e.rejoined_at = Some(now_s);
+            } else {
+                e.crashed_at = Some(now_s);
+                e.rejoined_at = None;
+            }
+        }
+    }
+
+    /// Census of believed states: (up, suspect, down, warming).
+    pub fn counts(&self) -> (usize, usize, usize, usize) {
+        let mut c = (0, 0, 0, 0);
+        for e in self.entries.values() {
+            match e.state {
+                MemberState::Up => c.0 += 1,
+                MemberState::Suspect => c.1 += 1,
+                MemberState::Down => c.2 += 1,
+                MemberState::Warming => c.3 += 1,
+            }
+        }
+        c
+    }
+
+    /// (sum, count) of crash → Down detection delays.
+    pub fn detect_stats(&self) -> (f64, usize) {
+        (self.detect_sum_s, self.detect_count)
+    }
+
+    /// (sum, count) of rejoin → routable recovery delays.
+    pub fn recover_stats(&self) -> (f64, usize) {
+        (self.recover_sum_s, self.recover_count)
+    }
+}
+
+/// Per-request copy accounting.
+#[derive(Clone, Copy, Debug, Default)]
+struct ReqCopies {
+    /// Copies currently in the system (1 normally, 2 when hedged).
+    outstanding: u8,
+    /// A copy already completed and was recorded.
+    done: bool,
+    /// Retries consumed.
+    attempts: usize,
+}
+
+/// What the driver must do after losing one in-flight copy.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LossOutcome {
+    /// Nothing: a sibling copy is still in flight, or the request was
+    /// already served.
+    Absorbed,
+    /// Schedule a re-dispatch of the request at this virtual time.
+    RetryAt(f64),
+    /// The request is permanently lost (already counted).
+    Lost,
+}
+
+/// Request-copy state machine shared by the open-loop and fleet
+/// drivers: tracks how many copies of each request are in flight and
+/// applies the resilience policy when copies are lost, guaranteeing
+/// each request is counted exactly once (served, lost, or shed).
+#[derive(Clone, Debug)]
+pub struct ChurnState {
+    policy: ResiliencePolicy,
+    retry_backoff_s: f64,
+    req: Vec<ReqCopies>,
+    /// Ground-truth crash events that fired during the run.
+    pub crashes: usize,
+    /// Requests permanently lost (crash losses the policy could not or
+    /// would not recover).
+    pub lost: usize,
+    /// Successful re-dispatches (retry policy).
+    pub retried: usize,
+    /// Hedge duplicates dispatched.
+    pub hedged: usize,
+    /// Requests whose *hedge* copy completed first.
+    pub hedge_wins: usize,
+    /// Backend energy burned by losing hedge copies (their service is
+    /// real but their response is discarded).
+    pub wasted_energy_mwh: f64,
+}
+
+impl ChurnState {
+    pub fn new(n_requests: usize, policy: ResiliencePolicy, retry_backoff_s: f64) -> Self {
+        Self {
+            policy,
+            retry_backoff_s,
+            req: vec![ReqCopies::default(); n_requests],
+            crashes: 0,
+            lost: 0,
+            retried: 0,
+            hedged: 0,
+            hedge_wins: 0,
+            wasted_energy_mwh: 0.0,
+        }
+    }
+
+    pub fn policy(&self) -> ResiliencePolicy {
+        self.policy
+    }
+
+    /// A primary copy entered the system (arrival admitted).
+    pub fn dispatched(&mut self, idx: usize) {
+        self.req[idx].outstanding += 1;
+    }
+
+    /// A hedge duplicate entered the system.
+    pub fn hedge_dispatched(&mut self, idx: usize) {
+        self.req[idx].outstanding += 1;
+        self.hedged += 1;
+    }
+
+    /// A retry re-dispatch entered the system.
+    pub fn retry_dispatched(&mut self, idx: usize) {
+        self.req[idx].outstanding += 1;
+        self.retried += 1;
+    }
+
+    /// One in-flight copy of `idx` was lost to a crash (or a dispatch
+    /// onto a dead node).
+    pub fn copy_lost(&mut self, idx: usize, now_s: f64) -> LossOutcome {
+        let r = &mut self.req[idx];
+        r.outstanding = r.outstanding.saturating_sub(1);
+        if r.done || r.outstanding > 0 {
+            return LossOutcome::Absorbed;
+        }
+        match self.policy {
+            ResiliencePolicy::Retry { budget } if r.attempts < budget => {
+                r.attempts += 1;
+                LossOutcome::RetryAt(now_s + self.retry_backoff_s)
+            }
+            _ => {
+                self.lost += 1;
+                LossOutcome::Lost
+            }
+        }
+    }
+
+    /// A scheduled retry (or an arrival, under the retry policy) found
+    /// no admissible endpoint: back off again if budget remains.
+    pub fn placement_failed(&mut self, idx: usize, now_s: f64) -> LossOutcome {
+        let r = &mut self.req[idx];
+        if r.done {
+            return LossOutcome::Absorbed;
+        }
+        match self.policy {
+            ResiliencePolicy::Retry { budget } if r.attempts < budget => {
+                r.attempts += 1;
+                LossOutcome::RetryAt(now_s + self.retry_backoff_s)
+            }
+            _ => {
+                self.lost += 1;
+                LossOutcome::Lost
+            }
+        }
+    }
+
+    /// One copy of `idx` completed service. Returns `true` when this
+    /// copy wins (the request must be recorded); a losing hedge copy's
+    /// energy is accounted as waste instead.
+    pub fn copy_completed(&mut self, idx: usize, energy_mwh: f64, hedge: bool) -> bool {
+        let r = &mut self.req[idx];
+        r.outstanding = r.outstanding.saturating_sub(1);
+        if r.done {
+            self.wasted_energy_mwh += energy_mwh;
+            false
+        } else {
+            r.done = true;
+            if hedge {
+                self.hedge_wins += 1;
+            }
+            true
+        }
+    }
+}
+
+/// Serialized churn summary attached to open-loop and fleet reports.
+#[derive(Clone, Debug)]
+pub struct ChurnReport {
+    pub crashes: usize,
+    pub lost: usize,
+    pub retried: usize,
+    pub hedged: usize,
+    pub hedge_wins: usize,
+    pub wasted_energy_mwh: f64,
+    pub mean_time_to_detect_s: f64,
+    pub mean_time_to_recover_s: f64,
+    /// Final membership census across all gateways:
+    /// (up, suspect, down, warming).
+    pub members: (usize, usize, usize, usize),
+}
+
+impl ChurnReport {
+    /// Aggregate the request-copy state with one membership view per
+    /// gateway (the fleet passes one per shard).
+    pub fn collect<'a>(
+        state: &ChurnState,
+        memberships: impl IntoIterator<Item = &'a Membership>,
+    ) -> Self {
+        let mut detect = (0.0, 0usize);
+        let mut recover = (0.0, 0usize);
+        let mut members = (0, 0, 0, 0);
+        for m in memberships {
+            let d = m.detect_stats();
+            detect.0 += d.0;
+            detect.1 += d.1;
+            let r = m.recover_stats();
+            recover.0 += r.0;
+            recover.1 += r.1;
+            let c = m.counts();
+            members.0 += c.0;
+            members.1 += c.1;
+            members.2 += c.2;
+            members.3 += c.3;
+        }
+        let mean = |(sum, n): (f64, usize)| {
+            if n > 0 {
+                sum / n as f64
+            } else {
+                0.0
+            }
+        };
+        Self {
+            crashes: state.crashes,
+            lost: state.lost,
+            retried: state.retried,
+            hedged: state.hedged,
+            hedge_wins: state.hedge_wins,
+            wasted_energy_mwh: state.wasted_energy_mwh,
+            mean_time_to_detect_s: mean(detect),
+            mean_time_to_recover_s: mean(recover),
+            members,
+        }
+    }
+
+    /// One-line human summary shared by the `serve --churn` CLI paths.
+    pub fn summary(&self) -> String {
+        format!(
+            "churn: {} crashes, lost {}, retried {}, hedged {} ({} wins, {:.3} mWh wasted), ttd {:.2} s, ttr {:.2} s",
+            self.crashes,
+            self.lost,
+            self.retried,
+            self.hedged,
+            self.hedge_wins,
+            self.wasted_energy_mwh,
+            self.mean_time_to_detect_s,
+            self.mean_time_to_recover_s
+        )
+    }
+
+    /// Stable JSON block (field order fixed by the Json substrate's
+    /// BTreeMap) — joins the golden-traced report dumps.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("crashes", Json::num(self.crashes as f64)),
+            ("lost", Json::num(self.lost as f64)),
+            ("retried", Json::num(self.retried as f64)),
+            ("hedged", Json::num(self.hedged as f64)),
+            ("hedge_wins", Json::num(self.hedge_wins as f64)),
+            (
+                "wasted_energy_mwh",
+                Json::num(self.wasted_energy_mwh),
+            ),
+            (
+                "mean_time_to_detect_s",
+                Json::num(self.mean_time_to_detect_s),
+            ),
+            (
+                "mean_time_to_recover_s",
+                Json::num(self.mean_time_to_recover_s),
+            ),
+            ("members_up", Json::num(self.members.0 as f64)),
+            ("members_suspect", Json::num(self.members.1 as f64)),
+            ("members_down", Json::num(self.members.2 as f64)),
+            ("members_warming", Json::num(self.members.3 as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pair(i: usize) -> PairKey {
+        PairKey::new("m", &format!("d{i}"))
+    }
+
+    #[test]
+    fn policy_parse_round_trips_labels() {
+        for (s, p) in [
+            ("drop", ResiliencePolicy::Drop),
+            ("retry", ResiliencePolicy::Retry { budget: 3 }),
+            ("hedge", ResiliencePolicy::Hedge),
+        ] {
+            assert_eq!(ResiliencePolicy::parse(s, 3), Some(p));
+            assert_eq!(p.label(), s);
+        }
+        assert_eq!(ResiliencePolicy::parse("HEDGE", 0), Some(ResiliencePolicy::Hedge));
+        assert_eq!(ResiliencePolicy::parse("wat", 3), None);
+    }
+
+    #[test]
+    fn availability_maps_to_mtbf() {
+        assert!(mtbf_for_availability(1.0, 4.0).is_infinite());
+        // 80% availability with mttr 4 => mtbf 16 (16 / 20 = 0.8)
+        assert!((mtbf_for_availability(0.8, 4.0) - 16.0).abs() < 1e-9);
+        assert!((mtbf_for_availability(0.5, 2.0) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn failure_schedule_is_deterministic_sorted_and_alternating() {
+        let cfg = ChurnConfig {
+            mtbf_s: 2.0,
+            mttr_s: 1.0,
+            seed: 5,
+            ..Default::default()
+        };
+        let a = failure_schedule(4, 50.0, &cfg);
+        let b = failure_schedule(4, 50.0, &cfg);
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+        assert!(a.windows(2).all(|w| w[0].t <= w[1].t));
+        // per node: strictly alternating starting with a crash
+        for node in 0..4 {
+            let evs: Vec<&FailureEvent> =
+                a.iter().filter(|e| e.node == node).collect();
+            for (i, e) in evs.iter().enumerate() {
+                assert_eq!(e.up, i % 2 == 1, "node {node} event {i}");
+            }
+        }
+        // different seed, different timeline
+        let c = failure_schedule(
+            4,
+            50.0,
+            &ChurnConfig { seed: 6, ..cfg.clone() },
+        );
+        assert_ne!(a, c);
+        // no-churn baselines produce no events
+        let inf = ChurnConfig { mtbf_s: f64::INFINITY, ..cfg };
+        assert!(failure_schedule(4, 50.0, &inf).is_empty());
+    }
+
+    #[test]
+    fn membership_detects_suspects_then_down_then_warms_back() {
+        let cfg = ChurnConfig {
+            suspect_after: 2,
+            warmup_s: 2.0,
+            warmup_penalty: 0.5,
+            ..Default::default()
+        };
+        let p = pair(0);
+        let mut m = Membership::new(&[p.clone()], &cfg);
+        assert_eq!(m.state(&p), Some(MemberState::Up));
+        assert!(m.believed_up(&p));
+
+        m.ground_truth_changed(&p, false, 1.0); // crash (accounting only)
+        assert!(m.believed_up(&p), "probes have not noticed yet");
+
+        m.observe_probe(&p, false, 1.5);
+        assert_eq!(m.state(&p), Some(MemberState::Suspect));
+        assert!(m.believed_up(&p), "suspect still takes traffic");
+
+        m.observe_probe(&p, false, 2.0);
+        assert_eq!(m.state(&p), Some(MemberState::Down));
+        assert!(!m.believed_up(&p));
+        assert_eq!(m.detect_stats(), (1.0, 1)); // 2.0 - 1.0
+
+        m.ground_truth_changed(&p, true, 2.5); // rejoin
+        m.observe_probe(&p, true, 3.0);
+        assert_eq!(m.state(&p), Some(MemberState::Warming));
+        assert!(m.believed_up(&p));
+        assert_eq!(m.recover_stats(), (0.5, 1)); // 3.0 - 2.5
+
+        // warm-up multiplier decays linearly to 1.0 at warmup_until=5.0
+        assert!((m.cost_multiplier(&p, 3.0) - 1.5).abs() < 1e-9);
+        assert!((m.cost_multiplier(&p, 4.0) - 1.25).abs() < 1e-9);
+        assert!((m.cost_multiplier(&p, 5.0) - 1.0).abs() < 1e-9);
+
+        // still warming before the window closes, up after
+        m.observe_probe(&p, true, 4.0);
+        assert_eq!(m.state(&p), Some(MemberState::Warming));
+        m.observe_probe(&p, true, 5.5);
+        assert_eq!(m.state(&p), Some(MemberState::Up));
+        assert_eq!(m.counts(), (1, 0, 0, 0));
+    }
+
+    #[test]
+    fn membership_false_alarm_recovers_and_dispatch_failure_counts() {
+        let cfg = ChurnConfig { suspect_after: 2, ..Default::default() };
+        let p = pair(0);
+        let mut m = Membership::new(&[p.clone()], &cfg);
+        // one miss then a response: back to Up, miss counter reset
+        m.observe_probe(&p, false, 1.0);
+        assert_eq!(m.state(&p), Some(MemberState::Suspect));
+        m.observe_probe(&p, true, 1.5);
+        assert_eq!(m.state(&p), Some(MemberState::Up));
+        // dispatch failures count like missed probes
+        m.observe_dispatch_failure(&p, 2.0);
+        m.observe_dispatch_failure(&p, 2.1);
+        assert_eq!(m.state(&p), Some(MemberState::Down));
+        // unknown pairs are never routable and never panic
+        let ghost = pair(9);
+        assert!(!m.believed_up(&ghost));
+        m.observe_probe(&ghost, false, 3.0);
+        assert_eq!(m.cost_multiplier(&ghost, 3.0), 1.0);
+    }
+
+    #[test]
+    fn churn_state_drop_retry_and_budget_exhaustion() {
+        // drop: a lone lost copy is lost immediately
+        let mut s = ChurnState::new(2, ResiliencePolicy::Drop, 0.1);
+        s.dispatched(0);
+        assert_eq!(s.copy_lost(0, 1.0), LossOutcome::Lost);
+        assert_eq!(s.lost, 1);
+
+        // retry: budget 2 => two RetryAt outcomes, then lost
+        let mut s =
+            ChurnState::new(1, ResiliencePolicy::Retry { budget: 2 }, 0.5);
+        s.dispatched(0);
+        assert_eq!(s.copy_lost(0, 1.0), LossOutcome::RetryAt(1.5));
+        s.retry_dispatched(0);
+        assert_eq!(s.copy_lost(0, 2.0), LossOutcome::RetryAt(2.5));
+        s.retry_dispatched(0);
+        assert_eq!(s.copy_lost(0, 3.0), LossOutcome::Lost);
+        assert_eq!((s.retried, s.lost), (2, 1));
+
+        // placement failure consumes the same budget
+        let mut s =
+            ChurnState::new(1, ResiliencePolicy::Retry { budget: 1 }, 0.5);
+        assert_eq!(s.placement_failed(0, 1.0), LossOutcome::RetryAt(1.5));
+        assert_eq!(s.placement_failed(0, 2.0), LossOutcome::Lost);
+    }
+
+    #[test]
+    fn churn_state_hedge_sibling_and_waste_accounting() {
+        let mut s = ChurnState::new(1, ResiliencePolicy::Hedge, 0.1);
+        s.dispatched(0);
+        s.hedge_dispatched(0);
+        assert_eq!(s.hedged, 1);
+        // losing one copy is absorbed by the sibling
+        assert_eq!(s.copy_lost(0, 1.0), LossOutcome::Absorbed);
+        // the surviving hedge copy wins
+        assert!(s.copy_completed(0, 0.5, true));
+        assert_eq!(s.hedge_wins, 1);
+        assert_eq!(s.lost, 0);
+
+        // both copies completing: second is waste
+        let mut s = ChurnState::new(1, ResiliencePolicy::Hedge, 0.1);
+        s.dispatched(0);
+        s.hedge_dispatched(0);
+        assert!(s.copy_completed(0, 0.3, false));
+        assert!(!s.copy_completed(0, 0.4, true));
+        assert_eq!(s.hedge_wins, 0);
+        assert!((s.wasted_energy_mwh - 0.4).abs() < 1e-12);
+
+        // both copies crashing loses the request (hedge never retries)
+        let mut s = ChurnState::new(1, ResiliencePolicy::Hedge, 0.1);
+        s.dispatched(0);
+        s.hedge_dispatched(0);
+        assert_eq!(s.copy_lost(0, 1.0), LossOutcome::Absorbed);
+        assert_eq!(s.copy_lost(0, 1.1), LossOutcome::Lost);
+        assert_eq!(s.lost, 1);
+    }
+
+    #[test]
+    fn churn_report_aggregates_memberships() {
+        let cfg = ChurnConfig::default();
+        let pairs: Vec<PairKey> = (0..3).map(pair).collect();
+        let mut m1 = Membership::new(&pairs[..2], &cfg);
+        let m2 = Membership::new(&pairs[2..], &cfg);
+        m1.ground_truth_changed(&pairs[0], false, 1.0);
+        m1.observe_probe(&pairs[0], false, 2.0);
+        m1.observe_probe(&pairs[0], false, 3.0);
+        let state = ChurnState::new(4, ResiliencePolicy::Drop, 0.1);
+        let r = ChurnReport::collect(&state, [&m1, &m2]);
+        assert_eq!(r.members, (2, 0, 1, 0));
+        assert!((r.mean_time_to_detect_s - 2.0).abs() < 1e-9);
+        let j = r.to_json();
+        assert_eq!(j.req("members_down").unwrap().as_usize(), Some(1));
+        assert_eq!(j.req("crashes").unwrap().as_usize(), Some(0));
+    }
+}

@@ -6,7 +6,9 @@
 //!               fig8|fig9|overhead|openloop|all
 //!   serve       route one dataset through a chosen router and report;
 //!               `--open-loop` switches to concurrent Poisson arrivals,
-//!               `--fleet` to sharded multi-gateway fleet serving
+//!               `--fleet` to sharded multi-gateway fleet serving,
+//!               `--churn` adds node crashes/rejoins with probe-driven
+//!               membership and a resilience policy (either mode)
 //!   list        list models, devices, routers
 //!
 //! Common options: --delta <mAP pts> --images <n> --per-group <n>
@@ -15,7 +17,11 @@
 //! --queue-cap <n> --rates r1,r2,r3; fleet options: --nodes <n>
 //! --shards <k> --dispatch hash|least|sticky, and for the sweep
 //! --fleet-sizes a,b --fleet-shards a,b --fleet-routers a,b
-//! --fleet-rate <req/s> --fleet-requests <n> --fleet-perturb <f>
+//! --fleet-rate <req/s> --fleet-requests <n> --fleet-perturb <f>;
+//! churn options: --mtbf <s> --mttr <s> --resilience drop|retry|hedge
+//! --retry-budget <n> --probe-interval <s> --warmup <s>, and for the
+//! sweep --churn-availability a,b --churn-policies a,b
+//! --churn-routers a,b --churn-rate <req/s> --churn-requests <n>
 
 use anyhow::Result;
 
@@ -38,10 +44,12 @@ USAGE:
                    [--open-loop] [--rate R] [--queue-cap N]
                    [--fleet] [--nodes N] [--shards K]
                    [--dispatch hash|least|sticky]
+                   [--churn] [--mtbf S] [--mttr S]
+                   [--resilience drop|retry|hedge]
   ecore list
 
 experiments: fig2 fig4 fig5 table1 fig6 fig7 fig8 fig9 overhead openloop
-             fleet
+             fleet churn
 ";
 
 fn main() -> Result<()> {
@@ -108,6 +116,11 @@ fn main() -> Result<()> {
                     "unknown dataset '{other}' (coco|balanced; video is fig8)"
                 ),
             };
+            let churn_cfg = if args.flag("churn") {
+                Some(h.cfg.churn_config()?)
+            } else {
+                None
+            };
             if args.flag("fleet") {
                 let dispatch_s =
                     args.str_or("dispatch", &h.cfg.fleet_dispatch);
@@ -127,6 +140,7 @@ fn main() -> Result<()> {
                     n_sources: h.cfg.fleet_sources,
                     seed: h.cfg.seed,
                     drift: None,
+                    churn: churn_cfg.clone(),
                 };
                 let mut fl = ecore::fleet::FleetBuilder::new(
                     &h.engine,
@@ -174,9 +188,12 @@ fn main() -> Result<()> {
                     report.total_energy_mwh(),
                     report.energy_per_request_mwh()
                 );
+                if let Some(c) = &report.churn {
+                    println!("{}", c.summary());
+                }
                 return Ok(());
             }
-            if args.flag("open-loop") {
+            if args.flag("open-loop") || args.flag("churn") {
                 let mut gw = ecore::experiments::serve::build_gateway(
                     &h,
                     spec,
@@ -193,6 +210,7 @@ fn main() -> Result<()> {
                             },
                         queue_capacity: h.cfg.queue_capacity,
                         seed: h.cfg.seed,
+                        churn: churn_cfg,
                     },
                 )?;
                 let m = &report.metrics;
@@ -223,6 +241,9 @@ fn main() -> Result<()> {
                     m.total_energy_mwh(),
                     m.gateway_energy_mwh
                 );
+                if let Some(c) = &report.churn {
+                    println!("{}", c.summary());
+                }
                 return Ok(());
             }
             let m = ecore::experiments::serve::run_router_on_dataset(

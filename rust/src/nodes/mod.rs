@@ -25,6 +25,23 @@ const JITTER: f64 = 0.03;
 /// open-loop driver overrides this via [`NodePool::set_queue_capacity`].
 pub const DEFAULT_QUEUE_CAPACITY: usize = 8;
 
+/// Marker error returned by [`EdgeNode::process_at`] when the node's
+/// ground-truth health is down. Churn drivers downcast to this
+/// (`err.is::<NodeDown>()`) to lose the request through the resilience
+/// policy — a dispatch onto a crashed node the membership view has not
+/// caught up with yet; any other processing error is real
+/// infrastructure failure and must propagate.
+#[derive(Clone, Debug)]
+pub struct NodeDown(pub PairKey);
+
+impl std::fmt::Display for NodeDown {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "node {} is down", self.0)
+    }
+}
+
+impl std::error::Error for NodeDown {}
+
 /// Result of processing one request on a node.
 #[derive(Clone, Debug)]
 pub struct NodeResponse {
@@ -107,7 +124,9 @@ impl EdgeNode {
         image: &[f32],
         now_s: f64,
     ) -> Result<NodeResponse> {
-        anyhow::ensure!(self.healthy, "node {} is down", self.pair);
+        if !self.healthy {
+            return Err(anyhow::Error::new(NodeDown(self.pair.clone())));
+        }
         let mut heat = std::mem::take(&mut self.heat_buf);
         engine.infer_into(&self.pair.model, image, &mut heat)?;
         let detections =
@@ -134,6 +153,32 @@ impl EdgeNode {
     /// Process with no drift-clock context.
     pub fn process(&mut self, engine: &Engine, image: &[f32]) -> Result<NodeResponse> {
         self.process_at(engine, image, 0.0)
+    }
+
+    /// THE admission predicate: healthy and below the queue bound.
+    /// Every health/capacity check in the pool funnels through here (or
+    /// [`EdgeNode::has_slot`]), so the lifecycle layer has exactly one
+    /// point to reason about.
+    pub fn admits(&self, queue_capacity: usize) -> bool {
+        self.healthy && self.has_slot(queue_capacity)
+    }
+
+    /// Capacity half of the admission predicate, ignoring health.
+    /// Queue occupancy is gateway-side knowledge (the driver maintains
+    /// `in_flight` locally), so churn gateways — which only *believe*
+    /// health through probes — still check slots exactly.
+    pub fn has_slot(&self, queue_capacity: usize) -> bool {
+        self.in_flight < queue_capacity
+    }
+
+    /// A crashed node coming back: reboot resets the drift model's
+    /// thermal/background-load state (a rebooted board is cold) and the
+    /// idle clock. Battery droop persists — reboots do not recharge.
+    pub fn on_rejoin(&mut self, now_s: f64) {
+        self.last_busy_end_s = now_s;
+        if let Some(d) = self.drift.as_mut() {
+            d.reboot();
+        }
     }
 }
 
@@ -263,23 +308,38 @@ impl NodePool {
             .unwrap_or(0)
     }
 
-    /// Can `pair` accept a new request? Healthy *and* below the queue
-    /// bound — the routing-time admission check for both loops (closed
-    /// loop: depth is always 0, so this reduces to the health check).
+    /// Can `pair` accept a new request? [`EdgeNode::admits`]: healthy
+    /// *and* below the queue bound — the routing-time admission check
+    /// for both loops (closed loop: depth is always 0, so this reduces
+    /// to the health check).
     pub fn is_available(&self, pair: &PairKey) -> bool {
         self.nodes
             .iter()
             .find(|n| &n.pair == pair)
-            .map(|n| n.healthy && n.in_flight < self.queue_capacity)
+            .map(|n| n.admits(self.queue_capacity))
+            .unwrap_or(false)
+    }
+
+    /// Capacity-only admission ([`EdgeNode::has_slot`]): what a churn
+    /// gateway checks at routing time, where ground-truth health is
+    /// replaced by the probe-driven membership view.
+    pub fn has_slot(&self, pair: &PairKey) -> bool {
+        self.nodes
+            .iter()
+            .find(|n| &n.pair == pair)
+            .map(|n| n.has_slot(self.queue_capacity))
             .unwrap_or(false)
     }
 
     /// Claim one queue slot on `pair` (arrival admitted by the router).
     /// Returns false if the pair is unknown or already at capacity.
+    /// Deliberately ignores health: a stale-view gateway *can* enqueue
+    /// onto a crashed node — the dispatch then fails and the resilience
+    /// policy takes over.
     pub fn acquire(&mut self, pair: &PairKey) -> bool {
         let cap = self.queue_capacity;
         if let Some(n) = self.nodes.iter_mut().find(|n| &n.pair == pair) {
-            if n.in_flight < cap {
+            if n.has_slot(cap) {
                 n.in_flight += 1;
                 return true;
             }
@@ -371,13 +431,43 @@ mod tests {
         assert!(!pool.acquire(&pair));
         pool.release(&pair);
         assert!(pool.is_available(&pair));
-        // unhealthy trumps free capacity
+        // unhealthy trumps free capacity for admits/is_available, but
+        // has_slot (the churn gateway's capacity half) still reports
+        // the free slot, and acquire still succeeds — stale-view
+        // gateways can enqueue onto a crashed node
         pool.set_health(&pair, false);
         assert!(!pool.is_available(&pair));
+        assert!(pool.has_slot(&pair));
+        assert!(pool.acquire(&pair));
+        pool.release(&pair);
         // unknown pairs are never available and release is a no-op
         let ghost = PairKey::new("ssd_v1", "pi3");
         assert!(!pool.is_available(&ghost));
+        assert!(!pool.has_slot(&ghost));
         pool.release(&ghost);
+    }
+
+    #[test]
+    fn down_node_returns_typed_node_down_error() {
+        let e = engine();
+        let fleet = devices::fleet();
+        let pair = PairKey::new("ssd_v1", "pi5");
+        let mut node = EdgeNode::new(
+            &e,
+            pair.clone(),
+            devices::find(&fleet, "pi5").unwrap(),
+            1,
+        )
+        .unwrap();
+        node.healthy = false;
+        let img = vec![0.5f32; 384 * 384];
+        let err = node.process(&e, &img).unwrap_err();
+        assert!(err.is::<NodeDown>(), "{err}");
+        assert!(err.to_string().contains("is down"));
+        // rejoin restores processing
+        node.healthy = true;
+        node.on_rejoin(1.0);
+        assert!(node.process(&e, &img).is_ok());
     }
 
     #[test]

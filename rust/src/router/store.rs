@@ -130,6 +130,23 @@ impl ProfileStore {
         }
     }
 
+    /// Scale one pair's cost columns in place (mAP untouched). The
+    /// lifecycle warm-up path ages a rejoining node's rows this way on
+    /// a per-request routing view: the node routes as if slower and
+    /// hungrier until its warm-up window closes. Group indexing is
+    /// unaffected (row identities do not change).
+    pub fn scale_pair(
+        &mut self,
+        pair: &PairKey,
+        latency_mult: f64,
+        energy_mult: f64,
+    ) {
+        for r in self.rows.iter_mut().filter(|r| &r.pair == pair) {
+            r.latency_s *= latency_mult;
+            r.energy_mwh *= energy_mult;
+        }
+    }
+
     /// Restrict the store to a subset of pairs (the deployed testbed).
     pub fn restrict(&self, pairs: &[PairKey]) -> ProfileStore {
         ProfileStore::new(
@@ -267,6 +284,25 @@ mod tests {
         assert_eq!(s.pairs(), vec![PairKey::new("ok", "d")]);
         // the group index never references a rejected row
         assert_eq!(s.group_rows(0).len(), 1);
+    }
+
+    #[test]
+    fn scale_pair_ages_costs_in_place() {
+        let mut s = test_store();
+        let k = PairKey::new("big", "dev_b");
+        s.scale_pair(&k, 1.5, 2.0);
+        for r in s.rows() {
+            if r.pair == k {
+                assert!((r.latency_s - 0.075).abs() < 1e-12);
+                assert!((r.energy_mwh - 8.0).abs() < 1e-12);
+                assert_eq!(r.map, if r.group == 1 { 58.0 } else { 51.0 });
+            } else {
+                // other pairs untouched
+                assert!(r.latency_s <= 0.1 && r.energy_mwh <= 9.0);
+            }
+        }
+        // group index still resolves the scaled rows
+        assert_eq!(s.lookup(&k, 0).unwrap().energy_mwh, 8.0);
     }
 
     #[test]

@@ -61,6 +61,7 @@ impl Args {
                 "no-cache",
                 "open-loop",
                 "fleet",
+                "churn",
             ],
         )
     }
@@ -186,6 +187,14 @@ mod tests {
         assert_eq!(a.positional, vec!["coco"]);
         assert_eq!(a.usize_list_or("fleet-sizes", &[]), vec![8, 16, 200]);
         assert_eq!(a.usize_list_or("missing", &[4]), vec![4]);
+    }
+
+    #[test]
+    fn churn_is_a_flag_with_value_options() {
+        let a = args(&["--churn", "--mtbf", "12", "--resilience", "hedge"]);
+        assert!(a.flag("churn"));
+        assert_eq!(a.f64_or("mtbf", 0.0), 12.0);
+        assert_eq!(a.str_or("resilience", ""), "hedge");
     }
 
     #[test]

@@ -27,8 +27,12 @@ use anyhow::Result;
 use crate::dataset::{Dataset, GtBox, Scene};
 use crate::devices;
 use crate::gateway::{Gateway, RoutedRequest};
+use crate::lifecycle::{
+    self, ChurnConfig, ChurnReport, ChurnState, LossOutcome,
+    ResiliencePolicy,
+};
 use crate::metrics::RunMetrics;
-use crate::nodes::NodeResponse;
+use crate::nodes::{NodeDown, NodeResponse};
 use crate::router::PairKey;
 use crate::util::rng::Rng;
 
@@ -87,6 +91,11 @@ pub struct OpenLoopConfig {
     pub queue_capacity: usize,
     /// Seed for the arrival process (independent of the gateway seed).
     pub seed: u64,
+    /// Node churn (DESIGN.md §9): ground-truth crash/rejoin events on
+    /// the shared heap, probe-driven membership at the gateway, and a
+    /// resilience policy for requests lost to crashes. `None` keeps the
+    /// pre-churn event stream bit for bit.
+    pub churn: Option<ChurnConfig>,
 }
 
 impl Default for OpenLoopConfig {
@@ -95,6 +104,7 @@ impl Default for OpenLoopConfig {
             arrivals: ArrivalProcess::Poisson { rate_rps: 8.0 },
             queue_capacity: 8,
             seed: 7,
+            churn: None,
         }
     }
 }
@@ -105,17 +115,22 @@ pub struct OpenLoopReport {
     /// Per-request accounting (energy, accuracy, queue delay, latency
     /// percentiles) over the *served* requests.
     pub metrics: RunMetrics,
-    /// Requests offered by the arrival process (served + dropped).
+    /// Requests offered by the arrival process
+    /// (served + dropped + lost).
     pub offered: usize,
     /// Requests shed because every feasible queue was full.
     pub dropped: usize,
     /// Virtual time at which the last response left the system (s).
     pub makespan_s: f64,
-    /// Peak number of requests simultaneously in the system.
+    /// Peak number of requests simultaneously in the system
+    /// (hedged duplicates count individually).
     pub peak_in_flight: usize,
     /// Fallback re-routes during this run (down or queue-full nodes),
     /// snapshotted from the gateway's cumulative counter.
     pub fallbacks: usize,
+    /// Churn accounting — present exactly when the run had a lifecycle
+    /// config. `served + dropped + lost == offered` always holds.
+    pub churn: Option<ChurnReport>,
 }
 
 impl OpenLoopReport {
@@ -128,20 +143,40 @@ impl OpenLoopReport {
         }
     }
 
+    /// Requests permanently lost to node crashes (0 without churn).
+    pub fn lost(&self) -> usize {
+        self.churn.as_ref().map(|c| c.lost).unwrap_or(0)
+    }
+
+    /// Mean dynamic energy per served request (mWh), the churn sweep's
+    /// headline efficiency column.
+    pub fn energy_per_request_mwh(&self) -> f64 {
+        if self.metrics.requests > 0 {
+            self.metrics.total_energy_mwh() / self.metrics.requests as f64
+        } else {
+            0.0
+        }
+    }
+
     /// Stable JSON report (field order fixed by the Json substrate's
     /// BTreeMap) — the golden-trace determinism tests compare this dump
     /// byte for byte across runs.
     pub fn to_json(&self) -> crate::util::json::Json {
         use crate::util::json::Json;
-        Json::obj(vec![
+        let mut fields = vec![
             ("offered", Json::num(self.offered as f64)),
             ("dropped", Json::num(self.dropped as f64)),
+            ("lost", Json::num(self.lost() as f64)),
             ("fallbacks", Json::num(self.fallbacks as f64)),
             ("makespan_s", Json::num(self.makespan_s)),
             ("peak_in_flight", Json::num(self.peak_in_flight as f64)),
             ("goodput_rps", Json::num(self.goodput_rps())),
             ("metrics", self.metrics.to_json()),
-        ])
+        ];
+        if let Some(c) = &self.churn {
+            fields.push(("churn", c.to_json()));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -161,8 +196,24 @@ struct Event {
 enum EventKind {
     /// Request `idx` arrives at the gateway.
     Arrival(usize),
-    /// The in-service request on this node's queue completes.
-    Completion(PairKey),
+    /// The in-service request on this node's queue completes. `token`
+    /// identifies the service instance: a completion whose token no
+    /// longer matches the queue's in-service slot belongs to a request
+    /// that was lost to a crash and is ignored.
+    Completion { pair: PairKey, token: u64 },
+    /// Ground-truth crash of pool node `node` (churn runs only): the
+    /// node rejects traffic and everything queued on it is lost.
+    Crash(usize),
+    /// Ground-truth rejoin of pool node `node` (reboots its drift
+    /// state). The gateway only learns of it through probes.
+    Rejoin(usize),
+    /// The gateway's periodic health probe fires: ground truth is
+    /// snapshotted now, results apply after the probe timeout.
+    Probe,
+    /// Probe responses (pool order) reach the membership view.
+    ProbeResult(Vec<bool>),
+    /// Re-dispatch of request `idx` lost to a crash (retry policy).
+    Retry(usize),
 }
 
 impl PartialEq for Event {
@@ -187,6 +238,8 @@ struct Pending {
     routed: RoutedRequest,
     idx: usize,
     arrival_s: f64,
+    /// This copy is a hedged duplicate (its completion may be waste).
+    hedge: bool,
 }
 
 /// The request a node is currently serving; the inference already ran
@@ -197,6 +250,10 @@ struct InService {
     arrival_s: f64,
     start_s: f64,
     resp: NodeResponse,
+    /// Matches the scheduled completion event; a crash that loses this
+    /// request leaves that event stale (token mismatch).
+    token: u64,
+    hedge: bool,
 }
 
 /// Per-node serving state: one in-service slot + FIFO backlog.
@@ -204,6 +261,49 @@ struct InService {
 struct NodeQueue {
     serving: Option<InService>,
     backlog: VecDeque<Pending>,
+}
+
+/// Mutable simulator state threaded through the event handlers.
+struct SimState {
+    queues: BTreeMap<PairKey, NodeQueue>,
+    heap: BinaryHeap<Reverse<Event>>,
+    seq: u64,
+    dropped: usize,
+    in_flight: usize,
+    peak_in_flight: usize,
+    makespan_s: f64,
+}
+
+impl SimState {
+    fn new() -> Self {
+        Self {
+            queues: BTreeMap::new(),
+            heap: BinaryHeap::new(),
+            seq: 0,
+            dropped: 0,
+            in_flight: 0,
+            peak_in_flight: 0,
+            makespan_s: 0.0,
+        }
+    }
+
+    fn push(&mut self, t: f64, kind: EventKind) {
+        self.heap.push(Reverse(Event {
+            t,
+            seq: self.seq,
+            kind,
+        }));
+        self.seq += 1;
+    }
+}
+
+/// Driver-side churn context: pool-ordered node identities (indexing
+/// the ground-truth failure timeline and probe snapshots) plus the
+/// shared request-copy accounting.
+struct ChurnDriver {
+    pairs: Vec<PairKey>,
+    probe_timeout_s: f64,
+    state: ChurnState,
 }
 
 /// Drive a gateway over pre-rendered frames under open-loop arrivals.
@@ -221,115 +321,309 @@ pub fn run_frames(
     let fallbacks_before = gw.fallbacks;
 
     let mut metrics = RunMetrics::new(gw.spec.name);
-    let mut heap: BinaryHeap<Reverse<Event>> = BinaryHeap::new();
-    let mut queues: BTreeMap<PairKey, NodeQueue> = BTreeMap::new();
-    let mut seq = 0u64;
-    for (idx, t) in cfg
-        .arrivals
-        .times(frames.len(), cfg.seed)
-        .into_iter()
-        .enumerate()
-    {
-        heap.push(Reverse(Event {
-            t,
-            seq,
-            kind: EventKind::Arrival(idx),
-        }));
-        seq += 1;
+    let mut sim = SimState::new();
+    let arrival_times = cfg.arrivals.times(frames.len(), cfg.seed);
+    let horizon_s = arrival_times.last().copied().unwrap_or(0.0)
+        + cfg.churn.as_ref().map(|c| c.horizon_slack_s).unwrap_or(0.0);
+    for (idx, t) in arrival_times.into_iter().enumerate() {
+        sim.push(t, EventKind::Arrival(idx));
     }
 
-    let mut dropped = 0usize;
-    let mut in_flight = 0usize;
-    let mut peak_in_flight = 0usize;
-    let mut makespan_s = 0.0f64;
+    // churn runs: ground-truth failure timeline + probe schedule are
+    // materialized up front (deterministic), the gateway switches to
+    // its probe-driven membership view, and per-request copy accounting
+    // starts. Without churn nothing below adds a single event.
+    let mut churn = match &cfg.churn {
+        Some(c) => {
+            gw.enable_churn(c);
+            let pairs: Vec<PairKey> = gw
+                .pool()
+                .nodes()
+                .iter()
+                .map(|n| n.pair.clone())
+                .collect();
+            for ev in
+                lifecycle::failure_schedule(pairs.len(), horizon_s, c)
+            {
+                let kind = if ev.up {
+                    EventKind::Rejoin(ev.node)
+                } else {
+                    EventKind::Crash(ev.node)
+                };
+                sim.push(ev.t, kind);
+            }
+            let gap = c.probe_interval_s.max(1e-6);
+            let mut t = gap;
+            while t < horizon_s {
+                sim.push(t, EventKind::Probe);
+                t += gap;
+            }
+            Some(ChurnDriver {
+                pairs,
+                probe_timeout_s: c.probe_timeout_s,
+                state: ChurnState::new(
+                    frames.len(),
+                    c.policy,
+                    c.retry_backoff_s,
+                ),
+            })
+        }
+        None => None,
+    };
 
-    while let Some(Reverse(ev)) = heap.pop() {
+    while let Some(Reverse(ev)) = sim.heap.pop() {
         match ev.kind {
             EventKind::Arrival(idx) => {
                 let scene = &frames[idx];
                 let true_count = pseudo_gt[idx].len();
-                // route() observes per-node occupancy: full or unhealthy
-                // nodes are skipped via the fallback path; if no feasible
-                // endpoint has a free slot, the request is shed. Any
-                // other routing error (estimator inference failure,
-                // misconfigured store) is real and aborts the run.
-                let routed = match gw.route(&scene.image, true_count) {
+                // route_at() observes per-node occupancy (and, under
+                // churn, believed health): full or down nodes are
+                // skipped via the fallback path; if no feasible
+                // endpoint has a free slot, the request is shed — or,
+                // under the retry policy, backed off like a retrying
+                // client. Any other routing error (estimator inference
+                // failure, misconfigured store) aborts the run.
+                let routed =
+                    match gw.route_at(&scene.image, true_count, ev.t) {
+                        Ok(r) => r,
+                        Err(e)
+                            if e.is::<crate::gateway::NoEndpoint>() =>
+                        {
+                            match churn.as_mut() {
+                                Some(ch)
+                                    if matches!(
+                                        ch.state.policy(),
+                                        ResiliencePolicy::Retry { .. }
+                                    ) =>
+                                {
+                                    if let LossOutcome::RetryAt(t) = ch
+                                        .state
+                                        .placement_failed(idx, ev.t)
+                                    {
+                                        sim.push(
+                                            t,
+                                            EventKind::Retry(idx),
+                                        );
+                                    }
+                                }
+                                _ => sim.dropped += 1,
+                            }
+                            continue;
+                        }
+                        Err(e) => return Err(e),
+                    };
+                // proactive hedging: duplicate onto the second-best
+                // admissible pair, reusing the primary's estimate
+                let dup = match churn.as_ref() {
+                    Some(ch)
+                        if ch.state.policy()
+                            == ResiliencePolicy::Hedge =>
+                    {
+                        gw.route_secondary(&routed, ev.t).map(|p| {
+                            RoutedRequest {
+                                pair: p,
+                                ..routed.clone()
+                            }
+                        })
+                    }
+                    _ => None,
+                };
+                // register BOTH copies before admitting either: the
+                // primary can die synchronously at dispatch (stale
+                // view), and its loss must see the hedge as a live
+                // sibling, not declare the request lost.
+                if let Some(ch) = churn.as_mut() {
+                    ch.state.dispatched(idx);
+                    if dup.is_some() {
+                        ch.state.hedge_dispatched(idx);
+                    }
+                }
+                admit_copy(
+                    gw, frames, &mut sim, &mut churn, routed, idx, ev.t,
+                    false,
+                )?;
+                if let Some(d) = dup {
+                    admit_copy(
+                        gw, frames, &mut sim, &mut churn, d, idx, ev.t,
+                        true,
+                    )?;
+                }
+            }
+            EventKind::Retry(idx) => {
+                let routed = match gw.route_at(
+                    &frames[idx].image,
+                    pseudo_gt[idx].len(),
+                    ev.t,
+                ) {
                     Ok(r) => r,
                     Err(e) if e.is::<crate::gateway::NoEndpoint>() => {
-                        dropped += 1;
+                        let ch =
+                            churn.as_mut().expect("retry without churn");
+                        if let LossOutcome::RetryAt(t) =
+                            ch.state.placement_failed(idx, ev.t)
+                        {
+                            sim.push(t, EventKind::Retry(idx));
+                        }
                         continue;
                     }
                     Err(e) => return Err(e),
                 };
-                let admitted = gw.pool_mut().acquire(&routed.pair);
-                debug_assert!(
-                    admitted,
-                    "route() returned a pair without a free slot"
-                );
-                in_flight += 1;
-                peak_in_flight = peak_in_flight.max(in_flight);
-                let pair = routed.pair.clone();
-                queues.entry(pair.clone()).or_default().backlog.push_back(
-                    Pending {
-                        routed,
-                        idx,
-                        arrival_s: ev.t,
-                    },
-                );
-                start_next(gw, frames, &mut queues, &mut heap, &mut seq, &pair, ev.t)?;
+                churn
+                    .as_mut()
+                    .expect("retry without churn")
+                    .state
+                    .retry_dispatched(idx);
+                admit_copy(
+                    gw, frames, &mut sim, &mut churn, routed, idx, ev.t,
+                    false,
+                )?;
             }
-            EventKind::Completion(pair) => {
-                let q = queues
+            EventKind::Completion { pair, token } => {
+                let q = sim
+                    .queues
                     .get_mut(&pair)
                     .expect("completion for unknown queue");
-                let done = q
-                    .serving
-                    .take()
-                    .expect("completion with no in-service request");
+                if q.serving.as_ref().map(|s| s.token) != Some(token) {
+                    // the in-service request was lost to a crash after
+                    // this completion was scheduled — stale event
+                    debug_assert!(
+                        churn.is_some(),
+                        "stale completion without churn"
+                    );
+                    continue;
+                }
+                let done = q.serving.take().expect("token just matched");
                 gw.pool_mut().release(&pair);
-                in_flight -= 1;
-                makespan_s = makespan_s.max(ev.t);
-                // FIFO wait: service start minus the moment the request
-                // cleared gateway-side estimation.
-                let queue_delay_s = (done.start_s
-                    - (done.arrival_s + done.routed.cost.latency_s))
-                    .max(0.0);
-                gw.finish(
-                    &done.routed,
-                    done.resp,
-                    &pseudo_gt[done.idx],
-                    queue_delay_s,
-                    &mut metrics,
-                );
-                start_next(gw, frames, &mut queues, &mut heap, &mut seq, &pair, ev.t)?;
+                sim.in_flight -= 1;
+                sim.makespan_s = sim.makespan_s.max(ev.t);
+                let winner = match churn.as_mut() {
+                    Some(ch) => ch.state.copy_completed(
+                        done.idx,
+                        done.resp.energy_mwh,
+                        done.hedge,
+                    ),
+                    None => true,
+                };
+                if winner {
+                    // FIFO wait: service start minus the moment the
+                    // request cleared gateway-side estimation.
+                    let queue_delay_s = (done.start_s
+                        - (done.arrival_s + done.routed.cost.latency_s))
+                        .max(0.0);
+                    gw.finish(
+                        &done.routed,
+                        done.resp,
+                        &pseudo_gt[done.idx],
+                        queue_delay_s,
+                        &mut metrics,
+                    );
+                }
+                start_next(gw, frames, &mut sim, &mut churn, &pair, ev.t)?;
+            }
+            EventKind::Crash(node) => {
+                let ch = churn.as_mut().expect("crash without churn");
+                let pair = ch.pairs[node].clone();
+                ch.state.crashes += 1;
+                gw.pool_mut().set_health(&pair, false);
+                if let Some(m) = gw.membership_mut() {
+                    m.ground_truth_changed(&pair, false, ev.t);
+                }
+                lose_queued(gw, &mut sim, &mut ch.state, &pair, None, ev.t);
+            }
+            EventKind::Rejoin(node) => {
+                let ch = churn.as_ref().expect("rejoin without churn");
+                let pair = ch.pairs[node].clone();
+                gw.pool_mut().set_health(&pair, true);
+                if let Some(n) = gw.pool_mut().get(&pair) {
+                    n.on_rejoin(ev.t);
+                }
+                if let Some(m) = gw.membership_mut() {
+                    m.ground_truth_changed(&pair, true, ev.t);
+                }
+            }
+            EventKind::Probe => {
+                let ch = churn.as_ref().expect("probe without churn");
+                let responses: Vec<bool> = ch
+                    .pairs
+                    .iter()
+                    .map(|p| gw.pool().is_healthy(p))
+                    .collect();
+                let timeout = ch.probe_timeout_s;
+                sim.push(ev.t + timeout, EventKind::ProbeResult(responses));
+            }
+            EventKind::ProbeResult(responses) => {
+                let ch = churn.as_ref().expect("probe without churn");
+                let m = gw
+                    .membership_mut()
+                    .expect("churn gateway lost its membership");
+                for (p, up) in ch.pairs.iter().zip(&responses) {
+                    m.observe_probe(p, *up, ev.t);
+                }
             }
         }
     }
 
+    let churn_report = churn.map(|c| {
+        let m = gw
+            .membership()
+            .expect("churn gateway lost its membership");
+        ChurnReport::collect(&c.state, [m])
+    });
     Ok(OpenLoopReport {
         metrics,
         offered: frames.len(),
-        dropped,
-        makespan_s,
-        peak_in_flight,
+        dropped: sim.dropped,
+        makespan_s: sim.makespan_s,
+        peak_in_flight: sim.peak_in_flight,
         fallbacks: gw.fallbacks - fallbacks_before,
+        churn: churn_report,
     })
+}
+
+/// Admit one routed copy of request `idx` into its pair's FIFO at time
+/// `t` and try to start service.
+#[allow(clippy::too_many_arguments)]
+fn admit_copy(
+    gw: &mut Gateway<'_>,
+    frames: &[Scene],
+    sim: &mut SimState,
+    churn: &mut Option<ChurnDriver>,
+    routed: RoutedRequest,
+    idx: usize,
+    t: f64,
+    hedge: bool,
+) -> Result<()> {
+    let admitted = gw.pool_mut().acquire(&routed.pair);
+    debug_assert!(admitted, "route() returned a pair without a free slot");
+    sim.in_flight += 1;
+    sim.peak_in_flight = sim.peak_in_flight.max(sim.in_flight);
+    let pair = routed.pair.clone();
+    sim.queues.entry(pair.clone()).or_default().backlog.push_back(
+        Pending {
+            routed,
+            idx,
+            arrival_s: t,
+            hedge,
+        },
+    );
+    start_next(gw, frames, sim, churn, &pair, t)
 }
 
 /// If `pair` is idle and has backlog, begin serving the head request at
 /// `now_s` and schedule its completion. Service cannot begin before the
-/// request's gateway-side estimation has finished.
-#[allow(clippy::too_many_arguments)]
+/// request's gateway-side estimation has finished. Under churn, a
+/// dispatch that discovers a dead node (the membership view is stale)
+/// loses everything queued there through the resilience policy and
+/// feeds the failure back to the membership as passive health evidence.
 fn start_next(
     gw: &mut Gateway<'_>,
     frames: &[Scene],
-    queues: &mut BTreeMap<PairKey, NodeQueue>,
-    heap: &mut BinaryHeap<Reverse<Event>>,
-    seq: &mut u64,
+    sim: &mut SimState,
+    churn: &mut Option<ChurnDriver>,
     pair: &PairKey,
     now_s: f64,
 ) -> Result<()> {
-    let q = queues.get_mut(pair).expect("start_next on unknown queue");
+    let q = sim.queues.get_mut(pair).expect("start_next on unknown queue");
     if q.serving.is_some() {
         return Ok(());
     }
@@ -337,24 +631,74 @@ fn start_next(
         return Ok(());
     };
     let start_s = now_s.max(p.arrival_s + p.routed.cost.latency_s);
-    let resp = gw.serve(pair, &frames[p.idx].image, start_s)?;
-    let done_s = start_s + resp.latency_s + devices::NETWORK_S;
-    heap.push(Reverse(Event {
-        t: done_s,
-        seq: *seq,
-        kind: EventKind::Completion(pair.clone()),
-    }));
-    *seq += 1;
+    let resp = match gw.serve(pair, &frames[p.idx].image, start_s) {
+        Ok(r) => r,
+        Err(e) if churn.is_some() && e.is::<NodeDown>() => {
+            if let Some(m) = gw.membership_mut() {
+                m.observe_dispatch_failure(pair, now_s);
+            }
+            let ch = churn.as_mut().expect("checked above");
+            lose_queued(gw, sim, &mut ch.state, pair, Some(p), now_s);
+            return Ok(());
+        }
+        Err(e) => return Err(e),
+    };
+    let token = sim.seq;
+    sim.push(
+        start_s + resp.latency_s + devices::NETWORK_S,
+        EventKind::Completion {
+            pair: pair.clone(),
+            token,
+        },
+    );
     // re-borrow: gw.serve() above needed &mut Gateway exclusively
-    queues.get_mut(pair).expect("queue vanished").serving =
+    sim.queues.get_mut(pair).expect("queue vanished").serving =
         Some(InService {
             routed: p.routed,
             idx: p.idx,
             arrival_s: p.arrival_s,
             start_s,
             resp,
+            token,
+            hedge: p.hedge,
         });
     Ok(())
+}
+
+/// Drain every copy on `pair`'s queue — the in-service request (crash
+/// case), an optional already-popped head (failed-dispatch case), and
+/// the backlog — releasing their slots and feeding each loss through
+/// the resilience policy.
+fn lose_queued(
+    gw: &mut Gateway<'_>,
+    sim: &mut SimState,
+    state: &mut ChurnState,
+    pair: &PairKey,
+    head: Option<Pending>,
+    now_s: f64,
+) {
+    let mut idxs: Vec<usize> = Vec::new();
+    if let Some(q) = sim.queues.get_mut(pair) {
+        if let Some(s) = q.serving.take() {
+            idxs.push(s.idx);
+        }
+        if let Some(p) = &head {
+            idxs.push(p.idx);
+        }
+        while let Some(p) = q.backlog.pop_front() {
+            idxs.push(p.idx);
+        }
+    } else if let Some(p) = &head {
+        idxs.push(p.idx);
+    }
+    for idx in idxs {
+        gw.pool_mut().release(pair);
+        sim.in_flight -= 1;
+        match state.copy_lost(idx, now_s) {
+            LossOutcome::RetryAt(t) => sim.push(t, EventKind::Retry(idx)),
+            LossOutcome::Absorbed | LossOutcome::Lost => {}
+        }
+    }
 }
 
 /// Render a dataset up front and drive it open loop (the per-scene
@@ -455,6 +799,7 @@ mod tests {
                     arrivals: ArrivalProcess::Uniform { gap_s: 5.0 },
                     queue_capacity: 8,
                     seed: 5,
+                    churn: None,
                 },
             )
             .unwrap();
@@ -498,6 +843,7 @@ mod tests {
                     arrivals: ArrivalProcess::Poisson { rate_rps: rate },
                     queue_capacity: 64,
                     seed: 11,
+                    churn: None,
                 },
             )
             .unwrap();
@@ -528,6 +874,7 @@ mod tests {
                 arrivals: ArrivalProcess::Uniform { gap_s: 1e-6 },
                 queue_capacity: 1,
                 seed: 2,
+                churn: None,
             },
         )
         .unwrap();
@@ -539,6 +886,229 @@ mod tests {
         );
         // both pairs ended up serving traffic
         assert_eq!(report.metrics.per_pair.len(), 2);
+    }
+
+    #[test]
+    fn churn_crash_loses_requests_under_drop_policy() {
+        // mtbf far below the run length and mttr far above it: both
+        // nodes die almost immediately and stay dead, so in-flight and
+        // later-arriving requests are lost (drop policy) or shed once
+        // the membership view catches up. Every request is accounted
+        // exactly once.
+        let e = engine();
+        let ds = coco::build(40, 21);
+        let mut gw = gateway(&e, "LE", 3);
+        let report = run_dataset(
+            &mut gw,
+            &ds,
+            &OpenLoopConfig {
+                arrivals: ArrivalProcess::Poisson { rate_rps: 400.0 },
+                queue_capacity: 8,
+                seed: 9,
+                churn: Some(ChurnConfig {
+                    mtbf_s: 0.02,
+                    mttr_s: 100.0,
+                    probe_interval_s: 0.1,
+                    probe_timeout_s: 0.05,
+                    suspect_after: 1,
+                    policy: ResiliencePolicy::Drop,
+                    horizon_slack_s: 1.0,
+                    ..Default::default()
+                }),
+            },
+        )
+        .unwrap();
+        let churn = report.churn.as_ref().expect("churn report");
+        assert!(churn.crashes > 0, "no crashes fired");
+        assert!(churn.lost > 0, "drop policy must lose in-flight work");
+        assert_eq!(churn.retried, 0);
+        assert_eq!(churn.hedged, 0);
+        assert_eq!(
+            report.metrics.requests + report.dropped + churn.lost,
+            report.offered,
+            "every request must be served, shed, or lost"
+        );
+        // all slots were released despite the crashes
+        assert_eq!(gw.pool().total_in_flight(), 0);
+    }
+
+    #[test]
+    fn retry_recovers_goodput_under_churn() {
+        // acceptance shape: 20% steady-state unavailability
+        // (mtbf/mttr = 3.2/0.8), greedy router, retry policy — goodput
+        // must stay within 90% of the no-churn run. Rate is far below
+        // capacity so recovery is limited only by detection + backoff.
+        let e = engine();
+        let ds = coco::build(80, 31);
+        let open_cfg = |churn| OpenLoopConfig {
+            arrivals: ArrivalProcess::Uniform { gap_s: 0.125 },
+            queue_capacity: 8,
+            seed: 13,
+            churn,
+        };
+        let mut base_gw = gateway(&e, "Orc", 3);
+        let base = run_dataset(&mut base_gw, &ds, &open_cfg(None)).unwrap();
+
+        let mut gw = gateway(&e, "Orc", 3);
+        let report = run_dataset(
+            &mut gw,
+            &ds,
+            &open_cfg(Some(ChurnConfig {
+                mtbf_s: 3.2,
+                mttr_s: 0.8,
+                probe_interval_s: 0.1,
+                probe_timeout_s: 0.05,
+                suspect_after: 1,
+                warmup_s: 0.3,
+                warmup_penalty: 0.5,
+                policy: ResiliencePolicy::Retry { budget: 8 },
+                retry_backoff_s: 0.2,
+                horizon_slack_s: 5.0,
+                seed: 11,
+            })),
+        )
+        .unwrap();
+        let churn = report.churn.as_ref().expect("churn report");
+        assert!(churn.crashes > 0, "churn never fired");
+        assert_eq!(
+            report.metrics.requests + report.dropped + churn.lost,
+            report.offered
+        );
+        assert!(
+            report.goodput_rps() >= 0.9 * base.goodput_rps(),
+            "retry recovered only {:.2} of {:.2} req/s (lost {}, dropped {}, retried {})",
+            report.goodput_rps(),
+            base.goodput_rps(),
+            churn.lost,
+            report.dropped,
+            churn.retried
+        );
+        // recovery latency is observable once a node came back
+        assert!(churn.mean_time_to_recover_s >= 0.0);
+        assert_eq!(gw.pool().total_in_flight(), 0);
+    }
+
+    #[test]
+    fn hedge_duplicates_requests_and_accounts_waste() {
+        // no crashes (infinite mtbf): hedging still duplicates every
+        // request onto the second-best pair, so the losing copy's
+        // service shows up as wasted energy, never as a served request.
+        let e = engine();
+        let ds = coco::build(20, 17);
+        let mut gw = gateway(&e, "LE", 3);
+        let report = run_dataset(
+            &mut gw,
+            &ds,
+            &OpenLoopConfig {
+                arrivals: ArrivalProcess::Poisson { rate_rps: 20.0 },
+                queue_capacity: 8,
+                seed: 7,
+                churn: Some(ChurnConfig {
+                    mtbf_s: f64::INFINITY,
+                    policy: ResiliencePolicy::Hedge,
+                    horizon_slack_s: 1.0,
+                    ..Default::default()
+                }),
+            },
+        )
+        .unwrap();
+        let churn = report.churn.as_ref().expect("churn report");
+        assert_eq!(
+            churn.hedged, report.offered,
+            "with both pairs free every request should hedge"
+        );
+        assert!(churn.hedge_wins <= churn.hedged);
+        assert!(report.peak_in_flight >= 2, "copies must overlap");
+        assert!(
+            churn.wasted_energy_mwh > 0.0,
+            "losing copies must be accounted as waste"
+        );
+        assert_eq!(churn.crashes, 0);
+        assert_eq!(churn.lost, 0);
+        // each request served exactly once despite two copies
+        assert_eq!(report.metrics.requests, report.offered);
+        assert_eq!(gw.pool().total_in_flight(), 0);
+    }
+
+    #[test]
+    fn hedge_under_crashes_accounts_each_request_once() {
+        // regression: a primary lost synchronously at dispatch (stale
+        // membership view) must see its hedge as a live sibling —
+        // both copies register before either is admitted — not declare
+        // the request lost while the duplicate goes on to serve it.
+        let e = engine();
+        let ds = coco::build(32, 63);
+        let mut gw = gateway(&e, "LE", 3);
+        let report = run_dataset(
+            &mut gw,
+            &ds,
+            &OpenLoopConfig {
+                arrivals: ArrivalProcess::Poisson { rate_rps: 200.0 },
+                queue_capacity: 4,
+                seed: 3,
+                churn: Some(ChurnConfig {
+                    mtbf_s: 0.1,
+                    mttr_s: 0.15,
+                    probe_interval_s: 0.04,
+                    probe_timeout_s: 0.02,
+                    suspect_after: 1,
+                    policy: ResiliencePolicy::Hedge,
+                    horizon_slack_s: 1.0,
+                    ..Default::default()
+                }),
+            },
+        )
+        .unwrap();
+        let churn = report.churn.as_ref().expect("churn report");
+        assert!(churn.crashes > 0, "churn never fired");
+        assert!(churn.hedged > 0, "no hedges dispatched");
+        assert_eq!(
+            report.metrics.requests + report.dropped + churn.lost,
+            report.offered,
+            "hedged requests must be counted exactly once \
+             (served {} dropped {} lost {})",
+            report.metrics.requests,
+            report.dropped,
+            churn.lost
+        );
+        assert_eq!(gw.pool().total_in_flight(), 0);
+    }
+
+    #[test]
+    fn churn_runs_replay_bit_identically() {
+        // seed sensitivity of the failure timeline itself is pinned in
+        // lifecycle::tests; here the whole serialized run must replay
+        // byte for byte (heap order, losses, retries, probe effects).
+        let e = engine();
+        let ds = coco::build(24, 51);
+        let run = |churn_seed: u64| {
+            let mut gw = gateway(&e, "ED", 3);
+            run_dataset(
+                &mut gw,
+                &ds,
+                &OpenLoopConfig {
+                    arrivals: ArrivalProcess::Poisson { rate_rps: 120.0 },
+                    queue_capacity: 4,
+                    seed: 19,
+                    churn: Some(ChurnConfig {
+                        mtbf_s: 0.2,
+                        mttr_s: 0.3,
+                        probe_interval_s: 0.05,
+                        probe_timeout_s: 0.02,
+                        suspect_after: 1,
+                        policy: ResiliencePolicy::Retry { budget: 3 },
+                        retry_backoff_s: 0.05,
+                        horizon_slack_s: 2.0,
+                        seed: churn_seed,
+                        ..Default::default()
+                    }),
+                },
+            )
+            .unwrap()
+            .to_json()
+            .dump()
+        };
+        assert_eq!(run(5), run(5));
     }
 
     #[test]
@@ -554,6 +1124,7 @@ mod tests {
                     arrivals: ArrivalProcess::Poisson { rate_rps: 40.0 },
                     queue_capacity: 4,
                     seed: 17,
+                    churn: None,
                 },
             )
             .unwrap()

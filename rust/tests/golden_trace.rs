@@ -14,6 +14,7 @@ use std::path::PathBuf;
 
 use ecore::fleet::{self, DispatchPolicy, FleetBuilder, FleetConfig};
 use ecore::gateway::{router_by_name, Gateway};
+use ecore::lifecycle::{ChurnConfig, ResiliencePolicy};
 use ecore::nodes::NodePool;
 use ecore::router::{PairKey, PairProfile, ProfileStore};
 use ecore::runtime::Engine;
@@ -61,7 +62,88 @@ fn openloop_dump(e: &Engine) -> String {
             arrivals: ArrivalProcess::Poisson { rate_rps: 60.0 },
             queue_capacity: 4,
             seed: 17,
+            churn: None,
         },
+    )
+    .unwrap();
+    report.to_json().pretty()
+}
+
+/// One fixed-seed churn run (aggressive MTBF/MTTR so crashes, probe
+/// detections, dispatch failures, retries, and warm-ups all fire within
+/// the window), serialized with its churn block.
+fn churn_dump(e: &Engine) -> String {
+    let ds = ecore::dataset::coco::build(16, 43);
+    let store = base_store();
+    let pool =
+        NodePool::deploy(e, &store.pairs(), &ecore::devices::fleet(), 5)
+            .unwrap();
+    let mut gw =
+        Gateway::new(e, router_by_name("ED").unwrap(), store, pool, 5.0, 5);
+    let report = openloop::run_dataset(
+        &mut gw,
+        &ds,
+        &OpenLoopConfig {
+            arrivals: ArrivalProcess::Poisson { rate_rps: 120.0 },
+            queue_capacity: 3,
+            seed: 23,
+            churn: Some(ChurnConfig {
+                mtbf_s: 0.15,
+                mttr_s: 0.2,
+                probe_interval_s: 0.05,
+                probe_timeout_s: 0.02,
+                suspect_after: 1,
+                warmup_s: 0.1,
+                warmup_penalty: 0.5,
+                policy: ResiliencePolicy::Retry { budget: 3 },
+                retry_backoff_s: 0.04,
+                horizon_slack_s: 1.5,
+                seed: 29,
+            }),
+        },
+    )
+    .unwrap();
+    report.to_json().pretty()
+}
+
+/// One fixed-seed fleet churn run (2 shards, per-shard membership),
+/// serialized with its churn block.
+fn fleet_churn_dump(e: &Engine) -> String {
+    let ds = ecore::dataset::coco::build(16, 77);
+    let mut fl = FleetBuilder::new(e, base_store())
+        .build(
+            router_by_name("LE").unwrap(),
+            5.0,
+            &FleetConfig {
+                n_nodes: 6,
+                n_shards: 2,
+                perturb: 0.1,
+                queue_capacity: 2,
+                dispatch: DispatchPolicy::LeastLoaded,
+                n_sources: 4,
+                seed: 31,
+                drift: None,
+                churn: Some(ChurnConfig {
+                    mtbf_s: 0.1,
+                    mttr_s: 0.15,
+                    probe_interval_s: 0.04,
+                    probe_timeout_s: 0.02,
+                    suspect_after: 1,
+                    warmup_s: 0.1,
+                    warmup_penalty: 0.5,
+                    policy: ResiliencePolicy::Hedge,
+                    retry_backoff_s: 0.04,
+                    horizon_slack_s: 1.0,
+                    seed: 37,
+                }),
+            },
+        )
+        .unwrap();
+    let report = fleet::run_dataset(
+        &mut fl,
+        &ds,
+        &ArrivalProcess::Poisson { rate_rps: 200.0 },
+        31,
     )
     .unwrap();
     report.to_json().pretty()
@@ -84,6 +166,7 @@ fn fleet_dump(e: &Engine) -> String {
                 n_sources: 4,
                 seed: 9,
                 drift: None,
+                churn: None,
             },
         )
         .unwrap();
@@ -107,6 +190,24 @@ fn open_loop_report_serializes_bit_identically_across_runs() {
 fn fleet_report_serializes_bit_identically_across_runs() {
     let e = engine();
     assert_eq!(fleet_dump(&e), fleet_dump(&e));
+}
+
+#[test]
+fn churn_report_serializes_bit_identically_across_runs() {
+    let e = engine();
+    let a = churn_dump(&e);
+    assert_eq!(a, churn_dump(&e));
+    // the block only serializes when churn ran
+    assert!(a.contains("\"churn\""));
+    assert!(a.contains("\"crashes\""));
+}
+
+#[test]
+fn fleet_churn_report_serializes_bit_identically_across_runs() {
+    let e = engine();
+    let a = fleet_churn_dump(&e);
+    assert_eq!(a, fleet_churn_dump(&e));
+    assert!(a.contains("\"churn\""));
 }
 
 fn check_golden(name: &str, dump: &str) {
@@ -140,4 +241,16 @@ fn golden_openloop_trace_is_pinned() {
 fn golden_fleet_trace_is_pinned() {
     let e = engine();
     check_golden("fleet_trace", &fleet_dump(&e));
+}
+
+#[test]
+fn golden_churn_trace_is_pinned() {
+    let e = engine();
+    check_golden("churn_trace", &churn_dump(&e));
+}
+
+#[test]
+fn golden_fleet_churn_trace_is_pinned() {
+    let e = engine();
+    check_golden("fleet_churn_trace", &fleet_churn_dump(&e));
 }

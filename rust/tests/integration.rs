@@ -275,6 +275,7 @@ fn gateway_cost_is_accounted_exactly_once_per_request() {
                 arrivals: ArrivalProcess::Uniform { gap_s: 2.0 },
                 queue_capacity: 8,
                 seed: 4,
+                churn: None,
             },
         )
         .unwrap();
