@@ -6,6 +6,8 @@
 //! churn machinery (failure timeline, probe events, copy accounting);
 //! the policy rows show what retrying and hedging cost on top.
 
+use std::time::Instant;
+
 use ecore::config::ExperimentConfig;
 use ecore::dataset::{coco, GtBox, Scene};
 use ecore::experiments::serve::deployed_store;
@@ -19,8 +21,9 @@ use ecore::workload::openloop::{
 };
 
 fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
     let cfg = ExperimentConfig {
-        profile_per_group: 12,
+        profile_per_group: if quick { 6 } else { 12 },
         ..Default::default()
     };
     let h = Harness::new(cfg).unwrap();
@@ -31,6 +34,7 @@ fn main() {
         frames.iter().map(|s| s.gt.clone()).collect();
 
     let mut b = Bench::new("churn");
+    let mut extras_owned: Vec<(String, f64)> = Vec::new();
     for (name, churn) in [
         ("no_churn", None),
         (
@@ -61,7 +65,7 @@ fn main() {
             }),
         ),
     ] {
-        b.run(name, || {
+        let run_once = || {
             let pool = NodePool::deploy(
                 &h.engine,
                 &deployed.pairs(),
@@ -77,7 +81,7 @@ fn main() {
                 5.0,
                 1,
             );
-            let report = run_frames(
+            run_frames(
                 &mut gw,
                 &frames,
                 &gts,
@@ -88,9 +92,34 @@ fn main() {
                     churn: churn.clone(),
                 },
             )
-            .unwrap();
+            .unwrap()
+        };
+        // warm-up + event census (deterministic per config/seed)
+        let t0 = Instant::now();
+        let report = run_once();
+        let cold_wall = t0.elapsed().as_secs_f64();
+        let events = report.offered + report.metrics.requests;
+        println!(
+            "{:<16} {:>10.0} events/sec cold ({} events)",
+            name,
+            events as f64 / cold_wall.max(1e-9),
+            events
+        );
+        b.run(name, || {
+            let report = run_once();
             black_box(report.metrics.requests + report.lost())
         });
+        // headline events/sec from the MEASURED MEDIAN run time (the
+        // cold run above is warm-up, not the tracked number)
+        let runs_per_sec = b
+            .results()
+            .last()
+            .expect("case just measured")
+            .throughput_per_sec();
+        extras_owned.push((
+            format!("events_per_sec_{name}"),
+            events as f64 * runs_per_sec,
+        ));
     }
 
     let (secs, count) = h.engine.exec_stats();
@@ -98,5 +127,5 @@ fn main() {
         "engine totals: {count} inferences, {:.1} ms mean",
         1000.0 * secs / count.max(1) as f64
     );
-    b.finish();
+    b.finish_json(&extras_owned);
 }

@@ -17,8 +17,11 @@ use ecore::util::bench::{black_box, Bench};
 use ecore::workload::openloop::ArrivalProcess;
 
 fn main() {
+    // CI perf-smoke runs with `--quick`: smaller profiling set and
+    // fewer fleet shapes, same JSON trajectory format.
+    let quick = std::env::args().any(|a| a == "--quick");
     let cfg = ExperimentConfig {
-        profile_per_group: 12,
+        profile_per_group: if quick { 6 } else { 12 },
         ..Default::default()
     };
     let h = Harness::new(cfg).unwrap();
@@ -28,13 +31,18 @@ fn main() {
     let gts: Vec<Vec<GtBox>> =
         frames.iter().map(|s| s.gt.clone()).collect();
 
-    let mut b = Bench::new("fleet");
-    for (nodes, shards, dispatch) in [
+    let full_shapes = [
         (24, 2, DispatchPolicy::LeastLoaded),
         (96, 8, DispatchPolicy::LeastLoaded),
         (96, 8, DispatchPolicy::Hash),
         (200, 8, DispatchPolicy::LeastLoaded),
-    ] {
+    ];
+    let shapes: &[(usize, usize, DispatchPolicy)] =
+        if quick { &full_shapes[..2] } else { &full_shapes };
+
+    let mut b = Bench::new("fleet");
+    let mut events_per_sec: Vec<(String, f64)> = Vec::new();
+    for &(nodes, shards, dispatch) in shapes {
         let name = format!("n{nodes}_k{shards}_{}", dispatch.label());
         let run_once = || {
             let mut fl = FleetBuilder::new(&h.engine, deployed.clone())
@@ -63,22 +71,35 @@ fn main() {
             )
             .unwrap()
         };
-        // headline number: simulator events processed per wall second
-        // (one arrival per offered request + one completion per served)
+        // warm-up + event census (deterministic per config/seed), for
+        // the events/sec headline and the printed breakdown
         let t0 = Instant::now();
         let report = run_once();
-        let wall = t0.elapsed().as_secs_f64();
+        let cold_wall = t0.elapsed().as_secs_f64();
         let events = report.offered + report.requests();
         println!(
-            "{:<24} {:>10.0} events/sec  ({} events: {} served, {} dropped, xshard {})",
+            "{:<24} {:>10.0} events/sec cold  ({} events: {} served, {} dropped, xshard {})",
             name,
-            events as f64 / wall.max(1e-9),
+            events as f64 / cold_wall.max(1e-9),
             events,
             report.requests(),
             report.dropped,
             report.cross_shard_fallbacks
         );
         b.run(&name, || black_box(run_once().requests()));
+        // headline: simulator events per wall second (one arrival per
+        // offered request + one completion per served), derived from
+        // the MEASURED MEDIAN run time — not the cold first run — so
+        // the tracked trajectory is not biased by build/warm-up cost
+        let runs_per_sec = b
+            .results()
+            .last()
+            .expect("case just measured")
+            .throughput_per_sec();
+        events_per_sec.push((
+            format!("events_per_sec_{name}"),
+            events as f64 * runs_per_sec,
+        ));
     }
 
     let (secs, count) = h.engine.exec_stats();
@@ -86,5 +107,5 @@ fn main() {
         "engine totals: {count} inferences, {:.1} ms mean",
         1000.0 * secs / count.max(1) as f64
     );
-    b.finish();
+    b.finish_json(&events_per_sec);
 }

@@ -4,7 +4,7 @@
 
 use ecore::router::{
     GreedyRouter, GroupRules, PairKey, PairProfile, Policy, PolicyKind,
-    ProfileStore,
+    ProfileStore, RoutingView,
 };
 use ecore::util::bench::{black_box, Bench};
 use ecore::util::rng::Rng;
@@ -29,13 +29,21 @@ fn synthetic_store(pairs: usize, groups: usize) -> ProfileStore {
 fn main() {
     let mut b = Bench::new("routing");
 
-    // Algorithm 1 at deployed-pool scale (the production case)
+    // Algorithm 1 at deployed-pool scale (the production case).
+    // The `route` wrapper still clones the winning PairKey; the
+    // `_view` rows below are the gateway's actual zero-allocation
+    // hot path (borrowed view, copyable PairId out).
     let store = synthetic_store(7, 5);
     let greedy = GreedyRouter::new(5.0);
     let mut g = 0usize;
     b.run("greedy_pool7", || {
         g = (g + 1) % 5;
         black_box(greedy.route(&store, g))
+    });
+    let view = RoutingView::new(&store);
+    b.run("greedy_pool7_view", || {
+        g = (g + 1) % 5;
+        black_box(greedy.route_view(&view, g))
     });
 
     // Algorithm 1 over the full 64-pair grid
@@ -44,8 +52,13 @@ fn main() {
         g = (g + 1) % 5;
         black_box(greedy.route(&store64, g))
     });
+    let view64 = RoutingView::new(&store64);
+    b.run("greedy_grid64_view", || {
+        g = (g + 1) % 5;
+        black_box(greedy.route_view(&view64, g))
+    });
 
-    // every baseline policy at pool scale
+    // every baseline policy at pool scale, on the hot (view) path
     for kind in [
         PolicyKind::RoundRobin,
         PolicyKind::Random,
@@ -58,7 +71,7 @@ fn main() {
         let name = format!("policy_{}", kind.label());
         b.run(&name, || {
             g = (g + 1) % 5;
-            black_box(policy.route(&store, g))
+            black_box(policy.route_view(&view, g))
         });
     }
 
@@ -70,5 +83,14 @@ fn main() {
         black_box(rules.group_of(c))
     });
 
-    b.finish();
+    // headline: routes/sec on the hot path (median-derived)
+    let extras: Vec<(String, f64)> = b
+        .results()
+        .iter()
+        .filter(|r| r.name.ends_with("_view") || r.name.starts_with("policy_"))
+        .map(|r| {
+            (format!("routes_per_sec_{}", r.name), r.throughput_per_sec())
+        })
+        .collect();
+    b.finish_json(&extras);
 }

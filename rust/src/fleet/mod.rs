@@ -29,6 +29,7 @@ use crate::dataset::{Dataset, GtBox, Scene};
 use crate::detection::map::{map_coco, ImageEval};
 use crate::devices;
 use crate::devices::drift::DriftConfig;
+use crate::estimators::GatewayCost;
 use crate::gateway::{Gateway, NoEndpoint, RoutedRequest, RouterSpec};
 use crate::lifecycle::{
     self, ChurnConfig, ChurnReport, ChurnState, LossOutcome,
@@ -36,7 +37,7 @@ use crate::lifecycle::{
 };
 use crate::metrics::RunMetrics;
 use crate::nodes::{EdgeNode, NodeDown, NodePool, NodeResponse};
-use crate::router::{PairKey, PairProfile, ProfileStore};
+use crate::router::{PairId, PairKey, PairProfile, ProfileStore};
 use crate::runtime::Engine;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -211,11 +212,13 @@ impl<'e> FleetBuilder<'e> {
             (0..cfg.n_shards).map(|_| Vec::new()).collect();
         let mut shard_rows: Vec<Vec<PairProfile>> =
             (0..cfg.n_shards).map(|_| Vec::new()).collect();
-        let mut node_homes: Vec<(usize, PairKey)> =
+        let mut home_keys: Vec<(usize, PairKey)> =
             Vec::with_capacity(cfg.n_nodes);
         let rng = Rng::new(cfg.seed ^ 0xF1EE_7B0A);
         for i in 0..cfg.n_nodes {
             let bp = &base_pairs[i % base_pairs.len()];
+            let bp_id =
+                self.base.id_of(bp).expect("base pair interned");
             let base_dev = devices::find(&base_fleet, &bp.device)
                 .with_context(|| {
                     format!("unknown base device '{}'", bp.device)
@@ -236,9 +239,11 @@ impl<'e> FleetBuilder<'e> {
                 node.enable_drift(dc.clone(), cfg.seed ^ mix64(i as u64));
             }
             let shard = i % cfg.n_shards;
-            node_homes.push((shard, pair.clone()));
-            for row in self.base.rows().iter().filter(|row| &row.pair == bp)
-            {
+            home_keys.push((shard, pair.clone()));
+            // the base pair's rows via the pair index (insertion
+            // order), not a full-table string scan
+            for &ri in self.base.pair_row_indices(bp_id) {
+                let row = &self.base.rows()[ri as usize];
                 shard_rows[shard].push(PairProfile {
                     pair: pair.clone(),
                     group: row.group,
@@ -275,6 +280,18 @@ impl<'e> FleetBuilder<'e> {
             }
             shards.push(gw);
         }
+        // resolve each node's identity in its owning shard's id space
+        // (the failure timeline addresses nodes by synthesis index)
+        let node_homes: Vec<(usize, PairId)> = home_keys
+            .into_iter()
+            .map(|(s, key)| {
+                let id = shards[s]
+                    .store()
+                    .id_of(&key)
+                    .expect("synthesized pair interned in its shard");
+                (s, id)
+            })
+            .collect();
         Ok(Fleet {
             shards,
             dispatch: cfg.dispatch,
@@ -294,9 +311,10 @@ pub struct Fleet<'e> {
     n_nodes: usize,
     /// Churn scenario the fleet was built with (drives `run_frames`).
     churn: Option<ChurnConfig>,
-    /// Global synthesis index → (owning shard, node identity): how the
-    /// ground-truth failure timeline addresses nodes.
-    node_homes: Vec<(usize, PairKey)>,
+    /// Global synthesis index → (owning shard, node identity in that
+    /// shard's id space): how the ground-truth failure timeline
+    /// addresses nodes.
+    node_homes: Vec<(usize, PairId)>,
 }
 
 impl<'e> Fleet<'e> {
@@ -496,7 +514,7 @@ enum EventKind {
     /// lost to a crash are stale (token mismatch) and ignored.
     Completion {
         shard: usize,
-        pair: PairKey,
+        pair: PairId,
         token: u64,
     },
     /// Ground-truth crash of synthesized node `node` (churn only).
@@ -559,7 +577,7 @@ struct NodeQueue {
 
 /// Mutable simulator state threaded through the event handlers.
 struct SimState {
-    queues: Vec<BTreeMap<PairKey, NodeQueue>>,
+    queues: Vec<BTreeMap<PairId, NodeQueue>>,
     heap: BinaryHeap<Reverse<Event>>,
     seq: u64,
     dropped: usize,
@@ -599,11 +617,15 @@ impl SimState {
 /// `workload::openloop`).
 struct ChurnDriver {
     /// Global synthesis index → (owning shard, node identity).
-    homes: Vec<(usize, PairKey)>,
+    homes: Vec<(usize, PairId)>,
     /// Pool-ordered node identities per shard (probe snapshots).
-    shard_pairs: Vec<Vec<PairKey>>,
+    shard_pairs: Vec<Vec<PairId>>,
     probe_timeout_s: f64,
     state: ChurnState,
+    /// `(estimate, gateway cost)` paid at each request's first
+    /// successful placement; retries re-route with these instead of
+    /// re-running every visited shard's estimator.
+    est: Vec<Option<(usize, GatewayCost)>>,
 }
 
 /// Drive a fleet over pre-rendered frames under open-loop arrivals.
@@ -668,14 +690,18 @@ pub fn run_frames(
                     t += gap;
                 }
             }
-            let shard_pairs: Vec<Vec<PairKey>> = fleet
+            let shard_pairs: Vec<Vec<PairId>> = fleet
                 .shards
                 .iter()
                 .map(|g| {
                     g.pool()
                         .nodes()
                         .iter()
-                        .map(|n| n.pair.clone())
+                        .map(|n| {
+                            g.store().id_of(&n.pair).expect(
+                                "shard pair missing from its table",
+                            )
+                        })
                         .collect()
                 })
                 .collect();
@@ -688,6 +714,7 @@ pub fn run_frames(
                     c.policy,
                     c.retry_backoff_s,
                 ),
+                est: vec![None; frames.len()],
             })
         }
         None => None,
@@ -726,8 +753,8 @@ pub fn run_frames(
                         fleet.shards[s]
                             .route_secondary(&routed, ev.t)
                             .map(|p| RoutedRequest {
-                                pair: p,
-                                ..routed.clone()
+                                pair_id: p,
+                                ..routed
                             })
                     }
                     _ => None,
@@ -735,8 +762,11 @@ pub fn run_frames(
                 // register BOTH copies before admitting either: the
                 // primary can die synchronously at dispatch (stale
                 // view), and its loss must see the hedge as a live
-                // sibling, not declare the request lost.
+                // sibling, not declare the request lost. The winning
+                // shard's estimate + cost are cached so a retry never
+                // pays the estimator again.
                 if let Some(ch) = churn.as_mut() {
+                    ch.est[idx] = Some((routed.estimate, routed.cost));
                     ch.state.dispatched(idx);
                     if dup.is_some() {
                         ch.state.hedge_dispatched(idx);
@@ -768,8 +798,27 @@ pub fn run_frames(
                 }
             }
             EventKind::Retry(idx) => {
-                let placed =
-                    try_place(fleet, frames, pseudo_gt, &mut sim, idx, ev.t)?;
+                // a request that placed before carries its ORIGINAL
+                // estimate + cost (estimator caching); one that never
+                // placed re-estimates like a fresh arrival.
+                let cached = churn
+                    .as_ref()
+                    .expect("retry without churn")
+                    .est[idx];
+                let placed = match cached {
+                    Some((estimate, cost)) => try_place_with_estimate(
+                        fleet,
+                        &mut sim,
+                        idx,
+                        estimate,
+                        pseudo_gt[idx].len(),
+                        cost,
+                        ev.t,
+                    )?,
+                    None => try_place(
+                        fleet, frames, pseudo_gt, &mut sim, idx, ev.t,
+                    )?,
+                };
                 let ch = churn.as_mut().expect("retry without churn");
                 let Some((s, routed)) = placed else {
                     if let LossOutcome::RetryAt(t) =
@@ -779,6 +828,9 @@ pub fn run_frames(
                     }
                     continue;
                 };
+                if ch.est[idx].is_none() {
+                    ch.est[idx] = Some((routed.estimate, routed.cost));
+                }
                 ch.state.retry_dispatched(idx);
                 admit_copy(
                     &mut fleet.shards[s],
@@ -810,7 +862,7 @@ pub fn run_frames(
                     continue;
                 }
                 let done = q.serving.take().expect("token just matched");
-                fleet.shards[s].pool_mut().release(&pair);
+                fleet.shards[s].pool_mut().release_id(pair);
                 sim.in_flight[s] -= 1;
                 sim.total_in_flight -= 1;
                 sim.makespan_s = sim.makespan_s.max(ev.t);
@@ -840,31 +892,31 @@ pub fn run_frames(
                     frames,
                     &mut sim,
                     &mut churn,
-                    &pair,
+                    pair,
                     ev.t,
                 )?;
             }
             EventKind::Crash(node) => {
                 let ch = churn.as_mut().expect("crash without churn");
-                let (s, pair) = ch.homes[node].clone();
+                let (s, pair) = ch.homes[node];
                 ch.state.crashes += 1;
                 let gw = &mut fleet.shards[s];
-                gw.pool_mut().set_health(&pair, false);
+                gw.pool_mut().set_health_id(pair, false);
                 if let Some(m) = gw.membership_mut() {
-                    m.ground_truth_changed(&pair, false, ev.t);
+                    m.ground_truth_changed(pair, false, ev.t);
                 }
-                lose_queued(gw, s, &mut sim, &mut ch.state, &pair, None, ev.t);
+                lose_queued(gw, s, &mut sim, &mut ch.state, pair, None, ev.t);
             }
             EventKind::Rejoin(node) => {
                 let ch = churn.as_ref().expect("rejoin without churn");
-                let (s, pair) = ch.homes[node].clone();
+                let (s, pair) = ch.homes[node];
                 let gw = &mut fleet.shards[s];
-                gw.pool_mut().set_health(&pair, true);
-                if let Some(n) = gw.pool_mut().get(&pair) {
+                gw.pool_mut().set_health_id(pair, true);
+                if let Some(n) = gw.pool_mut().get_id(pair) {
                     n.on_rejoin(ev.t);
                 }
                 if let Some(m) = gw.membership_mut() {
-                    m.ground_truth_changed(&pair, true, ev.t);
+                    m.ground_truth_changed(pair, true, ev.t);
                 }
             }
             EventKind::Probe { shard } => {
@@ -872,7 +924,7 @@ pub fn run_frames(
                 let gw = &fleet.shards[shard];
                 let responses: Vec<bool> = ch.shard_pairs[shard]
                     .iter()
-                    .map(|p| gw.pool().is_healthy(p))
+                    .map(|&p| gw.pool().is_healthy_id(p))
                     .collect();
                 let timeout = ch.probe_timeout_s;
                 sim.push(
@@ -885,7 +937,8 @@ pub fn run_frames(
                 let m = fleet.shards[shard]
                     .membership_mut()
                     .expect("churn shard lost its membership");
-                for (p, up) in ch.shard_pairs[shard].iter().zip(&responses)
+                for (&p, up) in
+                    ch.shard_pairs[shard].iter().zip(&responses)
                 {
                     m.observe_probe(p, *up, ev.t);
                 }
@@ -919,7 +972,8 @@ pub fn run_frames(
 
 /// Walk the dispatch order until a shard admits request `idx`; spills
 /// beyond the first shard count as cross-shard fallbacks only when
-/// placement succeeds.
+/// placement succeeds. Every visited shard runs its own estimator
+/// (per-shard OB state), exactly like the pre-caching behavior.
 fn try_place(
     fleet: &mut Fleet<'_>,
     frames: &[Scene],
@@ -946,6 +1000,34 @@ fn try_place(
     Ok(None)
 }
 
+/// [`try_place`] for a retry that already paid the estimator: walk the
+/// dispatch order routing with the request's cached estimate + cost,
+/// so no shard re-runs gateway-side inference (estimator caching).
+fn try_place_with_estimate(
+    fleet: &mut Fleet<'_>,
+    sim: &mut SimState,
+    idx: usize,
+    estimate: usize,
+    true_count: usize,
+    cost: GatewayCost,
+    now_s: f64,
+) -> Result<Option<(usize, RoutedRequest)>> {
+    let order = fleet.dispatch.order(idx, fleet.n_sources, &sim.in_flight);
+    for (attempt, &s) in order.iter().enumerate() {
+        match fleet.shards[s]
+            .route_with_estimate(estimate, true_count, cost, now_s)
+        {
+            Ok(routed) => {
+                sim.cross_shard_fallbacks += attempt;
+                return Ok(Some((s, routed)));
+            }
+            Err(e) if e.is::<NoEndpoint>() => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(None)
+}
+
 /// Admit one routed copy of request `idx` into its pair's FIFO on
 /// `shard` at time `t` and try to start service.
 #[allow(clippy::too_many_arguments)]
@@ -960,13 +1042,13 @@ fn admit_copy(
     t: f64,
     hedge: bool,
 ) -> Result<()> {
-    let admitted = gw.pool_mut().acquire(&routed.pair);
+    let admitted = gw.pool_mut().acquire_id(routed.pair_id);
     debug_assert!(admitted, "route() returned a pair without a free slot");
     sim.in_flight[shard] += 1;
     sim.total_in_flight += 1;
     sim.peak_in_flight = sim.peak_in_flight.max(sim.total_in_flight);
-    let pair = routed.pair.clone();
-    sim.queues[shard].entry(pair.clone()).or_default().backlog.push_back(
+    let pair = routed.pair_id;
+    sim.queues[shard].entry(pair).or_default().backlog.push_back(
         Pending {
             routed,
             idx,
@@ -974,7 +1056,7 @@ fn admit_copy(
             hedge,
         },
     );
-    start_next(gw, shard, frames, sim, churn, &pair, t)
+    start_next(gw, shard, frames, sim, churn, pair, t)
 }
 
 /// If `pair` (on shard `shard`) is idle and has backlog, begin serving
@@ -989,11 +1071,11 @@ fn start_next(
     frames: &[Scene],
     sim: &mut SimState,
     churn: &mut Option<ChurnDriver>,
-    pair: &PairKey,
+    pair: PairId,
     now_s: f64,
 ) -> Result<()> {
     let q = sim.queues[shard]
-        .get_mut(pair)
+        .get_mut(&pair)
         .expect("start_next on unknown queue");
     if q.serving.is_some() {
         return Ok(());
@@ -1017,14 +1099,10 @@ fn start_next(
     let token = sim.seq;
     sim.push(
         start_s + resp.latency_s + devices::NETWORK_S,
-        EventKind::Completion {
-            shard,
-            pair: pair.clone(),
-            token,
-        },
+        EventKind::Completion { shard, pair, token },
     );
     // re-borrow: gw.serve() above needed &mut Gateway exclusively
-    sim.queues[shard].get_mut(pair).expect("queue vanished").serving =
+    sim.queues[shard].get_mut(&pair).expect("queue vanished").serving =
         Some(InService {
             routed: p.routed,
             idx: p.idx,
@@ -1046,12 +1124,12 @@ fn lose_queued(
     shard: usize,
     sim: &mut SimState,
     state: &mut ChurnState,
-    pair: &PairKey,
+    pair: PairId,
     head: Option<Pending>,
     now_s: f64,
 ) {
     let mut idxs: Vec<usize> = Vec::new();
-    if let Some(q) = sim.queues[shard].get_mut(pair) {
+    if let Some(q) = sim.queues[shard].get_mut(&pair) {
         if let Some(s) = q.serving.take() {
             idxs.push(s.idx);
         }
@@ -1065,7 +1143,7 @@ fn lose_queued(
         idxs.push(p.idx);
     }
     for idx in idxs {
-        gw.pool_mut().release(pair);
+        gw.pool_mut().release_id(pair);
         sim.in_flight[shard] -= 1;
         sim.total_in_flight -= 1;
         match state.copy_lost(idx, now_s) {

@@ -15,7 +15,10 @@ use crate::estimators::{Estimator, EstimatorKind, GatewayCost};
 use crate::lifecycle::{ChurnConfig, Membership};
 use crate::metrics::RunMetrics;
 use crate::nodes::{NodePool, NodeResponse};
-use crate::router::{GroupRules, PairKey, Policy, PolicyKind, ProfileStore};
+use crate::router::{
+    GroupRules, PairId, PairKey, Policy, PolicyKind, ProfileStore,
+    RoutingView,
+};
 use crate::runtime::Engine;
 
 /// One of the paper's ten evaluated router configurations: an estimator
@@ -80,12 +83,16 @@ impl std::error::Error for NoEndpoint {}
 
 /// A routing decision: the admission-time half of a request, produced
 /// by [`Gateway::route`] and consumed by [`Gateway::finish`] once the
-/// backend response is in. Carrying the gateway-side estimation cost
-/// here lets the open-loop driver account it at arrival time while the
-/// dispatch happens arbitrarily later on the event clock.
-#[derive(Clone, Debug)]
+/// backend response is in. Carries only the interned [`PairId`] (the
+/// key is resolved at the JSON/metrics edges), so the struct is `Copy`
+/// and the retry/hedge paths duplicate it for free. Carrying the
+/// gateway-side estimation cost here lets the open-loop driver account
+/// it at arrival time while the dispatch happens arbitrarily later on
+/// the event clock — and lets retries re-enter routing without paying
+/// the estimator again.
+#[derive(Clone, Copy, Debug)]
 pub struct RoutedRequest {
-    pub pair: PairKey,
+    pub pair_id: PairId,
     pub group: usize,
     pub estimate: usize,
     pub true_count: usize,
@@ -124,10 +131,13 @@ impl<'e> Gateway<'e> {
         engine: &'e Engine,
         spec: RouterSpec,
         store: ProfileStore,
-        pool: NodePool,
+        mut pool: NodePool,
         delta_map: f64,
         seed: u64,
     ) -> Self {
+        // one id space for store, pool, and membership: the pool's
+        // admission/occupancy checks become O(1) array hits
+        pool.bind_table(store.table_arc());
         Self {
             engine,
             gateway_dev: devices::gateway_spec(),
@@ -143,14 +153,13 @@ impl<'e> Gateway<'e> {
         }
     }
 
-    /// Switch this gateway to probe-driven membership over its deployed
-    /// pool (all nodes start believed-Up). Routing stops reading
-    /// ground-truth health; only probe results and dispatch failures
-    /// fed through [`Gateway::membership_mut`] move the view.
+    /// Switch this gateway to probe-driven membership over its routing
+    /// table (all pairs start believed-Up; the deployed pool covers
+    /// exactly the store's pairs). Routing stops reading ground-truth
+    /// health; only probe results and dispatch failures fed through
+    /// [`Gateway::membership_mut`] move the view.
     pub fn enable_churn(&mut self, cfg: &ChurnConfig) {
-        let pairs: Vec<PairKey> =
-            self.pool.nodes().iter().map(|n| n.pair.clone()).collect();
-        self.membership = Some(Membership::new(&pairs, cfg));
+        self.membership = Some(Membership::new(self.store.table(), cfg));
     }
 
     pub fn membership(&self) -> Option<&Membership> {
@@ -214,42 +223,71 @@ impl<'e> Gateway<'e> {
         true_count: usize,
         now_s: f64,
     ) -> Result<RoutedRequest> {
-        let (estimate, cost) = self.estimator.estimate(
+        let (estimate, cost) = self.estimate_request(image, true_count)?;
+        self.route_with_estimate(estimate, true_count, cost, now_s)
+    }
+
+    /// Estimation phase alone: run the configured estimator on one
+    /// image and return (estimate, gateway-side cost). Split out from
+    /// [`Gateway::route_at`] so drivers can cache the result and route
+    /// retries without paying [`GatewayCost`] twice (ROADMAP
+    /// "estimator caching").
+    pub fn estimate_request(
+        &mut self,
+        image: &[f32],
+        true_count: usize,
+    ) -> Result<(usize, GatewayCost)> {
+        self.estimator.estimate(
             self.engine,
             &self.gateway_dev,
             image,
             true_count,
-        )?;
-        let group = self.rules.group_of(estimate);
+        )
+    }
 
-        let mut store_view = self.routing_store(now_s);
-        let mut pair = self
-            .policy
-            .route(&store_view, group)
+    /// Policy phase: route an already-estimated request, skipping
+    /// unavailable endpoints — the zero-allocation hot path. The
+    /// policy runs over a borrowed [`RoutingView`] of the shard store;
+    /// the fallback walk excludes failed pairs on the view (a bit
+    /// flip) instead of materializing restricted store copies, and
+    /// warm-up aging rides the view's cost overlay. `cost` is carried
+    /// into the [`RoutedRequest`] verbatim: a retry passes the
+    /// original estimate + cost so the estimator is consulted exactly
+    /// once per request, and the winning copy records that one cost.
+    pub fn route_with_estimate(
+        &mut self,
+        estimate: usize,
+        true_count: usize,
+        cost: GatewayCost,
+        now_s: f64,
+    ) -> Result<RoutedRequest> {
+        let group = self.rules.group_of(estimate);
+        let store = &self.store;
+        let membership = self.membership.as_ref();
+        let pool = &self.pool;
+        let policy = &mut self.policy;
+        let mut view = Self::aged_view(store, membership, now_s);
+        let mut pair_id = policy
+            .route_view(&view, group)
             .context("policy returned no endpoint")?;
         // attempts are committed to `self.fallbacks` only when routing
         // succeeds: re-routes that end in a shed request rescued
         // nothing and must not inflate the fallback metric.
         let mut attempts = 0;
-        while !self.endpoint_admits(&pair) {
+        while !Self::admits(pool, membership, pair_id) {
             attempts += 1;
-            if attempts > self.pool.len() {
+            if attempts > pool.len() {
                 return Err(anyhow::Error::new(NoEndpoint));
             }
-            let remaining: Vec<_> = store_view
-                .pairs()
-                .into_iter()
-                .filter(|p| p != &pair)
-                .collect();
-            store_view = store_view.restrict(&remaining);
-            pair = match self.policy.route(&store_view, group) {
+            view.exclude(pair_id);
+            pair_id = match policy.route_view(&view, group) {
                 Some(p) => p,
                 None => return Err(anyhow::Error::new(NoEndpoint)),
             };
         }
         self.fallbacks += attempts;
         Ok(RoutedRequest {
-            pair,
+            pair_id,
             group,
             estimate,
             true_count,
@@ -258,62 +296,73 @@ impl<'e> Gateway<'e> {
     }
 
     /// Pick the second-best admissible pair for a hedged duplicate of
-    /// `routed`: re-run the policy over the routing store with the
-    /// primary pair removed, walking the same fallback sequence. No
+    /// `routed`: re-run the policy over the routing view with the
+    /// primary pair excluded, walking the same fallback sequence. No
     /// estimator cost is charged — the duplicate reuses the primary's
     /// estimate — and the walk does not touch the `fallbacks` counter.
     pub fn route_secondary(
         &mut self,
         routed: &RoutedRequest,
         now_s: f64,
-    ) -> Option<PairKey> {
-        let mut store_view = self.routing_store(now_s);
-        let mut exclude = routed.pair.clone();
+    ) -> Option<PairId> {
+        let store = &self.store;
+        let membership = self.membership.as_ref();
+        let pool = &self.pool;
+        let policy = &mut self.policy;
+        let mut view = Self::aged_view(store, membership, now_s);
+        let mut exclude = routed.pair_id;
         loop {
-            let remaining: Vec<PairKey> = store_view
-                .pairs()
-                .into_iter()
-                .filter(|p| p != &exclude)
-                .collect();
-            if remaining.is_empty() {
+            view.exclude(exclude);
+            if view.live_pairs() == 0 {
                 return None;
             }
-            store_view = store_view.restrict(&remaining);
-            let pair = self.policy.route(&store_view, routed.group)?;
-            if self.endpoint_admits(&pair) {
-                return Some(pair);
+            let pair_id = policy.route_view(&view, routed.group)?;
+            if Self::admits(pool, membership, pair_id) {
+                return Some(pair_id);
             }
-            exclude = pair;
+            exclude = pair_id;
         }
     }
 
-    /// Routing-time admissibility of one endpoint. Without churn this
-    /// is ground truth (`NodePool::is_available`); with churn it is the
-    /// probe-driven *believed* health plus the (locally exact) queue
-    /// occupancy — the gateway can and does admit onto a node that is
-    /// already dead, paying for the stale view at dispatch.
-    fn endpoint_admits(&self, pair: &PairKey) -> bool {
-        match &self.membership {
-            Some(m) => m.believed_up(pair) && self.pool.has_slot(pair),
-            None => self.pool.is_available(pair),
-        }
-    }
-
-    /// The table the policy routes over right now: the shard store,
-    /// with warming nodes' rows cost-aged by the membership view
+    /// The routing view for one request: a borrow of the shard store,
+    /// with warming pairs' costs aged by the membership view
     /// (lifecycle warm-up — a rejoining node looks expensive until its
-    /// window closes, so routers ease traffic back onto it).
-    fn routing_store(&self, now_s: f64) -> ProfileStore {
-        let mut view = self.store.clone();
-        if let Some(m) = &self.membership {
-            for pair in view.pairs() {
-                let mult = m.cost_multiplier(&pair, now_s);
+    /// window closes, so routers ease traffic back onto it; ids ascend
+    /// so the overlay stays sorted). An associated fn over the
+    /// borrowed fields so the policy can hold its own mutable borrow.
+    fn aged_view<'a>(
+        store: &'a ProfileStore,
+        membership: Option<&Membership>,
+        now_s: f64,
+    ) -> RoutingView<'a> {
+        let mut view = RoutingView::new(store);
+        if let Some(m) = membership {
+            for id in store.pair_ids() {
+                let mult = m.cost_multiplier(id, now_s);
                 if mult > 1.0 {
-                    view.scale_pair(&pair, mult, mult);
+                    view.age(id, mult);
                 }
             }
         }
         view
+    }
+
+    /// Routing-time admissibility of one endpoint. Without churn this
+    /// is ground truth (`NodePool::is_available_id`); with churn it is
+    /// the probe-driven *believed* health plus the (locally exact)
+    /// queue occupancy — the gateway can and does admit onto a node
+    /// that is already dead, paying for the stale view at dispatch.
+    /// An associated fn over the borrowed fields so the fallback walk
+    /// can run while the policy holds its own mutable borrow.
+    fn admits(
+        pool: &NodePool,
+        membership: Option<&Membership>,
+        id: PairId,
+    ) -> bool {
+        match membership {
+            Some(m) => m.believed_up(id) && pool.has_slot_id(id),
+            None => pool.is_available_id(id),
+        }
     }
 
     /// Dispatch phase: execute one request on the routed node at time
@@ -321,15 +370,22 @@ impl<'e> Gateway<'e> {
     /// time; the closed loop passes its serial clock).
     pub fn serve(
         &mut self,
-        pair: &PairKey,
+        pair_id: PairId,
         image: &[f32],
         now_s: f64,
     ) -> Result<NodeResponse> {
-        let node = self
-            .pool
-            .get(pair)
-            .with_context(|| format!("no deployed node for {pair}"))?;
-        node.process_at(self.engine, image, now_s)
+        let engine = self.engine;
+        let node = self.pool.get_id(pair_id).with_context(|| {
+            // error path only: resolve the id for the diagnostic
+            match self.store.table().keys().get(pair_id.index()) {
+                Some(k) => format!("no deployed node for {k}"),
+                None => format!(
+                    "no deployed node for unknown pair id {}",
+                    pair_id.0
+                ),
+            }
+        })?;
+        node.process_at(engine, image, now_s)
     }
 
     /// Completion phase: feed the response back to the estimator (OB)
@@ -346,8 +402,11 @@ impl<'e> Gateway<'e> {
     ) -> RequestOutcome {
         self.estimator.observe_response(resp.detections.len());
         let n_det = resp.detections.len();
+        // resolve the interned id at the metrics edge (strings live
+        // only in reports, never on the routing hot path)
+        let pair = self.store.key_of(routed.pair_id);
         metrics.record_request(
-            &routed.pair,
+            pair,
             routed.group,
             routed.estimate,
             routed.true_count,
@@ -363,7 +422,7 @@ impl<'e> Gateway<'e> {
         );
         metrics.record_queue_delay(queue_delay_s);
         RequestOutcome {
-            pair: routed.pair.clone(),
+            pair: pair.clone(),
             group: routed.group,
             estimate: routed.estimate,
             detections: n_det,
@@ -385,7 +444,7 @@ impl<'e> Gateway<'e> {
         metrics: &mut RunMetrics,
     ) -> Result<RequestOutcome> {
         let routed = self.route(image, true_count)?;
-        let resp = self.serve(&routed.pair, image, self.now_s)?;
+        let resp = self.serve(routed.pair_id, image, self.now_s)?;
         self.now_s +=
             routed.cost.latency_s + resp.latency_s + devices::NETWORK_S;
         Ok(self.finish(&routed, resp, gt, 0.0, metrics))
@@ -423,14 +482,16 @@ impl<'e> Gateway<'e> {
             *first_count,
         )?;
         let group = self.rules.group_of(estimate);
-        let pair = self
+        let view = RoutingView::new(&self.store);
+        let pair_id = self
             .policy
-            .route(&self.store, group)
+            .route_view(&view, group)
             .context("policy returned no endpoint")?;
+        let pair = self.store.key_of(pair_id).clone();
         let now = self.now_s;
         let node = self
             .pool
-            .get(&pair)
+            .get_id(pair_id)
             .with_context(|| format!("no deployed node for {pair}"))?;
         let mut dets_per_image = Vec::with_capacity(images.len());
         for (i, (img, true_count, gt)) in images.iter().enumerate() {
@@ -592,6 +653,8 @@ mod tests {
         );
         let cheap = PairKey::new("ssd_v1", "jetson_orin_nano");
         let big = PairKey::new("yolov8n", "pi5_aihat");
+        let cheap_id = gw.store().id_of(&cheap).unwrap();
+        let big_id = gw.store().id_of(&big).unwrap();
         gw.enable_churn(&crate::lifecycle::ChurnConfig {
             suspect_after: 2,
             warmup_s: 2.0,
@@ -601,21 +664,21 @@ mod tests {
         });
         let img = vec![0.5f32; 384 * 384];
         // believed Up: LE picks the cheap pair
-        assert_eq!(gw.route_at(&img, 0, 0.0).unwrap().pair, cheap);
+        assert_eq!(gw.route_at(&img, 0, 0.0).unwrap().pair_id, cheap_id);
         // ground truth down but no probe noticed yet: still routed
         // there (the stale-view cost this subsystem exists to model)
         gw.pool_mut().set_health(&cheap, false);
-        assert_eq!(gw.route_at(&img, 0, 0.1).unwrap().pair, cheap);
+        assert_eq!(gw.route_at(&img, 0, 0.1).unwrap().pair_id, cheap_id);
         // two missed probes: believed Down, routing avoids it
-        gw.membership_mut().unwrap().observe_probe(&cheap, false, 0.2);
-        gw.membership_mut().unwrap().observe_probe(&cheap, false, 0.3);
-        assert_eq!(gw.route_at(&img, 0, 0.4).unwrap().pair, big);
+        gw.membership_mut().unwrap().observe_probe(cheap_id, false, 0.2);
+        gw.membership_mut().unwrap().observe_probe(cheap_id, false, 0.3);
+        assert_eq!(gw.route_at(&img, 0, 0.4).unwrap().pair_id, big_id);
         // rejoin observed: Warming until 3.0, aged rows keep LE away
         gw.pool_mut().set_health(&cheap, true);
-        gw.membership_mut().unwrap().observe_probe(&cheap, true, 1.0);
-        assert_eq!(gw.route_at(&img, 0, 1.0).unwrap().pair, big);
+        gw.membership_mut().unwrap().observe_probe(cheap_id, true, 1.0);
+        assert_eq!(gw.route_at(&img, 0, 1.0).unwrap().pair_id, big_id);
         // after the warm-up window the cheap pair wins again
-        assert_eq!(gw.route_at(&img, 0, 3.5).unwrap().pair, cheap);
+        assert_eq!(gw.route_at(&img, 0, 3.5).unwrap().pair_id, cheap_id);
     }
 
     #[test]
@@ -635,9 +698,13 @@ mod tests {
         let img = vec![0.5f32; 384 * 384];
         let routed = gw.route(&img, 0).unwrap();
         let second = gw.route_secondary(&routed, 0.0).unwrap();
-        assert_ne!(second, routed.pair, "hedge must use a distinct pair");
+        assert_ne!(
+            second, routed.pair_id,
+            "hedge must use a distinct pair"
+        );
         // with the only alternative down there is no hedge target
-        gw.pool_mut().set_health(&second, false);
+        let second_key = gw.store().key_of(second).clone();
+        gw.pool_mut().set_health(&second_key, false);
         assert!(gw.route_secondary(&routed, 0.0).is_none());
     }
 
@@ -667,5 +734,93 @@ mod tests {
                 "router {name}"
             );
         }
+    }
+
+    #[test]
+    fn no_churn_routing_performs_zero_store_copies() {
+        // the tentpole regression: the degenerate (no-churn) routing
+        // path must be a borrow of the shard store, never a copy —
+        // Gateway::routing_store used to deep-clone every row and
+        // string on every routed request.
+        let e = engine();
+        let store = tiny_store();
+        let pool =
+            NodePool::deploy(&e, &store.pairs(), &fleet(), 1).unwrap();
+        let mut gw = Gateway::new(
+            &e,
+            router_by_name("Orc").unwrap(),
+            store,
+            pool,
+            5.0,
+            1,
+        );
+        let img = vec![0.5f32; 384 * 384];
+        let before = ProfileStore::clone_count();
+        for i in 0..50 {
+            gw.route_at(&img, i % 7, i as f64 * 0.01).unwrap();
+        }
+        assert_eq!(
+            ProfileStore::clone_count(),
+            before,
+            "no-churn routing must not copy the ProfileStore"
+        );
+        // churn enabled but nobody warming: still zero copies (the
+        // warm-up overlay only materializes multipliers, never rows)
+        gw.enable_churn(&crate::lifecycle::ChurnConfig::default());
+        let before = ProfileStore::clone_count();
+        for i in 0..50 {
+            gw.route_at(&img, i % 7, i as f64 * 0.01).unwrap();
+        }
+        assert_eq!(
+            ProfileStore::clone_count(),
+            before,
+            "membership routing without warm-up must not copy either"
+        );
+    }
+
+    #[test]
+    fn route_with_estimate_reuses_the_paid_estimate() {
+        // retry semantics: routing with a cached estimate must carry
+        // the original estimate/cost into the RoutedRequest and leave
+        // the estimator state untouched (the request pays GatewayCost
+        // exactly once, at first admission).
+        let e = engine();
+        let store = tiny_store();
+        let pool =
+            NodePool::deploy(&e, &store.pairs(), &fleet(), 1).unwrap();
+        let mut gw = Gateway::new(
+            &e,
+            router_by_name("OB").unwrap(),
+            store,
+            pool,
+            5.0,
+            1,
+        );
+        let mut m = RunMetrics::new("OB");
+        let crowded = scene::render_spec(&SceneSpec {
+            id: 0,
+            seed: 9,
+            n_objects: 7,
+        });
+        // prime the OB estimator with a real response
+        let o1 = gw
+            .handle(&crowded.image, 7, &crowded.gt, &mut m)
+            .unwrap();
+        // a retry copy re-enters routing with its ORIGINAL estimate
+        // and cost — not a fresh OB reading
+        let cost = crate::estimators::GatewayCost {
+            latency_s: 0.5,
+            energy_mwh: 0.25,
+        };
+        let routed = gw.route_with_estimate(3, 7, cost, 0.0).unwrap();
+        assert_eq!(routed.estimate, 3, "original estimate carried");
+        assert_eq!(routed.cost.latency_s, 0.5, "original cost carried");
+        assert_eq!(routed.cost.energy_mwh, 0.25);
+        // the estimator was neither consulted nor advanced: the next
+        // estimate is still the previous backend response's count
+        let (next, next_cost) =
+            gw.estimate_request(&crowded.image, 7).unwrap();
+        assert_eq!(next, o1.detections);
+        assert_eq!(next_cost.latency_s, 0.0, "OB estimation is free");
     }
 }

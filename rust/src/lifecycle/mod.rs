@@ -24,9 +24,7 @@
 //! Everything here is deterministic in its seeds; golden-trace tests
 //! pin whole churn runs byte for byte.
 
-use std::collections::BTreeMap;
-
-use crate::router::PairKey;
+use crate::router::{PairId, PairTable};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
@@ -213,13 +211,17 @@ struct MemberEntry {
 }
 
 /// Probe-driven membership: the stale health view one gateway routes
-/// on. Updated only by [`Membership::observe_probe`] (scheduled probe
-/// results) and [`Membership::observe_dispatch_failure`] (data-path
-/// evidence); ground truth reaches it exclusively as accounting
-/// metadata via [`Membership::ground_truth_changed`].
+/// on, keyed by interned [`PairId`] (a dense per-id table over the
+/// gateway's routing table, so every hot-path health check is an O(1)
+/// array hit with no string comparison). Updated only by
+/// [`Membership::observe_probe`] (scheduled probe results) and
+/// [`Membership::observe_dispatch_failure`] (data-path evidence);
+/// ground truth reaches it exclusively as accounting metadata via
+/// [`Membership::ground_truth_changed`].
 #[derive(Clone, Debug)]
 pub struct Membership {
-    entries: BTreeMap<PairKey, MemberEntry>,
+    /// Dense per-id entries, aligned with the routing table.
+    entries: Vec<MemberEntry>,
     suspect_after: usize,
     warmup_s: f64,
     warmup_penalty: f64,
@@ -230,23 +232,20 @@ pub struct Membership {
 }
 
 impl Membership {
-    pub fn new(pairs: &[PairKey], cfg: &ChurnConfig) -> Self {
+    /// Start a membership view over every pair of a routing table
+    /// (all believed Up).
+    pub fn new(table: &PairTable, cfg: &ChurnConfig) -> Self {
         Self {
-            entries: pairs
-                .iter()
-                .map(|p| {
-                    (
-                        p.clone(),
-                        MemberEntry {
-                            state: MemberState::Up,
-                            misses: 0,
-                            warmup_until: 0.0,
-                            crashed_at: None,
-                            rejoined_at: None,
-                        },
-                    )
-                })
-                .collect(),
+            entries: vec![
+                MemberEntry {
+                    state: MemberState::Up,
+                    misses: 0,
+                    warmup_until: 0.0,
+                    crashed_at: None,
+                    rejoined_at: None,
+                };
+                table.len()
+            ],
             suspect_after: cfg.suspect_after.max(1),
             warmup_s: cfg.warmup_s.max(1e-9),
             warmup_penalty: cfg.warmup_penalty.max(0.0),
@@ -257,15 +256,15 @@ impl Membership {
         }
     }
 
-    pub fn state(&self, pair: &PairKey) -> Option<MemberState> {
-        self.entries.get(pair).map(|e| e.state)
+    pub fn state(&self, id: PairId) -> Option<MemberState> {
+        self.entries.get(id.index()).map(|e| e.state)
     }
 
     /// Routable under the believed view: everything but Down. Suspect
-    /// nodes still take traffic (hysteresis); unknown pairs do not.
-    pub fn believed_up(&self, pair: &PairKey) -> bool {
+    /// nodes still take traffic (hysteresis); unknown ids do not.
+    pub fn believed_up(&self, id: PairId) -> bool {
         self.entries
-            .get(pair)
+            .get(id.index())
             .map(|e| e.state != MemberState::Down)
             .unwrap_or(false)
     }
@@ -273,8 +272,8 @@ impl Membership {
     /// Believed cost multiplier for routing: 1.0 normally; during a
     /// warm-up window, `1 + penalty * remaining/warmup_s` (the aged
     /// profile a rejoining node routes with).
-    pub fn cost_multiplier(&self, pair: &PairKey, now_s: f64) -> f64 {
-        match self.entries.get(pair) {
+    pub fn cost_multiplier(&self, id: PairId, now_s: f64) -> f64 {
+        match self.entries.get(id.index()) {
             Some(e)
                 if e.state == MemberState::Warming
                     && now_s < e.warmup_until =>
@@ -288,10 +287,10 @@ impl Membership {
 
     /// Apply one probe result (fires `probe_timeout_s` after the probe
     /// sampled ground truth — the caller schedules that delay).
-    pub fn observe_probe(&mut self, pair: &PairKey, responded: bool, now_s: f64) {
+    pub fn observe_probe(&mut self, id: PairId, responded: bool, now_s: f64) {
         let suspect_after = self.suspect_after;
         let warmup_s = self.warmup_s;
-        let Some(e) = self.entries.get_mut(pair) else {
+        let Some(e) = self.entries.get_mut(id.index()) else {
             return;
         };
         if responded {
@@ -330,18 +329,18 @@ impl Membership {
         }
     }
 
-    /// A dispatch to `pair` found it dead: data-path evidence counts
+    /// A dispatch to `id` found it dead: data-path evidence counts
     /// like a missed probe (passive health checking), so the gateway
     /// stops feeding a crashed node before the next probe cycle.
-    pub fn observe_dispatch_failure(&mut self, pair: &PairKey, now_s: f64) {
-        self.observe_probe(pair, false, now_s);
+    pub fn observe_dispatch_failure(&mut self, id: PairId, now_s: f64) {
+        self.observe_probe(id, false, now_s);
     }
 
     /// Accounting-only hook: the driver records ground-truth flips so
     /// detection (crash → Down) and recovery (rejoin → routable) delays
     /// can be reported. Never read by routing.
-    pub fn ground_truth_changed(&mut self, pair: &PairKey, up: bool, now_s: f64) {
-        if let Some(e) = self.entries.get_mut(pair) {
+    pub fn ground_truth_changed(&mut self, id: PairId, up: bool, now_s: f64) {
+        if let Some(e) = self.entries.get_mut(id.index()) {
             if up {
                 e.rejoined_at = Some(now_s);
             } else {
@@ -354,7 +353,7 @@ impl Membership {
     /// Census of believed states: (up, suspect, down, warming).
     pub fn counts(&self) -> (usize, usize, usize, usize) {
         let mut c = (0, 0, 0, 0);
-        for e in self.entries.values() {
+        for e in &self.entries {
             match e.state {
                 MemberState::Up => c.0 += 1,
                 MemberState::Suspect => c.1 += 1,
@@ -623,10 +622,18 @@ impl ChurnReport {
 
 #[cfg(test)]
 mod tests {
+    use std::sync::Arc;
+
     use super::*;
+    use crate::router::PairKey;
 
     fn pair(i: usize) -> PairKey {
         PairKey::new("m", &format!("d{i}"))
+    }
+
+    /// Table over pairs d0..dn (ids 0..n in that order).
+    fn table(n: usize) -> Arc<PairTable> {
+        PairTable::from_keys((0..n).map(pair).collect())
     }
 
     #[test]
@@ -692,61 +699,63 @@ mod tests {
             warmup_penalty: 0.5,
             ..Default::default()
         };
-        let p = pair(0);
-        let mut m = Membership::new(&[p.clone()], &cfg);
-        assert_eq!(m.state(&p), Some(MemberState::Up));
-        assert!(m.believed_up(&p));
+        let t = table(1);
+        let p = t.id_of(&pair(0)).unwrap();
+        let mut m = Membership::new(&t, &cfg);
+        assert_eq!(m.state(p), Some(MemberState::Up));
+        assert!(m.believed_up(p));
 
-        m.ground_truth_changed(&p, false, 1.0); // crash (accounting only)
-        assert!(m.believed_up(&p), "probes have not noticed yet");
+        m.ground_truth_changed(p, false, 1.0); // crash (accounting only)
+        assert!(m.believed_up(p), "probes have not noticed yet");
 
-        m.observe_probe(&p, false, 1.5);
-        assert_eq!(m.state(&p), Some(MemberState::Suspect));
-        assert!(m.believed_up(&p), "suspect still takes traffic");
+        m.observe_probe(p, false, 1.5);
+        assert_eq!(m.state(p), Some(MemberState::Suspect));
+        assert!(m.believed_up(p), "suspect still takes traffic");
 
-        m.observe_probe(&p, false, 2.0);
-        assert_eq!(m.state(&p), Some(MemberState::Down));
-        assert!(!m.believed_up(&p));
+        m.observe_probe(p, false, 2.0);
+        assert_eq!(m.state(p), Some(MemberState::Down));
+        assert!(!m.believed_up(p));
         assert_eq!(m.detect_stats(), (1.0, 1)); // 2.0 - 1.0
 
-        m.ground_truth_changed(&p, true, 2.5); // rejoin
-        m.observe_probe(&p, true, 3.0);
-        assert_eq!(m.state(&p), Some(MemberState::Warming));
-        assert!(m.believed_up(&p));
+        m.ground_truth_changed(p, true, 2.5); // rejoin
+        m.observe_probe(p, true, 3.0);
+        assert_eq!(m.state(p), Some(MemberState::Warming));
+        assert!(m.believed_up(p));
         assert_eq!(m.recover_stats(), (0.5, 1)); // 3.0 - 2.5
 
         // warm-up multiplier decays linearly to 1.0 at warmup_until=5.0
-        assert!((m.cost_multiplier(&p, 3.0) - 1.5).abs() < 1e-9);
-        assert!((m.cost_multiplier(&p, 4.0) - 1.25).abs() < 1e-9);
-        assert!((m.cost_multiplier(&p, 5.0) - 1.0).abs() < 1e-9);
+        assert!((m.cost_multiplier(p, 3.0) - 1.5).abs() < 1e-9);
+        assert!((m.cost_multiplier(p, 4.0) - 1.25).abs() < 1e-9);
+        assert!((m.cost_multiplier(p, 5.0) - 1.0).abs() < 1e-9);
 
         // still warming before the window closes, up after
-        m.observe_probe(&p, true, 4.0);
-        assert_eq!(m.state(&p), Some(MemberState::Warming));
-        m.observe_probe(&p, true, 5.5);
-        assert_eq!(m.state(&p), Some(MemberState::Up));
+        m.observe_probe(p, true, 4.0);
+        assert_eq!(m.state(p), Some(MemberState::Warming));
+        m.observe_probe(p, true, 5.5);
+        assert_eq!(m.state(p), Some(MemberState::Up));
         assert_eq!(m.counts(), (1, 0, 0, 0));
     }
 
     #[test]
     fn membership_false_alarm_recovers_and_dispatch_failure_counts() {
         let cfg = ChurnConfig { suspect_after: 2, ..Default::default() };
-        let p = pair(0);
-        let mut m = Membership::new(&[p.clone()], &cfg);
+        let t = table(1);
+        let p = t.id_of(&pair(0)).unwrap();
+        let mut m = Membership::new(&t, &cfg);
         // one miss then a response: back to Up, miss counter reset
-        m.observe_probe(&p, false, 1.0);
-        assert_eq!(m.state(&p), Some(MemberState::Suspect));
-        m.observe_probe(&p, true, 1.5);
-        assert_eq!(m.state(&p), Some(MemberState::Up));
+        m.observe_probe(p, false, 1.0);
+        assert_eq!(m.state(p), Some(MemberState::Suspect));
+        m.observe_probe(p, true, 1.5);
+        assert_eq!(m.state(p), Some(MemberState::Up));
         // dispatch failures count like missed probes
-        m.observe_dispatch_failure(&p, 2.0);
-        m.observe_dispatch_failure(&p, 2.1);
-        assert_eq!(m.state(&p), Some(MemberState::Down));
-        // unknown pairs are never routable and never panic
-        let ghost = pair(9);
-        assert!(!m.believed_up(&ghost));
-        m.observe_probe(&ghost, false, 3.0);
-        assert_eq!(m.cost_multiplier(&ghost, 3.0), 1.0);
+        m.observe_dispatch_failure(p, 2.0);
+        m.observe_dispatch_failure(p, 2.1);
+        assert_eq!(m.state(p), Some(MemberState::Down));
+        // ids outside the table are never routable and never panic
+        let ghost = PairId(9);
+        assert!(!m.believed_up(ghost));
+        m.observe_probe(ghost, false, 3.0);
+        assert_eq!(m.cost_multiplier(ghost, 3.0), 1.0);
     }
 
     #[test]
@@ -809,12 +818,15 @@ mod tests {
     #[test]
     fn churn_report_aggregates_memberships() {
         let cfg = ChurnConfig::default();
-        let pairs: Vec<PairKey> = (0..3).map(pair).collect();
-        let mut m1 = Membership::new(&pairs[..2], &cfg);
-        let m2 = Membership::new(&pairs[2..], &cfg);
-        m1.ground_truth_changed(&pairs[0], false, 1.0);
-        m1.observe_probe(&pairs[0], false, 2.0);
-        m1.observe_probe(&pairs[0], false, 3.0);
+        // two shard-local tables, as the fleet builds them
+        let t1 = PairTable::from_keys(vec![pair(0), pair(1)]);
+        let t2 = PairTable::from_keys(vec![pair(2)]);
+        let p0 = t1.id_of(&pair(0)).unwrap();
+        let mut m1 = Membership::new(&t1, &cfg);
+        let m2 = Membership::new(&t2, &cfg);
+        m1.ground_truth_changed(p0, false, 1.0);
+        m1.observe_probe(p0, false, 2.0);
+        m1.observe_probe(p0, false, 3.0);
         let state = ChurnState::new(4, ResiliencePolicy::Drop, 0.1);
         let r = ChurnReport::collect(&state, [&m1, &m2]);
         assert_eq!(r.members, (2, 0, 1, 0));

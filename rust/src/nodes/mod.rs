@@ -6,13 +6,15 @@
 //! small deterministic per-request jitter for realism. The pool is the
 //! deployed testbed (Table 1 pairs).
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::detection::{decode_heatmap, Detection};
 use crate::devices::drift::{DriftConfig, DriftModel};
 use crate::devices::{DeviceSpec, ExecProfile};
 use crate::models::ModelMeta;
-use crate::router::PairKey;
+use crate::router::{PairId, PairKey, PairTable};
 use crate::runtime::Engine;
 use crate::util::rng::Rng;
 
@@ -183,10 +185,22 @@ impl EdgeNode {
 }
 
 /// The deployed pool, indexed by pair.
+///
+/// Binding the pool to a routing table ([`NodePool::bind_table`])
+/// additionally indexes nodes by interned [`PairId`], making every
+/// `_id` accessor an O(1) array hit — the gateway's per-request
+/// admission checks and slot accounting run on that path with zero
+/// string comparisons. The key-based accessors stay available for
+/// drivers and tests that work outside a routing table.
 pub struct NodePool {
     nodes: Vec<EdgeNode>,
     /// Bounded FIFO capacity shared by every node (queued + in service).
     queue_capacity: usize,
+    /// `PairId -> node index` under the bound table (`None` = no node
+    /// deployed for that pair); empty until [`NodePool::bind_table`].
+    node_of: Vec<Option<u32>>,
+    /// The routing table this pool is bound to, if any.
+    table: Option<Arc<PairTable>>,
 }
 
 impl NodePool {
@@ -216,6 +230,8 @@ impl NodePool {
         Ok(Self {
             nodes,
             queue_capacity: DEFAULT_QUEUE_CAPACITY,
+            node_of: Vec::new(),
+            table: None,
         })
     }
 
@@ -228,6 +244,107 @@ impl NodePool {
         Self {
             nodes,
             queue_capacity: DEFAULT_QUEUE_CAPACITY,
+            node_of: Vec::new(),
+            table: None,
+        }
+    }
+
+    /// Bind this pool to a routing table, indexing nodes by interned
+    /// [`PairId`] so the `_id` accessors are O(1). Pairs without a
+    /// deployed node stay unroutable (`None`); when several nodes share
+    /// a pair, the first one wins — matching the key-based linear scan.
+    /// The gateway binds its pool to its store's table at construction.
+    pub fn bind_table(&mut self, table: Arc<PairTable>) {
+        let mut node_of = vec![None; table.len()];
+        for (i, n) in self.nodes.iter().enumerate() {
+            if let Some(id) = table.id_of(&n.pair) {
+                let slot = &mut node_of[id.index()];
+                if slot.is_none() {
+                    *slot = Some(i as u32);
+                }
+            }
+        }
+        self.node_of = node_of;
+        self.table = Some(table);
+    }
+
+    /// The routing table this pool is bound to, if any.
+    pub fn bound_table(&self) -> Option<&Arc<PairTable>> {
+        self.table.as_ref()
+    }
+
+    #[inline]
+    fn node_index(&self, id: PairId) -> Option<usize> {
+        self.node_of
+            .get(id.index())
+            .copied()
+            .flatten()
+            .map(|i| i as usize)
+    }
+
+    /// O(1) node access by interned id (None when the pair has no
+    /// deployed node or the pool is unbound).
+    pub fn get_id(&mut self, id: PairId) -> Option<&mut EdgeNode> {
+        let i = self.node_index(id)?;
+        Some(&mut self.nodes[i])
+    }
+
+    /// [`NodePool::is_available`] by interned id — O(1).
+    pub fn is_available_id(&self, id: PairId) -> bool {
+        self.node_index(id)
+            .map(|i| self.nodes[i].admits(self.queue_capacity))
+            .unwrap_or(false)
+    }
+
+    /// [`NodePool::has_slot`] by interned id — O(1).
+    pub fn has_slot_id(&self, id: PairId) -> bool {
+        self.node_index(id)
+            .map(|i| self.nodes[i].has_slot(self.queue_capacity))
+            .unwrap_or(false)
+    }
+
+    /// [`NodePool::is_healthy`] by interned id — O(1).
+    pub fn is_healthy_id(&self, id: PairId) -> bool {
+        self.node_index(id)
+            .map(|i| self.nodes[i].healthy)
+            .unwrap_or(false)
+    }
+
+    /// [`NodePool::queue_depth`] by interned id — O(1).
+    pub fn queue_depth_id(&self, id: PairId) -> usize {
+        self.node_index(id)
+            .map(|i| self.nodes[i].in_flight)
+            .unwrap_or(0)
+    }
+
+    /// [`NodePool::acquire`] by interned id — O(1).
+    pub fn acquire_id(&mut self, id: PairId) -> bool {
+        let cap = self.queue_capacity;
+        match self.node_index(id) {
+            Some(i) if self.nodes[i].has_slot(cap) => {
+                self.nodes[i].in_flight += 1;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// [`NodePool::release`] by interned id — O(1).
+    pub fn release_id(&mut self, id: PairId) {
+        if let Some(i) = self.node_index(id) {
+            let n = &mut self.nodes[i];
+            n.in_flight = n.in_flight.saturating_sub(1);
+        }
+    }
+
+    /// [`NodePool::set_health`] by interned id — O(1).
+    pub fn set_health_id(&mut self, id: PairId, healthy: bool) -> bool {
+        match self.node_index(id) {
+            Some(i) => {
+                self.nodes[i].healthy = healthy;
+                true
+            }
+            None => false,
         }
     }
 
@@ -495,6 +612,46 @@ mod tests {
         assert_eq!(pool.total_in_flight(), 3);
         pool.release(&a);
         assert_eq!(pool.total_in_flight(), 2);
+    }
+
+    #[test]
+    fn bound_pool_id_accessors_mirror_key_accessors() {
+        let e = engine();
+        let fleet = devices::fleet();
+        let pairs = vec![
+            PairKey::new("ssd_v1", "jetson_orin_nano"),
+            PairKey::new("yolov8n", "pi5_aihat"),
+        ];
+        let mut pool = NodePool::deploy(&e, &pairs, &fleet, 2).unwrap();
+        // unbound pools answer id queries defensively
+        assert!(!pool.is_available_id(PairId(0)));
+        assert!(!pool.acquire_id(PairId(0)));
+        pool.release_id(PairId(0)); // no-op, no panic
+
+        let table = PairTable::from_keys(pairs.clone());
+        pool.bind_table(table.clone());
+        let a = table.id_of(&pairs[0]).unwrap();
+        let b = table.id_of(&pairs[1]).unwrap();
+        pool.set_queue_capacity(2);
+        assert!(pool.is_available_id(a) && pool.is_available_id(b));
+        assert!(pool.is_healthy_id(a));
+        assert!(pool.acquire_id(a));
+        assert_eq!(pool.queue_depth_id(a), 1);
+        assert_eq!(pool.queue_depth(&pairs[0]), 1, "same node state");
+        assert!(pool.acquire_id(a));
+        assert!(!pool.acquire_id(a), "capacity 2 exhausted");
+        assert!(pool.has_slot_id(b));
+        pool.release_id(a);
+        assert!(pool.has_slot_id(a));
+        // health flips are visible through both access paths
+        assert!(pool.set_health_id(b, false));
+        assert!(!pool.is_available_id(b));
+        assert!(!pool.is_healthy(&pairs[1]));
+        assert!(pool.get_id(b).is_some());
+        // ids outside the table are never routable
+        assert!(!pool.is_available_id(PairId(99)));
+        assert!(!pool.set_health_id(PairId(99), true));
+        pool.release_id(a);
     }
 
     #[test]

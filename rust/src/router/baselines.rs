@@ -4,7 +4,8 @@
 //! `estimators`.
 
 use super::greedy::GreedyRouter;
-use super::store::{PairKey, ProfileStore};
+use super::store::{PairId, PairKey, ProfileStore};
+use super::view::RoutingView;
 use crate::util::rng::Rng;
 
 /// All routing strategies evaluated in the paper.
@@ -83,78 +84,89 @@ impl Policy {
         self.kind
     }
 
-    /// Route one request. `group` is the estimated object-count group
-    /// (ignored by the group-agnostic baselines).
-    pub fn route(&mut self, store: &ProfileStore, group: usize) -> Option<PairKey> {
-        let pairs = store.pairs();
-        if pairs.is_empty() {
+    /// Route one request over a borrowed view — the zero-allocation
+    /// hot path. `group` is the estimated object-count group (ignored
+    /// by the group-agnostic baselines). Mean-metric baselines hit the
+    /// store's precomputed per-pair stats (warm-up overlays recompute
+    /// only the aged pairs); tie-breaks compare interned ids, which
+    /// equals the legacy pair-key order by construction.
+    pub fn route_view(
+        &mut self,
+        view: &RoutingView<'_>,
+        group: usize,
+    ) -> Option<PairId> {
+        let n = view.live_pairs();
+        if n == 0 {
             return None;
         }
         match self.kind {
-            PolicyKind::Greedy => self.greedy.route(store, group),
+            PolicyKind::Greedy => self.greedy.route_view(view, group),
             PolicyKind::RoundRobin => {
-                let p = pairs[self.rr_next % pairs.len()].clone();
+                let k = self.rr_next % n;
                 self.rr_next += 1;
-                Some(p)
+                view.live_ids().nth(k)
             }
             PolicyKind::Random => {
-                let i = self.rng.below(pairs.len() as u64) as usize;
-                Some(pairs[i].clone())
+                let k = self.rng.below(n as u64) as usize;
+                view.live_ids().nth(k)
             }
-            PolicyKind::LowestEnergy => min_by_metric(&pairs, |p| {
-                mean_metric(store, p, |r| r.energy_mwh)
-            }),
-            PolicyKind::LowestInference => min_by_metric(&pairs, |p| {
-                mean_metric(store, p, |r| r.latency_s)
-            }),
+            PolicyKind::LowestEnergy => {
+                min_live_by(view, |v, id| v.mean_energy_mwh(id))
+            }
+            PolicyKind::LowestInference => {
+                min_live_by(view, |v, id| v.mean_latency_s(id))
+            }
             PolicyKind::HighestMap => {
-                min_by_metric(&pairs, |p| -store.overall_map(p))
+                min_live_by(view, |v, id| -v.overall_map(id))
             }
-            PolicyKind::HighestMapPerGroup => store
-                .group_rows(group)
-                .into_iter()
-                // total order, mAP ties toward the lower pair key —
+            PolicyKind::HighestMapPerGroup => view
+                .group_iter(group)
+                // total order, mAP ties toward the lower pair id —
                 // NaN-safe and independent of row order
-                .max_by(|a, b| {
-                    a.map
-                        .total_cmp(&b.map)
-                        .then_with(|| b.pair.cmp(&a.pair))
+                .max_by(|(ia, ra, _), (ib, rb, _)| {
+                    ra.map
+                        .total_cmp(&rb.map)
+                        .then_with(|| ib.cmp(ia))
                 })
-                .map(|r| r.pair.clone()),
+                .map(|(id, _, _)| id),
         }
     }
-}
 
-fn mean_metric(
-    store: &ProfileStore,
-    pair: &PairKey,
-    f: impl Fn(&super::store::PairProfile) -> f64,
-) -> f64 {
-    let vals: Vec<f64> = store
-        .rows()
-        .iter()
-        .filter(|r| &r.pair == pair)
-        .map(f)
-        .collect();
-    if vals.is_empty() {
-        f64::INFINITY
-    } else {
-        vals.iter().sum::<f64>() / vals.len() as f64
+    /// Route one request directly over a store (plain view).
+    pub fn route(
+        &mut self,
+        store: &ProfileStore,
+        group: usize,
+    ) -> Option<PairKey> {
+        let view = RoutingView::new(store);
+        self.route_view(&view, group)
+            .map(|id| store.key_of(id).clone())
     }
 }
 
-fn min_by_metric(
-    pairs: &[PairKey],
-    metric: impl Fn(&PairKey) -> f64,
-) -> Option<PairKey> {
-    // total order with a pair-key tiebreak: NaN cannot panic the
-    // comparison, and metric ties resolve deterministically
-    pairs
-        .iter()
-        .min_by(|a, b| {
-            metric(a).total_cmp(&metric(b)).then_with(|| a.cmp(b))
-        })
-        .cloned()
+fn min_live_by(
+    view: &RoutingView<'_>,
+    metric: impl Fn(&RoutingView<'_>, PairId) -> f64,
+) -> Option<PairId> {
+    // single forward pass: each pair's metric is computed exactly once
+    // (Iterator::min_by would recompute the running minimum's metric
+    // per comparison — O(pairs × pair-rows) when that pair is
+    // warm-up-aged). The comparison is total (NaN cannot panic it)
+    // and strict, so equal metrics keep the earliest id — identical to
+    // the legacy `metric.total_cmp(..).then(pair.cmp(..))` winner,
+    // because ids ascend and id order == pair-key order.
+    let mut best: Option<(f64, PairId)> = None;
+    for id in view.live_ids() {
+        let m = metric(view, id);
+        let better = match &best {
+            None => true,
+            Some((bm, _)) => m.total_cmp(bm) == std::cmp::Ordering::Less,
+        };
+        if better {
+            best = Some((m, id));
+        }
+    }
+    best.map(|(_, id)| id)
 }
 
 #[cfg(test)]

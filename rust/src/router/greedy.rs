@@ -9,7 +9,8 @@
 //! independent profiled values; the property tests below check the
 //! theorem's claim against brute force.
 
-use super::store::{PairKey, ProfileStore};
+use super::store::{PairId, PairKey, ProfileStore};
+use super::view::RoutingView;
 
 #[derive(Clone, Debug)]
 pub struct GreedyRouter {
@@ -22,31 +23,48 @@ impl GreedyRouter {
         Self { delta_map }
     }
 
-    /// Route one request. Returns the chosen pair, or None if the group
-    /// has no profiled rows.
-    pub fn route(&self, store: &ProfileStore, group: usize) -> Option<PairKey> {
-        let rows = store.group_rows(group);
-        if rows.is_empty() {
+    /// Route one request over a borrowed view — the zero-allocation
+    /// hot path. Returns the chosen pair id, or None if the group has
+    /// no (non-excluded) profiled rows.
+    pub fn route_view(
+        &self,
+        view: &RoutingView<'_>,
+        group: usize,
+    ) -> Option<PairId> {
+        // lines 10-11: max achievable mAP and the feasibility threshold
+        // (warm-up aging never touches mAP, so the overlay is ignored)
+        let mut map_max = f64::NEG_INFINITY;
+        let mut any = false;
+        for (_, r, _) in view.group_iter(group) {
+            map_max = map_max.max(r.map);
+            any = true;
+        }
+        if !any {
             return None;
         }
-        // lines 10-11: max achievable mAP and the feasibility threshold
-        let map_max = rows
-            .iter()
-            .map(|r| r.map)
-            .fold(f64::NEG_INFINITY, f64::max);
         let map_min = map_max - self.delta_map;
-        // lines 12-14: filter, then pick the lowest-energy row. The
-        // comparison is total (NaN-safe — non-finite rows are also
-        // rejected at ProfileStore insertion) and energy ties break by
-        // pair key, so the choice is independent of row order.
-        rows.into_iter()
-            .filter(|r| r.map >= map_min)
-            .min_by(|a, b| {
-                a.energy_mwh
-                    .total_cmp(&b.energy_mwh)
-                    .then_with(|| a.pair.cmp(&b.pair))
+        // lines 12-14: filter, then pick the lowest effective-energy
+        // row (profiled energy times the warm-up multiplier — the same
+        // arithmetic the old aged store copy materialized). The
+        // comparison is total (NaN-safe — non-finite rows are rejected
+        // at ProfileStore insertion) and energy ties break by pair id,
+        // which equals the legacy pair-key tie-break because ids are
+        // interned in sorted key order.
+        view.group_iter(group)
+            .filter(|(_, r, _)| r.map >= map_min)
+            .min_by(|(ia, ra, ma), (ib, rb, mb)| {
+                (ra.energy_mwh * ma)
+                    .total_cmp(&(rb.energy_mwh * mb))
+                    .then_with(|| ia.cmp(ib))
             })
-            .map(|r| r.pair.clone())
+            .map(|(id, _, _)| id)
+    }
+
+    /// Route one request directly over a store (plain view). Returns
+    /// the chosen pair, or None if the group has no profiled rows.
+    pub fn route(&self, store: &ProfileStore, group: usize) -> Option<PairKey> {
+        self.route_view(&RoutingView::new(store), group)
+            .map(|id| store.key_of(id).clone())
     }
 }
 

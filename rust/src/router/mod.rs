@@ -6,10 +6,12 @@ pub mod baselines;
 pub mod greedy;
 pub mod group;
 pub mod store;
+pub mod view;
 pub mod weighted;
 
 pub use baselines::{Policy, PolicyKind};
 pub use greedy::GreedyRouter;
 pub use group::GroupRules;
-pub use store::{PairKey, PairProfile, ProfileStore};
+pub use store::{PairId, PairKey, PairProfile, PairStats, PairTable, ProfileStore};
+pub use view::RoutingView;
 pub use weighted::{pareto_front, WeightedRouter, Weights};

@@ -1,9 +1,33 @@
 //! Profiling data store: the offline-measured
 //! (model, device, group) → (mAP, latency, energy) table Algorithm 1
 //! consumes, with JSON persistence and group-indexed lookups.
+//!
+//! The store is the routing hot path's data layer, so it is built for
+//! zero-allocation reads (DESIGN.md §10):
+//!
+//! * Pair identities are interned into copyable [`PairId`]s through a
+//!   store-owned [`PairTable`]. Ids are assigned in sorted [`PairKey`]
+//!   order, so comparing ids and comparing keys give the same order —
+//!   every tie-break in the routing policies is bit-identical whether
+//!   it runs on strings or on ids.
+//! * Rows are stored dense, stably sorted by group, with precomputed
+//!   group offsets: [`ProfileStore::group_rows`] returns a borrowed
+//!   slice (no `Vec<&_>` per call), and within a group rows keep their
+//!   original insertion order, so iteration order — and therefore
+//!   every order-dependent tie-break and float reduction — matches the
+//!   legacy linear-scan implementation exactly.
+//! * Per-pair aggregates (mean energy/latency, overall mAP) are
+//!   precomputed at construction by summing in original insertion
+//!   order, bit-compatible with the full-table scans they replace.
+//! * `(pair, group)` lookups resolve through a dense index in O(1).
+//!
+//! Copying a store is intentionally loud: [`ProfileStore::clone_count`]
+//! exposes a thread-local counter so tests can assert that the
+//! per-request routing path performs zero store copies.
 
-use std::collections::BTreeMap;
+use std::cell::Cell;
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
@@ -31,6 +55,70 @@ impl std::fmt::Display for PairKey {
     }
 }
 
+/// Interned pair identity: a copyable handle into a [`PairTable`].
+///
+/// Ids are assigned in sorted [`PairKey`] order, so `PairId` ordering
+/// equals `PairKey` ordering within one table — routing tie-breaks may
+/// compare ids instead of strings without changing any decision.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct PairId(pub u32);
+
+impl PairId {
+    #[inline]
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// A store-owned symbol table interning [`PairKey`]s into [`PairId`]s.
+/// Shared (via `Arc`) with the node pool and membership layers so one
+/// id space spans the whole gateway.
+#[derive(Debug, Default, PartialEq, Eq)]
+pub struct PairTable {
+    /// Sorted, distinct keys; `PairId(i)` names `keys[i]`.
+    keys: Vec<PairKey>,
+}
+
+impl PairTable {
+    /// Build a table from arbitrary keys (sorted + deduplicated).
+    pub fn from_keys(mut keys: Vec<PairKey>) -> Arc<Self> {
+        keys.sort();
+        keys.dedup();
+        Arc::new(Self { keys })
+    }
+
+    pub fn len(&self) -> usize {
+        self.keys.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+
+    /// Resolve a key to its id (None if the key is not interned).
+    pub fn id_of(&self, key: &PairKey) -> Option<PairId> {
+        self.keys
+            .binary_search(key)
+            .ok()
+            .map(|i| PairId(i as u32))
+    }
+
+    /// The key behind an id. Panics on an id from a different table.
+    pub fn key_of(&self, id: PairId) -> &PairKey {
+        &self.keys[id.index()]
+    }
+
+    /// All ids, ascending (== sorted key order).
+    pub fn ids(&self) -> impl Iterator<Item = PairId> {
+        (0..self.keys.len() as u32).map(PairId)
+    }
+
+    /// All keys, sorted (index i holds `PairId(i)`'s key).
+    pub fn keys(&self) -> &[PairKey] {
+        &self.keys
+    }
+}
+
 /// One profiled row (paper §3.1: mAP_i, t_i, e_i, g_i).
 #[derive(Clone, Debug)]
 pub struct PairProfile {
@@ -42,11 +130,72 @@ pub struct PairProfile {
     pub energy_mwh: f64,
 }
 
-/// The full profiling table.
-#[derive(Clone, Debug, Default)]
+/// Precomputed per-pair aggregates (means over the pair's rows, summed
+/// in original insertion order so they equal the legacy full-table
+/// scans bit for bit).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PairStats {
+    pub mean_energy_mwh: f64,
+    pub mean_latency_s: f64,
+    pub overall_map: f64,
+}
+
+thread_local! {
+    /// Per-thread count of ProfileStore deep copies — the hot-path
+    /// regression tests assert this stays flat across routed requests.
+    static STORE_CLONES: Cell<usize> = const { Cell::new(0) };
+}
+
+/// Sentinel for "no row" in the dense (pair, group) index.
+const NO_ROW: u32 = u32::MAX;
+
+/// The full profiling table (indexed; see the module docs).
+#[derive(Debug)]
 pub struct ProfileStore {
+    /// Rows stably sorted by group; within a group, original insertion
+    /// order (so per-group iteration matches the legacy index exactly).
     rows: Vec<PairProfile>,
-    by_group: BTreeMap<usize, Vec<usize>>,
+    /// Interned id of each row, aligned with `rows`.
+    row_ids: Vec<PairId>,
+    /// Sorted distinct group labels.
+    groups: Vec<usize>,
+    /// `groups[i]`'s rows are `rows[group_starts[i]..group_starts[i+1]]`.
+    group_starts: Vec<usize>,
+    /// The pair interner (shared with pool/membership via `Arc`).
+    table: Arc<PairTable>,
+    /// Per-pair aggregates, indexed by `PairId`.
+    stats: Vec<PairStats>,
+    /// Per-pair row indices (into `rows`) in original insertion order.
+    pair_rows: Vec<Vec<u32>>,
+    /// Dense `(pair, group-position) -> row` index (`NO_ROW` = absent;
+    /// duplicates keep the first-inserted row, like the legacy scan).
+    pair_group_row: Vec<u32>,
+    /// Row indices in original insertion order (JSON dumps and
+    /// `restrict` reproduce the legacy row order through this).
+    by_insertion: Vec<u32>,
+}
+
+impl Default for ProfileStore {
+    fn default() -> Self {
+        Self::new(Vec::new())
+    }
+}
+
+impl Clone for ProfileStore {
+    fn clone(&self) -> Self {
+        STORE_CLONES.with(|c| c.set(c.get() + 1));
+        Self {
+            rows: self.rows.clone(),
+            row_ids: self.row_ids.clone(),
+            groups: self.groups.clone(),
+            group_starts: self.group_starts.clone(),
+            table: Arc::clone(&self.table),
+            stats: self.stats.clone(),
+            pair_rows: self.pair_rows.clone(),
+            pair_group_row: self.pair_group_row.clone(),
+            by_insertion: self.by_insertion.clone(),
+        }
+    }
 }
 
 impl ProfileStore {
@@ -56,7 +205,7 @@ impl ProfileStore {
     /// float comparison (Algorithm 1, baselines, testbed selection)
     /// unreliable.
     pub fn new(rows: Vec<PairProfile>) -> Self {
-        let rows = rows
+        let pending: Vec<PairProfile> = rows
             .into_iter()
             .filter(|r| {
                 r.map.is_finite()
@@ -64,23 +213,114 @@ impl ProfileStore {
                     && r.energy_mwh.is_finite()
             })
             .collect();
-        let mut s = Self {
-            rows,
-            by_group: BTreeMap::new(),
-        };
-        s.reindex();
-        s
-    }
+        let table = PairTable::from_keys(
+            pending.iter().map(|r| r.pair.clone()).collect(),
+        );
+        let n_pairs = table.len();
 
-    fn reindex(&mut self) {
-        self.by_group.clear();
-        for (i, r) in self.rows.iter().enumerate() {
-            self.by_group.entry(r.group).or_default().push(i);
+        // ids per input row, in insertion order
+        let ids: Vec<PairId> = pending
+            .iter()
+            .map(|r| table.id_of(&r.pair).expect("row pair interned"))
+            .collect();
+
+        // per-pair aggregates, accumulated in insertion order —
+        // bit-compatible with the legacy `rows().filter(pair)` scans
+        let mut e_sum = vec![0.0f64; n_pairs];
+        let mut l_sum = vec![0.0f64; n_pairs];
+        let mut m_sum = vec![0.0f64; n_pairs];
+        let mut counts = vec![0usize; n_pairs];
+        for (r, id) in pending.iter().zip(&ids) {
+            let i = id.index();
+            e_sum[i] += r.energy_mwh;
+            l_sum[i] += r.latency_s;
+            m_sum[i] += r.map;
+            counts[i] += 1;
+        }
+        let stats: Vec<PairStats> = (0..n_pairs)
+            .map(|i| {
+                let n = counts[i].max(1) as f64;
+                PairStats {
+                    mean_energy_mwh: e_sum[i] / n,
+                    mean_latency_s: l_sum[i] / n,
+                    overall_map: m_sum[i] / n,
+                }
+            })
+            .collect();
+
+        // stable sort by group: within a group, insertion order survives
+        let mut order: Vec<u32> = (0..pending.len() as u32).collect();
+        order.sort_by_key(|&i| pending[i as usize].group);
+        let mut slots: Vec<Option<PairProfile>> =
+            pending.into_iter().map(Some).collect();
+        let mut rows = Vec::with_capacity(slots.len());
+        let mut row_ids = Vec::with_capacity(slots.len());
+        let mut by_insertion = vec![0u32; slots.len()];
+        for (si, &oi) in order.iter().enumerate() {
+            rows.push(slots[oi as usize].take().expect("unique order"));
+            row_ids.push(ids[oi as usize]);
+            by_insertion[oi as usize] = si as u32;
+        }
+
+        // group offsets over the sorted rows
+        let mut groups: Vec<usize> = Vec::new();
+        let mut group_starts: Vec<usize> = Vec::new();
+        for (si, r) in rows.iter().enumerate() {
+            if groups.last() != Some(&r.group) {
+                groups.push(r.group);
+                group_starts.push(si);
+            }
+        }
+        group_starts.push(rows.len());
+
+        // per-pair row lists in insertion order
+        let mut pair_rows: Vec<Vec<u32>> = vec![Vec::new(); n_pairs];
+        for &si in &by_insertion {
+            pair_rows[row_ids[si as usize].index()].push(si);
+        }
+
+        // dense (pair, group) -> first-inserted row
+        let n_groups = groups.len();
+        let mut pair_group_row = vec![NO_ROW; n_pairs * n_groups];
+        for (si, r) in rows.iter().enumerate() {
+            let gi = groups
+                .binary_search(&r.group)
+                .expect("group collected above");
+            let cell =
+                &mut pair_group_row[row_ids[si].index() * n_groups + gi];
+            if *cell == NO_ROW {
+                *cell = si as u32;
+            }
+        }
+
+        Self {
+            rows,
+            row_ids,
+            groups,
+            group_starts,
+            table,
+            stats,
+            pair_rows,
+            pair_group_row,
+            by_insertion,
         }
     }
 
+    /// Deep copies of `ProfileStore` performed by this thread so far.
+    /// The zero-allocation routing tests snapshot this around the hot
+    /// path to prove no per-request store copy happens.
+    pub fn clone_count() -> usize {
+        STORE_CLONES.with(|c| c.get())
+    }
+
+    /// All rows, sorted by group (within a group: insertion order).
     pub fn rows(&self) -> &[PairProfile] {
         &self.rows
+    }
+
+    /// Interned id of `rows()[i]`, aligned with [`ProfileStore::rows`].
+    pub fn row_ids(&self) -> &[PairId] {
+        &self.row_ids
     }
 
     pub fn is_empty(&self) -> bool {
@@ -88,83 +328,189 @@ impl ProfileStore {
     }
 
     pub fn groups(&self) -> Vec<usize> {
-        self.by_group.keys().copied().collect()
+        self.groups.clone()
     }
 
-    /// All rows for one group (Algorithm 1 line 8).
-    pub fn group_rows(&self, group: usize) -> Vec<&PairProfile> {
-        self.by_group
-            .get(&group)
-            .map(|idxs| idxs.iter().map(|&i| &self.rows[i]).collect())
-            .unwrap_or_default()
+    /// The pair interner.
+    pub fn table(&self) -> &PairTable {
+        &self.table
     }
 
-    /// Unique pairs present in the store.
+    /// A shareable handle to the interner (node pools bind to it so
+    /// gateway-side lookups are O(1) id hits).
+    pub fn table_arc(&self) -> Arc<PairTable> {
+        Arc::clone(&self.table)
+    }
+
+    /// Distinct pairs in the store (== interned ids).
+    pub fn n_pairs(&self) -> usize {
+        self.table.len()
+    }
+
+    /// All pair ids, ascending (== sorted key order).
+    pub fn pair_ids(&self) -> impl Iterator<Item = PairId> {
+        self.table.ids()
+    }
+
+    pub fn id_of(&self, pair: &PairKey) -> Option<PairId> {
+        self.table.id_of(pair)
+    }
+
+    pub fn key_of(&self, id: PairId) -> &PairKey {
+        self.table.key_of(id)
+    }
+
+    fn group_index(&self, group: usize) -> Option<usize> {
+        self.groups.binary_search(&group).ok()
+    }
+
+    /// All rows for one group (Algorithm 1 line 8), as a borrowed
+    /// slice of the dense storage — zero allocation per call.
+    pub fn group_rows(&self, group: usize) -> &[PairProfile] {
+        match self.group_index(group) {
+            Some(gi) => {
+                &self.rows[self.group_starts[gi]..self.group_starts[gi + 1]]
+            }
+            None => &[],
+        }
+    }
+
+    /// One group's rows plus their interned ids (aligned slices).
+    pub fn group_rows_ids(
+        &self,
+        group: usize,
+    ) -> (&[PairProfile], &[PairId]) {
+        match self.group_index(group) {
+            Some(gi) => {
+                let span =
+                    self.group_starts[gi]..self.group_starts[gi + 1];
+                (&self.rows[span.clone()], &self.row_ids[span])
+            }
+            None => (&[], &[]),
+        }
+    }
+
+    /// Unique pairs present in the store (sorted).
     pub fn pairs(&self) -> Vec<PairKey> {
-        let mut v: Vec<PairKey> =
-            self.rows.iter().map(|r| r.pair.clone()).collect();
-        v.sort();
-        v.dedup();
-        v
+        self.table.keys().to_vec()
     }
 
-    /// Row for a specific (pair, group).
+    /// Row for a specific (pair, group): an O(1) index hit. Duplicate
+    /// (pair, group) rows resolve to the first-inserted one, like the
+    /// linear scan this replaces.
     pub fn lookup(&self, pair: &PairKey, group: usize) -> Option<&PairProfile> {
-        self.group_rows(group)
-            .into_iter()
-            .find(|r| &r.pair == pair)
+        self.lookup_id(self.id_of(pair)?, group)
+    }
+
+    /// [`ProfileStore::lookup`] by interned id.
+    pub fn lookup_id(&self, id: PairId, group: usize) -> Option<&PairProfile> {
+        let gi = self.group_index(group)?;
+        let cell = *self
+            .pair_group_row
+            .get(id.index() * self.groups.len() + gi)?;
+        if cell == NO_ROW {
+            None
+        } else {
+            Some(&self.rows[cell as usize])
+        }
+    }
+
+    /// Precomputed per-pair aggregates.
+    pub fn stats_of(&self, id: PairId) -> PairStats {
+        self.stats[id.index()]
+    }
+
+    /// Row indices (into [`ProfileStore::rows`]) of one pair, in
+    /// original insertion order — the order the legacy full-table
+    /// scans visited them in.
+    pub fn pair_row_indices(&self, id: PairId) -> &[u32] {
+        &self.pair_rows[id.index()]
     }
 
     /// Mean mAP of a pair across groups (used by the HM baseline).
     pub fn overall_map(&self, pair: &PairKey) -> f64 {
-        let vals: Vec<f64> = self
-            .rows
-            .iter()
-            .filter(|r| &r.pair == pair)
-            .map(|r| r.map)
-            .collect();
-        if vals.is_empty() {
-            0.0
-        } else {
-            vals.iter().sum::<f64>() / vals.len() as f64
+        match self.id_of(pair) {
+            Some(id) => self.stats[id.index()].overall_map,
+            None => 0.0,
         }
     }
 
-    /// Scale one pair's cost columns in place (mAP untouched). The
-    /// lifecycle warm-up path ages a rejoining node's rows this way on
-    /// a per-request routing view: the node routes as if slower and
-    /// hungrier until its warm-up window closes. Group indexing is
-    /// unaffected (row identities do not change).
+    /// Scale one pair's cost columns in place (mAP untouched), using
+    /// the pair index instead of a full-table scan. Group indexing is
+    /// unaffected (row identities do not change); the pair's
+    /// precomputed means are refreshed.
     pub fn scale_pair(
         &mut self,
         pair: &PairKey,
         latency_mult: f64,
         energy_mult: f64,
     ) {
-        for r in self.rows.iter_mut().filter(|r| &r.pair == pair) {
+        let Some(id) = self.id_of(pair) else {
+            return;
+        };
+        // move the index list out while mutating rows (no allocation)
+        let idxs = std::mem::take(&mut self.pair_rows[id.index()]);
+        for &ri in &idxs {
+            let r = &mut self.rows[ri as usize];
             r.latency_s *= latency_mult;
             r.energy_mwh *= energy_mult;
         }
+        self.pair_rows[id.index()] = idxs;
+        self.recompute_stats(id);
+    }
+
+    /// Refresh one pair's means after a row mutation (insertion-order
+    /// sums, bit-compatible with the legacy scans).
+    fn recompute_stats(&mut self, id: PairId) {
+        let idxs = &self.pair_rows[id.index()];
+        let mut e = 0.0;
+        let mut l = 0.0;
+        let mut m = 0.0;
+        for &ri in idxs {
+            let r = &self.rows[ri as usize];
+            e += r.energy_mwh;
+            l += r.latency_s;
+            m += r.map;
+        }
+        let n = idxs.len().max(1) as f64;
+        self.stats[id.index()] = PairStats {
+            mean_energy_mwh: e / n,
+            mean_latency_s: l / n,
+            overall_map: m / n,
+        };
     }
 
     /// Restrict the store to a subset of pairs (the deployed testbed).
+    /// Set-based: O(subset · log pairs + rows) instead of the old
+    /// O(rows × subset) `contains` scan. Rows are emitted in original
+    /// insertion order, so the result is identical to the legacy
+    /// filter.
     pub fn restrict(&self, pairs: &[PairKey]) -> ProfileStore {
+        let mut keep = vec![false; self.table.len()];
+        for p in pairs {
+            if let Some(id) = self.id_of(p) {
+                keep[id.index()] = true;
+            }
+        }
         ProfileStore::new(
-            self.rows
+            self.by_insertion
                 .iter()
-                .filter(|r| pairs.contains(&r.pair))
-                .cloned()
+                .filter(|&&si| keep[self.row_ids[si as usize].index()])
+                .map(|&si| self.rows[si as usize].clone())
                 .collect(),
         )
     }
 
     // ---- persistence ----------------------------------------------------
 
+    /// Serialize in original insertion order (stable across the
+    /// indexed-storage refactor: saved files keep their legacy layout).
     pub fn to_json(&self) -> Json {
         Json::Arr(
-            self.rows
+            self.by_insertion
                 .iter()
-                .map(|r| {
+                .map(|&si| {
+                    let r = &self.rows[si as usize];
                     Json::obj(vec![
                         ("model", Json::str(&r.pair.model)),
                         ("device", Json::str(&r.pair.device)),
@@ -258,6 +604,77 @@ mod tests {
     }
 
     #[test]
+    fn interned_ids_follow_sorted_key_order() {
+        let s = test_store();
+        // sorted keys: big@dev_a < big@dev_b < small@dev_a
+        let a = PairKey::new("big", "dev_a");
+        let b = PairKey::new("big", "dev_b");
+        let c = PairKey::new("small", "dev_a");
+        assert_eq!(s.id_of(&a), Some(PairId(0)));
+        assert_eq!(s.id_of(&b), Some(PairId(1)));
+        assert_eq!(s.id_of(&c), Some(PairId(2)));
+        assert_eq!(s.key_of(PairId(1)), &b);
+        assert_eq!(s.id_of(&PairKey::new("ghost", "d")), None);
+        // id order == key order
+        let keys: Vec<&PairKey> =
+            s.pair_ids().map(|id| s.key_of(id)).collect();
+        let mut sorted = keys.clone();
+        sorted.sort();
+        assert_eq!(keys, sorted);
+        // row_ids align with rows
+        for (r, id) in s.rows().iter().zip(s.row_ids()) {
+            assert_eq!(s.key_of(*id), &r.pair);
+        }
+    }
+
+    #[test]
+    fn group_rows_are_dense_slices_in_insertion_order() {
+        // rows inserted with DESCENDING groups per pair: the stable
+        // group sort must still preserve within-group insertion order
+        let row = |m: &str, g: usize, e: f64| PairProfile {
+            pair: PairKey::new(m, "d"),
+            group: g,
+            map: 50.0,
+            latency_s: 0.01,
+            energy_mwh: e,
+        };
+        let s = ProfileStore::new(vec![
+            row("x", 1, 1.0),
+            row("y", 0, 2.0),
+            row("x", 0, 3.0),
+            row("y", 1, 4.0),
+        ]);
+        let g0: Vec<f64> =
+            s.group_rows(0).iter().map(|r| r.energy_mwh).collect();
+        assert_eq!(g0, vec![2.0, 3.0], "insertion order within group");
+        let g1: Vec<f64> =
+            s.group_rows(1).iter().map(|r| r.energy_mwh).collect();
+        assert_eq!(g1, vec![1.0, 4.0]);
+        // the (pair, group) index resolves every row
+        assert_eq!(s.lookup(&PairKey::new("x", "d"), 0).unwrap().energy_mwh, 3.0);
+        assert_eq!(s.lookup(&PairKey::new("y", "d"), 1).unwrap().energy_mwh, 4.0);
+        assert!(s.lookup(&PairKey::new("x", "d"), 9).is_none());
+    }
+
+    #[test]
+    fn duplicate_pair_group_rows_resolve_to_first_inserted() {
+        let row = |e: f64| PairProfile {
+            pair: PairKey::new("m", "d"),
+            group: 0,
+            map: 50.0,
+            latency_s: 0.01,
+            energy_mwh: e,
+        };
+        let s = ProfileStore::new(vec![row(5.0), row(7.0)]);
+        assert_eq!(s.group_rows(0).len(), 2);
+        assert_eq!(
+            s.lookup(&PairKey::new("m", "d"), 0).unwrap().energy_mwh,
+            5.0,
+            "lookup must keep legacy first-match semantics"
+        );
+    }
+
+    #[test]
     fn non_finite_rows_rejected_at_insertion() {
         let mut rows = vec![PairProfile {
             pair: PairKey::new("ok", "d"),
@@ -303,6 +720,12 @@ mod tests {
         }
         // group index still resolves the scaled rows
         assert_eq!(s.lookup(&k, 0).unwrap().energy_mwh, 8.0);
+        // precomputed means track the scaling
+        let id = s.id_of(&k).unwrap();
+        assert!((s.stats_of(id).mean_energy_mwh - 8.0).abs() < 1e-12);
+        assert!((s.stats_of(id).mean_latency_s - 0.075).abs() < 1e-12);
+        // scaling an unknown pair is a no-op
+        s.scale_pair(&PairKey::new("ghost", "d"), 2.0, 2.0);
     }
 
     #[test]
@@ -312,6 +735,18 @@ mod tests {
         let r = s.restrict(&keep);
         assert_eq!(r.pairs(), keep);
         assert_eq!(r.rows().len(), 2);
+    }
+
+    #[test]
+    fn clone_counter_tracks_deep_copies() {
+        let s = test_store();
+        let before = ProfileStore::clone_count();
+        let _c = s.clone();
+        assert_eq!(ProfileStore::clone_count(), before + 1);
+        // reads never count as copies
+        let _ = s.group_rows(0);
+        let _ = s.pairs();
+        assert_eq!(ProfileStore::clone_count(), before + 1);
     }
 
     #[test]

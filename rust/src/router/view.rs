@@ -1,0 +1,225 @@
+//! Copy-on-write routing views (DESIGN.md §10).
+//!
+//! The gateway used to deep-clone its whole [`ProfileStore`] on every
+//! routed request (and re-clone it for every fallback re-route). A
+//! [`RoutingView`] replaces both copies with a borrow plus two tiny
+//! overlays:
+//!
+//! * an **exclusion set** — the fallback walk removes a pair from
+//!   consideration by flipping a bit instead of materializing a
+//!   restricted store;
+//! * a **warm-up overlay** — lifecycle cost-aging of recently rejoined
+//!   nodes is applied lazily inside the policy comparators (the same
+//!   `value * multiplier` arithmetic the old `scale_pair` copy
+//!   performed, so every decision stays bit-identical).
+//!
+//! In the steady state (no fallback, nobody warming) a view is a pure
+//! borrow: zero allocation, zero copies — the degenerate case the
+//! zero-copy regression tests pin.
+
+use super::store::{PairId, PairProfile, ProfileStore};
+
+/// A borrowed, optionally-overlaid routing snapshot of one store.
+pub struct RoutingView<'s> {
+    store: &'s ProfileStore,
+    /// Excluded pair flags, indexed by `PairId`; empty until the first
+    /// exclusion (the no-fallback hot path never allocates it).
+    excluded: Vec<bool>,
+    /// Pairs still routable (`n_pairs` minus exclusions).
+    live: usize,
+    /// `(pair, cost multiplier)` warm-up overlay, ascending by id;
+    /// empty unless some node is warming.
+    aged: Vec<(PairId, f64)>,
+}
+
+impl<'s> RoutingView<'s> {
+    pub fn new(store: &'s ProfileStore) -> Self {
+        Self {
+            store,
+            excluded: Vec::new(),
+            live: store.n_pairs(),
+            aged: Vec::new(),
+        }
+    }
+
+    pub fn store(&self) -> &'s ProfileStore {
+        self.store
+    }
+
+    /// Pairs still routable under the exclusion overlay.
+    pub fn live_pairs(&self) -> usize {
+        self.live
+    }
+
+    /// Apply a warm-up cost multiplier to one pair. The overlay is
+    /// kept sorted by id regardless of call order (re-aging a pair
+    /// replaces its multiplier); the gateway pushes ascending, which
+    /// makes the insertion O(1) amortized.
+    pub fn age(&mut self, id: PairId, mult: f64) {
+        match self.aged.binary_search_by_key(&id, |&(i, _)| i) {
+            Ok(k) => self.aged[k].1 = mult,
+            Err(k) => self.aged.insert(k, (id, mult)),
+        }
+    }
+
+    /// Remove one pair from consideration (fallback walk).
+    pub fn exclude(&mut self, id: PairId) {
+        if self.excluded.is_empty() {
+            self.excluded = vec![false; self.store.n_pairs()];
+        }
+        let e = &mut self.excluded[id.index()];
+        if !*e {
+            *e = true;
+            self.live -= 1;
+        }
+    }
+
+    pub fn is_excluded(&self, id: PairId) -> bool {
+        !self.excluded.is_empty() && self.excluded[id.index()]
+    }
+
+    /// Warm-up cost multiplier for one pair (1.0 when not warming).
+    pub fn multiplier(&self, id: PairId) -> f64 {
+        if self.aged.is_empty() {
+            return 1.0;
+        }
+        match self.aged.binary_search_by_key(&id, |&(i, _)| i) {
+            Ok(k) => self.aged[k].1,
+            Err(_) => 1.0,
+        }
+    }
+
+    /// Non-excluded pair ids, ascending (== sorted key order).
+    pub fn live_ids(&self) -> impl Iterator<Item = PairId> + '_ {
+        self.store.pair_ids().filter(move |&id| !self.is_excluded(id))
+    }
+
+    /// One group's non-excluded rows with their ids and effective cost
+    /// multipliers, in the store's group order (insertion order within
+    /// the group — the legacy iteration order).
+    pub fn group_iter(
+        &self,
+        group: usize,
+    ) -> impl Iterator<Item = (PairId, &'s PairProfile, f64)> + '_ {
+        let (rows, ids) = self.store.group_rows_ids(group);
+        ids.iter().zip(rows).filter_map(move |(&id, r)| {
+            if self.is_excluded(id) {
+                None
+            } else {
+                Some((id, r, self.multiplier(id)))
+            }
+        })
+    }
+
+    /// Mean profiled energy of one pair under the warm-up overlay.
+    /// Unaged pairs hit the precomputed store stats; aged pairs
+    /// recompute the mean over `value * mult` in insertion order —
+    /// exactly the sum the old aged store copy produced.
+    pub fn mean_energy_mwh(&self, id: PairId) -> f64 {
+        let m = self.multiplier(id);
+        if m == 1.0 {
+            self.store.stats_of(id).mean_energy_mwh
+        } else {
+            self.scaled_mean(id, m, |r| r.energy_mwh)
+        }
+    }
+
+    /// Mean profiled inference latency, overlay-aware (see
+    /// [`RoutingView::mean_energy_mwh`]).
+    pub fn mean_latency_s(&self, id: PairId) -> f64 {
+        let m = self.multiplier(id);
+        if m == 1.0 {
+            self.store.stats_of(id).mean_latency_s
+        } else {
+            self.scaled_mean(id, m, |r| r.latency_s)
+        }
+    }
+
+    /// Mean mAP across groups (warm-up aging never touches accuracy).
+    pub fn overall_map(&self, id: PairId) -> f64 {
+        self.store.stats_of(id).overall_map
+    }
+
+    fn scaled_mean(
+        &self,
+        id: PairId,
+        mult: f64,
+        f: impl Fn(&PairProfile) -> f64,
+    ) -> f64 {
+        let idxs = self.store.pair_row_indices(id);
+        if idxs.is_empty() {
+            return f64::INFINITY;
+        }
+        let rows = self.store.rows();
+        let mut sum = 0.0;
+        for &ri in idxs {
+            sum += f(&rows[ri as usize]) * mult;
+        }
+        sum / idxs.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::router::store::{test_store, PairKey};
+
+    #[test]
+    fn plain_view_borrows_without_copying() {
+        let s = test_store();
+        let before = ProfileStore::clone_count();
+        let v = RoutingView::new(&s);
+        assert_eq!(v.live_pairs(), 3);
+        assert_eq!(v.group_iter(0).count(), 3);
+        let id = s.id_of(&PairKey::new("small", "dev_a")).unwrap();
+        assert_eq!(v.mean_energy_mwh(id), 1.0);
+        assert_eq!(v.multiplier(id), 1.0);
+        assert_eq!(ProfileStore::clone_count(), before);
+    }
+
+    #[test]
+    fn exclusion_shrinks_live_set_idempotently() {
+        let s = test_store();
+        let mut v = RoutingView::new(&s);
+        let id = s.id_of(&PairKey::new("big", "dev_a")).unwrap();
+        v.exclude(id);
+        v.exclude(id); // idempotent
+        assert_eq!(v.live_pairs(), 2);
+        assert!(v.is_excluded(id));
+        assert_eq!(v.group_iter(1).count(), 2);
+        assert!(v.live_ids().all(|i| i != id));
+    }
+
+    #[test]
+    fn aging_scales_costs_like_the_old_store_copy() {
+        let s = test_store();
+        let k = PairKey::new("big", "dev_b");
+        let id = s.id_of(&k).unwrap();
+
+        // the legacy path: clone + scale_pair
+        let mut aged_copy = s.clone();
+        aged_copy.scale_pair(&k, 1.5, 1.5);
+
+        let mut v = RoutingView::new(&s);
+        v.age(id, 1.5);
+        let aged_id = aged_copy.id_of(&k).unwrap();
+        assert_eq!(
+            v.mean_energy_mwh(id),
+            aged_copy.stats_of(aged_id).mean_energy_mwh
+        );
+        assert_eq!(
+            v.mean_latency_s(id),
+            aged_copy.stats_of(aged_id).mean_latency_s
+        );
+        // per-row effective energy matches the scaled copy bit for bit
+        for ((_, r, m), cr) in
+            v.group_iter(1).zip(aged_copy.group_rows(1))
+        {
+            assert_eq!(r.map, cr.map, "aging never touches accuracy");
+            assert_eq!(r.energy_mwh * m, cr.energy_mwh);
+        }
+        // other pairs are untouched
+        let other = s.id_of(&PairKey::new("small", "dev_a")).unwrap();
+        assert_eq!(v.mean_energy_mwh(other), 1.0);
+    }
+}

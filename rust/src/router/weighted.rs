@@ -93,7 +93,6 @@ pub fn pareto_front<'a>(
                         || b.map > a.map)
             })
         })
-        .copied()
         .collect()
 }
 

@@ -4,9 +4,18 @@
 //! reporting, plus a tiny `black_box` shim. Each file in `rust/benches/`
 //! is a `harness = false` binary built on this module, so `cargo bench`
 //! runs them all and prints one table per bench target.
+//!
+//! Perf trajectory: [`Bench::finish_json`] additionally serializes the
+//! measurements (plus caller-supplied headline numbers such as
+//! events/sec) to `BENCH_<group>.json` — written into `BENCH_OUT_DIR`
+//! (default: the current directory). CI's perf-smoke job uploads these
+//! files as artifacts so successive PRs have a comparable perf
+//! baseline (EXPERIMENTS.md §Perf notes).
 
 use std::hint::black_box as std_black_box;
 use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
 
 pub fn black_box<T>(x: T) -> T {
     std_black_box(x)
@@ -112,6 +121,69 @@ impl Bench {
         &self.results
     }
 
+    /// Serialize every measured case plus caller-supplied headline
+    /// scalars (e.g. `("n200_k8", events/sec)`) as a stable JSON
+    /// document.
+    pub fn to_json<S: AsRef<str>>(&self, extras: &[(S, f64)]) -> Json {
+        let cases = Json::Arr(
+            self.results
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("name", Json::str(&r.name)),
+                        ("iters", Json::num(r.iters as f64)),
+                        (
+                            "median_ns",
+                            Json::num(r.median.as_secs_f64() * 1e9),
+                        ),
+                        ("p10_ns", Json::num(r.p10.as_secs_f64() * 1e9)),
+                        ("p90_ns", Json::num(r.p90.as_secs_f64() * 1e9)),
+                        (
+                            "mean_ns",
+                            Json::num(r.mean.as_secs_f64() * 1e9),
+                        ),
+                        (
+                            "per_sec",
+                            Json::num(r.throughput_per_sec()),
+                        ),
+                    ])
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("group", Json::str(&self.group)),
+            ("cases", cases),
+            (
+                "extras",
+                Json::obj(
+                    extras
+                        .iter()
+                        .map(|(k, v)| (k.as_ref(), Json::num(*v)))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// [`Bench::finish`] plus a `BENCH_<group>.json` dump (into
+    /// `BENCH_OUT_DIR`, default the current directory) so CI can track
+    /// the perf trajectory across commits. Write failures are reported
+    /// but never fail the bench.
+    pub fn finish_json<S: AsRef<str>>(self, extras: &[(S, f64)]) {
+        let dir = std::env::var("BENCH_OUT_DIR")
+            .unwrap_or_else(|_| ".".to_string());
+        let path = std::path::Path::new(&dir)
+            .join(format!("BENCH_{}.json", self.group));
+        match std::fs::write(&path, self.to_json(extras).pretty()) {
+            Ok(()) => println!("[bench] wrote {}", path.display()),
+            Err(e) => eprintln!(
+                "[bench] could not write {}: {e}",
+                path.display()
+            ),
+        }
+        self.finish();
+    }
+
     pub fn finish(self) {
         println!(
             "{}: {} case(s) measured",
@@ -139,5 +211,20 @@ mod tests {
         assert_eq!(b.results().len(), 1);
         assert!(b.results()[0].iters >= 1);
         assert!(b.results()[0].median > Duration::ZERO);
+        // the JSON trajectory document carries cases + extras
+        let j = b.to_json(&[("events_per_sec", 123.0)]);
+        assert_eq!(j.req("group").unwrap().as_str(), Some("t"));
+        let cases = j.req("cases").unwrap().as_arr().unwrap();
+        assert_eq!(cases.len(), 1);
+        assert!(cases[0].req("median_ns").unwrap().as_f64().unwrap() > 0.0);
+        assert!(cases[0].req("per_sec").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(
+            j.req("extras")
+                .unwrap()
+                .req("events_per_sec")
+                .unwrap()
+                .as_f64(),
+            Some(123.0)
+        );
     }
 }

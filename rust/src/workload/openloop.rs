@@ -26,6 +26,7 @@ use anyhow::Result;
 
 use crate::dataset::{Dataset, GtBox, Scene};
 use crate::devices;
+use crate::estimators::GatewayCost;
 use crate::gateway::{Gateway, RoutedRequest};
 use crate::lifecycle::{
     self, ChurnConfig, ChurnReport, ChurnState, LossOutcome,
@@ -33,7 +34,7 @@ use crate::lifecycle::{
 };
 use crate::metrics::RunMetrics;
 use crate::nodes::{NodeDown, NodeResponse};
-use crate::router::PairKey;
+use crate::router::PairId;
 use crate::util::rng::Rng;
 
 /// How requests arrive at the gateway.
@@ -200,7 +201,7 @@ enum EventKind {
     /// identifies the service instance: a completion whose token no
     /// longer matches the queue's in-service slot belongs to a request
     /// that was lost to a crash and is ignored.
-    Completion { pair: PairKey, token: u64 },
+    Completion { pair: PairId, token: u64 },
     /// Ground-truth crash of pool node `node` (churn runs only): the
     /// node rejects traffic and everything queued on it is lost.
     Crash(usize),
@@ -265,7 +266,7 @@ struct NodeQueue {
 
 /// Mutable simulator state threaded through the event handlers.
 struct SimState {
-    queues: BTreeMap<PairKey, NodeQueue>,
+    queues: BTreeMap<PairId, NodeQueue>,
     heap: BinaryHeap<Reverse<Event>>,
     seq: u64,
     dropped: usize,
@@ -298,12 +299,17 @@ impl SimState {
 }
 
 /// Driver-side churn context: pool-ordered node identities (indexing
-/// the ground-truth failure timeline and probe snapshots) plus the
-/// shared request-copy accounting.
+/// the ground-truth failure timeline and probe snapshots), the shared
+/// request-copy accounting, and the per-request estimate cache that
+/// lets retries re-enter routing without paying the estimator again.
 struct ChurnDriver {
-    pairs: Vec<PairKey>,
+    pairs: Vec<PairId>,
     probe_timeout_s: f64,
     state: ChurnState,
+    /// `(estimate, gateway cost)` paid at each request's first
+    /// admission; retries route with these instead of re-estimating,
+    /// so a request pays GatewayCost exactly once.
+    est: Vec<Option<(usize, GatewayCost)>>,
 }
 
 /// Drive a gateway over pre-rendered frames under open-loop arrivals.
@@ -336,11 +342,17 @@ pub fn run_frames(
     let mut churn = match &cfg.churn {
         Some(c) => {
             gw.enable_churn(c);
-            let pairs: Vec<PairKey> = gw
+            // pool-ordered node ids (the failure timeline and probe
+            // snapshots address nodes by pool position)
+            let pairs: Vec<PairId> = gw
                 .pool()
                 .nodes()
                 .iter()
-                .map(|n| n.pair.clone())
+                .map(|n| {
+                    gw.store().id_of(&n.pair).expect(
+                        "deployed pair missing from the routing table",
+                    )
+                })
                 .collect();
             for ev in
                 lifecycle::failure_schedule(pairs.len(), horizon_s, c)
@@ -366,6 +378,7 @@ pub fn run_frames(
                     c.policy,
                     c.retry_backoff_s,
                 ),
+                est: vec![None; frames.len()],
             })
         }
         None => None,
@@ -376,42 +389,47 @@ pub fn run_frames(
             EventKind::Arrival(idx) => {
                 let scene = &frames[idx];
                 let true_count = pseudo_gt[idx].len();
-                // route_at() observes per-node occupancy (and, under
+                // the estimator runs ONCE per request, here at first
+                // arrival; under churn the result is cached so retries
+                // re-enter routing without paying GatewayCost again.
+                // Estimator errors (inference failure) abort the run.
+                let (estimate, cost) =
+                    gw.estimate_request(&scene.image, true_count)?;
+                if let Some(ch) = churn.as_mut() {
+                    ch.est[idx] = Some((estimate, cost));
+                }
+                // routing observes per-node occupancy (and, under
                 // churn, believed health): full or down nodes are
                 // skipped via the fallback path; if no feasible
                 // endpoint has a free slot, the request is shed — or,
                 // under the retry policy, backed off like a retrying
-                // client. Any other routing error (estimator inference
-                // failure, misconfigured store) aborts the run.
-                let routed =
-                    match gw.route_at(&scene.image, true_count, ev.t) {
-                        Ok(r) => r,
-                        Err(e)
-                            if e.is::<crate::gateway::NoEndpoint>() =>
-                        {
-                            match churn.as_mut() {
-                                Some(ch)
-                                    if matches!(
-                                        ch.state.policy(),
-                                        ResiliencePolicy::Retry { .. }
-                                    ) =>
+                // client. Any other routing error (misconfigured
+                // store) aborts the run.
+                let routed = match gw
+                    .route_with_estimate(estimate, true_count, cost, ev.t)
+                {
+                    Ok(r) => r,
+                    Err(e) if e.is::<crate::gateway::NoEndpoint>() => {
+                        match churn.as_mut() {
+                            Some(ch)
+                                if matches!(
+                                    ch.state.policy(),
+                                    ResiliencePolicy::Retry { .. }
+                                ) =>
+                            {
+                                if let LossOutcome::RetryAt(t) = ch
+                                    .state
+                                    .placement_failed(idx, ev.t)
                                 {
-                                    if let LossOutcome::RetryAt(t) = ch
-                                        .state
-                                        .placement_failed(idx, ev.t)
-                                    {
-                                        sim.push(
-                                            t,
-                                            EventKind::Retry(idx),
-                                        );
-                                    }
+                                    sim.push(t, EventKind::Retry(idx));
                                 }
-                                _ => sim.dropped += 1,
                             }
-                            continue;
+                            _ => sim.dropped += 1,
                         }
-                        Err(e) => return Err(e),
-                    };
+                        continue;
+                    }
+                    Err(e) => return Err(e),
+                };
                 // proactive hedging: duplicate onto the second-best
                 // admissible pair, reusing the primary's estimate
                 let dup = match churn.as_ref() {
@@ -420,10 +438,7 @@ pub fn run_frames(
                             == ResiliencePolicy::Hedge =>
                     {
                         gw.route_secondary(&routed, ev.t).map(|p| {
-                            RoutedRequest {
-                                pair: p,
-                                ..routed.clone()
-                            }
+                            RoutedRequest { pair_id: p, ..routed }
                         })
                     }
                     _ => None,
@@ -450,9 +465,19 @@ pub fn run_frames(
                 }
             }
             EventKind::Retry(idx) => {
-                let routed = match gw.route_at(
-                    &frames[idx].image,
+                // the retry carries the request's ORIGINAL estimate
+                // and gateway cost (cached at first arrival): the
+                // estimator is not consulted again, and the winning
+                // copy records that one cost at completion.
+                let (estimate, cost) = churn
+                    .as_ref()
+                    .expect("retry without churn")
+                    .est[idx]
+                    .expect("retried request was never estimated");
+                let routed = match gw.route_with_estimate(
+                    estimate,
                     pseudo_gt[idx].len(),
+                    cost,
                     ev.t,
                 ) {
                     Ok(r) => r,
@@ -493,7 +518,7 @@ pub fn run_frames(
                     continue;
                 }
                 let done = q.serving.take().expect("token just matched");
-                gw.pool_mut().release(&pair);
+                gw.pool_mut().release_id(pair);
                 sim.in_flight -= 1;
                 sim.makespan_s = sim.makespan_s.max(ev.t);
                 let winner = match churn.as_mut() {
@@ -518,27 +543,27 @@ pub fn run_frames(
                         &mut metrics,
                     );
                 }
-                start_next(gw, frames, &mut sim, &mut churn, &pair, ev.t)?;
+                start_next(gw, frames, &mut sim, &mut churn, pair, ev.t)?;
             }
             EventKind::Crash(node) => {
                 let ch = churn.as_mut().expect("crash without churn");
-                let pair = ch.pairs[node].clone();
+                let pair = ch.pairs[node];
                 ch.state.crashes += 1;
-                gw.pool_mut().set_health(&pair, false);
+                gw.pool_mut().set_health_id(pair, false);
                 if let Some(m) = gw.membership_mut() {
-                    m.ground_truth_changed(&pair, false, ev.t);
+                    m.ground_truth_changed(pair, false, ev.t);
                 }
-                lose_queued(gw, &mut sim, &mut ch.state, &pair, None, ev.t);
+                lose_queued(gw, &mut sim, &mut ch.state, pair, None, ev.t);
             }
             EventKind::Rejoin(node) => {
                 let ch = churn.as_ref().expect("rejoin without churn");
-                let pair = ch.pairs[node].clone();
-                gw.pool_mut().set_health(&pair, true);
-                if let Some(n) = gw.pool_mut().get(&pair) {
+                let pair = ch.pairs[node];
+                gw.pool_mut().set_health_id(pair, true);
+                if let Some(n) = gw.pool_mut().get_id(pair) {
                     n.on_rejoin(ev.t);
                 }
                 if let Some(m) = gw.membership_mut() {
-                    m.ground_truth_changed(&pair, true, ev.t);
+                    m.ground_truth_changed(pair, true, ev.t);
                 }
             }
             EventKind::Probe => {
@@ -546,7 +571,7 @@ pub fn run_frames(
                 let responses: Vec<bool> = ch
                     .pairs
                     .iter()
-                    .map(|p| gw.pool().is_healthy(p))
+                    .map(|&p| gw.pool().is_healthy_id(p))
                     .collect();
                 let timeout = ch.probe_timeout_s;
                 sim.push(ev.t + timeout, EventKind::ProbeResult(responses));
@@ -556,7 +581,7 @@ pub fn run_frames(
                 let m = gw
                     .membership_mut()
                     .expect("churn gateway lost its membership");
-                for (p, up) in ch.pairs.iter().zip(&responses) {
+                for (&p, up) in ch.pairs.iter().zip(&responses) {
                     m.observe_probe(p, *up, ev.t);
                 }
             }
@@ -593,20 +618,18 @@ fn admit_copy(
     t: f64,
     hedge: bool,
 ) -> Result<()> {
-    let admitted = gw.pool_mut().acquire(&routed.pair);
+    let admitted = gw.pool_mut().acquire_id(routed.pair_id);
     debug_assert!(admitted, "route() returned a pair without a free slot");
     sim.in_flight += 1;
     sim.peak_in_flight = sim.peak_in_flight.max(sim.in_flight);
-    let pair = routed.pair.clone();
-    sim.queues.entry(pair.clone()).or_default().backlog.push_back(
-        Pending {
-            routed,
-            idx,
-            arrival_s: t,
-            hedge,
-        },
-    );
-    start_next(gw, frames, sim, churn, &pair, t)
+    let pair = routed.pair_id;
+    sim.queues.entry(pair).or_default().backlog.push_back(Pending {
+        routed,
+        idx,
+        arrival_s: t,
+        hedge,
+    });
+    start_next(gw, frames, sim, churn, pair, t)
 }
 
 /// If `pair` is idle and has backlog, begin serving the head request at
@@ -620,10 +643,11 @@ fn start_next(
     frames: &[Scene],
     sim: &mut SimState,
     churn: &mut Option<ChurnDriver>,
-    pair: &PairKey,
+    pair: PairId,
     now_s: f64,
 ) -> Result<()> {
-    let q = sim.queues.get_mut(pair).expect("start_next on unknown queue");
+    let q =
+        sim.queues.get_mut(&pair).expect("start_next on unknown queue");
     if q.serving.is_some() {
         return Ok(());
     }
@@ -646,13 +670,10 @@ fn start_next(
     let token = sim.seq;
     sim.push(
         start_s + resp.latency_s + devices::NETWORK_S,
-        EventKind::Completion {
-            pair: pair.clone(),
-            token,
-        },
+        EventKind::Completion { pair, token },
     );
     // re-borrow: gw.serve() above needed &mut Gateway exclusively
-    sim.queues.get_mut(pair).expect("queue vanished").serving =
+    sim.queues.get_mut(&pair).expect("queue vanished").serving =
         Some(InService {
             routed: p.routed,
             idx: p.idx,
@@ -673,12 +694,12 @@ fn lose_queued(
     gw: &mut Gateway<'_>,
     sim: &mut SimState,
     state: &mut ChurnState,
-    pair: &PairKey,
+    pair: PairId,
     head: Option<Pending>,
     now_s: f64,
 ) {
     let mut idxs: Vec<usize> = Vec::new();
-    if let Some(q) = sim.queues.get_mut(pair) {
+    if let Some(q) = sim.queues.get_mut(&pair) {
         if let Some(s) = q.serving.take() {
             idxs.push(s.idx);
         }
@@ -692,7 +713,7 @@ fn lose_queued(
         idxs.push(p.idx);
     }
     for idx in idxs {
-        gw.pool_mut().release(pair);
+        gw.pool_mut().release_id(pair);
         sim.in_flight -= 1;
         match state.copy_lost(idx, now_s) {
             LossOutcome::RetryAt(t) => sim.push(t, EventKind::Retry(idx)),
@@ -721,7 +742,7 @@ mod tests {
     use crate::devices::fleet;
     use crate::gateway::router_by_name;
     use crate::nodes::NodePool;
-    use crate::router::{PairProfile, ProfileStore};
+    use crate::router::{PairKey, PairProfile, ProfileStore};
     use crate::runtime::Engine;
     use crate::workload;
 

@@ -309,6 +309,78 @@ fn gateway_cost_is_accounted_exactly_once_per_request() {
 }
 
 #[test]
+fn retried_requests_pay_gateway_cost_exactly_once() {
+    // Estimator caching through the churn retry path: a request's
+    // estimate + GatewayCost are produced once at first arrival and
+    // carried through every retry re-dispatch, so the run's recorded
+    // gateway cost is exactly (served requests) x (per-request
+    // profile) even when many requests were retried — and the
+    // estimator is never re-consulted for a retry.
+    use ecore::lifecycle::{ChurnConfig, ResiliencePolicy};
+
+    let e = Engine::new(&ecore::default_artifacts_dir()).unwrap();
+    let per = ecore::devices::gateway_spec()
+        .profile(&e.meta(ecore::models::CANNY_MODEL).unwrap());
+    let ds = coco::build(60, 23);
+    let mut gw = tiny_gateway(&e, "ED");
+    let report = ecore::workload::openloop::run_dataset(
+        &mut gw,
+        &ds,
+        &OpenLoopConfig {
+            arrivals: ArrivalProcess::Poisson { rate_rps: 300.0 },
+            queue_capacity: 4,
+            seed: 9,
+            churn: Some(ChurnConfig {
+                // fast flapping: crashes lose queued work, quick
+                // recoveries let retries land again
+                mtbf_s: 0.05,
+                mttr_s: 0.05,
+                probe_interval_s: 0.02,
+                probe_timeout_s: 0.01,
+                suspect_after: 1,
+                warmup_s: 0.05,
+                warmup_penalty: 0.5,
+                policy: ResiliencePolicy::Retry { budget: 8 },
+                retry_backoff_s: 0.02,
+                horizon_slack_s: 2.0,
+                seed: 11,
+            }),
+        },
+    )
+    .unwrap();
+    let churn = report.churn.as_ref().expect("churn report");
+    assert!(churn.crashes > 0, "scenario must crash nodes");
+    assert!(
+        churn.retried > 0,
+        "scenario must exercise the retry path ({} crashes)",
+        churn.crashes
+    );
+    let m = &report.metrics;
+    assert_eq!(
+        m.requests + report.dropped + churn.lost,
+        report.offered,
+        "every request accounted exactly once"
+    );
+    // the invariant under test: one estimator payment per SERVED
+    // request, no matter how many times its copies were re-dispatched
+    assert!(
+        (m.gateway_energy_mwh - m.requests as f64 * per.energy_mwh)
+            .abs()
+            < 1e-9,
+        "gateway energy {} != {} x {} despite {} retries",
+        m.gateway_energy_mwh,
+        m.requests,
+        per.energy_mwh,
+        churn.retried
+    );
+    assert!(
+        (m.gateway_latency_s - m.requests as f64 * per.latency_s).abs()
+            < 1e-9,
+        "gateway latency must be paid exactly once per served request"
+    );
+}
+
+#[test]
 fn failover_reroutes_when_node_dies() {
     let h = harness();
     let deployed = deployed_store(&h).unwrap();

@@ -1,0 +1,549 @@
+//! Equivalence suite for the indexed routing data layer (DESIGN.md
+//! §10): the interned/indexed [`ProfileStore`] + [`RoutingView`] must
+//! return identical rows, aggregates, and routing winners to a naive
+//! reference implementation that replicates the legacy linear-scan
+//! code path — on randomized stores with coarse value grids (so exact
+//! ties are common), shuffled insertion orders, duplicate
+//! (pair, group) rows, and non-finite poison rows.
+//!
+//! Every comparison is EXACT (`==` on f64 / full row equality): the
+//! refactor's contract is bit-identical decisions, not approximate
+//! ones.
+
+use ecore::router::{
+    GreedyRouter, PairKey, PairProfile, Policy, PolicyKind, ProfileStore,
+    RoutingView,
+};
+use ecore::util::prop::forall_ok;
+use ecore::util::rng::Rng;
+
+/// The legacy store: insertion-order rows, linear scans everywhere.
+/// Each method is a faithful copy of the pre-refactor implementation.
+struct NaiveStore {
+    rows: Vec<PairProfile>,
+}
+
+impl NaiveStore {
+    fn new(rows: &[PairProfile]) -> Self {
+        Self {
+            rows: rows
+                .iter()
+                .filter(|r| {
+                    r.map.is_finite()
+                        && r.latency_s.is_finite()
+                        && r.energy_mwh.is_finite()
+                })
+                .cloned()
+                .collect(),
+        }
+    }
+
+    fn pairs(&self) -> Vec<PairKey> {
+        let mut v: Vec<PairKey> =
+            self.rows.iter().map(|r| r.pair.clone()).collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+
+    fn groups(&self) -> Vec<usize> {
+        let mut g: Vec<usize> =
+            self.rows.iter().map(|r| r.group).collect();
+        g.sort();
+        g.dedup();
+        g
+    }
+
+    fn group_rows(&self, group: usize) -> Vec<&PairProfile> {
+        self.rows.iter().filter(|r| r.group == group).collect()
+    }
+
+    fn lookup(&self, pair: &PairKey, group: usize) -> Option<&PairProfile> {
+        self.group_rows(group)
+            .into_iter()
+            .find(|r| &r.pair == pair)
+    }
+
+    fn mean(
+        &self,
+        pair: &PairKey,
+        f: impl Fn(&PairProfile) -> f64,
+    ) -> f64 {
+        let vals: Vec<f64> = self
+            .rows
+            .iter()
+            .filter(|r| &r.pair == pair)
+            .map(f)
+            .collect();
+        if vals.is_empty() {
+            f64::INFINITY
+        } else {
+            vals.iter().sum::<f64>() / vals.len() as f64
+        }
+    }
+
+    fn overall_map(&self, pair: &PairKey) -> f64 {
+        let vals: Vec<f64> = self
+            .rows
+            .iter()
+            .filter(|r| &r.pair == pair)
+            .map(|r| r.map)
+            .collect();
+        if vals.is_empty() {
+            0.0
+        } else {
+            vals.iter().sum::<f64>() / vals.len() as f64
+        }
+    }
+
+    fn restrict(&self, pairs: &[PairKey]) -> NaiveStore {
+        NaiveStore {
+            rows: self
+                .rows
+                .iter()
+                .filter(|r| pairs.contains(&r.pair))
+                .cloned()
+                .collect(),
+        }
+    }
+
+    /// The legacy Algorithm 1 (filter by mAP margin, min energy,
+    /// pair-key tie-break).
+    fn greedy(&self, delta: f64, group: usize) -> Option<PairKey> {
+        let rows = self.group_rows(group);
+        if rows.is_empty() {
+            return None;
+        }
+        let map_max = rows
+            .iter()
+            .map(|r| r.map)
+            .fold(f64::NEG_INFINITY, f64::max);
+        let map_min = map_max - delta;
+        rows.into_iter()
+            .filter(|r| r.map >= map_min)
+            .min_by(|a, b| {
+                a.energy_mwh
+                    .total_cmp(&b.energy_mwh)
+                    .then_with(|| a.pair.cmp(&b.pair))
+            })
+            .map(|r| r.pair.clone())
+    }
+
+    /// The legacy static baselines (LE/LI/HM), as `min_by_metric` did.
+    fn min_by_metric(
+        &self,
+        metric: impl Fn(&PairKey) -> f64,
+    ) -> Option<PairKey> {
+        let pairs = self.pairs();
+        pairs
+            .iter()
+            .min_by(|a, b| {
+                metric(a).total_cmp(&metric(b)).then_with(|| a.cmp(b))
+            })
+            .cloned()
+    }
+
+    /// The legacy HMG (group max-mAP, ties toward the lower pair key).
+    fn hmg(&self, group: usize) -> Option<PairKey> {
+        self.group_rows(group)
+            .into_iter()
+            .max_by(|a, b| {
+                a.map.total_cmp(&b.map).then_with(|| b.pair.cmp(&a.pair))
+            })
+            .map(|r| r.pair.clone())
+    }
+}
+
+/// Randomized rows: coarse grids (ties common), shuffled insertion
+/// order, duplicate (pair, group) rows, occasional poison rows.
+fn random_rows(r: &mut Rng) -> Vec<PairProfile> {
+    let n_pairs = 2 + r.below(6) as usize;
+    // sparse, unsorted group labels
+    let n_groups = 1 + r.below(4) as usize;
+    let group_labels: Vec<usize> =
+        (0..n_groups).map(|_| r.below(9) as usize).collect();
+    let mut rows = Vec::new();
+    for p in 0..n_pairs {
+        for g in &group_labels {
+            rows.push(PairProfile {
+                pair: PairKey::new(&format!("m{p}"), "d"),
+                group: *g,
+                map: (r.below(6) * 20) as f64,
+                latency_s: (1 + r.below(4)) as f64 * 0.01,
+                energy_mwh: (1 + r.below(4)) as f64 * 0.5,
+            });
+        }
+    }
+    // occasional duplicate (pair, group) row with different values
+    if r.below(2) == 0 && !rows.is_empty() {
+        let i = r.below(rows.len() as u64) as usize;
+        let mut dup = rows[i].clone();
+        dup.energy_mwh = (1 + r.below(4)) as f64 * 0.5;
+        dup.map = (r.below(6) * 20) as f64;
+        rows.push(dup);
+    }
+    // occasional poison row (must be filtered identically)
+    if r.below(3) == 0 {
+        rows.push(PairProfile {
+            pair: PairKey::new("poison", "d"),
+            group: group_labels[0],
+            map: f64::NAN,
+            latency_s: 0.01,
+            energy_mwh: 1.0,
+        });
+    }
+    r.shuffle(&mut rows);
+    rows
+}
+
+/// Serialize rows exactly like `ProfileStore::to_json` does (one
+/// object per row, insertion order) — the independent expectation for
+/// the restrict/order equivalence check.
+fn serialize_rows(rows: &[PairProfile]) -> String {
+    use ecore::util::json::Json;
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("model", Json::str(&r.pair.model)),
+                    ("device", Json::str(&r.pair.device)),
+                    ("group", Json::num(r.group as f64)),
+                    ("map", Json::num(r.map)),
+                    ("latency_s", Json::num(r.latency_s)),
+                    ("energy_mwh", Json::num(r.energy_mwh)),
+                ])
+            })
+            .collect(),
+    )
+    .dump()
+}
+
+fn rows_equal(a: &PairProfile, b: &PairProfile) -> bool {
+    a.pair == b.pair
+        && a.group == b.group
+        && a.map == b.map
+        && a.latency_s == b.latency_s
+        && a.energy_mwh == b.energy_mwh
+}
+
+#[test]
+fn prop_indexed_store_matches_naive_reference() {
+    forall_ok(
+        0xEC0E_1,
+        200,
+        |r| random_rows(r),
+        |rows| {
+            let naive = NaiveStore::new(rows);
+            let store = ProfileStore::new(rows.clone());
+
+            if store.pairs() != naive.pairs() {
+                return Err("pairs() diverged".into());
+            }
+            if store.groups() != naive.groups() {
+                return Err("groups() diverged".into());
+            }
+            // group_rows: same rows, same (insertion) order
+            for g in naive.groups().into_iter().chain([777]) {
+                let a = store.group_rows(g);
+                let b = naive.group_rows(g);
+                if a.len() != b.len() {
+                    return Err(format!("group {g} row count"));
+                }
+                for (x, y) in a.iter().zip(b) {
+                    if !rows_equal(x, y) {
+                        return Err(format!("group {g} row order"));
+                    }
+                }
+            }
+            // lookup + means for every (pair, group) incl. misses
+            for p in naive.pairs() {
+                for g in naive.groups().into_iter().chain([777]) {
+                    match (store.lookup(&p, g), naive.lookup(&p, g)) {
+                        (None, None) => {}
+                        (Some(x), Some(y)) if rows_equal(x, y) => {}
+                        _ => return Err(format!("lookup({p}, {g})")),
+                    }
+                }
+                if store.overall_map(&p) != naive.overall_map(&p) {
+                    return Err(format!("overall_map({p})"));
+                }
+                let id = store.id_of(&p).expect("pair interned");
+                let stats = store.stats_of(id);
+                if stats.mean_energy_mwh
+                    != naive.mean(&p, |r| r.energy_mwh)
+                {
+                    return Err(format!("mean energy({p})"));
+                }
+                if stats.mean_latency_s
+                    != naive.mean(&p, |r| r.latency_s)
+                {
+                    return Err(format!("mean latency({p})"));
+                }
+            }
+            // restrict: same surviving rows, same values, same
+            // (insertion) order — compared through the serialized
+            // form, which emits insertion order by contract
+            let all = naive.pairs();
+            let keep: Vec<PairKey> =
+                all.iter().step_by(2).cloned().collect();
+            let ra = store.restrict(&keep);
+            let rb = naive.restrict(&keep);
+            if ra.to_json().dump() != serialize_rows(&rb.rows) {
+                return Err("restrict rows/order diverged".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_view_routing_matches_naive_policies() {
+    forall_ok(
+        0xEC0E_2,
+        200,
+        |r| (random_rows(r), r.below(1 << 30)),
+        |(rows, seed)| {
+            let naive = NaiveStore::new(rows);
+            let store = ProfileStore::new(rows.clone());
+            let view = RoutingView::new(&store);
+            let groups = naive.groups();
+            if groups.is_empty() {
+                return Ok(());
+            }
+
+            // Algorithm 1 across deltas and groups
+            for delta in [0.0, 10.0, 40.0, 200.0] {
+                let gr = GreedyRouter::new(delta);
+                for &g in &groups {
+                    let a = gr
+                        .route_view(&view, g)
+                        .map(|id| store.key_of(id).clone());
+                    let b = naive.greedy(delta, g);
+                    if a != b {
+                        return Err(format!(
+                            "greedy(delta={delta}, g={g}): {a:?} vs {b:?}"
+                        ));
+                    }
+                }
+            }
+
+            // static baselines (precomputed stats vs on-the-fly scans)
+            let checks: [(PolicyKind, Option<PairKey>); 3] = [
+                (
+                    PolicyKind::LowestEnergy,
+                    naive.min_by_metric(|p| {
+                        naive.mean(p, |r| r.energy_mwh)
+                    }),
+                ),
+                (
+                    PolicyKind::LowestInference,
+                    naive.min_by_metric(|p| {
+                        naive.mean(p, |r| r.latency_s)
+                    }),
+                ),
+                (
+                    PolicyKind::HighestMap,
+                    naive.min_by_metric(|p| -naive.overall_map(p)),
+                ),
+            ];
+            for (kind, want) in checks {
+                let mut policy = Policy::new(kind, &store, 5.0, *seed);
+                let got = policy.route(&store, groups[0]);
+                if got != want {
+                    return Err(format!(
+                        "{kind:?}: {got:?} vs {want:?}"
+                    ));
+                }
+            }
+            // HMG per group
+            let mut hmg =
+                Policy::new(PolicyKind::HighestMapPerGroup, &store, 5.0, 1);
+            for &g in &groups {
+                let got = hmg.route(&store, g);
+                let want = naive.hmg(g);
+                if got != want {
+                    return Err(format!("HMG(g={g}): {got:?} vs {want:?}"));
+                }
+            }
+
+            // RR and Random sequences: same seeds, same pair streams
+            let pairs = naive.pairs();
+            let mut rr =
+                Policy::new(PolicyKind::RoundRobin, &store, 5.0, *seed);
+            for k in 0..(2 * pairs.len()) {
+                let got = rr.route(&store, groups[0]);
+                let want = Some(pairs[k % pairs.len()].clone());
+                if got != want {
+                    return Err(format!("RR step {k}"));
+                }
+            }
+            let mut rnd =
+                Policy::new(PolicyKind::Random, &store, 5.0, *seed);
+            let mut reference = Rng::new(*seed ^ 0x9e37_79b9);
+            for k in 0..8 {
+                let got = rnd.route(&store, groups[0]);
+                let want = Some(
+                    pairs[reference.below(pairs.len() as u64) as usize]
+                        .clone(),
+                );
+                if got != want {
+                    return Err(format!("Random step {k}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_exclusion_matches_naive_restrict_routing() {
+    // the gateway fallback walk: excluding pairs on a view must route
+    // exactly like the legacy restrict-then-route store copies
+    forall_ok(
+        0xEC0E_3,
+        150,
+        |r| random_rows(r),
+        |rows| {
+            let naive = NaiveStore::new(rows);
+            let store = ProfileStore::new(rows.clone());
+            let pairs = naive.pairs();
+            let groups = naive.groups();
+            if pairs.len() < 2 || groups.is_empty() {
+                return Ok(());
+            }
+            // exclude every other pair
+            let excluded: Vec<PairKey> =
+                pairs.iter().skip(1).step_by(2).cloned().collect();
+            let remaining: Vec<PairKey> = pairs
+                .iter()
+                .filter(|p| !excluded.contains(p))
+                .cloned()
+                .collect();
+            let mut view = RoutingView::new(&store);
+            for p in &excluded {
+                view.exclude(store.id_of(p).expect("interned"));
+            }
+            let shrunk = naive.restrict(&remaining);
+            for delta in [0.0, 40.0] {
+                let gr = GreedyRouter::new(delta);
+                for &g in &groups {
+                    let a = gr
+                        .route_view(&view, g)
+                        .map(|id| store.key_of(id).clone());
+                    let b = shrunk.greedy(delta, g);
+                    if a != b {
+                        return Err(format!(
+                            "excluded greedy(delta={delta}, g={g})"
+                        ));
+                    }
+                }
+            }
+            // LE over the excluded view == LE over the restricted copy
+            let mut policy = Policy::new(
+                PolicyKind::LowestEnergy,
+                &store,
+                5.0,
+                7,
+            );
+            let got = policy
+                .route_view(&view, groups[0])
+                .map(|id| store.key_of(id).clone());
+            let want = shrunk.min_by_metric(|p| {
+                shrunk.mean(p, |r| r.energy_mwh)
+            });
+            if got != want {
+                return Err("excluded LE diverged".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_warmup_overlay_matches_scaled_store_copy() {
+    // the lifecycle warm-up path: cost-aging on the view must route
+    // exactly like the legacy clone + scale_pair store copy
+    forall_ok(
+        0xEC0E_4,
+        150,
+        |r| {
+            let rows = random_rows(r);
+            let mult = 1.0 + (1 + r.below(8)) as f64 * 0.25;
+            (rows, mult)
+        },
+        |(rows, mult)| {
+            let store = ProfileStore::new(rows.clone());
+            let pairs = store.pairs();
+            if pairs.is_empty() {
+                return Ok(());
+            }
+            // age the first pair, as a warming node would be
+            let aged_key = &pairs[0];
+            let aged_id = store.id_of(aged_key).expect("interned");
+            let mut view = RoutingView::new(&store);
+            view.age(aged_id, *mult);
+
+            // the legacy reference: clone + scale_pair on the
+            // insertion-order rows (the order the old store kept), so
+            // every float reduction replays the legacy sum order
+            let mut legacy_rows = rows.clone();
+            for lr in
+                legacy_rows.iter_mut().filter(|r| &r.pair == aged_key)
+            {
+                lr.latency_s *= *mult;
+                lr.energy_mwh *= *mult;
+            }
+            let naive = NaiveStore::new(&legacy_rows);
+
+            for delta in [0.0, 40.0] {
+                let gr = GreedyRouter::new(delta);
+                for g in store.groups() {
+                    let a = gr
+                        .route_view(&view, g)
+                        .map(|id| store.key_of(id).clone());
+                    let b = naive.greedy(delta, g);
+                    if a != b {
+                        return Err(format!(
+                            "aged greedy(delta={delta}, g={g}): \
+                             {a:?} vs {b:?}"
+                        ));
+                    }
+                }
+            }
+            // aged means equal the scaled copy's on-the-fly means
+            let view_mean = view.mean_energy_mwh(aged_id);
+            let naive_mean = naive.mean(aged_key, |r| r.energy_mwh);
+            if view_mean != naive_mean {
+                return Err(format!(
+                    "aged mean energy {view_mean} vs {naive_mean}"
+                ));
+            }
+            // LE/LI over the aged view == over the scaled copy
+            for (kind, want) in [
+                (
+                    PolicyKind::LowestEnergy,
+                    naive.min_by_metric(|p| {
+                        naive.mean(p, |r| r.energy_mwh)
+                    }),
+                ),
+                (
+                    PolicyKind::LowestInference,
+                    naive.min_by_metric(|p| {
+                        naive.mean(p, |r| r.latency_s)
+                    }),
+                ),
+            ] {
+                let mut policy = Policy::new(kind, &store, 5.0, 3);
+                let got = policy
+                    .route_view(&view, store.groups()[0])
+                    .map(|id| store.key_of(id).clone());
+                if got != want {
+                    return Err(format!(
+                        "aged {kind:?}: {got:?} vs {want:?}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
