@@ -59,6 +59,7 @@ fn main() {
                         seed: 1,
                         drift: None,
                         churn: None,
+                        slo: None,
                     },
                 )
                 .unwrap();

@@ -61,6 +61,7 @@ fn main() {
                     queue_capacity: cap,
                     seed: 3,
                     churn: None,
+                    slo: None,
                 },
             )
             .unwrap();

@@ -262,6 +262,22 @@ pub struct ExperimentConfig {
     pub churn_rate_rps: f64,
     /// Churn sweep: offered requests per cell.
     pub churn_requests: usize,
+    /// SLO: deadline classes as `name:deadline_s` specs, assigned
+    /// round-robin by request index.
+    pub slo_classes: Vec<String>,
+    /// SLO: batch formation window (s); 0 disables batching while
+    /// keeping admission control and EDF ordering.
+    pub slo_batch_window_s: f64,
+    /// SLO: hard cap on members per formed batch.
+    pub slo_max_batch: usize,
+    /// SLO sweep: Poisson arrival rates (req/s).
+    pub slo_rate_rps: Vec<f64>,
+    /// SLO sweep: batch windows compared per cell (s).
+    pub slo_windows_s: Vec<f64>,
+    /// SLO sweep: offered requests per cell.
+    pub slo_requests: usize,
+    /// SLO sweep: routers compared per cell.
+    pub slo_routers: Vec<String>,
 }
 
 impl Default for ExperimentConfig {
@@ -313,6 +329,20 @@ impl Default for ExperimentConfig {
                 .collect(),
             churn_rate_rps: 8.0,
             churn_requests: 60,
+            slo_classes: [
+                "interactive:0.05",
+                "standard:0.25",
+                "relaxed:1.0",
+            ]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+            slo_batch_window_s: 0.004,
+            slo_max_batch: 4,
+            slo_rate_rps: vec![80.0, 160.0],
+            slo_windows_s: vec![0.0, 0.004, 0.01],
+            slo_requests: 200,
+            slo_routers: ["ED", "LE"].iter().map(|s| s.to_string()).collect(),
         }
     }
 }
@@ -411,6 +441,30 @@ impl ExperimentConfig {
                 .f64_or("experiment.churn_rate_rps", d.churn_rate_rps),
             churn_requests: t
                 .usize_or("experiment.churn_requests", d.churn_requests),
+            slo_classes: t
+                .get("experiment.slo_classes")
+                .and_then(|v| v.as_str_list())
+                .unwrap_or(d.slo_classes),
+            slo_batch_window_s: t.f64_or(
+                "experiment.slo_batch_window_s",
+                d.slo_batch_window_s,
+            ),
+            slo_max_batch: t
+                .usize_or("experiment.slo_max_batch", d.slo_max_batch),
+            slo_rate_rps: t
+                .get("experiment.slo_rate_rps")
+                .and_then(|v| v.as_f64_list())
+                .unwrap_or(d.slo_rate_rps),
+            slo_windows_s: t
+                .get("experiment.slo_windows_s")
+                .and_then(|v| v.as_f64_list())
+                .unwrap_or(d.slo_windows_s),
+            slo_requests: t
+                .usize_or("experiment.slo_requests", d.slo_requests),
+            slo_routers: t
+                .get("experiment.slo_routers")
+                .and_then(|v| v.as_str_list())
+                .unwrap_or(d.slo_routers),
         }
     }
 
@@ -482,6 +536,24 @@ impl ExperimentConfig {
             args.f64_or("churn-rate", self.churn_rate_rps);
         self.churn_requests =
             args.usize_or("churn-requests", self.churn_requests);
+        if args.get("slo-classes").is_some() {
+            self.slo_classes = args.list_or("slo-classes", &[]);
+        }
+        self.slo_batch_window_s =
+            args.f64_or("batch-window", self.slo_batch_window_s);
+        self.slo_max_batch =
+            args.usize_or("max-batch", self.slo_max_batch);
+        if args.get("slo-rates").is_some() {
+            self.slo_rate_rps = args.f64_list_or("slo-rates", &[]);
+        }
+        if args.get("slo-windows").is_some() {
+            self.slo_windows_s = args.f64_list_or("slo-windows", &[]);
+        }
+        self.slo_requests =
+            args.usize_or("slo-requests", self.slo_requests);
+        if args.get("slo-routers").is_some() {
+            self.slo_routers = args.list_or("slo-routers", &[]);
+        }
     }
 
     /// Materialize the churn keys into a [`ChurnConfig`] (the `serve
@@ -513,6 +585,30 @@ impl ExperimentConfig {
             horizon_slack_s: crate::lifecycle::ChurnConfig::default()
                 .horizon_slack_s,
             seed: self.seed ^ 0xC4A2,
+        })
+    }
+
+    /// Materialize the SLO keys into an [`SloConfig`] (the `serve
+    /// --slo` path and the `slo` sweep; windows are overridden per
+    /// sweep cell).
+    ///
+    /// [`SloConfig`]: crate::workload::slo::SloConfig
+    pub fn slo_config(&self) -> Result<crate::workload::slo::SloConfig> {
+        let classes =
+            crate::workload::slo::SloConfig::parse_classes(&self.slo_classes)?;
+        anyhow::ensure!(
+            !classes.is_empty(),
+            "slo_classes must name at least one deadline class"
+        );
+        anyhow::ensure!(
+            self.slo_batch_window_s >= 0.0,
+            "slo_batch_window_s must be >= 0"
+        );
+        anyhow::ensure!(self.slo_max_batch >= 1, "slo_max_batch must be >= 1");
+        Ok(crate::workload::slo::SloConfig {
+            classes,
+            batch_window_s: self.slo_batch_window_s,
+            max_batch: self.slo_max_batch,
         })
     }
 }
@@ -644,6 +740,49 @@ routers = ["ED", "OB"]
         // bad policy is a typed error
         c.churn_policy = "wat".into();
         assert!(c.churn_config().is_err());
+    }
+
+    #[test]
+    fn slo_keys_parse_override_and_materialize() {
+        let t = Table::parse(
+            "[experiment]\nslo_batch_window_s = 0.01\nslo_classes = [\"fast:0.02\", \"slow:2\"]\nslo_rate_rps = [40]\n",
+        )
+        .unwrap();
+        let mut c = ExperimentConfig::from_table(&t);
+        assert_eq!(c.slo_batch_window_s, 0.01);
+        assert_eq!(c.slo_classes, vec!["fast:0.02", "slow:2"]);
+        assert_eq!(c.slo_rate_rps, vec![40.0]);
+        let d = ExperimentConfig::default();
+        assert_eq!(c.slo_max_batch, d.slo_max_batch);
+        assert_eq!(c.slo_windows_s, d.slo_windows_s);
+        // CLI wins over file
+        let args = crate::util::cli::Args::parse(
+            [
+                "--batch-window",
+                "0.002",
+                "--max-batch",
+                "8",
+                "--slo-routers",
+                "LE",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+        );
+        c.override_with(&args);
+        assert_eq!(c.slo_batch_window_s, 0.002);
+        assert_eq!(c.slo_max_batch, 8);
+        assert_eq!(c.slo_routers, vec!["LE"]);
+        // materializes into a typed SloConfig
+        let sc = c.slo_config().unwrap();
+        assert_eq!(sc.classes.len(), 2);
+        assert_eq!(sc.classes[0].name, "fast");
+        assert!((sc.classes[1].deadline_s - 2.0).abs() < 1e-12);
+        assert_eq!(sc.max_batch, 8);
+        // bad class spec is a typed error
+        c.slo_classes = vec!["nope".into()];
+        assert!(c.slo_config().is_err());
+        c.slo_classes = Vec::new();
+        assert!(c.slo_config().is_err());
     }
 
     #[test]

@@ -95,6 +95,7 @@ pub fn churn(h: &Harness) -> Result<()> {
                         queue_capacity: h.cfg.queue_capacity,
                         seed: h.cfg.seed,
                         churn: Some(churn_cfg),
+                        slo: None,
                     },
                 )?;
                 let c =

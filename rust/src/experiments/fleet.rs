@@ -83,6 +83,7 @@ pub fn fleet(h: &Harness) -> Result<()> {
                             seed: h.cfg.seed,
                             drift: None,
                             churn: None,
+                            slo: None,
                         },
                     )?;
                 let report = run_frames(

@@ -14,6 +14,7 @@
 //! | `openloop`| open-loop saturation sweep (beyond the paper)    |
 //! | `fleet`   | sharded multi-gateway fleet sweep (beyond paper) |
 //! | `churn`   | router survivability under node churn (§9)       |
+//! | `slo`     | SLO attainment + dynamic batching sweep (§11)    |
 //!
 //! Every driver prints the paper-style table and writes
 //! `results/<id>.json` for downstream plotting.
@@ -23,6 +24,7 @@ pub mod churn;
 pub mod fleet;
 pub mod openloop;
 pub mod serve;
+pub mod slo;
 pub mod static_figs;
 pub mod sweep;
 
@@ -37,9 +39,9 @@ use crate::router::{GroupRules, ProfileStore};
 use crate::runtime::Engine;
 use crate::util::json::Json;
 
-pub const ALL_EXPERIMENTS: [&str; 12] = [
+pub const ALL_EXPERIMENTS: [&str; 13] = [
     "fig2", "fig4", "fig5", "table1", "fig6", "fig7", "fig8", "fig9",
-    "overhead", "openloop", "fleet", "churn",
+    "overhead", "openloop", "fleet", "churn", "slo",
 ];
 
 /// Shared experiment context.
@@ -133,6 +135,7 @@ impl Harness {
             "openloop" => openloop::openloop(self),
             "fleet" => fleet::fleet(self),
             "churn" => churn::churn(self),
+            "slo" => slo::slo(self),
             "ablation_groups" => ablations::ablation_groups(self),
             "ablation_batch" => ablations::ablation_batch(self),
             "ablation_weighted" => ablations::ablation_weighted(self),

@@ -39,6 +39,7 @@ fn run_cell(
             queue_capacity: h.cfg.queue_capacity,
             seed: h.cfg.seed,
             churn: None,
+            slo: None,
         },
     )
     .map(|mut report| {

@@ -1,0 +1,163 @@
+//! SLO sweep: deadline attainment and batching under rising load
+//! (DESIGN.md §11).
+//!
+//! For each (rate, router) pair the driver replays the same
+//! pre-rendered request set through the open-loop simulator once per
+//! batch-formation window, plus a no-SLO baseline row. The baseline row
+//! shares the event stream with the plain `openloop` experiment
+//! (admission control off, FIFO order, no batching), so every
+//! difference in the SLO rows is attributable to the subsystem under
+//! test: window 0 isolates admission control + EDF, and wider windows
+//! add amortized batch dispatch on top. Reported per cell: goodput,
+//! p99, energy per request, sheds, overall and per-class attainment,
+//! and the mean dispatched batch size.
+
+use anyhow::{Context, Result};
+
+use super::serve::{build_gateway, deployed_store};
+use super::Harness;
+use crate::dataset::{coco, GtBox, Scene};
+use crate::gateway::router_by_name;
+use crate::util::json::Json;
+use crate::workload::openloop::{
+    self, ArrivalProcess, OpenLoopConfig, OpenLoopReport,
+};
+use crate::workload::slo::SloConfig;
+
+fn run_cell(
+    h: &Harness,
+    spec: crate::gateway::RouterSpec,
+    deployed: &crate::router::ProfileStore,
+    frames: &[Scene],
+    gts: &[Vec<GtBox>],
+    rate_rps: f64,
+    slo: Option<SloConfig>,
+) -> Result<OpenLoopReport> {
+    let mut gw = build_gateway(h, spec, deployed, h.cfg.delta_map)?;
+    openloop::run_frames(
+        &mut gw,
+        frames,
+        gts,
+        &OpenLoopConfig {
+            arrivals: ArrivalProcess::Poisson { rate_rps },
+            queue_capacity: h.cfg.queue_capacity,
+            seed: h.cfg.seed,
+            churn: None,
+            slo,
+        },
+    )
+}
+
+/// The `slo` experiment: sweep rate x router x batch window.
+pub fn slo(h: &Harness) -> Result<()> {
+    let n = h.cfg.slo_requests.max(1);
+    let ds = coco::build(n, h.cfg.seed ^ 0x510A);
+    let frames: Vec<Scene> = ds.iter_scenes().collect();
+    let gts: Vec<Vec<GtBox>> =
+        frames.iter().map(|s| s.gt.clone()).collect();
+    let deployed = deployed_store(h)?;
+    let base = h.cfg.slo_config()?;
+    eprintln!(
+        "[slo] pool {} pairs, {} requests, rates {:?} req/s, windows {:?} s, classes {:?}, max batch {}",
+        deployed.pairs().len(),
+        n,
+        h.cfg.slo_rate_rps,
+        h.cfg.slo_windows_s,
+        base.class_names(),
+        base.max_batch
+    );
+    println!(
+        "--- slo (rate x router x batch window over {n} requests) ---"
+    );
+    println!(
+        "{:<6} {:>6} {:>9} {:>9} {:>9} {:>12} {:>6} {:>8} {:>7} {:>18}",
+        "router",
+        "rate",
+        "window",
+        "goodput",
+        "p99_ms",
+        "mWh_per_req",
+        "shed",
+        "attain%",
+        "batch",
+        "per-class attain%"
+    );
+    let mut rows = Vec::new();
+    for &rate in &h.cfg.slo_rate_rps {
+        for name in &h.cfg.slo_routers {
+            let spec = router_by_name(name)
+                .with_context(|| format!("unknown router '{name}'"))?;
+            // baseline: no SLO subsystem at all (the openloop path)
+            let baseline = run_cell(
+                h, spec, &deployed, &frames, &gts, rate, None,
+            )?;
+            println!(
+                "{:<6} {:>6.1} {:>9} {:>9.2} {:>9.1} {:>12.4} {:>6} {:>8} {:>7} {:>18}",
+                spec.name,
+                rate,
+                "off",
+                baseline.goodput_rps(),
+                1000.0 * baseline.metrics.latency_percentile(99.0),
+                baseline.energy_per_request_mwh(),
+                baseline.dropped,
+                "-",
+                "-",
+                "-"
+            );
+            rows.push(Json::obj(vec![
+                ("router", Json::str(spec.name)),
+                ("rate_rps", Json::num(rate)),
+                ("slo", Json::Bool(false)),
+                ("window_s", Json::Null),
+                ("report", baseline.to_json()),
+            ]));
+            for &window in &h.cfg.slo_windows_s {
+                let cfg = SloConfig {
+                    batch_window_s: window,
+                    ..base.clone()
+                };
+                let report = run_cell(
+                    h,
+                    spec,
+                    &deployed,
+                    &frames,
+                    &gts,
+                    rate,
+                    Some(cfg),
+                )?;
+                let s = report.slo.as_ref().expect("slo block missing");
+                let per: Vec<String> = s
+                    .classes
+                    .iter()
+                    .enumerate()
+                    .map(|(i, c)| {
+                        format!("{c}:{:.0}", s.attainment_pct(i))
+                    })
+                    .collect();
+                println!(
+                    "{:<6} {:>6.1} {:>9.4} {:>9.2} {:>9.1} {:>12.4} {:>6} {:>8.1} {:>7.2} {:>18}",
+                    spec.name,
+                    rate,
+                    window,
+                    report.goodput_rps(),
+                    1000.0 * report.metrics.latency_percentile(99.0),
+                    report.energy_per_request_mwh(),
+                    report.dropped,
+                    s.overall_attainment_pct(),
+                    s.mean_batch_size(),
+                    per.join(" ")
+                );
+                rows.push(Json::obj(vec![
+                    ("router", Json::str(spec.name)),
+                    ("rate_rps", Json::num(rate)),
+                    ("slo", Json::Bool(true)),
+                    ("window_s", Json::num(window)),
+                    ("max_batch", Json::num(base.max_batch as f64)),
+                    ("report", report.to_json()),
+                ]));
+            }
+        }
+        println!();
+    }
+    h.save_json("slo", &Json::Arr(rows))
+}

@@ -30,12 +30,14 @@ use crate::detection::map::{map_coco, ImageEval};
 use crate::devices;
 use crate::devices::drift::DriftConfig;
 use crate::estimators::GatewayCost;
-use crate::gateway::{Gateway, NoEndpoint, RoutedRequest, RouterSpec};
+use crate::gateway::{
+    amortize, Gateway, NoEndpoint, RoutedRequest, RouterSpec,
+};
 use crate::lifecycle::{
     self, ChurnConfig, ChurnReport, ChurnState, LossOutcome,
     ResiliencePolicy,
 };
-use crate::metrics::RunMetrics;
+use crate::metrics::{RunMetrics, SloMetrics};
 use crate::nodes::{EdgeNode, NodeDown, NodePool, NodeResponse};
 use crate::router::{PairId, PairKey, PairProfile, ProfileStore};
 use crate::runtime::Engine;
@@ -43,6 +45,7 @@ use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::stats::{percentile, percentiles};
 use crate::workload::openloop::ArrivalProcess;
+use crate::workload::slo::{SloConfig, SloTag};
 
 /// How the fleet front-end assigns an arriving request to a shard.
 ///
@@ -148,6 +151,10 @@ pub struct FleetConfig {
     /// events on the shared heap, per-shard probe-driven membership,
     /// and a resilience policy for requests lost to crashes.
     pub churn: Option<ChurnConfig>,
+    /// SLO + batching (DESIGN.md §11): deadline classes with admission
+    /// control, EDF queue ordering, and per-(shard, pair) batch
+    /// formation. `None` keeps the event stream bit-identical.
+    pub slo: Option<SloConfig>,
 }
 
 impl Default for FleetConfig {
@@ -162,6 +169,7 @@ impl Default for FleetConfig {
             seed: 7,
             drift: None,
             churn: None,
+            slo: None,
         }
     }
 }
@@ -298,6 +306,7 @@ impl<'e> FleetBuilder<'e> {
             n_sources: cfg.n_sources.max(1),
             n_nodes: cfg.n_nodes,
             churn: cfg.churn.clone(),
+            slo: cfg.slo.clone(),
             node_homes,
         })
     }
@@ -311,6 +320,8 @@ pub struct Fleet<'e> {
     n_nodes: usize,
     /// Churn scenario the fleet was built with (drives `run_frames`).
     churn: Option<ChurnConfig>,
+    /// SLO/batching config the fleet was built with.
+    slo: Option<SloConfig>,
     /// Global synthesis index → (owning shard, node identity in that
     /// shard's id space): how the ground-truth failure timeline
     /// addresses nodes.
@@ -360,6 +371,9 @@ pub struct FleetReport {
     /// Churn accounting — present exactly when the fleet was built with
     /// a lifecycle config. `requests + dropped + lost == offered`.
     pub churn: Option<ChurnReport>,
+    /// SLO accounting (attainment per class, sheds, batch-size
+    /// histogram) — present exactly when the fleet had an SLO config.
+    pub slo: Option<SloMetrics>,
 }
 
 impl FleetReport {
@@ -491,6 +505,9 @@ impl FleetReport {
         if let Some(c) = &self.churn {
             fields.push(("churn", c.to_json()));
         }
+        if let Some(s) = &self.slo {
+            fields.push(("slo", s.to_json()));
+        }
         Json::obj(fields)
     }
 }
@@ -528,6 +545,14 @@ enum EventKind {
     ProbeResult { shard: usize, responses: Vec<bool> },
     /// Re-dispatch of request `idx` lost to a crash (retry policy).
     Retry(usize),
+    /// A batch formation window on `pair` (owned by `shard`) closes
+    /// (SLO runs only). `token` identifies the formation generation: a
+    /// new member reschedules the close, leaving earlier events stale.
+    BatchClose {
+        shard: usize,
+        pair: PairId,
+        token: u64,
+    },
 }
 
 impl PartialEq for Event {
@@ -554,6 +579,8 @@ struct Pending {
     arrival_s: f64,
     /// This copy is a hedged duplicate (its completion may be waste).
     hedge: bool,
+    /// Deadline/batching tag; [`SloTag::default`] (inert) without SLOs.
+    slo: SloTag,
 }
 
 /// The request a node is currently serving.
@@ -566,6 +593,23 @@ struct InService {
     /// Matches the scheduled completion event (stale-event guard).
     token: u64,
     hedge: bool,
+    slo: SloTag,
+}
+
+/// A batch under formation on one (shard, pair) — the twin of the
+/// structure in `workload::openloop`. Members hold their queue slots
+/// from admission and flush as one contiguous amortized train.
+struct Forming {
+    members: Vec<Pending>,
+    close_s: f64,
+    /// Matches the live scheduled [`EventKind::BatchClose`].
+    token: u64,
+}
+
+impl Default for Forming {
+    fn default() -> Self {
+        Self { members: Vec::new(), close_s: f64::INFINITY, token: 0 }
+    }
 }
 
 /// Per-node serving state: one in-service slot + FIFO backlog.
@@ -586,6 +630,8 @@ struct SimState {
     total_in_flight: usize,
     peak_in_flight: usize,
     makespan_s: f64,
+    /// Per-shard batches under formation (always empty without SLOs).
+    forming: Vec<BTreeMap<PairId, Forming>>,
 }
 
 impl SimState {
@@ -600,6 +646,7 @@ impl SimState {
             total_in_flight: 0,
             peak_in_flight: 0,
             makespan_s: 0.0,
+            forming: (0..k).map(|_| BTreeMap::new()).collect(),
         }
     }
 
@@ -626,6 +673,26 @@ struct ChurnDriver {
     /// successful placement; retries re-route with these instead of
     /// re-running every visited shard's estimator.
     est: Vec<Option<(usize, GatewayCost)>>,
+}
+
+/// Driver-side SLO context (twin of the one in `workload::openloop`):
+/// fleet-wide attainment accounting over per-request deadlines
+/// precomputed from the materialized arrival times.
+struct SloRt {
+    cfg: SloConfig,
+    deadlines: Vec<f64>,
+    metrics: SloMetrics,
+}
+
+impl SloRt {
+    fn record_done(&mut self, idx: usize, class: usize, done_s: f64) {
+        self.metrics
+            .record_completion(class, done_s <= self.deadlines[idx]);
+    }
+
+    fn shed(&mut self, idx: usize) {
+        self.metrics.record_shed(self.cfg.class_of(idx));
+    }
 }
 
 /// Drive a fleet over pre-rendered frames under open-loop arrivals.
@@ -660,6 +727,26 @@ pub fn run_frames(
             .as_ref()
             .map(|c| c.horizon_slack_s)
             .unwrap_or(0.0);
+    // SLO runs: absolute deadlines are a pure function of the arrival
+    // process, so they're materialized up front alongside it.
+    let mut slo = match fleet.slo.clone() {
+        Some(c) => {
+            anyhow::ensure!(
+                !c.classes.is_empty(),
+                "slo config needs at least one deadline class"
+            );
+            Some(SloRt {
+                deadlines: arrival_times
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &t)| c.deadline_for(i, t))
+                    .collect(),
+                metrics: SloMetrics::new(&c.class_names()),
+                cfg: c,
+            })
+        }
+        None => None,
+    };
     for (idx, t) in arrival_times.into_iter().enumerate() {
         sim.push(t, EventKind::Arrival(idx));
     }
@@ -736,13 +823,48 @@ pub fn run_frames(
                             if let LossOutcome::RetryAt(t) =
                                 ch.state.placement_failed(idx, ev.t)
                             {
-                                sim.push(t, EventKind::Retry(idx));
+                                retry_or_abandon(
+                                    &mut sim,
+                                    &mut ch.state,
+                                    slo.as_mut(),
+                                    idx,
+                                    t,
+                                );
                             }
                         }
-                        _ => sim.dropped += 1,
+                        _ => {
+                            sim.dropped += 1;
+                            // an overflow drop misses its SLO too
+                            if let Some(sr) = slo.as_mut() {
+                                sr.shed(idx);
+                            }
+                        }
                     }
                     continue;
                 };
+                // SLO admission control: predicted completion on the
+                // placed shard already past the deadline → shed now
+                // instead of queueing doomed work (DESIGN.md §11).
+                let mut tag = SloTag::default();
+                if let Some(sr) = slo.as_mut() {
+                    let deadline = sr.deadlines[idx];
+                    let pred = fleet.shards[s].predicted_completion_s(
+                        routed.pair_id,
+                        ev.t,
+                        routed.cost.latency_s,
+                    );
+                    if ev.t + pred > deadline {
+                        sim.dropped += 1;
+                        sr.shed(idx);
+                        continue;
+                    }
+                    tag = SloTag {
+                        class: sr.cfg.class_of(idx),
+                        deadline_s: deadline,
+                        edf_s: deadline,
+                        ..tag
+                    };
+                }
                 // proactive hedging stays within the winning shard (the
                 // duplicate reuses the primary's estimate)
                 let dup = match churn.as_ref() {
@@ -752,6 +874,17 @@ pub fn run_frames(
                     {
                         fleet.shards[s]
                             .route_secondary(&routed, ev.t)
+                            .filter(|&p| match slo.as_ref() {
+                                // hedges respect the remaining budget
+                                Some(sr) => {
+                                    ev.t + fleet.shards[s]
+                                        .predicted_completion_s(
+                                            p, ev.t, 0.0,
+                                        )
+                                        <= sr.deadlines[idx]
+                                }
+                                None => true,
+                            })
                             .map(|p| RoutedRequest {
                                 pair_id: p,
                                 ..routed
@@ -772,16 +905,44 @@ pub fn run_frames(
                         ch.state.hedge_dispatched(idx);
                     }
                 }
+                // batch formation: primary copies without a hedge
+                // sibling join their (shard, pair) forming batch
+                let forms = dup.is_none()
+                    && slo.as_ref().is_some_and(|sr| {
+                        sr.cfg.batch_window_s > 0.0
+                            && sr.cfg.max_batch > 1
+                    });
+                if forms {
+                    join_forming(
+                        &mut fleet.shards[s],
+                        s,
+                        frames,
+                        &mut sim,
+                        &mut churn,
+                        &mut slo,
+                        routed,
+                        tag,
+                        idx,
+                        ev.t,
+                    )?;
+                    continue;
+                }
+                if let Some(sr) = slo.as_mut() {
+                    // unbatched dispatch: a size-1 "batch"
+                    sr.metrics.record_batch(1);
+                }
                 admit_copy(
                     &mut fleet.shards[s],
                     s,
                     frames,
                     &mut sim,
                     &mut churn,
+                    &mut slo,
                     routed,
                     idx,
                     ev.t,
                     false,
+                    tag,
                 )?;
                 if let Some(d) = dup {
                     admit_copy(
@@ -790,10 +951,12 @@ pub fn run_frames(
                         frames,
                         &mut sim,
                         &mut churn,
+                        &mut slo,
                         d,
                         idx,
                         ev.t,
                         true,
+                        tag,
                     )?;
                 }
             }
@@ -824,7 +987,13 @@ pub fn run_frames(
                     if let LossOutcome::RetryAt(t) =
                         ch.state.placement_failed(idx, ev.t)
                     {
-                        sim.push(t, EventKind::Retry(idx));
+                        retry_or_abandon(
+                            &mut sim,
+                            &mut ch.state,
+                            slo.as_mut(),
+                            idx,
+                            t,
+                        );
                     }
                     continue;
                 };
@@ -832,16 +1001,29 @@ pub fn run_frames(
                     ch.est[idx] = Some((routed.estimate, routed.cost));
                 }
                 ch.state.retry_dispatched(idx);
+                // retries bypass batch formation but keep their
+                // deadline for EDF and attainment accounting
+                let tag = match slo.as_ref() {
+                    Some(sr) => SloTag {
+                        class: sr.cfg.class_of(idx),
+                        deadline_s: sr.deadlines[idx],
+                        edf_s: sr.deadlines[idx],
+                        ..SloTag::default()
+                    },
+                    None => SloTag::default(),
+                };
                 admit_copy(
                     &mut fleet.shards[s],
                     s,
                     frames,
                     &mut sim,
                     &mut churn,
+                    &mut slo,
                     routed,
                     idx,
                     ev.t,
                     false,
+                    tag,
                 )?;
             }
             EventKind::Completion {
@@ -878,13 +1060,24 @@ pub fn run_frames(
                     let queue_delay_s = (done.start_s
                         - (done.arrival_s + done.routed.cost.latency_s))
                         .max(0.0);
-                    fleet.shards[s].finish(
+                    // batch followers rode the leader's transfer
+                    let net_s = if done.slo.net {
+                        devices::NETWORK_S
+                    } else {
+                        0.0
+                    };
+                    let (d_idx, d_class) = (done.idx, done.slo.class);
+                    fleet.shards[s].finish_with_network(
                         &done.routed,
                         done.resp,
                         &pseudo_gt[done.idx],
                         queue_delay_s,
+                        net_s,
                         &mut metrics[s],
                     );
+                    if let Some(sr) = slo.as_mut() {
+                        sr.record_done(d_idx, d_class, ev.t);
+                    }
                 }
                 start_next(
                     &mut fleet.shards[s],
@@ -892,6 +1085,7 @@ pub fn run_frames(
                     frames,
                     &mut sim,
                     &mut churn,
+                    &mut slo,
                     pair,
                     ev.t,
                 )?;
@@ -905,7 +1099,10 @@ pub fn run_frames(
                 if let Some(m) = gw.membership_mut() {
                     m.ground_truth_changed(pair, false, ev.t);
                 }
-                lose_queued(gw, s, &mut sim, &mut ch.state, pair, None, ev.t);
+                lose_queued(
+                    gw, s, &mut sim, &mut ch.state, &mut slo, pair, None,
+                    ev.t,
+                );
             }
             EventKind::Rejoin(node) => {
                 let ch = churn.as_ref().expect("rejoin without churn");
@@ -943,6 +1140,26 @@ pub fn run_frames(
                     m.observe_probe(p, *up, ev.t);
                 }
             }
+            EventKind::BatchClose { shard, pair, token } => {
+                if sim.forming[shard].get(&pair).map(|f| f.token)
+                    != Some(token)
+                {
+                    // superseded: a later member rescheduled the close,
+                    // the batch already flushed full, or a crash
+                    // drained the formation
+                    continue;
+                }
+                flush_batch(
+                    &mut fleet.shards[shard],
+                    shard,
+                    frames,
+                    &mut sim,
+                    &mut churn,
+                    &mut slo,
+                    pair,
+                    ev.t,
+                )?;
+            }
         }
     }
 
@@ -967,6 +1184,7 @@ pub fn run_frames(
         makespan_s: sim.makespan_s,
         peak_in_flight: sim.peak_in_flight,
         churn: churn_report,
+        slo: slo.map(|s| s.metrics),
     })
 }
 
@@ -1028,6 +1246,40 @@ fn try_place_with_estimate(
     Ok(None)
 }
 
+/// Enqueue one pending copy. A finite EDF key inserts in deadline order
+/// (stable: ties and infinite keys go after), which degenerates to the
+/// exact pre-SLO FIFO when SLOs are off — every key is infinite then.
+fn push_pending(q: &mut NodeQueue, p: Pending) {
+    if p.slo.edf_s.is_finite() {
+        if let Some(pos) =
+            q.backlog.iter().position(|b| b.slo.edf_s > p.slo.edf_s)
+        {
+            q.backlog.insert(pos, p);
+            return;
+        }
+    }
+    q.backlog.push_back(p);
+}
+
+/// Under SLOs a retry scheduled past the request's deadline cannot
+/// help: abandon the request (it counts as lost) and record the shed.
+/// Otherwise schedule the re-dispatch normally.
+fn retry_or_abandon(
+    sim: &mut SimState,
+    state: &mut ChurnState,
+    slo: Option<&mut SloRt>,
+    idx: usize,
+    retry_t: f64,
+) {
+    match slo {
+        Some(s) if retry_t > s.deadlines[idx] => {
+            state.abandon(idx);
+            s.shed(idx);
+        }
+        _ => sim.push(retry_t, EventKind::Retry(idx)),
+    }
+}
+
 /// Admit one routed copy of request `idx` into its pair's FIFO on
 /// `shard` at time `t` and try to start service.
 #[allow(clippy::too_many_arguments)]
@@ -1037,10 +1289,12 @@ fn admit_copy(
     frames: &[Scene],
     sim: &mut SimState,
     churn: &mut Option<ChurnDriver>,
+    slo: &mut Option<SloRt>,
     routed: RoutedRequest,
     idx: usize,
     t: f64,
     hedge: bool,
+    tag: SloTag,
 ) -> Result<()> {
     let admitted = gw.pool_mut().acquire_id(routed.pair_id);
     debug_assert!(admitted, "route() returned a pair without a free slot");
@@ -1048,15 +1302,101 @@ fn admit_copy(
     sim.total_in_flight += 1;
     sim.peak_in_flight = sim.peak_in_flight.max(sim.total_in_flight);
     let pair = routed.pair_id;
-    sim.queues[shard].entry(pair).or_default().backlog.push_back(
-        Pending {
+    push_pending(
+        sim.queues[shard].entry(pair).or_default(),
+        Pending { routed, idx, arrival_s: t, hedge, slo: tag },
+    );
+    start_next(gw, shard, frames, sim, churn, slo, pair, t)
+}
+
+/// Admit request `idx` into `(shard, pair)`'s forming batch (twin of
+/// the openloop version): the queue slot is acquired NOW, and the batch
+/// flushes when it fills, the window closes, or slack runs out.
+#[allow(clippy::too_many_arguments)]
+fn join_forming(
+    gw: &mut Gateway<'_>,
+    shard: usize,
+    frames: &[Scene],
+    sim: &mut SimState,
+    churn: &mut Option<ChurnDriver>,
+    slo: &mut Option<SloRt>,
+    routed: RoutedRequest,
+    tag: SloTag,
+    idx: usize,
+    t: f64,
+) -> Result<()> {
+    let admitted = gw.pool_mut().acquire_id(routed.pair_id);
+    debug_assert!(admitted, "route() returned a pair without a free slot");
+    sim.in_flight[shard] += 1;
+    sim.total_in_flight += 1;
+    sim.peak_in_flight = sim.peak_in_flight.max(sim.total_in_flight);
+    let pair = routed.pair_id;
+    let (window_s, max_batch) = {
+        let s = slo.as_ref().expect("forming without slo");
+        (s.cfg.batch_window_s, s.cfg.max_batch)
+    };
+    let latest_s = (tag.deadline_s
+        - gw.predicted_completion_s(pair, t, 0.0))
+    .max(t);
+    let member_close = (t + window_s).min(latest_s);
+    let (flush_now, close_s) = {
+        let f = sim.forming[shard].entry(pair).or_default();
+        f.members.push(Pending {
             routed,
             idx,
             arrival_s: t,
-            hedge,
-        },
-    );
-    start_next(gw, shard, frames, sim, churn, pair, t)
+            hedge: false,
+            slo: tag,
+        });
+        f.close_s = f.close_s.min(member_close);
+        (f.members.len() >= max_batch || f.close_s <= t, f.close_s)
+    };
+    if flush_now {
+        return flush_batch(gw, shard, frames, sim, churn, slo, pair, t);
+    }
+    // (re)schedule the close; earlier BatchClose events go stale
+    let token = sim.seq;
+    sim.forming[shard].get_mut(&pair).expect("just inserted").token =
+        token;
+    sim.push(close_s, EventKind::BatchClose { shard, pair, token });
+    Ok(())
+}
+
+/// Flush `(shard, pair)`'s forming batch into its FIFO as one amortized
+/// service train (twin of the openloop version).
+#[allow(clippy::too_many_arguments)]
+fn flush_batch(
+    gw: &mut Gateway<'_>,
+    shard: usize,
+    frames: &[Scene],
+    sim: &mut SimState,
+    churn: &mut Option<ChurnDriver>,
+    slo: &mut Option<SloRt>,
+    pair: PairId,
+    now_s: f64,
+) -> Result<()> {
+    let Some(f) = sim.forming[shard].remove(&pair) else {
+        return Ok(());
+    };
+    if f.members.is_empty() {
+        return Ok(());
+    }
+    if let Some(s) = slo.as_mut() {
+        s.metrics.record_batch(f.members.len());
+    }
+    let edf_s = f
+        .members
+        .iter()
+        .map(|m| m.slo.deadline_s)
+        .fold(f64::INFINITY, f64::min);
+    for (i, mut m) in f.members.into_iter().enumerate() {
+        m.slo.edf_s = edf_s;
+        m.slo.amortized = i > 0;
+        m.slo.net = i == 0;
+        // slots were acquired at formation entry — enqueue directly
+        push_pending(sim.queues[shard].entry(pair).or_default(), m);
+    }
+    start_next(gw, shard, frames, sim, churn, slo, pair, now_s)
 }
 
 /// If `pair` (on shard `shard`) is idle and has backlog, begin serving
@@ -1071,6 +1411,7 @@ fn start_next(
     frames: &[Scene],
     sim: &mut SimState,
     churn: &mut Option<ChurnDriver>,
+    slo: &mut Option<SloRt>,
     pair: PairId,
     now_s: f64,
 ) -> Result<()> {
@@ -1084,21 +1425,38 @@ fn start_next(
         return Ok(());
     };
     let start_s = now_s.max(p.arrival_s + p.routed.cost.latency_s);
-    let resp = match gw.serve(pair, &frames[p.idx].image, start_s) {
+    let mut resp = match gw.serve(pair, &frames[p.idx].image, start_s) {
         Ok(r) => r,
         Err(e) if churn.is_some() && e.is::<NodeDown>() => {
             if let Some(m) = gw.membership_mut() {
                 m.observe_dispatch_failure(pair, now_s);
             }
             let ch = churn.as_mut().expect("checked above");
-            lose_queued(gw, shard, sim, &mut ch.state, pair, Some(p), now_s);
+            lose_queued(
+                gw,
+                shard,
+                sim,
+                &mut ch.state,
+                slo,
+                pair,
+                Some(p),
+                now_s,
+            );
             return Ok(());
         }
         Err(e) => return Err(e),
     };
+    if p.slo.amortized {
+        // batch follower: the leader already paid the shared
+        // preprocess; amortize it out of latency and energy
+        let (save_s, save_mwh) = gw.batch_savings(pair);
+        resp.latency_s = amortize(resp.latency_s, save_s);
+        resp.energy_mwh = amortize(resp.energy_mwh, save_mwh);
+    }
+    let net_s = if p.slo.net { devices::NETWORK_S } else { 0.0 };
     let token = sim.seq;
     sim.push(
-        start_s + resp.latency_s + devices::NETWORK_S,
+        start_s + resp.latency_s + net_s,
         EventKind::Completion { shard, pair, token },
     );
     // re-borrow: gw.serve() above needed &mut Gateway exclusively
@@ -1111,6 +1469,7 @@ fn start_next(
             resp,
             token,
             hedge: p.hedge,
+            slo: p.slo,
         });
     Ok(())
 }
@@ -1124,6 +1483,7 @@ fn lose_queued(
     shard: usize,
     sim: &mut SimState,
     state: &mut ChurnState,
+    slo: &mut Option<SloRt>,
     pair: PairId,
     head: Option<Pending>,
     now_s: f64,
@@ -1142,12 +1502,20 @@ fn lose_queued(
     } else if let Some(p) = &head {
         idxs.push(p.idx);
     }
+    // a forming batch on this pair holds slots too — it dies with the node
+    if let Some(f) = sim.forming[shard].remove(&pair) {
+        for p in f.members {
+            idxs.push(p.idx);
+        }
+    }
     for idx in idxs {
         gw.pool_mut().release_id(pair);
         sim.in_flight[shard] -= 1;
         sim.total_in_flight -= 1;
         match state.copy_lost(idx, now_s) {
-            LossOutcome::RetryAt(t) => sim.push(t, EventKind::Retry(idx)),
+            LossOutcome::RetryAt(t) => {
+                retry_or_abandon(sim, state, slo.as_mut(), idx, t)
+            }
             LossOutcome::Absorbed | LossOutcome::Lost => {}
         }
     }
@@ -1347,6 +1715,84 @@ mod tests {
     }
 
     #[test]
+    fn fleet_slo_runs_replay_bit_identically_with_slo_block() {
+        let e = engine();
+        let ds = coco::build(18, 55);
+        let run = |e: &Engine| {
+            let cfg = FleetConfig {
+                n_nodes: 8,
+                n_shards: 2,
+                queue_capacity: 4,
+                slo: Some(crate::workload::slo::SloConfig::default()),
+                ..Default::default()
+            };
+            let mut fl = build_fleet(e, "ED", &cfg);
+            run_dataset(
+                &mut fl,
+                &ds,
+                &ArrivalProcess::Poisson { rate_rps: 250.0 },
+                11,
+            )
+            .unwrap()
+            .to_json()
+            .dump()
+        };
+        let a = run(&e);
+        assert_eq!(a, run(&e));
+        assert!(a.contains("\"slo\""), "report must carry the slo block");
+    }
+
+    #[test]
+    fn fleet_batching_forms_multi_request_trains() {
+        use crate::workload::slo::{SloClass, SloConfig};
+        let e = engine();
+        let ds = coco::build(40, 47);
+        // one loose class: nothing sheds, so the batch machinery is
+        // exercised in isolation (capacity is generous for the same
+        // reason — drops would confound the accounting).
+        let slo = SloConfig {
+            classes: vec![SloClass {
+                name: "relaxed".to_string(),
+                deadline_s: 1e9,
+            }],
+            batch_window_s: 0.02,
+            max_batch: 4,
+        };
+        let cfg = FleetConfig {
+            n_nodes: 8,
+            n_shards: 2,
+            queue_capacity: 64,
+            slo: Some(slo),
+            ..Default::default()
+        };
+        let mut fl = build_fleet(&e, "LE", &cfg);
+        let report = run_dataset(
+            &mut fl,
+            &ds,
+            &ArrivalProcess::Poisson { rate_rps: 400.0 },
+            7,
+        )
+        .unwrap();
+        assert_eq!(report.dropped, 0, "nothing should shed");
+        assert_eq!(report.requests(), report.offered);
+        let s = report.slo.as_ref().expect("slo metrics");
+        assert!(
+            s.mean_batch_size() > 1.5,
+            "saturating arrivals must coalesce: mean batch {}",
+            s.mean_batch_size()
+        );
+        assert!((s.overall_attainment_pct() - 100.0).abs() < 1e-9);
+        // every slot released despite batch formation holding slots
+        assert_eq!(
+            fl.shards()
+                .iter()
+                .map(|g| g.pool().total_in_flight())
+                .sum::<usize>(),
+            0
+        );
+    }
+
+    #[test]
     fn fleet_churn_crashes_lose_and_recover_deterministically() {
         // both the retry and hedge policies: crashes fire, every
         // request is accounted exactly once (served, shed, or lost —
@@ -1525,6 +1971,7 @@ mod tests {
             makespan_s: 4.0,
             peak_in_flight: 5,
             churn: None,
+            slo: None,
         };
         assert_eq!(report.requests(), 8);
         assert!((report.shard_imbalance() - 1.5).abs() < 1e-12);

@@ -21,6 +21,17 @@ use crate::router::{
 };
 use crate::runtime::Engine;
 
+/// Share of a device's preprocess cost saved by every batch member
+/// after the first (pipelined decode keeps the device warm). Exposed so
+/// drivers and tests can reproduce the amortization arithmetic.
+pub const BATCH_PREPROCESS_DISCOUNT: f64 = 0.6;
+
+/// Amortized cost after subtracting a batch saving, clamped at zero —
+/// a discount can never turn a latency or energy figure negative.
+pub fn amortize(cost: f64, save: f64) -> f64 {
+    (cost - save).max(0.0)
+}
+
 /// One of the paper's ten evaluated router configurations: an estimator
 /// plus a routing policy.
 #[derive(Clone, Copy, Debug)]
@@ -365,6 +376,42 @@ impl<'e> Gateway<'e> {
         }
     }
 
+    /// Per-member batch savings on one endpoint: the (latency s, energy
+    /// mWh) every batch member after the first saves by amortizing the
+    /// device's preprocess stage ([`BATCH_PREPROCESS_DISCOUNT`]).
+    /// `(0, 0)` for pairs without a deployed node, so callers can apply
+    /// it unconditionally.
+    pub fn batch_savings(&self, pair_id: PairId) -> (f64, f64) {
+        match self.pool.device_of_id(pair_id) {
+            Some(dev) => {
+                let save_s = dev.preprocess_s * BATCH_PREPROCESS_DISCOUNT;
+                (save_s, dev.cpu_dyn_power_w * save_s / 3.6)
+            }
+            None => (0.0, 0.0),
+        }
+    }
+
+    /// Admission-time completion prediction for one routed endpoint:
+    /// the gateway-side estimation latency already paid, plus every
+    /// request ahead of this one (current queue occupancy) and the
+    /// request itself at the pair's mean profiled service time (under
+    /// the warm-up overlay, like routing itself), plus the network hop.
+    /// SLO admission sheds a request when `now + prediction` already
+    /// blows its deadline, instead of waiting for queue overflow.
+    pub fn predicted_completion_s(
+        &self,
+        pair_id: PairId,
+        now_s: f64,
+        gw_latency_s: f64,
+    ) -> f64 {
+        let view =
+            Self::aged_view(&self.store, self.membership.as_ref(), now_s);
+        let ahead = self.pool.queue_depth_id(pair_id) as f64;
+        gw_latency_s
+            + (ahead + 1.0) * view.mean_latency_s(pair_id)
+            + devices::NETWORK_S
+    }
+
     /// Dispatch phase: execute one request on the routed node at time
     /// `now_s` on the virtual clock (open-loop drivers pass their event
     /// time; the closed loop passes its serial clock).
@@ -400,6 +447,29 @@ impl<'e> Gateway<'e> {
         queue_delay_s: f64,
         metrics: &mut RunMetrics,
     ) -> RequestOutcome {
+        self.finish_with_network(
+            routed,
+            resp,
+            gt,
+            queue_delay_s,
+            devices::NETWORK_S,
+            metrics,
+        )
+    }
+
+    /// [`Gateway::finish`] with an explicit network charge. Batch
+    /// followers ride the first member's transfer, so the open-loop
+    /// drivers record them with `network_s = 0.0`; everything else
+    /// passes [`devices::NETWORK_S`].
+    pub fn finish_with_network(
+        &mut self,
+        routed: &RoutedRequest,
+        resp: NodeResponse,
+        gt: &[GtBox],
+        queue_delay_s: f64,
+        network_s: f64,
+        metrics: &mut RunMetrics,
+    ) -> RequestOutcome {
         self.estimator.observe_response(resp.detections.len());
         let n_det = resp.detections.len();
         // resolve the interned id at the metrics edge (strings live
@@ -414,7 +484,7 @@ impl<'e> Gateway<'e> {
             routed.cost.energy_mwh,
             resp.latency_s,
             resp.energy_mwh,
-            devices::NETWORK_S,
+            network_s,
             ImageEval {
                 dets: resp.detections,
                 gt: gt.to_vec(),
@@ -466,50 +536,55 @@ impl<'e> Gateway<'e> {
     /// The estimator sees only the first image; the chosen node serves
     /// the whole batch back-to-back (device stays warm: the preprocess
     /// share of latency/energy after the first request is discounted by
-    /// `BATCH_PREPROCESS_DISCOUNT`, modelling pipelined decode).
+    /// [`BATCH_PREPROCESS_DISCOUNT`], modelling pipelined decode).
+    ///
+    /// Routing goes through the same admission path as
+    /// [`Gateway::handle`] — membership-aware health, queue occupancy,
+    /// and the fallback walk — and the batch holds one queue slot while
+    /// it drains, so batch traffic is visible to occupancy-aware
+    /// routing instead of reaching the pool behind admission's back.
     pub fn handle_batch(
         &mut self,
         images: &[(Vec<f32>, usize, Vec<GtBox>)],
         metrics: &mut RunMetrics,
     ) -> Result<BatchOutcome> {
-        const BATCH_PREPROCESS_DISCOUNT: f64 = 0.6;
         anyhow::ensure!(!images.is_empty(), "empty batch");
         let (first_img, first_count, _) = &images[0];
-        let (estimate, cost) = self.estimator.estimate(
-            self.engine,
-            &self.gateway_dev,
-            first_img,
-            *first_count,
-        )?;
-        let group = self.rules.group_of(estimate);
-        let view = RoutingView::new(&self.store);
-        let pair_id = self
-            .policy
-            .route_view(&view, group)
-            .context("policy returned no endpoint")?;
-        let pair = self.store.key_of(pair_id).clone();
+        let (estimate, cost) =
+            self.estimate_request(first_img, *first_count)?;
         let now = self.now_s;
-        let node = self
-            .pool
-            .get_id(pair_id)
-            .with_context(|| format!("no deployed node for {pair}"))?;
+        let routed =
+            self.route_with_estimate(estimate, *first_count, cost, now)?;
+        let pair_id = routed.pair_id;
+        let pair = self.store.key_of(pair_id).clone();
+        anyhow::ensure!(
+            self.pool.acquire_id(pair_id),
+            "no queue slot on {pair} for batch"
+        );
+        let (save_s, save_mwh) = self.batch_savings(pair_id);
         let mut dets_per_image = Vec::with_capacity(images.len());
         for (i, (img, true_count, gt)) in images.iter().enumerate() {
-            let mut resp = node.process_at(self.engine, img, now)?;
+            let mut resp = match self.serve(pair_id, img, now) {
+                Ok(r) => r,
+                Err(e) => {
+                    // free the batch's slot before propagating, or the
+                    // node leaks occupancy into every later decision
+                    self.pool.release_id(pair_id);
+                    return Err(e);
+                }
+            };
             if i > 0 {
                 // amortized preprocessing within the batch
-                let save_s = node.device().preprocess_s
-                    * BATCH_PREPROCESS_DISCOUNT;
-                let save_mwh = node.device().cpu_dyn_power_w * save_s / 3.6;
-                resp.latency_s = (resp.latency_s - save_s).max(0.0);
-                resp.energy_mwh = (resp.energy_mwh - save_mwh).max(0.0);
+                resp.latency_s = amortize(resp.latency_s, save_s);
+                resp.energy_mwh = amortize(resp.energy_mwh, save_mwh);
             }
-            let gw_cost = if i == 0 { cost } else { Default::default() };
+            let gw_cost =
+                if i == 0 { routed.cost } else { Default::default() };
             self.now_s += gw_cost.latency_s + resp.latency_s;
             dets_per_image.push(resp.detections.len());
             metrics.record_request(
                 &pair,
-                group,
+                routed.group,
                 estimate,
                 *true_count,
                 gw_cost.latency_s,
@@ -523,12 +598,13 @@ impl<'e> Gateway<'e> {
                 },
             );
         }
+        self.pool.release_id(pair_id);
         if let Some(&last) = dets_per_image.last() {
             self.estimator.observe_response(last);
         }
         Ok(BatchOutcome {
             pair,
-            group,
+            group: routed.group,
             detections_per_image: dets_per_image,
         })
     }
@@ -822,5 +898,141 @@ mod tests {
             gw.estimate_request(&crowded.image, 7).unwrap();
         assert_eq!(next, o1.detections);
         assert_eq!(next_cost.latency_s, 0.0, "OB estimation is free");
+    }
+
+    #[test]
+    fn amortize_clamps_at_zero() {
+        assert_eq!(amortize(3.0, 1.0), 2.0);
+        assert_eq!(amortize(1.0, 1.0), 0.0);
+        assert_eq!(amortize(0.001, 5.0), 0.0, "never negative");
+        assert_eq!(amortize(0.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn empty_batch_is_an_error() {
+        let e = engine();
+        let store = tiny_store();
+        let pool =
+            NodePool::deploy(&e, &store.pairs(), &fleet(), 1).unwrap();
+        let mut gw = Gateway::new(
+            &e,
+            router_by_name("ED").unwrap(),
+            store,
+            pool,
+            5.0,
+            1,
+        );
+        let mut m = RunMetrics::new("ED");
+        let err = gw.handle_batch(&[], &mut m).unwrap_err();
+        assert!(err.to_string().contains("empty batch"));
+        assert_eq!(m.requests, 0);
+    }
+
+    #[test]
+    fn batch_pays_estimator_and_network_once_and_amortizes_preprocess() {
+        // Differential against the single-request path: two gateways
+        // with identical pools (same deploy seed => same per-node
+        // jitter sequence) serve the SAME image three times — once as
+        // one batch, once as three independent requests. The batch must
+        // pay the estimator and the network hop exactly once and save
+        // 2x the amortized preprocess share on both latency and energy.
+        let e = engine();
+        let img =
+            scene::render_spec(&SceneSpec { id: 0, seed: 5, n_objects: 2 });
+        let batch: Vec<(Vec<f32>, usize, Vec<GtBox>)> = (0..3)
+            .map(|_| (img.image.clone(), img.gt.len(), img.gt.clone()))
+            .collect();
+        let build = |e: &'_ Engine| {
+            let store = tiny_store();
+            let pool =
+                NodePool::deploy(e, &store.pairs(), &fleet(), 7).unwrap();
+            Gateway::new(e, router_by_name("ED").unwrap(), store, pool, 5.0, 7)
+        };
+        let per = crate::devices::gateway_spec()
+            .profile(&e.meta(crate::models::CANNY_MODEL).unwrap());
+
+        let mut gw_b = build(&e);
+        let mut m_b = RunMetrics::new("batch");
+        let out = gw_b.handle_batch(&batch, &mut m_b).unwrap();
+        assert_eq!(out.detections_per_image.len(), 3);
+        assert_eq!(m_b.requests, 3);
+        let pair_id = gw_b.store().id_of(&out.pair).unwrap();
+        let (save_s, save_mwh) = gw_b.batch_savings(pair_id);
+        assert!(save_s > 0.0 && save_mwh > 0.0);
+        // the batch's queue slot is released once it drains
+        assert_eq!(gw_b.pool().queue_depth_id(pair_id), 0);
+
+        let mut gw_s = build(&e);
+        let mut m_s = RunMetrics::new("single");
+        for (image, count, gt) in &batch {
+            gw_s.handle(image, *count, gt, &mut m_s).unwrap();
+        }
+        assert_eq!(m_s.requests, 3);
+
+        // estimator ran once for the batch, three times single-shot
+        assert!((m_b.gateway_energy_mwh - per.energy_mwh).abs() < 1e-12);
+        assert!(
+            (m_s.gateway_energy_mwh - 3.0 * per.energy_mwh).abs() < 1e-12
+        );
+        // NETWORK_S charged once per batch, and two members amortize:
+        // the single-shot run is dearer by exactly 2 x (estimator
+        // latency + network hop + preprocess saving)
+        let extra = m_s.total_latency_s - m_b.total_latency_s;
+        assert!(
+            (extra - 2.0 * (per.latency_s + devices::NETWORK_S + save_s))
+                .abs()
+                < 1e-9,
+            "latency delta {extra}"
+        );
+        let extra_e = m_s.total_energy_mwh() - m_b.total_energy_mwh();
+        assert!(
+            (extra_e - 2.0 * (per.energy_mwh + save_mwh)).abs() < 1e-9,
+            "energy delta {extra_e}"
+        );
+    }
+
+    #[test]
+    fn batch_routes_through_node_admission() {
+        // the regression this fixes: handle_batch used to reach the
+        // node via pool.get_id without health checks or slot
+        // accounting, so batches landed on crashed nodes and were
+        // invisible to occupancy-aware routing
+        let e = engine();
+        let store = tiny_store();
+        let pool =
+            NodePool::deploy(&e, &store.pairs(), &fleet(), 1).unwrap();
+        let mut gw = Gateway::new(
+            &e,
+            router_by_name("LE").unwrap(),
+            store,
+            pool,
+            5.0,
+            1,
+        );
+        let cheap = PairKey::new("ssd_v1", "jetson_orin_nano");
+        let big = PairKey::new("yolov8n", "pi5_aihat");
+        let img = vec![0.5f32; 384 * 384];
+        let batch = vec![(img, 0usize, Vec::<GtBox>::new())];
+        let mut m = RunMetrics::new("LE");
+        // healthy pool: LE's batch lands on the cheap pair
+        let out = gw.handle_batch(&batch, &mut m).unwrap();
+        assert_eq!(out.pair, cheap);
+        // cheap pair down: admission walks to the fallback pair
+        // instead of dispatching onto the crashed node
+        gw.pool_mut().set_health(&cheap, false);
+        let before = gw.fallbacks;
+        let out = gw.handle_batch(&batch, &mut m).unwrap();
+        assert_eq!(out.pair, big);
+        assert!(gw.fallbacks > before, "fallback re-route counted");
+        // every node down: the batch is refused at admission with the
+        // typed shed error, not served
+        gw.pool_mut().set_health(&big, false);
+        let err = gw.handle_batch(&batch, &mut m).unwrap_err();
+        assert!(err.is::<NoEndpoint>(), "{err}");
+        // no slot leaked by any of the above
+        let big_id = gw.store().id_of(&big).unwrap();
+        let cheap_id = gw.store().id_of(&cheap).unwrap();
+        assert_eq!(gw.pool().queue_depth_id(big_id), 0);
+        assert_eq!(gw.pool().queue_depth_id(cheap_id), 0);
     }
 }

@@ -498,6 +498,19 @@ impl ChurnState {
         }
     }
 
+    /// Give up on `idx` entirely: its deadline has passed, so a retry
+    /// or re-dispatch can no longer help. Counts the request as lost
+    /// (exactly once — a no-op if a copy already completed or the
+    /// request was already abandoned) and marks it done so straggler
+    /// copies resolve as absorbed/wasted.
+    pub fn abandon(&mut self, idx: usize) {
+        let r = &mut self.req[idx];
+        if !r.done {
+            r.done = true;
+            self.lost += 1;
+        }
+    }
+
     /// One copy of `idx` completed service. Returns `true` when this
     /// copy wins (the request must be recorded); a losing hedge copy's
     /// energy is accounted as waste instead.

@@ -21,7 +21,10 @@
 //! churn options: --mtbf <s> --mttr <s> --resilience drop|retry|hedge
 //! --retry-budget <n> --probe-interval <s> --warmup <s>, and for the
 //! sweep --churn-availability a,b --churn-policies a,b
-//! --churn-routers a,b --churn-rate <req/s> --churn-requests <n>
+//! --churn-routers a,b --churn-rate <req/s> --churn-requests <n>;
+//! slo options: --slo --slo-classes name:d,name:d --batch-window <s>
+//! --max-batch <n>, and for the sweep --slo-rates a,b
+//! --slo-windows a,b --slo-routers a,b --slo-requests <n>
 
 use anyhow::Result;
 
@@ -46,10 +49,12 @@ USAGE:
                    [--dispatch hash|least|sticky]
                    [--churn] [--mtbf S] [--mttr S]
                    [--resilience drop|retry|hedge]
+                   [--slo] [--slo-classes name:d,name:d]
+                   [--batch-window S] [--max-batch N]
   ecore list
 
 experiments: fig2 fig4 fig5 table1 fig6 fig7 fig8 fig9 overhead openloop
-             fleet churn
+             fleet churn slo
 ";
 
 fn main() -> Result<()> {
@@ -121,6 +126,11 @@ fn main() -> Result<()> {
             } else {
                 None
             };
+            let slo_cfg = if args.flag("slo") {
+                Some(h.cfg.slo_config()?)
+            } else {
+                None
+            };
             if args.flag("fleet") {
                 let dispatch_s =
                     args.str_or("dispatch", &h.cfg.fleet_dispatch);
@@ -141,6 +151,7 @@ fn main() -> Result<()> {
                     seed: h.cfg.seed,
                     drift: None,
                     churn: churn_cfg.clone(),
+                    slo: slo_cfg.clone(),
                 };
                 let mut fl = ecore::fleet::FleetBuilder::new(
                     &h.engine,
@@ -191,9 +202,15 @@ fn main() -> Result<()> {
                 if let Some(c) = &report.churn {
                     println!("{}", c.summary());
                 }
+                if let Some(s) = &report.slo {
+                    print_slo(s);
+                }
                 return Ok(());
             }
-            if args.flag("open-loop") || args.flag("churn") {
+            if args.flag("open-loop")
+                || args.flag("churn")
+                || args.flag("slo")
+            {
                 let mut gw = ecore::experiments::serve::build_gateway(
                     &h,
                     spec,
@@ -211,6 +228,7 @@ fn main() -> Result<()> {
                         queue_capacity: h.cfg.queue_capacity,
                         seed: h.cfg.seed,
                         churn: churn_cfg,
+                        slo: slo_cfg,
                     },
                 )?;
                 let m = &report.metrics;
@@ -243,6 +261,9 @@ fn main() -> Result<()> {
                 );
                 if let Some(c) = &report.churn {
                     println!("{}", c.summary());
+                }
+                if let Some(s) = &report.slo {
+                    print_slo(s);
                 }
                 return Ok(());
             }
@@ -284,4 +305,19 @@ fn main() -> Result<()> {
             std::process::exit(2);
         }
     }
+}
+
+fn print_slo(s: &ecore::metrics::SloMetrics) {
+    let per: Vec<String> = s
+        .classes
+        .iter()
+        .enumerate()
+        .map(|(i, name)| format!("{name} {:.1}%", s.attainment_pct(i)))
+        .collect();
+    println!(
+        "SLO attainment {:.1}% ({}), mean batch size {:.2}",
+        s.overall_attainment_pct(),
+        per.join(", "),
+        s.mean_batch_size()
+    );
 }

@@ -157,6 +157,143 @@ impl RunMetrics {
     }
 }
 
+/// SLO accounting for one run: per-deadline-class attainment, the
+/// shed/miss breakdown, and the batch-size histogram (DESIGN.md §11).
+/// Only materialized when an SLO config is active — `None` runs carry
+/// no SLO block and serialize bit-identically to the pre-SLO reports.
+#[derive(Clone, Debug, Default)]
+pub struct SloMetrics {
+    /// Deadline-class names, indexed by class id.
+    pub classes: Vec<String>,
+    /// Served within deadline, per class.
+    pub met: Vec<usize>,
+    /// Served but past deadline, per class.
+    pub missed: Vec<usize>,
+    /// Shed at admission (predicted completion blew the budget) or
+    /// abandoned (retry past deadline), per class.
+    pub shed: Vec<usize>,
+    /// Dispatched batch sizes -> count (size 1 = unbatched dispatch).
+    pub batch_sizes: BTreeMap<usize, usize>,
+}
+
+impl SloMetrics {
+    pub fn new(classes: &[String]) -> Self {
+        let n = classes.len();
+        Self {
+            classes: classes.to_vec(),
+            met: vec![0; n],
+            missed: vec![0; n],
+            shed: vec![0; n],
+            batch_sizes: BTreeMap::new(),
+        }
+    }
+
+    /// A request of `class` completed; `on_time` is completion vs its
+    /// absolute deadline on the virtual clock.
+    pub fn record_completion(&mut self, class: usize, on_time: bool) {
+        if let Some(c) = if on_time {
+            self.met.get_mut(class)
+        } else {
+            self.missed.get_mut(class)
+        } {
+            *c += 1;
+        }
+    }
+
+    /// A request of `class` was shed at admission or abandoned.
+    pub fn record_shed(&mut self, class: usize) {
+        if let Some(c) = self.shed.get_mut(class) {
+            *c += 1;
+        }
+    }
+
+    /// One service event dispatched `size` requests as a batch.
+    pub fn record_batch(&mut self, size: usize) {
+        *self.batch_sizes.entry(size).or_default() += 1;
+    }
+
+    /// Attainment % for one class: met / (met + missed + shed). A class
+    /// nothing arrived in attains 100 by convention.
+    pub fn attainment_pct(&self, class: usize) -> f64 {
+        let met = self.met.get(class).copied().unwrap_or(0);
+        let total = met
+            + self.missed.get(class).copied().unwrap_or(0)
+            + self.shed.get(class).copied().unwrap_or(0);
+        if total == 0 {
+            100.0
+        } else {
+            100.0 * met as f64 / total as f64
+        }
+    }
+
+    /// Attainment % across every class.
+    pub fn overall_attainment_pct(&self) -> f64 {
+        let met: usize = self.met.iter().sum();
+        let total: usize = met
+            + self.missed.iter().sum::<usize>()
+            + self.shed.iter().sum::<usize>();
+        if total == 0 {
+            100.0
+        } else {
+            100.0 * met as f64 / total as f64
+        }
+    }
+
+    /// Mean dispatched batch size (1.0 when nothing was batched yet).
+    pub fn mean_batch_size(&self) -> f64 {
+        let events: usize = self.batch_sizes.values().sum();
+        if events == 0 {
+            return 1.0;
+        }
+        let members: usize =
+            self.batch_sizes.iter().map(|(s, n)| s * n).sum();
+        members as f64 / events as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "attainment_pct",
+                Json::num(self.overall_attainment_pct()),
+            ),
+            ("mean_batch_size", Json::num(self.mean_batch_size())),
+            (
+                "per_class",
+                Json::Arr(
+                    (0..self.classes.len())
+                        .map(|i| {
+                            Json::obj(vec![
+                                ("class", Json::str(&self.classes[i])),
+                                ("met", Json::num(self.met[i] as f64)),
+                                (
+                                    "missed",
+                                    Json::num(self.missed[i] as f64),
+                                ),
+                                ("shed", Json::num(self.shed[i] as f64)),
+                                (
+                                    "attainment_pct",
+                                    Json::num(self.attainment_pct(i)),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "batch_size_hist",
+                Json::Obj(
+                    self.batch_sizes
+                        .iter()
+                        .map(|(s, n)| {
+                            (s.to_string(), Json::num(*n as f64))
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
 /// Render a comparison table (one row per run) the way the paper's
 /// figures report: mAP, total latency, dynamic energy, gateway overhead.
 pub fn render_table(runs: &[&RunMetrics]) -> String {
@@ -279,6 +416,36 @@ mod tests {
         let j = m.to_json();
         assert!(j.req("latency_p95_s").is_ok());
         assert!(j.req("queue_delay_s").is_ok());
+    }
+
+    #[test]
+    fn slo_metrics_attainment_and_histogram() {
+        let classes =
+            vec!["interactive".to_string(), "relaxed".to_string()];
+        let mut s = SloMetrics::new(&classes);
+        // empty classes attain 100 by convention
+        assert_eq!(s.attainment_pct(0), 100.0);
+        assert_eq!(s.overall_attainment_pct(), 100.0);
+        assert_eq!(s.mean_batch_size(), 1.0);
+        s.record_completion(0, true);
+        s.record_completion(0, true);
+        s.record_completion(0, false);
+        s.record_shed(0);
+        s.record_completion(1, true);
+        assert!((s.attainment_pct(0) - 50.0).abs() < 1e-12);
+        assert_eq!(s.attainment_pct(1), 100.0);
+        assert!((s.overall_attainment_pct() - 60.0).abs() < 1e-12);
+        // out-of-range classes are ignored, never panic
+        s.record_completion(9, true);
+        s.record_shed(9);
+        s.record_batch(1);
+        s.record_batch(3);
+        s.record_batch(3);
+        assert!((s.mean_batch_size() - 7.0 / 3.0).abs() < 1e-12);
+        let j = s.to_json();
+        assert!(j.req("attainment_pct").is_ok());
+        assert!(j.req("per_class").is_ok());
+        assert!(j.req("batch_size_hist").is_ok());
     }
 
     #[test]

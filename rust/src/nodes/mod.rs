@@ -289,6 +289,13 @@ impl NodePool {
         Some(&mut self.nodes[i])
     }
 
+    /// The deployed node's device spec by interned id — O(1). Batch
+    /// amortization reads `preprocess_s`/`cpu_dyn_power_w` through this
+    /// without taking the mutable node borrow `get_id` requires.
+    pub fn device_of_id(&self, id: PairId) -> Option<&DeviceSpec> {
+        self.node_index(id).map(|i| self.nodes[i].device())
+    }
+
     /// [`NodePool::is_available`] by interned id — O(1).
     pub fn is_available_id(&self, id: PairId) -> bool {
         self.node_index(id)

@@ -62,6 +62,7 @@ impl Args {
                 "open-loop",
                 "fleet",
                 "churn",
+                "slo",
             ],
         )
     }
@@ -195,6 +196,17 @@ mod tests {
         assert!(a.flag("churn"));
         assert_eq!(a.f64_or("mtbf", 0.0), 12.0);
         assert_eq!(a.str_or("resilience", ""), "hedge");
+    }
+
+    #[test]
+    fn slo_is_a_flag_with_value_options() {
+        let a = args(&["--slo", "--batch-window", "0.004", "--slo-classes", "fast:0.02,slow:1"]);
+        assert!(a.flag("slo"));
+        assert_eq!(a.f64_or("batch-window", 0.0), 0.004);
+        assert_eq!(
+            a.list_or("slo-classes", &[]),
+            vec!["fast:0.02", "slow:1"]
+        );
     }
 
     #[test]

@@ -11,6 +11,7 @@
 //! with bounded per-node FIFO queues (DESIGN.md §6).
 
 pub mod openloop;
+pub mod slo;
 
 use anyhow::Result;
 

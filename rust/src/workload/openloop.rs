@@ -27,15 +27,16 @@ use anyhow::Result;
 use crate::dataset::{Dataset, GtBox, Scene};
 use crate::devices;
 use crate::estimators::GatewayCost;
-use crate::gateway::{Gateway, RoutedRequest};
+use crate::gateway::{amortize, Gateway, RoutedRequest};
 use crate::lifecycle::{
     self, ChurnConfig, ChurnReport, ChurnState, LossOutcome,
     ResiliencePolicy,
 };
-use crate::metrics::RunMetrics;
+use crate::metrics::{RunMetrics, SloMetrics};
 use crate::nodes::{NodeDown, NodeResponse};
 use crate::router::PairId;
 use crate::util::rng::Rng;
+use crate::workload::slo::{SloConfig, SloTag};
 
 /// How requests arrive at the gateway.
 #[derive(Clone, Debug)]
@@ -97,6 +98,11 @@ pub struct OpenLoopConfig {
     /// resilience policy for requests lost to crashes. `None` keeps the
     /// pre-churn event stream bit for bit.
     pub churn: Option<ChurnConfig>,
+    /// SLO + batching (DESIGN.md §11): deadline classes with admission
+    /// control, EDF queue ordering, and per-pair batch formation.
+    /// `None` keeps the event stream bit-identical to the pre-SLO
+    /// driver.
+    pub slo: Option<SloConfig>,
 }
 
 impl Default for OpenLoopConfig {
@@ -106,6 +112,7 @@ impl Default for OpenLoopConfig {
             queue_capacity: 8,
             seed: 7,
             churn: None,
+            slo: None,
         }
     }
 }
@@ -132,6 +139,9 @@ pub struct OpenLoopReport {
     /// Churn accounting — present exactly when the run had a lifecycle
     /// config. `served + dropped + lost == offered` always holds.
     pub churn: Option<ChurnReport>,
+    /// SLO accounting (attainment per class, sheds, batch-size
+    /// histogram) — present exactly when the run had an SLO config.
+    pub slo: Option<SloMetrics>,
 }
 
 impl OpenLoopReport {
@@ -177,6 +187,9 @@ impl OpenLoopReport {
         if let Some(c) = &self.churn {
             fields.push(("churn", c.to_json()));
         }
+        if let Some(s) = &self.slo {
+            fields.push(("slo", s.to_json()));
+        }
         Json::obj(fields)
     }
 }
@@ -215,6 +228,10 @@ enum EventKind {
     ProbeResult(Vec<bool>),
     /// Re-dispatch of request `idx` lost to a crash (retry policy).
     Retry(usize),
+    /// A batch formation window on `pair` closes (SLO runs only).
+    /// `token` identifies the formation generation: a new member
+    /// reschedules the close, leaving earlier events stale.
+    BatchClose { pair: PairId, token: u64 },
 }
 
 impl PartialEq for Event {
@@ -241,6 +258,8 @@ struct Pending {
     arrival_s: f64,
     /// This copy is a hedged duplicate (its completion may be waste).
     hedge: bool,
+    /// Deadline/batching tag; [`SloTag::default`] (inert) without SLOs.
+    slo: SloTag,
 }
 
 /// The request a node is currently serving; the inference already ran
@@ -255,6 +274,25 @@ struct InService {
     /// request leaves that event stale (token mismatch).
     token: u64,
     hedge: bool,
+    slo: SloTag,
+}
+
+/// A batch under formation on one pair (SLO runs): members hold their
+/// queue slots from admission, accumulate until the window closes, the
+/// batch fills, or deadline slack runs out, then flush into the FIFO as
+/// one contiguous amortized train.
+struct Forming {
+    members: Vec<Pending>,
+    close_s: f64,
+    /// Matches the live scheduled [`EventKind::BatchClose`]; each new
+    /// member reschedules with a fresh token, staling earlier closes.
+    token: u64,
+}
+
+impl Default for Forming {
+    fn default() -> Self {
+        Self { members: Vec::new(), close_s: f64::INFINITY, token: 0 }
+    }
 }
 
 /// Per-node serving state: one in-service slot + FIFO backlog.
@@ -273,6 +311,8 @@ struct SimState {
     in_flight: usize,
     peak_in_flight: usize,
     makespan_s: f64,
+    /// Per-pair batches under formation (always empty without SLOs).
+    forming: BTreeMap<PairId, Forming>,
 }
 
 impl SimState {
@@ -285,6 +325,7 @@ impl SimState {
             in_flight: 0,
             peak_in_flight: 0,
             makespan_s: 0.0,
+            forming: BTreeMap::new(),
         }
     }
 
@@ -312,6 +353,26 @@ struct ChurnDriver {
     est: Vec<Option<(usize, GatewayCost)>>,
 }
 
+/// Driver-side SLO context: the config, each request's absolute
+/// deadline (precomputed from the materialized arrival times), and the
+/// attainment/batch accounting.
+struct SloRt {
+    cfg: SloConfig,
+    deadlines: Vec<f64>,
+    metrics: SloMetrics,
+}
+
+impl SloRt {
+    /// Record a completion or a shed outcome for request `idx`.
+    fn record_done(&mut self, idx: usize, class: usize, done_s: f64) {
+        self.metrics.record_completion(class, done_s <= self.deadlines[idx]);
+    }
+
+    fn shed(&mut self, idx: usize) {
+        self.metrics.record_shed(self.cfg.class_of(idx));
+    }
+}
+
 /// Drive a gateway over pre-rendered frames under open-loop arrivals.
 ///
 /// `pseudo_gt[i]` doubles as the evaluation ground truth and the Oracle
@@ -331,6 +392,26 @@ pub fn run_frames(
     let arrival_times = cfg.arrivals.times(frames.len(), cfg.seed);
     let horizon_s = arrival_times.last().copied().unwrap_or(0.0)
         + cfg.churn.as_ref().map(|c| c.horizon_slack_s).unwrap_or(0.0);
+    // SLO runs: absolute deadlines are a pure function of the arrival
+    // process, so they're materialized up front alongside it.
+    let mut slo = match &cfg.slo {
+        Some(c) => {
+            anyhow::ensure!(
+                !c.classes.is_empty(),
+                "slo config needs at least one deadline class"
+            );
+            Some(SloRt {
+                deadlines: arrival_times
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &t)| c.deadline_for(i, t))
+                    .collect(),
+                metrics: SloMetrics::new(&c.class_names()),
+                cfg: c.clone(),
+            })
+        }
+        None => None,
+    };
     for (idx, t) in arrival_times.into_iter().enumerate() {
         sim.push(t, EventKind::Arrival(idx));
     }
@@ -421,15 +502,51 @@ pub fn run_frames(
                                     .state
                                     .placement_failed(idx, ev.t)
                                 {
-                                    sim.push(t, EventKind::Retry(idx));
+                                    retry_or_abandon(
+                                        &mut sim,
+                                        &mut ch.state,
+                                        slo.as_mut(),
+                                        idx,
+                                        t,
+                                    );
                                 }
                             }
-                            _ => sim.dropped += 1,
+                            _ => {
+                                sim.dropped += 1;
+                                // an overflow drop misses its SLO too
+                                if let Some(s) = slo.as_mut() {
+                                    s.shed(idx);
+                                }
+                            }
                         }
                         continue;
                     }
                     Err(e) => return Err(e),
                 };
+                // SLO admission control: when the predicted completion
+                // (queue ahead x per-pair mean service + estimator cost
+                // + network hop) already blows the deadline, shed now
+                // instead of queueing doomed work (DESIGN.md §11).
+                let mut tag = SloTag::default();
+                if let Some(s) = slo.as_mut() {
+                    let deadline = s.deadlines[idx];
+                    let pred = gw.predicted_completion_s(
+                        routed.pair_id,
+                        ev.t,
+                        routed.cost.latency_s,
+                    );
+                    if ev.t + pred > deadline {
+                        sim.dropped += 1;
+                        s.shed(idx);
+                        continue;
+                    }
+                    tag = SloTag {
+                        class: s.cfg.class_of(idx),
+                        deadline_s: deadline,
+                        edf_s: deadline,
+                        ..tag
+                    };
+                }
                 // proactive hedging: duplicate onto the second-best
                 // admissible pair, reusing the primary's estimate
                 let dup = match churn.as_ref() {
@@ -437,9 +554,24 @@ pub fn run_frames(
                         if ch.state.policy()
                             == ResiliencePolicy::Hedge =>
                     {
-                        gw.route_secondary(&routed, ev.t).map(|p| {
-                            RoutedRequest { pair_id: p, ..routed }
-                        })
+                        gw.route_secondary(&routed, ev.t)
+                            .filter(|&p| match slo.as_ref() {
+                                // hedges respect the remaining budget:
+                                // don't duplicate onto a secondary that
+                                // can't make the deadline anyway
+                                Some(s) => {
+                                    ev.t + gw
+                                        .predicted_completion_s(
+                                            p, ev.t, 0.0,
+                                        )
+                                        <= s.deadlines[idx]
+                                }
+                                None => true,
+                            })
+                            .map(|p| RoutedRequest {
+                                pair_id: p,
+                                ..routed
+                            })
                     }
                     _ => None,
                 };
@@ -453,14 +585,32 @@ pub fn run_frames(
                         ch.state.hedge_dispatched(idx);
                     }
                 }
+                // batch formation: primary copies without a hedge
+                // sibling join their pair's forming batch instead of
+                // entering the FIFO directly
+                let forms = dup.is_none()
+                    && slo.as_ref().is_some_and(|s| {
+                        s.cfg.batch_window_s > 0.0 && s.cfg.max_batch > 1
+                    });
+                if forms {
+                    join_forming(
+                        gw, frames, &mut sim, &mut churn, &mut slo,
+                        routed, tag, idx, ev.t,
+                    )?;
+                    continue;
+                }
+                if let Some(s) = slo.as_mut() {
+                    // unbatched dispatch: a size-1 "batch"
+                    s.metrics.record_batch(1);
+                }
                 admit_copy(
-                    gw, frames, &mut sim, &mut churn, routed, idx, ev.t,
-                    false,
+                    gw, frames, &mut sim, &mut churn, &mut slo, routed,
+                    idx, ev.t, false, tag,
                 )?;
                 if let Some(d) = dup {
                     admit_copy(
-                        gw, frames, &mut sim, &mut churn, d, idx, ev.t,
-                        true,
+                        gw, frames, &mut sim, &mut churn, &mut slo, d,
+                        idx, ev.t, true, tag,
                     )?;
                 }
             }
@@ -487,7 +637,13 @@ pub fn run_frames(
                         if let LossOutcome::RetryAt(t) =
                             ch.state.placement_failed(idx, ev.t)
                         {
-                            sim.push(t, EventKind::Retry(idx));
+                            retry_or_abandon(
+                                &mut sim,
+                                &mut ch.state,
+                                slo.as_mut(),
+                                idx,
+                                t,
+                            );
                         }
                         continue;
                     }
@@ -498,9 +654,21 @@ pub fn run_frames(
                     .expect("retry without churn")
                     .state
                     .retry_dispatched(idx);
+                // retries bypass batch formation (the backoff already
+                // ate the slack) but keep their deadline for EDF and
+                // attainment accounting
+                let tag = match slo.as_ref() {
+                    Some(s) => SloTag {
+                        class: s.cfg.class_of(idx),
+                        deadline_s: s.deadlines[idx],
+                        edf_s: s.deadlines[idx],
+                        ..SloTag::default()
+                    },
+                    None => SloTag::default(),
+                };
                 admit_copy(
-                    gw, frames, &mut sim, &mut churn, routed, idx, ev.t,
-                    false,
+                    gw, frames, &mut sim, &mut churn, &mut slo, routed,
+                    idx, ev.t, false, tag,
                 )?;
             }
             EventKind::Completion { pair, token } => {
@@ -535,15 +703,29 @@ pub fn run_frames(
                     let queue_delay_s = (done.start_s
                         - (done.arrival_s + done.routed.cost.latency_s))
                         .max(0.0);
-                    gw.finish(
+                    // batch followers rode the leader's transfer
+                    let net_s = if done.slo.net {
+                        devices::NETWORK_S
+                    } else {
+                        0.0
+                    };
+                    let (d_idx, d_class) = (done.idx, done.slo.class);
+                    gw.finish_with_network(
                         &done.routed,
                         done.resp,
                         &pseudo_gt[done.idx],
                         queue_delay_s,
+                        net_s,
                         &mut metrics,
                     );
+                    if let Some(s) = slo.as_mut() {
+                        s.record_done(d_idx, d_class, ev.t);
+                    }
                 }
-                start_next(gw, frames, &mut sim, &mut churn, pair, ev.t)?;
+                start_next(
+                    gw, frames, &mut sim, &mut churn, &mut slo, pair,
+                    ev.t,
+                )?;
             }
             EventKind::Crash(node) => {
                 let ch = churn.as_mut().expect("crash without churn");
@@ -553,7 +735,10 @@ pub fn run_frames(
                 if let Some(m) = gw.membership_mut() {
                     m.ground_truth_changed(pair, false, ev.t);
                 }
-                lose_queued(gw, &mut sim, &mut ch.state, pair, None, ev.t);
+                lose_queued(
+                    gw, &mut sim, &mut ch.state, &mut slo, pair, None,
+                    ev.t,
+                );
             }
             EventKind::Rejoin(node) => {
                 let ch = churn.as_ref().expect("rejoin without churn");
@@ -585,6 +770,19 @@ pub fn run_frames(
                     m.observe_probe(p, *up, ev.t);
                 }
             }
+            EventKind::BatchClose { pair, token } => {
+                if sim.forming.get(&pair).map(|f| f.token) != Some(token)
+                {
+                    // superseded: a later member rescheduled the close,
+                    // the batch already flushed full, or a crash
+                    // drained the formation
+                    continue;
+                }
+                flush_batch(
+                    gw, frames, &mut sim, &mut churn, &mut slo, pair,
+                    ev.t,
+                )?;
+            }
         }
     }
 
@@ -602,7 +800,42 @@ pub fn run_frames(
         peak_in_flight: sim.peak_in_flight,
         fallbacks: gw.fallbacks - fallbacks_before,
         churn: churn_report,
+        slo: slo.map(|s| s.metrics),
     })
+}
+
+/// Enqueue one pending copy. A finite EDF key inserts in deadline order
+/// (stable: ties and infinite keys go after), which degenerates to the
+/// exact pre-SLO FIFO when SLOs are off — every key is infinite then.
+fn push_pending(q: &mut NodeQueue, p: Pending) {
+    if p.slo.edf_s.is_finite() {
+        if let Some(pos) =
+            q.backlog.iter().position(|b| b.slo.edf_s > p.slo.edf_s)
+        {
+            q.backlog.insert(pos, p);
+            return;
+        }
+    }
+    q.backlog.push_back(p);
+}
+
+/// Under SLOs a retry scheduled past the request's deadline cannot
+/// help: abandon the request (it counts as lost) and record the shed.
+/// Otherwise schedule the re-dispatch normally.
+fn retry_or_abandon(
+    sim: &mut SimState,
+    state: &mut ChurnState,
+    slo: Option<&mut SloRt>,
+    idx: usize,
+    retry_t: f64,
+) {
+    match slo {
+        Some(s) if retry_t > s.deadlines[idx] => {
+            state.abandon(idx);
+            s.shed(idx);
+        }
+        _ => sim.push(retry_t, EventKind::Retry(idx)),
+    }
 }
 
 /// Admit one routed copy of request `idx` into its pair's FIFO at time
@@ -613,23 +846,114 @@ fn admit_copy(
     frames: &[Scene],
     sim: &mut SimState,
     churn: &mut Option<ChurnDriver>,
+    slo: &mut Option<SloRt>,
     routed: RoutedRequest,
     idx: usize,
     t: f64,
     hedge: bool,
+    tag: SloTag,
 ) -> Result<()> {
     let admitted = gw.pool_mut().acquire_id(routed.pair_id);
     debug_assert!(admitted, "route() returned a pair without a free slot");
     sim.in_flight += 1;
     sim.peak_in_flight = sim.peak_in_flight.max(sim.in_flight);
     let pair = routed.pair_id;
-    sim.queues.entry(pair).or_default().backlog.push_back(Pending {
-        routed,
-        idx,
-        arrival_s: t,
-        hedge,
-    });
-    start_next(gw, frames, sim, churn, pair, t)
+    push_pending(
+        sim.queues.entry(pair).or_default(),
+        Pending { routed, idx, arrival_s: t, hedge, slo: tag },
+    );
+    start_next(gw, frames, sim, churn, slo, pair, t)
+}
+
+/// Admit request `idx` into `pair`'s forming batch. The queue slot is
+/// acquired NOW — routing, occupancy checks, and admission control all
+/// see forming members — and the batch flushes when it fills, when the
+/// window closes, or early enough that the tightest member can still
+/// make its deadline.
+#[allow(clippy::too_many_arguments)]
+fn join_forming(
+    gw: &mut Gateway<'_>,
+    frames: &[Scene],
+    sim: &mut SimState,
+    churn: &mut Option<ChurnDriver>,
+    slo: &mut Option<SloRt>,
+    routed: RoutedRequest,
+    tag: SloTag,
+    idx: usize,
+    t: f64,
+) -> Result<()> {
+    let admitted = gw.pool_mut().acquire_id(routed.pair_id);
+    debug_assert!(admitted, "route() returned a pair without a free slot");
+    sim.in_flight += 1;
+    sim.peak_in_flight = sim.peak_in_flight.max(sim.in_flight);
+    let pair = routed.pair_id;
+    let (window_s, max_batch) = {
+        let s = slo.as_ref().expect("forming without slo");
+        (s.cfg.batch_window_s, s.cfg.max_batch)
+    };
+    // latest viable close for THIS member: its deadline minus the
+    // predicted service span once dispatched
+    let latest_s = (tag.deadline_s
+        - gw.predicted_completion_s(pair, t, 0.0))
+    .max(t);
+    let member_close = (t + window_s).min(latest_s);
+    let (flush_now, close_s) = {
+        let f = sim.forming.entry(pair).or_default();
+        f.members.push(Pending {
+            routed,
+            idx,
+            arrival_s: t,
+            hedge: false,
+            slo: tag,
+        });
+        f.close_s = f.close_s.min(member_close);
+        (f.members.len() >= max_batch || f.close_s <= t, f.close_s)
+    };
+    if flush_now {
+        return flush_batch(gw, frames, sim, churn, slo, pair, t);
+    }
+    // (re)schedule the close; earlier BatchClose events go stale
+    let token = sim.seq;
+    sim.forming.get_mut(&pair).expect("just inserted").token = token;
+    sim.push(close_s, EventKind::BatchClose { pair, token });
+    Ok(())
+}
+
+/// Flush `pair`'s forming batch into its FIFO as one amortized service
+/// train: the leader pays full preprocess and the network hop,
+/// followers amortize both, and every member shares the batch's
+/// tightest deadline as its EDF key so the train stays contiguous.
+fn flush_batch(
+    gw: &mut Gateway<'_>,
+    frames: &[Scene],
+    sim: &mut SimState,
+    churn: &mut Option<ChurnDriver>,
+    slo: &mut Option<SloRt>,
+    pair: PairId,
+    now_s: f64,
+) -> Result<()> {
+    let Some(f) = sim.forming.remove(&pair) else {
+        return Ok(());
+    };
+    if f.members.is_empty() {
+        return Ok(());
+    }
+    if let Some(s) = slo.as_mut() {
+        s.metrics.record_batch(f.members.len());
+    }
+    let edf_s = f
+        .members
+        .iter()
+        .map(|m| m.slo.deadline_s)
+        .fold(f64::INFINITY, f64::min);
+    for (i, mut m) in f.members.into_iter().enumerate() {
+        m.slo.edf_s = edf_s;
+        m.slo.amortized = i > 0;
+        m.slo.net = i == 0;
+        // slots were acquired at formation entry — enqueue directly
+        push_pending(sim.queues.entry(pair).or_default(), m);
+    }
+    start_next(gw, frames, sim, churn, slo, pair, now_s)
 }
 
 /// If `pair` is idle and has backlog, begin serving the head request at
@@ -643,6 +967,7 @@ fn start_next(
     frames: &[Scene],
     sim: &mut SimState,
     churn: &mut Option<ChurnDriver>,
+    slo: &mut Option<SloRt>,
     pair: PairId,
     now_s: f64,
 ) -> Result<()> {
@@ -655,21 +980,28 @@ fn start_next(
         return Ok(());
     };
     let start_s = now_s.max(p.arrival_s + p.routed.cost.latency_s);
-    let resp = match gw.serve(pair, &frames[p.idx].image, start_s) {
+    let mut resp = match gw.serve(pair, &frames[p.idx].image, start_s) {
         Ok(r) => r,
         Err(e) if churn.is_some() && e.is::<NodeDown>() => {
             if let Some(m) = gw.membership_mut() {
                 m.observe_dispatch_failure(pair, now_s);
             }
             let ch = churn.as_mut().expect("checked above");
-            lose_queued(gw, sim, &mut ch.state, pair, Some(p), now_s);
+            lose_queued(gw, sim, &mut ch.state, slo, pair, Some(p), now_s);
             return Ok(());
         }
         Err(e) => return Err(e),
     };
+    if p.slo.amortized {
+        // batch follower: the leader already warmed preprocess
+        let (save_s, save_mwh) = gw.batch_savings(pair);
+        resp.latency_s = amortize(resp.latency_s, save_s);
+        resp.energy_mwh = amortize(resp.energy_mwh, save_mwh);
+    }
+    let net_s = if p.slo.net { devices::NETWORK_S } else { 0.0 };
     let token = sim.seq;
     sim.push(
-        start_s + resp.latency_s + devices::NETWORK_S,
+        start_s + resp.latency_s + net_s,
         EventKind::Completion { pair, token },
     );
     // re-borrow: gw.serve() above needed &mut Gateway exclusively
@@ -682,6 +1014,7 @@ fn start_next(
             resp,
             token,
             hedge: p.hedge,
+            slo: p.slo,
         });
     Ok(())
 }
@@ -694,6 +1027,7 @@ fn lose_queued(
     gw: &mut Gateway<'_>,
     sim: &mut SimState,
     state: &mut ChurnState,
+    slo: &mut Option<SloRt>,
     pair: PairId,
     head: Option<Pending>,
     now_s: f64,
@@ -712,11 +1046,20 @@ fn lose_queued(
     } else if let Some(p) = &head {
         idxs.push(p.idx);
     }
+    // batch members still forming on the crashed pair hold slots too;
+    // removing the entry stales any scheduled BatchClose for it
+    if let Some(f) = sim.forming.remove(&pair) {
+        for m in f.members {
+            idxs.push(m.idx);
+        }
+    }
     for idx in idxs {
         gw.pool_mut().release_id(pair);
         sim.in_flight -= 1;
         match state.copy_lost(idx, now_s) {
-            LossOutcome::RetryAt(t) => sim.push(t, EventKind::Retry(idx)),
+            LossOutcome::RetryAt(t) => {
+                retry_or_abandon(sim, state, slo.as_mut(), idx, t)
+            }
             LossOutcome::Absorbed | LossOutcome::Lost => {}
         }
     }
@@ -821,6 +1164,7 @@ mod tests {
                     queue_capacity: 8,
                     seed: 5,
                     churn: None,
+                    slo: None,
                 },
             )
             .unwrap();
@@ -865,6 +1209,7 @@ mod tests {
                     queue_capacity: 64,
                     seed: 11,
                     churn: None,
+                    slo: None,
                 },
             )
             .unwrap();
@@ -896,6 +1241,7 @@ mod tests {
                 queue_capacity: 1,
                 seed: 2,
                 churn: None,
+                slo: None,
             },
         )
         .unwrap();
@@ -936,6 +1282,7 @@ mod tests {
                     horizon_slack_s: 1.0,
                     ..Default::default()
                 }),
+                slo: None,
             },
         )
         .unwrap();
@@ -966,6 +1313,7 @@ mod tests {
             queue_capacity: 8,
             seed: 13,
             churn,
+            slo: None,
         };
         let mut base_gw = gateway(&e, "Orc", 3);
         let base = run_dataset(&mut base_gw, &ds, &open_cfg(None)).unwrap();
@@ -1030,6 +1378,7 @@ mod tests {
                     horizon_slack_s: 1.0,
                     ..Default::default()
                 }),
+                slo: None,
             },
         )
         .unwrap();
@@ -1077,6 +1426,7 @@ mod tests {
                     horizon_slack_s: 1.0,
                     ..Default::default()
                 }),
+                slo: None,
             },
         )
         .unwrap();
@@ -1123,6 +1473,7 @@ mod tests {
                         seed: churn_seed,
                         ..Default::default()
                     }),
+                    slo: None,
                 },
             )
             .unwrap()
@@ -1146,6 +1497,7 @@ mod tests {
                     queue_capacity: 4,
                     seed: 17,
                     churn: None,
+                    slo: None,
                 },
             )
             .unwrap()
@@ -1161,5 +1513,179 @@ mod tests {
             a.metrics.latency_samples,
             b.metrics.latency_samples
         );
+    }
+
+    #[test]
+    fn edf_orders_backlog_and_infinite_keys_stay_fifo() {
+        let mk = |idx: usize, edf: f64| Pending {
+            routed: RoutedRequest {
+                pair_id: PairId(0),
+                group: 0,
+                estimate: 0,
+                true_count: 0,
+                cost: Default::default(),
+            },
+            idx,
+            arrival_s: 0.0,
+            hedge: false,
+            slo: SloTag {
+                class: 0,
+                deadline_s: edf,
+                edf_s: edf,
+                amortized: false,
+                net: true,
+            },
+        };
+        let mut q = NodeQueue::default();
+        push_pending(&mut q, mk(0, 0.5));
+        push_pending(&mut q, mk(1, 0.2));
+        push_pending(&mut q, mk(2, 0.9));
+        push_pending(&mut q, mk(3, 0.2)); // tie stays behind its equal
+        let order: Vec<usize> =
+            q.backlog.iter().map(|p| p.idx).collect();
+        assert_eq!(order, vec![1, 3, 0, 2]);
+
+        // SLOs off: every key is infinite, so insertion order survives
+        let mut q = NodeQueue::default();
+        for i in 0..3 {
+            push_pending(
+                &mut q,
+                Pending { slo: SloTag::default(), ..mk(i, 0.0) },
+            );
+        }
+        let order: Vec<usize> =
+            q.backlog.iter().map(|p| p.idx).collect();
+        assert_eq!(order, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn slo_admission_sheds_doomed_requests_up_front() {
+        use crate::workload::slo::SloClass;
+        // deadlines far below even one service time: the admission
+        // predictor sees every completion past its budget and sheds at
+        // the gateway instead of queueing doomed work. The ledger still
+        // balances and the slo block shows up in the JSON report.
+        let e = engine();
+        let ds = coco::build(12, 23);
+        let mut gw = gateway(&e, "LE", 3);
+        let report = run_dataset(
+            &mut gw,
+            &ds,
+            &OpenLoopConfig {
+                arrivals: ArrivalProcess::Poisson { rate_rps: 50.0 },
+                queue_capacity: 8,
+                seed: 21,
+                churn: None,
+                slo: Some(SloConfig {
+                    classes: vec![SloClass {
+                        name: "impossible".to_string(),
+                        deadline_s: 1e-4,
+                    }],
+                    batch_window_s: 0.0,
+                    max_batch: 1,
+                }),
+            },
+        )
+        .unwrap();
+        let slo = report.slo.as_ref().expect("slo report");
+        assert_eq!(report.metrics.requests, 0);
+        assert_eq!(report.dropped, report.offered);
+        assert_eq!(slo.shed.iter().sum::<usize>(), report.offered);
+        assert_eq!(slo.overall_attainment_pct(), 0.0);
+        assert_eq!(gw.pool().total_in_flight(), 0);
+        assert!(report.to_json().dump().contains("slo"));
+    }
+
+    #[test]
+    fn batching_at_saturation_raises_goodput_and_cuts_energy() {
+        use crate::workload::slo::SloClass;
+        // acceptance shape: saturating arrivals, generous deadlines, a
+        // queue deep enough that nothing is shed — so both runs serve
+        // identical requests on the same pair and differ only in batch
+        // formation. Amortized followers (and their skipped network
+        // hops) must show up as strictly higher goodput and strictly
+        // lower energy per request than the unbatched run.
+        let e = engine();
+        let ds = coco::build(40, 33);
+        let run = |window_s: f64| {
+            let mut gw = gateway(&e, "LE", 3);
+            run_dataset(
+                &mut gw,
+                &ds,
+                &OpenLoopConfig {
+                    arrivals: ArrivalProcess::Poisson {
+                        rate_rps: 400.0,
+                    },
+                    queue_capacity: 64,
+                    seed: 11,
+                    churn: None,
+                    slo: Some(SloConfig {
+                        classes: vec![SloClass {
+                            name: "relaxed".to_string(),
+                            deadline_s: 1e9,
+                        }],
+                        batch_window_s: window_s,
+                        max_batch: 4,
+                    }),
+                },
+            )
+            .unwrap()
+        };
+        let fifo = run(0.0);
+        let batched = run(0.02);
+        assert_eq!(fifo.dropped, 0);
+        assert_eq!(batched.dropped, 0);
+        assert_eq!(fifo.metrics.requests, batched.metrics.requests);
+        let fs = fifo.slo.as_ref().expect("slo report");
+        let bs = batched.slo.as_ref().expect("slo report");
+        assert!((fs.mean_batch_size() - 1.0).abs() < 1e-12);
+        assert!(
+            bs.mean_batch_size() > 1.5,
+            "batches never formed: {}",
+            bs.mean_batch_size()
+        );
+        assert_eq!(fs.overall_attainment_pct(), 100.0);
+        assert_eq!(bs.overall_attainment_pct(), 100.0);
+        assert!(
+            batched.goodput_rps() > fifo.goodput_rps(),
+            "batched {:.2} vs fifo {:.2} req/s",
+            batched.goodput_rps(),
+            fifo.goodput_rps()
+        );
+        assert!(
+            batched.energy_per_request_mwh()
+                < fifo.energy_per_request_mwh(),
+            "batched {:.6} vs fifo {:.6} mWh/req",
+            batched.energy_per_request_mwh(),
+            fifo.energy_per_request_mwh()
+        );
+    }
+
+    #[test]
+    fn slo_runs_replay_bit_identically() {
+        // the full SLO path — admission, formation, EDF, attainment —
+        // on the default three-class mix must replay byte for byte.
+        let e = engine();
+        let ds = coco::build(18, 47);
+        let run = || {
+            let mut gw = gateway(&e, "ED", 3);
+            run_dataset(
+                &mut gw,
+                &ds,
+                &OpenLoopConfig {
+                    arrivals: ArrivalProcess::Poisson {
+                        rate_rps: 150.0,
+                    },
+                    queue_capacity: 4,
+                    seed: 29,
+                    churn: None,
+                    slo: Some(SloConfig::default()),
+                },
+            )
+            .unwrap()
+            .to_json()
+            .dump()
+        };
+        assert_eq!(run(), run());
     }
 }

@@ -1,0 +1,195 @@
+//! SLO vocabulary for the open-loop and fleet drivers (DESIGN.md §11):
+//! deadline classes, the batching/admission configuration, and the
+//! per-copy tag the node FIFOs order by.
+//!
+//! Everything here is *configuration-shaped*: the actual admission
+//! predicate, batch formation, and EDF ordering live in the drivers
+//! (`workload::openloop`, `fleet`), and a `None` SLO config keeps both
+//! drivers' event streams bit-identical to the pre-SLO behavior.
+
+use anyhow::{Context, Result};
+
+/// One deadline class: requests of this class must complete within
+/// `deadline_s` of their arrival on the virtual clock.
+#[derive(Clone, Debug)]
+pub struct SloClass {
+    pub name: String,
+    /// Relative deadline (s); `arrival + deadline_s` is the absolute
+    /// budget the attainment accounting compares completions against.
+    pub deadline_s: f64,
+}
+
+/// Configuration of the SLO/batching subsystem.
+#[derive(Clone, Debug)]
+pub struct SloConfig {
+    /// Deadline classes; requests are assigned round-robin by index
+    /// ([`SloConfig::class_of`]), deterministically.
+    pub classes: Vec<SloClass>,
+    /// Batch formation window (s): arrivals routed to the same
+    /// `(model, device)` pair within this window dispatch as one
+    /// amortized service train. 0 disables batch formation — SLO
+    /// admission control and EDF ordering still apply.
+    pub batch_window_s: f64,
+    /// Hard cap on members per batch (a full batch flushes early).
+    pub max_batch: usize,
+}
+
+impl Default for SloConfig {
+    fn default() -> Self {
+        Self {
+            classes: vec![
+                SloClass {
+                    name: "interactive".to_string(),
+                    deadline_s: 0.05,
+                },
+                SloClass {
+                    name: "standard".to_string(),
+                    deadline_s: 0.25,
+                },
+                SloClass { name: "relaxed".to_string(), deadline_s: 1.0 },
+            ],
+            batch_window_s: 0.004,
+            max_batch: 4,
+        }
+    }
+}
+
+impl SloConfig {
+    /// Deterministic class assignment: request `idx` cycles through the
+    /// configured classes (the same request index always lands in the
+    /// same class, so runs replay bit-identically).
+    pub fn class_of(&self, idx: usize) -> usize {
+        idx % self.classes.len().max(1)
+    }
+
+    /// Absolute deadline for request `idx` arriving at `arrival_s`;
+    /// infinite when no classes are configured.
+    pub fn deadline_for(&self, idx: usize, arrival_s: f64) -> f64 {
+        match self.classes.get(self.class_of(idx)) {
+            Some(c) => arrival_s + c.deadline_s,
+            None => f64::INFINITY,
+        }
+    }
+
+    /// Class names in index order (the metrics layer's label vector).
+    pub fn class_names(&self) -> Vec<String> {
+        self.classes.iter().map(|c| c.name.clone()).collect()
+    }
+
+    /// Parse `name:deadline_s` class specs (config/CLI edge).
+    pub fn parse_classes(specs: &[String]) -> Result<Vec<SloClass>> {
+        specs
+            .iter()
+            .map(|s| {
+                let (name, d) = s.split_once(':').with_context(|| {
+                    format!(
+                        "slo class '{s}' must be 'name:deadline_s'"
+                    )
+                })?;
+                let deadline_s: f64 =
+                    d.trim().parse().with_context(|| {
+                        format!("slo class '{s}': bad deadline '{d}'")
+                    })?;
+                anyhow::ensure!(
+                    deadline_s > 0.0,
+                    "slo class '{s}': deadline must be positive"
+                );
+                Ok(SloClass {
+                    name: name.trim().to_string(),
+                    deadline_s,
+                })
+            })
+            .collect()
+    }
+}
+
+/// The SLO half of one queued request copy, carried through the node
+/// FIFOs. The default tag is inert: an infinite deadline (never misses,
+/// never reorders — EDF with all-infinite keys IS arrival-order FIFO),
+/// no amortization, and the full network charge, so `None`-config runs
+/// behave bit-identically to the pre-SLO driver.
+#[derive(Clone, Copy, Debug)]
+pub struct SloTag {
+    /// Deadline class index (0 when SLOs are off).
+    pub class: usize,
+    /// Absolute deadline on the virtual clock (attainment accounting).
+    pub deadline_s: f64,
+    /// EDF ordering key: the copy's own deadline, or — for batch
+    /// members — the batch's tightest deadline, so a flushed batch
+    /// stays contiguous in the FIFO instead of interleaving.
+    pub edf_s: f64,
+    /// Batch follower: amortize the preprocess share of service.
+    pub amortized: bool,
+    /// This copy pays the network hop (batch leader or unbatched;
+    /// followers ride the leader's transfer).
+    pub net: bool,
+}
+
+impl Default for SloTag {
+    fn default() -> Self {
+        Self {
+            class: 0,
+            deadline_s: f64::INFINITY,
+            edf_s: f64::INFINITY,
+            amortized: false,
+            net: true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_classes_and_round_robin() {
+        let c = SloConfig::default();
+        assert_eq!(c.classes.len(), 3);
+        assert_eq!(c.class_of(0), 0);
+        assert_eq!(c.class_of(4), 1);
+        assert_eq!(c.class_of(5), 2);
+        assert_eq!(
+            c.class_names(),
+            vec!["interactive", "standard", "relaxed"]
+        );
+        let d = c.deadline_for(1, 10.0);
+        assert!((d - 10.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parse_classes_accepts_specs_and_rejects_garbage() {
+        let good = SloConfig::parse_classes(&[
+            "fast: 0.02".to_string(),
+            "slow:1.5".to_string(),
+        ])
+        .unwrap();
+        assert_eq!(good.len(), 2);
+        assert_eq!(good[0].name, "fast");
+        assert!((good[0].deadline_s - 0.02).abs() < 1e-12);
+        assert!((good[1].deadline_s - 1.5).abs() < 1e-12);
+        assert!(SloConfig::parse_classes(&["nocolon".into()]).is_err());
+        assert!(SloConfig::parse_classes(&["x:abc".into()]).is_err());
+        assert!(SloConfig::parse_classes(&["x:-1".into()]).is_err());
+        assert!(SloConfig::parse_classes(&["x:0".into()]).is_err());
+    }
+
+    #[test]
+    fn default_tag_is_inert() {
+        let t = SloTag::default();
+        assert!(t.deadline_s.is_infinite());
+        assert!(t.edf_s.is_infinite());
+        assert!(!t.amortized);
+        assert!(t.net);
+    }
+
+    #[test]
+    fn empty_class_list_never_panics() {
+        let c = SloConfig {
+            classes: Vec::new(),
+            ..SloConfig::default()
+        };
+        assert_eq!(c.class_of(17), 17); // modulo max(1)
+        assert!(c.deadline_for(17, 1.0).is_infinite());
+        assert!(c.class_names().is_empty());
+    }
+}

@@ -63,6 +63,7 @@ fn openloop_dump(e: &Engine) -> String {
             queue_capacity: 4,
             seed: 17,
             churn: None,
+            slo: None,
         },
     )
     .unwrap();
@@ -100,6 +101,7 @@ fn churn_dump(e: &Engine) -> String {
                 horizon_slack_s: 1.5,
                 seed: 29,
             }),
+            slo: None,
         },
     )
     .unwrap();
@@ -136,6 +138,7 @@ fn fleet_churn_dump(e: &Engine) -> String {
                     horizon_slack_s: 1.0,
                     seed: 37,
                 }),
+                slo: None,
             },
         )
         .unwrap();
@@ -167,6 +170,7 @@ fn fleet_dump(e: &Engine) -> String {
                 seed: 9,
                 drift: None,
                 churn: None,
+                slo: None,
             },
         )
         .unwrap();
@@ -175,6 +179,64 @@ fn fleet_dump(e: &Engine) -> String {
         &ds,
         &ArrivalProcess::Poisson { rate_rps: 120.0 },
         9,
+    )
+    .unwrap();
+    report.to_json().pretty()
+}
+
+/// One fixed-seed SLO run (three deadline classes, admission control,
+/// EDF ordering, and dynamic batching all active at a saturating rate),
+/// serialized with its slo block.
+fn slo_dump(e: &Engine) -> String {
+    let ds = ecore::dataset::coco::build(20, 61);
+    let store = base_store();
+    let pool =
+        NodePool::deploy(e, &store.pairs(), &ecore::devices::fleet(), 4)
+            .unwrap();
+    let mut gw =
+        Gateway::new(e, router_by_name("ED").unwrap(), store, pool, 5.0, 4);
+    let report = openloop::run_dataset(
+        &mut gw,
+        &ds,
+        &OpenLoopConfig {
+            arrivals: ArrivalProcess::Poisson { rate_rps: 180.0 },
+            queue_capacity: 4,
+            seed: 41,
+            churn: None,
+            slo: Some(ecore::workload::slo::SloConfig::default()),
+        },
+    )
+    .unwrap();
+    report.to_json().pretty()
+}
+
+/// One fixed-seed fleet SLO run (2 shards, batching + admission on the
+/// shared heap), serialized with its slo block.
+fn fleet_slo_dump(e: &Engine) -> String {
+    let ds = ecore::dataset::coco::build(18, 83);
+    let mut fl = FleetBuilder::new(e, base_store())
+        .build(
+            router_by_name("LE").unwrap(),
+            5.0,
+            &FleetConfig {
+                n_nodes: 6,
+                n_shards: 2,
+                perturb: 0.1,
+                queue_capacity: 4,
+                dispatch: DispatchPolicy::LeastLoaded,
+                n_sources: 4,
+                seed: 47,
+                drift: None,
+                churn: None,
+                slo: Some(ecore::workload::slo::SloConfig::default()),
+            },
+        )
+        .unwrap();
+    let report = fleet::run_dataset(
+        &mut fl,
+        &ds,
+        &ArrivalProcess::Poisson { rate_rps: 220.0 },
+        47,
     )
     .unwrap();
     report.to_json().pretty()
@@ -208,6 +270,36 @@ fn fleet_churn_report_serializes_bit_identically_across_runs() {
     let a = fleet_churn_dump(&e);
     assert_eq!(a, fleet_churn_dump(&e));
     assert!(a.contains("\"churn\""));
+}
+
+#[test]
+fn slo_report_serializes_bit_identically_across_runs() {
+    let e = engine();
+    let a = slo_dump(&e);
+    assert_eq!(a, slo_dump(&e));
+    // the block only serializes when SLOs ran
+    assert!(a.contains("\"slo\""));
+    assert!(a.contains("\"attainment_pct\""));
+}
+
+#[test]
+fn fleet_slo_report_serializes_bit_identically_across_runs() {
+    let e = engine();
+    let a = fleet_slo_dump(&e);
+    assert_eq!(a, fleet_slo_dump(&e));
+    assert!(a.contains("\"slo\""));
+}
+
+/// The whole point of option-gating: an SLO config of `None` adds zero
+/// events and zero report keys, so the no-SLO dumps must keep the exact
+/// pre-SLO JSON shape (the pinned goldens check the bytes; this checks
+/// the shape contract explicitly).
+#[test]
+fn none_slo_config_leaves_pre_slo_traces_untouched() {
+    let e = engine();
+    assert!(!openloop_dump(&e).contains("\"slo\""));
+    assert!(!fleet_dump(&e).contains("\"slo\""));
+    assert!(!churn_dump(&e).contains("\"slo\""));
 }
 
 fn check_golden(name: &str, dump: &str) {
@@ -253,4 +345,16 @@ fn golden_churn_trace_is_pinned() {
 fn golden_fleet_churn_trace_is_pinned() {
     let e = engine();
     check_golden("fleet_churn_trace", &fleet_churn_dump(&e));
+}
+
+#[test]
+fn golden_slo_trace_is_pinned() {
+    let e = engine();
+    check_golden("slo_trace", &slo_dump(&e));
+}
+
+#[test]
+fn golden_fleet_slo_trace_is_pinned() {
+    let e = engine();
+    check_golden("fleet_slo_trace", &fleet_slo_dump(&e));
 }

@@ -276,6 +276,7 @@ fn gateway_cost_is_accounted_exactly_once_per_request() {
                 queue_capacity: 8,
                 seed: 4,
                 churn: None,
+                slo: None,
             },
         )
         .unwrap();
@@ -345,6 +346,7 @@ fn retried_requests_pay_gateway_cost_exactly_once() {
                 horizon_slack_s: 2.0,
                 seed: 11,
             }),
+            slo: None,
         },
     )
     .unwrap();

@@ -363,6 +363,77 @@ fn prop_config_table_parse_stability() {
 }
 
 #[test]
+fn prop_percentiles_agree_across_stats_and_metrics() {
+    // the batched `percentiles` helper, the single-query `percentile`,
+    // and `RunMetrics::latency_percentile` must agree on arbitrary
+    // sample sets — the SLO experiment reports p99 through all three
+    // paths and they must never diverge.
+    use ecore::metrics::RunMetrics;
+    use ecore::util::stats::{percentile, percentiles};
+    forall_ok(
+        77,
+        200,
+        |r| {
+            let n = 1 + r.below(64) as usize;
+            (0..n).map(|_| r.range(0.0, 10.0)).collect::<Vec<f64>>()
+        },
+        |xs| {
+            let ps = [0.0, 25.0, 50.0, 90.0, 95.0, 99.0, 100.0];
+            let batch = percentiles(xs, &ps);
+            let mut m = RunMetrics::new("prop");
+            m.latency_samples = xs.clone();
+            for (i, &p) in ps.iter().enumerate() {
+                let single = percentile(xs, p);
+                if batch[i].to_bits() != single.to_bits() {
+                    return Err(format!(
+                        "p{p}: batch {} != single {single}",
+                        batch[i]
+                    ));
+                }
+                if m.latency_percentile(p).to_bits() != single.to_bits() {
+                    return Err(format!("p{p}: metrics path diverged"));
+                }
+            }
+            // monotone in p, bounded by the sample extremes
+            let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+            let hi = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            for w in batch.windows(2) {
+                if w[0] > w[1] {
+                    return Err("percentiles not monotone".into());
+                }
+            }
+            if batch[0] < lo || batch[ps.len() - 1] > hi {
+                return Err("percentile outside sample range".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn percentile_edge_cases_empty_single_and_all_equal() {
+    use ecore::metrics::RunMetrics;
+    use ecore::util::stats::{percentile, percentiles};
+    // empty: 0.0 by convention, on every path
+    let m = RunMetrics::new("empty");
+    for p in [0.0, 50.0, 99.0, 100.0] {
+        assert_eq!(percentile(&[], p), 0.0);
+        assert_eq!(m.latency_percentile(p), 0.0);
+    }
+    assert_eq!(percentiles(&[], &[50.0, 99.0]), vec![0.0, 0.0]);
+    // single sample: every percentile is that sample
+    for p in [0.0, 37.5, 50.0, 99.0, 100.0] {
+        assert_eq!(percentile(&[4.25], p), 4.25);
+    }
+    // all-equal samples: every percentile is the common value (the
+    // interpolation must not wobble off it)
+    let same = vec![0.125; 17];
+    for p in [0.0, 10.0, 50.0, 99.0, 100.0] {
+        assert_eq!(percentile(&same, p), 0.125);
+    }
+}
+
+#[test]
 fn prop_group_rules_agree_with_store_labels() {
     use ecore::router::GroupRules;
     let rules = GroupRules::paper_default();
