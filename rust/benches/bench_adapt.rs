@@ -1,19 +1,20 @@
-//! Churn simulator throughput: full open-loop discrete-event runs over
-//! the real deployed testbed with the lifecycle layer active — seeded
-//! crash/rejoin injection, per-probe membership updates, stale-view
-//! dispatch failures, and the resilience policies. The spread against
-//! `bench_openloop`'s saturated configuration is the pure cost of the
-//! churn machinery (failure timeline, probe events, copy accounting);
-//! the policy rows show what retrying and hedging cost on top.
+//! Adaptation-subsystem throughput: full open-loop discrete-event runs
+//! over the real deployed testbed with device drift on, in three
+//! regimes — adaptation off (the drift-only baseline), continuous
+//! telemetry feedback, and feedback plus the energy-proportional
+//! scaler. The spread against the baseline is the pure cost of the
+//! per-completion EWMA update, the overlay republish, and the
+//! scale-tick train.
 
 use std::time::Instant;
 
+use ecore::adapt::AdaptConfig;
 use ecore::config::ExperimentConfig;
 use ecore::dataset::{coco, GtBox, Scene};
+use ecore::devices::drift::DriftConfig;
 use ecore::experiments::serve::deployed_store;
 use ecore::experiments::Harness;
 use ecore::gateway::{router_by_name, Gateway};
-use ecore::lifecycle::{ChurnConfig, ResiliencePolicy};
 use ecore::nodes::NodePool;
 use ecore::util::bench::{black_box, Bench};
 use ecore::workload::openloop::{
@@ -33,36 +34,17 @@ fn main() {
     let gts: Vec<Vec<GtBox>> =
         frames.iter().map(|s| s.gt.clone()).collect();
 
-    let mut b = Bench::new("churn");
-    let mut extras_owned: Vec<(String, f64)> = Vec::new();
-    for (name, churn) in [
-        ("no_churn", None),
+    let mut b = Bench::new("adapt");
+    let mut extras: Vec<(String, f64)> = Vec::new();
+    for (name, adapt) in [
+        ("adapt_off", None),
         (
-            "retry_avail80",
-            Some(ChurnConfig {
-                mtbf_s: 0.8,
-                mttr_s: 0.2,
-                probe_interval_s: 0.05,
-                probe_timeout_s: 0.02,
-                suspect_after: 1,
-                policy: ResiliencePolicy::Retry { budget: 4 },
-                retry_backoff_s: 0.05,
-                horizon_slack_s: 2.0,
-                ..Default::default()
-            }),
+            "telemetry",
+            Some(AdaptConfig { scale: false, ..Default::default() }),
         ),
         (
-            "hedge_avail80",
-            Some(ChurnConfig {
-                mtbf_s: 0.8,
-                mttr_s: 0.2,
-                probe_interval_s: 0.05,
-                probe_timeout_s: 0.02,
-                suspect_after: 1,
-                policy: ResiliencePolicy::Hedge,
-                horizon_slack_s: 2.0,
-                ..Default::default()
-            }),
+            "telemetry_scaler",
+            Some(AdaptConfig { scale: true, ..Default::default() }),
         ),
     ] {
         let run_once = || {
@@ -81,6 +63,7 @@ fn main() {
                 5.0,
                 1,
             );
+            gw.pool_mut().enable_drift(&DriftConfig::default(), 7);
             run_frames(
                 &mut gw,
                 &frames,
@@ -89,9 +72,9 @@ fn main() {
                     arrivals: ArrivalProcess::Poisson { rate_rps: 500.0 },
                     queue_capacity: 8,
                     seed: 3,
-                    churn: churn.clone(),
+                    churn: None,
                     slo: None,
-                    adapt: None,
+                    adapt: adapt.clone(),
                 },
             )
             .unwrap()
@@ -102,14 +85,22 @@ fn main() {
         let cold_wall = t0.elapsed().as_secs_f64();
         let events = report.offered + report.metrics.requests;
         println!(
-            "{:<16} {:>10.0} events/sec cold ({} events)",
+            "{:<16} {:>10.0} events/sec cold ({} events, {} served, {} samples, {} downs/{} ups)",
             name,
             events as f64 / cold_wall.max(1e-9),
-            events
+            events,
+            report.metrics.requests,
+            report
+                .adapt
+                .as_ref()
+                .map(|a| a.telemetry_samples)
+                .unwrap_or(0),
+            report.adapt.as_ref().map(|a| a.power_downs).unwrap_or(0),
+            report.adapt.as_ref().map(|a| a.power_ups).unwrap_or(0),
         );
         b.run(name, || {
             let report = run_once();
-            black_box(report.metrics.requests + report.lost())
+            black_box(report.metrics.requests + report.dropped)
         });
         // headline events/sec from the MEASURED MEDIAN run time (the
         // cold run above is warm-up, not the tracked number)
@@ -118,7 +109,7 @@ fn main() {
             .last()
             .expect("case just measured")
             .throughput_per_sec();
-        extras_owned.push((
+        extras.push((
             format!("events_per_sec_{name}"),
             events as f64 * runs_per_sec,
         ));
@@ -129,5 +120,5 @@ fn main() {
         "engine totals: {count} inferences, {:.1} ms mean",
         1000.0 * secs / count.max(1) as f64
     );
-    b.finish_json(&extras_owned);
+    b.finish_json(&extras);
 }

@@ -60,6 +60,7 @@ fn main() {
                         drift: None,
                         churn: None,
                         slo: None,
+                        adapt: None,
                     },
                 )
                 .unwrap();

@@ -62,6 +62,7 @@ fn main() {
                     seed: 3,
                     churn: None,
                     slo: None,
+                    adapt: None,
                 },
             )
             .unwrap();

@@ -75,6 +75,7 @@ fn main() {
                     seed: 3,
                     churn: None,
                     slo: slo.clone(),
+                    adapt: None,
                 },
             )
             .unwrap()

@@ -1,0 +1,893 @@
+//! Online adaptation (DESIGN.md §12): the feedback loop the paper's
+//! profiling-based design lacks.
+//!
+//! Two cooperating halves, both option-gated (`adapt: None` keeps
+//! every pre-adaptation trace byte-identical):
+//!
+//! * [`Telemetry`] — every completion feeds its observed latency and
+//!   energy back into a per-[`PairId`] EWMA of the observed/predicted
+//!   cost ratio. The gateway turns that ratio into a confidence-
+//!   weighted multiplicative *correction* and applies it on the
+//!   [`RoutingView`](crate::router::RoutingView) cost overlay — the
+//!   same `view.age()` path the lifecycle warm-up uses, composed by
+//!   multiplication — so stale profiles converge toward drifted
+//!   ground truth without re-running the profiler.
+//! * [`Scaler`] — an arrival-rate EWMA drives energy-proportional
+//!   autoscaling: in troughs surplus nodes are deliberately powered
+//!   down (the lifecycle [`MemberState::PoweredDown`] path, sticky
+//!   against probes), and re-warmed through the existing
+//!   Warming/rejoin machinery when predicted utilization crosses the
+//!   upper threshold. Idle power is accounted per powered-second so
+//!   reports can compare fleet-wide energy/request against a static
+//!   (always-on) fleet.
+//!
+//! Everything here is a deterministic function of the observations it
+//! is fed (the seed exists for the synthesized membership config), so
+//! golden traces pin whole adaptive runs byte for byte.
+//!
+//! [`MemberState::PoweredDown`]: crate::lifecycle::MemberState::PoweredDown
+
+use anyhow::Result;
+
+use crate::lifecycle::{ChurnConfig, ResiliencePolicy};
+use crate::router::PairId;
+use crate::util::json::Json;
+
+/// Parameters of the adaptation subsystem (telemetry + scaler).
+#[derive(Clone, Debug)]
+pub struct AdaptConfig {
+    /// EWMA smoothing factor for the per-pair observed/predicted cost
+    /// ratio, in (0, 1]. Higher = faster convergence, noisier.
+    pub alpha: f64,
+    /// Observations before a pair's correction reaches full weight:
+    /// the applied factor is `1 + min(1, n/confidence) * (ewma - 1)`,
+    /// so a pair with few samples barely moves its profile.
+    pub confidence: usize,
+    /// Correction clamp: applied factors stay in
+    /// `[1/max_correction, max_correction]`.
+    pub max_correction: f64,
+    /// `0` = continuous mode (each observation is immediately visible
+    /// to routing); `N > 0` = periodic re-profiling mode (corrections
+    /// are snapshot-published to routing every N observations).
+    pub publish_every: usize,
+    /// Enable the energy-proportional autoscaling half.
+    pub scale: bool,
+    /// Scaler decision period on the virtual clock (s).
+    pub scale_interval_s: f64,
+    /// EWMA smoothing factor for the arrival-rate estimate, in (0, 1].
+    pub rate_alpha: f64,
+    /// Predicted utilization below which one surplus node powers down
+    /// per tick. Must sit strictly below `up_util` (hysteresis band).
+    pub down_util: f64,
+    /// Predicted utilization above which one node powers back up.
+    pub up_util: f64,
+    /// The scaler never powers the pool below this many nodes.
+    pub min_powered: usize,
+    /// Idle draw charged per powered node (W): the fleet-wide
+    /// energy/request term that makes powering nodes down worthwhile.
+    pub idle_power_w: f64,
+    /// Warm-up window a powered-up node re-enters routing through (s),
+    /// used when the gateway has no churn membership of its own.
+    pub warmup_s: f64,
+    /// Warm-up cost inflation at power-up (see
+    /// [`ChurnConfig::warmup_penalty`]).
+    pub warmup_penalty: f64,
+    /// Seed for the synthesized membership config (and any future
+    /// adaptation-local randomization; current decisions are all
+    /// deterministic functions of the observations).
+    pub seed: u64,
+}
+
+impl Default for AdaptConfig {
+    fn default() -> Self {
+        Self {
+            alpha: 0.3,
+            confidence: 8,
+            max_correction: 4.0,
+            publish_every: 0,
+            scale: true,
+            scale_interval_s: 0.25,
+            rate_alpha: 0.4,
+            down_util: 0.35,
+            up_util: 0.75,
+            min_powered: 1,
+            idle_power_w: 1.2,
+            warmup_s: 1.0,
+            warmup_penalty: 0.5,
+            seed: 17,
+        }
+    }
+}
+
+impl AdaptConfig {
+    /// Validate the invariants the subsystem relies on.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.alpha > 0.0 && self.alpha <= 1.0,
+            "adapt alpha must be in (0, 1], got {}",
+            self.alpha
+        );
+        anyhow::ensure!(
+            self.rate_alpha > 0.0 && self.rate_alpha <= 1.0,
+            "adapt rate_alpha must be in (0, 1], got {}",
+            self.rate_alpha
+        );
+        anyhow::ensure!(
+            self.max_correction >= 1.0,
+            "adapt max_correction must be >= 1, got {}",
+            self.max_correction
+        );
+        anyhow::ensure!(
+            self.down_util < self.up_util,
+            "adapt hysteresis band inverted: down_util {} >= up_util {}",
+            self.down_util,
+            self.up_util
+        );
+        anyhow::ensure!(
+            self.min_powered >= 1,
+            "adapt min_powered must be >= 1"
+        );
+        anyhow::ensure!(
+            self.scale_interval_s > 0.0,
+            "adapt scale_interval_s must be > 0"
+        );
+        anyhow::ensure!(
+            self.idle_power_w >= 0.0,
+            "adapt idle_power_w must be >= 0"
+        );
+        Ok(())
+    }
+
+    /// The membership config a scaling gateway synthesizes when it has
+    /// no churn membership of its own: nothing ever crashes
+    /// (`mtbf_s = INFINITY`), but power-ups re-enter routing through
+    /// the same Warming window churn recoveries use.
+    pub fn membership_config(&self) -> ChurnConfig {
+        ChurnConfig {
+            mtbf_s: f64::INFINITY,
+            warmup_s: self.warmup_s,
+            warmup_penalty: self.warmup_penalty,
+            policy: ResiliencePolicy::Drop,
+            seed: self.seed,
+            ..ChurnConfig::default()
+        }
+    }
+}
+
+/// Per-pair EWMA of the observed/predicted cost ratio.
+#[derive(Clone, Copy, Debug)]
+struct PairEwma {
+    ratio: f64,
+    n: usize,
+}
+
+impl Default for PairEwma {
+    fn default() -> Self {
+        Self { ratio: 1.0, n: 0 }
+    }
+}
+
+/// Telemetry-driven profile correction: a dense per-[`PairId`] table
+/// of EWMA cost ratios plus the published factors routing reads.
+#[derive(Clone, Debug)]
+pub struct Telemetry {
+    alpha: f64,
+    confidence: usize,
+    max_correction: f64,
+    publish_every: usize,
+    live: Vec<PairEwma>,
+    /// Factors visible to routing. Continuous mode keeps these in
+    /// lock-step with `live`; periodic mode refreshes them every
+    /// `publish_every` observations (the re-profiling cadence).
+    published: Vec<f64>,
+    observations: usize,
+    /// Any published factor deviates from 1.0 — the hot-path gate
+    /// that keeps the no-signal overlay loop free.
+    active: bool,
+}
+
+impl Telemetry {
+    pub fn new(cfg: &AdaptConfig, n_pairs: usize) -> Self {
+        Self {
+            alpha: cfg.alpha,
+            confidence: cfg.confidence.max(1),
+            max_correction: cfg.max_correction.max(1.0),
+            publish_every: cfg.publish_every,
+            live: vec![PairEwma::default(); n_pairs],
+            published: vec![1.0; n_pairs],
+            observations: 0,
+            active: false,
+        }
+    }
+
+    /// Feed one completed request's observed cost against the profiled
+    /// baseline for its (pair, group) row. The per-sample ratio is the
+    /// mean of the latency and energy component ratios (one scalar
+    /// scales both on the routing view, mirroring the warm-up overlay),
+    /// clamped to the correction range as an outlier guard.
+    pub fn observe(
+        &mut self,
+        id: PairId,
+        predicted_latency_s: f64,
+        predicted_energy_mwh: f64,
+        observed_latency_s: f64,
+        observed_energy_mwh: f64,
+    ) {
+        let Some(e) = self.live.get_mut(id.index()) else {
+            return;
+        };
+        let mut sum = 0.0;
+        let mut k = 0;
+        if predicted_latency_s > 0.0 {
+            sum += observed_latency_s / predicted_latency_s;
+            k += 1;
+        }
+        if predicted_energy_mwh > 0.0 {
+            sum += observed_energy_mwh / predicted_energy_mwh;
+            k += 1;
+        }
+        if k == 0 {
+            return;
+        }
+        let r = (sum / k as f64)
+            .clamp(1.0 / self.max_correction, self.max_correction);
+        e.ratio = self.alpha * r + (1.0 - self.alpha) * e.ratio;
+        e.n += 1;
+        self.observations += 1;
+        if self.publish_every == 0 {
+            let f = Self::factor_of(
+                self.live[id.index()],
+                self.confidence,
+                self.max_correction,
+            );
+            self.published[id.index()] = f;
+            self.active = self.active || f != 1.0;
+        } else if self.observations % self.publish_every == 0 {
+            self.publish();
+        }
+    }
+
+    /// Snapshot-publish every live correction to routing (the periodic
+    /// re-profiling step; continuous mode publishes per observation).
+    pub fn publish(&mut self) {
+        for (i, &e) in self.live.iter().enumerate() {
+            let f =
+                Self::factor_of(e, self.confidence, self.max_correction);
+            self.published[i] = f;
+            self.active = self.active || f != 1.0;
+        }
+    }
+
+    fn factor_of(e: PairEwma, confidence: usize, max: f64) -> f64 {
+        if e.n == 0 {
+            return 1.0;
+        }
+        let w = (e.n as f64 / confidence as f64).min(1.0);
+        (1.0 + w * (e.ratio - 1.0)).clamp(1.0 / max, max)
+    }
+
+    /// The correction factor routing applies to `id`'s profiled costs
+    /// (1.0 until published evidence says otherwise).
+    pub fn correction(&self, id: PairId) -> f64 {
+        self.published.get(id.index()).copied().unwrap_or(1.0)
+    }
+
+    /// Whether any published correction deviates from 1.0 (gates the
+    /// per-request overlay loop).
+    pub fn active(&self) -> bool {
+        self.active
+    }
+
+    /// Total observations fed so far.
+    pub fn samples(&self) -> usize {
+        self.observations
+    }
+
+    /// Pairs with at least one observation.
+    pub fn corrected_pairs(&self) -> usize {
+        self.live.iter().filter(|e| e.n > 0).count()
+    }
+
+    /// Mean published correction over pairs with observations (1.0
+    /// when nothing has been observed).
+    pub fn mean_correction(&self) -> f64 {
+        let mut sum = 0.0;
+        let mut n = 0;
+        for (i, e) in self.live.iter().enumerate() {
+            if e.n > 0 {
+                sum += self.published[i];
+                n += 1;
+            }
+        }
+        if n > 0 {
+            sum / n as f64
+        } else {
+            1.0
+        }
+    }
+}
+
+/// Energy-proportional autoscaler state: the arrival-rate EWMA, the
+/// powered set, and powered-seconds accounting for idle energy.
+///
+/// The scaler only *decides*; the gateway owns the actual transitions
+/// (pool health, membership state, drift reboot) so every power event
+/// flows through the same lifecycle machinery churn uses.
+#[derive(Clone, Debug)]
+pub struct Scaler {
+    interval_s: f64,
+    rate_alpha: f64,
+    down_util: f64,
+    up_util: f64,
+    min_powered: usize,
+    arrivals: usize,
+    last_tick_s: f64,
+    rate_rps: f64,
+    ticked: bool,
+    /// Powered flag per pair id (ids without a deployed node are
+    /// permanently unpowered and never counted).
+    powered: Vec<bool>,
+    deployed: Vec<bool>,
+    powered_since: Vec<f64>,
+    /// Powered-seconds accumulated over completed power windows; open
+    /// windows are finalized by [`Scaler::powered_node_s`].
+    closed_powered_s: f64,
+    initial_powered: usize,
+    pub power_downs: usize,
+    pub power_ups: usize,
+}
+
+impl Scaler {
+    /// `deployed[i]` = pair id `i` has a node behind it; all deployed
+    /// pairs start powered at t = 0.
+    pub fn new(cfg: &AdaptConfig, deployed: Vec<bool>) -> Self {
+        let initial = deployed.iter().filter(|&&d| d).count();
+        Self {
+            interval_s: cfg.scale_interval_s.max(1e-6),
+            rate_alpha: cfg.rate_alpha,
+            down_util: cfg.down_util,
+            up_util: cfg.up_util,
+            min_powered: cfg.min_powered.max(1),
+            arrivals: 0,
+            last_tick_s: 0.0,
+            rate_rps: 0.0,
+            ticked: false,
+            powered: deployed.clone(),
+            deployed,
+            powered_since: vec![0.0; 0],
+            closed_powered_s: 0.0,
+            initial_powered: initial,
+            power_downs: 0,
+            power_ups: 0,
+        }
+        .with_since()
+    }
+
+    fn with_since(mut self) -> Self {
+        self.powered_since = vec![0.0; self.powered.len()];
+        self
+    }
+
+    /// Scaler decision period (the driver's tick schedule).
+    pub fn interval_s(&self) -> f64 {
+        self.interval_s
+    }
+
+    /// Count one offered arrival toward the rate estimate.
+    pub fn note_arrival(&mut self) {
+        self.arrivals += 1;
+    }
+
+    /// Close the current measurement window at `now_s` and return the
+    /// predicted utilization `rate * mean_service / n_powered`, where
+    /// `mean_service_of` maps a powered pair id to its profiled mean
+    /// service time. Returns `None` when no time has passed or nothing
+    /// is powered.
+    pub fn tick(
+        &mut self,
+        now_s: f64,
+        mean_service_of: impl Fn(PairId) -> f64,
+    ) -> Option<f64> {
+        let dt = now_s - self.last_tick_s;
+        if dt <= 0.0 {
+            return None;
+        }
+        let inst = self.arrivals as f64 / dt;
+        self.rate_rps = if self.ticked {
+            self.rate_alpha * inst + (1.0 - self.rate_alpha) * self.rate_rps
+        } else {
+            inst
+        };
+        self.ticked = true;
+        self.arrivals = 0;
+        self.last_tick_s = now_s;
+        let mut svc_sum = 0.0;
+        let mut n = 0usize;
+        for (i, &p) in self.powered.iter().enumerate() {
+            if p {
+                svc_sum += mean_service_of(PairId(i as u32));
+                n += 1;
+            }
+        }
+        if n == 0 {
+            return None;
+        }
+        Some(self.rate_rps * (svc_sum / n as f64) / n as f64)
+    }
+
+    pub fn down_util(&self) -> f64 {
+        self.down_util
+    }
+
+    pub fn up_util(&self) -> f64 {
+        self.up_util
+    }
+
+    pub fn min_powered(&self) -> usize {
+        self.min_powered
+    }
+
+    pub fn is_powered(&self, id: PairId) -> bool {
+        self.powered.get(id.index()).copied().unwrap_or(false)
+    }
+
+    pub fn n_powered(&self) -> usize {
+        self.powered.iter().filter(|&&p| p).count()
+    }
+
+    /// Deployed pairs currently powered off.
+    pub fn n_off(&self) -> usize {
+        self.deployed
+            .iter()
+            .zip(&self.powered)
+            .filter(|&(&d, &p)| d && !p)
+            .count()
+    }
+
+    /// Record a power-down of `id` at `now_s` (the gateway performs
+    /// the pool/membership side).
+    pub fn power_down(&mut self, id: PairId, now_s: f64) {
+        let i = id.index();
+        if self.powered.get(i).copied() == Some(true) {
+            self.powered[i] = false;
+            self.closed_powered_s +=
+                (now_s - self.powered_since[i]).max(0.0);
+            self.power_downs += 1;
+        }
+    }
+
+    /// Record a power-up of `id` at `now_s`.
+    pub fn power_up(&mut self, id: PairId, now_s: f64) {
+        let i = id.index();
+        if self.deployed.get(i).copied() == Some(true) && !self.powered[i]
+        {
+            self.powered[i] = true;
+            self.powered_since[i] = now_s;
+            self.power_ups += 1;
+        }
+    }
+
+    /// Fleet-wide powered node-seconds up to `makespan_s` (closed
+    /// windows plus every still-open one).
+    pub fn powered_node_s(&self, makespan_s: f64) -> f64 {
+        let mut total = self.closed_powered_s;
+        for (i, &p) in self.powered.iter().enumerate() {
+            if p {
+                total += (makespan_s - self.powered_since[i]).max(0.0);
+            }
+        }
+        total
+    }
+
+    /// Node count of the equivalent static (always-on) fleet.
+    pub fn initial_powered(&self) -> usize {
+        self.initial_powered
+    }
+}
+
+/// Per-gateway adaptation runtime: config + telemetry + optional
+/// scaler. Lives on the gateway so corrections compose with routing
+/// and power transitions flow through pool + membership.
+#[derive(Clone, Debug)]
+pub struct AdaptRuntime {
+    pub cfg: AdaptConfig,
+    pub telemetry: Telemetry,
+    pub scaler: Option<Scaler>,
+}
+
+impl AdaptRuntime {
+    /// `deployed[i]` = pair id `i` has a node (scaler candidates).
+    pub fn new(cfg: &AdaptConfig, deployed: Vec<bool>) -> Self {
+        let telemetry = Telemetry::new(cfg, deployed.len());
+        let scaler = if cfg.scale {
+            Some(Scaler::new(cfg, deployed))
+        } else {
+            None
+        };
+        Self { cfg: cfg.clone(), telemetry, scaler }
+    }
+
+    /// Summarize this runtime at end of run. `n_nodes` sizes the
+    /// static-fleet comparison when the scaler is off (everything
+    /// powered for the whole run).
+    pub fn report(&self, n_nodes: usize, makespan_s: f64) -> AdaptReport {
+        let (powered_s, static_nodes, downs, ups) = match &self.scaler {
+            Some(sc) => (
+                sc.powered_node_s(makespan_s),
+                sc.initial_powered(),
+                sc.power_downs,
+                sc.power_ups,
+            ),
+            None => {
+                (n_nodes as f64 * makespan_s.max(0.0), n_nodes, 0, 0)
+            }
+        };
+        let static_s = static_nodes as f64 * makespan_s.max(0.0);
+        // W * s = J; 1 mWh = 3.6 J
+        let w = self.cfg.idle_power_w;
+        AdaptReport {
+            telemetry_samples: self.telemetry.samples(),
+            corrected_pairs: self.telemetry.corrected_pairs(),
+            mean_correction: self.telemetry.mean_correction(),
+            power_downs: downs,
+            power_ups: ups,
+            powered_node_s: powered_s,
+            static_node_s: static_s,
+            idle_energy_mwh: w * powered_s / 3.6,
+            static_idle_energy_mwh: w * static_s / 3.6,
+        }
+    }
+}
+
+/// Serialized adaptation summary attached to open-loop and fleet
+/// reports (present exactly when the run had an adapt config).
+#[derive(Clone, Debug)]
+pub struct AdaptReport {
+    pub telemetry_samples: usize,
+    pub corrected_pairs: usize,
+    /// Mean published correction over observed pairs (1.0 = profiles
+    /// already matched reality).
+    pub mean_correction: f64,
+    pub power_downs: usize,
+    pub power_ups: usize,
+    /// Powered node-seconds actually accrued under the scaler.
+    pub powered_node_s: f64,
+    /// Node-seconds of the equivalent always-on fleet.
+    pub static_node_s: f64,
+    /// Idle energy charged to the (possibly scaled) fleet.
+    pub idle_energy_mwh: f64,
+    /// Idle energy the static fleet would have burned.
+    pub static_idle_energy_mwh: f64,
+}
+
+impl AdaptReport {
+    /// Fold another gateway's report into this one (fleet shards).
+    pub fn merge(&mut self, other: &AdaptReport) {
+        // weighted by observed pairs so the mean stays a mean
+        let w_self = self.corrected_pairs as f64;
+        let w_other = other.corrected_pairs as f64;
+        if w_self + w_other > 0.0 {
+            self.mean_correction = (self.mean_correction * w_self
+                + other.mean_correction * w_other)
+                / (w_self + w_other);
+        }
+        self.telemetry_samples += other.telemetry_samples;
+        self.corrected_pairs += other.corrected_pairs;
+        self.power_downs += other.power_downs;
+        self.power_ups += other.power_ups;
+        self.powered_node_s += other.powered_node_s;
+        self.static_node_s += other.static_node_s;
+        self.idle_energy_mwh += other.idle_energy_mwh;
+        self.static_idle_energy_mwh += other.static_idle_energy_mwh;
+    }
+
+    /// Idle node-seconds saved vs the always-on fleet (>= 0).
+    pub fn node_s_saved(&self) -> f64 {
+        (self.static_node_s - self.powered_node_s).max(0.0)
+    }
+
+    /// One-line human summary shared by the `serve --adapt` CLI paths.
+    pub fn summary(&self) -> String {
+        format!(
+            "adapt: {} samples over {} pairs (mean correction {:.3}), {} power-downs / {} power-ups, idle {:.3} mWh vs static {:.3} mWh",
+            self.telemetry_samples,
+            self.corrected_pairs,
+            self.mean_correction,
+            self.power_downs,
+            self.power_ups,
+            self.idle_energy_mwh,
+            self.static_idle_energy_mwh
+        )
+    }
+
+    /// Stable JSON block (field order fixed by the Json substrate's
+    /// BTreeMap) — joins the golden-traced report dumps.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "telemetry_samples",
+                Json::num(self.telemetry_samples as f64),
+            ),
+            (
+                "corrected_pairs",
+                Json::num(self.corrected_pairs as f64),
+            ),
+            ("mean_correction", Json::num(self.mean_correction)),
+            ("power_downs", Json::num(self.power_downs as f64)),
+            ("power_ups", Json::num(self.power_ups as f64)),
+            ("powered_node_s", Json::num(self.powered_node_s)),
+            ("static_node_s", Json::num(self.static_node_s)),
+            ("idle_energy_mwh", Json::num(self.idle_energy_mwh)),
+            (
+                "static_idle_energy_mwh",
+                Json::num(self.static_idle_energy_mwh),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AdaptConfig {
+        AdaptConfig::default()
+    }
+
+    #[test]
+    fn default_config_validates_and_bad_configs_do_not() {
+        cfg().validate().unwrap();
+        for bad in [
+            AdaptConfig { alpha: 0.0, ..cfg() },
+            AdaptConfig { alpha: 1.5, ..cfg() },
+            AdaptConfig { rate_alpha: 0.0, ..cfg() },
+            AdaptConfig { max_correction: 0.5, ..cfg() },
+            AdaptConfig { down_util: 0.8, up_util: 0.4, ..cfg() },
+            AdaptConfig { min_powered: 0, ..cfg() },
+            AdaptConfig { scale_interval_s: 0.0, ..cfg() },
+            AdaptConfig { idle_power_w: -1.0, ..cfg() },
+        ] {
+            assert!(bad.validate().is_err(), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn synthesized_membership_config_never_crashes() {
+        let m = cfg().membership_config();
+        assert!(m.mtbf_s.is_infinite());
+        assert_eq!(m.warmup_s, cfg().warmup_s);
+        assert_eq!(m.warmup_penalty, cfg().warmup_penalty);
+    }
+
+    #[test]
+    fn telemetry_converges_toward_a_constant_drift_ratio() {
+        // observed costs 2x the profile: the published factor must
+        // climb from 1.0 toward 2.0 and stay clamped below max.
+        let mut t = Telemetry::new(&cfg(), 2);
+        let id = PairId(0);
+        assert_eq!(t.correction(id), 1.0);
+        assert!(!t.active());
+        for _ in 0..100 {
+            t.observe(id, 0.01, 0.005, 0.02, 0.01);
+        }
+        let f = t.correction(id);
+        assert!(
+            (f - 2.0).abs() < 0.05,
+            "correction {f} did not converge to 2.0"
+        );
+        assert!(t.active());
+        assert_eq!(t.corrected_pairs(), 1);
+        assert_eq!(t.samples(), 100);
+        // the unobserved pair is untouched
+        assert_eq!(t.correction(PairId(1)), 1.0);
+        // and recovery: ground truth back to the profile pulls the
+        // correction back down
+        for _ in 0..100 {
+            t.observe(id, 0.01, 0.005, 0.01, 0.005);
+        }
+        assert!((t.correction(id) - 1.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn ewma_correction_converges_under_drift_model() {
+        // the satellite property test: feed DriftModel ground truth
+        // (stale profile vs heated/throttled reality) through the
+        // telemetry path and require the published correction to land
+        // within tolerance of the drifted observed/predicted ratio.
+        use crate::devices::drift::{DriftConfig, DriftModel};
+        let dev = crate::devices::fleet()[0].clone();
+        let mut dm = DriftModel::new(dev, DriftConfig::default(), 42);
+        let mut t = Telemetry::new(&cfg(), 1);
+        let id = PairId(0);
+        let (base_lat, base_en) = (0.05, 0.02);
+        let mut tail_ratio = 0.0;
+        let mut tail_n = 0.0;
+        for i in 0..800 {
+            // back-to-back busy requests: the device heats, throttles,
+            // and droops — exactly the regime ablation_drift runs
+            let (lat, en) = dm.step(base_lat, base_en, 0.0);
+            t.observe(id, base_lat, base_en, lat, en);
+            if i >= 600 {
+                tail_ratio += 0.5 * (lat / base_lat + en / base_en);
+                tail_n += 1.0;
+            }
+        }
+        let truth = tail_ratio / tail_n;
+        assert!(
+            (truth - 1.0).abs() > 0.05,
+            "drift must actually move ground truth, ratio {truth}"
+        );
+        let f = t.correction(id);
+        assert!(
+            (f - truth).abs() / truth < 0.15,
+            "correction {f} did not converge to drifted ratio {truth}"
+        );
+    }
+
+    #[test]
+    fn confidence_weighting_damps_early_observations() {
+        let c = AdaptConfig { confidence: 10, ..cfg() };
+        let mut t = Telemetry::new(&c, 1);
+        let id = PairId(0);
+        t.observe(id, 0.01, 0.005, 0.03, 0.015);
+        let first = t.correction(id);
+        assert!(
+            first > 1.0 && first < 1.2,
+            "one sample must barely move the profile, got {first}"
+        );
+        for _ in 0..50 {
+            t.observe(id, 0.01, 0.005, 0.03, 0.015);
+        }
+        assert!(t.correction(id) > 2.0, "full confidence converges");
+    }
+
+    #[test]
+    fn corrections_are_clamped_to_the_configured_range() {
+        let c = AdaptConfig { max_correction: 1.5, ..cfg() };
+        let mut t = Telemetry::new(&c, 1);
+        let id = PairId(0);
+        for _ in 0..200 {
+            t.observe(id, 0.01, 0.005, 1.0, 0.5); // 100x blowup
+        }
+        assert_eq!(t.correction(id), 1.5);
+        let mut t = Telemetry::new(&c, 1);
+        for _ in 0..200 {
+            t.observe(id, 1.0, 0.5, 0.001, 0.0005); // 1000x faster
+        }
+        assert!((t.correction(id) - 1.0 / 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn periodic_mode_publishes_in_batches() {
+        let c = AdaptConfig { publish_every: 10, ..cfg() };
+        let mut t = Telemetry::new(&c, 1);
+        let id = PairId(0);
+        for _ in 0..9 {
+            t.observe(id, 0.01, 0.005, 0.02, 0.01);
+        }
+        // live EWMA has moved, but routing still sees 1.0
+        assert_eq!(t.correction(id), 1.0, "unpublished until the batch");
+        assert!(!t.active());
+        t.observe(id, 0.01, 0.005, 0.02, 0.01);
+        assert!(t.correction(id) > 1.0, "10th observation publishes");
+        assert!(t.active());
+    }
+
+    #[test]
+    fn zero_predictions_are_ignored_not_divided_by() {
+        let mut t = Telemetry::new(&cfg(), 1);
+        let id = PairId(0);
+        t.observe(id, 0.0, 0.0, 0.5, 0.5);
+        assert_eq!(t.samples(), 0);
+        assert_eq!(t.correction(id), 1.0);
+        // out-of-range ids are a no-op
+        t.observe(PairId(9), 0.1, 0.1, 0.2, 0.2);
+        assert_eq!(t.samples(), 0);
+    }
+
+    #[test]
+    fn scaler_rate_ewma_tracks_arrivals_and_hysteresis_holds() {
+        let c = AdaptConfig {
+            scale_interval_s: 1.0,
+            rate_alpha: 0.5,
+            ..cfg()
+        };
+        let mut sc = Scaler::new(&c, vec![true, true, true]);
+        assert_eq!(sc.n_powered(), 3);
+        assert_eq!(sc.initial_powered(), 3);
+        // 10 arrivals in the first 1 s window, service 0.05 s each:
+        // util = 10 * 0.05 / 3
+        for _ in 0..10 {
+            sc.note_arrival();
+        }
+        let util = sc.tick(1.0, |_| 0.05).unwrap();
+        assert!((util - 10.0 * 0.05 / 3.0).abs() < 1e-9, "util {util}");
+        // constant rate: the EWMA stays put, so the utilization signal
+        // cannot flap between ticks
+        for _ in 0..10 {
+            sc.note_arrival();
+        }
+        let util2 = sc.tick(2.0, |_| 0.05).unwrap();
+        assert!((util2 - util).abs() < 1e-9);
+        // zero-dt tick is refused
+        assert!(sc.tick(2.0, |_| 0.05).is_none());
+    }
+
+    #[test]
+    fn scaler_power_accounting_charges_only_powered_seconds() {
+        let c = cfg();
+        let mut sc = Scaler::new(&c, vec![true, true]);
+        sc.power_down(PairId(1), 4.0);
+        assert_eq!(sc.n_powered(), 1);
+        assert_eq!(sc.n_off(), 1);
+        assert_eq!(sc.power_downs, 1);
+        // node 0: 10 s powered; node 1: 4 s before power-down
+        assert!((sc.powered_node_s(10.0) - 14.0).abs() < 1e-9);
+        sc.power_up(PairId(1), 6.0);
+        assert_eq!(sc.power_ups, 1);
+        // node 1 adds 10 - 6 = 4 more powered seconds
+        assert!((sc.powered_node_s(10.0) - 18.0).abs() < 1e-9);
+        // double transitions are idempotent
+        sc.power_up(PairId(1), 7.0);
+        assert_eq!(sc.power_ups, 1);
+        sc.power_down(PairId(0), 8.0);
+        sc.power_down(PairId(0), 9.0);
+        assert_eq!(sc.power_downs, 2);
+        // undeployed ids can never power up
+        let mut sc = Scaler::new(&c, vec![true, false]);
+        assert_eq!(sc.initial_powered(), 1);
+        sc.power_up(PairId(1), 1.0);
+        assert!(!sc.is_powered(PairId(1)));
+    }
+
+    #[test]
+    fn runtime_report_compares_against_the_static_fleet() {
+        let c = AdaptConfig { idle_power_w: 3.6, ..cfg() };
+        let mut rt = AdaptRuntime::new(&c, vec![true, true]);
+        rt.telemetry.observe(PairId(0), 0.01, 0.005, 0.02, 0.01);
+        rt.scaler.as_mut().unwrap().power_down(PairId(1), 2.0);
+        let r = rt.report(2, 10.0);
+        assert_eq!(r.telemetry_samples, 1);
+        assert_eq!(r.corrected_pairs, 1);
+        assert_eq!(r.power_downs, 1);
+        assert!((r.powered_node_s - 12.0).abs() < 1e-9);
+        assert!((r.static_node_s - 20.0).abs() < 1e-9);
+        // 3.6 W for 12 s = 43.2 J = 12 mWh
+        assert!((r.idle_energy_mwh - 12.0).abs() < 1e-9);
+        assert!((r.static_idle_energy_mwh - 20.0).abs() < 1e-9);
+        assert!((r.node_s_saved() - 8.0).abs() < 1e-9);
+        let j = r.to_json();
+        assert_eq!(
+            j.req("telemetry_samples").unwrap().as_usize(),
+            Some(1)
+        );
+        assert_eq!(j.req("power_downs").unwrap().as_usize(), Some(1));
+        assert!(r.summary().contains("1 power-downs"));
+
+        // scaler off: the fleet is the static fleet
+        let c = AdaptConfig { scale: false, idle_power_w: 3.6, ..cfg() };
+        let rt = AdaptRuntime::new(&c, vec![true, true]);
+        let r = rt.report(2, 10.0);
+        assert_eq!(r.powered_node_s, r.static_node_s);
+        assert_eq!(r.idle_energy_mwh, r.static_idle_energy_mwh);
+    }
+
+    #[test]
+    fn report_merge_sums_and_weights_the_mean() {
+        let c = cfg();
+        let mut a = AdaptRuntime::new(&c, vec![true]);
+        let mut b = AdaptRuntime::new(&c, vec![true]);
+        for _ in 0..50 {
+            a.telemetry.observe(PairId(0), 0.01, 0.005, 0.02, 0.01);
+            b.telemetry.observe(PairId(0), 0.01, 0.005, 0.01, 0.005);
+        }
+        let mut ra = a.report(1, 5.0);
+        let rb = b.report(1, 5.0);
+        let (ma, mb) = (ra.mean_correction, rb.mean_correction);
+        ra.merge(&rb);
+        assert_eq!(ra.telemetry_samples, 100);
+        assert_eq!(ra.corrected_pairs, 2);
+        assert!((ra.mean_correction - (ma + mb) / 2.0).abs() < 1e-9);
+        assert!((ra.static_node_s - 10.0).abs() < 1e-9);
+    }
+}

@@ -278,6 +278,40 @@ pub struct ExperimentConfig {
     pub slo_requests: usize,
     /// SLO sweep: routers compared per cell.
     pub slo_routers: Vec<String>,
+    /// Adapt: telemetry EWMA smoothing factor, in (0, 1].
+    pub adapt_alpha: f64,
+    /// Adapt: observations before a correction reaches full weight.
+    pub adapt_confidence: usize,
+    /// Adapt: correction clamp (factors stay within [1/x, x]).
+    pub adapt_max_correction: f64,
+    /// Adapt: 0 = continuous corrections; N > 0 = publish every N
+    /// observations (periodic re-profiling mode).
+    pub adapt_publish_every: usize,
+    /// Adapt: enable the energy-proportional autoscaling half.
+    pub adapt_scale: bool,
+    /// Adapt: scaler decision period on the virtual clock (s).
+    pub adapt_scale_interval_s: f64,
+    /// Adapt: arrival-rate EWMA smoothing factor, in (0, 1].
+    pub adapt_rate_alpha: f64,
+    /// Adapt: utilization below which one node powers down per tick.
+    pub adapt_down_util: f64,
+    /// Adapt: utilization above which one node powers back up.
+    pub adapt_up_util: f64,
+    /// Adapt: floor on powered nodes.
+    pub adapt_min_powered: usize,
+    /// Adapt: idle draw charged per powered node (W).
+    pub adapt_idle_power_w: f64,
+    /// Adapt: warm-up window for powered-up nodes (s).
+    pub adapt_warmup_s: f64,
+    /// Adapt sweep: routers compared per cell.
+    pub adapt_routers: Vec<String>,
+    /// Adapt sweep: drift-intensity multipliers on the default drift
+    /// model (heat rate and load-walk scale; 1.0 = default drift).
+    pub adapt_drift: Vec<f64>,
+    /// Adapt sweep: Poisson arrival rate (req/s).
+    pub adapt_rate_rps: f64,
+    /// Adapt sweep: offered requests per cell.
+    pub adapt_requests: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -343,6 +377,22 @@ impl Default for ExperimentConfig {
             slo_windows_s: vec![0.0, 0.004, 0.01],
             slo_requests: 200,
             slo_routers: ["ED", "LE"].iter().map(|s| s.to_string()).collect(),
+            adapt_alpha: 0.3,
+            adapt_confidence: 8,
+            adapt_max_correction: 4.0,
+            adapt_publish_every: 0,
+            adapt_scale: true,
+            adapt_scale_interval_s: 0.25,
+            adapt_rate_alpha: 0.4,
+            adapt_down_util: 0.35,
+            adapt_up_util: 0.75,
+            adapt_min_powered: 1,
+            adapt_idle_power_w: 1.2,
+            adapt_warmup_s: 1.0,
+            adapt_routers: ["ED", "LE"].iter().map(|s| s.to_string()).collect(),
+            adapt_drift: vec![1.0, 2.0],
+            adapt_rate_rps: 40.0,
+            adapt_requests: 160,
         }
     }
 }
@@ -465,6 +515,46 @@ impl ExperimentConfig {
                 .get("experiment.slo_routers")
                 .and_then(|v| v.as_str_list())
                 .unwrap_or(d.slo_routers),
+            adapt_alpha: t.f64_or("experiment.adapt_alpha", d.adapt_alpha),
+            adapt_confidence: t
+                .usize_or("experiment.adapt_confidence", d.adapt_confidence),
+            adapt_max_correction: t.f64_or(
+                "experiment.adapt_max_correction",
+                d.adapt_max_correction,
+            ),
+            adapt_publish_every: t.usize_or(
+                "experiment.adapt_publish_every",
+                d.adapt_publish_every,
+            ),
+            adapt_scale: t.bool_or("experiment.adapt_scale", d.adapt_scale),
+            adapt_scale_interval_s: t.f64_or(
+                "experiment.adapt_scale_interval_s",
+                d.adapt_scale_interval_s,
+            ),
+            adapt_rate_alpha: t
+                .f64_or("experiment.adapt_rate_alpha", d.adapt_rate_alpha),
+            adapt_down_util: t
+                .f64_or("experiment.adapt_down_util", d.adapt_down_util),
+            adapt_up_util: t
+                .f64_or("experiment.adapt_up_util", d.adapt_up_util),
+            adapt_min_powered: t
+                .usize_or("experiment.adapt_min_powered", d.adapt_min_powered),
+            adapt_idle_power_w: t
+                .f64_or("experiment.adapt_idle_power_w", d.adapt_idle_power_w),
+            adapt_warmup_s: t
+                .f64_or("experiment.adapt_warmup_s", d.adapt_warmup_s),
+            adapt_routers: t
+                .get("experiment.adapt_routers")
+                .and_then(|v| v.as_str_list())
+                .unwrap_or(d.adapt_routers),
+            adapt_drift: t
+                .get("experiment.adapt_drift")
+                .and_then(|v| v.as_f64_list())
+                .unwrap_or(d.adapt_drift),
+            adapt_rate_rps: t
+                .f64_or("experiment.adapt_rate_rps", d.adapt_rate_rps),
+            adapt_requests: t
+                .usize_or("experiment.adapt_requests", d.adapt_requests),
         }
     }
 
@@ -554,6 +644,40 @@ impl ExperimentConfig {
         if args.get("slo-routers").is_some() {
             self.slo_routers = args.list_or("slo-routers", &[]);
         }
+        self.adapt_alpha = args.f64_or("adapt-alpha", self.adapt_alpha);
+        self.adapt_confidence =
+            args.usize_or("adapt-confidence", self.adapt_confidence);
+        self.adapt_max_correction = args
+            .f64_or("adapt-max-correction", self.adapt_max_correction);
+        self.adapt_publish_every =
+            args.usize_or("adapt-publish-every", self.adapt_publish_every);
+        if args.flag("adapt-no-scale") {
+            self.adapt_scale = false;
+        }
+        self.adapt_scale_interval_s =
+            args.f64_or("adapt-interval", self.adapt_scale_interval_s);
+        self.adapt_rate_alpha =
+            args.f64_or("adapt-rate-alpha", self.adapt_rate_alpha);
+        self.adapt_down_util =
+            args.f64_or("adapt-down-util", self.adapt_down_util);
+        self.adapt_up_util =
+            args.f64_or("adapt-up-util", self.adapt_up_util);
+        self.adapt_min_powered =
+            args.usize_or("adapt-min-powered", self.adapt_min_powered);
+        self.adapt_idle_power_w =
+            args.f64_or("adapt-idle-power", self.adapt_idle_power_w);
+        self.adapt_warmup_s =
+            args.f64_or("adapt-warmup", self.adapt_warmup_s);
+        if args.get("adapt-routers").is_some() {
+            self.adapt_routers = args.list_or("adapt-routers", &[]);
+        }
+        if args.get("adapt-drift").is_some() {
+            self.adapt_drift = args.f64_list_or("adapt-drift", &[]);
+        }
+        self.adapt_rate_rps =
+            args.f64_or("adapt-rate", self.adapt_rate_rps);
+        self.adapt_requests =
+            args.usize_or("adapt-requests", self.adapt_requests);
     }
 
     /// Materialize the churn keys into a [`ChurnConfig`] (the `serve
@@ -610,6 +734,32 @@ impl ExperimentConfig {
             batch_window_s: self.slo_batch_window_s,
             max_batch: self.slo_max_batch,
         })
+    }
+
+    /// Materialize the adapt keys into a validated [`AdaptConfig`]
+    /// (the `serve --adapt` path and the `adapt` sweep; the sweep
+    /// overrides `scale`/`publish_every` per arm).
+    ///
+    /// [`AdaptConfig`]: crate::adapt::AdaptConfig
+    pub fn adapt_config(&self) -> Result<crate::adapt::AdaptConfig> {
+        let cfg = crate::adapt::AdaptConfig {
+            alpha: self.adapt_alpha,
+            confidence: self.adapt_confidence,
+            max_correction: self.adapt_max_correction,
+            publish_every: self.adapt_publish_every,
+            scale: self.adapt_scale,
+            scale_interval_s: self.adapt_scale_interval_s,
+            rate_alpha: self.adapt_rate_alpha,
+            down_util: self.adapt_down_util,
+            up_util: self.adapt_up_util,
+            min_powered: self.adapt_min_powered,
+            idle_power_w: self.adapt_idle_power_w,
+            warmup_s: self.adapt_warmup_s,
+            warmup_penalty: self.churn_warmup_penalty,
+            seed: self.seed ^ 0xADA7,
+        };
+        cfg.validate()?;
+        Ok(cfg)
     }
 }
 
@@ -783,6 +933,49 @@ routers = ["ED", "OB"]
         assert!(c.slo_config().is_err());
         c.slo_classes = Vec::new();
         assert!(c.slo_config().is_err());
+    }
+
+    #[test]
+    fn adapt_keys_parse_override_and_materialize() {
+        let t = Table::parse(
+            "[experiment]\nadapt_alpha = 0.5\nadapt_scale = false\nadapt_drift = [1.5, 3.0]\n",
+        )
+        .unwrap();
+        let mut c = ExperimentConfig::from_table(&t);
+        assert_eq!(c.adapt_alpha, 0.5);
+        assert!(!c.adapt_scale);
+        assert_eq!(c.adapt_drift, vec![1.5, 3.0]);
+        let d = ExperimentConfig::default();
+        assert_eq!(c.adapt_confidence, d.adapt_confidence);
+        assert_eq!(c.adapt_routers, d.adapt_routers);
+        // CLI wins over file
+        let args = crate::util::cli::Args::parse(
+            [
+                "--adapt-alpha",
+                "0.25",
+                "--adapt-routers",
+                "ED",
+                "--adapt-requests",
+                "12",
+                "--adapt-drift",
+                "2.0",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+        );
+        c.override_with(&args);
+        assert_eq!(c.adapt_alpha, 0.25);
+        assert_eq!(c.adapt_routers, vec!["ED"]);
+        assert_eq!(c.adapt_requests, 12);
+        assert_eq!(c.adapt_drift, vec![2.0]);
+        // materializes into a validated AdaptConfig
+        let ac = c.adapt_config().unwrap();
+        assert_eq!(ac.alpha, 0.25);
+        assert!(!ac.scale, "file turned scaling off");
+        assert_eq!(ac.seed, c.seed ^ 0xADA7);
+        // bad values surface as typed errors
+        c.adapt_alpha = 0.0;
+        assert!(c.adapt_config().is_err());
     }
 
     #[test]

@@ -7,8 +7,10 @@
 //! throttling cuts throughput; battery droop raises effective dynamic
 //! power on battery-fed boards; background load adds a slow random walk.
 //! The `ablation_drift` experiment shows static profiles going stale
-//! against a drifting fleet and periodic re-profiling recovering most of
-//! the loss.
+//! against a drifting fleet, and the online adaptation subsystem
+//! (`crate::adapt` — continuous or periodically published telemetry
+//! corrections) recovering the loss through the production routing
+//! path.
 
 use super::DeviceSpec;
 use crate::util::rng::Rng;

@@ -230,51 +230,92 @@ pub fn ablation_weighted(h: &Harness) -> Result<()> {
     h.save_json("ablation_weighted", &Json::Arr(out))
 }
 
-/// Static profiles on a drifting fleet vs periodic re-profiling (FW #1).
+/// Static profiles on a drifting fleet vs telemetry-corrected
+/// profiles (FW #1). The correction arms run through the production
+/// adaptation path (DESIGN.md §12) — the same EWMA corrector the
+/// `adapt` experiment sweeps — rather than a bespoke re-profiling
+/// pass, so the ablation measures exactly what serving would do.
 pub fn ablation_drift(h: &Harness) -> Result<()> {
     let n = (h.cfg.coco_images / 2).max(100);
     let ds = coco::build(n, h.cfg.seed ^ 0xAB4);
     let deployed = deployed_store(h)?;
+    let base = crate::adapt::AdaptConfig {
+        scale: false, // closed-loop replay has no arrival process
+        ..h.cfg.adapt_config()?
+    };
 
     println!("--- ablation_drift ({n} images) ---");
     println!(
-        "{:<22} {:>8} {:>12} {:>12}",
-        "fleet", "mAP", "energy_mWh", "latency_s"
+        "{:<26} {:>8} {:>12} {:>12} {:>7}",
+        "fleet", "mAP", "energy_mWh", "latency_s", "corr"
     );
     let mut out = Vec::new();
 
-    // static fleet (the paper's assumption)
-    let mut gw = fresh_gateway(h, "Orc", &deployed, h.cfg.delta_map)?;
-    let m_static = workload::run_dataset(&mut gw, &ds)?;
-
-    // drifting fleet, original profiles (stale)
-    let mut gw = fresh_gateway(h, "Orc", &deployed, h.cfg.delta_map)?;
-    gw.pool_mut().enable_drift(&DriftConfig::default(), h.cfg.seed);
-    let m_drift = workload::run_dataset(&mut gw, &ds)?;
-
-    for (name, m) in [
-        ("static (paper)", &m_static),
-        ("drifting, stale profiles", &m_drift),
-    ] {
+    // arms: (label, drift on, adaptation config)
+    let arms: [(&str, bool, Option<crate::adapt::AdaptConfig>); 4] = [
+        ("static (paper)", false, None),
+        ("drifting, stale profiles", true, None),
+        (
+            "drifting, online adapt",
+            true,
+            Some(crate::adapt::AdaptConfig {
+                publish_every: 0,
+                ..base.clone()
+            }),
+        ),
+        (
+            "drifting, periodic adapt",
+            true,
+            Some(crate::adapt::AdaptConfig {
+                publish_every: 25,
+                ..base.clone()
+            }),
+        ),
+    ];
+    let mut measured = Vec::new();
+    for (name, drift, adapt) in &arms {
+        let mut gw = fresh_gateway(h, "Orc", &deployed, h.cfg.delta_map)?;
+        if *drift {
+            gw.pool_mut()
+                .enable_drift(&DriftConfig::default(), h.cfg.seed);
+        }
+        if let Some(a) = adapt {
+            gw.enable_adapt(a);
+        }
+        let m = workload::run_dataset(&mut gw, &ds)?;
+        // closed-loop replay has no wall clock, so the report carries
+        // telemetry stats only (node-seconds need a makespan)
+        let corr = gw
+            .adapt_report(0.0)
+            .map(|r| r.mean_correction)
+            .unwrap_or(1.0);
         println!(
-            "{:<26} {:>8.2} {:>12.2} {:>12.2}",
+            "{:<26} {:>8.2} {:>12.2} {:>12.2} {:>7.3}",
             name,
             m.map(),
             m.total_energy_mwh(),
-            m.total_latency_s
+            m.total_latency_s,
+            corr
         );
         out.push(Json::obj(vec![
             ("fleet", Json::str(name)),
             ("map", Json::num(m.map())),
             ("energy_mwh", Json::num(m.total_energy_mwh())),
             ("latency_s", Json::num(m.total_latency_s)),
+            ("mean_correction", Json::num(corr)),
         ]));
+        measured.push(m);
     }
     let excess = crate::util::stats::pct_change(
-        m_static.total_energy_mwh(),
-        m_drift.total_energy_mwh(),
+        measured[0].total_energy_mwh(),
+        measured[1].total_energy_mwh(),
+    );
+    let recovered = crate::util::stats::pct_change(
+        measured[1].total_energy_mwh(),
+        measured[2].total_energy_mwh(),
     );
     println!("drift cost: {excess:+.1}% energy over the static assumption");
+    println!("online adapt: {recovered:+.1}% energy vs stale profiles");
     h.save_json("ablation_drift", &Json::Arr(out))
 }
 

@@ -1,0 +1,209 @@
+//! Adaptation sweep: telemetry-driven profile correction and
+//! energy-proportional autoscaling under device drift (DESIGN.md §12).
+//!
+//! For each (drift intensity, router, adaptation mode) cell the driver
+//! deploys a fresh Table-1 pool, turns on thermal/battery drift scaled
+//! by the intensity multiplier, and replays the same pre-rendered
+//! request set through the open-loop simulator. Four arms isolate the
+//! subsystem's two halves:
+//!
+//! * `static`   — drift on, adaptation off: the stale-profile baseline
+//!   every other arm is measured against.
+//! * `online`   — telemetry feedback published continuously
+//!   (`publish_every = 0`), autoscaling off.
+//! * `periodic` — telemetry published in epochs (every N samples),
+//!   the classic re-profiling cadence expressed through the same
+//!   corrector instead of a separate profiling pass.
+//! * `scaled`   — continuous feedback plus the energy-proportional
+//!   scaler powering surplus nodes down in arrival troughs.
+//!
+//! Reported per cell: goodput, p99, energy per request, corrected
+//! pairs and mean correction factor, scaler transitions, and powered
+//! node-seconds vs the always-on fleet. The headline comparison is
+//! `static` vs `online` at each drift level: the corrector should buy
+//! back tail latency and energy per request that stale profiles leak.
+
+use anyhow::{Context, Result};
+
+use super::serve::{build_gateway, deployed_store};
+use super::Harness;
+use crate::adapt::AdaptConfig;
+use crate::dataset::{coco, GtBox, Scene};
+use crate::devices::drift::DriftConfig;
+use crate::gateway::router_by_name;
+use crate::util::json::Json;
+use crate::workload::openloop::{
+    self, ArrivalProcess, OpenLoopConfig, OpenLoopReport,
+};
+
+/// How many telemetry samples one periodic epoch spans. Small enough
+/// that even the smoke-sized sweep publishes at least once.
+const PERIODIC_EPOCH: usize = 25;
+
+/// Scale the default drift model by an intensity multiplier: hotter
+/// accumulation and a noisier load walk, same throttle geometry.
+fn drift_at(intensity: f64) -> DriftConfig {
+    let base = DriftConfig::default();
+    DriftConfig {
+        heat_per_busy_s: base.heat_per_busy_s * intensity,
+        load_walk_std: base.load_walk_std * intensity,
+        ..base
+    }
+}
+
+/// Run one (router, drift, mode) cell over shared pre-rendered frames.
+fn run_cell(
+    h: &Harness,
+    spec: crate::gateway::RouterSpec,
+    deployed: &crate::router::ProfileStore,
+    frames: &[Scene],
+    gts: &[Vec<GtBox>],
+    drift: &DriftConfig,
+    adapt: Option<AdaptConfig>,
+) -> Result<OpenLoopReport> {
+    let mut gw = build_gateway(h, spec, deployed, h.cfg.delta_map)?;
+    gw.pool_mut().enable_drift(drift, h.cfg.seed);
+    openloop::run_frames(
+        &mut gw,
+        frames,
+        gts,
+        &OpenLoopConfig {
+            arrivals: ArrivalProcess::Poisson {
+                rate_rps: h.cfg.adapt_rate_rps,
+            },
+            queue_capacity: h.cfg.queue_capacity,
+            seed: h.cfg.seed,
+            churn: None,
+            slo: None,
+            adapt,
+        },
+    )
+}
+
+/// The `adapt` experiment: sweep drift intensity x router x mode.
+pub fn adapt(h: &Harness) -> Result<()> {
+    let n = h.cfg.adapt_requests.max(1);
+    let ds = coco::build(n, h.cfg.seed ^ 0xADA9);
+    let frames: Vec<Scene> = ds.iter_scenes().collect();
+    let gts: Vec<Vec<GtBox>> =
+        frames.iter().map(|s| s.gt.clone()).collect();
+    let deployed = deployed_store(h)?;
+    let base = h.cfg.adapt_config()?;
+    eprintln!(
+        "[adapt] pool {} pairs, {} requests @ {} req/s, drift x{:?}, alpha {}, epoch {}",
+        deployed.pairs().len(),
+        n,
+        h.cfg.adapt_rate_rps,
+        h.cfg.adapt_drift,
+        base.alpha,
+        PERIODIC_EPOCH
+    );
+    println!(
+        "--- adapt (drift x router x adaptation over {n} requests) ---"
+    );
+    println!(
+        "{:<6} {:>6} {:>9} {:>9} {:>9} {:>12} {:>6} {:>7} {:>9} {:>5} {:>5} {:>10}",
+        "router",
+        "drift",
+        "mode",
+        "goodput",
+        "p99_ms",
+        "mWh_per_req",
+        "pairs",
+        "corr",
+        "node_s",
+        "down",
+        "up",
+        "idle_mWh"
+    );
+    // arm order matters for the printed table: the static baseline
+    // leads each (router, drift) block so the adaptive rows read as
+    // deltas against it.
+    let modes: Vec<(&str, Option<AdaptConfig>)> = vec![
+        ("static", None),
+        (
+            "online",
+            Some(AdaptConfig {
+                publish_every: 0,
+                scale: false,
+                ..base.clone()
+            }),
+        ),
+        (
+            "periodic",
+            Some(AdaptConfig {
+                publish_every: PERIODIC_EPOCH,
+                scale: false,
+                ..base.clone()
+            }),
+        ),
+        (
+            "scaled",
+            Some(AdaptConfig {
+                publish_every: 0,
+                scale: true,
+                ..base.clone()
+            }),
+        ),
+    ];
+    let mut rows = Vec::new();
+    for &intensity in &h.cfg.adapt_drift {
+        let drift = drift_at(intensity);
+        for name in &h.cfg.adapt_routers {
+            let spec = router_by_name(name)
+                .with_context(|| format!("unknown router '{name}'"))?;
+            for (mode, adapt_cfg) in &modes {
+                let report = run_cell(
+                    h,
+                    spec,
+                    &deployed,
+                    &frames,
+                    &gts,
+                    &drift,
+                    adapt_cfg.clone(),
+                )?;
+                match report.adapt.as_ref() {
+                    Some(a) => println!(
+                        "{:<6} {:>6.1} {:>9} {:>9.2} {:>9.1} {:>12.4} {:>6} {:>7.3} {:>9.1} {:>5} {:>5} {:>10.3}",
+                        spec.name,
+                        intensity,
+                        mode,
+                        report.goodput_rps(),
+                        1000.0 * report.metrics.latency_percentile(99.0),
+                        report.energy_per_request_mwh(),
+                        a.corrected_pairs,
+                        a.mean_correction,
+                        a.powered_node_s,
+                        a.power_downs,
+                        a.power_ups,
+                        a.idle_energy_mwh,
+                    ),
+                    None => println!(
+                        "{:<6} {:>6.1} {:>9} {:>9.2} {:>9.1} {:>12.4} {:>6} {:>7} {:>9} {:>5} {:>5} {:>10}",
+                        spec.name,
+                        intensity,
+                        mode,
+                        report.goodput_rps(),
+                        1000.0 * report.metrics.latency_percentile(99.0),
+                        report.energy_per_request_mwh(),
+                        "-",
+                        "-",
+                        "-",
+                        "-",
+                        "-",
+                        "-"
+                    ),
+                }
+                rows.push(Json::obj(vec![
+                    ("router", Json::str(spec.name)),
+                    ("drift", Json::num(intensity)),
+                    ("mode", Json::str(mode)),
+                    ("rate_rps", Json::num(h.cfg.adapt_rate_rps)),
+                    ("report", report.to_json()),
+                ]));
+            }
+        }
+        println!();
+    }
+    h.save_json("adapt", &Json::Arr(rows))
+}

@@ -96,6 +96,7 @@ pub fn churn(h: &Harness) -> Result<()> {
                         seed: h.cfg.seed,
                         churn: Some(churn_cfg),
                         slo: None,
+                        adapt: None,
                     },
                 )?;
                 let c =

@@ -84,6 +84,7 @@ pub fn fleet(h: &Harness) -> Result<()> {
                             drift: None,
                             churn: None,
                             slo: None,
+                            adapt: None,
                         },
                     )?;
                 let report = run_frames(

@@ -15,11 +15,13 @@
 //! | `fleet`   | sharded multi-gateway fleet sweep (beyond paper) |
 //! | `churn`   | router survivability under node churn (§9)       |
 //! | `slo`     | SLO attainment + dynamic batching sweep (§11)    |
+//! | `adapt`   | online adaptation under device drift (§12)       |
 //!
 //! Every driver prints the paper-style table and writes
 //! `results/<id>.json` for downstream plotting.
 
 pub mod ablations;
+pub mod adapt;
 pub mod churn;
 pub mod fleet;
 pub mod openloop;
@@ -39,9 +41,9 @@ use crate::router::{GroupRules, ProfileStore};
 use crate::runtime::Engine;
 use crate::util::json::Json;
 
-pub const ALL_EXPERIMENTS: [&str; 13] = [
+pub const ALL_EXPERIMENTS: [&str; 14] = [
     "fig2", "fig4", "fig5", "table1", "fig6", "fig7", "fig8", "fig9",
-    "overhead", "openloop", "fleet", "churn", "slo",
+    "overhead", "openloop", "fleet", "churn", "slo", "adapt",
 ];
 
 /// Shared experiment context.
@@ -136,6 +138,7 @@ impl Harness {
             "fleet" => fleet::fleet(self),
             "churn" => churn::churn(self),
             "slo" => slo::slo(self),
+            "adapt" => adapt::adapt(self),
             "ablation_groups" => ablations::ablation_groups(self),
             "ablation_batch" => ablations::ablation_batch(self),
             "ablation_weighted" => ablations::ablation_weighted(self),

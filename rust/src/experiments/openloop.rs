@@ -40,6 +40,7 @@ fn run_cell(
             seed: h.cfg.seed,
             churn: None,
             slo: None,
+            adapt: None,
         },
     )
     .map(|mut report| {

@@ -44,6 +44,7 @@ fn run_cell(
             seed: h.cfg.seed,
             churn: None,
             slo,
+            adapt: None,
         },
     )
 }

@@ -104,27 +104,40 @@ pub fn fig4(h: &Harness) -> Result<()> {
     )
 }
 
+/// One fig5 scatter point: a pair's mean detection mAP and per-image
+/// cost.
+#[derive(Clone)]
+struct Fig5Row {
+    pair: crate::router::PairKey,
+    map: f64,
+    energy: f64,
+    latency: f64,
+}
+
+/// Ascending energy with a total order: a NaN energy from a corrupt
+/// profile cache sorts last instead of panicking, and energy ties
+/// break by pair key so the fig5 listing (and therefore the Pareto
+/// marking) is deterministic across runs.
+fn sort_by_energy(rows: &mut [Fig5Row]) {
+    rows.sort_by(|a, b| {
+        a.energy.total_cmp(&b.energy).then_with(|| a.pair.cmp(&b.pair))
+    });
+}
+
 /// Fig. 5: the 64-combination accuracy–energy grid with Pareto marking.
 pub fn fig5(h: &Harness) -> Result<()> {
     let store = h.profiles()?;
     // aggregate per pair: mean mAP over groups 1..4 (group 0 is the
     // clean-image score, not a detection metric), energy per inference
     let pairs = store.pairs();
-    #[derive(Clone)]
-    struct Row {
-        pair: crate::router::PairKey,
-        map: f64,
-        energy: f64,
-        latency: f64,
-    }
-    let mut rows: Vec<Row> = pairs
+    let mut rows: Vec<Fig5Row> = pairs
         .iter()
         .map(|p| {
             let maps: Vec<f64> = (1..=4)
                 .filter_map(|g| store.lookup(p, g).map(|r| r.map))
                 .collect();
             let any = store.lookup(p, 1).unwrap();
-            Row {
+            Fig5Row {
                 pair: p.clone(),
                 map: maps.iter().sum::<f64>() / maps.len() as f64,
                 energy: any.energy_mwh,
@@ -132,7 +145,7 @@ pub fn fig5(h: &Harness) -> Result<()> {
             }
         })
         .collect();
-    rows.sort_by(|a, b| a.energy.partial_cmp(&b.energy).unwrap());
+    sort_by_energy(&mut rows);
     // Pareto front: minimal energy, maximal mAP
     let mut best_map = f64::NEG_INFINITY;
     let mut pareto = vec![false; rows.len()];
@@ -227,4 +240,35 @@ pub fn table1(h: &Harness) -> Result<()> {
         testbed::pool(&rows).len()
     );
     h.save_json("table1", &Json::Arr(out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::router::PairKey;
+
+    fn row(model: &str, energy: f64) -> Fig5Row {
+        Fig5Row {
+            pair: PairKey::new(model, "d"),
+            map: 50.0,
+            energy,
+            latency: 0.01,
+        }
+    }
+
+    #[test]
+    fn nan_energy_sorts_last_and_ties_break_by_pair_key() {
+        // regression: `sort_by(partial_cmp().unwrap())` panicked when a
+        // hand-edited profile cache carried a NaN energy
+        let mut rows = vec![
+            row("b", 2.0),
+            row("poisoned", f64::NAN),
+            row("c", 1.0),
+            row("a", 2.0),
+        ];
+        sort_by_energy(&mut rows);
+        let order: Vec<&str> =
+            rows.iter().map(|r| r.pair.model.as_str()).collect();
+        assert_eq!(order, ["c", "a", "b", "poisoned"]);
+    }
 }

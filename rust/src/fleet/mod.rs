@@ -25,6 +25,7 @@ use std::collections::{BTreeMap, BinaryHeap, VecDeque};
 
 use anyhow::{Context, Result};
 
+use crate::adapt::{AdaptConfig, AdaptReport};
 use crate::dataset::{Dataset, GtBox, Scene};
 use crate::detection::map::{map_coco, ImageEval};
 use crate::devices;
@@ -155,6 +156,10 @@ pub struct FleetConfig {
     /// control, EDF queue ordering, and per-(shard, pair) batch
     /// formation. `None` keeps the event stream bit-identical.
     pub slo: Option<SloConfig>,
+    /// Online adaptation (DESIGN.md §12): per-shard telemetry-driven
+    /// profile corrections plus energy-proportional autoscaling.
+    /// `None` keeps the event stream bit-identical.
+    pub adapt: Option<AdaptConfig>,
 }
 
 impl Default for FleetConfig {
@@ -170,6 +175,7 @@ impl Default for FleetConfig {
             drift: None,
             churn: None,
             slo: None,
+            adapt: None,
         }
     }
 }
@@ -286,6 +292,9 @@ impl<'e> FleetBuilder<'e> {
             if let Some(c) = &cfg.churn {
                 gw.enable_churn(c);
             }
+            if let Some(a) = &cfg.adapt {
+                gw.enable_adapt(a);
+            }
             shards.push(gw);
         }
         // resolve each node's identity in its owning shard's id space
@@ -307,6 +316,7 @@ impl<'e> FleetBuilder<'e> {
             n_nodes: cfg.n_nodes,
             churn: cfg.churn.clone(),
             slo: cfg.slo.clone(),
+            adapt: cfg.adapt.clone(),
             node_homes,
         })
     }
@@ -322,6 +332,9 @@ pub struct Fleet<'e> {
     churn: Option<ChurnConfig>,
     /// SLO/batching config the fleet was built with.
     slo: Option<SloConfig>,
+    /// Adaptation config the fleet was built with (each shard already
+    /// carries its own live [`crate::adapt::AdaptRuntime`]).
+    adapt: Option<AdaptConfig>,
     /// Global synthesis index → (owning shard, node identity in that
     /// shard's id space): how the ground-truth failure timeline
     /// addresses nodes.
@@ -374,6 +387,9 @@ pub struct FleetReport {
     /// SLO accounting (attainment per class, sheds, batch-size
     /// histogram) — present exactly when the fleet had an SLO config.
     pub slo: Option<SloMetrics>,
+    /// Adaptation accounting merged across shards — present exactly
+    /// when the fleet had an adapt config.
+    pub adapt: Option<AdaptReport>,
 }
 
 impl FleetReport {
@@ -508,6 +524,9 @@ impl FleetReport {
         if let Some(s) = &self.slo {
             fields.push(("slo", s.to_json()));
         }
+        if let Some(a) = &self.adapt {
+            fields.push(("adapt", a.to_json()));
+        }
         Json::obj(fields)
     }
 }
@@ -553,6 +572,10 @@ enum EventKind {
         pair: PairId,
         token: u64,
     },
+    /// Shard `shard`'s autoscaler decision tick (adapt runs with
+    /// `scale` only): close the arrival-rate window and perform at
+    /// most one power transition in that shard.
+    ScaleTick { shard: usize },
 }
 
 impl PartialEq for Event {
@@ -807,6 +830,23 @@ pub fn run_frames(
         None => None,
     };
 
+    // adaptation runs: each shard's gateway already carries its live
+    // AdaptRuntime (built in `FleetBuilder::build`); when scaling is
+    // on, every shard gets its own decision-tick train, like probes.
+    // Without adapt nothing below adds a single event.
+    if let Some(a) = &fleet.adapt {
+        if a.scale {
+            let gap = a.scale_interval_s.max(1e-6);
+            for s in 0..k {
+                let mut t = gap;
+                while t < horizon_s {
+                    sim.push(t, EventKind::ScaleTick { shard: s });
+                    t += gap;
+                }
+            }
+        }
+    }
+
     while let Some(Reverse(ev)) = sim.heap.pop() {
         match ev.kind {
             EventKind::Arrival(idx) => {
@@ -842,6 +882,10 @@ pub fn run_frames(
                     }
                     continue;
                 };
+                // the winning shard's rate EWMA sees the demand (the
+                // dispatch policy decides which shard absorbs load, so
+                // each scaler tracks its own slice)
+                fleet.shards[s].adapt_arrival();
                 // SLO admission control: predicted completion on the
                 // placed shard already past the deadline → shed now
                 // instead of queueing doomed work (DESIGN.md §11).
@@ -1160,6 +1204,9 @@ pub fn run_frames(
                     ev.t,
                 )?;
             }
+            EventKind::ScaleTick { shard } => {
+                fleet.shards[shard].adapt_scale_tick(ev.t);
+            }
         }
     }
 
@@ -1175,6 +1222,18 @@ pub fn run_frames(
             fleet.shards.iter().filter_map(|g| g.membership()),
         )
     });
+    let adapt_report = {
+        let mut merged: Option<AdaptReport> = None;
+        for g in &fleet.shards {
+            if let Some(r) = g.adapt_report(sim.makespan_s) {
+                match merged.as_mut() {
+                    Some(m) => m.merge(&r),
+                    None => merged = Some(r),
+                }
+            }
+        }
+        merged
+    };
     Ok(FleetReport {
         per_shard: metrics,
         offered: frames.len(),
@@ -1185,6 +1244,7 @@ pub fn run_frames(
         peak_in_flight: sim.peak_in_flight,
         churn: churn_report,
         slo: slo.map(|s| s.metrics),
+        adapt: adapt_report,
     })
 }
 
@@ -1972,6 +2032,7 @@ mod tests {
             peak_in_flight: 5,
             churn: None,
             slo: None,
+            adapt: None,
         };
         assert_eq!(report.requests(), 8);
         assert!((report.shard_imbalance() - 1.5).abs() < 1e-12);
@@ -1984,5 +2045,45 @@ mod tests {
             Some(3)
         );
         assert_eq!(j.req("shards").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn adaptive_fleet_replays_and_merges_shard_reports() {
+        // the full adapt path at fleet scale: drifting nodes feed each
+        // shard's telemetry, per-shard scalers tick on the shared
+        // clock, and the report block merges across shards — all of it
+        // bit-identical on replay.
+        let e = engine();
+        let ds = coco::build(30, 63);
+        let run = |adapt: Option<AdaptConfig>| {
+            let cfg = FleetConfig {
+                n_nodes: 6,
+                n_shards: 2,
+                queue_capacity: 8,
+                drift: Some(DriftConfig::default()),
+                adapt,
+                ..Default::default()
+            };
+            let mut fl = build_fleet(&e, "ED", &cfg);
+            run_dataset(
+                &mut fl,
+                &ds,
+                &ArrivalProcess::Poisson { rate_rps: 200.0 },
+                27,
+            )
+            .unwrap()
+        };
+        let a = run(Some(AdaptConfig::default()));
+        let b = run(Some(AdaptConfig::default()));
+        assert_eq!(a.to_json().dump(), b.to_json().dump());
+        let r = a.adapt.as_ref().expect("adapt report");
+        assert!(r.telemetry_samples > 0, "no telemetry at fleet scale");
+        assert_eq!(r.telemetry_samples, a.requests());
+        // the merged static baseline covers every synthesized node
+        assert_eq!(r.static_node_s, 6.0 * a.makespan_s);
+        // without adapt the report must not carry the block
+        let plain = run(None);
+        assert!(plain.adapt.is_none());
+        assert!(!plain.to_json().dump().contains("\"adapt\""));
     }
 }

@@ -8,6 +8,7 @@
 
 use anyhow::{Context, Result};
 
+use crate::adapt::{AdaptConfig, AdaptReport, AdaptRuntime};
 use crate::dataset::GtBox;
 use crate::detection::map::ImageEval;
 use crate::devices::{self, DeviceSpec};
@@ -131,6 +132,11 @@ pub struct Gateway<'e> {
     /// rejoined) nodes route with cost-aged profile rows. `None` keeps
     /// the pre-churn behavior bit for bit.
     membership: Option<Membership>,
+    /// Online adaptation runtime (DESIGN.md §12): telemetry-driven
+    /// profile corrections composed onto the routing view, plus the
+    /// optional energy-proportional autoscaler. `None` keeps the
+    /// pre-adaptation behavior bit for bit.
+    adapt: Option<AdaptRuntime>,
 }
 
 impl<'e> Gateway<'e> {
@@ -161,6 +167,7 @@ impl<'e> Gateway<'e> {
             now_s: 0.0,
             fallbacks: 0,
             membership: None,
+            adapt: None,
         }
     }
 
@@ -179,6 +186,125 @@ impl<'e> Gateway<'e> {
 
     pub fn membership_mut(&mut self) -> Option<&mut Membership> {
         self.membership.as_mut()
+    }
+
+    /// Switch on online adaptation (DESIGN.md §12). Telemetry always
+    /// runs; when `cfg.scale` is set the autoscaler does too, and a
+    /// gateway without churn membership synthesizes one
+    /// ([`AdaptConfig::membership_config`]) so power transitions flow
+    /// through the same believed-health path churn uses. Call after
+    /// [`Gateway::enable_churn`] when combining both.
+    pub fn enable_adapt(&mut self, cfg: &AdaptConfig) {
+        let deployed: Vec<bool> = self
+            .store
+            .pair_ids()
+            .map(|id| self.pool.device_of_id(id).is_some())
+            .collect();
+        if cfg.scale && self.membership.is_none() {
+            self.membership = Some(Membership::new(
+                self.store.table(),
+                &cfg.membership_config(),
+            ));
+        }
+        self.adapt = Some(AdaptRuntime::new(cfg, deployed));
+    }
+
+    pub fn adapt(&self) -> Option<&AdaptRuntime> {
+        self.adapt.as_ref()
+    }
+
+    pub fn adapt_mut(&mut self) -> Option<&mut AdaptRuntime> {
+        self.adapt.as_mut()
+    }
+
+    /// Driver hook: one offered arrival reached this gateway (feeds
+    /// the autoscaler's rate estimate). A no-op without a scaler.
+    pub fn adapt_arrival(&mut self) {
+        if let Some(sc) =
+            self.adapt.as_mut().and_then(|a| a.scaler.as_mut())
+        {
+            sc.note_arrival();
+        }
+    }
+
+    /// Driver hook: one scaler decision tick at `now_s`. Closes the
+    /// rate window, computes predicted utilization over the powered
+    /// set, and performs at most one power transition — power-down of
+    /// the dearest idle node in a trough, power-up of the cheapest
+    /// off node when utilization crosses the upper threshold. Both
+    /// transitions flow through pool health + membership
+    /// (PoweredDown / Warming), so routing, probes, and warm-up aging
+    /// see them exactly like lifecycle events.
+    pub fn adapt_scale_tick(&mut self, now_s: f64) {
+        let store = &self.store;
+        let pool = &mut self.pool;
+        let membership = self.membership.as_mut();
+        let Some(sc) =
+            self.adapt.as_mut().and_then(|a| a.scaler.as_mut())
+        else {
+            return;
+        };
+        let Some(util) =
+            sc.tick(now_s, |id| store.stats_of(id).mean_latency_s)
+        else {
+            return;
+        };
+        if util < sc.down_util() && sc.n_powered() > sc.min_powered() {
+            // victim: a powered node that is idle (empty queue) and
+            // truly up — never strand queued work or "power down" a
+            // node that is actually crashed — preferring the dearest
+            // mean energy; ties break on the higher id for determinism
+            let victim = store
+                .pair_ids()
+                .filter(|&id| {
+                    sc.is_powered(id)
+                        && pool.is_healthy_id(id)
+                        && pool.queue_depth_id(id) == 0
+                })
+                .max_by(|&i, &j| {
+                    store
+                        .stats_of(i)
+                        .mean_energy_mwh
+                        .total_cmp(&store.stats_of(j).mean_energy_mwh)
+                        .then(i.cmp(&j))
+                });
+            if let Some(id) = victim {
+                sc.power_down(id, now_s);
+                pool.set_health_id(id, false);
+                if let Some(m) = membership {
+                    m.power_down(id);
+                }
+            }
+        } else if util > sc.up_util() && sc.n_off() > 0 {
+            // re-warm the cheapest powered-off node (ties: lower id)
+            let cand = store
+                .pair_ids()
+                .filter(|&id| !sc.is_powered(id))
+                .min_by(|&i, &j| {
+                    store
+                        .stats_of(i)
+                        .mean_energy_mwh
+                        .total_cmp(&store.stats_of(j).mean_energy_mwh)
+                        .then(i.cmp(&j))
+                });
+            if let Some(id) = cand {
+                sc.power_up(id, now_s);
+                pool.set_health_id(id, true);
+                if let Some(node) = pool.get_id(id) {
+                    node.on_rejoin(now_s);
+                }
+                if let Some(m) = membership {
+                    m.power_up(id, now_s);
+                }
+            }
+        }
+    }
+
+    /// End-of-run adaptation summary (`None` without an adapt config).
+    pub fn adapt_report(&self, makespan_s: f64) -> Option<AdaptReport> {
+        self.adapt
+            .as_ref()
+            .map(|a| a.report(self.pool.len(), makespan_s))
     }
 
     pub fn pool_mut(&mut self) -> &mut NodePool {
@@ -275,9 +401,10 @@ impl<'e> Gateway<'e> {
         let group = self.rules.group_of(estimate);
         let store = &self.store;
         let membership = self.membership.as_ref();
+        let adapt = self.adapt.as_ref();
         let pool = &self.pool;
         let policy = &mut self.policy;
-        let mut view = Self::aged_view(store, membership, now_s);
+        let mut view = Self::aged_view(store, membership, adapt, now_s);
         let mut pair_id = policy
             .route_view(&view, group)
             .context("policy returned no endpoint")?;
@@ -318,9 +445,10 @@ impl<'e> Gateway<'e> {
     ) -> Option<PairId> {
         let store = &self.store;
         let membership = self.membership.as_ref();
+        let adapt = self.adapt.as_ref();
         let pool = &self.pool;
         let policy = &mut self.policy;
-        let mut view = Self::aged_view(store, membership, now_s);
+        let mut view = Self::aged_view(store, membership, adapt, now_s);
         let mut exclude = routed.pair_id;
         loop {
             view.exclude(exclude);
@@ -336,23 +464,37 @@ impl<'e> Gateway<'e> {
     }
 
     /// The routing view for one request: a borrow of the shard store,
-    /// with warming pairs' costs aged by the membership view
-    /// (lifecycle warm-up — a rejoining node looks expensive until its
-    /// window closes, so routers ease traffic back onto it; ids ascend
-    /// so the overlay stays sorted). An associated fn over the
-    /// borrowed fields so the policy can hold its own mutable borrow.
+    /// with per-pair cost multipliers composed from every overlay
+    /// source — lifecycle warm-up aging (a rejoining node looks
+    /// expensive until its window closes) times the telemetry
+    /// correction (observed/predicted drift, DESIGN.md §12). One
+    /// overlay path, multiplicative composition; ids ascend so the
+    /// overlay stays sorted. An associated fn over the borrowed
+    /// fields so the policy can hold its own mutable borrow.
     fn aged_view<'a>(
         store: &'a ProfileStore,
         membership: Option<&Membership>,
+        adapt: Option<&AdaptRuntime>,
         now_s: f64,
     ) -> RoutingView<'a> {
         let mut view = RoutingView::new(store);
-        if let Some(m) = membership {
-            for id in store.pair_ids() {
-                let mult = m.cost_multiplier(id, now_s);
-                if mult > 1.0 {
-                    view.age(id, mult);
-                }
+        // telemetry gate: until a correction is published the adapt
+        // runtime contributes nothing and costs nothing per request
+        let telemetry =
+            adapt.map(|a| &a.telemetry).filter(|t| t.active());
+        if membership.is_none() && telemetry.is_none() {
+            return view;
+        }
+        for id in store.pair_ids() {
+            let mut mult = match membership {
+                Some(m) => m.cost_multiplier(id, now_s),
+                None => 1.0,
+            };
+            if let Some(t) = telemetry {
+                mult *= t.correction(id);
+            }
+            if mult != 1.0 {
+                view.age(id, mult);
             }
         }
         view
@@ -404,8 +546,12 @@ impl<'e> Gateway<'e> {
         now_s: f64,
         gw_latency_s: f64,
     ) -> f64 {
-        let view =
-            Self::aged_view(&self.store, self.membership.as_ref(), now_s);
+        let view = Self::aged_view(
+            &self.store,
+            self.membership.as_ref(),
+            self.adapt.as_ref(),
+            now_s,
+        );
         let ahead = self.pool.queue_depth_id(pair_id) as f64;
         gw_latency_s
             + (ahead + 1.0) * view.mean_latency_s(pair_id)
@@ -470,6 +616,25 @@ impl<'e> Gateway<'e> {
         network_s: f64,
         metrics: &mut RunMetrics,
     ) -> RequestOutcome {
+        // telemetry feedback (DESIGN.md §12): compare this completion
+        // against the profiled row it was routed on. Batch followers
+        // (network_s == 0) are skipped — their amortized costs would
+        // read as phantom "drift" against the per-request profile.
+        if network_s > 0.0 {
+            if let Some(a) = self.adapt.as_mut() {
+                if let Some(row) =
+                    self.store.lookup_id(routed.pair_id, routed.group)
+                {
+                    a.telemetry.observe(
+                        routed.pair_id,
+                        row.latency_s,
+                        row.energy_mwh,
+                        resp.latency_s,
+                        resp.energy_mwh,
+                    );
+                }
+            }
+        }
         self.estimator.observe_response(resp.detections.len());
         let n_det = resp.detections.len();
         // resolve the interned id at the metrics edge (strings live
@@ -755,6 +920,152 @@ mod tests {
         assert_eq!(gw.route_at(&img, 0, 1.0).unwrap().pair_id, big_id);
         // after the warm-up window the cheap pair wins again
         assert_eq!(gw.route_at(&img, 0, 3.5).unwrap().pair_id, cheap_id);
+    }
+
+    #[test]
+    fn telemetry_corrections_steer_routing_and_compose_with_warmup() {
+        let e = engine();
+        let store = tiny_store();
+        let pool =
+            NodePool::deploy(&e, &store.pairs(), &fleet(), 1).unwrap();
+        let mut gw = Gateway::new(
+            &e,
+            router_by_name("LE").unwrap(),
+            store,
+            pool,
+            5.0,
+            1,
+        );
+        let cheap = PairKey::new("ssd_v1", "jetson_orin_nano");
+        let big = PairKey::new("yolov8n", "pi5_aihat");
+        let cheap_id = gw.store().id_of(&cheap).unwrap();
+        let big_id = gw.store().id_of(&big).unwrap();
+        // telemetry only: no scaler, so no membership is synthesized
+        gw.enable_adapt(&crate::adapt::AdaptConfig {
+            scale: false,
+            max_correction: 32.0,
+            ..Default::default()
+        });
+        assert!(gw.membership().is_none());
+        let img = vec![0.5f32; 384 * 384];
+        // uncorrected: LE picks the cheap pair (0.002 vs 0.03 mWh)
+        assert_eq!(gw.route_at(&img, 0, 0.0).unwrap().pair_id, cheap_id);
+        // feed drift evidence: the cheap pair actually costs 20x its
+        // profile, pushing its believed energy past the big pair's
+        for _ in 0..50 {
+            gw.adapt_mut().unwrap().telemetry.observe(
+                cheap_id, 0.005, 0.002, 0.1, 0.04,
+            );
+        }
+        assert_eq!(gw.route_at(&img, 0, 0.1).unwrap().pair_id, big_id);
+        // and the fix is reversible: fresh evidence matching the
+        // profile pulls the correction back down
+        for _ in 0..200 {
+            gw.adapt_mut().unwrap().telemetry.observe(
+                cheap_id, 0.005, 0.002, 0.005, 0.002,
+            );
+        }
+        assert_eq!(gw.route_at(&img, 0, 0.2).unwrap().pair_id, cheap_id);
+    }
+
+    #[test]
+    fn finish_feeds_telemetry_from_completions_but_not_batch_followers() {
+        let e = engine();
+        let store = tiny_store();
+        let pool =
+            NodePool::deploy(&e, &store.pairs(), &fleet(), 1).unwrap();
+        let mut gw = Gateway::new(
+            &e,
+            router_by_name("LE").unwrap(),
+            store,
+            pool,
+            5.0,
+            1,
+        );
+        gw.enable_adapt(&crate::adapt::AdaptConfig {
+            scale: false,
+            ..Default::default()
+        });
+        let img = vec![0.5f32; 384 * 384];
+        let mut m = RunMetrics::new("LE");
+        gw.handle(&img, 0, &[], &mut m).unwrap();
+        assert_eq!(gw.adapt().unwrap().telemetry.samples(), 1);
+        // a batch follower (network_s == 0) must not feed telemetry:
+        // its amortized costs would read as phantom drift
+        let routed = gw.route(&img, 0).unwrap();
+        let resp = gw.serve(routed.pair_id, &img, 0.0).unwrap();
+        gw.finish_with_network(&routed, resp, &[], 0.0, 0.0, &mut m);
+        assert_eq!(gw.adapt().unwrap().telemetry.samples(), 1);
+    }
+
+    #[test]
+    fn scale_tick_powers_down_in_troughs_and_rewarms_under_load() {
+        let e = engine();
+        let store = tiny_store();
+        let pool =
+            NodePool::deploy(&e, &store.pairs(), &fleet(), 1).unwrap();
+        let mut gw = Gateway::new(
+            &e,
+            router_by_name("LE").unwrap(),
+            store,
+            pool,
+            5.0,
+            1,
+        );
+        let cheap = PairKey::new("ssd_v1", "jetson_orin_nano");
+        let big = PairKey::new("yolov8n", "pi5_aihat");
+        let cheap_id = gw.store().id_of(&cheap).unwrap();
+        let big_id = gw.store().id_of(&big).unwrap();
+        gw.enable_adapt(&crate::adapt::AdaptConfig {
+            scale_interval_s: 1.0,
+            rate_alpha: 1.0, // no smoothing: the test drives rates
+            down_util: 0.35,
+            up_util: 0.75,
+            warmup_s: 2.0,
+            ..Default::default()
+        });
+        // scaling synthesized a membership (everything believed Up)
+        assert!(gw.membership().is_some());
+        assert_eq!(gw.membership().unwrap().counts(), (2, 0, 0, 0));
+
+        // trough: zero arrivals in the window => util 0 => the dearer
+        // pair (big, 0.03 mWh) powers down through the lifecycle path
+        gw.adapt_scale_tick(1.0);
+        let sc = gw.adapt().unwrap().scaler.as_ref().unwrap();
+        assert_eq!(sc.power_downs, 1);
+        assert!(!sc.is_powered(big_id));
+        assert!(sc.is_powered(cheap_id));
+        assert_eq!(
+            gw.membership().unwrap().state(big_id),
+            Some(crate::lifecycle::MemberState::PoweredDown)
+        );
+        assert!(!gw.pool().is_healthy_id(big_id));
+        // min_powered floor: another trough tick cannot empty the pool
+        gw.adapt_scale_tick(2.0);
+        let sc = gw.adapt().unwrap().scaler.as_ref().unwrap();
+        assert_eq!(sc.power_downs, 1, "min_powered floor held");
+
+        // routing in the trough avoids the powered-down pair
+        let img = vec![0.5f32; 384 * 384];
+        assert_eq!(gw.route_at(&img, 4, 2.0).unwrap().pair_id, cheap_id);
+
+        // burst: 400 arrivals/s * 0.005 s / 1 node = util 2.0 => the
+        // powered-off pair re-warms through Warming with aged costs
+        for _ in 0..400 {
+            gw.adapt_arrival();
+        }
+        gw.adapt_scale_tick(3.0);
+        let sc = gw.adapt().unwrap().scaler.as_ref().unwrap();
+        assert_eq!(sc.power_ups, 1);
+        assert!(sc.is_powered(big_id));
+        assert_eq!(
+            gw.membership().unwrap().state(big_id),
+            Some(crate::lifecycle::MemberState::Warming)
+        );
+        assert!(gw.pool().is_healthy_id(big_id));
+        assert!(
+            gw.membership().unwrap().cost_multiplier(big_id, 3.0) > 1.0
+        );
     }
 
     #[test]

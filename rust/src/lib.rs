@@ -9,6 +9,10 @@
 //! Module map (see DESIGN.md §4 for the full inventory):
 //!
 //! * [`util`] — substrates: deterministic RNG, JSON, CLI, bench, prop.
+//! * [`adapt`] — online adaptation: telemetry-driven profile
+//!   correction (EWMA observed/predicted overlays on the routing view)
+//!   and energy-proportional autoscaling through the lifecycle
+//!   power-down/warm-up path.
 //! * [`models`] — artifact manifest registry (build-path contract).
 //! * [`runtime`] — PJRT engine: HLO-text load, compile cache, inference.
 //! * [`dataset`] — synthetic COCO-like scenes, balanced/sorted set, video.
@@ -30,6 +34,7 @@
 //! * [`experiments`] — one driver per paper table/figure, plus the
 //!   open-loop saturation and fleet sweeps.
 
+pub mod adapt;
 pub mod config;
 pub mod dataset;
 pub mod detection;

@@ -196,6 +196,14 @@ pub enum MemberState {
     /// Responding again after Down; routable, but profile rows are aged
     /// (cost-inflated) until the warm-up window closes.
     Warming,
+    /// Deliberately powered off by the autoscaler (`adapt::Scaler`).
+    /// Excluded from routing like Down, but *sticky*: probe traffic
+    /// cannot resurrect it — only an explicit
+    /// [`Membership::power_up`] does, which re-enters routing through
+    /// the same Warming window churn recoveries use. Census-wise it
+    /// counts in the down bucket (the believed-unroutable set), so
+    /// churn reports keep their shape.
+    PoweredDown,
 }
 
 #[derive(Clone, Debug)]
@@ -260,12 +268,18 @@ impl Membership {
         self.entries.get(id.index()).map(|e| e.state)
     }
 
-    /// Routable under the believed view: everything but Down. Suspect
-    /// nodes still take traffic (hysteresis); unknown ids do not.
+    /// Routable under the believed view: everything but Down and
+    /// PoweredDown. Suspect nodes still take traffic (hysteresis);
+    /// unknown ids do not.
     pub fn believed_up(&self, id: PairId) -> bool {
         self.entries
             .get(id.index())
-            .map(|e| e.state != MemberState::Down)
+            .map(|e| {
+                !matches!(
+                    e.state,
+                    MemberState::Down | MemberState::PoweredDown
+                )
+            })
             .unwrap_or(false)
     }
 
@@ -293,6 +307,13 @@ impl Membership {
         let Some(e) = self.entries.get_mut(id.index()) else {
             return;
         };
+        if e.state == MemberState::PoweredDown {
+            // Deliberate power-off is sticky: the node is physically
+            // unresponsive, so misses carry no information, and even a
+            // response (a straggler probe raced the power-down) must
+            // not resurrect it — only power_up() does.
+            return;
+        }
         if responded {
             e.misses = 0;
             match e.state {
@@ -351,17 +372,44 @@ impl Membership {
     }
 
     /// Census of believed states: (up, suspect, down, warming).
+    /// PoweredDown folds into the down bucket — both mean "believed
+    /// unroutable" — so [`ChurnReport`]'s serialized shape (and every
+    /// golden trace pinning it) is independent of whether a scaler ran.
     pub fn counts(&self) -> (usize, usize, usize, usize) {
         let mut c = (0, 0, 0, 0);
         for e in &self.entries {
             match e.state {
                 MemberState::Up => c.0 += 1,
                 MemberState::Suspect => c.1 += 1,
-                MemberState::Down => c.2 += 1,
+                MemberState::Down | MemberState::PoweredDown => c.2 += 1,
                 MemberState::Warming => c.3 += 1,
             }
         }
         c
+    }
+
+    /// Autoscaler hook: deliberately power `id` down. Unlike a crash
+    /// there is no detection latency — the scaler *is* the gateway, so
+    /// the believed view flips immediately and stays PoweredDown until
+    /// [`Membership::power_up`].
+    pub fn power_down(&mut self, id: PairId) {
+        if let Some(e) = self.entries.get_mut(id.index()) {
+            e.state = MemberState::PoweredDown;
+            e.misses = 0;
+        }
+    }
+
+    /// Autoscaler hook: power `id` back up at `now_s`. The node
+    /// re-enters routing through the same Warming window a churn
+    /// recovery uses (aged costs decaying over `warmup_s`).
+    pub fn power_up(&mut self, id: PairId, now_s: f64) {
+        if let Some(e) = self.entries.get_mut(id.index()) {
+            if e.state == MemberState::PoweredDown {
+                e.state = MemberState::Warming;
+                e.warmup_until = now_s + self.warmup_s;
+                e.misses = 0;
+            }
+        }
     }
 
     /// (sum, count) of crash → Down detection delays.
@@ -769,6 +817,49 @@ mod tests {
         assert!(!m.believed_up(ghost));
         m.observe_probe(ghost, false, 3.0);
         assert_eq!(m.cost_multiplier(ghost, 3.0), 1.0);
+    }
+
+    #[test]
+    fn powered_down_is_sticky_and_exits_through_warming() {
+        let cfg = ChurnConfig {
+            suspect_after: 2,
+            warmup_s: 2.0,
+            warmup_penalty: 0.5,
+            ..Default::default()
+        };
+        let t = table(2);
+        let p = t.id_of(&pair(0)).unwrap();
+        let mut m = Membership::new(&t, &cfg);
+
+        m.power_down(p);
+        assert_eq!(m.state(p), Some(MemberState::PoweredDown));
+        assert!(!m.believed_up(p));
+        // folded into the down bucket: report shape is scaler-agnostic
+        assert_eq!(m.counts(), (1, 0, 1, 0));
+
+        // probes cannot resurrect (or double-kill) a powered-down node
+        m.observe_probe(p, true, 1.0);
+        assert_eq!(m.state(p), Some(MemberState::PoweredDown));
+        m.observe_probe(p, false, 1.5);
+        m.observe_probe(p, false, 2.0);
+        assert_eq!(m.state(p), Some(MemberState::PoweredDown));
+
+        // power-up re-enters through Warming with aged costs
+        m.power_up(p, 4.0);
+        assert_eq!(m.state(p), Some(MemberState::Warming));
+        assert!(m.believed_up(p));
+        assert!((m.cost_multiplier(p, 4.0) - 1.5).abs() < 1e-9);
+        assert!((m.cost_multiplier(p, 6.0) - 1.0).abs() < 1e-9);
+        m.observe_probe(p, true, 6.5);
+        assert_eq!(m.state(p), Some(MemberState::Up));
+
+        // power_up on a node that was not powered down is a no-op
+        let q = t.id_of(&pair(1)).unwrap();
+        m.power_up(q, 1.0);
+        assert_eq!(m.state(q), Some(MemberState::Up));
+        // and out-of-table ids never panic
+        m.power_down(PairId(9));
+        m.power_up(PairId(9), 1.0);
     }
 
     #[test]

@@ -8,7 +8,9 @@
 //!               `--open-loop` switches to concurrent Poisson arrivals,
 //!               `--fleet` to sharded multi-gateway fleet serving,
 //!               `--churn` adds node crashes/rejoins with probe-driven
-//!               membership and a resilience policy (either mode)
+//!               membership and a resilience policy (either mode),
+//!               `--adapt` turns on telemetry-driven profile correction
+//!               and energy-proportional autoscaling (either mode)
 //!   list        list models, devices, routers
 //!
 //! Common options: --delta <mAP pts> --images <n> --per-group <n>
@@ -24,7 +26,11 @@
 //! --churn-routers a,b --churn-rate <req/s> --churn-requests <n>;
 //! slo options: --slo --slo-classes name:d,name:d --batch-window <s>
 //! --max-batch <n>, and for the sweep --slo-rates a,b
-//! --slo-windows a,b --slo-routers a,b --slo-requests <n>
+//! --slo-windows a,b --slo-routers a,b --slo-requests <n>;
+//! adapt options: --adapt --adapt-alpha <f> --adapt-no-scale
+//! --adapt-interval <s> --adapt-publish-every <n>, and for the sweep
+//! --adapt-routers a,b --adapt-drift a,b --adapt-rate <req/s>
+//! --adapt-requests <n>
 
 use anyhow::Result;
 
@@ -51,10 +57,12 @@ USAGE:
                    [--resilience drop|retry|hedge]
                    [--slo] [--slo-classes name:d,name:d]
                    [--batch-window S] [--max-batch N]
+                   [--adapt] [--adapt-alpha F] [--adapt-no-scale]
+                   [--adapt-interval S]
   ecore list
 
 experiments: fig2 fig4 fig5 table1 fig6 fig7 fig8 fig9 overhead openloop
-             fleet churn slo
+             fleet churn slo adapt
 ";
 
 fn main() -> Result<()> {
@@ -131,6 +139,11 @@ fn main() -> Result<()> {
             } else {
                 None
             };
+            let adapt_cfg = if args.flag("adapt") {
+                Some(h.cfg.adapt_config()?)
+            } else {
+                None
+            };
             if args.flag("fleet") {
                 let dispatch_s =
                     args.str_or("dispatch", &h.cfg.fleet_dispatch);
@@ -152,6 +165,7 @@ fn main() -> Result<()> {
                     drift: None,
                     churn: churn_cfg.clone(),
                     slo: slo_cfg.clone(),
+                    adapt: adapt_cfg.clone(),
                 };
                 let mut fl = ecore::fleet::FleetBuilder::new(
                     &h.engine,
@@ -205,11 +219,15 @@ fn main() -> Result<()> {
                 if let Some(s) = &report.slo {
                     print_slo(s);
                 }
+                if let Some(a) = &report.adapt {
+                    println!("{}", a.summary());
+                }
                 return Ok(());
             }
             if args.flag("open-loop")
                 || args.flag("churn")
                 || args.flag("slo")
+                || args.flag("adapt")
             {
                 let mut gw = ecore::experiments::serve::build_gateway(
                     &h,
@@ -229,6 +247,7 @@ fn main() -> Result<()> {
                         seed: h.cfg.seed,
                         churn: churn_cfg,
                         slo: slo_cfg,
+                        adapt: adapt_cfg,
                     },
                 )?;
                 let m = &report.metrics;
@@ -264,6 +283,9 @@ fn main() -> Result<()> {
                 }
                 if let Some(s) = &report.slo {
                     print_slo(s);
+                }
+                if let Some(a) = &report.adapt {
+                    println!("{}", a.summary());
                 }
                 return Ok(());
             }

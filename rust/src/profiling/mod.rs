@@ -79,6 +79,20 @@ pub fn profiling_dataset(
     out
 }
 
+/// Dedup (within 1e-12) and sort threshold scales ascending. The order
+/// is total, so a NaN scale from a corrupt device profile sorts last
+/// instead of panicking the whole profiling pass.
+fn dedup_sorted_scales(raw: &[f64]) -> Vec<f64> {
+    let mut scales: Vec<f64> = Vec::new();
+    for &s in raw {
+        if !scales.iter().any(|&x| (x - s).abs() < 1e-12) {
+            scales.push(s);
+        }
+    }
+    scales.sort_by(f64::total_cmp);
+    scales
+}
+
 /// Run the full profiling pass over a fleet.
 pub fn profile_fleet(
     engine: &Engine,
@@ -89,17 +103,14 @@ pub fn profile_fleet(
     let groups = profiling_dataset(rules, cfg);
 
     // distinct threshold scales across the fleet (device -> scale dedup)
-    let mut scales: Vec<f64> = Vec::new();
+    let mut raw = Vec::new();
     for d in fleet {
         for m in BACKEND_MODELS {
             let meta = engine.meta(m)?;
-            let s = d.profile(&meta).threshold_scale;
-            if !scales.iter().any(|&x| (x - s).abs() < 1e-12) {
-                scales.push(s);
-            }
+            raw.push(d.profile(&meta).threshold_scale);
         }
     }
-    scales.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let scales = dedup_sorted_scales(&raw);
 
     // measured accuracy: (model, scale_idx, group) -> mAP
     let mut acc: BTreeMap<(String, usize, usize), f64> = BTreeMap::new();
@@ -160,6 +171,22 @@ pub fn profile_fleet(
 mod tests {
     use super::*;
     use crate::devices;
+
+    #[test]
+    fn nan_threshold_scale_sorts_last_instead_of_panicking() {
+        // regression: `sort_by(partial_cmp().unwrap())` panicked when a
+        // corrupt device profile produced a NaN threshold scale
+        let scales = dedup_sorted_scales(&[
+            1.0,
+            f64::NAN,
+            0.5,
+            0.5 + 1e-15, // dedups against 0.5
+            2.0,
+        ]);
+        assert_eq!(scales.len(), 4);
+        assert_eq!(&scales[..3], &[0.5, 1.0, 2.0]);
+        assert!(scales[3].is_nan());
+    }
 
     #[test]
     fn profiling_dataset_group_counts_match_rules() {

@@ -188,9 +188,7 @@ mod tests {
                     .collect();
                 let brute = feasible
                     .iter()
-                    .min_by(|a, b| {
-                        a.energy_mwh.partial_cmp(&b.energy_mwh).unwrap()
-                    })
+                    .min_by(|a, b| a.energy_mwh.total_cmp(&b.energy_mwh))
                     .unwrap();
                 // (i) result is in the group and feasible
                 let chosen = store

@@ -8,14 +8,17 @@
 //! * an **exclusion set** — the fallback walk removes a pair from
 //!   consideration by flipping a bit instead of materializing a
 //!   restricted store;
-//! * a **warm-up overlay** — lifecycle cost-aging of recently rejoined
-//!   nodes is applied lazily inside the policy comparators (the same
-//!   `value * multiplier` arithmetic the old `scale_pair` copy
-//!   performed, so every decision stays bit-identical).
+//! * a **cost overlay** — a per-pair multiplier applied lazily inside
+//!   the policy comparators (the same `value * multiplier` arithmetic
+//!   the old `scale_pair` copy performed, so every decision stays
+//!   bit-identical). The gateway composes every multiplier source
+//!   into it multiplicatively: lifecycle warm-up cost-aging of
+//!   recently rejoined nodes, times the telemetry correction factor
+//!   of the online adaptation subsystem (`crate::adapt`).
 //!
-//! In the steady state (no fallback, nobody warming) a view is a pure
-//! borrow: zero allocation, zero copies — the degenerate case the
-//! zero-copy regression tests pin.
+//! In the steady state (no fallback, nobody warming, no published
+//! corrections) a view is a pure borrow: zero allocation, zero copies
+//! — the degenerate case the zero-copy regression tests pin.
 
 use super::store::{PairId, PairProfile, ProfileStore};
 

@@ -60,6 +60,11 @@ impl WeightedRouter {
         let m = norm(&|r| r.map);
         let w = self.weights;
         let total = (w.energy + w.latency + w.accuracy).max(1e-12);
+        // total order: a NaN score (possible when a caller passes
+        // non-finite weights — profiled rows themselves are validated
+        // at store insertion) sorts last instead of panicking, and
+        // score ties break by row position, which is sorted pair-key
+        // order, so the winner is deterministic across runs.
         rows.iter()
             .enumerate()
             .min_by(|(i, _), (j, _)| {
@@ -69,7 +74,7 @@ impl WeightedRouter {
                 let sj = (w.energy * e[*j] + w.latency * t[*j]
                     - w.accuracy * m[*j])
                     / total;
-                si.partial_cmp(&sj).unwrap()
+                si.total_cmp(&sj).then_with(|| i.cmp(j))
             })
             .map(|(_, r)| r.pair.clone())
     }
@@ -136,6 +141,23 @@ mod tests {
         });
         // small@dev_a has the lowest latency (0.010)
         assert_eq!(r.route(&s, 0), Some(PairKey::new("small", "dev_a")));
+    }
+
+    #[test]
+    fn nan_weights_cannot_poison_scoring() {
+        // regression: `min_by(partial_cmp().unwrap())` panicked when a
+        // non-finite weight made every score NaN; the comparison is now
+        // total and ties break by row position, so routing degrades to
+        // a deterministic pick instead of crashing the gateway.
+        let s = test_store();
+        let r = WeightedRouter::new(Weights {
+            energy: f64::NAN,
+            latency: 0.0,
+            accuracy: 0.0,
+        });
+        let a = r.route(&s, 1);
+        assert!(a.is_some());
+        assert_eq!(a, r.route(&s, 1));
     }
 
     #[test]

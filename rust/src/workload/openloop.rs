@@ -24,6 +24,7 @@ use std::collections::{BTreeMap, BinaryHeap, VecDeque};
 
 use anyhow::Result;
 
+use crate::adapt::{AdaptConfig, AdaptReport};
 use crate::dataset::{Dataset, GtBox, Scene};
 use crate::devices;
 use crate::estimators::GatewayCost;
@@ -103,6 +104,12 @@ pub struct OpenLoopConfig {
     /// `None` keeps the event stream bit-identical to the pre-SLO
     /// driver.
     pub slo: Option<SloConfig>,
+    /// Online adaptation (DESIGN.md §12): telemetry-driven profile
+    /// corrections on every completion, plus (when `scale` is set)
+    /// energy-proportional autoscaling on a periodic decision tick.
+    /// `None` keeps the event stream bit-identical to the
+    /// pre-adaptation driver.
+    pub adapt: Option<AdaptConfig>,
 }
 
 impl Default for OpenLoopConfig {
@@ -113,6 +120,7 @@ impl Default for OpenLoopConfig {
             seed: 7,
             churn: None,
             slo: None,
+            adapt: None,
         }
     }
 }
@@ -142,6 +150,10 @@ pub struct OpenLoopReport {
     /// SLO accounting (attainment per class, sheds, batch-size
     /// histogram) — present exactly when the run had an SLO config.
     pub slo: Option<SloMetrics>,
+    /// Adaptation accounting (telemetry corrections, power
+    /// transitions, idle-energy comparison vs a static fleet) —
+    /// present exactly when the run had an adapt config.
+    pub adapt: Option<AdaptReport>,
 }
 
 impl OpenLoopReport {
@@ -190,6 +202,9 @@ impl OpenLoopReport {
         if let Some(s) = &self.slo {
             fields.push(("slo", s.to_json()));
         }
+        if let Some(a) = &self.adapt {
+            fields.push(("adapt", a.to_json()));
+        }
         Json::obj(fields)
     }
 }
@@ -232,6 +247,10 @@ enum EventKind {
     /// `token` identifies the formation generation: a new member
     /// reschedules the close, leaving earlier events stale.
     BatchClose { pair: PairId, token: u64 },
+    /// The autoscaler's periodic decision tick (adapt runs with
+    /// `scale` only): close the arrival-rate window and perform at
+    /// most one power transition.
+    ScaleTick,
 }
 
 impl PartialEq for Event {
@@ -465,9 +484,26 @@ pub fn run_frames(
         None => None,
     };
 
+    // Online adaptation (DESIGN.md §12): telemetry corrections feed
+    // from every completion through the gateway; when scaling is on,
+    // decision ticks are scheduled like probes. Without adapt nothing
+    // below adds a single event.
+    if let Some(a) = &cfg.adapt {
+        gw.enable_adapt(a);
+        if a.scale {
+            let gap = a.scale_interval_s.max(1e-6);
+            let mut t = gap;
+            while t < horizon_s {
+                sim.push(t, EventKind::ScaleTick);
+                t += gap;
+            }
+        }
+    }
+
     while let Some(Reverse(ev)) = sim.heap.pop() {
         match ev.kind {
             EventKind::Arrival(idx) => {
+                gw.adapt_arrival();
                 let scene = &frames[idx];
                 let true_count = pseudo_gt[idx].len();
                 // the estimator runs ONCE per request, here at first
@@ -783,6 +819,9 @@ pub fn run_frames(
                     ev.t,
                 )?;
             }
+            EventKind::ScaleTick => {
+                gw.adapt_scale_tick(ev.t);
+            }
         }
     }
 
@@ -792,6 +831,7 @@ pub fn run_frames(
             .expect("churn gateway lost its membership");
         ChurnReport::collect(&c.state, [m])
     });
+    let adapt_report = gw.adapt_report(sim.makespan_s);
     Ok(OpenLoopReport {
         metrics,
         offered: frames.len(),
@@ -801,6 +841,7 @@ pub fn run_frames(
         fallbacks: gw.fallbacks - fallbacks_before,
         churn: churn_report,
         slo: slo.map(|s| s.metrics),
+        adapt: adapt_report,
     })
 }
 
@@ -1165,6 +1206,7 @@ mod tests {
                     seed: 5,
                     churn: None,
                     slo: None,
+                    adapt: None,
                 },
             )
             .unwrap();
@@ -1210,6 +1252,7 @@ mod tests {
                     seed: 11,
                     churn: None,
                     slo: None,
+                    adapt: None,
                 },
             )
             .unwrap();
@@ -1242,6 +1285,7 @@ mod tests {
                 seed: 2,
                 churn: None,
                 slo: None,
+                adapt: None,
             },
         )
         .unwrap();
@@ -1283,6 +1327,7 @@ mod tests {
                     ..Default::default()
                 }),
                 slo: None,
+                adapt: None,
             },
         )
         .unwrap();
@@ -1314,6 +1359,7 @@ mod tests {
             seed: 13,
             churn,
             slo: None,
+            adapt: None,
         };
         let mut base_gw = gateway(&e, "Orc", 3);
         let base = run_dataset(&mut base_gw, &ds, &open_cfg(None)).unwrap();
@@ -1379,6 +1425,7 @@ mod tests {
                     ..Default::default()
                 }),
                 slo: None,
+                adapt: None,
             },
         )
         .unwrap();
@@ -1427,6 +1474,7 @@ mod tests {
                     ..Default::default()
                 }),
                 slo: None,
+                adapt: None,
             },
         )
         .unwrap();
@@ -1474,6 +1522,7 @@ mod tests {
                         ..Default::default()
                     }),
                     slo: None,
+                    adapt: None,
                 },
             )
             .unwrap()
@@ -1498,6 +1547,7 @@ mod tests {
                     seed: 17,
                     churn: None,
                     slo: None,
+                    adapt: None,
                 },
             )
             .unwrap()
@@ -1584,6 +1634,7 @@ mod tests {
                     batch_window_s: 0.0,
                     max_batch: 1,
                 }),
+                adapt: None,
             },
         )
         .unwrap();
@@ -1627,6 +1678,7 @@ mod tests {
                         batch_window_s: window_s,
                         max_batch: 4,
                     }),
+                    adapt: None,
                 },
             )
             .unwrap()
@@ -1680,6 +1732,70 @@ mod tests {
                     seed: 29,
                     churn: None,
                     slo: Some(SloConfig::default()),
+                    adapt: None,
+                },
+            )
+            .unwrap()
+            .to_json()
+            .dump()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn scaler_holds_steady_on_a_constant_rate_workload() {
+        // Hysteresis: a constant-rate workload whose utilization sits
+        // inside the (down_util, up_util) band must never flap power
+        // state — no power-downs into troughs that don't exist, no
+        // re-warms chasing noise.
+        let e = engine();
+        let ds = coco::build(160, 23);
+        let mut gw = gateway(&e, "LE", 3);
+        let report = run_dataset(
+            &mut gw,
+            &ds,
+            &OpenLoopConfig {
+                // 40 req/s x 27.5 ms mean service / 2 nodes = 0.55
+                // utilization: between down_util 0.35 and up_util 0.75
+                arrivals: ArrivalProcess::Uniform { gap_s: 0.025 },
+                queue_capacity: 8,
+                seed: 31,
+                churn: None,
+                slo: None,
+                adapt: Some(AdaptConfig::default()),
+            },
+        )
+        .unwrap();
+        let a = report.adapt.as_ref().expect("adapt report");
+        assert_eq!(a.power_downs, 0, "scaler flapped down: {a:?}");
+        assert_eq!(a.power_ups, 0, "scaler flapped up: {a:?}");
+        assert!(a.telemetry_samples > 0, "completions fed no telemetry");
+        // nobody powered off, so the adaptive fleet burned exactly the
+        // static fleet's node-seconds
+        assert_eq!(a.powered_node_s, a.static_node_s);
+    }
+
+    #[test]
+    fn adapt_runs_with_drift_replay_bit_identically() {
+        // The full adaptation path — telemetry EWMAs, publication,
+        // correction overlays, scale ticks — on a drifting fleet must
+        // replay byte for byte.
+        use crate::devices::drift::DriftConfig;
+        let e = engine();
+        let ds = coco::build(24, 41);
+        let run = || {
+            let mut gw = gateway(&e, "ED", 3);
+            gw.pool_mut().enable_drift(&DriftConfig::default(), 7);
+            run_dataset(
+                &mut gw,
+                &ds,
+                &OpenLoopConfig {
+                    arrivals: ArrivalProcess::Poisson { rate_rps: 60.0 },
+                    queue_capacity: 8,
+                    seed: 37,
+                    churn: None,
+                    slo: None,
+                    adapt: Some(AdaptConfig::default()),
                 },
             )
             .unwrap()

@@ -12,6 +12,8 @@
 
 use std::path::PathBuf;
 
+use ecore::adapt::AdaptConfig;
+use ecore::devices::drift::DriftConfig;
 use ecore::fleet::{self, DispatchPolicy, FleetBuilder, FleetConfig};
 use ecore::gateway::{router_by_name, Gateway};
 use ecore::lifecycle::{ChurnConfig, ResiliencePolicy};
@@ -64,6 +66,7 @@ fn openloop_dump(e: &Engine) -> String {
             seed: 17,
             churn: None,
             slo: None,
+            adapt: None,
         },
     )
     .unwrap();
@@ -102,6 +105,7 @@ fn churn_dump(e: &Engine) -> String {
                 seed: 29,
             }),
             slo: None,
+            adapt: None,
         },
     )
     .unwrap();
@@ -139,6 +143,7 @@ fn fleet_churn_dump(e: &Engine) -> String {
                     seed: 37,
                 }),
                 slo: None,
+                adapt: None,
             },
         )
         .unwrap();
@@ -171,6 +176,7 @@ fn fleet_dump(e: &Engine) -> String {
                 drift: None,
                 churn: None,
                 slo: None,
+                adapt: None,
             },
         )
         .unwrap();
@@ -204,6 +210,7 @@ fn slo_dump(e: &Engine) -> String {
             seed: 41,
             churn: None,
             slo: Some(ecore::workload::slo::SloConfig::default()),
+            adapt: None,
         },
     )
     .unwrap();
@@ -229,6 +236,7 @@ fn fleet_slo_dump(e: &Engine) -> String {
                 drift: None,
                 churn: None,
                 slo: Some(ecore::workload::slo::SloConfig::default()),
+                adapt: None,
             },
         )
         .unwrap();
@@ -237,6 +245,73 @@ fn fleet_slo_dump(e: &Engine) -> String {
         &ds,
         &ArrivalProcess::Poisson { rate_rps: 220.0 },
         47,
+    )
+    .unwrap();
+    report.to_json().pretty()
+}
+
+/// One fixed-seed adaptation run (drifting fleet, telemetry feedback
+/// and the energy-proportional scaler both active at a rate with real
+/// troughs), serialized with its adapt block.
+fn adapt_dump(e: &Engine) -> String {
+    let ds = ecore::dataset::coco::build(18, 91);
+    let store = base_store();
+    let pool =
+        NodePool::deploy(e, &store.pairs(), &ecore::devices::fleet(), 4)
+            .unwrap();
+    let mut gw =
+        Gateway::new(e, router_by_name("ED").unwrap(), store, pool, 5.0, 4);
+    gw.pool_mut().enable_drift(&DriftConfig::default(), 13);
+    let report = openloop::run_dataset(
+        &mut gw,
+        &ds,
+        &OpenLoopConfig {
+            arrivals: ArrivalProcess::Poisson { rate_rps: 150.0 },
+            queue_capacity: 4,
+            seed: 53,
+            churn: None,
+            slo: None,
+            adapt: Some(AdaptConfig {
+                scale_interval_s: 0.05,
+                ..Default::default()
+            }),
+        },
+    )
+    .unwrap();
+    report.to_json().pretty()
+}
+
+/// One fixed-seed fleet adaptation run (2 shards, per-shard scalers on
+/// a drifting fleet, reports merged), serialized with its adapt block.
+fn fleet_adapt_dump(e: &Engine) -> String {
+    let ds = ecore::dataset::coco::build(16, 67);
+    let mut fl = FleetBuilder::new(e, base_store())
+        .build(
+            router_by_name("LE").unwrap(),
+            5.0,
+            &FleetConfig {
+                n_nodes: 6,
+                n_shards: 2,
+                perturb: 0.1,
+                queue_capacity: 4,
+                dispatch: DispatchPolicy::LeastLoaded,
+                n_sources: 4,
+                seed: 59,
+                drift: Some(DriftConfig::default()),
+                churn: None,
+                slo: None,
+                adapt: Some(AdaptConfig {
+                    scale_interval_s: 0.05,
+                    ..Default::default()
+                }),
+            },
+        )
+        .unwrap();
+    let report = fleet::run_dataset(
+        &mut fl,
+        &ds,
+        &ArrivalProcess::Poisson { rate_rps: 200.0 },
+        59,
     )
     .unwrap();
     report.to_json().pretty()
@@ -302,6 +377,36 @@ fn none_slo_config_leaves_pre_slo_traces_untouched() {
     assert!(!churn_dump(&e).contains("\"slo\""));
 }
 
+#[test]
+fn adapt_report_serializes_bit_identically_across_runs() {
+    let e = engine();
+    let a = adapt_dump(&e);
+    assert_eq!(a, adapt_dump(&e));
+    // the block only serializes when adaptation ran
+    assert!(a.contains("\"adapt\""));
+    assert!(a.contains("\"telemetry_samples\""));
+}
+
+#[test]
+fn fleet_adapt_report_serializes_bit_identically_across_runs() {
+    let e = engine();
+    let a = fleet_adapt_dump(&e);
+    assert_eq!(a, fleet_adapt_dump(&e));
+    assert!(a.contains("\"adapt\""));
+}
+
+/// Same shape contract for adaptation: `adapt: None` schedules zero
+/// scale ticks and adds zero report keys, so every pre-adapt dump —
+/// and therefore every pinned golden above — keeps its exact bytes.
+#[test]
+fn none_adapt_config_leaves_existing_traces_untouched() {
+    let e = engine();
+    assert!(!openloop_dump(&e).contains("\"adapt\""));
+    assert!(!fleet_dump(&e).contains("\"adapt\""));
+    assert!(!churn_dump(&e).contains("\"adapt\""));
+    assert!(!slo_dump(&e).contains("\"adapt\""));
+}
+
 fn check_golden(name: &str, dump: &str) {
     let dir =
         PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden");
@@ -357,4 +462,16 @@ fn golden_slo_trace_is_pinned() {
 fn golden_fleet_slo_trace_is_pinned() {
     let e = engine();
     check_golden("fleet_slo_trace", &fleet_slo_dump(&e));
+}
+
+#[test]
+fn golden_adapt_trace_is_pinned() {
+    let e = engine();
+    check_golden("adapt_trace", &adapt_dump(&e));
+}
+
+#[test]
+fn golden_fleet_adapt_trace_is_pinned() {
+    let e = engine();
+    check_golden("fleet_adapt_trace", &fleet_adapt_dump(&e));
 }

@@ -277,6 +277,7 @@ fn gateway_cost_is_accounted_exactly_once_per_request() {
                 seed: 4,
                 churn: None,
                 slo: None,
+                adapt: None,
             },
         )
         .unwrap();
@@ -347,6 +348,7 @@ fn retried_requests_pay_gateway_cost_exactly_once() {
                 seed: 11,
             }),
             slo: None,
+            adapt: None,
         },
     )
     .unwrap();
