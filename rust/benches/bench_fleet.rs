@@ -1,8 +1,10 @@
 //! Fleet simulator throughput: full sharded discrete-event runs
 //! (synthesis → dispatch with cross-shard fallback → PJRT service →
 //! completion bookkeeping) over the real deployed testbed, at fleet
-//! sizes up to 200 nodes / 8 shards. Reports events/sec (arrival +
-//! completion events over wall time) per configuration, plus the usual
+//! sizes up to 200 nodes / 8 shards and worker-thread counts up to 8
+//! (`t1` = sequential shared-heap engine, `tN` = per-shard heaps under
+//! the watermark merge). Reports events/sec (arrival + completion
+//! events over wall time) per configuration, plus the usual
 //! median/p10/p90 table from the in-tree harness.
 
 use std::time::Instant;
@@ -11,7 +13,8 @@ use ecore::config::ExperimentConfig;
 use ecore::dataset::{coco, GtBox, Scene};
 use ecore::experiments::serve::deployed_store;
 use ecore::experiments::Harness;
-use ecore::fleet::{run_frames, DispatchPolicy, FleetBuilder, FleetConfig};
+use ecore::fleet::parallel::{run_frames_threads, ParallelFleetSpec};
+use ecore::fleet::{DispatchPolicy, FleetConfig};
 use ecore::gateway::router_by_name;
 use ecore::util::bench::{black_box, Bench};
 use ecore::workload::openloop::ArrivalProcess;
@@ -31,41 +34,53 @@ fn main() {
     let gts: Vec<Vec<GtBox>> =
         frames.iter().map(|s| s.gt.clone()).collect();
 
+    // (nodes, shards, dispatch, threads): every fleet shape is
+    // measured at threads=1 (the sequential engine) and at least one
+    // parallel width, so BENCH_fleet.json always carries the
+    // single-thread baseline next to the scaled numbers.
     let full_shapes = [
-        (24, 2, DispatchPolicy::LeastLoaded),
-        (96, 8, DispatchPolicy::LeastLoaded),
-        (96, 8, DispatchPolicy::Hash),
-        (200, 8, DispatchPolicy::LeastLoaded),
+        (24, 2, DispatchPolicy::LeastLoaded, 1),
+        (24, 2, DispatchPolicy::LeastLoaded, 4),
+        (96, 8, DispatchPolicy::LeastLoaded, 1),
+        (96, 8, DispatchPolicy::LeastLoaded, 2),
+        (96, 8, DispatchPolicy::LeastLoaded, 4),
+        (96, 8, DispatchPolicy::LeastLoaded, 8),
+        (96, 8, DispatchPolicy::Hash, 4),
+        (200, 8, DispatchPolicy::LeastLoaded, 1),
+        (200, 8, DispatchPolicy::LeastLoaded, 4),
     ];
-    let shapes: &[(usize, usize, DispatchPolicy)] =
+    let shapes: &[(usize, usize, DispatchPolicy, usize)] =
         if quick { &full_shapes[..2] } else { &full_shapes };
 
     let mut b = Bench::new("fleet");
     let mut events_per_sec: Vec<(String, f64)> = Vec::new();
-    for &(nodes, shards, dispatch) in shapes {
-        let name = format!("n{nodes}_k{shards}_{}", dispatch.label());
+    for &(nodes, shards, dispatch, threads) in shapes {
+        let name = format!(
+            "n{nodes}_k{shards}_{}_t{threads}",
+            dispatch.label()
+        );
         let run_once = || {
-            let mut fl = FleetBuilder::new(&h.engine, deployed.clone())
-                .build(
-                    router_by_name("ED").unwrap(),
-                    5.0,
-                    &FleetConfig {
-                        n_nodes: nodes,
-                        n_shards: shards,
-                        perturb: 0.15,
-                        queue_capacity: 8,
-                        dispatch,
-                        n_sources: 32,
-                        seed: 1,
-                        drift: None,
-                        churn: None,
-                        slo: None,
-                        adapt: None,
-                    },
-                )
-                .unwrap();
-            run_frames(
-                &mut fl,
+            run_frames_threads(
+                &ParallelFleetSpec {
+                    artifacts_dir: h.artifacts_dir(),
+                    base: &deployed,
+                    spec: router_by_name("ED").unwrap(),
+                    delta_map: 5.0,
+                },
+                &FleetConfig {
+                    n_nodes: nodes,
+                    n_shards: shards,
+                    perturb: 0.15,
+                    queue_capacity: 8,
+                    dispatch,
+                    n_sources: 32,
+                    seed: 1,
+                    drift: None,
+                    churn: None,
+                    slo: None,
+                    adapt: None,
+                    threads,
+                },
                 &frames,
                 &gts,
                 &ArrivalProcess::Poisson { rate_rps: 400.0 },
@@ -104,9 +119,12 @@ fn main() {
         ));
     }
 
+    // Sim runs execute on per-worker engines (even at t1), so the
+    // harness engine's totals cover profiling only.
     let (secs, count) = h.engine.exec_stats();
     println!(
-        "engine totals: {count} inferences, {:.1} ms mean",
+        "harness engine totals (profiling): {count} inferences, \
+         {:.1} ms mean",
         1000.0 * secs / count.max(1) as f64
     );
     b.finish_json(&events_per_sec);

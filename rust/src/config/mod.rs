@@ -230,6 +230,10 @@ pub struct ExperimentConfig {
     pub fleet_dispatch: String,
     /// Distinct request sources (sticky-dispatch granularity).
     pub fleet_sources: usize,
+    /// Worker threads for the fleet event engine (1 = the sequential
+    /// shared-heap engine; >1 = per-shard heaps merged under the
+    /// watermark protocol, DESIGN.md §13).
+    pub fleet_threads: usize,
     /// Churn: mean time between failures per node (s) for `serve
     /// --churn`; the `churn` experiment derives MTBF from
     /// `churn_availability` instead.
@@ -342,6 +346,7 @@ impl Default for ExperimentConfig {
             fleet_perturb: 0.15,
             fleet_dispatch: "least".to_string(),
             fleet_sources: 32,
+            fleet_threads: 1,
             churn_mtbf_s: 16.0,
             churn_mttr_s: 4.0,
             churn_probe_interval_s: 0.5,
@@ -445,6 +450,8 @@ impl ExperimentConfig {
                 .str_or("experiment.fleet_dispatch", &d.fleet_dispatch),
             fleet_sources: t
                 .usize_or("experiment.fleet_sources", d.fleet_sources),
+            fleet_threads: t
+                .usize_or("experiment.fleet_threads", d.fleet_threads),
             churn_mtbf_s: t.f64_or("experiment.churn_mtbf_s", d.churn_mtbf_s),
             churn_mttr_s: t.f64_or("experiment.churn_mttr_s", d.churn_mttr_s),
             churn_probe_interval_s: t.f64_or(
@@ -596,6 +603,8 @@ impl ExperimentConfig {
         }
         self.fleet_sources =
             args.usize_or("fleet-sources", self.fleet_sources);
+        self.fleet_threads =
+            args.usize_or("threads", self.fleet_threads);
         self.churn_mtbf_s = args.f64_or("mtbf", self.churn_mtbf_s);
         self.churn_mttr_s = args.f64_or("mttr", self.churn_mttr_s);
         self.churn_probe_interval_s =

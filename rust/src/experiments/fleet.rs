@@ -3,8 +3,10 @@
 //!
 //! For each (fleet size, shard count, router) cell the driver
 //! synthesizes a fresh fleet from the deployed Table-1 store, replays
-//! the same pre-rendered request set through the shared-heap
-//! discrete-event simulator, and reports goodput, tail latency,
+//! the same pre-rendered request set through the discrete-event
+//! simulator (sequential shared-heap at `fleet_threads = 1`, per-shard
+//! heaps under the watermark merge above that — DESIGN.md §13), and
+//! reports goodput, tail latency,
 //! queueing delay, sheds, cross-shard fallbacks, shard imbalance, and
 //! energy per request. This is where dispatch policy and shard count
 //! become first-class experimental variables: a hash front-end keeps
@@ -17,7 +19,8 @@ use anyhow::{Context, Result};
 use super::serve::deployed_store;
 use super::Harness;
 use crate::dataset::{coco, GtBox, Scene};
-use crate::fleet::{run_frames, DispatchPolicy, FleetBuilder, FleetConfig};
+use crate::fleet::parallel::{run_frames_threads, ParallelFleetSpec};
+use crate::fleet::{DispatchPolicy, FleetConfig};
 use crate::gateway::router_by_name;
 use crate::util::json::Json;
 use crate::workload::openloop::ArrivalProcess;
@@ -69,26 +72,28 @@ pub fn fleet(h: &Harness) -> Result<()> {
             for name in &h.cfg.fleet_routers {
                 let spec = router_by_name(name)
                     .with_context(|| format!("unknown router '{name}'"))?;
-                let mut fl = FleetBuilder::new(&h.engine, base.clone())
-                    .build(
+                let fcfg = FleetConfig {
+                    n_nodes: size,
+                    n_shards: k,
+                    perturb: h.cfg.fleet_perturb,
+                    queue_capacity: h.cfg.queue_capacity,
+                    dispatch,
+                    n_sources: h.cfg.fleet_sources,
+                    seed: h.cfg.seed,
+                    drift: None,
+                    churn: None,
+                    slo: None,
+                    adapt: None,
+                    threads: h.cfg.fleet_threads,
+                };
+                let report = run_frames_threads(
+                    &ParallelFleetSpec {
+                        artifacts_dir: h.artifacts_dir(),
+                        base: &base,
                         spec,
-                        h.cfg.delta_map,
-                        &FleetConfig {
-                            n_nodes: size,
-                            n_shards: k,
-                            perturb: h.cfg.fleet_perturb,
-                            queue_capacity: h.cfg.queue_capacity,
-                            dispatch,
-                            n_sources: h.cfg.fleet_sources,
-                            seed: h.cfg.seed,
-                            drift: None,
-                            churn: None,
-                            slo: None,
-                            adapt: None,
-                        },
-                    )?;
-                let report = run_frames(
-                    &mut fl,
+                        delta_map: h.cfg.delta_map,
+                    },
+                    &fcfg,
                     &frames,
                     &gts,
                     &ArrivalProcess::Poisson {

@@ -51,6 +51,9 @@ pub struct Harness {
     pub engine: Engine,
     pub cfg: ExperimentConfig,
     pub out_dir: PathBuf,
+    /// Compiled-artifact cache root (the directory `engine` was opened
+    /// on); parallel fleet workers open their own engines against it.
+    artifacts: PathBuf,
     /// Cached full profiling grid.
     profiles: std::cell::RefCell<Option<ProfileStore>>,
 }
@@ -72,8 +75,15 @@ impl Harness {
                 .context("starting PJRT engine")?,
             cfg,
             out_dir,
+            artifacts,
             profiles: std::cell::RefCell::new(None),
         })
+    }
+
+    /// Compiled-artifact cache root shared by every engine this
+    /// harness (or its worker threads) opens.
+    pub fn artifacts_dir(&self) -> &std::path::Path {
+        &self.artifacts
     }
 
     /// The full 8x8x5 profiling grid, computed once per process and

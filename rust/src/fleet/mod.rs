@@ -48,6 +48,8 @@ use crate::util::stats::{percentile, percentiles};
 use crate::workload::openloop::ArrivalProcess;
 use crate::workload::slo::{SloConfig, SloTag};
 
+pub mod parallel;
+
 /// How the fleet front-end assigns an arriving request to a shard.
 ///
 /// Every policy returns a full visit order, not just a primary shard:
@@ -160,6 +162,13 @@ pub struct FleetConfig {
     /// profile corrections plus energy-proportional autoscaling.
     /// `None` keeps the event stream bit-identical.
     pub adapt: Option<AdaptConfig>,
+    /// Worker threads for the event engine ([`parallel::run_frames_threads`]):
+    /// `0` or `1` runs the sequential shared-heap engine ([`run_frames`])
+    /// unchanged; `> 1` partitions shards over that many workers, each
+    /// with its own PJRT engine, merged by the deterministic watermark
+    /// protocol (DESIGN.md §13). The merged trace is bit-identical
+    /// across thread counts.
+    pub threads: usize,
 }
 
 impl Default for FleetConfig {
@@ -176,6 +185,7 @@ impl Default for FleetConfig {
             churn: None,
             slo: None,
             adapt: None,
+            threads: 1,
         }
     }
 }
@@ -206,96 +216,33 @@ impl<'e> FleetBuilder<'e> {
         delta_map: f64,
         cfg: &FleetConfig,
     ) -> Result<Fleet<'e>> {
-        anyhow::ensure!(cfg.n_shards >= 1, "fleet needs at least one shard");
-        anyhow::ensure!(
-            cfg.n_nodes >= cfg.n_shards,
-            "fewer nodes ({}) than shards ({})",
-            cfg.n_nodes,
-            cfg.n_shards
-        );
-        anyhow::ensure!(
-            (0.0..0.95).contains(&cfg.perturb),
-            "perturb {} outside [0, 0.95)",
-            cfg.perturb
-        );
-        let base_pairs = self.base.pairs();
-        anyhow::ensure!(!base_pairs.is_empty(), "base profile store is empty");
-        let base_fleet = devices::fleet();
-
+        let synth = synth_nodes(&self.base, cfg)?;
         let mut shard_nodes: Vec<Vec<EdgeNode>> =
             (0..cfg.n_shards).map(|_| Vec::new()).collect();
         let mut shard_rows: Vec<Vec<PairProfile>> =
             (0..cfg.n_shards).map(|_| Vec::new()).collect();
         let mut home_keys: Vec<(usize, PairKey)> =
             Vec::with_capacity(cfg.n_nodes);
-        let rng = Rng::new(cfg.seed ^ 0xF1EE_7B0A);
-        for i in 0..cfg.n_nodes {
-            let bp = &base_pairs[i % base_pairs.len()];
-            let bp_id =
-                self.base.id_of(bp).expect("base pair interned");
-            let base_dev = devices::find(&base_fleet, &bp.device)
-                .with_context(|| {
-                    format!("unknown base device '{}'", bp.device)
-                })?;
-            let mut r = rng.derive(i as u64);
-            let speed = 1.0 + cfg.perturb * (2.0 * r.f64() - 1.0);
-            let power = 1.0 + cfg.perturb * (2.0 * r.f64() - 1.0);
-            let dev = base_dev.scaled(speed, power);
-            let pair =
-                PairKey::new(&bp.model, &format!("{}#{:04}", bp.device, i));
-            let mut node = EdgeNode::new(
-                self.engine,
-                pair.clone(),
-                dev,
-                cfg.seed.wrapping_add(i as u64),
-            )?;
-            if let Some(dc) = &cfg.drift {
-                node.enable_drift(dc.clone(), cfg.seed ^ mix64(i as u64));
-            }
-            let shard = i % cfg.n_shards;
-            home_keys.push((shard, pair.clone()));
-            // the base pair's rows via the pair index (insertion
-            // order), not a full-table string scan
-            for &ri in self.base.pair_row_indices(bp_id) {
-                let row = &self.base.rows()[ri as usize];
-                shard_rows[shard].push(PairProfile {
-                    pair: pair.clone(),
-                    group: row.group,
-                    map: row.map,
-                    latency_s: row.latency_s / speed,
-                    energy_mwh: row.energy_mwh * power / speed,
-                });
-            }
-            shard_nodes[shard].push(node);
+        for ns in synth {
+            home_keys.push((ns.shard, ns.pair.clone()));
+            shard_rows[ns.shard].extend(ns.rows.iter().cloned());
+            shard_nodes[ns.shard].push(ns.make_node(self.engine, cfg)?);
         }
-
-        let mut models: Vec<&str> =
-            base_pairs.iter().map(|p| p.model.as_str()).collect();
-        models.sort();
-        models.dedup();
-        self.engine.preload(&models)?;
+        self.engine.preload(&base_models(&self.base))?;
 
         let mut shards = Vec::with_capacity(cfg.n_shards);
         for (s, (nodes, rows)) in
             shard_nodes.into_iter().zip(shard_rows).enumerate()
         {
-            let mut pool = NodePool::from_nodes(nodes);
-            pool.set_queue_capacity(cfg.queue_capacity);
-            let mut gw = Gateway::new(
+            shards.push(wire_shard(
                 self.engine,
                 spec,
-                ProfileStore::new(rows),
-                pool,
                 delta_map,
-                cfg.seed ^ mix64(0x0005_1A2D + s as u64),
-            );
-            if let Some(c) = &cfg.churn {
-                gw.enable_churn(c);
-            }
-            if let Some(a) = &cfg.adapt {
-                gw.enable_adapt(a);
-            }
-            shards.push(gw);
+                cfg,
+                s,
+                nodes,
+                rows,
+            ));
         }
         // resolve each node's identity in its owning shard's id space
         // (the failure timeline addresses nodes by synthesis index)
@@ -320,6 +267,147 @@ impl<'e> FleetBuilder<'e> {
             node_homes,
         })
     }
+}
+
+/// Engine-free synthesis of one fleet node: everything about the node's
+/// identity, perturbed silicon, and rescaled profile rows that can be
+/// computed without touching PJRT. [`FleetBuilder::build`] materializes
+/// every entry on one engine; the parallel engine's workers materialize
+/// only the shards they own on their own engines — each entry's RNG
+/// stream is derived per synthesis index, so a subset synthesizes
+/// exactly the same nodes as the full pass.
+pub(crate) struct NodeSynth {
+    pub shard: usize,
+    pub pair: PairKey,
+    pub dev: devices::DeviceSpec,
+    pub synth_idx: usize,
+    pub rows: Vec<PairProfile>,
+}
+
+impl NodeSynth {
+    /// Materialize the node on `engine` (the only PJRT-touching step).
+    pub fn make_node(
+        &self,
+        engine: &Engine,
+        cfg: &FleetConfig,
+    ) -> Result<EdgeNode> {
+        let i = self.synth_idx as u64;
+        let mut node = EdgeNode::new(
+            engine,
+            self.pair.clone(),
+            self.dev.clone(),
+            cfg.seed.wrapping_add(i),
+        )?;
+        if let Some(dc) = &cfg.drift {
+            node.enable_drift(dc.clone(), cfg.seed ^ mix64(i));
+        }
+        Ok(node)
+    }
+}
+
+/// Validate `cfg` and synthesize all `n_nodes` node descriptions
+/// (node `i` replicates base pair `i % pairs`, shard `i % n_shards`).
+pub(crate) fn synth_nodes(
+    base: &ProfileStore,
+    cfg: &FleetConfig,
+) -> Result<Vec<NodeSynth>> {
+    anyhow::ensure!(cfg.n_shards >= 1, "fleet needs at least one shard");
+    anyhow::ensure!(
+        cfg.n_nodes >= cfg.n_shards,
+        "fewer nodes ({}) than shards ({})",
+        cfg.n_nodes,
+        cfg.n_shards
+    );
+    anyhow::ensure!(
+        (0.0..0.95).contains(&cfg.perturb),
+        "perturb {} outside [0, 0.95)",
+        cfg.perturb
+    );
+    let base_pairs = base.pairs();
+    anyhow::ensure!(!base_pairs.is_empty(), "base profile store is empty");
+    let base_fleet = devices::fleet();
+    let rng = Rng::new(cfg.seed ^ 0xF1EE_7B0A);
+    let mut out = Vec::with_capacity(cfg.n_nodes);
+    for i in 0..cfg.n_nodes {
+        let bp = &base_pairs[i % base_pairs.len()];
+        let bp_id = base.id_of(bp).expect("base pair interned");
+        let base_dev = devices::find(&base_fleet, &bp.device)
+            .with_context(|| {
+                format!("unknown base device '{}'", bp.device)
+            })?;
+        let mut r = rng.derive(i as u64);
+        let speed = 1.0 + cfg.perturb * (2.0 * r.f64() - 1.0);
+        let power = 1.0 + cfg.perturb * (2.0 * r.f64() - 1.0);
+        let dev = base_dev.scaled(speed, power);
+        let pair =
+            PairKey::new(&bp.model, &format!("{}#{:04}", bp.device, i));
+        // the base pair's rows via the pair index (insertion order),
+        // not a full-table string scan
+        let rows = base
+            .pair_row_indices(bp_id)
+            .iter()
+            .map(|&ri| {
+                let row = &base.rows()[ri as usize];
+                PairProfile {
+                    pair: pair.clone(),
+                    group: row.group,
+                    map: row.map,
+                    latency_s: row.latency_s / speed,
+                    energy_mwh: row.energy_mwh * power / speed,
+                }
+            })
+            .collect();
+        out.push(NodeSynth {
+            shard: i % cfg.n_shards,
+            pair,
+            dev,
+            synth_idx: i,
+            rows,
+        });
+    }
+    Ok(out)
+}
+
+/// Sorted, deduplicated model names of a base store — the preload set
+/// for any engine serving a fleet synthesized from it.
+pub(crate) fn base_models(base: &ProfileStore) -> Vec<&str> {
+    let mut models: Vec<&str> =
+        base.pairs().iter().map(|p| p.model.as_str()).collect();
+    models.sort();
+    models.dedup();
+    models
+}
+
+/// Wire one shard gateway exactly the way [`FleetBuilder::build`] does:
+/// pool capacity, per-shard policy seed, churn membership, adapt
+/// runtime. Shared with the parallel engine so both paths stay
+/// byte-identical.
+pub(crate) fn wire_shard<'e>(
+    engine: &'e Engine,
+    spec: RouterSpec,
+    delta_map: f64,
+    cfg: &FleetConfig,
+    s: usize,
+    nodes: Vec<EdgeNode>,
+    rows: Vec<PairProfile>,
+) -> Gateway<'e> {
+    let mut pool = NodePool::from_nodes(nodes);
+    pool.set_queue_capacity(cfg.queue_capacity);
+    let mut gw = Gateway::new(
+        engine,
+        spec,
+        ProfileStore::new(rows),
+        pool,
+        delta_map,
+        cfg.seed ^ mix64(0x0005_1A2D + s as u64),
+    );
+    if let Some(c) = &cfg.churn {
+        gw.enable_churn(c);
+    }
+    if let Some(a) = &cfg.adapt {
+        gw.enable_adapt(a);
+    }
+    gw
 }
 
 /// A built fleet: K shard gateways plus the dispatch front-end.

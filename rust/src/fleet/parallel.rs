@@ -1,0 +1,1502 @@
+//! Parallel per-shard event engine (DESIGN.md §13).
+//!
+//! [`run_frames_threads`] drives the same simulation as
+//! [`super::run_frames`], but partitions the shard gateways over worker
+//! threads, each with its own PJRT [`Engine`] and its own local event
+//! heap. The merged trace is **bit-identical** to the sequential
+//! engine's — the golden-trace corpus is replayed at several thread
+//! counts by `tests/parallel_equiv.rs` to pin that.
+//!
+//! # Protocol
+//!
+//! Events split into two classes:
+//!
+//! * **Spine events** (arrivals, retries) need a *global* decision: the
+//!   dispatch policy ranks every shard by its live in-flight count and
+//!   the losing shards' estimators must not run. They live in one
+//!   shared heap inside [`Coord`].
+//! * **Local events** (completions, batch closes, crashes, rejoins,
+//!   probes, scale ticks) touch exactly one shard. Each lives in its
+//!   owning worker's private heap.
+//!
+//! Every event carries a key `(t, cls, seq)` that reproduces the
+//! sequential engine's `(t, seq)` total order: `cls 0` events
+//! (arrivals + the statically scheduled crash/rejoin/probe/scale
+//! trains) are assigned their *exact* sequential sequence numbers at
+//! setup, so cross-class ties resolve precisely as the shared-heap
+//! engine would. `cls 1` events (completions, batch closes, probe
+//! results, retries) are created at runtime; within one worker their
+//! per-worker counter preserves the sequential relative order, and the
+//! `cls 0 < cls 1` rule matches the sequential invariant that
+//! setup-time events always outrank runtime events at equal time.
+//! (The one approximation: a runtime local event and a retry at the
+//! *bit-identical* `f64` time resolve local-first — a measure-zero tie
+//! the equivalence suite has never hit.)
+//!
+//! A worker may commit (pop + process) its local head `v` only when
+//!
+//! 1. `v` precedes the spine head (the **gate**) in key order, and
+//! 2. under the retry policy, `v.t ≤ min(other workers' watermarks) +
+//!    retry_backoff_s` — every retry a concurrent worker can still
+//!    produce lands at `its watermark + backoff`, so nothing can be
+//!    inserted before `v` (the **lookahead** rule). A worker's
+//!    watermark is a lower bound on its next commit: the time it is
+//!    currently processing, the head it is waiting to commit, the gate
+//!    it is parked at, or `∞` when it has nothing — publishing the
+//!    *pending* head (not just the last commit) is what keeps two
+//!    waiting workers from stalling on each other's stale clocks.
+//!
+//! When every worker's local head has reached the gate, the workers
+//! park (`at_gate`) and the spine head becomes a **walk**: the dispatch
+//! order is computed from the exact barrier state, then each visited
+//! shard's *owner* runs its router (per-shard estimator + policy RNG
+//! state stay single-threaded). The winner finalizes the admission —
+//! SLO gate, hedging, batch formation — while everyone else stays
+//! parked, so global counters (`peak_in_flight`, SLO metrics, churn
+//! accounting) observe exactly the sequential interleaving.
+//!
+//! Hedge-waste energy is the one order-sensitive `f64` sum that crosses
+//! workers: losing completions log `(t, energy)` and the final sum is
+//! replayed in time order, reproducing the sequential accumulation.
+//!
+//! # Send/Sync boundary
+//!
+//! Workers share only `&SharedRo` (frames, ground truth, deadlines,
+//! configs — all immutable) and the single `Mutex<Coord>`. Everything
+//! touching a [`Gateway`] — estimator state, policy RNGs, node pools,
+//! drift, queues, metrics — is owned by exactly one worker and never
+//! crosses the boundary; per-worker `Engine`s are created inside each
+//! thread. `ProfileStore` shares its interned [`super::PairKey`] table
+//! via `Arc`, which is the only shared allocation inside worker state.
+
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap};
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::adapt::AdaptReport;
+use crate::dataset::{GtBox, Scene};
+use crate::devices;
+use crate::estimators::GatewayCost;
+use crate::gateway::{
+    amortize, Gateway, NoEndpoint, RoutedRequest, RouterSpec,
+};
+use crate::lifecycle::{
+    self, ChurnReport, ChurnState, LossOutcome, Membership,
+    ResiliencePolicy,
+};
+use crate::metrics::{RunMetrics, SloMetrics};
+use crate::nodes::NodeDown;
+use crate::router::{PairId, ProfileStore};
+use crate::runtime::Engine;
+use crate::workload::openloop::ArrivalProcess;
+use crate::workload::slo::{SloConfig, SloTag};
+
+use super::{
+    base_models, push_pending, synth_nodes, wire_shard, DispatchPolicy,
+    FleetBuilder, FleetConfig, FleetReport, Forming, InService,
+    NodeQueue, NodeSynth, Pending,
+};
+
+/// Everything [`run_frames_threads`] needs besides the fleet config:
+/// where to find AOT artifacts (each worker opens its own engine
+/// there), the base profile store to synthesize from, and the router
+/// wiring that [`super::FleetBuilder::build`] would receive.
+pub struct ParallelFleetSpec<'a> {
+    pub artifacts_dir: &'a Path,
+    pub base: &'a ProfileStore,
+    pub spec: RouterSpec,
+    pub delta_map: f64,
+}
+
+/// One event on the shared spine: an arrival or a retry, the two kinds
+/// that need the global dispatch decision. Min-order: `(t, retry,
+/// idx)` — arrivals carry their exact sequential sequence number
+/// (`idx`), retries tie-break deterministically on the request index.
+#[derive(Clone, Copy, Debug)]
+struct SEvent {
+    t: f64,
+    retry: bool,
+    idx: usize,
+}
+
+impl SEvent {
+    fn key(&self) -> (f64, u8, u64) {
+        (self.t, self.retry as u8, self.idx as u64)
+    }
+}
+
+impl PartialEq for SEvent {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other).is_eq()
+    }
+}
+impl Eq for SEvent {}
+impl PartialOrd for SEvent {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for SEvent {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.t
+            .total_cmp(&other.t)
+            .then((self.retry as u8).cmp(&(other.retry as u8)))
+            .then(self.idx.cmp(&other.idx))
+    }
+}
+
+/// A worker-local event. `cls 0` carries an exact global sequence
+/// number assigned at setup; `cls 1` carries the worker's own counter.
+struct LEvent {
+    t: f64,
+    cls: u8,
+    seq: u64,
+    kind: LKind,
+}
+
+enum LKind {
+    /// Ground-truth crash of synthesized node `0` (global index).
+    Crash(usize),
+    /// Ground-truth rejoin of synthesized node `0`.
+    Rejoin(usize),
+    /// Shard `shard`'s periodic health probe fires.
+    Probe { shard: usize },
+    /// Shard `shard`'s autoscaler decision tick.
+    ScaleTick { shard: usize },
+    /// The in-service request on `pair` completes (stale if `token`
+    /// no longer matches).
+    Completion { shard: usize, pair: PairId, token: u64 },
+    /// Probe responses reach shard `shard`'s membership view.
+    ProbeResult { shard: usize, responses: Vec<bool> },
+    /// A batch formation window closes (stale if `token` mismatches).
+    BatchClose { shard: usize, pair: PairId, token: u64 },
+}
+
+impl LEvent {
+    fn key(&self) -> (f64, u8, u64) {
+        (self.t, self.cls, self.seq)
+    }
+}
+
+impl PartialEq for LEvent {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other).is_eq()
+    }
+}
+impl Eq for LEvent {}
+impl PartialOrd for LEvent {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for LEvent {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.t
+            .total_cmp(&other.t)
+            .then(self.cls.cmp(&other.cls))
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// Does the local key `l` strictly precede the gate key `g`?
+///
+/// Exact except for one measure-zero tie: two `cls 1` events (a
+/// runtime local vs. a retry) at the bit-identical time resolve
+/// local-first, where the sequential engine would compare their true
+/// creation sequence numbers.
+fn local_before_gate(l: (f64, u8, u64), g: (f64, u8, u64)) -> bool {
+    match l.0.total_cmp(&g.0) {
+        std::cmp::Ordering::Less => true,
+        std::cmp::Ordering::Greater => false,
+        std::cmp::Ordering::Equal => match l.1.cmp(&g.1) {
+            std::cmp::Ordering::Less => true,
+            std::cmp::Ordering::Greater => false,
+            std::cmp::Ordering::Equal => l.1 != 0 || l.2 < g.2,
+        },
+    }
+}
+
+/// The spine head being serviced: each shard in `order` is visited by
+/// its owning worker until one admits the request.
+struct Walk {
+    t: f64,
+    idx: usize,
+    retry: bool,
+    /// Cached `(estimate, gateway cost)` for retries that placed once.
+    cached: Option<(usize, GatewayCost)>,
+    order: Vec<usize>,
+    pos: usize,
+    /// The owner of `order[pos]` is routing right now.
+    visiting: bool,
+    /// A winner is finalizing the admission; everyone stays parked.
+    finalizing: bool,
+}
+
+/// Churn state shared across workers (behind the coordinator mutex).
+struct ChurnShared {
+    state: ChurnState,
+    /// Estimator cache: `(estimate, cost)` paid at first placement.
+    est: Vec<Option<(usize, GatewayCost)>>,
+}
+
+/// All cross-worker mutable state, behind one mutex. Held briefly for
+/// local-event bookkeeping; held across a walk's admission only while
+/// every other worker is parked at the gate.
+struct Coord {
+    spine: BinaryHeap<Reverse<SEvent>>,
+    walk: Option<Walk>,
+    /// Per-worker watermark: a lower bound on the worker's next commit
+    /// time (its pending local head, the gate time when parked, `∞`
+    /// when idle).
+    clocks: Vec<f64>,
+    /// Worker `w`'s local head has reached the spine head.
+    at_gate: Vec<bool>,
+    /// Worker `w`'s local heap is empty.
+    idle: Vec<bool>,
+    in_flight: Vec<usize>,
+    total_in_flight: usize,
+    peak_in_flight: usize,
+    makespan_s: f64,
+    dropped: usize,
+    cross_shard_fallbacks: usize,
+    churn: Option<ChurnShared>,
+    slo: Option<SloMetrics>,
+    /// `(t, energy)` of losing hedge completions — summed in time
+    /// order at the end (see module docs).
+    waste: Vec<(f64, f64)>,
+    done: bool,
+}
+
+impl Coord {
+    /// Push a retry onto the spine. Every parked worker re-parks
+    /// against the (possibly smaller) new head, refreshing its clock.
+    fn push_retry(&mut self, t: f64, idx: usize) {
+        self.spine.push(Reverse(SEvent { t, retry: true, idx }));
+        self.at_gate.iter_mut().for_each(|f| *f = false);
+    }
+}
+
+/// Immutable run context shared by reference across workers.
+struct SharedRo<'a> {
+    frames: &'a [Scene],
+    pseudo_gt: &'a [Vec<GtBox>],
+    dispatch: DispatchPolicy,
+    n_sources: usize,
+    w_count: usize,
+    /// Resilience policy, when churn is configured.
+    policy: Option<ResiliencePolicy>,
+    /// `Some(backoff)` iff the policy can schedule retries — enables
+    /// the lookahead commit rule.
+    retry_lookahead: Option<f64>,
+    probe_timeout_s: f64,
+    slo: Option<SloRo>,
+}
+
+struct SloRo {
+    cfg: SloConfig,
+    deadlines: Vec<f64>,
+}
+
+/// Per-worker, per-owned-shard state: the gateway plus the node queues,
+/// forming batches, and metrics the sequential engine keeps in its
+/// shard-indexed vectors.
+struct ShardSlot<'e> {
+    s: usize,
+    gw: Gateway<'e>,
+    queues: BTreeMap<PairId, NodeQueue>,
+    forming: BTreeMap<PairId, Forming>,
+    metrics: RunMetrics,
+    fallbacks_before: usize,
+    /// Pool-ordered node identities (probe snapshots); empty without
+    /// churn.
+    pairs: Vec<PairId>,
+}
+
+/// A worker's private event machinery.
+struct Wsim {
+    heap: BinaryHeap<Reverse<LEvent>>,
+    /// Runtime (`cls 1`) sequence counter; doubles as the token space
+    /// for completions and batch closes, mirroring the sequential
+    /// engine's `token = sim.seq`.
+    ord: u64,
+}
+
+impl Wsim {
+    fn push_dynamic(&mut self, t: f64, kind: LKind) {
+        let seq = self.ord;
+        self.ord += 1;
+        self.heap.push(Reverse(LEvent { t, cls: 1, seq, kind }));
+    }
+}
+
+/// What each worker hands back per owned shard, in global shard order.
+struct ShardOut {
+    s: usize,
+    metrics: RunMetrics,
+    fallbacks: usize,
+    membership: Option<Membership>,
+    adapt: Option<AdaptReport>,
+}
+
+/// Sets `done` when dropped — including during a panic unwind, where a
+/// poisoned lock is skipped (the poison itself unblocks the others).
+struct StopOnDrop<'a>(&'a Mutex<Coord>);
+
+impl Drop for StopOnDrop<'_> {
+    fn drop(&mut self) {
+        if let Ok(mut c) = self.0.lock() {
+            c.done = true;
+        }
+    }
+}
+
+/// [`super::run_frames`] with the engine selected by `cfg.threads`:
+/// `<= 1` builds the fleet on one engine and runs the sequential
+/// shared-heap driver unchanged; `> 1` runs the per-shard worker
+/// protocol above. Reports are identical either way.
+pub fn run_frames_threads(
+    p: &ParallelFleetSpec<'_>,
+    cfg: &FleetConfig,
+    frames: &[Scene],
+    pseudo_gt: &[Vec<GtBox>],
+    arrivals: &ArrivalProcess,
+    seed: u64,
+) -> Result<FleetReport> {
+    let w_count = cfg.threads.max(1).min(cfg.n_shards.max(1));
+    if w_count <= 1 {
+        let engine = Engine::new(p.artifacts_dir)?;
+        let mut fleet = FleetBuilder::new(&engine, p.base.clone())
+            .build(p.spec, p.delta_map, cfg)?;
+        return super::run_frames(
+            &mut fleet, frames, pseudo_gt, arrivals, seed,
+        );
+    }
+    anyhow::ensure!(frames.len() == pseudo_gt.len());
+    // validations (and the per-node synthesis) run up front on the
+    // main thread, so config errors surface before any thread spawns
+    let synth = synth_nodes(p.base, cfg)?;
+    if let Some(c) = &cfg.slo {
+        anyhow::ensure!(
+            !c.classes.is_empty(),
+            "slo config needs at least one deadline class"
+        );
+    }
+    let models: Vec<String> = base_models(p.base)
+        .into_iter()
+        .map(str::to_string)
+        .collect();
+
+    let arrival_times = arrivals.times(frames.len(), seed);
+    let horizon_s = arrival_times.last().copied().unwrap_or(0.0)
+        + cfg
+            .churn
+            .as_ref()
+            .map(|c| c.horizon_slack_s)
+            .unwrap_or(0.0);
+    let slo_ro = cfg.slo.clone().map(|c| SloRo {
+        deadlines: arrival_times
+            .iter()
+            .enumerate()
+            .map(|(i, &t)| c.deadline_for(i, t))
+            .collect(),
+        cfg: c,
+    });
+
+    let mut spine = BinaryHeap::new();
+    for (idx, &t) in arrival_times.iter().enumerate() {
+        spine.push(Reverse(SEvent { t, retry: false, idx }));
+    }
+    // statically scheduled local events carry their exact sequential
+    // sequence numbers: arrivals took 0..n, then the failure timeline,
+    // then each shard's probe train, then each shard's scale ticks —
+    // the precise `sim.push` order of the sequential engine's setup
+    let mut statics: Vec<Vec<LEvent>> =
+        (0..w_count).map(|_| Vec::new()).collect();
+    let mut gseq = arrival_times.len() as u64;
+    let push_static = |statics: &mut Vec<Vec<LEvent>>,
+                           gseq: &mut u64,
+                           shard: usize,
+                           t: f64,
+                           kind: LKind| {
+        statics[shard % w_count]
+            .push(LEvent { t, cls: 0, seq: *gseq, kind });
+        *gseq += 1;
+    };
+    if let Some(c) = &cfg.churn {
+        for ev in
+            lifecycle::failure_schedule(cfg.n_nodes, horizon_s, c)
+        {
+            let kind = if ev.up {
+                LKind::Rejoin(ev.node)
+            } else {
+                LKind::Crash(ev.node)
+            };
+            let shard = ev.node % cfg.n_shards;
+            push_static(&mut statics, &mut gseq, shard, ev.t, kind);
+        }
+        let gap = c.probe_interval_s.max(1e-6);
+        for s in 0..cfg.n_shards {
+            let mut t = gap;
+            while t < horizon_s {
+                push_static(
+                    &mut statics,
+                    &mut gseq,
+                    s,
+                    t,
+                    LKind::Probe { shard: s },
+                );
+                t += gap;
+            }
+        }
+    }
+    if let Some(a) = &cfg.adapt {
+        if a.scale {
+            let gap = a.scale_interval_s.max(1e-6);
+            for s in 0..cfg.n_shards {
+                let mut t = gap;
+                while t < horizon_s {
+                    push_static(
+                        &mut statics,
+                        &mut gseq,
+                        s,
+                        t,
+                        LKind::ScaleTick { shard: s },
+                    );
+                    t += gap;
+                }
+            }
+        }
+    }
+
+    let ro = SharedRo {
+        frames,
+        pseudo_gt,
+        dispatch: cfg.dispatch,
+        n_sources: cfg.n_sources.max(1),
+        w_count,
+        policy: cfg.churn.as_ref().map(|c| c.policy),
+        retry_lookahead: cfg.churn.as_ref().and_then(|c| {
+            matches!(c.policy, ResiliencePolicy::Retry { .. })
+                .then_some(c.retry_backoff_s)
+        }),
+        probe_timeout_s: cfg
+            .churn
+            .as_ref()
+            .map(|c| c.probe_timeout_s)
+            .unwrap_or(0.0),
+        slo: slo_ro,
+    };
+    let coord = Mutex::new(Coord {
+        spine,
+        walk: None,
+        clocks: vec![0.0; w_count],
+        at_gate: vec![false; w_count],
+        idle: vec![false; w_count],
+        in_flight: vec![0; cfg.n_shards],
+        total_in_flight: 0,
+        peak_in_flight: 0,
+        makespan_s: 0.0,
+        dropped: 0,
+        cross_shard_fallbacks: 0,
+        churn: cfg.churn.as_ref().map(|c| ChurnShared {
+            state: ChurnState::new(
+                frames.len(),
+                c.policy,
+                c.retry_backoff_s,
+            ),
+            est: vec![None; frames.len()],
+        }),
+        slo: ro
+            .slo
+            .as_ref()
+            .map(|s| SloMetrics::new(&s.cfg.class_names())),
+        waste: Vec::new(),
+        done: false,
+    });
+
+    let mut per_worker: Vec<Vec<NodeSynth>> =
+        (0..w_count).map(|_| Vec::new()).collect();
+    for ns in synth {
+        per_worker[ns.shard % w_count].push(ns);
+    }
+
+    let results: Vec<Result<Vec<ShardOut>>> =
+        std::thread::scope(|sc| {
+            let handles: Vec<_> = per_worker
+                .into_iter()
+                .zip(statics)
+                .enumerate()
+                .map(|(w, (synth, statics))| {
+                    let (ro, coord, models, artifacts_dir) =
+                        (&ro, &coord, &models, p.artifacts_dir);
+                    let (spec, delta_map) = (p.spec, p.delta_map);
+                    sc.spawn(move || {
+                        // on ANY exit — normal, error, or panic while
+                        // not holding the lock — mark the run done so
+                        // the other workers' loops terminate instead
+                        // of spinning forever
+                        let _stop = StopOnDrop(coord);
+                        worker_run(
+                            w,
+                            artifacts_dir,
+                            spec,
+                            delta_map,
+                            cfg,
+                            ro,
+                            coord,
+                            synth,
+                            statics,
+                            models,
+                        )
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("fleet worker panicked"))
+                .collect()
+        });
+    let mut outs: Vec<ShardOut> = Vec::with_capacity(cfg.n_shards);
+    for r in results {
+        outs.extend(r?);
+    }
+    outs.sort_by_key(|o| o.s);
+
+    let coord = coord.into_inner().expect("coordinator poisoned");
+    let mut waste = coord.waste;
+    waste.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let churn_report = coord.churn.map(|mut ch| {
+        // replay the losing-hedge energy in time order: the sequential
+        // engine accumulates it at (nondecreasing) completion times
+        for &(_, e) in &waste {
+            ch.state.wasted_energy_mwh += e;
+        }
+        ChurnReport::collect(
+            &ch.state,
+            outs.iter().filter_map(|o| o.membership.as_ref()),
+        )
+    });
+    let adapt_report = {
+        let mut merged: Option<AdaptReport> = None;
+        for o in &outs {
+            if let Some(r) = &o.adapt {
+                match merged.as_mut() {
+                    Some(m) => m.merge(r),
+                    None => merged = Some(r.clone()),
+                }
+            }
+        }
+        merged
+    };
+    Ok(FleetReport {
+        per_shard: outs.iter().map(|o| o.metrics.clone()).collect(),
+        offered: frames.len(),
+        dropped: coord.dropped,
+        node_fallbacks: outs.iter().map(|o| o.fallbacks).sum(),
+        cross_shard_fallbacks: coord.cross_shard_fallbacks,
+        makespan_s: coord.makespan_s,
+        peak_in_flight: coord.peak_in_flight,
+        churn: churn_report,
+        slo: coord.slo,
+        adapt: adapt_report,
+    })
+}
+
+/// One worker: build the owned shards on a private engine, then drive
+/// the protocol loop until the run completes (or any worker errors).
+#[allow(clippy::too_many_arguments)]
+fn worker_run(
+    w: usize,
+    artifacts_dir: &Path,
+    spec: RouterSpec,
+    delta_map: f64,
+    cfg: &FleetConfig,
+    ro: &SharedRo<'_>,
+    coord: &Mutex<Coord>,
+    synth: Vec<NodeSynth>,
+    statics: Vec<LEvent>,
+    models: &[String],
+) -> Result<Vec<ShardOut>> {
+    let engine = Engine::new(artifacts_dir)?;
+    // group the owned synthesis entries by shard, preserving synthesis
+    // order within each shard (= the sequential engine's pool order)
+    let mut grouped: BTreeMap<usize, Vec<NodeSynth>> = BTreeMap::new();
+    for ns in synth {
+        grouped.entry(ns.shard).or_default().push(ns);
+    }
+    let mut slots: Vec<ShardSlot<'_>> = Vec::with_capacity(grouped.len());
+    let mut homes: BTreeMap<usize, (usize, PairId)> = BTreeMap::new();
+    for (s, group) in grouped {
+        let mut nodes = Vec::with_capacity(group.len());
+        let mut rows = Vec::new();
+        let mut keys = Vec::with_capacity(group.len());
+        for ns in &group {
+            rows.extend(ns.rows.iter().cloned());
+            keys.push((ns.synth_idx, ns.pair.clone()));
+            nodes.push(ns.make_node(&engine, cfg)?);
+        }
+        let gw = wire_shard(&engine, spec, delta_map, cfg, s, nodes, rows);
+        for (idx, key) in keys {
+            let id = gw
+                .store()
+                .id_of(&key)
+                .expect("synthesized pair interned in its shard");
+            homes.insert(idx, (s, id));
+        }
+        let pairs = if cfg.churn.is_some() {
+            gw.pool()
+                .nodes()
+                .iter()
+                .map(|n| {
+                    gw.store()
+                        .id_of(&n.pair)
+                        .expect("shard pair missing from its table")
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        slots.push(ShardSlot {
+            s,
+            fallbacks_before: gw.fallbacks,
+            metrics: RunMetrics::new(&format!("{}-s{s}", spec.name)),
+            queues: BTreeMap::new(),
+            forming: BTreeMap::new(),
+            pairs,
+            gw,
+        });
+    }
+    let model_refs: Vec<&str> =
+        models.iter().map(|m| m.as_str()).collect();
+    engine.preload(&model_refs)?;
+
+    let mut wsim = Wsim { heap: BinaryHeap::new(), ord: 0 };
+    for ev in statics {
+        wsim.heap.push(Reverse(ev));
+    }
+
+    loop {
+        let mut c = coord.lock().expect("coordinator poisoned");
+        if c.done {
+            break;
+        }
+        // --- walk phase: the spine head is being serviced ---
+        if let Some(wk) = c.walk.as_mut() {
+            let my_turn = !wk.finalizing
+                && !wk.visiting
+                && wk.order[wk.pos] % ro.w_count == w;
+            if !my_turn {
+                drop(c);
+                std::thread::yield_now();
+                continue;
+            }
+            wk.visiting = true;
+            let (t, idx, retry, cached, shard) =
+                (wk.t, wk.idx, wk.retry, wk.cached, wk.order[wk.pos]);
+            drop(c);
+            let i = slot_of(&slots, shard);
+            let sl = &mut slots[i];
+            // route outside the lock: estimator + policy RNG state are
+            // this worker's own
+            let res = match (retry, cached) {
+                (true, Some((estimate, cost))) => {
+                    sl.gw.route_with_estimate(
+                        estimate,
+                        ro.pseudo_gt[idx].len(),
+                        cost,
+                        t,
+                    )
+                }
+                _ => sl.gw.route_at(
+                    &ro.frames[idx].image,
+                    ro.pseudo_gt[idx].len(),
+                    t,
+                ),
+            };
+            match res {
+                Ok(routed) => {
+                    {
+                        let mut c =
+                            coord.lock().expect("coordinator poisoned");
+                        let wk = c.walk.as_mut().expect("walk vanished");
+                        wk.finalizing = true;
+                        let pos = wk.pos;
+                        c.cross_shard_fallbacks += pos;
+                    }
+                    // everyone else stays parked until the walk
+                    // resolves, so the admission below observes (and
+                    // mutates) exactly the sequential barrier state
+                    let fin = if retry {
+                        finalize_retry(
+                            sl, &mut wsim, ro, coord, routed, idx, t,
+                        )
+                    } else {
+                        finalize_arrival(
+                            sl, &mut wsim, ro, coord, routed, idx, t,
+                        )
+                    };
+                    let mut c =
+                        coord.lock().expect("coordinator poisoned");
+                    c.walk = None;
+                    c.at_gate.iter_mut().for_each(|f| *f = false);
+                    if let Err(e) = fin {
+                        c.done = true;
+                        return Err(e);
+                    }
+                }
+                Err(e) if e.is::<NoEndpoint>() => {
+                    let mut c =
+                        coord.lock().expect("coordinator poisoned");
+                    let wk = c.walk.as_mut().expect("walk vanished");
+                    wk.visiting = false;
+                    wk.pos += 1;
+                    if wk.pos == wk.order.len() {
+                        walk_exhausted(&mut c, ro, idx, retry, t);
+                        c.walk = None;
+                        c.at_gate.iter_mut().for_each(|f| *f = false);
+                    }
+                }
+                Err(e) => {
+                    let mut c =
+                        coord.lock().expect("coordinator poisoned");
+                    c.done = true;
+                    return Err(e);
+                }
+            }
+            continue;
+        }
+        // --- local phase: commit, park, or go idle ---
+        let local = wsim.heap.peek().map(|Reverse(e)| e.key());
+        let gate = c.spine.peek().map(|Reverse(e)| e.key());
+        match (local, gate) {
+            (None, None) => {
+                c.idle[w] = true;
+                c.clocks[w] = f64::INFINITY;
+                if c.idle.iter().all(|&i| i) {
+                    // no local work, no spine, no walk: the run is over
+                    c.done = true;
+                    break;
+                }
+                drop(c);
+                std::thread::yield_now();
+            }
+            (l, Some(g))
+                if l.map(|lk| !local_before_gate(lk, g))
+                    .unwrap_or(true) =>
+            {
+                // nothing to do before the spine head: park at the gate
+                c.idle[w] = l.is_none();
+                c.at_gate[w] = true;
+                c.clocks[w] = g.0;
+                if c.at_gate.iter().all(|&f| f) {
+                    create_walk(&mut c, ro);
+                }
+                drop(c);
+                std::thread::yield_now();
+            }
+            (Some(lk), _) => {
+                // local head precedes the gate: publish it as this
+                // worker's watermark FIRST — while we hold out below,
+                // our heap cannot change (only this worker pushes into
+                // it, and walks need us parked), so our next commit is
+                // exactly `lk` and publishing it keeps two stalled
+                // workers from waiting on each other's stale clocks
+                c.idle[w] = false;
+                c.at_gate[w] = false;
+                c.clocks[w] = lk.0;
+                // under the retry policy also wait out the lookahead
+                // window: a concurrent worker whose watermark is `u`
+                // can still insert a retry at `u + backoff`
+                if let Some(backoff) = ro.retry_lookahead {
+                    let min_other = c
+                        .clocks
+                        .iter()
+                        .enumerate()
+                        .filter(|&(x, _)| x != w)
+                        .map(|(_, &t)| t)
+                        .fold(f64::INFINITY, f64::min);
+                    if lk.0 > min_other + backoff {
+                        drop(c);
+                        std::thread::yield_now();
+                        continue;
+                    }
+                }
+                drop(c);
+                let Reverse(ev) =
+                    wsim.heap.pop().expect("peeked local head");
+                if let Err(e) = handle_local(
+                    &mut slots, &mut wsim, &homes, ro, coord, ev,
+                ) {
+                    let mut c =
+                        coord.lock().expect("coordinator poisoned");
+                    c.done = true;
+                    return Err(e);
+                }
+            }
+        }
+    }
+
+    // the run is complete: makespan is final, assemble per-shard output
+    let makespan_s =
+        coord.lock().expect("coordinator poisoned").makespan_s;
+    Ok(slots
+        .into_iter()
+        .map(|sl| ShardOut {
+            s: sl.s,
+            fallbacks: sl.gw.fallbacks - sl.fallbacks_before,
+            membership: sl.gw.membership().cloned(),
+            adapt: sl.gw.adapt_report(makespan_s),
+            metrics: sl.metrics,
+        })
+        .collect())
+}
+
+/// Pop the spine head and open a walk over the dispatch order computed
+/// from the exact barrier state. Requires every worker parked.
+fn create_walk(c: &mut Coord, ro: &SharedRo<'_>) {
+    let Some(Reverse(head)) = c.spine.pop() else {
+        return;
+    };
+    let order =
+        ro.dispatch.order(head.idx, ro.n_sources, &c.in_flight);
+    let cached = if head.retry {
+        c.churn.as_ref().expect("retry without churn").est[head.idx]
+    } else {
+        None
+    };
+    c.walk = Some(Walk {
+        t: head.t,
+        idx: head.idx,
+        retry: head.retry,
+        cached,
+        order,
+        pos: 0,
+        visiting: false,
+        finalizing: false,
+    });
+}
+
+/// Every shard refused the spine request: apply the same terminal path
+/// as the sequential engine's placement-failure arms.
+fn walk_exhausted(
+    c: &mut Coord,
+    ro: &SharedRo<'_>,
+    idx: usize,
+    retry: bool,
+    t: f64,
+) {
+    if retry || ro.retry_lookahead.is_some() {
+        let outcome = c
+            .churn
+            .as_mut()
+            .expect("retry policy without churn")
+            .state
+            .placement_failed(idx, t);
+        if let LossOutcome::RetryAt(rt) = outcome {
+            retry_or_abandon(c, ro, idx, rt);
+        }
+    } else {
+        c.dropped += 1;
+        // an overflow drop misses its SLO too
+        if let Some(sr) = ro.slo.as_ref() {
+            if let Some(m) = c.slo.as_mut() {
+                m.record_shed(sr.cfg.class_of(idx));
+            }
+        }
+    }
+}
+
+/// Under SLOs a retry scheduled past the deadline cannot help: abandon
+/// and record the shed; otherwise push the re-dispatch onto the spine.
+fn retry_or_abandon(
+    c: &mut Coord,
+    ro: &SharedRo<'_>,
+    idx: usize,
+    retry_t: f64,
+) {
+    match ro.slo.as_ref() {
+        Some(sr) if retry_t > sr.deadlines[idx] => {
+            c.churn
+                .as_mut()
+                .expect("retry without churn")
+                .state
+                .abandon(idx);
+            if let Some(m) = c.slo.as_mut() {
+                m.record_shed(sr.cfg.class_of(idx));
+            }
+        }
+        _ => c.push_retry(retry_t, idx),
+    }
+}
+
+/// Index of the slot owning global shard `shard`.
+fn slot_of(slots: &[ShardSlot<'_>], shard: usize) -> usize {
+    slots
+        .iter()
+        .position(|sl| sl.s == shard)
+        .expect("event for unowned shard")
+}
+
+/// Dispatch one committed local event — the worker-side twin of the
+/// sequential engine's event arms.
+fn handle_local(
+    slots: &mut [ShardSlot<'_>],
+    wsim: &mut Wsim,
+    homes: &BTreeMap<usize, (usize, PairId)>,
+    ro: &SharedRo<'_>,
+    coord: &Mutex<Coord>,
+    ev: LEvent,
+) -> Result<()> {
+    let t = ev.t;
+    match ev.kind {
+        LKind::Completion { shard, pair, token } => {
+            let i = slot_of(slots, shard);
+            on_completion(&mut slots[i], wsim, ro, coord, pair, token, t)
+        }
+        LKind::Crash(node) => {
+            let &(shard, pair) =
+                homes.get(&node).expect("crash for unowned node");
+            let i = slot_of(slots, shard);
+            let sl = &mut slots[i];
+            {
+                let mut c = coord.lock().expect("coordinator poisoned");
+                c.churn
+                    .as_mut()
+                    .expect("crash without churn")
+                    .state
+                    .crashes += 1;
+            }
+            sl.gw.pool_mut().set_health_id(pair, false);
+            if let Some(m) = sl.gw.membership_mut() {
+                m.ground_truth_changed(pair, false, t);
+            }
+            lose_queued(sl, ro, coord, pair, None, t);
+            Ok(())
+        }
+        LKind::Rejoin(node) => {
+            let &(shard, pair) =
+                homes.get(&node).expect("rejoin for unowned node");
+            let i = slot_of(slots, shard);
+            let sl = &mut slots[i];
+            sl.gw.pool_mut().set_health_id(pair, true);
+            if let Some(n) = sl.gw.pool_mut().get_id(pair) {
+                n.on_rejoin(t);
+            }
+            if let Some(m) = sl.gw.membership_mut() {
+                m.ground_truth_changed(pair, true, t);
+            }
+            Ok(())
+        }
+        LKind::Probe { shard } => {
+            let sl = &slots[slot_of(slots, shard)];
+            let responses: Vec<bool> = sl
+                .pairs
+                .iter()
+                .map(|&p| sl.gw.pool().is_healthy_id(p))
+                .collect();
+            wsim.push_dynamic(
+                t + ro.probe_timeout_s,
+                LKind::ProbeResult { shard, responses },
+            );
+            Ok(())
+        }
+        LKind::ProbeResult { shard, responses } => {
+            let i = slot_of(slots, shard);
+            let sl = &mut slots[i];
+            let m = sl
+                .gw
+                .membership_mut()
+                .expect("churn shard lost its membership");
+            for (&p, up) in sl.pairs.iter().zip(&responses) {
+                m.observe_probe(p, *up, t);
+            }
+            Ok(())
+        }
+        LKind::BatchClose { shard, pair, token } => {
+            let i = slot_of(slots, shard);
+            let sl = &mut slots[i];
+            if sl.forming.get(&pair).map(|f| f.token) != Some(token) {
+                // superseded: a later member rescheduled the close,
+                // the batch already flushed full, or a crash drained
+                // the formation
+                return Ok(());
+            }
+            flush_batch(sl, wsim, ro, coord, pair, t)
+        }
+        LKind::ScaleTick { shard } => {
+            let i = slot_of(slots, shard);
+            slots[i].gw.adapt_scale_tick(t);
+            Ok(())
+        }
+    }
+}
+
+/// The in-service request on `(slot, pair)` completes at `t`.
+fn on_completion(
+    sl: &mut ShardSlot<'_>,
+    wsim: &mut Wsim,
+    ro: &SharedRo<'_>,
+    coord: &Mutex<Coord>,
+    pair: PairId,
+    token: u64,
+    t: f64,
+) -> Result<()> {
+    let q = sl
+        .queues
+        .get_mut(&pair)
+        .expect("completion for unknown queue");
+    if q.serving.as_ref().map(|x| x.token) != Some(token) {
+        // in-service request was lost to a crash after this completion
+        // was scheduled — stale event
+        debug_assert!(
+            ro.policy.is_some(),
+            "stale completion without churn"
+        );
+        return Ok(());
+    }
+    let done = q.serving.take().expect("token just matched");
+    sl.gw.pool_mut().release_id(pair);
+    let winner = {
+        let mut c = coord.lock().expect("coordinator poisoned");
+        c.in_flight[sl.s] -= 1;
+        c.total_in_flight -= 1;
+        c.makespan_s = c.makespan_s.max(t);
+        let winner = match c.churn.as_mut() {
+            // energy is accounted through the time-ordered waste log
+            // (f64 sums are order-sensitive), so pass 0 here
+            Some(ch) => {
+                ch.state.copy_completed(done.idx, 0.0, done.hedge)
+            }
+            None => true,
+        };
+        if !winner {
+            c.waste.push((t, done.resp.energy_mwh));
+        }
+        if winner {
+            if let Some(m) = c.slo.as_mut() {
+                let sr = ro.slo.as_ref().expect("slo metrics without cfg");
+                m.record_completion(
+                    done.slo.class,
+                    t <= sr.deadlines[done.idx],
+                );
+            }
+        }
+        winner
+    };
+    if winner {
+        let queue_delay_s = (done.start_s
+            - (done.arrival_s + done.routed.cost.latency_s))
+            .max(0.0);
+        // batch followers rode the leader's transfer
+        let net_s = if done.slo.net { devices::NETWORK_S } else { 0.0 };
+        sl.gw.finish_with_network(
+            &done.routed,
+            done.resp,
+            &ro.pseudo_gt[done.idx],
+            queue_delay_s,
+            net_s,
+            &mut sl.metrics,
+        );
+    }
+    start_next(sl, wsim, ro, coord, pair, t)
+}
+
+/// If `pair` is idle and has backlog, begin serving the head request
+/// (engine call outside the lock — the parallelism win) and schedule
+/// its completion.
+fn start_next(
+    sl: &mut ShardSlot<'_>,
+    wsim: &mut Wsim,
+    ro: &SharedRo<'_>,
+    coord: &Mutex<Coord>,
+    pair: PairId,
+    now_s: f64,
+) -> Result<()> {
+    let q = sl
+        .queues
+        .get_mut(&pair)
+        .expect("start_next on unknown queue");
+    if q.serving.is_some() {
+        return Ok(());
+    }
+    let Some(p) = q.backlog.pop_front() else {
+        return Ok(());
+    };
+    let start_s = now_s.max(p.arrival_s + p.routed.cost.latency_s);
+    let mut resp =
+        match sl.gw.serve(pair, &ro.frames[p.idx].image, start_s) {
+            Ok(r) => r,
+            Err(e) if ro.policy.is_some() && e.is::<NodeDown>() => {
+                if let Some(m) = sl.gw.membership_mut() {
+                    m.observe_dispatch_failure(pair, now_s);
+                }
+                lose_queued(sl, ro, coord, pair, Some(p), now_s);
+                return Ok(());
+            }
+            Err(e) => return Err(e),
+        };
+    if p.slo.amortized {
+        // batch follower: the leader already paid the shared
+        // preprocess; amortize it out of latency and energy
+        let (save_s, save_mwh) = sl.gw.batch_savings(pair);
+        resp.latency_s = amortize(resp.latency_s, save_s);
+        resp.energy_mwh = amortize(resp.energy_mwh, save_mwh);
+    }
+    let net_s = if p.slo.net { devices::NETWORK_S } else { 0.0 };
+    let token = wsim.ord;
+    wsim.push_dynamic(
+        start_s + resp.latency_s + net_s,
+        LKind::Completion { shard: sl.s, pair, token },
+    );
+    // re-borrow: gw.serve() above needed &mut Gateway exclusively
+    sl.queues.get_mut(&pair).expect("queue vanished").serving =
+        Some(InService {
+            routed: p.routed,
+            idx: p.idx,
+            arrival_s: p.arrival_s,
+            start_s,
+            resp,
+            token,
+            hedge: p.hedge,
+            slo: p.slo,
+        });
+    Ok(())
+}
+
+/// Drain every copy on `pair`'s queue — the in-service request, an
+/// optional already-popped head, and the backlog — releasing slots and
+/// feeding each loss through the resilience policy.
+fn lose_queued(
+    sl: &mut ShardSlot<'_>,
+    ro: &SharedRo<'_>,
+    coord: &Mutex<Coord>,
+    pair: PairId,
+    head: Option<Pending>,
+    now_s: f64,
+) {
+    let mut idxs: Vec<usize> = Vec::new();
+    if let Some(q) = sl.queues.get_mut(&pair) {
+        if let Some(s) = q.serving.take() {
+            idxs.push(s.idx);
+        }
+        if let Some(p) = &head {
+            idxs.push(p.idx);
+        }
+        while let Some(p) = q.backlog.pop_front() {
+            idxs.push(p.idx);
+        }
+    } else if let Some(p) = &head {
+        idxs.push(p.idx);
+    }
+    // a forming batch on this pair holds slots too — it dies with the
+    // node
+    if let Some(f) = sl.forming.remove(&pair) {
+        for p in f.members {
+            idxs.push(p.idx);
+        }
+    }
+    let mut c = coord.lock().expect("coordinator poisoned");
+    for idx in idxs {
+        sl.gw.pool_mut().release_id(pair);
+        c.in_flight[sl.s] -= 1;
+        c.total_in_flight -= 1;
+        let outcome = c
+            .churn
+            .as_mut()
+            .expect("loss without churn")
+            .state
+            .copy_lost(idx, now_s);
+        match outcome {
+            LossOutcome::RetryAt(rt) => {
+                retry_or_abandon(&mut c, ro, idx, rt)
+            }
+            LossOutcome::Absorbed | LossOutcome::Lost => {}
+        }
+    }
+}
+
+/// Admit one routed copy into its pair's FIFO and try to start service.
+#[allow(clippy::too_many_arguments)]
+fn admit_copy(
+    sl: &mut ShardSlot<'_>,
+    wsim: &mut Wsim,
+    ro: &SharedRo<'_>,
+    coord: &Mutex<Coord>,
+    routed: RoutedRequest,
+    idx: usize,
+    t: f64,
+    hedge: bool,
+    tag: SloTag,
+) -> Result<()> {
+    let admitted = sl.gw.pool_mut().acquire_id(routed.pair_id);
+    debug_assert!(admitted, "route() returned a pair without a free slot");
+    {
+        let mut c = coord.lock().expect("coordinator poisoned");
+        c.in_flight[sl.s] += 1;
+        c.total_in_flight += 1;
+        c.peak_in_flight = c.peak_in_flight.max(c.total_in_flight);
+    }
+    let pair = routed.pair_id;
+    push_pending(
+        sl.queues.entry(pair).or_default(),
+        Pending { routed, idx, arrival_s: t, hedge, slo: tag },
+    );
+    start_next(sl, wsim, ro, coord, pair, t)
+}
+
+/// Admit request `idx` into `(shard, pair)`'s forming batch: the queue
+/// slot is acquired NOW, and the batch flushes when it fills, the
+/// window closes, or slack runs out.
+#[allow(clippy::too_many_arguments)]
+fn join_forming(
+    sl: &mut ShardSlot<'_>,
+    wsim: &mut Wsim,
+    ro: &SharedRo<'_>,
+    coord: &Mutex<Coord>,
+    routed: RoutedRequest,
+    tag: SloTag,
+    idx: usize,
+    t: f64,
+) -> Result<()> {
+    let admitted = sl.gw.pool_mut().acquire_id(routed.pair_id);
+    debug_assert!(admitted, "route() returned a pair without a free slot");
+    {
+        let mut c = coord.lock().expect("coordinator poisoned");
+        c.in_flight[sl.s] += 1;
+        c.total_in_flight += 1;
+        c.peak_in_flight = c.peak_in_flight.max(c.total_in_flight);
+    }
+    let pair = routed.pair_id;
+    let (window_s, max_batch) = {
+        let sr = ro.slo.as_ref().expect("forming without slo");
+        (sr.cfg.batch_window_s, sr.cfg.max_batch)
+    };
+    let latest_s = (tag.deadline_s
+        - sl.gw.predicted_completion_s(pair, t, 0.0))
+    .max(t);
+    let member_close = (t + window_s).min(latest_s);
+    let (flush_now, close_s) = {
+        let f = sl.forming.entry(pair).or_default();
+        f.members.push(Pending {
+            routed,
+            idx,
+            arrival_s: t,
+            hedge: false,
+            slo: tag,
+        });
+        f.close_s = f.close_s.min(member_close);
+        (f.members.len() >= max_batch || f.close_s <= t, f.close_s)
+    };
+    if flush_now {
+        return flush_batch(sl, wsim, ro, coord, pair, t);
+    }
+    // (re)schedule the close; earlier BatchClose events go stale
+    let token = wsim.ord;
+    sl.forming.get_mut(&pair).expect("just inserted").token = token;
+    wsim.push_dynamic(
+        close_s,
+        LKind::BatchClose { shard: sl.s, pair, token },
+    );
+    Ok(())
+}
+
+/// Flush `(shard, pair)`'s forming batch into its FIFO as one
+/// amortized service train.
+fn flush_batch(
+    sl: &mut ShardSlot<'_>,
+    wsim: &mut Wsim,
+    ro: &SharedRo<'_>,
+    coord: &Mutex<Coord>,
+    pair: PairId,
+    now_s: f64,
+) -> Result<()> {
+    let Some(f) = sl.forming.remove(&pair) else {
+        return Ok(());
+    };
+    if f.members.is_empty() {
+        return Ok(());
+    }
+    {
+        let mut c = coord.lock().expect("coordinator poisoned");
+        if let Some(m) = c.slo.as_mut() {
+            m.record_batch(f.members.len());
+        }
+    }
+    let edf_s = f
+        .members
+        .iter()
+        .map(|m| m.slo.deadline_s)
+        .fold(f64::INFINITY, f64::min);
+    for (i, mut m) in f.members.into_iter().enumerate() {
+        m.slo.edf_s = edf_s;
+        m.slo.amortized = i > 0;
+        m.slo.net = i == 0;
+        // slots were acquired at formation entry — enqueue directly
+        push_pending(sl.queues.entry(pair).or_default(), m);
+    }
+    start_next(sl, wsim, ro, coord, pair, now_s)
+}
+
+/// The winner's admission of an arrival: SLO gate, hedging, batch
+/// formation — the twin of the sequential Arrival arm, run while every
+/// other worker is parked at the gate.
+fn finalize_arrival(
+    sl: &mut ShardSlot<'_>,
+    wsim: &mut Wsim,
+    ro: &SharedRo<'_>,
+    coord: &Mutex<Coord>,
+    routed: RoutedRequest,
+    idx: usize,
+    t: f64,
+) -> Result<()> {
+    // the winning shard's rate EWMA sees the demand
+    sl.gw.adapt_arrival();
+    // SLO admission control: predicted completion on the placed shard
+    // already past the deadline → shed now instead of queueing doomed
+    // work (DESIGN.md §11)
+    let mut tag = SloTag::default();
+    if let Some(sr) = ro.slo.as_ref() {
+        let deadline = sr.deadlines[idx];
+        let pred = sl.gw.predicted_completion_s(
+            routed.pair_id,
+            t,
+            routed.cost.latency_s,
+        );
+        if t + pred > deadline {
+            let mut c = coord.lock().expect("coordinator poisoned");
+            c.dropped += 1;
+            if let Some(m) = c.slo.as_mut() {
+                m.record_shed(sr.cfg.class_of(idx));
+            }
+            return Ok(());
+        }
+        tag = SloTag {
+            class: sr.cfg.class_of(idx),
+            deadline_s: deadline,
+            edf_s: deadline,
+            ..tag
+        };
+    }
+    // proactive hedging stays within the winning shard (the duplicate
+    // reuses the primary's estimate)
+    let dup = if ro.policy == Some(ResiliencePolicy::Hedge) {
+        match sl.gw.route_secondary(&routed, t) {
+            Some(p) => {
+                // hedges respect the remaining budget
+                let fits = match ro.slo.as_ref() {
+                    Some(sr) => {
+                        t + sl.gw.predicted_completion_s(p, t, 0.0)
+                            <= sr.deadlines[idx]
+                    }
+                    None => true,
+                };
+                fits.then_some(RoutedRequest { pair_id: p, ..routed })
+            }
+            None => None,
+        }
+    } else {
+        None
+    };
+    // register BOTH copies before admitting either: the primary can
+    // die synchronously at dispatch (stale view), and its loss must
+    // see the hedge as a live sibling. The winning shard's estimate +
+    // cost are cached so a retry never pays the estimator again.
+    {
+        let mut c = coord.lock().expect("coordinator poisoned");
+        if let Some(ch) = c.churn.as_mut() {
+            ch.est[idx] = Some((routed.estimate, routed.cost));
+            ch.state.dispatched(idx);
+            if dup.is_some() {
+                ch.state.hedge_dispatched(idx);
+            }
+        }
+    }
+    // batch formation: primary copies without a hedge sibling join
+    // their (shard, pair) forming batch
+    let forms = dup.is_none()
+        && ro.slo.as_ref().is_some_and(|sr| {
+            sr.cfg.batch_window_s > 0.0 && sr.cfg.max_batch > 1
+        });
+    if forms {
+        return join_forming(sl, wsim, ro, coord, routed, tag, idx, t);
+    }
+    if ro.slo.is_some() {
+        let mut c = coord.lock().expect("coordinator poisoned");
+        if let Some(m) = c.slo.as_mut() {
+            // unbatched dispatch: a size-1 "batch"
+            m.record_batch(1);
+        }
+    }
+    admit_copy(sl, wsim, ro, coord, routed, idx, t, false, tag)?;
+    if let Some(d) = dup {
+        admit_copy(sl, wsim, ro, coord, d, idx, t, true, tag)?;
+    }
+    Ok(())
+}
+
+/// The winner's admission of a retry re-dispatch: backfill the
+/// estimator cache, count the retry, and admit with the request's
+/// original deadline (retries bypass batch formation).
+fn finalize_retry(
+    sl: &mut ShardSlot<'_>,
+    wsim: &mut Wsim,
+    ro: &SharedRo<'_>,
+    coord: &Mutex<Coord>,
+    routed: RoutedRequest,
+    idx: usize,
+    t: f64,
+) -> Result<()> {
+    {
+        let mut c = coord.lock().expect("coordinator poisoned");
+        let ch = c.churn.as_mut().expect("retry without churn");
+        if ch.est[idx].is_none() {
+            ch.est[idx] = Some((routed.estimate, routed.cost));
+        }
+        ch.state.retry_dispatched(idx);
+    }
+    let tag = match ro.slo.as_ref() {
+        Some(sr) => SloTag {
+            class: sr.cfg.class_of(idx),
+            deadline_s: sr.deadlines[idx],
+            edf_s: sr.deadlines[idx],
+            ..SloTag::default()
+        },
+        None => SloTag::default(),
+    };
+    admit_copy(sl, wsim, ro, coord, routed, idx, t, false, tag)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spine_orders_arrivals_before_retries_at_equal_time() {
+        let a = SEvent { t: 1.0, retry: false, idx: 7 };
+        let r = SEvent { t: 1.0, retry: true, idx: 0 };
+        assert!(a < r, "arrival outranks retry at equal time");
+        let b = SEvent { t: 1.0, retry: false, idx: 3 };
+        assert!(b < a, "equal-time arrivals order by index");
+    }
+
+    #[test]
+    fn local_key_order_matches_sequential_rules() {
+        // static (cls 0) events share the arrival seq space exactly
+        let arrival = (1.0, 0u8, 5u64);
+        let static_ev = (1.0, 0u8, 40u64);
+        assert!(local_before_gate(arrival, static_ev));
+        assert!(!local_before_gate(static_ev, arrival));
+        // runtime events always lose equal-time ties to setup events
+        let dynamic = (1.0, 1u8, 0u64);
+        assert!(!local_before_gate(dynamic, static_ev));
+        // earlier time always wins
+        assert!(local_before_gate((0.5, 1, 9), (1.0, 0, 0)));
+        // dynamic vs. spine retry at the bit-identical time commits
+        // local-first (the documented measure-zero approximation)
+        let retry_gate = (1.0, 1u8, 3u64);
+        assert!(local_before_gate(dynamic, retry_gate));
+    }
+}

@@ -49,10 +49,11 @@ USAGE:
                    [--fleet-sizes a,b] [--fleet-shards a,b]
                    [--fleet-routers a,b] [--fleet-rate R]
                    [--fleet-requests N] [--dispatch hash|least|sticky]
+                   [--threads N]
   ecore serve      [--router ED] [--dataset coco|balanced] [--images N]
                    [--open-loop] [--rate R] [--queue-cap N]
                    [--fleet] [--nodes N] [--shards K]
-                   [--dispatch hash|least|sticky]
+                   [--dispatch hash|least|sticky] [--threads N]
                    [--churn] [--mtbf S] [--mttr S]
                    [--resilience drop|retry|hedge]
                    [--slo] [--slo-classes name:d,name:d]
@@ -73,6 +74,12 @@ fn main() -> Result<()> {
     }
     let cmd = argv[0].clone();
     let args = Args::parse(argv.into_iter().skip(1));
+    if args.warn_swallowed() {
+        anyhow::bail!(
+            "option(s) missing a value (use --key=value if the value \
+             starts with `--`)"
+        );
+    }
 
     let mut cfg = match args.get("config") {
         Some(path) => {
@@ -166,15 +173,22 @@ fn main() -> Result<()> {
                     churn: churn_cfg.clone(),
                     slo: slo_cfg.clone(),
                     adapt: adapt_cfg.clone(),
+                    threads: h.cfg.fleet_threads,
                 };
-                let mut fl = ecore::fleet::FleetBuilder::new(
-                    &h.engine,
-                    deployed.clone(),
-                )
-                .build(spec, h.cfg.delta_map, &fleet_cfg)?;
-                let report = ecore::fleet::run_dataset(
-                    &mut fl,
-                    &dataset,
+                let frames: Vec<ecore::dataset::Scene> =
+                    dataset.iter_scenes().collect();
+                let gts: Vec<Vec<ecore::dataset::GtBox>> =
+                    frames.iter().map(|s| s.gt.clone()).collect();
+                let report = ecore::fleet::parallel::run_frames_threads(
+                    &ecore::fleet::parallel::ParallelFleetSpec {
+                        artifacts_dir: h.artifacts_dir(),
+                        base: &deployed,
+                        spec,
+                        delta_map: h.cfg.delta_map,
+                    },
+                    &fleet_cfg,
+                    &frames,
+                    &gts,
                     &ecore::workload::openloop::ArrivalProcess::Poisson {
                         rate_rps: h.cfg.rate_rps,
                     },

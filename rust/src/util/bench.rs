@@ -172,16 +172,25 @@ impl Bench {
     pub fn finish_json<S: AsRef<str>>(self, extras: &[(S, f64)]) {
         let dir = std::env::var("BENCH_OUT_DIR")
             .unwrap_or_else(|_| ".".to_string());
-        let path = std::path::Path::new(&dir)
-            .join(format!("BENCH_{}.json", self.group));
-        match std::fs::write(&path, self.to_json(extras).pretty()) {
-            Ok(()) => println!("[bench] wrote {}", path.display()),
-            Err(e) => eprintln!(
-                "[bench] could not write {}: {e}",
-                path.display()
-            ),
+        match self.write_json(std::path::Path::new(&dir), extras) {
+            Ok(path) => println!("[bench] wrote {}", path.display()),
+            Err(e) => eprintln!("[bench] could not write trajectory: {e}"),
         }
         self.finish();
+    }
+
+    /// Write `BENCH_<group>.json` into `dir`, creating the directory
+    /// (and parents) if missing — a nonexistent `BENCH_OUT_DIR` used to
+    /// drop the whole trajectory point with only an eprintln.
+    pub fn write_json<S: AsRef<str>>(
+        &self,
+        dir: &std::path::Path,
+        extras: &[(S, f64)],
+    ) -> std::io::Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("BENCH_{}.json", self.group));
+        std::fs::write(&path, self.to_json(extras).pretty())?;
+        Ok(path)
     }
 
     pub fn finish(self) {
@@ -226,5 +235,27 @@ mod tests {
                 .as_f64(),
             Some(123.0)
         );
+    }
+
+    #[test]
+    fn write_json_creates_missing_out_dir() {
+        let mut b = Bench::new("dirtest");
+        b.budget = Duration::from_millis(20);
+        b.samples = 3;
+        b.run("noop", || black_box(1u64 + black_box(1)));
+        let dir = std::env::temp_dir().join(format!(
+            "ecore_bench_out_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let nested = dir.join("a/b");
+        assert!(!nested.exists());
+        let path = b
+            .write_json(&nested, &[("events_per_sec", 7.0)])
+            .expect("write through a missing directory");
+        let body =
+            std::fs::read_to_string(&path).expect("file written");
+        assert!(body.contains("events_per_sec"));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -9,12 +9,22 @@ pub fn line_chart(
     width: usize,
     height: usize,
 ) -> String {
+    // Non-finite points cannot be placed on the grid: `as usize`
+    // saturates NaN and -inf to 0, which used to silently plot them at
+    // cell (0, 0). They are excluded from both the range and the plot.
     let pts: Vec<(f64, f64)> = series
         .iter()
         .flat_map(|(_, s)| s.iter().copied())
+        .filter(|&(x, y)| x.is_finite() && y.is_finite())
         .collect();
     if pts.is_empty() {
         return format!("{title}\n(no data)\n");
+    }
+    // A degenerate frame has no cells: `grid[height - 1 - cy]` would
+    // underflow on height == 0 and `grid[..][cx]` would index out of
+    // bounds on width == 0.
+    if width == 0 || height == 0 {
+        return format!("{title}\n(degenerate {width}x{height} frame)\n");
     }
     let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
     let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
@@ -35,6 +45,9 @@ pub fn line_chart(
     for (si, (_, s)) in series.iter().enumerate() {
         let m = marks[si % marks.len()];
         for &(x, y) in s {
+            if !x.is_finite() || !y.is_finite() {
+                continue;
+            }
             let cx = ((x - x0) / (x1 - x0) * (width - 1) as f64) as usize;
             let cy = ((y - y0) / (y1 - y0) * (height - 1) as f64) as usize;
             grid[height - 1 - cy][cx] = m;
@@ -102,6 +115,54 @@ mod tests {
     #[test]
     fn empty_series_no_panic() {
         let s = line_chart("t", &[("a", vec![])], 10, 5);
+        assert!(s.contains("no data"));
+    }
+
+    #[test]
+    fn zero_height_no_panic() {
+        let s = line_chart("t", &[("a", vec![(0.0, 1.0)])], 10, 0);
+        assert!(s.contains("degenerate"));
+    }
+
+    #[test]
+    fn zero_width_no_panic() {
+        let s = line_chart("t", &[("a", vec![(0.0, 1.0)])], 0, 5);
+        assert!(s.contains("degenerate"));
+    }
+
+    #[test]
+    fn non_finite_points_skipped() {
+        let s = line_chart(
+            "t",
+            &[(
+                "a",
+                vec![
+                    (f64::NAN, 0.5),
+                    (0.25, f64::NEG_INFINITY),
+                    (10.0, 20.0),
+                    (30.0, 40.0),
+                ],
+            )],
+            20,
+            8,
+        );
+        // Only the two finite points land on the grid; the NaN/-inf
+        // points must not collapse onto cell (0, 0).
+        let stars: usize =
+            s.lines().map(|l| l.matches('*').count()).sum();
+        assert_eq!(stars, 3); // 2 plotted + 1 in the legend
+        // The range comes from the finite points only.
+        assert!(s.contains("40.00") && s.contains("20.00"));
+    }
+
+    #[test]
+    fn all_non_finite_is_no_data() {
+        let s = line_chart(
+            "t",
+            &[("a", vec![(f64::NAN, f64::NAN), (f64::INFINITY, 1.0)])],
+            10,
+            5,
+        );
         assert!(s.contains("no data"));
     }
 

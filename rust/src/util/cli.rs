@@ -11,6 +11,12 @@ pub struct Args {
     pub positional: Vec<String>,
     pub options: BTreeMap<String, String>,
     pub flags: Vec<String>,
+    /// `--name` tokens that are not in the declared flag vocabulary and
+    /// had no value to consume (next token was another `--…` or argv
+    /// ended). These are almost always a typo'd or truncated value
+    /// option (`serve --rates --quick`), so callers should surface
+    /// them instead of silently running defaults.
+    pub swallowed: Vec<String>,
 }
 
 impl Args {
@@ -38,6 +44,14 @@ impl Args {
                     let v = it.next().unwrap();
                     out.options.insert(body.to_string(), v);
                 } else {
+                    if !known_flags.contains(&body) {
+                        // A value-expecting option demoted to a flag:
+                        // its value was swallowed by the following
+                        // `--…` token (or the end of argv). Keep the
+                        // flag for backward compatibility, but record
+                        // the demotion so callers can report it.
+                        out.swallowed.push(body.to_string());
+                    }
                     out.flags.push(body.to_string());
                 }
             } else {
@@ -63,12 +77,28 @@ impl Args {
                 "fleet",
                 "churn",
                 "slo",
+                "adapt",
+                "adapt-no-scale",
             ],
         )
     }
 
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
+    }
+
+    /// Print a warning for every option whose value was swallowed by a
+    /// following `--…` token (see [`Args::swallowed`]). Returns true if
+    /// anything was reported, so drivers can choose to abort.
+    pub fn warn_swallowed(&self) -> bool {
+        for name in &self.swallowed {
+            eprintln!(
+                "warning: `--{name}` looks like a value option but no \
+                 value followed it (next token starts with `--` or argv \
+                 ended); it was treated as a bare flag"
+            );
+        }
+        !self.swallowed.is_empty()
     }
 
     pub fn get(&self, name: &str) -> Option<&str> {
@@ -214,5 +244,47 @@ mod tests {
         let a = args(&["--quick", "--full"]);
         assert!(a.flag("quick") && a.flag("full"));
         assert!(a.options.is_empty());
+        // Both are in the declared vocabulary: nothing was swallowed.
+        assert!(a.swallowed.is_empty());
+    }
+
+    #[test]
+    fn swallowed_value_option_is_reported() {
+        // The canonical misparse: `serve --rates --quick` used to run
+        // the full default sweep silently because `--rates` lost its
+        // value to `--quick` and became a flag.
+        let a = args(&["serve", "--rates", "--quick"]);
+        assert!(a.flag("quick"));
+        assert_eq!(a.f64_list_or("rates", &[]), Vec::<f64>::new());
+        assert_eq!(a.swallowed, vec!["rates"]);
+        assert!(a.warn_swallowed());
+    }
+
+    #[test]
+    fn swallowed_at_end_of_argv_is_reported() {
+        let a = args(&["--images"]);
+        assert_eq!(a.swallowed, vec!["images"]);
+    }
+
+    #[test]
+    fn equals_form_can_carry_dashed_value() {
+        // `--key=--v` is the explicit escape hatch: the `=` form never
+        // consumes the next token and may carry a value that starts
+        // with dashes.
+        let a = args(&["--key=--v", "--quick"]);
+        assert_eq!(a.get("key"), Some("--v"));
+        assert!(a.flag("quick"));
+        assert!(a.swallowed.is_empty());
+    }
+
+    #[test]
+    fn negative_number_values_are_consumed() {
+        // A single-dash token is a value, not an option: `--rate -5`
+        // must parse as an option with value "-5".
+        let a = args(&["--rate", "-5", "--offset", "-0.25"]);
+        assert_eq!(a.f64_or("rate", 0.0), -5.0);
+        assert_eq!(a.f64_or("offset", 0.0), -0.25);
+        assert!(a.swallowed.is_empty());
+        assert!(!a.warn_swallowed());
     }
 }

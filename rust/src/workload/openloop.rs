@@ -46,8 +46,13 @@ pub enum ArrivalProcess {
     Poisson { rate_rps: f64 },
     /// Deterministic pacing: one arrival every `gap_s` seconds.
     Uniform { gap_s: f64 },
-    /// Trace replay: explicit arrival timestamps (s), nondecreasing.
-    /// Extra requests beyond the trace reuse its last gap.
+    /// Trace replay: explicit arrival timestamps (s). The trace is
+    /// sorted into nondecreasing order before use ([`Self::times`]), so
+    /// an out-of-order trace cannot smuggle a negative inter-arrival
+    /// gap into the simulator. Extra requests beyond the trace extend
+    /// it by its last (sorted) gap; a single-element trace `[t]`
+    /// extends with gap `t` (the gap from the implicit origin), so
+    /// `[t]` yields `t, 2t, 3t, …`.
     Trace(Vec<f64>),
 }
 
@@ -70,11 +75,20 @@ impl ArrivalProcess {
                 (0..n).map(|i| (i + 1) as f64 * gap_s).collect()
             }
             ArrivalProcess::Trace(ts) => {
-                let mut out: Vec<f64> = ts.iter().copied().take(n).collect();
-                let last_gap = match ts.len() {
+                // The trace documents nondecreasing timestamps but
+                // nothing enforces it at construction; a decreasing
+                // trace used to yield a negative last gap (silently
+                // clamped to 1e-9) AND out-of-order arrivals. Sort
+                // first so both the replayed prefix and the extension
+                // gap are well defined.
+                let mut sorted = ts.clone();
+                sorted.sort_by(|a, b| a.total_cmp(b));
+                let mut out: Vec<f64> =
+                    sorted.iter().copied().take(n).collect();
+                let last_gap = match sorted.len() {
                     0 => 1.0,
-                    1 => ts[0],
-                    k => ts[k - 1] - ts[k - 2],
+                    1 => sorted[0],
+                    k => sorted[k - 1] - sorted[k - 2],
                 };
                 while out.len() < n {
                     let last = out.last().copied().unwrap_or(0.0);
@@ -1179,6 +1193,31 @@ mod tests {
 
         let tr = ArrivalProcess::Trace(vec![0.1, 0.3]).times(4, 0);
         assert_eq!(tr, vec![0.1, 0.3, 0.5, 0.7]);
+    }
+
+    #[test]
+    fn trace_single_element_extends_with_gap_ts0() {
+        // pinned semantics: a one-point trace [t] treats t as the gap
+        // from the origin, so the extension is t, 2t, 3t, …
+        let tr = ArrivalProcess::Trace(vec![0.4]).times(3, 0);
+        assert_eq!(tr, vec![0.4, 0.8, 1.2000000000000002]);
+    }
+
+    #[test]
+    fn trace_out_of_order_is_sorted_before_use() {
+        // a decreasing trace used to produce a negative last gap
+        // (clamped to 1e-9) and out-of-order arrivals; now the trace
+        // sorts first, so arrivals are nondecreasing and the extension
+        // gap comes from the sorted tail.
+        let tr = ArrivalProcess::Trace(vec![0.9, 0.1, 0.5]).times(5, 0);
+        assert_eq!(tr, vec![0.1, 0.5, 0.9, 1.3, 1.7000000000000002]);
+        assert!(tr.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn empty_trace_extends_with_unit_gap() {
+        let tr = ArrivalProcess::Trace(vec![]).times(3, 0);
+        assert_eq!(tr, vec![1.0, 2.0, 3.0]);
     }
 
     #[test]

@@ -144,6 +144,7 @@ fn fleet_churn_dump(e: &Engine) -> String {
                 }),
                 slo: None,
                 adapt: None,
+                threads: 1,
             },
         )
         .unwrap();
@@ -177,6 +178,7 @@ fn fleet_dump(e: &Engine) -> String {
                 churn: None,
                 slo: None,
                 adapt: None,
+                threads: 1,
             },
         )
         .unwrap();
@@ -237,6 +239,7 @@ fn fleet_slo_dump(e: &Engine) -> String {
                 churn: None,
                 slo: Some(ecore::workload::slo::SloConfig::default()),
                 adapt: None,
+                threads: 1,
             },
         )
         .unwrap();
@@ -304,6 +307,7 @@ fn fleet_adapt_dump(e: &Engine) -> String {
                     scale_interval_s: 0.05,
                     ..Default::default()
                 }),
+                threads: 1,
             },
         )
         .unwrap();
