@@ -1,10 +1,10 @@
-//! Churn simulator throughput: full open-loop discrete-event runs over
-//! the real deployed testbed with the lifecycle layer active — seeded
-//! crash/rejoin injection, per-probe membership updates, stale-view
-//! dispatch failures, and the resilience policies. The spread against
-//! `bench_openloop`'s saturated configuration is the pure cost of the
-//! churn machinery (failure timeline, probe events, copy accounting);
-//! the policy rows show what retrying and hedging cost on top.
+//! Observability-layer overhead: full open-loop discrete-event runs
+//! over the real deployed testbed at a saturating arrival rate, with
+//! the obs layer off (the `bench_openloop`-equivalent baseline), on at
+//! the default 50 ms series tick, and on at an aggressive 5 ms tick.
+//! Collection runs with an empty `out_dir` (collect-only mode) so the
+//! spread against the baseline is the pure cost of span folding and
+//! series bucketing, with no filesystem noise.
 
 use std::time::Instant;
 
@@ -13,12 +13,24 @@ use ecore::dataset::{coco, GtBox, Scene};
 use ecore::experiments::serve::deployed_store;
 use ecore::experiments::Harness;
 use ecore::gateway::{router_by_name, Gateway};
-use ecore::lifecycle::{ChurnConfig, ResiliencePolicy};
 use ecore::nodes::NodePool;
+use ecore::obs::ObsConfig;
 use ecore::util::bench::{black_box, Bench};
 use ecore::workload::openloop::{
     run_frames, ArrivalProcess, OpenLoopConfig,
 };
+
+/// Collect-only obs config at the given series tick.
+fn obs_at(tick_s: f64) -> ObsConfig {
+    ObsConfig {
+        tick_s,
+        span_head: 32,
+        span_tail: 32,
+        span_sample: 64,
+        seed: 7,
+        out_dir: String::new(),
+    }
+}
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
@@ -33,37 +45,12 @@ fn main() {
     let gts: Vec<Vec<GtBox>> =
         frames.iter().map(|s| s.gt.clone()).collect();
 
-    let mut b = Bench::new("churn");
-    let mut extras_owned: Vec<(String, f64)> = Vec::new();
-    for (name, churn) in [
-        ("no_churn", None),
-        (
-            "retry_avail80",
-            Some(ChurnConfig {
-                mtbf_s: 0.8,
-                mttr_s: 0.2,
-                probe_interval_s: 0.05,
-                probe_timeout_s: 0.02,
-                suspect_after: 1,
-                policy: ResiliencePolicy::Retry { budget: 4 },
-                retry_backoff_s: 0.05,
-                horizon_slack_s: 2.0,
-                ..Default::default()
-            }),
-        ),
-        (
-            "hedge_avail80",
-            Some(ChurnConfig {
-                mtbf_s: 0.8,
-                mttr_s: 0.2,
-                probe_interval_s: 0.05,
-                probe_timeout_s: 0.02,
-                suspect_after: 1,
-                policy: ResiliencePolicy::Hedge,
-                horizon_slack_s: 2.0,
-                ..Default::default()
-            }),
-        ),
+    let mut b = Bench::new("obs");
+    let mut extras: Vec<(String, f64)> = Vec::new();
+    for (name, obs) in [
+        ("obs_off", None),
+        ("obs_on_50ms", Some(obs_at(0.05))),
+        ("obs_on_5ms", Some(obs_at(0.005))),
     ] {
         let run_once = || {
             let pool = NodePool::deploy(
@@ -89,10 +76,10 @@ fn main() {
                     arrivals: ArrivalProcess::Poisson { rate_rps: 500.0 },
                     queue_capacity: 8,
                     seed: 3,
-                    churn: churn.clone(),
+                    churn: None,
                     slo: None,
                     adapt: None,
-                    obs: None,
+                    obs: obs.clone(),
                 },
             )
             .unwrap()
@@ -103,14 +90,16 @@ fn main() {
         let cold_wall = t0.elapsed().as_secs_f64();
         let events = report.offered + report.metrics.requests;
         println!(
-            "{:<16} {:>10.0} events/sec cold ({} events)",
+            "{:<14} {:>10.0} events/sec cold ({} events, {} served, {} dropped)",
             name,
             events as f64 / cold_wall.max(1e-9),
-            events
+            events,
+            report.metrics.requests,
+            report.dropped,
         );
         b.run(name, || {
             let report = run_once();
-            black_box(report.metrics.requests + report.lost())
+            black_box(report.metrics.requests + report.dropped)
         });
         // headline events/sec from the MEASURED MEDIAN run time (the
         // cold run above is warm-up, not the tracked number)
@@ -119,7 +108,7 @@ fn main() {
             .last()
             .expect("case just measured")
             .throughput_per_sec();
-        extras_owned.push((
+        extras.push((
             format!("events_per_sec_{name}"),
             events as f64 * runs_per_sec,
         ));
@@ -130,5 +119,5 @@ fn main() {
         "engine totals: {count} inferences, {:.1} ms mean",
         1000.0 * secs / count.max(1) as f64
     );
-    b.finish_json(&extras_owned);
+    b.finish_json(&extras);
 }

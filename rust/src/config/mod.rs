@@ -316,6 +316,16 @@ pub struct ExperimentConfig {
     pub adapt_rate_rps: f64,
     /// Adapt sweep: offered requests per cell.
     pub adapt_requests: usize,
+    /// Obs: virtual-time series bucket width (s).
+    pub obs_tick_s: f64,
+    /// Obs: spans of the first N requests are always retained.
+    pub obs_span_head: usize,
+    /// Obs: spans of the last N requests are always retained.
+    pub obs_span_tail: usize,
+    /// Obs: expected middle spans kept by the hash reservoir.
+    pub obs_span_sample: usize,
+    /// Obs: export directory ("" = collect without writing files).
+    pub obs_out: String,
 }
 
 impl Default for ExperimentConfig {
@@ -398,6 +408,11 @@ impl Default for ExperimentConfig {
             adapt_drift: vec![1.0, 2.0],
             adapt_rate_rps: 40.0,
             adapt_requests: 160,
+            obs_tick_s: 1.0,
+            obs_span_head: 32,
+            obs_span_tail: 32,
+            obs_span_sample: 64,
+            obs_out: "results/obs".to_string(),
         }
     }
 }
@@ -562,6 +577,14 @@ impl ExperimentConfig {
                 .f64_or("experiment.adapt_rate_rps", d.adapt_rate_rps),
             adapt_requests: t
                 .usize_or("experiment.adapt_requests", d.adapt_requests),
+            obs_tick_s: t.f64_or("experiment.obs_tick_s", d.obs_tick_s),
+            obs_span_head: t
+                .usize_or("experiment.obs_span_head", d.obs_span_head),
+            obs_span_tail: t
+                .usize_or("experiment.obs_span_tail", d.obs_span_tail),
+            obs_span_sample: t
+                .usize_or("experiment.obs_span_sample", d.obs_span_sample),
+            obs_out: t.str_or("experiment.obs_out", &d.obs_out),
         }
     }
 
@@ -687,6 +710,16 @@ impl ExperimentConfig {
             args.f64_or("adapt-rate", self.adapt_rate_rps);
         self.adapt_requests =
             args.usize_or("adapt-requests", self.adapt_requests);
+        self.obs_tick_s = args.f64_or("obs-tick", self.obs_tick_s);
+        self.obs_span_head =
+            args.usize_or("obs-span-head", self.obs_span_head);
+        self.obs_span_tail =
+            args.usize_or("obs-span-tail", self.obs_span_tail);
+        self.obs_span_sample =
+            args.usize_or("obs-span-sample", self.obs_span_sample);
+        if let Some(o) = args.get("obs-out") {
+            self.obs_out = o.to_string();
+        }
     }
 
     /// Materialize the churn keys into a [`ChurnConfig`] (the `serve
@@ -769,6 +802,27 @@ impl ExperimentConfig {
         };
         cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// Materialize the obs keys into an [`ObsConfig`] (the `serve
+    /// --obs` path and the obs smoke/bench drivers). The retention
+    /// reservoir seed derives from the run seed on its own stream, so
+    /// span sampling never perturbs the simulation's RNG draws.
+    ///
+    /// [`ObsConfig`]: crate::obs::ObsConfig
+    pub fn obs_config(&self) -> Result<crate::obs::ObsConfig> {
+        anyhow::ensure!(
+            self.obs_tick_s.is_finite() && self.obs_tick_s > 0.0,
+            "obs_tick_s must be finite and > 0"
+        );
+        Ok(crate::obs::ObsConfig {
+            tick_s: self.obs_tick_s,
+            span_head: self.obs_span_head,
+            span_tail: self.obs_span_tail,
+            span_sample: self.obs_span_sample,
+            seed: self.seed ^ 0x0B5,
+            out_dir: self.obs_out.clone(),
+        })
     }
 }
 
@@ -985,6 +1039,41 @@ routers = ["ED", "OB"]
         // bad values surface as typed errors
         c.adapt_alpha = 0.0;
         assert!(c.adapt_config().is_err());
+    }
+
+    #[test]
+    fn obs_keys_parse_override_and_materialize() {
+        let t = Table::parse(
+            "[experiment]\nobs_tick_s = 0.5\nobs_span_head = 8\nobs_out = \"out/obs\"\n",
+        )
+        .unwrap();
+        let mut c = ExperimentConfig::from_table(&t);
+        assert_eq!(c.obs_tick_s, 0.5);
+        assert_eq!(c.obs_span_head, 8);
+        assert_eq!(c.obs_out, "out/obs");
+        let d = ExperimentConfig::default();
+        assert_eq!(c.obs_span_tail, d.obs_span_tail);
+        assert_eq!(c.obs_span_sample, d.obs_span_sample);
+        // CLI wins over file
+        let args = crate::util::cli::Args::parse(
+            ["--obs-tick", "0.25", "--obs-out", "elsewhere"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        c.override_with(&args);
+        assert_eq!(c.obs_tick_s, 0.25);
+        assert_eq!(c.obs_out, "elsewhere");
+        // materializes into a validated ObsConfig
+        let oc = c.obs_config().unwrap();
+        assert_eq!(oc.tick_s, 0.25);
+        assert_eq!(oc.span_head, 8);
+        assert_eq!(oc.out_dir, "elsewhere");
+        assert_eq!(oc.seed, c.seed ^ 0x0B5);
+        // bad values surface as typed errors
+        c.obs_tick_s = 0.0;
+        assert!(c.obs_config().is_err());
+        c.obs_tick_s = f64::NAN;
+        assert!(c.obs_config().is_err());
     }
 
     #[test]

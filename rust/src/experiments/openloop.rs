@@ -41,6 +41,7 @@ fn run_cell(
             churn: None,
             slo: None,
             adapt: None,
+            obs: None,
         },
     )
     .map(|mut report| {

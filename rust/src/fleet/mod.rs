@@ -40,6 +40,7 @@ use crate::lifecycle::{
 };
 use crate::metrics::{RunMetrics, SloMetrics};
 use crate::nodes::{EdgeNode, NodeDown, NodePool, NodeResponse};
+use crate::obs::{ObsConfig, ObsShard, SPINE_SHARD};
 use crate::router::{PairId, PairKey, PairProfile, ProfileStore};
 use crate::runtime::Engine;
 use crate::util::json::Json;
@@ -162,6 +163,13 @@ pub struct FleetConfig {
     /// profile corrections plus energy-proportional autoscaling.
     /// `None` keeps the event stream bit-identical.
     pub adapt: Option<AdaptConfig>,
+    /// Observability (DESIGN.md §14): passive per-shard collectors
+    /// (plus one spine collector for run-level events) fold stage
+    /// transitions into span records and virtual-time series, exported
+    /// at end of run. Schedules zero events either way; `None`
+    /// collects nothing and keeps reports/traces bit-identical. The
+    /// merged export is byte-identical at any `threads` value.
+    pub obs: Option<ObsConfig>,
     /// Worker threads for the event engine ([`parallel::run_frames_threads`]):
     /// `0` or `1` runs the sequential shared-heap engine ([`run_frames`])
     /// unchanged; `> 1` partitions shards over that many workers, each
@@ -185,6 +193,7 @@ impl Default for FleetConfig {
             churn: None,
             slo: None,
             adapt: None,
+            obs: None,
             threads: 1,
         }
     }
@@ -264,6 +273,7 @@ impl<'e> FleetBuilder<'e> {
             churn: cfg.churn.clone(),
             slo: cfg.slo.clone(),
             adapt: cfg.adapt.clone(),
+            obs: cfg.obs.clone(),
             node_homes,
         })
     }
@@ -423,6 +433,8 @@ pub struct Fleet<'e> {
     /// Adaptation config the fleet was built with (each shard already
     /// carries its own live [`crate::adapt::AdaptRuntime`]).
     adapt: Option<AdaptConfig>,
+    /// Observability config the fleet was built with.
+    obs: Option<ObsConfig>,
     /// Global synthesis index → (owning shard, node identity in that
     /// shard's id space): how the ground-truth failure timeline
     /// addresses nodes.
@@ -743,6 +755,10 @@ struct SimState {
     makespan_s: f64,
     /// Per-shard batches under formation (always empty without SLOs).
     forming: Vec<BTreeMap<PairId, Forming>>,
+    /// Passive observability collectors (`None` = obs off): one per
+    /// shard plus a final spine collector ([`SPINE_SHARD`]) for
+    /// run-level events — placement sheds, retries, abandons.
+    obs: Option<Vec<ObsShard>>,
 }
 
 impl SimState {
@@ -758,6 +774,7 @@ impl SimState {
             peak_in_flight: 0,
             makespan_s: 0.0,
             forming: (0..k).map(|_| BTreeMap::new()).collect(),
+            obs: None,
         }
     }
 
@@ -768,6 +785,16 @@ impl SimState {
             kind,
         }));
         self.seq += 1;
+    }
+
+    /// Shard `s`'s obs collector, when obs is on.
+    fn obs_at(&mut self, s: usize) -> Option<&mut ObsShard> {
+        self.obs.as_mut().map(|v| &mut v[s])
+    }
+
+    /// The spine collector for run-level events, when obs is on.
+    fn obs_spine(&mut self) -> Option<&mut ObsShard> {
+        self.obs.as_mut().and_then(|v| v.last_mut())
     }
 }
 
@@ -831,6 +858,18 @@ pub fn run_frames(
         })
         .collect();
     let mut sim = SimState::new(k);
+    // Observability (DESIGN.md §14): one passive collector per shard
+    // plus a spine collector for run-level events (placement sheds,
+    // retries, abandons). `None` leaves the hot path untouched.
+    sim.obs = fleet.obs.as_ref().map(|c| {
+        let mut v: Vec<ObsShard> = (0..k)
+            .map(|s| ObsShard::new(c, s as u32, frames.len()))
+            .collect();
+        v.push(ObsShard::new(c, SPINE_SHARD, frames.len()));
+        v
+    });
+    let obs_t0 =
+        fleet.obs.as_ref().map(|_| std::time::Instant::now());
     let arrival_times = arrivals.times(frames.len(), seed);
     let horizon_s = arrival_times.last().copied().unwrap_or(0.0)
         + fleet
@@ -966,6 +1005,9 @@ pub fn run_frames(
                             if let Some(sr) = slo.as_mut() {
                                 sr.shed(idx);
                             }
+                            if let Some(o) = sim.obs_spine() {
+                                o.shed(idx, ev.t);
+                            }
                         }
                     }
                     continue;
@@ -974,6 +1016,19 @@ pub fn run_frames(
                 // dispatch policy decides which shard absorbs load, so
                 // each scaler tracks its own slice)
                 fleet.shards[s].adapt_arrival();
+                // admit + route land on the WINNING shard's collector
+                // (there is no standalone estimate step: every visited
+                // shard estimated inside `try_place`)
+                if let Some(o) = sim.obs_at(s) {
+                    o.admit(idx, ev.t, routed.estimate);
+                    o.route(
+                        idx,
+                        ev.t,
+                        i64::from(routed.pair_id.0),
+                        routed.cost.latency_s,
+                        routed.cost.energy_mwh,
+                    );
+                }
                 // SLO admission control: predicted completion on the
                 // placed shard already past the deadline → shed now
                 // instead of queueing doomed work (DESIGN.md §11).
@@ -988,6 +1043,9 @@ pub fn run_frames(
                     if ev.t + pred > deadline {
                         sim.dropped += 1;
                         sr.shed(idx);
+                        if let Some(o) = sim.obs_at(s) {
+                            o.shed(idx, ev.t);
+                        }
                         continue;
                     }
                     tag = SloTag {
@@ -1077,6 +1135,9 @@ pub fn run_frames(
                     tag,
                 )?;
                 if let Some(d) = dup {
+                    if let Some(o) = sim.obs_at(s) {
+                        o.hedge(idx, ev.t, i64::from(d.pair_id.0));
+                    }
                     admit_copy(
                         &mut fleet.shards[s],
                         s,
@@ -1133,6 +1194,16 @@ pub fn run_frames(
                     ch.est[idx] = Some((routed.estimate, routed.cost));
                 }
                 ch.state.retry_dispatched(idx);
+                // a re-placed retry re-routes but was admitted once
+                if let Some(o) = sim.obs_at(s) {
+                    o.route(
+                        idx,
+                        ev.t,
+                        i64::from(routed.pair_id.0),
+                        routed.cost.latency_s,
+                        routed.cost.energy_mwh,
+                    );
+                }
                 // retries bypass batch formation but keep their
                 // deadline for EDF and attainment accounting
                 let tag = match slo.as_ref() {
@@ -1180,6 +1251,14 @@ pub fn run_frames(
                 sim.in_flight[s] -= 1;
                 sim.total_in_flight -= 1;
                 sim.makespan_s = sim.makespan_s.max(ev.t);
+                let n_if = sim.in_flight[s];
+                if let Some(o) = sim.obs_at(s) {
+                    o.in_flight(ev.t, n_if);
+                }
+                // energy + arrival captured before `done.resp` is
+                // consumed by `finish_with_network` below
+                let (e2e_s, e_mwh) =
+                    (ev.t - done.arrival_s, done.resp.energy_mwh);
                 let winner = match churn.as_mut() {
                     Some(ch) => ch.state.copy_completed(
                         done.idx,
@@ -1210,6 +1289,24 @@ pub fn run_frames(
                     if let Some(sr) = slo.as_mut() {
                         sr.record_done(d_idx, d_class, ev.t);
                     }
+                    let on_time = match slo.as_ref() {
+                        Some(sr) => ev.t <= sr.deadlines[d_idx],
+                        None => true,
+                    };
+                    if let Some(o) = sim.obs_at(s) {
+                        o.finish(
+                            d_idx,
+                            ev.t,
+                            i64::from(pair.0),
+                            e2e_s,
+                            e_mwh,
+                            on_time,
+                        );
+                    }
+                } else if let Some(o) = sim.obs_at(s) {
+                    // a hedge loser burned energy without producing
+                    // the answer: attribute the waste where it ran
+                    o.hedge_loss(done.idx, ev.t, i64::from(pair.0), e_mwh);
                 }
                 start_next(
                     &mut fleet.shards[s],
@@ -1226,6 +1323,9 @@ pub fn run_frames(
                 let ch = churn.as_mut().expect("crash without churn");
                 let (s, pair) = ch.homes[node];
                 ch.state.crashes += 1;
+                if let Some(o) = sim.obs_at(s) {
+                    o.crash(ev.t);
+                }
                 let gw = &mut fleet.shards[s];
                 gw.pool_mut().set_health_id(pair, false);
                 if let Some(m) = gw.membership_mut() {
@@ -1246,6 +1346,9 @@ pub fn run_frames(
                 }
                 if let Some(m) = gw.membership_mut() {
                     m.ground_truth_changed(pair, true, ev.t);
+                }
+                if let Some(o) = sim.obs_at(s) {
+                    o.rejoin(ev.t);
                 }
             }
             EventKind::Probe { shard } => {
@@ -1294,6 +1397,27 @@ pub fn run_frames(
             }
             EventKind::ScaleTick { shard } => {
                 fleet.shards[shard].adapt_scale_tick(ev.t);
+                let powered = fleet.shards[shard]
+                    .adapt()
+                    .and_then(|a| a.scaler.as_ref())
+                    .map(|sc| sc.n_powered());
+                if let (Some(o), Some(n)) =
+                    (sim.obs_at(shard), powered)
+                {
+                    o.powered(ev.t, n);
+                }
+            }
+        }
+    }
+
+    if let Some(oc) = &fleet.obs {
+        let wall_s =
+            obs_t0.map_or(0.0, |t0| t0.elapsed().as_secs_f64());
+        if let Some(shards) = sim.obs.take() {
+            if let Err(e) =
+                crate::obs::export_run(oc, "fleet", shards, wall_s)
+            {
+                eprintln!("[obs] export failed: {e}");
             }
         }
     }
@@ -1423,8 +1547,16 @@ fn retry_or_abandon(
         Some(s) if retry_t > s.deadlines[idx] => {
             state.abandon(idx);
             s.shed(idx);
+            if let Some(o) = sim.obs_spine() {
+                o.abandon(idx, retry_t);
+            }
         }
-        _ => sim.push(retry_t, EventKind::Retry(idx)),
+        _ => {
+            if let Some(o) = sim.obs_spine() {
+                o.retry(idx, retry_t);
+            }
+            sim.push(retry_t, EventKind::Retry(idx));
+        }
     }
 }
 
@@ -1450,10 +1582,19 @@ fn admit_copy(
     sim.total_in_flight += 1;
     sim.peak_in_flight = sim.peak_in_flight.max(sim.total_in_flight);
     let pair = routed.pair_id;
-    push_pending(
-        sim.queues[shard].entry(pair).or_default(),
-        Pending { routed, idx, arrival_s: t, hedge, slo: tag },
-    );
+    let depth = {
+        let q = sim.queues[shard].entry(pair).or_default();
+        push_pending(
+            q,
+            Pending { routed, idx, arrival_s: t, hedge, slo: tag },
+        );
+        q.backlog.len() + usize::from(q.serving.is_some())
+    };
+    let n_if = sim.in_flight[shard];
+    if let Some(o) = sim.obs_at(shard) {
+        o.queue(idx, t, i64::from(pair.0), depth);
+        o.in_flight(t, n_if);
+    }
     start_next(gw, shard, frames, sim, churn, slo, pair, t)
 }
 
@@ -1487,7 +1628,7 @@ fn join_forming(
         - gw.predicted_completion_s(pair, t, 0.0))
     .max(t);
     let member_close = (t + window_s).min(latest_s);
-    let (flush_now, close_s) = {
+    let (flush_now, close_s, size) = {
         let f = sim.forming[shard].entry(pair).or_default();
         f.members.push(Pending {
             routed,
@@ -1497,8 +1638,17 @@ fn join_forming(
             slo: tag,
         });
         f.close_s = f.close_s.min(member_close);
-        (f.members.len() >= max_batch || f.close_s <= t, f.close_s)
+        (
+            f.members.len() >= max_batch || f.close_s <= t,
+            f.close_s,
+            f.members.len(),
+        )
     };
+    let n_if = sim.in_flight[shard];
+    if let Some(o) = sim.obs_at(shard) {
+        o.batch_form(idx, t, i64::from(pair.0), size);
+        o.in_flight(t, n_if);
+    }
     if flush_now {
         return flush_batch(gw, shard, frames, sim, churn, slo, pair, t);
     }
@@ -1602,6 +1752,15 @@ fn start_next(
         resp.energy_mwh = amortize(resp.energy_mwh, save_mwh);
     }
     let net_s = if p.slo.net { devices::NETWORK_S } else { 0.0 };
+    if let Some(o) = sim.obs_at(shard) {
+        o.serve(
+            p.idx,
+            start_s,
+            i64::from(pair.0),
+            resp.latency_s,
+            resp.energy_mwh,
+        );
+    }
     let token = sim.seq;
     sim.push(
         start_s + resp.latency_s + net_s,
@@ -1656,15 +1815,25 @@ fn lose_queued(
             idxs.push(p.idx);
         }
     }
+    let lost_any = !idxs.is_empty();
     for idx in idxs {
         gw.pool_mut().release_id(pair);
         sim.in_flight[shard] -= 1;
         sim.total_in_flight -= 1;
+        if let Some(o) = sim.obs_at(shard) {
+            o.loss(idx, now_s, i64::from(pair.0));
+        }
         match state.copy_lost(idx, now_s) {
             LossOutcome::RetryAt(t) => {
                 retry_or_abandon(sim, state, slo.as_mut(), idx, t)
             }
             LossOutcome::Absorbed | LossOutcome::Lost => {}
+        }
+    }
+    if lost_any {
+        let n_if = sim.in_flight[shard];
+        if let Some(o) = sim.obs_at(shard) {
+            o.in_flight(now_s, n_if);
         }
     }
 }

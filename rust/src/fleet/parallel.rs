@@ -89,6 +89,7 @@ use crate::lifecycle::{
 };
 use crate::metrics::{RunMetrics, SloMetrics};
 use crate::nodes::NodeDown;
+use crate::obs::{ObsShard, SPINE_SHARD};
 use crate::router::{PairId, ProfileStore};
 use crate::runtime::Engine;
 use crate::workload::openloop::ArrivalProcess;
@@ -267,6 +268,10 @@ struct Coord {
     /// `(t, energy)` of losing hedge completions — summed in time
     /// order at the end (see module docs).
     waste: Vec<(f64, f64)>,
+    /// Spine obs collector ([`SPINE_SHARD`]) for run-level events:
+    /// placement sheds, retries, abandons — all decided under this
+    /// lock, exactly where the sequential engine records them.
+    obs_spine: Option<ObsShard>,
     done: bool,
 }
 
@@ -313,6 +318,11 @@ struct ShardSlot<'e> {
     /// Pool-ordered node identities (probe snapshots); empty without
     /// churn.
     pairs: Vec<PairId>,
+    /// This shard's obs collector (`None` = obs off). Shard-local
+    /// events fold here in the worker's commit order, which the
+    /// protocol guarantees equals the sequential engine's per-shard
+    /// event order — so the merged export is byte-identical.
+    obs: Option<ObsShard>,
 }
 
 /// A worker's private event machinery.
@@ -339,6 +349,7 @@ struct ShardOut {
     fallbacks: usize,
     membership: Option<Membership>,
     adapt: Option<AdaptReport>,
+    obs: Option<ObsShard>,
 }
 
 /// Sets `done` when dropped — including during a panic unwind, where a
@@ -375,6 +386,8 @@ pub fn run_frames_threads(
         );
     }
     anyhow::ensure!(frames.len() == pseudo_gt.len());
+    let obs_t0 =
+        cfg.obs.as_ref().map(|_| std::time::Instant::now());
     // validations (and the per-node synthesis) run up front on the
     // main thread, so config errors surface before any thread spawns
     let synth = synth_nodes(p.base, cfg)?;
@@ -514,6 +527,10 @@ pub fn run_frames_threads(
             .as_ref()
             .map(|s| SloMetrics::new(&s.cfg.class_names())),
         waste: Vec::new(),
+        obs_spine: cfg
+            .obs
+            .as_ref()
+            .map(|c| ObsShard::new(c, SPINE_SHARD, frames.len())),
         done: false,
     });
 
@@ -565,7 +582,22 @@ pub fn run_frames_threads(
     }
     outs.sort_by_key(|o| o.s);
 
-    let coord = coord.into_inner().expect("coordinator poisoned");
+    let mut coord = coord.into_inner().expect("coordinator poisoned");
+    if let Some(oc) = &cfg.obs {
+        // per-shard collectors in shard order, spine last — the same
+        // logical layout the sequential engine exports, so the merged
+        // files are byte-identical at any thread count
+        let mut shards: Vec<ObsShard> =
+            outs.iter_mut().filter_map(|o| o.obs.take()).collect();
+        shards.extend(coord.obs_spine.take());
+        let wall_s =
+            obs_t0.map_or(0.0, |t0| t0.elapsed().as_secs_f64());
+        if let Err(e) =
+            crate::obs::export_run(oc, "fleet", shards, wall_s)
+        {
+            eprintln!("[obs] export failed: {e}");
+        }
+    }
     let mut waste = coord.waste;
     waste.sort_by(|a, b| a.0.total_cmp(&b.0));
     let churn_report = coord.churn.map(|mut ch| {
@@ -666,6 +698,10 @@ fn worker_run(
             queues: BTreeMap::new(),
             forming: BTreeMap::new(),
             pairs,
+            obs: cfg
+                .obs
+                .as_ref()
+                .map(|c| ObsShard::new(c, s as u32, ro.frames.len())),
             gw,
         });
     }
@@ -849,6 +885,7 @@ fn worker_run(
             fallbacks: sl.gw.fallbacks - sl.fallbacks_before,
             membership: sl.gw.membership().cloned(),
             adapt: sl.gw.adapt_report(makespan_s),
+            obs: sl.obs,
             metrics: sl.metrics,
         })
         .collect())
@@ -906,6 +943,9 @@ fn walk_exhausted(
                 m.record_shed(sr.cfg.class_of(idx));
             }
         }
+        if let Some(o) = c.obs_spine.as_mut() {
+            o.shed(idx, t);
+        }
     }
 }
 
@@ -927,8 +967,16 @@ fn retry_or_abandon(
             if let Some(m) = c.slo.as_mut() {
                 m.record_shed(sr.cfg.class_of(idx));
             }
+            if let Some(o) = c.obs_spine.as_mut() {
+                o.abandon(idx, retry_t);
+            }
         }
-        _ => c.push_retry(retry_t, idx),
+        _ => {
+            if let Some(o) = c.obs_spine.as_mut() {
+                o.retry(idx, retry_t);
+            }
+            c.push_retry(retry_t, idx);
+        }
     }
 }
 
@@ -969,6 +1017,9 @@ fn handle_local(
                     .state
                     .crashes += 1;
             }
+            if let Some(o) = sl.obs.as_mut() {
+                o.crash(t);
+            }
             sl.gw.pool_mut().set_health_id(pair, false);
             if let Some(m) = sl.gw.membership_mut() {
                 m.ground_truth_changed(pair, false, t);
@@ -987,6 +1038,9 @@ fn handle_local(
             }
             if let Some(m) = sl.gw.membership_mut() {
                 m.ground_truth_changed(pair, true, t);
+            }
+            if let Some(o) = sl.obs.as_mut() {
+                o.rejoin(t);
             }
             Ok(())
         }
@@ -1029,6 +1083,16 @@ fn handle_local(
         LKind::ScaleTick { shard } => {
             let i = slot_of(slots, shard);
             slots[i].gw.adapt_scale_tick(t);
+            let powered = slots[i]
+                .gw
+                .adapt()
+                .and_then(|a| a.scaler.as_ref())
+                .map(|sc| sc.n_powered());
+            if let (Some(o), Some(n)) =
+                (slots[i].obs.as_mut(), powered)
+            {
+                o.powered(t, n);
+            }
             Ok(())
         }
     }
@@ -1059,7 +1123,10 @@ fn on_completion(
     }
     let done = q.serving.take().expect("token just matched");
     sl.gw.pool_mut().release_id(pair);
-    let winner = {
+    // energy + arrival captured before `done.resp` is consumed by
+    // `finish_with_network` below
+    let (e2e_s, e_mwh) = (t - done.arrival_s, done.resp.energy_mwh);
+    let (winner, n_if) = {
         let mut c = coord.lock().expect("coordinator poisoned");
         c.in_flight[sl.s] -= 1;
         c.total_in_flight -= 1;
@@ -1084,8 +1151,11 @@ fn on_completion(
                 );
             }
         }
-        winner
+        (winner, c.in_flight[sl.s])
     };
+    if let Some(o) = sl.obs.as_mut() {
+        o.in_flight(t, n_if);
+    }
     if winner {
         let queue_delay_s = (done.start_s
             - (done.arrival_s + done.routed.cost.latency_s))
@@ -1100,6 +1170,24 @@ fn on_completion(
             net_s,
             &mut sl.metrics,
         );
+        let on_time = match ro.slo.as_ref() {
+            Some(sr) => t <= sr.deadlines[done.idx],
+            None => true,
+        };
+        if let Some(o) = sl.obs.as_mut() {
+            o.finish(
+                done.idx,
+                t,
+                i64::from(pair.0),
+                e2e_s,
+                e_mwh,
+                on_time,
+            );
+        }
+    } else if let Some(o) = sl.obs.as_mut() {
+        // a hedge loser burned energy without producing the answer:
+        // attribute the waste where it ran
+        o.hedge_loss(done.idx, t, i64::from(pair.0), e_mwh);
     }
     start_next(sl, wsim, ro, coord, pair, t)
 }
@@ -1146,6 +1234,15 @@ fn start_next(
         resp.energy_mwh = amortize(resp.energy_mwh, save_mwh);
     }
     let net_s = if p.slo.net { devices::NETWORK_S } else { 0.0 };
+    if let Some(o) = sl.obs.as_mut() {
+        o.serve(
+            p.idx,
+            start_s,
+            i64::from(pair.0),
+            resp.latency_s,
+            resp.energy_mwh,
+        );
+    }
     let token = wsim.ord;
     wsim.push_dynamic(
         start_s + resp.latency_s + net_s,
@@ -1198,11 +1295,15 @@ fn lose_queued(
             idxs.push(p.idx);
         }
     }
+    let lost_any = !idxs.is_empty();
     let mut c = coord.lock().expect("coordinator poisoned");
     for idx in idxs {
         sl.gw.pool_mut().release_id(pair);
         c.in_flight[sl.s] -= 1;
         c.total_in_flight -= 1;
+        if let Some(o) = sl.obs.as_mut() {
+            o.loss(idx, now_s, i64::from(pair.0));
+        }
         let outcome = c
             .churn
             .as_mut()
@@ -1214,6 +1315,12 @@ fn lose_queued(
                 retry_or_abandon(&mut c, ro, idx, rt)
             }
             LossOutcome::Absorbed | LossOutcome::Lost => {}
+        }
+    }
+    if lost_any {
+        let n_if = c.in_flight[sl.s];
+        if let Some(o) = sl.obs.as_mut() {
+            o.in_flight(now_s, n_if);
         }
     }
 }
@@ -1233,17 +1340,26 @@ fn admit_copy(
 ) -> Result<()> {
     let admitted = sl.gw.pool_mut().acquire_id(routed.pair_id);
     debug_assert!(admitted, "route() returned a pair without a free slot");
-    {
+    let n_if = {
         let mut c = coord.lock().expect("coordinator poisoned");
         c.in_flight[sl.s] += 1;
         c.total_in_flight += 1;
         c.peak_in_flight = c.peak_in_flight.max(c.total_in_flight);
-    }
+        c.in_flight[sl.s]
+    };
     let pair = routed.pair_id;
-    push_pending(
-        sl.queues.entry(pair).or_default(),
-        Pending { routed, idx, arrival_s: t, hedge, slo: tag },
-    );
+    let depth = {
+        let q = sl.queues.entry(pair).or_default();
+        push_pending(
+            q,
+            Pending { routed, idx, arrival_s: t, hedge, slo: tag },
+        );
+        q.backlog.len() + usize::from(q.serving.is_some())
+    };
+    if let Some(o) = sl.obs.as_mut() {
+        o.queue(idx, t, i64::from(pair.0), depth);
+        o.in_flight(t, n_if);
+    }
     start_next(sl, wsim, ro, coord, pair, t)
 }
 
@@ -1263,12 +1379,13 @@ fn join_forming(
 ) -> Result<()> {
     let admitted = sl.gw.pool_mut().acquire_id(routed.pair_id);
     debug_assert!(admitted, "route() returned a pair without a free slot");
-    {
+    let n_if = {
         let mut c = coord.lock().expect("coordinator poisoned");
         c.in_flight[sl.s] += 1;
         c.total_in_flight += 1;
         c.peak_in_flight = c.peak_in_flight.max(c.total_in_flight);
-    }
+        c.in_flight[sl.s]
+    };
     let pair = routed.pair_id;
     let (window_s, max_batch) = {
         let sr = ro.slo.as_ref().expect("forming without slo");
@@ -1278,7 +1395,7 @@ fn join_forming(
         - sl.gw.predicted_completion_s(pair, t, 0.0))
     .max(t);
     let member_close = (t + window_s).min(latest_s);
-    let (flush_now, close_s) = {
+    let (flush_now, close_s, size) = {
         let f = sl.forming.entry(pair).or_default();
         f.members.push(Pending {
             routed,
@@ -1288,8 +1405,16 @@ fn join_forming(
             slo: tag,
         });
         f.close_s = f.close_s.min(member_close);
-        (f.members.len() >= max_batch || f.close_s <= t, f.close_s)
+        (
+            f.members.len() >= max_batch || f.close_s <= t,
+            f.close_s,
+            f.members.len(),
+        )
     };
+    if let Some(o) = sl.obs.as_mut() {
+        o.batch_form(idx, t, i64::from(pair.0), size);
+        o.in_flight(t, n_if);
+    }
     if flush_now {
         return flush_batch(sl, wsim, ro, coord, pair, t);
     }
@@ -1354,6 +1479,19 @@ fn finalize_arrival(
 ) -> Result<()> {
     // the winning shard's rate EWMA sees the demand
     sl.gw.adapt_arrival();
+    // admit + route land on the WINNING shard's collector (there is no
+    // standalone estimate step: every visited shard estimated inside
+    // its own `route_at` during the walk)
+    if let Some(o) = sl.obs.as_mut() {
+        o.admit(idx, t, routed.estimate);
+        o.route(
+            idx,
+            t,
+            i64::from(routed.pair_id.0),
+            routed.cost.latency_s,
+            routed.cost.energy_mwh,
+        );
+    }
     // SLO admission control: predicted completion on the placed shard
     // already past the deadline → shed now instead of queueing doomed
     // work (DESIGN.md §11)
@@ -1370,6 +1508,9 @@ fn finalize_arrival(
             c.dropped += 1;
             if let Some(m) = c.slo.as_mut() {
                 m.record_shed(sr.cfg.class_of(idx));
+            }
+            if let Some(o) = sl.obs.as_mut() {
+                o.shed(idx, t);
             }
             return Ok(());
         }
@@ -1432,6 +1573,9 @@ fn finalize_arrival(
     }
     admit_copy(sl, wsim, ro, coord, routed, idx, t, false, tag)?;
     if let Some(d) = dup {
+        if let Some(o) = sl.obs.as_mut() {
+            o.hedge(idx, t, i64::from(d.pair_id.0));
+        }
         admit_copy(sl, wsim, ro, coord, d, idx, t, true, tag)?;
     }
     Ok(())
@@ -1456,6 +1600,16 @@ fn finalize_retry(
             ch.est[idx] = Some((routed.estimate, routed.cost));
         }
         ch.state.retry_dispatched(idx);
+    }
+    // a re-placed retry re-routes but was admitted once
+    if let Some(o) = sl.obs.as_mut() {
+        o.route(
+            idx,
+            t,
+            i64::from(routed.pair_id.0),
+            routed.cost.latency_s,
+            routed.cost.energy_mwh,
+        );
     }
     let tag = match ro.slo.as_ref() {
         Some(sr) => SloTag {

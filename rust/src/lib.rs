@@ -31,6 +31,9 @@
 //! * [`fleet`] — multi-gateway sharded serving: synthesized N-node
 //!   fleets partitioned over K shard gateways with cross-shard fallback.
 //! * [`metrics`] — energy/latency/accuracy accounting and reports.
+//! * [`obs`] — option-gated observability: request span tracing,
+//!   virtual-time series metrics, deterministic per-shard merge, and
+//!   streaming JSONL/prom export.
 //! * [`experiments`] — one driver per paper table/figure, plus the
 //!   open-loop saturation and fleet sweeps.
 
@@ -47,6 +50,7 @@ pub mod lifecycle;
 pub mod metrics;
 pub mod models;
 pub mod nodes;
+pub mod obs;
 pub mod profiling;
 pub mod router;
 pub mod runtime;

@@ -10,7 +10,10 @@
 //!               `--churn` adds node crashes/rejoins with probe-driven
 //!               membership and a resilience policy (either mode),
 //!               `--adapt` turns on telemetry-driven profile correction
-//!               and energy-proportional autoscaling (either mode)
+//!               and energy-proportional autoscaling (either mode),
+//!               `--obs` turns on span tracing + virtual-time metrics
+//!               with streaming export (either mode)
+//!   trace       pretty-print an exported span trace (spans.jsonl)
 //!   list        list models, devices, routers
 //!
 //! Common options: --delta <mAP pts> --images <n> --per-group <n>
@@ -30,7 +33,9 @@
 //! adapt options: --adapt --adapt-alpha <f> --adapt-no-scale
 //! --adapt-interval <s> --adapt-publish-every <n>, and for the sweep
 //! --adapt-routers a,b --adapt-drift a,b --adapt-rate <req/s>
-//! --adapt-requests <n>
+//! --adapt-requests <n>; obs options: --obs --obs-tick <s>
+//! --obs-out <dir> --obs-span-head <n> --obs-span-tail <n>
+//! --obs-span-sample <n>
 
 use anyhow::Result;
 
@@ -60,6 +65,8 @@ USAGE:
                    [--batch-window S] [--max-batch N]
                    [--adapt] [--adapt-alpha F] [--adapt-no-scale]
                    [--adapt-interval S]
+                   [--obs] [--obs-tick S] [--obs-out DIR]
+  ecore trace      [--obs-out DIR] [--idx N] [--kind NAME] [--limit N]
   ecore list
 
 experiments: fig2 fig4 fig5 table1 fig6 fig7 fig8 fig9 overhead openloop
@@ -151,6 +158,11 @@ fn main() -> Result<()> {
             } else {
                 None
             };
+            let obs_cfg = if args.flag("obs") {
+                Some(h.cfg.obs_config()?)
+            } else {
+                None
+            };
             if args.flag("fleet") {
                 let dispatch_s =
                     args.str_or("dispatch", &h.cfg.fleet_dispatch);
@@ -173,6 +185,7 @@ fn main() -> Result<()> {
                     churn: churn_cfg.clone(),
                     slo: slo_cfg.clone(),
                     adapt: adapt_cfg.clone(),
+                    obs: obs_cfg.clone(),
                     threads: h.cfg.fleet_threads,
                 };
                 let frames: Vec<ecore::dataset::Scene> =
@@ -236,12 +249,18 @@ fn main() -> Result<()> {
                 if let Some(a) = &report.adapt {
                     println!("{}", a.summary());
                 }
+                if let Some(o) = &obs_cfg {
+                    if !o.out_dir.is_empty() {
+                        println!("obs export: {}", o.out_dir);
+                    }
+                }
                 return Ok(());
             }
             if args.flag("open-loop")
                 || args.flag("churn")
                 || args.flag("slo")
                 || args.flag("adapt")
+                || args.flag("obs")
             {
                 let mut gw = ecore::experiments::serve::build_gateway(
                     &h,
@@ -262,6 +281,7 @@ fn main() -> Result<()> {
                         churn: churn_cfg,
                         slo: slo_cfg,
                         adapt: adapt_cfg,
+                        obs: obs_cfg.clone(),
                     },
                 )?;
                 let m = &report.metrics;
@@ -301,6 +321,11 @@ fn main() -> Result<()> {
                 if let Some(a) = &report.adapt {
                     println!("{}", a.summary());
                 }
+                if let Some(o) = &obs_cfg {
+                    if !o.out_dir.is_empty() {
+                        println!("obs export: {}", o.out_dir);
+                    }
+                }
                 return Ok(());
             }
             let m = ecore::experiments::serve::run_router_on_dataset(
@@ -309,6 +334,7 @@ fn main() -> Result<()> {
             ecore::experiments::serve::print_panel("serve", &[m]);
             Ok(())
         }
+        "trace" => trace_cmd(&args, &cfg),
         "list" => {
             let h = Harness::new(cfg)?;
             println!("experiments: {}", ALL_EXPERIMENTS.join(" "));
@@ -341,6 +367,71 @@ fn main() -> Result<()> {
             std::process::exit(2);
         }
     }
+}
+
+/// `ecore trace`: pretty-print an exported span trace. Reads
+/// `<dir>/spans.jsonl` (dir from `--obs-out`, falling back to the
+/// configured obs output directory) and prints one line per retained
+/// event, optionally filtered by request (`--idx`) and event kind
+/// (`--kind`). `--limit N` stops after N requests (0 = all).
+fn trace_cmd(args: &Args, cfg: &ExperimentConfig) -> Result<()> {
+    let dir = args.str_or("obs-out", &cfg.obs_out);
+    let path = std::path::Path::new(&dir).join("spans.jsonl");
+    let text = std::fs::read_to_string(&path).map_err(|e| {
+        anyhow::anyhow!(
+            "cannot read {}: {e} (run `ecore serve --obs` first)",
+            path.display()
+        )
+    })?;
+    let want_idx = args.get("idx").and_then(|v| v.parse::<f64>().ok());
+    let want_kind = args.get("kind");
+    let limit = args.usize_or("limit", 0);
+    let mut shown = 0usize;
+    for line in text.lines().filter(|l| !l.trim().is_empty()) {
+        let v = ecore::util::json::parse(line)?;
+        let idx = v.req("idx")?.as_f64().unwrap_or(-1.0);
+        if want_idx.is_some_and(|w| w != idx) {
+            continue;
+        }
+        let events = v.req("events")?.as_arr().unwrap_or(&[]);
+        let mut rows: Vec<String> = Vec::new();
+        for e in events {
+            let kind = e.req("kind")?.as_str().unwrap_or("?");
+            if want_kind.is_some_and(|w| w != kind) {
+                continue;
+            }
+            let t = e.req("t")?.as_f64().unwrap_or(f64::NAN);
+            let shard = e.req("shard")?.as_f64().unwrap_or(-1.0);
+            let pair = e.req("pair")?.as_f64().unwrap_or(-1.0);
+            let vv = e.req("v")?.as_f64().unwrap_or(0.0);
+            let ee = e.req("e")?.as_f64().unwrap_or(0.0);
+            // run-level events carry the spine sentinel shard id
+            let shard_s = if shard == f64::from(u32::MAX) {
+                "spine".to_string()
+            } else {
+                format!("{shard:.0}")
+            };
+            rows.push(format!(
+                "  {t:>12.6}  {kind:<10} shard={shard_s:<5} \
+                 pair={pair:.0} v={vv} e={ee}"
+            ));
+        }
+        if rows.is_empty() {
+            continue;
+        }
+        println!("req {idx:.0}:");
+        for r in rows {
+            println!("{r}");
+        }
+        shown += 1;
+        if limit > 0 && shown >= limit {
+            break;
+        }
+    }
+    if shown == 0 {
+        println!("no spans matched");
+    }
+    Ok(())
 }
 
 fn print_slo(s: &ecore::metrics::SloMetrics) {

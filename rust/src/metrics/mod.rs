@@ -294,6 +294,17 @@ impl SloMetrics {
     }
 }
 
+/// One fixed-width table cell. Non-finite values (NaN mAP on an
+/// empty run, NaN percentiles, inf from a degenerate divide) render
+/// as `-` at the same width so the column layout never breaks.
+fn cell(v: f64, width: usize, prec: usize) -> String {
+    if v.is_finite() {
+        format!("{v:>width$.prec$}")
+    } else {
+        format!("{:>width$}", "-")
+    }
+}
+
 /// Render a comparison table (one row per run) the way the paper's
 /// figures report: mAP, total latency, dynamic energy, gateway overhead.
 pub fn render_table(runs: &[&RunMetrics]) -> String {
@@ -310,14 +321,14 @@ pub fn render_table(runs: &[&RunMetrics]) -> String {
     ));
     for r in runs {
         out.push_str(&format!(
-            "{:<6} {:>8.2} {:>12.2} {:>12.2} {:>12.3} {:>12.2} {:>8.2}\n",
+            "{:<6} {} {} {} {} {} {}\n",
             r.label,
-            r.map(),
-            r.total_energy_mwh(),
-            r.total_latency_s,
-            r.gateway_energy_mwh,
-            r.gateway_latency_s,
-            r.mean_estimation_error(),
+            cell(r.map(), 8, 2),
+            cell(r.total_energy_mwh(), 12, 2),
+            cell(r.total_latency_s, 12, 2),
+            cell(r.gateway_energy_mwh, 12, 3),
+            cell(r.gateway_latency_s, 12, 2),
+            cell(r.mean_estimation_error(), 8, 2),
         ));
     }
     out
@@ -456,5 +467,29 @@ mod tests {
         assert!(t.contains("LE"));
         assert!(t.contains("HMG"));
         assert_eq!(t.lines().count(), 3);
+    }
+
+    #[test]
+    fn table_survives_empty_and_nonfinite_runs() {
+        // No runs at all: just the header, no panic.
+        assert_eq!(render_table(&[]).lines().count(), 1);
+
+        // An untouched run (NaN mAP from zero images) and a run with
+        // NaN/inf metrics must render `-` cells, never NaN/inf text,
+        // and must keep every row at the header's width.
+        let empty = RunMetrics::new("empty");
+        let mut bad = RunMetrics::new("bad");
+        bad.total_latency_s = f64::NAN;
+        bad.gateway_energy_mwh = f64::INFINITY;
+        bad.gateway_latency_s = f64::NEG_INFINITY;
+        let t = render_table(&[&empty, &bad]);
+        assert!(!t.contains("NaN"), "table leaked NaN: {t}");
+        assert!(!t.contains("inf"), "table leaked inf: {t}");
+        let widths: Vec<usize> =
+            t.lines().map(str::len).collect();
+        assert!(
+            widths.iter().all(|w| *w == widths[0]),
+            "ragged columns: {widths:?}\n{t}"
+        );
     }
 }

@@ -1,0 +1,839 @@
+//! Observability layer: request span tracing, virtual-time series
+//! metrics, and deterministic streaming export (DESIGN.md §14).
+//!
+//! The layer is **purely passive**: collectors fold stage transitions
+//! the serving engines already perform — obs schedules zero simulator
+//! events, and when disabled (`obs: None` on the driver configs) the
+//! hot path allocates nothing and every pre-obs golden trace stays
+//! byte-identical.
+//!
+//! Determinism contract: an exported span/series file is a pure
+//! function of the virtual-time event stream. Each record carries its
+//! full identity `(idx, t, kind, shard, pair)`, and export sorts all
+//! records by that canonical key before grouping — so it does not
+//! matter *which* collector a record landed in (a worker shard of the
+//! parallel engine vs the sequential loop), only that the record's
+//! field values match. Under the watermark protocol of DESIGN.md §13
+//! the per-shard event sequences are identical at any `--threads`,
+//! which makes the exported bytes identical too. Wall-clock
+//! self-profiling (events/sec) is inherently thread-dependent and is
+//! therefore printed to stderr only, never into an exported file.
+
+use std::cmp::Ordering;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::fs;
+use std::path::Path;
+
+use crate::util::json::{write_num, write_str};
+
+/// Shard id used for spine-level records: events that belong to the
+/// run rather than to one shard gateway (placement-failure sheds,
+/// retry scheduling, abandons). Both the sequential and the parallel
+/// fleet engines tag these `SPINE_SHARD`, so the exported records
+/// agree regardless of where they were collected. Sorts after every
+/// real shard.
+pub const SPINE_SHARD: u32 = u32::MAX;
+
+/// Number of log-scale latency histogram buckets per series bucket.
+pub const LAT_BUCKETS: usize = 16;
+
+/// Span stage-transition kinds. Declaration order is the canonical
+/// sort rank used to order same-time records of one request, so two
+/// engines emitting the same records in different collector order
+/// still export identical lines.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SpanKind {
+    /// Request admitted into the driver (v = estimator group/count).
+    Admit,
+    /// Routing decision (pair chosen; v = predicted latency cost,
+    /// e = predicted energy cost).
+    Route,
+    /// Shed at admission (SLO budget blown or no endpoint).
+    Shed,
+    /// Hedge copy dispatched to a second pair.
+    Hedge,
+    /// Joined a forming batch (v = batch size after joining).
+    BatchForm,
+    /// Entered a node queue (v = queue depth after entry).
+    Queue,
+    /// Service started (v = response latency, e = response energy).
+    Serve,
+    /// Request finished (v = end-to-end latency, e = energy;
+    /// on-time completions fold into the attainment series).
+    Finish,
+    /// Hedge copy that lost the race (e = energy it still burned).
+    HedgeLoss,
+    /// In-flight copy lost to a node crash.
+    Loss,
+    /// Retry scheduled after a loss.
+    Retry,
+    /// Abandoned (retry budget or deadline exhausted).
+    Abandon,
+}
+
+/// Every kind in canonical rank order (drives per-kind totals).
+pub const KINDS: [SpanKind; SpanKind::COUNT] = [
+    SpanKind::Admit,
+    SpanKind::Route,
+    SpanKind::Shed,
+    SpanKind::Hedge,
+    SpanKind::BatchForm,
+    SpanKind::Queue,
+    SpanKind::Serve,
+    SpanKind::Finish,
+    SpanKind::HedgeLoss,
+    SpanKind::Loss,
+    SpanKind::Retry,
+    SpanKind::Abandon,
+];
+
+impl SpanKind {
+    /// Number of kinds (size of the per-kind totals array).
+    pub const COUNT: usize = 12;
+
+    /// Stable JSON/prom name of the kind.
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Admit => "admit",
+            SpanKind::Route => "route",
+            SpanKind::Shed => "shed",
+            SpanKind::Hedge => "hedge",
+            SpanKind::BatchForm => "batch",
+            SpanKind::Queue => "queue",
+            SpanKind::Serve => "serve",
+            SpanKind::Finish => "finish",
+            SpanKind::HedgeLoss => "hedge_loss",
+            SpanKind::Loss => "loss",
+            SpanKind::Retry => "retry",
+            SpanKind::Abandon => "abandon",
+        }
+    }
+}
+
+/// One retained span record: a stage transition of request `idx` at
+/// virtual time `t`. `pair` is the interned `PairId` as a signed
+/// value (-1 when no pair is involved); `v`/`e` are the kind-specific
+/// value and energy payloads documented on [`SpanKind`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SpanRec {
+    /// Request index (arrival order).
+    pub idx: u64,
+    /// Virtual time of the transition (s).
+    pub t: f64,
+    /// Stage-transition kind.
+    pub kind: SpanKind,
+    /// Shard gateway the event belongs to ([`SPINE_SHARD`] for
+    /// run-level events).
+    pub shard: u32,
+    /// Interned pair id, or -1.
+    pub pair: i64,
+    /// Kind-specific value payload.
+    pub v: f64,
+    /// Kind-specific energy payload (mWh).
+    pub e: f64,
+}
+
+/// Observability configuration (materialized from the `obs_*` config
+/// keys by `ExperimentConfig::obs_config`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ObsConfig {
+    /// Virtual-time series bucket width (s).
+    pub tick_s: f64,
+    /// Always retain spans of the first `span_head` requests.
+    pub span_head: usize,
+    /// Always retain spans of the last `span_tail` requests.
+    pub span_tail: usize,
+    /// Expected number of middle requests retained by the hash
+    /// reservoir (0 disables middle sampling).
+    pub span_sample: usize,
+    /// Seed of the retention reservoir (independent of the run seed
+    /// streams — obs must not perturb the simulation).
+    pub seed: u64,
+    /// Export directory; empty string = collect but never touch the
+    /// filesystem (bench / equivalence-test mode).
+    pub out_dir: String,
+}
+
+/// One aggregation bucket of the virtual-time series: integer event
+/// counters, an order-stable energy sum, a log-scale latency
+/// histogram, and last-value gauges.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct BucketAgg {
+    /// Requests admitted.
+    pub admits: u64,
+    /// Service starts.
+    pub serves: u64,
+    /// Completions.
+    pub finishes: u64,
+    /// Completions inside their deadline (= finishes when no SLO).
+    pub ontime: u64,
+    /// Admission sheds.
+    pub sheds: u64,
+    /// Retries scheduled.
+    pub retries: u64,
+    /// Hedge copies dispatched.
+    pub hedges: u64,
+    /// Copies lost to crashes.
+    pub losses: u64,
+    /// Requests abandoned.
+    pub abandons: u64,
+    /// Batch-join events.
+    pub batches: u64,
+    /// Node crashes observed.
+    pub crashes: u64,
+    /// Node rejoins observed.
+    pub rejoins: u64,
+    /// Served energy folded in per-shard event order (mWh).
+    pub energy_mwh: f64,
+    /// End-to-end latency histogram (see [`lat_bucket`]).
+    pub lat_hist: [u64; LAT_BUCKETS],
+    /// Last in-flight gauge value seen in this bucket.
+    pub in_flight_last: Option<u64>,
+    /// Last powered-node gauge value seen in this bucket.
+    pub powered_last: Option<u64>,
+}
+
+/// Log-scale latency histogram bucket for `lat_s` seconds: bucket 0
+/// is `< 1e-4 s`, each next bucket doubles the threshold, and bucket
+/// 15 is the overflow bucket. Implemented by loop-doubling (not
+/// `log2`) so the bucket edges are exact binary floats on every
+/// platform; non-finite samples land in the overflow bucket.
+pub fn lat_bucket(lat_s: f64) -> usize {
+    if !lat_s.is_finite() {
+        return LAT_BUCKETS - 1;
+    }
+    let mut th = 1e-4;
+    let mut i = 0;
+    while i < LAT_BUCKETS - 1 && lat_s >= th {
+        th *= 2.0;
+        i += 1;
+    }
+    i
+}
+
+/// SplitMix64 finalizer — the retention reservoir hash. Pure in its
+/// input, so the keep/drop decision for a request is identical no
+/// matter which engine or collector folds the record.
+fn mix64(seed: u64) -> u64 {
+    let mut z = seed.wrapping_add(0x9e3779b97f4a7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+/// One collector: the spans and series gathered by a single shard (or
+/// by the run spine). The sequential engines own one per shard; the
+/// parallel engine gives each worker its shard's collector and merges
+/// at export time — see the module docs for why that is safe.
+#[derive(Clone, Debug)]
+pub struct ObsShard {
+    shard: u32,
+    tick_s: f64,
+    span_head: u64,
+    span_tail: u64,
+    span_sample: u64,
+    seed: u64,
+    n_requests: u64,
+    spans: Vec<SpanRec>,
+    series: BTreeMap<u64, BucketAgg>,
+    totals: [u64; SpanKind::COUNT],
+}
+
+impl ObsShard {
+    /// New collector for `shard`, for a run of `n_requests` arrivals
+    /// (drives head/tail/reservoir retention).
+    pub fn new(cfg: &ObsConfig, shard: u32, n_requests: usize) -> Self {
+        Self {
+            shard,
+            tick_s: cfg.tick_s,
+            span_head: cfg.span_head as u64,
+            span_tail: cfg.span_tail as u64,
+            span_sample: cfg.span_sample as u64,
+            seed: cfg.seed,
+            n_requests: n_requests as u64,
+            spans: Vec::new(),
+            series: BTreeMap::new(),
+            totals: [0; SpanKind::COUNT],
+        }
+    }
+
+    /// Retention decision for request `idx`: head and tail requests
+    /// are always kept; the middle is sampled by a pure hash
+    /// reservoir keeping ~`span_sample` of the `middle_n` requests.
+    /// Pure in `(seed, idx)` — no mutable reservoir state, so every
+    /// collector agrees without coordination.
+    pub fn keep(&self, idx: u64) -> bool {
+        if idx < self.span_head || idx + self.span_tail >= self.n_requests {
+            return true;
+        }
+        let middle_n = self
+            .n_requests
+            .saturating_sub(self.span_head + self.span_tail);
+        if self.span_sample >= middle_n {
+            return true;
+        }
+        if self.span_sample == 0 {
+            return false;
+        }
+        let h = mix64(self.seed ^ idx) as u128;
+        (h * middle_n as u128) >> 64 < self.span_sample as u128
+    }
+
+    fn bucket(&mut self, t: f64) -> &mut BucketAgg {
+        let b = (t / self.tick_s).floor().max(0.0) as u64;
+        self.series.entry(b).or_default()
+    }
+
+    fn span(
+        &mut self,
+        idx: usize,
+        t: f64,
+        kind: SpanKind,
+        pair: i64,
+        v: f64,
+        e: f64,
+    ) {
+        self.totals[kind as usize] += 1;
+        let idx = idx as u64;
+        if self.keep(idx) {
+            self.spans.push(SpanRec {
+                idx,
+                t,
+                kind,
+                shard: self.shard,
+                pair,
+                v,
+                e,
+            });
+        }
+    }
+
+    /// Request `idx` admitted; `estimate` is the estimator's group.
+    pub fn admit(&mut self, idx: usize, t: f64, estimate: usize) {
+        self.bucket(t).admits += 1;
+        self.span(idx, t, SpanKind::Admit, -1, estimate as f64, 0.0);
+    }
+
+    /// Routing decision: `pair` chosen at predicted cost.
+    pub fn route(
+        &mut self,
+        idx: usize,
+        t: f64,
+        pair: i64,
+        lat_cost_s: f64,
+        e_cost_mwh: f64,
+    ) {
+        self.span(idx, t, SpanKind::Route, pair, lat_cost_s, e_cost_mwh);
+    }
+
+    /// Shed at admission.
+    pub fn shed(&mut self, idx: usize, t: f64) {
+        self.bucket(t).sheds += 1;
+        self.span(idx, t, SpanKind::Shed, -1, 0.0, 0.0);
+    }
+
+    /// Hedge copy dispatched to `pair`.
+    pub fn hedge(&mut self, idx: usize, t: f64, pair: i64) {
+        self.bucket(t).hedges += 1;
+        self.span(idx, t, SpanKind::Hedge, pair, 0.0, 0.0);
+    }
+
+    /// Joined a forming batch of `size` members (after joining).
+    pub fn batch_form(&mut self, idx: usize, t: f64, pair: i64, size: usize) {
+        self.bucket(t).batches += 1;
+        self.span(idx, t, SpanKind::BatchForm, pair, size as f64, 0.0);
+    }
+
+    /// Entered `pair`'s queue at `depth` (after entry).
+    pub fn queue(&mut self, idx: usize, t: f64, pair: i64, depth: usize) {
+        self.span(idx, t, SpanKind::Queue, pair, depth as f64, 0.0);
+    }
+
+    /// Service started: the response will cost `lat_s`/`e_mwh`. The
+    /// energy series folds here (covers hedge losers too).
+    pub fn serve(&mut self, idx: usize, t: f64, pair: i64, lat_s: f64, e_mwh: f64) {
+        let b = self.bucket(t);
+        b.serves += 1;
+        b.energy_mwh += e_mwh;
+        self.span(idx, t, SpanKind::Serve, pair, lat_s, e_mwh);
+    }
+
+    /// Request finished end-to-end.
+    pub fn finish(
+        &mut self,
+        idx: usize,
+        t: f64,
+        pair: i64,
+        e2e_lat_s: f64,
+        e_mwh: f64,
+        on_time: bool,
+    ) {
+        let b = self.bucket(t);
+        b.finishes += 1;
+        if on_time {
+            b.ontime += 1;
+        }
+        b.lat_hist[lat_bucket(e2e_lat_s)] += 1;
+        self.span(idx, t, SpanKind::Finish, pair, e2e_lat_s, e_mwh);
+    }
+
+    /// Hedge copy lost the race after burning `e_mwh`.
+    pub fn hedge_loss(&mut self, idx: usize, t: f64, pair: i64, e_mwh: f64) {
+        self.span(idx, t, SpanKind::HedgeLoss, pair, 0.0, e_mwh);
+    }
+
+    /// In-flight copy lost to a crash of `pair`'s node.
+    pub fn loss(&mut self, idx: usize, t: f64, pair: i64) {
+        self.bucket(t).losses += 1;
+        self.span(idx, t, SpanKind::Loss, pair, 0.0, 0.0);
+    }
+
+    /// Retry scheduled.
+    pub fn retry(&mut self, idx: usize, t: f64) {
+        self.bucket(t).retries += 1;
+        self.span(idx, t, SpanKind::Retry, -1, 0.0, 0.0);
+    }
+
+    /// Request abandoned.
+    pub fn abandon(&mut self, idx: usize, t: f64) {
+        self.bucket(t).abandons += 1;
+        self.span(idx, t, SpanKind::Abandon, -1, 0.0, 0.0);
+    }
+
+    /// A node of this shard crashed (series counter only).
+    pub fn crash(&mut self, t: f64) {
+        self.bucket(t).crashes += 1;
+    }
+
+    /// A node of this shard rejoined (series counter only).
+    pub fn rejoin(&mut self, t: f64) {
+        self.bucket(t).rejoins += 1;
+    }
+
+    /// Powered-node gauge sample (autoscaler state).
+    pub fn powered(&mut self, t: f64, n: usize) {
+        self.bucket(t).powered_last = Some(n as u64);
+    }
+
+    /// In-flight gauge sample. Parallel-safe by construction: callers
+    /// pass their own shard's count, never a cross-shard total.
+    pub fn in_flight(&mut self, t: f64, n: usize) {
+        self.bucket(t).in_flight_last = Some(n as u64);
+    }
+
+    /// Total events folded (all kinds), for self-profiling.
+    pub fn events_total(&self) -> u64 {
+        self.totals.iter().sum()
+    }
+
+    /// Number of span records retained.
+    pub fn spans_kept(&self) -> usize {
+        self.spans.len()
+    }
+}
+
+/// Canonical record order: request, then virtual time (total order —
+/// NaN sorts last), then kind rank, then shard, then pair. Everything
+/// export emits is sorted by this key, which is what makes collector
+/// placement irrelevant.
+fn canon_cmp(a: &SpanRec, b: &SpanRec) -> Ordering {
+    a.idx
+        .cmp(&b.idx)
+        .then(a.t.total_cmp(&b.t))
+        .then((a.kind as u8).cmp(&(b.kind as u8)))
+        .then(a.shard.cmp(&b.shard))
+        .then(a.pair.cmp(&b.pair))
+}
+
+fn field_u(line: &mut String, name: &str, v: u64) {
+    line.push(',');
+    write_str(line, name);
+    line.push(':');
+    write_num(line, v as f64);
+}
+
+fn opt_gauge(line: &mut String, name: &str, v: Option<u64>) {
+    line.push(',');
+    write_str(line, name);
+    line.push(':');
+    match v {
+        Some(x) => write_num(line, x as f64),
+        None => line.push_str("null"),
+    }
+}
+
+/// Render the span trace as JSONL: one line per retained request,
+/// `{"idx":N,"events":[...]}`, events in canonical order. Built line
+/// by line through `util::json`'s number/string writers — no
+/// in-memory `Json` tree.
+pub fn render_spans(shards: &[ObsShard]) -> String {
+    let mut recs: Vec<&SpanRec> =
+        shards.iter().flat_map(|s| s.spans.iter()).collect();
+    recs.sort_by(|a, b| canon_cmp(a, b));
+    let mut out = String::new();
+    let mut line = String::new();
+    let mut i = 0;
+    while i < recs.len() {
+        let idx = recs[i].idx;
+        line.clear();
+        line.push_str("{\"idx\":");
+        write_num(&mut line, idx as f64);
+        line.push_str(",\"events\":[");
+        let mut first = true;
+        while i < recs.len() && recs[i].idx == idx {
+            let r = recs[i];
+            if !first {
+                line.push(',');
+            }
+            first = false;
+            line.push_str("{\"t\":");
+            write_num(&mut line, r.t);
+            line.push_str(",\"kind\":");
+            write_str(&mut line, r.kind.name());
+            line.push_str(",\"shard\":");
+            write_num(&mut line, f64::from(r.shard));
+            line.push_str(",\"pair\":");
+            write_num(&mut line, r.pair as f64);
+            line.push_str(",\"v\":");
+            write_num(&mut line, r.v);
+            line.push_str(",\"e\":");
+            write_num(&mut line, r.e);
+            line.push('}');
+            i += 1;
+        }
+        line.push_str("]}\n");
+        out.push_str(&line);
+    }
+    out
+}
+
+/// Render the virtual-time series as JSONL: one line per
+/// `(shard, bucket)` pair, sparse (only buckets that saw events),
+/// with last-value gauges carried forward across a shard's buckets.
+/// `shards` must already be sorted by shard id (`export_run` sorts).
+pub fn render_series(shards: &[ObsShard]) -> String {
+    let mut out = String::new();
+    let mut line = String::new();
+    for sh in shards {
+        let mut in_flight: Option<u64> = None;
+        let mut powered: Option<u64> = None;
+        for (&b, agg) in &sh.series {
+            if agg.in_flight_last.is_some() {
+                in_flight = agg.in_flight_last;
+            }
+            if agg.powered_last.is_some() {
+                powered = agg.powered_last;
+            }
+            line.clear();
+            line.push_str("{\"shard\":");
+            write_num(&mut line, f64::from(sh.shard));
+            line.push_str(",\"bucket\":");
+            write_num(&mut line, b as f64);
+            line.push_str(",\"t\":");
+            write_num(&mut line, b as f64 * sh.tick_s);
+            field_u(&mut line, "admits", agg.admits);
+            field_u(&mut line, "serves", agg.serves);
+            field_u(&mut line, "finishes", agg.finishes);
+            field_u(&mut line, "ontime", agg.ontime);
+            field_u(&mut line, "sheds", agg.sheds);
+            field_u(&mut line, "retries", agg.retries);
+            field_u(&mut line, "hedges", agg.hedges);
+            field_u(&mut line, "losses", agg.losses);
+            field_u(&mut line, "abandons", agg.abandons);
+            field_u(&mut line, "batches", agg.batches);
+            field_u(&mut line, "crashes", agg.crashes);
+            field_u(&mut line, "rejoins", agg.rejoins);
+            line.push_str(",\"energy_mwh\":");
+            write_num(&mut line, agg.energy_mwh);
+            line.push_str(",\"lat_hist\":[");
+            for (k, c) in agg.lat_hist.iter().enumerate() {
+                if k > 0 {
+                    line.push(',');
+                }
+                write_num(&mut line, *c as f64);
+            }
+            line.push(']');
+            opt_gauge(&mut line, "in_flight", in_flight);
+            opt_gauge(&mut line, "powered", powered);
+            line.push_str("}\n");
+            out.push_str(&line);
+        }
+    }
+    out
+}
+
+/// Render the Prometheus-style snapshot: whole-run totals only. Every
+/// number here is thread-invariant (integer counters, plus energy
+/// summed in sorted shard order); wall-clock rates never appear.
+/// `shards` must already be sorted by shard id (`export_run` sorts).
+pub fn render_prom(shards: &[ObsShard]) -> String {
+    let mut out = String::new();
+    out.push_str("# ECORE observability snapshot (virtual-time totals)\n");
+    out.push_str("# TYPE ecore_obs_events_total counter\n");
+    for (k, kind) in KINDS.iter().enumerate() {
+        let total: u64 = shards.iter().map(|s| s.totals[k]).sum();
+        let _ = writeln!(
+            out,
+            "ecore_obs_events_total{{kind=\"{}\"}} {total}",
+            kind.name()
+        );
+    }
+    let mut crashes = 0u64;
+    let mut rejoins = 0u64;
+    let mut buckets = 0u64;
+    let mut energy = 0.0f64;
+    for sh in shards {
+        for agg in sh.series.values() {
+            crashes += agg.crashes;
+            rejoins += agg.rejoins;
+            energy += agg.energy_mwh;
+            buckets += 1;
+        }
+    }
+    let spans: usize = shards.iter().map(|s| s.spans.len()).sum();
+    let _ = writeln!(out, "ecore_obs_crashes_total {crashes}");
+    let _ = writeln!(out, "ecore_obs_rejoins_total {rejoins}");
+    out.push_str("ecore_obs_energy_mwh_total ");
+    write_num(&mut out, energy);
+    out.push('\n');
+    let _ = writeln!(out, "ecore_obs_span_records {spans}");
+    let _ = writeln!(out, "ecore_obs_series_buckets {buckets}");
+    out
+}
+
+/// End-of-run export. Sorts the collectors by shard id, prints a
+/// wall-clock self-profile to stderr (`wall_s` = engine wall-clock
+/// seconds; pass 0 to skip), and — when `cfg.out_dir` is non-empty —
+/// writes `spans.jsonl`, `series.jsonl`, and `metrics.prom` under it.
+pub fn export_run(
+    cfg: &ObsConfig,
+    label: &str,
+    mut shards: Vec<ObsShard>,
+    wall_s: f64,
+) -> std::io::Result<()> {
+    shards.sort_by_key(|s| s.shard);
+    if wall_s > 0.0 {
+        let events: u64 = shards.iter().map(|s| s.events_total()).sum();
+        let spans: usize = shards.iter().map(|s| s.spans.len()).sum();
+        eprintln!(
+            "[obs] {label}: {events} events folded, {spans} spans kept, \
+             {:.0} events/sec wall",
+            events as f64 / wall_s
+        );
+    }
+    if cfg.out_dir.is_empty() {
+        return Ok(());
+    }
+    let dir = Path::new(&cfg.out_dir);
+    fs::create_dir_all(dir)?;
+    fs::write(dir.join("spans.jsonl"), render_spans(&shards))?;
+    fs::write(dir.join("series.jsonl"), render_series(&shards))?;
+    fs::write(dir.join("metrics.prom"), render_prom(&shards))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn cfg() -> ObsConfig {
+        ObsConfig {
+            tick_s: 1.0,
+            span_head: 4,
+            span_tail: 4,
+            span_sample: 8,
+            seed: 0x0B5,
+            out_dir: String::new(),
+        }
+    }
+
+    #[test]
+    fn keep_retains_head_tail_and_samples_middle() {
+        let sh = ObsShard::new(&cfg(), 0, 100);
+        for idx in 0..4 {
+            assert!(sh.keep(idx), "head idx {idx}");
+        }
+        for idx in 96..100 {
+            assert!(sh.keep(idx), "tail idx {idx}");
+        }
+        let kept: Vec<u64> = (4..96).filter(|&i| sh.keep(i)).collect();
+        assert!(!kept.is_empty());
+        assert!(kept.len() < 92, "reservoir kept everything");
+        // pure in (seed, idx): a second collector agrees exactly
+        let sh2 = ObsShard::new(&cfg(), 7, 100);
+        let kept2: Vec<u64> = (4..96).filter(|&i| sh2.keep(i)).collect();
+        assert_eq!(kept, kept2);
+        // tiny runs keep everything
+        let tiny = ObsShard::new(&cfg(), 0, 6);
+        assert!((0..6).all(|i| tiny.keep(i)));
+        // sample >= middle keeps everything
+        let wide = ObsShard::new(&cfg(), 0, 14);
+        assert!((0..14).all(|i| wide.keep(i)));
+    }
+
+    #[test]
+    fn keep_zero_sample_drops_middle() {
+        let mut c = cfg();
+        c.span_sample = 0;
+        let sh = ObsShard::new(&c, 0, 100);
+        assert!((4..96).all(|i| !sh.keep(i)));
+        assert!(sh.keep(0) && sh.keep(99));
+    }
+
+    #[test]
+    fn lat_bucket_edges() {
+        assert_eq!(lat_bucket(0.0), 0);
+        assert_eq!(lat_bucket(5e-5), 0);
+        assert_eq!(lat_bucket(1e-4), 1);
+        assert_eq!(lat_bucket(1.5e-4), 1);
+        assert_eq!(lat_bucket(2e-4), 2);
+        assert_eq!(lat_bucket(-1.0), 0);
+        assert_eq!(lat_bucket(1e9), LAT_BUCKETS - 1);
+        assert_eq!(lat_bucket(f64::NAN), LAT_BUCKETS - 1);
+        assert_eq!(lat_bucket(f64::INFINITY), LAT_BUCKETS - 1);
+    }
+
+    #[test]
+    fn spans_group_by_idx_in_canonical_order() {
+        let c = cfg();
+        let mut a = ObsShard::new(&c, 0, 8);
+        let mut b = ObsShard::new(&c, 1, 8);
+        // interleave collection across two collectors
+        b.serve(1, 0.4, 3, 0.05, 0.2);
+        a.admit(0, 0.0, 2);
+        a.admit(1, 0.1, 1);
+        a.route(1, 0.1, 3, 0.05, 0.2);
+        b.finish(1, 0.5, 3, 0.4, 0.2, true);
+        a.route(0, 0.0, 2, 0.03, 0.1);
+        let txt = render_spans(&[a, b]);
+        let lines: Vec<&str> = txt.lines().collect();
+        assert_eq!(lines.len(), 2);
+        // each line parses and is ordered by idx
+        for (want_idx, line) in lines.iter().enumerate() {
+            let v = json::parse(line).unwrap();
+            assert_eq!(v.req("idx").unwrap().as_usize(), Some(want_idx));
+        }
+        // idx 1's events come out time-ordered despite collector split
+        let v = json::parse(lines[1]).unwrap();
+        let kinds: Vec<String> = v
+            .req("events")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|e| e.req("kind").unwrap().as_str().unwrap().to_string())
+            .collect();
+        assert_eq!(kinds, ["admit", "route", "serve", "finish"]);
+    }
+
+    #[test]
+    fn collector_placement_is_irrelevant() {
+        let c = cfg();
+        // same records, gathered by one collector vs split across two
+        let mut solo = ObsShard::new(&c, 0, 4);
+        solo.admit(0, 0.0, 1);
+        solo.serve(0, 0.2, 5, 0.1, 0.3);
+        solo.admit(1, 0.1, 2);
+        let mut x = ObsShard::new(&c, 0, 4);
+        let mut y = ObsShard::new(&c, 0, 4);
+        y.admit(1, 0.1, 2);
+        x.admit(0, 0.0, 1);
+        y.serve(0, 0.2, 5, 0.1, 0.3);
+        assert_eq!(render_spans(&[solo]), render_spans(&[x, y]));
+    }
+
+    #[test]
+    fn series_sparse_buckets_carry_gauges_forward() {
+        let c = cfg();
+        let mut sh = ObsShard::new(&c, 2, 8);
+        sh.admit(0, 0.5, 1);
+        sh.in_flight(0.5, 3);
+        sh.powered(0.5, 6);
+        sh.admit(1, 2.5, 1); // bucket 2; bucket 1 stays absent
+        let txt = render_series(&[sh]);
+        let lines: Vec<&str> = txt.lines().collect();
+        assert_eq!(lines.len(), 2, "sparse: only touched buckets emit");
+        let b0 = json::parse(lines[0]).unwrap();
+        assert_eq!(b0.req("bucket").unwrap().as_usize(), Some(0));
+        assert_eq!(b0.req("in_flight").unwrap().as_usize(), Some(3));
+        let b2 = json::parse(lines[1]).unwrap();
+        assert_eq!(b2.req("bucket").unwrap().as_usize(), Some(2));
+        // gauges carry forward into later buckets of the same shard
+        assert_eq!(b2.req("in_flight").unwrap().as_usize(), Some(3));
+        assert_eq!(b2.req("powered").unwrap().as_usize(), Some(6));
+        assert_eq!(b2.req("admits").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn series_gauge_null_before_first_sample() {
+        let c = cfg();
+        let mut sh = ObsShard::new(&c, 0, 8);
+        sh.admit(0, 0.5, 1);
+        let txt = render_series(&[sh]);
+        let v = json::parse(txt.lines().next().unwrap()).unwrap();
+        assert_eq!(v.req("in_flight").unwrap(), &json::Json::Null);
+        assert_eq!(v.req("powered").unwrap(), &json::Json::Null);
+    }
+
+    #[test]
+    fn finish_folds_attainment_and_latency_histogram() {
+        let c = cfg();
+        let mut sh = ObsShard::new(&c, 0, 8);
+        sh.finish(0, 0.1, 1, 5e-5, 0.1, true);
+        sh.finish(1, 0.2, 1, 0.5, 0.1, false);
+        let txt = render_series(&[sh]);
+        let v = json::parse(txt.lines().next().unwrap()).unwrap();
+        assert_eq!(v.req("finishes").unwrap().as_usize(), Some(2));
+        assert_eq!(v.req("ontime").unwrap().as_usize(), Some(1));
+        let hist = v.req("lat_hist").unwrap().f64s().unwrap();
+        assert_eq!(hist.len(), LAT_BUCKETS);
+        assert_eq!(hist[0], 1.0);
+        assert_eq!(hist.iter().sum::<f64>(), 2.0);
+    }
+
+    #[test]
+    fn prom_snapshot_reports_per_kind_totals() {
+        let c = cfg();
+        let mut sh = ObsShard::new(&c, 0, 8);
+        sh.admit(0, 0.0, 1);
+        sh.serve(0, 0.1, 2, 0.05, 0.25);
+        sh.crash(0.2);
+        let txt = render_prom(&[sh]);
+        assert!(txt.contains("ecore_obs_events_total{kind=\"admit\"} 1\n"));
+        assert!(txt.contains("ecore_obs_events_total{kind=\"serve\"} 1\n"));
+        assert!(txt.contains("ecore_obs_events_total{kind=\"finish\"} 0\n"));
+        assert!(txt.contains("ecore_obs_crashes_total 1\n"));
+        assert!(txt.contains("ecore_obs_energy_mwh_total 0.25\n"));
+    }
+
+    #[test]
+    fn spine_shard_sorts_last_in_exports() {
+        let c = cfg();
+        let mut spine = ObsShard::new(&c, SPINE_SHARD, 8);
+        spine.retry(0, 0.3);
+        let mut sh = ObsShard::new(&c, 0, 8);
+        sh.admit(0, 0.0, 1);
+        // export_run sorts; render_series takes sorted order
+        let mut v = vec![spine, sh];
+        v.sort_by_key(|s| s.shard);
+        assert_eq!(v[0].shard, 0);
+        assert_eq!(v[1].shard, SPINE_SHARD);
+        let txt = render_series(&v);
+        let last = txt.lines().last().unwrap();
+        let j = json::parse(last).unwrap();
+        assert_eq!(
+            j.req("shard").unwrap().as_f64(),
+            Some(f64::from(SPINE_SHARD))
+        );
+        assert_eq!(j.req("retries").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn export_run_with_empty_out_dir_touches_nothing() {
+        let c = cfg();
+        let sh = ObsShard::new(&c, 0, 4);
+        export_run(&c, "test", vec![sh], 0.0).unwrap();
+    }
+}

@@ -79,6 +79,7 @@ impl Args {
                 "slo",
                 "adapt",
                 "adapt-no-scale",
+                "obs",
             ],
         )
     }
@@ -237,6 +238,14 @@ mod tests {
             a.list_or("slo-classes", &[]),
             vec!["fast:0.02", "slow:1"]
         );
+    }
+
+    #[test]
+    fn obs_is_a_flag_with_value_options() {
+        let a = args(&["--obs", "--obs-tick", "0.5", "--obs-out", "o/dir"]);
+        assert!(a.flag("obs"));
+        assert_eq!(a.f64_or("obs-tick", 0.0), 0.5);
+        assert_eq!(a.str_or("obs-out", ""), "o/dir");
     }
 
     #[test]

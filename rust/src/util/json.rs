@@ -184,7 +184,14 @@ fn newline_indent(out: &mut String, indent: Option<usize>, depth: usize) {
     }
 }
 
-fn write_num(out: &mut String, x: f64) {
+/// Serialize one JSON number into `out`. This is the crate's single
+/// number-formatting policy, shared by [`Json::dump`] and the
+/// streaming observability exporters (`obs`): whole finite values
+/// under 1e15 print as integers, other finite values as shortest-f64,
+/// and **non-finite values (NaN/±Inf) deterministically print as
+/// `null`** — JSON has no NaN/Inf, and a streamed series must never
+/// emit an unparseable token.
+pub fn write_num(out: &mut String, x: f64) {
     if x.is_finite() {
         if x == x.trunc() && x.abs() < 1e15 {
             let _ = write!(out, "{}", x as i64);
@@ -196,7 +203,10 @@ fn write_num(out: &mut String, x: f64) {
     }
 }
 
-fn write_str(out: &mut String, s: &str) {
+/// Serialize one JSON string (with quotes and RFC 8259 escaping) into
+/// `out`. Public for the streaming exporters that build JSONL lines
+/// without an in-memory [`Json`] tree.
+pub fn write_str(out: &mut String, s: &str) {
     out.push('"');
     for c in s.chars() {
         match c {
@@ -493,6 +503,38 @@ mod tests {
     fn integer_formatting() {
         assert_eq!(Json::Num(5.0).dump(), "5");
         assert_eq!(Json::Num(5.25).dump(), "5.25");
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        // One pinned policy for the whole crate: NaN/Inf become null,
+        // never an unparseable bare token.
+        assert_eq!(Json::Num(f64::NAN).dump(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).dump(), "null");
+        assert_eq!(Json::Num(f64::NEG_INFINITY).dump(), "null");
+        let doc = Json::obj(vec![("x", Json::Num(f64::NAN))]);
+        assert_eq!(parse(&doc.dump()).unwrap().get("x"), Some(&Json::Null));
+        // the streaming writer is the same code path
+        let mut s = String::new();
+        write_num(&mut s, f64::NAN);
+        assert_eq!(s, "null");
+    }
+
+    #[test]
+    fn streaming_writers_match_tree_serialization() {
+        let mut s = String::new();
+        write_num(&mut s, 5.0);
+        s.push(',');
+        write_num(&mut s, 5.25);
+        s.push(',');
+        write_str(&mut s, "a\"b\nc");
+        assert_eq!(
+            s,
+            format!(
+                "5,5.25,{}",
+                Json::Str("a\"b\nc".to_string()).dump()
+            )
+        );
     }
 
     #[test]

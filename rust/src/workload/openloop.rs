@@ -35,6 +35,7 @@ use crate::lifecycle::{
 };
 use crate::metrics::{RunMetrics, SloMetrics};
 use crate::nodes::{NodeDown, NodeResponse};
+use crate::obs::{ObsConfig, ObsShard};
 use crate::router::PairId;
 use crate::util::rng::Rng;
 use crate::workload::slo::{SloConfig, SloTag};
@@ -124,6 +125,11 @@ pub struct OpenLoopConfig {
     /// `None` keeps the event stream bit-identical to the
     /// pre-adaptation driver.
     pub adapt: Option<AdaptConfig>,
+    /// Observability (DESIGN.md §14): a passive collector folds every
+    /// stage transition into span records and virtual-time series,
+    /// exported at end of run. Schedules zero events either way;
+    /// `None` collects nothing and keeps reports/traces bit-identical.
+    pub obs: Option<ObsConfig>,
 }
 
 impl Default for OpenLoopConfig {
@@ -135,6 +141,7 @@ impl Default for OpenLoopConfig {
             churn: None,
             slo: None,
             adapt: None,
+            obs: None,
         }
     }
 }
@@ -346,6 +353,10 @@ struct SimState {
     makespan_s: f64,
     /// Per-pair batches under formation (always empty without SLOs).
     forming: BTreeMap<PairId, Forming>,
+    /// Passive observability collector (`None` = obs off; the open
+    /// loop is unsharded, so one shard-0 collector takes everything,
+    /// run-level retries/abandons included).
+    obs: Option<ObsShard>,
 }
 
 impl SimState {
@@ -359,6 +370,7 @@ impl SimState {
             peak_in_flight: 0,
             makespan_s: 0.0,
             forming: BTreeMap::new(),
+            obs: None,
         }
     }
 
@@ -422,6 +434,9 @@ pub fn run_frames(
 
     let mut metrics = RunMetrics::new(gw.spec.name);
     let mut sim = SimState::new();
+    sim.obs =
+        cfg.obs.as_ref().map(|c| ObsShard::new(c, 0, frames.len()));
+    let obs_t0 = cfg.obs.as_ref().map(|_| std::time::Instant::now());
     let arrival_times = cfg.arrivals.times(frames.len(), cfg.seed);
     let horizon_s = arrival_times.last().copied().unwrap_or(0.0)
         + cfg.churn.as_ref().map(|c| c.horizon_slack_s).unwrap_or(0.0);
@@ -529,6 +544,9 @@ pub fn run_frames(
                 if let Some(ch) = churn.as_mut() {
                     ch.est[idx] = Some((estimate, cost));
                 }
+                if let Some(o) = sim.obs.as_mut() {
+                    o.admit(idx, ev.t, estimate);
+                }
                 // routing observes per-node occupancy (and, under
                 // churn, believed health): full or down nodes are
                 // skipped via the fallback path; if no feasible
@@ -567,12 +585,24 @@ pub fn run_frames(
                                 if let Some(s) = slo.as_mut() {
                                     s.shed(idx);
                                 }
+                                if let Some(o) = sim.obs.as_mut() {
+                                    o.shed(idx, ev.t);
+                                }
                             }
                         }
                         continue;
                     }
                     Err(e) => return Err(e),
                 };
+                if let Some(o) = sim.obs.as_mut() {
+                    o.route(
+                        idx,
+                        ev.t,
+                        i64::from(routed.pair_id.0),
+                        routed.cost.latency_s,
+                        routed.cost.energy_mwh,
+                    );
+                }
                 // SLO admission control: when the predicted completion
                 // (queue ahead x per-pair mean service + estimator cost
                 // + network hop) already blows the deadline, shed now
@@ -588,6 +618,9 @@ pub fn run_frames(
                     if ev.t + pred > deadline {
                         sim.dropped += 1;
                         s.shed(idx);
+                        if let Some(o) = sim.obs.as_mut() {
+                            o.shed(idx, ev.t);
+                        }
                         continue;
                     }
                     tag = SloTag {
@@ -658,6 +691,9 @@ pub fn run_frames(
                     idx, ev.t, false, tag,
                 )?;
                 if let Some(d) = dup {
+                    if let Some(o) = sim.obs.as_mut() {
+                        o.hedge(idx, ev.t, i64::from(d.pair_id.0));
+                    }
                     admit_copy(
                         gw, frames, &mut sim, &mut churn, &mut slo, d,
                         idx, ev.t, true, tag,
@@ -704,6 +740,15 @@ pub fn run_frames(
                     .expect("retry without churn")
                     .state
                     .retry_dispatched(idx);
+                if let Some(o) = sim.obs.as_mut() {
+                    o.route(
+                        idx,
+                        ev.t,
+                        i64::from(routed.pair_id.0),
+                        routed.cost.latency_s,
+                        routed.cost.energy_mwh,
+                    );
+                }
                 // retries bypass batch formation (the backoff already
                 // ate the slack) but keep their deadline for EDF and
                 // attainment accounting
@@ -739,6 +784,9 @@ pub fn run_frames(
                 gw.pool_mut().release_id(pair);
                 sim.in_flight -= 1;
                 sim.makespan_s = sim.makespan_s.max(ev.t);
+                if let Some(o) = sim.obs.as_mut() {
+                    o.in_flight(ev.t, sim.in_flight);
+                }
                 let winner = match churn.as_mut() {
                     Some(ch) => ch.state.copy_completed(
                         done.idx,
@@ -760,6 +808,8 @@ pub fn run_frames(
                         0.0
                     };
                     let (d_idx, d_class) = (done.idx, done.slo.class);
+                    let (e2e_s, e_mwh) =
+                        (ev.t - done.arrival_s, done.resp.energy_mwh);
                     gw.finish_with_network(
                         &done.routed,
                         done.resp,
@@ -771,6 +821,27 @@ pub fn run_frames(
                     if let Some(s) = slo.as_mut() {
                         s.record_done(d_idx, d_class, ev.t);
                     }
+                    if let Some(o) = sim.obs.as_mut() {
+                        let on_time = match slo.as_ref() {
+                            Some(s) => ev.t <= s.deadlines[d_idx],
+                            None => true,
+                        };
+                        o.finish(
+                            d_idx,
+                            ev.t,
+                            i64::from(pair.0),
+                            e2e_s,
+                            e_mwh,
+                            on_time,
+                        );
+                    }
+                } else if let Some(o) = sim.obs.as_mut() {
+                    o.hedge_loss(
+                        done.idx,
+                        ev.t,
+                        i64::from(pair.0),
+                        done.resp.energy_mwh,
+                    );
                 }
                 start_next(
                     gw, frames, &mut sim, &mut churn, &mut slo, pair,
@@ -781,6 +852,9 @@ pub fn run_frames(
                 let ch = churn.as_mut().expect("crash without churn");
                 let pair = ch.pairs[node];
                 ch.state.crashes += 1;
+                if let Some(o) = sim.obs.as_mut() {
+                    o.crash(ev.t);
+                }
                 gw.pool_mut().set_health_id(pair, false);
                 if let Some(m) = gw.membership_mut() {
                     m.ground_truth_changed(pair, false, ev.t);
@@ -799,6 +873,9 @@ pub fn run_frames(
                 }
                 if let Some(m) = gw.membership_mut() {
                     m.ground_truth_changed(pair, true, ev.t);
+                }
+                if let Some(o) = sim.obs.as_mut() {
+                    o.rejoin(ev.t);
                 }
             }
             EventKind::Probe => {
@@ -835,10 +912,29 @@ pub fn run_frames(
             }
             EventKind::ScaleTick => {
                 gw.adapt_scale_tick(ev.t);
+                let powered = gw
+                    .adapt()
+                    .and_then(|a| a.scaler.as_ref())
+                    .map(|sc| sc.n_powered());
+                if let (Some(o), Some(n)) = (sim.obs.as_mut(), powered)
+                {
+                    o.powered(ev.t, n);
+                }
             }
         }
     }
 
+    if let Some(oc) = &cfg.obs {
+        let wall_s =
+            obs_t0.map_or(0.0, |t0| t0.elapsed().as_secs_f64());
+        let shards: Vec<ObsShard> =
+            sim.obs.take().into_iter().collect();
+        if let Err(e) =
+            crate::obs::export_run(oc, "openloop", shards, wall_s)
+        {
+            eprintln!("[obs] export failed: {e}");
+        }
+    }
     let churn_report = churn.map(|c| {
         let m = gw
             .membership()
@@ -888,8 +984,16 @@ fn retry_or_abandon(
         Some(s) if retry_t > s.deadlines[idx] => {
             state.abandon(idx);
             s.shed(idx);
+            if let Some(o) = sim.obs.as_mut() {
+                o.abandon(idx, retry_t);
+            }
         }
-        _ => sim.push(retry_t, EventKind::Retry(idx)),
+        _ => {
+            if let Some(o) = sim.obs.as_mut() {
+                o.retry(idx, retry_t);
+            }
+            sim.push(retry_t, EventKind::Retry(idx));
+        }
     }
 }
 
@@ -913,10 +1017,18 @@ fn admit_copy(
     sim.in_flight += 1;
     sim.peak_in_flight = sim.peak_in_flight.max(sim.in_flight);
     let pair = routed.pair_id;
-    push_pending(
-        sim.queues.entry(pair).or_default(),
-        Pending { routed, idx, arrival_s: t, hedge, slo: tag },
-    );
+    let depth = {
+        let q = sim.queues.entry(pair).or_default();
+        push_pending(
+            q,
+            Pending { routed, idx, arrival_s: t, hedge, slo: tag },
+        );
+        q.backlog.len() + usize::from(q.serving.is_some())
+    };
+    if let Some(o) = sim.obs.as_mut() {
+        o.queue(idx, t, i64::from(pair.0), depth);
+        o.in_flight(t, sim.in_flight);
+    }
     start_next(gw, frames, sim, churn, slo, pair, t)
 }
 
@@ -952,7 +1064,7 @@ fn join_forming(
         - gw.predicted_completion_s(pair, t, 0.0))
     .max(t);
     let member_close = (t + window_s).min(latest_s);
-    let (flush_now, close_s) = {
+    let (flush_now, close_s, size) = {
         let f = sim.forming.entry(pair).or_default();
         f.members.push(Pending {
             routed,
@@ -962,8 +1074,16 @@ fn join_forming(
             slo: tag,
         });
         f.close_s = f.close_s.min(member_close);
-        (f.members.len() >= max_batch || f.close_s <= t, f.close_s)
+        (
+            f.members.len() >= max_batch || f.close_s <= t,
+            f.close_s,
+            f.members.len(),
+        )
     };
+    if let Some(o) = sim.obs.as_mut() {
+        o.batch_form(idx, t, i64::from(pair.0), size);
+        o.in_flight(t, sim.in_flight);
+    }
     if flush_now {
         return flush_batch(gw, frames, sim, churn, slo, pair, t);
     }
@@ -1054,6 +1174,15 @@ fn start_next(
         resp.energy_mwh = amortize(resp.energy_mwh, save_mwh);
     }
     let net_s = if p.slo.net { devices::NETWORK_S } else { 0.0 };
+    if let Some(o) = sim.obs.as_mut() {
+        o.serve(
+            p.idx,
+            start_s,
+            i64::from(pair.0),
+            resp.latency_s,
+            resp.energy_mwh,
+        );
+    }
     let token = sim.seq;
     sim.push(
         start_s + resp.latency_s + net_s,
@@ -1108,14 +1237,23 @@ fn lose_queued(
             idxs.push(m.idx);
         }
     }
+    let lost_any = !idxs.is_empty();
     for idx in idxs {
         gw.pool_mut().release_id(pair);
         sim.in_flight -= 1;
+        if let Some(o) = sim.obs.as_mut() {
+            o.loss(idx, now_s, i64::from(pair.0));
+        }
         match state.copy_lost(idx, now_s) {
             LossOutcome::RetryAt(t) => {
                 retry_or_abandon(sim, state, slo.as_mut(), idx, t)
             }
             LossOutcome::Absorbed | LossOutcome::Lost => {}
+        }
+    }
+    if lost_any {
+        if let Some(o) = sim.obs.as_mut() {
+            o.in_flight(now_s, sim.in_flight);
         }
     }
 }
@@ -1246,6 +1384,7 @@ mod tests {
                     churn: None,
                     slo: None,
                     adapt: None,
+                    obs: None,
                 },
             )
             .unwrap();
@@ -1292,6 +1431,7 @@ mod tests {
                     churn: None,
                     slo: None,
                     adapt: None,
+                    obs: None,
                 },
             )
             .unwrap();
@@ -1325,6 +1465,7 @@ mod tests {
                 churn: None,
                 slo: None,
                 adapt: None,
+                obs: None,
             },
         )
         .unwrap();
@@ -1367,6 +1508,7 @@ mod tests {
                 }),
                 slo: None,
                 adapt: None,
+                obs: None,
             },
         )
         .unwrap();
@@ -1399,6 +1541,7 @@ mod tests {
             churn,
             slo: None,
             adapt: None,
+            obs: None,
         };
         let mut base_gw = gateway(&e, "Orc", 3);
         let base = run_dataset(&mut base_gw, &ds, &open_cfg(None)).unwrap();
@@ -1465,6 +1608,7 @@ mod tests {
                 }),
                 slo: None,
                 adapt: None,
+                obs: None,
             },
         )
         .unwrap();
@@ -1514,6 +1658,7 @@ mod tests {
                 }),
                 slo: None,
                 adapt: None,
+                obs: None,
             },
         )
         .unwrap();
@@ -1562,6 +1707,7 @@ mod tests {
                     }),
                     slo: None,
                     adapt: None,
+                    obs: None,
                 },
             )
             .unwrap()
@@ -1587,6 +1733,7 @@ mod tests {
                     churn: None,
                     slo: None,
                     adapt: None,
+                    obs: None,
                 },
             )
             .unwrap()
@@ -1674,6 +1821,7 @@ mod tests {
                     max_batch: 1,
                 }),
                 adapt: None,
+                obs: None,
             },
         )
         .unwrap();
@@ -1718,6 +1866,7 @@ mod tests {
                         max_batch: 4,
                     }),
                     adapt: None,
+                    obs: None,
                 },
             )
             .unwrap()
@@ -1772,6 +1921,7 @@ mod tests {
                     churn: None,
                     slo: Some(SloConfig::default()),
                     adapt: None,
+                    obs: None,
                 },
             )
             .unwrap()
@@ -1802,6 +1952,7 @@ mod tests {
                 churn: None,
                 slo: None,
                 adapt: Some(AdaptConfig::default()),
+                obs: None,
             },
         )
         .unwrap();
@@ -1835,6 +1986,7 @@ mod tests {
                     churn: None,
                     slo: None,
                     adapt: Some(AdaptConfig::default()),
+                    obs: None,
                 },
             )
             .unwrap()

@@ -18,6 +18,7 @@ use ecore::fleet::{self, DispatchPolicy, FleetBuilder, FleetConfig};
 use ecore::gateway::{router_by_name, Gateway};
 use ecore::lifecycle::{ChurnConfig, ResiliencePolicy};
 use ecore::nodes::NodePool;
+use ecore::obs::ObsConfig;
 use ecore::router::{PairKey, PairProfile, ProfileStore};
 use ecore::runtime::Engine;
 use ecore::workload::openloop::{self, ArrivalProcess, OpenLoopConfig};
@@ -67,6 +68,7 @@ fn openloop_dump(e: &Engine) -> String {
             churn: None,
             slo: None,
             adapt: None,
+            obs: None,
         },
     )
     .unwrap();
@@ -106,6 +108,7 @@ fn churn_dump(e: &Engine) -> String {
             }),
             slo: None,
             adapt: None,
+            obs: None,
         },
     )
     .unwrap();
@@ -144,6 +147,7 @@ fn fleet_churn_dump(e: &Engine) -> String {
                 }),
                 slo: None,
                 adapt: None,
+                obs: None,
                 threads: 1,
             },
         )
@@ -178,6 +182,7 @@ fn fleet_dump(e: &Engine) -> String {
                 churn: None,
                 slo: None,
                 adapt: None,
+                obs: None,
                 threads: 1,
             },
         )
@@ -213,6 +218,7 @@ fn slo_dump(e: &Engine) -> String {
             churn: None,
             slo: Some(ecore::workload::slo::SloConfig::default()),
             adapt: None,
+            obs: None,
         },
     )
     .unwrap();
@@ -239,6 +245,7 @@ fn fleet_slo_dump(e: &Engine) -> String {
                 churn: None,
                 slo: Some(ecore::workload::slo::SloConfig::default()),
                 adapt: None,
+                obs: None,
                 threads: 1,
             },
         )
@@ -278,6 +285,7 @@ fn adapt_dump(e: &Engine) -> String {
                 scale_interval_s: 0.05,
                 ..Default::default()
             }),
+            obs: None,
         },
     )
     .unwrap();
@@ -307,6 +315,7 @@ fn fleet_adapt_dump(e: &Engine) -> String {
                     scale_interval_s: 0.05,
                     ..Default::default()
                 }),
+                obs: None,
                 threads: 1,
             },
         )
@@ -412,16 +421,22 @@ fn none_adapt_config_leaves_existing_traces_untouched() {
 }
 
 fn check_golden(name: &str, dump: &str) {
+    check_golden_file(&format!("{name}.json"), dump);
+}
+
+/// Like [`check_golden`] but takes the golden file name verbatim, for
+/// non-`.json` artifacts (the obs layer exports `.jsonl`).
+fn check_golden_file(file: &str, dump: &str) {
     let dir =
         PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden");
     std::fs::create_dir_all(&dir).unwrap();
-    let path = dir.join(format!("{name}.json"));
+    let path = dir.join(file);
     if path.exists() {
         let golden = std::fs::read_to_string(&path).unwrap();
         assert_eq!(
             golden,
             dump,
-            "{name}: trace drifted from the checked-in golden at {}. \
+            "{file}: trace drifted from the checked-in golden at {}. \
              If the behavior change is intentional, delete the file, \
              re-run, and commit the regenerated golden.",
             path.display()
@@ -478,4 +493,70 @@ fn golden_adapt_trace_is_pinned() {
 fn golden_fleet_adapt_trace_is_pinned() {
     let e = engine();
     check_golden("fleet_adapt_trace", &fleet_adapt_dump(&e));
+}
+
+/// One fixed-seed churn + SLO open-loop run with the obs layer on,
+/// exported to a scratch dir; returns the `spans.jsonl` and
+/// `series.jsonl` bytes. Small head/tail/sample keep the pinned
+/// goldens compact while still retaining head, tail, and sampled
+/// middle spans.
+fn obs_export_dump(e: &Engine) -> (String, String) {
+    let dir = std::env::temp_dir()
+        .join(format!("ecore_obs_golden_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let ds = ecore::dataset::coco::build(16, 43);
+    let store = base_store();
+    let pool =
+        NodePool::deploy(e, &store.pairs(), &ecore::devices::fleet(), 5)
+            .unwrap();
+    let mut gw =
+        Gateway::new(e, router_by_name("ED").unwrap(), store, pool, 5.0, 5);
+    openloop::run_dataset(
+        &mut gw,
+        &ds,
+        &OpenLoopConfig {
+            arrivals: ArrivalProcess::Poisson { rate_rps: 120.0 },
+            queue_capacity: 3,
+            seed: 23,
+            churn: Some(ChurnConfig {
+                mtbf_s: 0.15,
+                mttr_s: 0.2,
+                probe_interval_s: 0.05,
+                probe_timeout_s: 0.02,
+                suspect_after: 1,
+                warmup_s: 0.1,
+                warmup_penalty: 0.5,
+                policy: ResiliencePolicy::Retry { budget: 3 },
+                retry_backoff_s: 0.04,
+                horizon_slack_s: 1.5,
+                seed: 29,
+            }),
+            slo: Some(ecore::workload::slo::SloConfig::default()),
+            adapt: None,
+            obs: Some(ObsConfig {
+                tick_s: 0.1,
+                span_head: 4,
+                span_tail: 4,
+                span_sample: 8,
+                seed: 7,
+                out_dir: dir.to_string_lossy().into_owned(),
+            }),
+        },
+    )
+    .unwrap();
+    let spans =
+        std::fs::read_to_string(dir.join("spans.jsonl")).unwrap();
+    let series =
+        std::fs::read_to_string(dir.join("series.jsonl")).unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+    (spans, series)
+}
+
+#[test]
+fn golden_obs_spans_and_series_are_pinned() {
+    let e = engine();
+    let (spans, series) = obs_export_dump(&e);
+    assert!(!spans.is_empty() && !series.is_empty());
+    check_golden_file("obs_spans.jsonl", &spans);
+    check_golden_file("obs_series.jsonl", &series);
 }

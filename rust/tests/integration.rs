@@ -278,6 +278,7 @@ fn gateway_cost_is_accounted_exactly_once_per_request() {
                 churn: None,
                 slo: None,
                 adapt: None,
+                obs: None,
             },
         )
         .unwrap();
@@ -349,6 +350,7 @@ fn retried_requests_pay_gateway_cost_exactly_once() {
             }),
             slo: None,
             adapt: None,
+            obs: None,
         },
     )
     .unwrap();

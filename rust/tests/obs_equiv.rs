@@ -1,0 +1,160 @@
+//! Obs-on/obs-off equivalence: enabling the observability layer must
+//! not perturb the simulation. Collectors are passive — they fold
+//! copies of event data, schedule no events of their own, and add no
+//! report keys — so a run with `obs: Some(..)` (empty `out_dir`, the
+//! collect-only mode) must serialize byte-identically to the same run
+//! with `obs: None`, in both the open-loop and fleet engines.
+
+use ecore::dataset::{GtBox, Scene};
+use ecore::fleet::parallel::{run_frames_threads, ParallelFleetSpec};
+use ecore::fleet::{DispatchPolicy, FleetConfig};
+use ecore::gateway::{router_by_name, Gateway};
+use ecore::lifecycle::{ChurnConfig, ResiliencePolicy};
+use ecore::nodes::NodePool;
+use ecore::obs::ObsConfig;
+use ecore::router::{PairKey, PairProfile, ProfileStore};
+use ecore::runtime::Engine;
+use ecore::workload::openloop::{self, ArrivalProcess, OpenLoopConfig};
+
+fn base_store() -> ProfileStore {
+    let mut rows = Vec::new();
+    for g in 0..5 {
+        rows.push(PairProfile {
+            pair: PairKey::new("ssd_v1", "jetson_orin_nano"),
+            group: g,
+            map: 50.0,
+            latency_s: 0.005,
+            energy_mwh: 0.002,
+        });
+        rows.push(PairProfile {
+            pair: PairKey::new("yolov8n", "pi5"),
+            group: g,
+            map: if g >= 2 { 75.0 } else { 51.0 },
+            latency_s: 0.05,
+            energy_mwh: 0.05,
+        });
+    }
+    ProfileStore::new(rows)
+}
+
+/// Collect-only obs config: empty `out_dir` means the run records
+/// spans and series but never touches the filesystem.
+fn silent_obs() -> ObsConfig {
+    ObsConfig {
+        tick_s: 0.05,
+        span_head: 8,
+        span_tail: 8,
+        span_sample: 16,
+        seed: 7,
+        out_dir: String::new(),
+    }
+}
+
+fn churn_cfg() -> ChurnConfig {
+    ChurnConfig {
+        mtbf_s: 0.15,
+        mttr_s: 0.2,
+        probe_interval_s: 0.05,
+        probe_timeout_s: 0.02,
+        suspect_after: 1,
+        warmup_s: 0.1,
+        warmup_penalty: 0.5,
+        policy: ResiliencePolicy::Retry { budget: 3 },
+        retry_backoff_s: 0.04,
+        horizon_slack_s: 1.5,
+        seed: 29,
+    }
+}
+
+/// One fixed-seed open-loop run with churn + SLO batching (so sheds,
+/// retries, batches, and deadline accounting all fire), serialized.
+fn openloop_dump(obs: Option<ObsConfig>) -> String {
+    let e = Engine::new(&ecore::default_artifacts_dir()).unwrap();
+    let ds = ecore::dataset::coco::build(14, 99);
+    let store = base_store();
+    let pool =
+        NodePool::deploy(&e, &store.pairs(), &ecore::devices::fleet(), 3)
+            .unwrap();
+    let mut gw = Gateway::new(
+        &e,
+        router_by_name("ED").unwrap(),
+        store,
+        pool,
+        5.0,
+        3,
+    );
+    let report = openloop::run_dataset(
+        &mut gw,
+        &ds,
+        &OpenLoopConfig {
+            arrivals: ArrivalProcess::Poisson { rate_rps: 120.0 },
+            queue_capacity: 3,
+            seed: 17,
+            churn: Some(churn_cfg()),
+            slo: Some(ecore::workload::slo::SloConfig::default()),
+            adapt: None,
+            obs,
+        },
+    )
+    .unwrap();
+    report.to_json().dump()
+}
+
+/// One fixed-seed fleet run through the thread-count entry point,
+/// serialized.
+fn fleet_dump(threads: usize, obs: Option<ObsConfig>) -> String {
+    let ds = ecore::dataset::coco::build(16, 77);
+    let frames: Vec<Scene> = ds.iter_scenes().collect();
+    let gts: Vec<Vec<GtBox>> =
+        frames.iter().map(|s| s.gt.clone()).collect();
+    let artifacts = ecore::default_artifacts_dir();
+    let base = base_store();
+    let report = run_frames_threads(
+        &ParallelFleetSpec {
+            artifacts_dir: &artifacts,
+            base: &base,
+            spec: router_by_name("LE").unwrap(),
+            delta_map: 5.0,
+        },
+        &FleetConfig {
+            n_nodes: 6,
+            n_shards: 2,
+            perturb: 0.15,
+            queue_capacity: 3,
+            dispatch: DispatchPolicy::LeastLoaded,
+            n_sources: 4,
+            seed: 11,
+            drift: None,
+            churn: Some(churn_cfg()),
+            slo: Some(ecore::workload::slo::SloConfig::default()),
+            adapt: None,
+            obs,
+            threads,
+        },
+        &frames,
+        &gts,
+        &ArrivalProcess::Poisson { rate_rps: 200.0 },
+        31,
+    )
+    .unwrap();
+    report.to_json().dump()
+}
+
+#[test]
+fn openloop_report_identical_with_obs_on() {
+    let off = openloop_dump(None);
+    let on = openloop_dump(Some(silent_obs()));
+    assert_eq!(off, on, "obs layer perturbed the open-loop report");
+}
+
+#[test]
+fn fleet_report_identical_with_obs_on() {
+    for threads in [1usize, 2] {
+        let off = fleet_dump(threads, None);
+        let on = fleet_dump(threads, Some(silent_obs()));
+        assert_eq!(
+            off, on,
+            "obs layer perturbed the fleet report at threads={threads}"
+        );
+    }
+}

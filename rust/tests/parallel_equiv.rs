@@ -113,6 +113,7 @@ fn plain_cfg(n_nodes: usize, n_shards: usize) -> FleetConfig {
         churn: None,
         slo: None,
         adapt: None,
+        obs: None,
         threads: 1,
     }
 }
@@ -276,6 +277,7 @@ fn randomized_config_sweep_matches_sequential() {
                 None
             },
             adapt: None,
+            obs: None,
             threads: 1,
         };
         let rate = 80.0 + 40.0 * (next() % 4) as f64;
@@ -286,4 +288,64 @@ fn randomized_config_sweep_matches_sequential() {
         );
         assert_equiv(&label, "ED", 12, next(), &cfg, rate, next());
     }
+}
+
+#[test]
+fn obs_export_identical_across_threads() {
+    use ecore::obs::ObsConfig;
+    // The observability exports must be byte-identical at every
+    // worker count, not just the report: per-shard collectors are
+    // merged in shard order with the spine last, so the files carry
+    // no trace of the thread schedule. Churn + SLO batching keeps
+    // every span edge kind (shed/retry/hedge/loss/batch) in play.
+    let base_dir = std::env::temp_dir()
+        .join(format!("ecore_obs_equiv_{}", std::process::id()));
+    let cfg0 = FleetConfig {
+        queue_capacity: 3,
+        churn: Some(churn_cfg(ResiliencePolicy::Retry { budget: 2 })),
+        slo: Some(ecore::workload::slo::SloConfig::default()),
+        ..plain_cfg(6, 2)
+    };
+    const FILES: [&str; 3] =
+        ["spans.jsonl", "series.jsonl", "metrics.prom"];
+    let mut want: Option<Vec<String>> = None;
+    for threads in [1usize, 2, 4] {
+        let dir = base_dir.join(format!("t{threads}"));
+        std::fs::create_dir_all(&dir).unwrap();
+        let cfg = FleetConfig {
+            threads,
+            obs: Some(ObsConfig {
+                tick_s: 0.05,
+                span_head: 8,
+                span_tail: 8,
+                span_sample: 16,
+                seed: 7,
+                out_dir: dir.to_string_lossy().into_owned(),
+            }),
+            ..cfg0.clone()
+        };
+        let _ = dump("LE", 16, 77, &cfg, 200.0, 31);
+        let got: Vec<String> = FILES
+            .iter()
+            .map(|f| std::fs::read_to_string(dir.join(f)).unwrap())
+            .collect();
+        assert!(
+            got.iter().any(|s| !s.is_empty()),
+            "threads={threads}: all exports empty"
+        );
+        match &want {
+            None => want = Some(got),
+            Some(w) => {
+                for (name, (a, b)) in
+                    FILES.iter().zip(w.iter().zip(got.iter()))
+                {
+                    assert_eq!(
+                        a, b,
+                        "threads={threads}: {name} diverged"
+                    );
+                }
+            }
+        }
+    }
+    let _ = std::fs::remove_dir_all(&base_dir);
 }
