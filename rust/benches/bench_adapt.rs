@@ -75,6 +75,7 @@ fn main() {
                     churn: None,
                     slo: None,
                     adapt: adapt.clone(),
+                    campaign: None,
                     obs: None,
                 },
             )

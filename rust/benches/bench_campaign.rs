@@ -1,0 +1,147 @@
+//! Campaign simulator throughput: full sharded discrete-event runs
+//! with the failure-campaign layer active — seeded domain-wide outage
+//! schedules, shard-gateway kills with deterministic re-homing, and
+//! adoption-driven membership bootstraps, on top of probe-driven
+//! churn. The spread against the plain churn row is the pure cost of
+//! the campaign machinery (plan merge, domain marks, release/adopt
+//! bookkeeping); the gateway row adds the failover path. Each case is
+//! measured at threads=1 (sequential shared-heap) and threads=4
+//! (per-shard heaps under the watermark merge).
+
+use std::time::Instant;
+
+use ecore::config::ExperimentConfig;
+use ecore::dataset::{coco, GtBox, Scene};
+use ecore::experiments::serve::deployed_store;
+use ecore::experiments::Harness;
+use ecore::fleet::parallel::{run_frames_threads, ParallelFleetSpec};
+use ecore::fleet::{DispatchPolicy, FleetConfig};
+use ecore::gateway::router_by_name;
+use ecore::lifecycle::campaign::CampaignConfig;
+use ecore::lifecycle::{ChurnConfig, ResiliencePolicy};
+use ecore::util::bench::{black_box, Bench};
+use ecore::workload::openloop::ArrivalProcess;
+
+fn churn_cfg() -> ChurnConfig {
+    ChurnConfig {
+        mtbf_s: 0.8,
+        mttr_s: 0.2,
+        probe_interval_s: 0.05,
+        probe_timeout_s: 0.02,
+        suspect_after: 1,
+        policy: ResiliencePolicy::Retry { budget: 4 },
+        retry_backoff_s: 0.05,
+        horizon_slack_s: 2.0,
+        ..Default::default()
+    }
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let cfg = ExperimentConfig {
+        profile_per_group: if quick { 6 } else { 12 },
+        ..Default::default()
+    };
+    let h = Harness::new(cfg).unwrap();
+    let deployed = deployed_store(&h).unwrap();
+    let ds = coco::build(24, 7);
+    let frames: Vec<Scene> = ds.iter_scenes().collect();
+    let gts: Vec<Vec<GtBox>> =
+        frames.iter().map(|s| s.gt.clone()).collect();
+
+    let domains_only = CampaignConfig {
+        domain_size: 3,
+        domain_mtbf_s: 0.4,
+        domain_mttr_s: 0.15,
+        gateway_mtbf_s: f64::INFINITY,
+        gateway_mttr_s: 0.1,
+        seed: 23,
+    };
+    let with_gateways = CampaignConfig {
+        gateway_mtbf_s: 0.5,
+        gateway_mttr_s: 0.15,
+        ..domains_only.clone()
+    };
+    let full_cases = [
+        ("churn_only", None, 1usize),
+        ("domains", Some(domains_only.clone()), 1),
+        ("domains_t4", Some(domains_only), 4),
+        ("gateways", Some(with_gateways.clone()), 1),
+        ("gateways_t4", Some(with_gateways), 4),
+    ];
+    let cases: &[(&str, Option<CampaignConfig>, usize)] =
+        if quick { &full_cases[..2] } else { &full_cases };
+
+    let mut b = Bench::new("campaign");
+    let mut extras_owned: Vec<(String, f64)> = Vec::new();
+    for (name, campaign, threads) in cases {
+        let run_once = || {
+            run_frames_threads(
+                &ParallelFleetSpec {
+                    artifacts_dir: h.artifacts_dir(),
+                    base: &deployed,
+                    spec: router_by_name("ED").unwrap(),
+                    delta_map: 5.0,
+                },
+                &FleetConfig {
+                    n_nodes: 12,
+                    n_shards: 3,
+                    perturb: 0.15,
+                    queue_capacity: 8,
+                    dispatch: DispatchPolicy::LeastLoaded,
+                    n_sources: 16,
+                    seed: 1,
+                    drift: None,
+                    churn: Some(churn_cfg()),
+                    slo: None,
+                    adapt: None,
+                    campaign: campaign.clone(),
+                    obs: None,
+                    threads: *threads,
+                },
+                &frames,
+                &gts,
+                &ArrivalProcess::Poisson { rate_rps: 400.0 },
+                3,
+            )
+            .unwrap()
+        };
+        // warm-up + event census (deterministic per config/seed)
+        let t0 = Instant::now();
+        let report = run_once();
+        let cold_wall = t0.elapsed().as_secs_f64();
+        let events = report.offered + report.requests();
+        let (outages, kills) = report
+            .campaign
+            .as_ref()
+            .map_or((0, 0), |c| (c.domain_outages, c.gw_kills));
+        println!(
+            "{:<14} {:>10.0} events/sec cold  ({} events, {} outages, {} gw kills)",
+            name,
+            events as f64 / cold_wall.max(1e-9),
+            events,
+            outages,
+            kills
+        );
+        b.run(name, || black_box(run_once().requests()));
+        // headline events/sec from the MEASURED MEDIAN run time (the
+        // cold run above is warm-up, not the tracked number)
+        let runs_per_sec = b
+            .results()
+            .last()
+            .expect("case just measured")
+            .throughput_per_sec();
+        extras_owned.push((
+            format!("events_per_sec_{name}"),
+            events as f64 * runs_per_sec,
+        ));
+    }
+
+    let (secs, count) = h.engine.exec_stats();
+    println!(
+        "harness engine totals (profiling): {count} inferences, \
+         {:.1} ms mean",
+        1000.0 * secs / count.max(1) as f64
+    );
+    b.finish_json(&extras_owned);
+}

@@ -92,6 +92,7 @@ fn main() {
                     churn: churn.clone(),
                     slo: None,
                     adapt: None,
+                    campaign: None,
                     obs: None,
                 },
             )

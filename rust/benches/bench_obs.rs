@@ -79,6 +79,7 @@ fn main() {
                     churn: None,
                     slo: None,
                     adapt: None,
+                    campaign: None,
                     obs: obs.clone(),
                 },
             )

@@ -63,6 +63,7 @@ fn main() {
                     churn: None,
                     slo: None,
                     adapt: None,
+                    campaign: None,
                     obs: None,
                 },
             )

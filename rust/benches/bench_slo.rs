@@ -76,6 +76,7 @@ fn main() {
                     churn: None,
                     slo: slo.clone(),
                     adapt: None,
+                    campaign: None,
                     obs: None,
                 },
             )

@@ -256,6 +256,10 @@ pub struct ExperimentConfig {
     pub churn_retry_budget: usize,
     /// Churn: backoff before a retry re-enters routing (s).
     pub churn_retry_backoff_s: f64,
+    /// Churn: cancellation-on-first-response for the hedge policy —
+    /// kill the losing sibling the instant the winner completes,
+    /// charging only the energy it accrued.
+    pub churn_hedge_cancel: bool,
     /// Churn sweep: steady-state availability levels (1.0 = no churn).
     pub churn_availability: Vec<f64>,
     /// Churn sweep: resilience policies compared per cell.
@@ -266,6 +270,38 @@ pub struct ExperimentConfig {
     pub churn_rate_rps: f64,
     /// Churn sweep: offered requests per cell.
     pub churn_requests: usize,
+    /// Campaign: nodes per failure domain (`serve --campaign`).
+    pub campaign_domain_size: usize,
+    /// Campaign: mean time between outages per domain (s); `inf`
+    /// disables domain outages.
+    pub campaign_domain_mtbf_s: f64,
+    /// Campaign: mean domain outage duration (s).
+    pub campaign_domain_mttr_s: f64,
+    /// Campaign: mean time between shard-gateway kills (s); `inf`
+    /// disables gateway kills (fleet mode only).
+    pub campaign_gateway_mtbf_s: f64,
+    /// Campaign: mean gateway outage duration (s).
+    pub campaign_gateway_mttr_s: f64,
+    /// Campaign sweep: synthesized fleet size (total nodes).
+    pub campaign_nodes: usize,
+    /// Campaign sweep: gateway shard count.
+    pub campaign_shards: usize,
+    /// Campaign sweep: domain fan-outs compared per cell.
+    pub campaign_domain_sizes: Vec<usize>,
+    /// Campaign sweep: per-domain outage rates (outages/s; the cell's
+    /// `domain_mtbf_s` is the reciprocal).
+    pub campaign_outage_rates: Vec<f64>,
+    /// Campaign sweep: routers compared per cell.
+    pub campaign_routers: Vec<String>,
+    /// Campaign sweep: resilience policies compared per cell.
+    pub campaign_policies: Vec<String>,
+    /// Campaign sweep: Poisson arrival rate (req/s).
+    pub campaign_rate_rps: f64,
+    /// Campaign sweep: offered requests per cell.
+    pub campaign_requests: usize,
+    /// Campaign sweep: run the escalation phase (double the outage
+    /// rate per step until each router's goodput collapses).
+    pub campaign_escalate: bool,
     /// SLO: deadline classes as `name:deadline_s` specs, assigned
     /// round-robin by request index.
     pub slo_classes: Vec<String>,
@@ -378,6 +414,27 @@ impl Default for ExperimentConfig {
                 .collect(),
             churn_rate_rps: 8.0,
             churn_requests: 60,
+            churn_hedge_cancel: false,
+            campaign_domain_size: 4,
+            campaign_domain_mtbf_s: 20.0,
+            campaign_domain_mttr_s: 2.0,
+            campaign_gateway_mtbf_s: f64::INFINITY,
+            campaign_gateway_mttr_s: 1.0,
+            campaign_nodes: 12,
+            campaign_shards: 3,
+            campaign_domain_sizes: vec![2, 4],
+            campaign_outage_rates: vec![0.05, 0.2],
+            campaign_routers: ["LE", "ED"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+            campaign_policies: ["drop", "retry", "hedge"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+            campaign_rate_rps: 60.0,
+            campaign_requests: 96,
+            campaign_escalate: true,
             slo_classes: [
                 "interactive:0.05",
                 "standard:0.25",
@@ -513,6 +570,61 @@ impl ExperimentConfig {
                 .f64_or("experiment.churn_rate_rps", d.churn_rate_rps),
             churn_requests: t
                 .usize_or("experiment.churn_requests", d.churn_requests),
+            churn_hedge_cancel: t.bool_or(
+                "experiment.churn_hedge_cancel",
+                d.churn_hedge_cancel,
+            ),
+            campaign_domain_size: t.usize_or(
+                "experiment.campaign_domain_size",
+                d.campaign_domain_size,
+            ),
+            campaign_domain_mtbf_s: t.f64_or(
+                "experiment.campaign_domain_mtbf_s",
+                d.campaign_domain_mtbf_s,
+            ),
+            campaign_domain_mttr_s: t.f64_or(
+                "experiment.campaign_domain_mttr_s",
+                d.campaign_domain_mttr_s,
+            ),
+            campaign_gateway_mtbf_s: t.f64_or(
+                "experiment.campaign_gateway_mtbf_s",
+                d.campaign_gateway_mtbf_s,
+            ),
+            campaign_gateway_mttr_s: t.f64_or(
+                "experiment.campaign_gateway_mttr_s",
+                d.campaign_gateway_mttr_s,
+            ),
+            campaign_nodes: t
+                .usize_or("experiment.campaign_nodes", d.campaign_nodes),
+            campaign_shards: t
+                .usize_or("experiment.campaign_shards", d.campaign_shards),
+            campaign_domain_sizes: t
+                .get("experiment.campaign_domain_sizes")
+                .and_then(|v| v.as_f64_list())
+                .map(|v| v.iter().map(|&x| x as usize).collect())
+                .unwrap_or(d.campaign_domain_sizes),
+            campaign_outage_rates: t
+                .get("experiment.campaign_outage_rates")
+                .and_then(|v| v.as_f64_list())
+                .unwrap_or(d.campaign_outage_rates),
+            campaign_routers: t
+                .get("experiment.campaign_routers")
+                .and_then(|v| v.as_str_list())
+                .unwrap_or(d.campaign_routers),
+            campaign_policies: t
+                .get("experiment.campaign_policies")
+                .and_then(|v| v.as_str_list())
+                .unwrap_or(d.campaign_policies),
+            campaign_rate_rps: t
+                .f64_or("experiment.campaign_rate_rps", d.campaign_rate_rps),
+            campaign_requests: t.usize_or(
+                "experiment.campaign_requests",
+                d.campaign_requests,
+            ),
+            campaign_escalate: t.bool_or(
+                "experiment.campaign_escalate",
+                d.campaign_escalate,
+            ),
             slo_classes: t
                 .get("experiment.slo_classes")
                 .and_then(|v| v.as_str_list())
@@ -658,6 +770,45 @@ impl ExperimentConfig {
             args.f64_or("churn-rate", self.churn_rate_rps);
         self.churn_requests =
             args.usize_or("churn-requests", self.churn_requests);
+        if args.flag("hedge-cancel") {
+            self.churn_hedge_cancel = true;
+        }
+        self.campaign_domain_size =
+            args.usize_or("domain-size", self.campaign_domain_size);
+        self.campaign_domain_mtbf_s =
+            args.f64_or("domain-mtbf", self.campaign_domain_mtbf_s);
+        self.campaign_domain_mttr_s =
+            args.f64_or("domain-mttr", self.campaign_domain_mttr_s);
+        self.campaign_gateway_mtbf_s =
+            args.f64_or("gateway-mtbf", self.campaign_gateway_mtbf_s);
+        self.campaign_gateway_mttr_s =
+            args.f64_or("gateway-mttr", self.campaign_gateway_mttr_s);
+        self.campaign_nodes =
+            args.usize_or("campaign-nodes", self.campaign_nodes);
+        self.campaign_shards =
+            args.usize_or("campaign-shards", self.campaign_shards);
+        if args.get("campaign-domain-sizes").is_some() {
+            self.campaign_domain_sizes =
+                args.usize_list_or("campaign-domain-sizes", &[]);
+        }
+        if args.get("campaign-outage-rates").is_some() {
+            self.campaign_outage_rates =
+                args.f64_list_or("campaign-outage-rates", &[]);
+        }
+        if args.get("campaign-routers").is_some() {
+            self.campaign_routers = args.list_or("campaign-routers", &[]);
+        }
+        if args.get("campaign-policies").is_some() {
+            self.campaign_policies =
+                args.list_or("campaign-policies", &[]);
+        }
+        self.campaign_rate_rps =
+            args.f64_or("campaign-rate", self.campaign_rate_rps);
+        self.campaign_requests =
+            args.usize_or("campaign-requests", self.campaign_requests);
+        if args.flag("no-escalate") {
+            self.campaign_escalate = false;
+        }
         if args.get("slo-classes").is_some() {
             self.slo_classes = args.list_or("slo-classes", &[]);
         }
@@ -748,10 +899,31 @@ impl ExperimentConfig {
             warmup_penalty: self.churn_warmup_penalty,
             policy,
             retry_backoff_s: self.churn_retry_backoff_s,
+            hedge_cancel: self.churn_hedge_cancel,
             horizon_slack_s: crate::lifecycle::ChurnConfig::default()
                 .horizon_slack_s,
             seed: self.seed ^ 0xC4A2,
         })
+    }
+
+    /// Materialize the campaign keys into a [`CampaignConfig`] (the
+    /// `serve --campaign` path; the `campaign` sweep overrides
+    /// `domain_size`/`domain_mtbf_s` per cell).
+    ///
+    /// [`CampaignConfig`]: crate::lifecycle::campaign::CampaignConfig
+    pub fn campaign_config(
+        &self,
+    ) -> Result<crate::lifecycle::campaign::CampaignConfig> {
+        let cfg = crate::lifecycle::campaign::CampaignConfig {
+            domain_size: self.campaign_domain_size.max(1),
+            domain_mtbf_s: self.campaign_domain_mtbf_s,
+            domain_mttr_s: self.campaign_domain_mttr_s,
+            gateway_mtbf_s: self.campaign_gateway_mtbf_s,
+            gateway_mttr_s: self.campaign_gateway_mttr_s,
+            seed: self.seed ^ 0x0CA4,
+        };
+        cfg.validate()?;
+        Ok(cfg)
     }
 
     /// Materialize the SLO keys into an [`SloConfig`] (the `serve
@@ -953,6 +1125,54 @@ routers = ["ED", "OB"]
         // bad policy is a typed error
         c.churn_policy = "wat".into();
         assert!(c.churn_config().is_err());
+    }
+
+    #[test]
+    fn campaign_keys_parse_override_and_materialize() {
+        let t = Table::parse(
+            "[experiment]\ncampaign_domain_size = 3\ncampaign_domain_mtbf_s = 8\ncampaign_outage_rates = [0.1, 0.4]\nchurn_hedge_cancel = true\n",
+        )
+        .unwrap();
+        let mut c = ExperimentConfig::from_table(&t);
+        assert_eq!(c.campaign_domain_size, 3);
+        assert_eq!(c.campaign_domain_mtbf_s, 8.0);
+        assert_eq!(c.campaign_outage_rates, vec![0.1, 0.4]);
+        assert!(c.churn_hedge_cancel);
+        let d = ExperimentConfig::default();
+        assert_eq!(c.campaign_domain_mttr_s, d.campaign_domain_mttr_s);
+        assert!(c.campaign_gateway_mtbf_s.is_infinite());
+        assert_eq!(c.campaign_routers, d.campaign_routers);
+        // CLI wins over file
+        let args = crate::util::cli::Args::parse(
+            [
+                "--domain-size",
+                "5",
+                "--gateway-mtbf",
+                "6.5",
+                "--campaign-policies",
+                "retry,hedge",
+                "--no-escalate",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+        );
+        c.override_with(&args);
+        assert_eq!(c.campaign_domain_size, 5);
+        assert_eq!(c.campaign_gateway_mtbf_s, 6.5);
+        assert_eq!(c.campaign_policies, vec!["retry", "hedge"]);
+        assert!(!c.campaign_escalate);
+        // materializes into a typed CampaignConfig; the churn flag
+        // flows into the churn materializer
+        let cc = c.campaign_config().unwrap();
+        assert_eq!(cc.domain_size, 5);
+        assert_eq!(cc.domain_mtbf_s, 8.0);
+        assert_eq!(cc.gateway_mtbf_s, 6.5);
+        assert_eq!(cc.seed, c.seed ^ 0x0CA4);
+        assert!(cc.domains_enabled() && cc.gateway_enabled());
+        assert!(c.churn_config().unwrap().hedge_cancel);
+        // a nonsensical schedule is a typed error
+        c.campaign_domain_mttr_s = -1.0;
+        assert!(c.campaign_config().is_err());
     }
 
     #[test]

@@ -76,6 +76,7 @@ fn run_cell(
             churn: None,
             slo: None,
             adapt,
+            campaign: None,
             obs: None,
         },
     )

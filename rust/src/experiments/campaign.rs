@@ -1,0 +1,337 @@
+//! Campaign sweep: router survivability under correlated failure
+//! campaigns (DESIGN.md §15).
+//!
+//! For each (domain size, outage rate, router, resilience policy) cell
+//! the driver synthesizes a sharded fleet from the deployed Table-1
+//! store, layers a seeded campaign schedule on probe-driven membership
+//! (per-node churn silenced: every failure is a domain-wide outage),
+//! replays the same pre-rendered request set, and reports goodput,
+//! time-to-recover, and energy per request. The conservation invariant
+//! `offered == served + dropped + lost` is asserted on every cell —
+//! a campaign may black out whole shards, but no request may vanish
+//! from the ledger.
+//!
+//! With escalation enabled (`campaign_escalate`, on by default) a
+//! second phase walks each router's outage rate upward — doubling per
+//! step — until goodput collapses below half its calmest-cell value,
+//! reporting the breaking point as outages/s.
+
+use anyhow::{Context, Result};
+
+use super::serve::deployed_store;
+use super::Harness;
+use crate::dataset::{coco, GtBox, Scene};
+use crate::fleet::parallel::{run_frames_threads, ParallelFleetSpec};
+use crate::fleet::{DispatchPolicy, FleetConfig, FleetReport};
+use crate::gateway::router_by_name;
+use crate::lifecycle::campaign::CampaignConfig;
+use crate::lifecycle::{ChurnConfig, ResiliencePolicy};
+use crate::util::json::Json;
+use crate::workload::openloop::ArrivalProcess;
+
+/// Run one campaign cell and assert the conservation ledger.
+#[allow(clippy::too_many_arguments)]
+fn run_cell(
+    h: &Harness,
+    base: &crate::router::ProfileStore,
+    frames: &[Scene],
+    gts: &[Vec<GtBox>],
+    router: &str,
+    churn_cfg: ChurnConfig,
+    campaign_cfg: Option<CampaignConfig>,
+    dispatch: DispatchPolicy,
+) -> Result<FleetReport> {
+    let spec = router_by_name(router)
+        .with_context(|| format!("unknown router '{router}'"))?;
+    let fcfg = FleetConfig {
+        n_nodes: h.cfg.campaign_nodes,
+        n_shards: h.cfg.campaign_shards,
+        perturb: h.cfg.fleet_perturb,
+        queue_capacity: h.cfg.queue_capacity,
+        dispatch,
+        n_sources: h.cfg.fleet_sources,
+        seed: h.cfg.seed,
+        drift: None,
+        churn: Some(churn_cfg),
+        slo: None,
+        adapt: None,
+        campaign: campaign_cfg,
+        obs: None,
+        threads: h.cfg.fleet_threads,
+    };
+    let report = run_frames_threads(
+        &ParallelFleetSpec {
+            artifacts_dir: h.artifacts_dir(),
+            base,
+            spec,
+            delta_map: h.cfg.delta_map,
+        },
+        &fcfg,
+        frames,
+        gts,
+        &ArrivalProcess::Poisson {
+            rate_rps: h.cfg.campaign_rate_rps,
+        },
+        h.cfg.seed,
+    )?;
+    let lost = report.churn.as_ref().map_or(0, |c| c.lost);
+    anyhow::ensure!(
+        report.offered == report.requests() + report.dropped + lost,
+        "campaign ledger violated: offered {} != served {} + dropped {} + lost {}",
+        report.offered,
+        report.requests(),
+        report.dropped,
+        lost
+    );
+    Ok(report)
+}
+
+/// The `campaign` experiment: sweep domain size x outage rate x router
+/// x resilience policy, then (optionally) escalate to each router's
+/// breaking point.
+pub fn campaign(h: &Harness) -> Result<()> {
+    let n = h.cfg.campaign_requests.max(1);
+    let ds = coco::build(n, h.cfg.seed ^ 0x0CA5);
+    let frames: Vec<Scene> = ds.iter_scenes().collect();
+    let gts: Vec<Vec<GtBox>> =
+        frames.iter().map(|s| s.gt.clone()).collect();
+    let base = deployed_store(h)?;
+    let dispatch =
+        DispatchPolicy::parse(&h.cfg.fleet_dispatch).with_context(|| {
+            format!(
+                "unknown dispatch policy '{}' (hash|least|sticky)",
+                h.cfg.fleet_dispatch
+            )
+        })?;
+    // per-node churn silenced: the campaign schedule is the only
+    // failure source, so cells differ purely in correlation structure
+    let churn_base = ChurnConfig {
+        mtbf_s: f64::INFINITY,
+        ..h.cfg.churn_config()?
+    };
+    let camp_base = h.cfg.campaign_config()?;
+    eprintln!(
+        "[campaign] fleet {} nodes / {} shards, {} requests @ {} req/s, gw mtbf {} s, threads {}",
+        h.cfg.campaign_nodes,
+        h.cfg.campaign_shards,
+        n,
+        h.cfg.campaign_rate_rps,
+        camp_base.gateway_mtbf_s,
+        h.cfg.fleet_threads
+    );
+    println!(
+        "--- campaign (domain x outage-rate x router x resilience over {n} requests) ---"
+    );
+    println!(
+        "{:<6} {:>4} {:>7} {:>7} {:>9} {:>12} {:>5} {:>5} {:>8} {:>7} {:>8}",
+        "router",
+        "dom",
+        "out/s",
+        "policy",
+        "goodput",
+        "mWh_per_req",
+        "drop",
+        "lost",
+        "outages",
+        "adopt",
+        "ttr_s"
+    );
+    let mut rows = Vec::new();
+    for &dsize in &h.cfg.campaign_domain_sizes {
+        for &rate in &h.cfg.campaign_outage_rates {
+            for router in &h.cfg.campaign_routers {
+                for pname in &h.cfg.campaign_policies {
+                    let policy = ResiliencePolicy::parse(
+                        pname,
+                        h.cfg.churn_retry_budget,
+                    )
+                    .with_context(|| {
+                        format!(
+                            "unknown resilience policy '{pname}' (drop|retry|hedge)"
+                        )
+                    })?;
+                    let churn_cfg = ChurnConfig {
+                        policy,
+                        ..churn_base.clone()
+                    };
+                    let campaign_cfg = CampaignConfig {
+                        domain_size: dsize.max(1),
+                        domain_mtbf_s: 1.0 / rate.max(1e-9),
+                        ..camp_base.clone()
+                    };
+                    let report = run_cell(
+                        h,
+                        &base,
+                        &frames,
+                        &gts,
+                        router,
+                        churn_cfg,
+                        Some(campaign_cfg),
+                        dispatch,
+                    )?;
+                    let c = report
+                        .campaign
+                        .clone()
+                        .expect("campaign report missing");
+                    let ch = report
+                        .churn
+                        .clone()
+                        .expect("churn report missing");
+                    println!(
+                        "{:<6} {:>4} {:>7.3} {:>7} {:>9.2} {:>12.4} {:>5} {:>5} {:>8} {:>7} {:>8.2}",
+                        router,
+                        dsize,
+                        rate,
+                        policy.label(),
+                        report.goodput_rps(),
+                        report.energy_per_request_mwh(),
+                        report.dropped,
+                        ch.lost,
+                        c.domain_outages,
+                        c.adoptions,
+                        ch.mean_time_to_recover_s,
+                    );
+                    rows.push(Json::obj(vec![
+                        ("phase", Json::str("sweep")),
+                        ("router", Json::str(router.as_str())),
+                        ("domain_size", Json::num(dsize as f64)),
+                        ("outage_rate", Json::num(rate)),
+                        ("policy", Json::str(policy.label())),
+                        (
+                            "rate_rps",
+                            Json::num(h.cfg.campaign_rate_rps),
+                        ),
+                        ("report", report.to_json()),
+                    ]));
+                }
+            }
+        }
+        println!();
+    }
+    if h.cfg.campaign_escalate {
+        escalate(
+            h, &base, &frames, &gts, &churn_base, &camp_base, dispatch,
+            &mut rows,
+        )?;
+    }
+    h.save_json("campaign", &Json::Arr(rows))
+}
+
+/// Escalation phase: per router, double the outage rate each step
+/// until goodput collapses below half the calmest cell's goodput (or
+/// the step cap is hit), and report the breaking point.
+#[allow(clippy::too_many_arguments)]
+fn escalate(
+    h: &Harness,
+    base: &crate::router::ProfileStore,
+    frames: &[Scene],
+    gts: &[Vec<GtBox>],
+    churn_base: &ChurnConfig,
+    camp_base: &CampaignConfig,
+    dispatch: DispatchPolicy,
+    rows: &mut Vec<Json>,
+) -> Result<()> {
+    const MAX_STEPS: usize = 6;
+    // escalate under retry if the sweep includes it — the policy most
+    // runs deploy — else under whatever the sweep led with
+    let pname = h
+        .cfg
+        .campaign_policies
+        .iter()
+        .find(|p| p.as_str() == "retry")
+        .or_else(|| h.cfg.campaign_policies.first())
+        .map_or("retry", |s| s.as_str());
+    let policy =
+        ResiliencePolicy::parse(pname, h.cfg.churn_retry_budget)
+            .with_context(|| {
+                format!("unknown resilience policy '{pname}'")
+            })?;
+    let dsize = h
+        .cfg
+        .campaign_domain_sizes
+        .last()
+        .copied()
+        .unwrap_or(camp_base.domain_size)
+        .max(1);
+    let base_rate = h
+        .cfg
+        .campaign_outage_rates
+        .first()
+        .copied()
+        .unwrap_or(0.05)
+        .max(1e-9);
+    println!("--- campaign escalation (domain {dsize}, policy {}, x2 per step) ---", policy.label());
+    println!(
+        "{:<6} {:>5} {:>8} {:>9} {:>9} {:>8} {:>9}",
+        "router", "step", "out/s", "goodput", "frac", "outages", "broken"
+    );
+    for router in &h.cfg.campaign_routers {
+        let mut baseline = None;
+        let mut breaking = None;
+        for step in 0..MAX_STEPS {
+            let rate = base_rate * (1 << step) as f64;
+            let churn_cfg = ChurnConfig {
+                policy,
+                ..churn_base.clone()
+            };
+            let campaign_cfg = CampaignConfig {
+                domain_size: dsize,
+                domain_mtbf_s: 1.0 / rate,
+                ..camp_base.clone()
+            };
+            let report = run_cell(
+                h,
+                base,
+                frames,
+                gts,
+                router,
+                churn_cfg,
+                Some(campaign_cfg),
+                dispatch,
+            )?;
+            let good = report.goodput_rps();
+            let bl = *baseline.get_or_insert(good.max(1e-9));
+            let frac = good / bl;
+            let broke = frac < 0.5;
+            let c = report
+                .campaign
+                .clone()
+                .expect("campaign report missing");
+            println!(
+                "{:<6} {:>5} {:>8.3} {:>9.2} {:>9.2} {:>8} {:>9}",
+                router,
+                step,
+                rate,
+                good,
+                frac,
+                c.domain_outages,
+                if broke { "yes" } else { "-" }
+            );
+            rows.push(Json::obj(vec![
+                ("phase", Json::str("escalate")),
+                ("router", Json::str(router.as_str())),
+                ("step", Json::num(step as f64)),
+                ("domain_size", Json::num(dsize as f64)),
+                ("outage_rate", Json::num(rate)),
+                ("policy", Json::str(policy.label())),
+                ("goodput_frac", Json::num(frac)),
+                ("report", report.to_json()),
+            ]));
+            if broke {
+                breaking = Some(rate);
+                break;
+            }
+        }
+        match breaking {
+            Some(r) => println!(
+                "{router}: breaks at {r:.3} outages/s per domain"
+            ),
+            None => println!(
+                "{router}: survives {MAX_STEPS} escalation steps (last rate {:.3}/s)",
+                base_rate * (1 << (MAX_STEPS - 1)) as f64
+            ),
+        }
+    }
+    println!();
+    Ok(())
+}

@@ -97,6 +97,7 @@ pub fn churn(h: &Harness) -> Result<()> {
                         churn: Some(churn_cfg),
                         slo: None,
                         adapt: None,
+                        campaign: None,
                         obs: None,
                     },
                 )?;

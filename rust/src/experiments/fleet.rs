@@ -84,6 +84,7 @@ pub fn fleet(h: &Harness) -> Result<()> {
                     churn: None,
                     slo: None,
                     adapt: None,
+                    campaign: None,
                     obs: None,
                     threads: h.cfg.fleet_threads,
                 };

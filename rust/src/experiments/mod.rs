@@ -16,12 +16,14 @@
 //! | `churn`   | router survivability under node churn (§9)       |
 //! | `slo`     | SLO attainment + dynamic batching sweep (§11)    |
 //! | `adapt`   | online adaptation under device drift (§12)       |
+//! | `campaign`| correlated failure campaigns + failover (§15)    |
 //!
 //! Every driver prints the paper-style table and writes
 //! `results/<id>.json` for downstream plotting.
 
 pub mod ablations;
 pub mod adapt;
+pub mod campaign;
 pub mod churn;
 pub mod fleet;
 pub mod openloop;
@@ -41,9 +43,9 @@ use crate::router::{GroupRules, ProfileStore};
 use crate::runtime::Engine;
 use crate::util::json::Json;
 
-pub const ALL_EXPERIMENTS: [&str; 14] = [
+pub const ALL_EXPERIMENTS: [&str; 15] = [
     "fig2", "fig4", "fig5", "table1", "fig6", "fig7", "fig8", "fig9",
-    "overhead", "openloop", "fleet", "churn", "slo", "adapt",
+    "overhead", "openloop", "fleet", "churn", "slo", "adapt", "campaign",
 ];
 
 /// Shared experiment context.
@@ -149,6 +151,7 @@ impl Harness {
             "churn" => churn::churn(self),
             "slo" => slo::slo(self),
             "adapt" => adapt::adapt(self),
+            "campaign" => campaign::campaign(self),
             "ablation_groups" => ablations::ablation_groups(self),
             "ablation_batch" => ablations::ablation_batch(self),
             "ablation_weighted" => ablations::ablation_weighted(self),

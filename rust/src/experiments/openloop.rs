@@ -20,14 +20,16 @@ use crate::workload::openloop::{
     ArrivalProcess, OpenLoopConfig, OpenLoopReport,
 };
 
-/// Run one (router, rate) cell over shared pre-rendered frames.
+/// Run one (router, arrival process) cell over shared pre-rendered
+/// frames.
 fn run_cell(
     h: &Harness,
     spec: crate::gateway::RouterSpec,
     deployed: &crate::router::ProfileStore,
     frames: &[Scene],
     gts: &[Vec<GtBox>],
-    rate_rps: f64,
+    arrivals: ArrivalProcess,
+    label: &str,
 ) -> Result<OpenLoopReport> {
     let mut gw = build_gateway(h, spec, deployed, h.cfg.delta_map)?;
     crate::workload::openloop::run_frames(
@@ -35,17 +37,18 @@ fn run_cell(
         frames,
         gts,
         &OpenLoopConfig {
-            arrivals: ArrivalProcess::Poisson { rate_rps },
+            arrivals,
             queue_capacity: h.cfg.queue_capacity,
             seed: h.cfg.seed,
             churn: None,
             slo: None,
             adapt: None,
+            campaign: None,
             obs: None,
         },
     )
     .map(|mut report| {
-        report.metrics.label = format!("{}@{rate_rps}", spec.name);
+        report.metrics.label = format!("{}@{label}", spec.name);
         report
     })
 }
@@ -83,9 +86,40 @@ pub fn openloop(h: &Harness) -> Result<()> {
         "energy_mWh"
     );
     let mut rows = Vec::new();
-    for &rate in rates {
+    // the Poisson saturation sweep, then one bursty MMPP row per
+    // router: a 2-phase process whose hot phase doubles the top rate
+    // while the cold phase idles — same knob positions, clumped
+    // arrivals, so queueing (not mean load) is what differs
+    let top = rates.last().copied().unwrap_or(8.0);
+    let cells: Vec<(ArrivalProcess, String, f64)> = rates
+        .iter()
+        .map(|&r| {
+            (
+                ArrivalProcess::Poisson { rate_rps: r },
+                format!("{r}"),
+                r,
+            )
+        })
+        .chain(std::iter::once((
+            ArrivalProcess::Mmpp {
+                rates: [2.0 * top, top / 4.0],
+                dwell_s: 0.5,
+            },
+            format!("mmpp{top}"),
+            top,
+        )))
+        .collect();
+    for (arrivals, label, rate) in &cells {
         for spec in selected_routers(h) {
-            let report = run_cell(h, spec, &deployed, &frames, &gts, rate)?;
+            let report = run_cell(
+                h,
+                spec,
+                &deployed,
+                &frames,
+                &gts,
+                arrivals.clone(),
+                label,
+            )?;
             let m = &report.metrics;
             println!(
                 "{:<6} {:>8.1} {:>9.1} {:>9.1} {:>9.1} {:>10.1} {:>6} {:>6} {:>8.2} {:>12.2}",
@@ -102,7 +136,8 @@ pub fn openloop(h: &Harness) -> Result<()> {
             );
             rows.push(Json::obj(vec![
                 ("router", Json::str(spec.name)),
-                ("rate_rps", Json::num(rate)),
+                ("arrivals", Json::str(label.as_str())),
+                ("rate_rps", Json::num(*rate)),
                 ("requests", Json::num(m.requests as f64)),
                 ("dropped", Json::num(report.dropped as f64)),
                 ("fallbacks", Json::num(report.fallbacks as f64)),

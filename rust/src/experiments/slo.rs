@@ -45,6 +45,7 @@ fn run_cell(
             churn: None,
             slo,
             adapt: None,
+            campaign: None,
             obs: None,
         },
     )

@@ -34,6 +34,9 @@ use crate::estimators::GatewayCost;
 use crate::gateway::{
     amortize, Gateway, NoEndpoint, RoutedRequest, RouterSpec,
 };
+use crate::lifecycle::campaign::{
+    CampaignConfig, CampaignPlan, CampaignReport, PlanEvent,
+};
 use crate::lifecycle::{
     self, ChurnConfig, ChurnReport, ChurnState, LossOutcome,
     ResiliencePolicy,
@@ -170,6 +173,11 @@ pub struct FleetConfig {
     /// collects nothing and keeps reports/traces bit-identical. The
     /// merged export is byte-identical at any `threads` value.
     pub obs: Option<ObsConfig>,
+    /// Correlated failure campaign (DESIGN.md §15): domain-wide
+    /// outages and shard-gateway kills with deterministic re-sharding,
+    /// composed with (and requiring) the churn config. `None` keeps
+    /// the event stream bit-identical to the pre-campaign engine.
+    pub campaign: Option<CampaignConfig>,
     /// Worker threads for the event engine ([`parallel::run_frames_threads`]):
     /// `0` or `1` runs the sequential shared-heap engine ([`run_frames`])
     /// unchanged; `> 1` partitions shards over that many workers, each
@@ -194,9 +202,18 @@ impl Default for FleetConfig {
             slo: None,
             adapt: None,
             obs: None,
+            campaign: None,
             threads: 1,
         }
     }
+}
+
+/// Does `cfg` run a gateway-kill campaign? That mode pre-provisions
+/// every shard with the full node set (identical pair tables, foreign
+/// nodes parked PoweredDown) so adoption is a membership/health flip,
+/// never a mid-run PJRT deploy.
+pub(crate) fn campaign_gateway_mode(cfg: &FleetConfig) -> bool {
+    cfg.campaign.as_ref().is_some_and(|c| c.gateway_enabled())
 }
 
 /// Synthesizes sharded fleets from a base profiling store (normally the
@@ -226,6 +243,7 @@ impl<'e> FleetBuilder<'e> {
         cfg: &FleetConfig,
     ) -> Result<Fleet<'e>> {
         let synth = synth_nodes(&self.base, cfg)?;
+        let all_shards = campaign_gateway_mode(cfg);
         let mut shard_nodes: Vec<Vec<EdgeNode>> =
             (0..cfg.n_shards).map(|_| Vec::new()).collect();
         let mut shard_rows: Vec<Vec<PairProfile>> =
@@ -234,8 +252,21 @@ impl<'e> FleetBuilder<'e> {
             Vec::with_capacity(cfg.n_nodes);
         for ns in synth {
             home_keys.push((ns.shard, ns.pair.clone()));
-            shard_rows[ns.shard].extend(ns.rows.iter().cloned());
-            shard_nodes[ns.shard].push(ns.make_node(self.engine, cfg)?);
+            if all_shards {
+                // gateway campaigns: every shard holds every node
+                // (same rows, same seed, so the copies are twins);
+                // foreign nodes are parked dormant below and only an
+                // Adopt event wakes them.
+                for s in 0..cfg.n_shards {
+                    shard_rows[s].extend(ns.rows.iter().cloned());
+                    shard_nodes[s]
+                        .push(ns.make_node(self.engine, cfg)?);
+                }
+            } else {
+                shard_rows[ns.shard].extend(ns.rows.iter().cloned());
+                shard_nodes[ns.shard]
+                    .push(ns.make_node(self.engine, cfg)?);
+            }
         }
         self.engine.preload(&base_models(&self.base))?;
 
@@ -254,7 +285,9 @@ impl<'e> FleetBuilder<'e> {
             ));
         }
         // resolve each node's identity in its owning shard's id space
-        // (the failure timeline addresses nodes by synthesis index)
+        // (the failure timeline addresses nodes by synthesis index).
+        // In gateway-campaign mode every shard interned the same key
+        // set in the same order, so the id is valid fleet-wide.
         let node_homes: Vec<(usize, PairId)> = home_keys
             .into_iter()
             .map(|(s, key)| {
@@ -265,6 +298,22 @@ impl<'e> FleetBuilder<'e> {
                 (s, id)
             })
             .collect();
+        if all_shards {
+            // park each node's foreign copies: pool health down (the
+            // physical node is not attached here) and membership
+            // PoweredDown (sticky — probes cannot resurrect it, only
+            // an Adopt event's power_up does).
+            for (s, gw) in shards.iter_mut().enumerate() {
+                for &(home, id) in &node_homes {
+                    if home != s {
+                        gw.pool_mut().set_health_id(id, false);
+                        if let Some(m) = gw.membership_mut() {
+                            m.power_down(id);
+                        }
+                    }
+                }
+            }
+        }
         Ok(Fleet {
             shards,
             dispatch: cfg.dispatch,
@@ -274,6 +323,7 @@ impl<'e> FleetBuilder<'e> {
             slo: cfg.slo.clone(),
             adapt: cfg.adapt.clone(),
             obs: cfg.obs.clone(),
+            campaign: cfg.campaign.clone(),
             node_homes,
         })
     }
@@ -333,6 +383,24 @@ pub(crate) fn synth_nodes(
         "perturb {} outside [0, 0.95)",
         cfg.perturb
     );
+    if let Some(camp) = &cfg.campaign {
+        camp.validate()?;
+        anyhow::ensure!(
+            cfg.churn.is_some(),
+            "campaign requires a churn config (campaign_* composes \
+             with churn_*)"
+        );
+        if camp.gateway_enabled() {
+            // both the autoscaler and gateway failover drive the
+            // power state of the same membership entries; composing
+            // them is future work, so reject it loudly
+            anyhow::ensure!(
+                cfg.adapt.is_none(),
+                "gateway campaigns and the autoscaler are mutually \
+                 exclusive (both drive node power state)"
+            );
+        }
+    }
     let base_pairs = base.pairs();
     anyhow::ensure!(!base_pairs.is_empty(), "base profile store is empty");
     let base_fleet = devices::fleet();
@@ -435,6 +503,8 @@ pub struct Fleet<'e> {
     adapt: Option<AdaptConfig>,
     /// Observability config the fleet was built with.
     obs: Option<ObsConfig>,
+    /// Failure-campaign config the fleet was built with.
+    campaign: Option<CampaignConfig>,
     /// Global synthesis index → (owning shard, node identity in that
     /// shard's id space): how the ground-truth failure timeline
     /// addresses nodes.
@@ -490,6 +560,10 @@ pub struct FleetReport {
     /// Adaptation accounting merged across shards — present exactly
     /// when the fleet had an adapt config.
     pub adapt: Option<AdaptReport>,
+    /// Campaign schedule summary — present exactly when the fleet had
+    /// a campaign config. A pure function of the plan, so it is
+    /// bit-identical at every thread count by construction.
+    pub campaign: Option<CampaignReport>,
 }
 
 impl FleetReport {
@@ -627,6 +701,9 @@ impl FleetReport {
         if let Some(a) = &self.adapt {
             fields.push(("adapt", a.to_json()));
         }
+        if let Some(c) = &self.campaign {
+            fields.push(("campaign", c.to_json()));
+        }
         Json::obj(fields)
     }
 }
@@ -676,6 +753,23 @@ enum EventKind {
     /// `scale` only): close the arrival-rate window and perform at
     /// most one power transition in that shard.
     ScaleTick { shard: usize },
+    /// Campaign: failure domain `domain` tripped or restored —
+    /// observability marker anchored to `shard` (the member crashes
+    /// arrive as their own Crash/Rejoin events).
+    DomainMark { shard: usize, domain: usize, down: bool },
+    /// Campaign: `shard`'s gateway dies (obs marker; its queued work
+    /// drains through the Release events planned immediately after).
+    GwDown { shard: usize },
+    /// Campaign: `shard`'s gateway recovers (obs marker).
+    GwUp { shard: usize },
+    /// Campaign: node `node` (interned as `pair`) leaves `shard` —
+    /// drain its queue through the resilience policy, then park it
+    /// dormant (health down + membership PoweredDown).
+    Release { shard: usize, node: usize, pair: PairId },
+    /// Campaign: node `node` (interned as `pair`) is adopted by
+    /// `shard`; `up` is its ground-truth health at adoption. The
+    /// adopting gateway bootstraps belief from Warming + probes.
+    Adopt { shard: usize, node: usize, pair: PairId, up: bool },
 }
 
 impl PartialEq for Event {
@@ -811,6 +905,12 @@ struct ChurnDriver {
     /// successful placement; retries re-route with these instead of
     /// re-running every visited shard's estimator.
     est: Vec<Option<(usize, GatewayCost)>>,
+    /// Hedged requests' `(primary pair, hedge pair)` — both always on
+    /// the winning shard — so cancellation-on-first-response can find
+    /// the losing sibling without scanning queues (`hedge_cancel`).
+    hedge_pairs: Vec<Option<(PairId, PairId)>>,
+    /// Hedge cancellation-on-first-response enabled.
+    hedge_cancel: bool,
 }
 
 /// Driver-side SLO context (twin of the one in `workload::openloop`):
@@ -901,23 +1001,90 @@ pub fn run_frames(
         sim.push(t, EventKind::Arrival(idx));
     }
 
+    // campaign runs (DESIGN.md §15): fold churn + domain + gateway
+    // processes into one pre-sorted plan. The plan (and its report)
+    // is a pure function of the configs, so the parallel engine
+    // rebuilds the identical one. Without a campaign the original
+    // failure-schedule path below runs byte-identically.
+    let campaign_plan = match (&fleet.churn, &fleet.campaign) {
+        (Some(c), Some(camp)) => Some(CampaignPlan::build(
+            fleet.node_homes.len(),
+            k,
+            horizon_s,
+            c,
+            camp,
+        )?),
+        (None, Some(_)) => {
+            anyhow::bail!("campaign requires a churn config")
+        }
+        _ => None,
+    };
+
     // churn runs: the ground-truth failure timeline addresses nodes by
     // their global synthesis index; each shard probes only its own
     // pool. The shard gateways were switched to membership routing at
     // build time. Without churn nothing below adds a single event.
     let mut churn = match fleet.churn.clone() {
         Some(c) => {
-            for ev in lifecycle::failure_schedule(
-                fleet.node_homes.len(),
-                horizon_s,
-                &c,
-            ) {
-                let kind = if ev.up {
-                    EventKind::Rejoin(ev.node)
-                } else {
-                    EventKind::Crash(ev.node)
-                };
-                sim.push(ev.t, kind);
+            match &campaign_plan {
+                Some(plan) => {
+                    for pe in &plan.events {
+                        let kind = match *pe {
+                            PlanEvent::Truth { node, up: true, .. } => {
+                                EventKind::Rejoin(node)
+                            }
+                            PlanEvent::Truth {
+                                node, up: false, ..
+                            } => EventKind::Crash(node),
+                            PlanEvent::DomainMark {
+                                shard,
+                                domain,
+                                down,
+                                ..
+                            } => EventKind::DomainMark {
+                                shard,
+                                domain,
+                                down,
+                            },
+                            PlanEvent::GwDown { shard, .. } => {
+                                EventKind::GwDown { shard }
+                            }
+                            PlanEvent::GwUp { shard, .. } => {
+                                EventKind::GwUp { shard }
+                            }
+                            PlanEvent::Release { shard, node, .. } => {
+                                EventKind::Release {
+                                    shard,
+                                    node,
+                                    pair: fleet.node_homes[node].1,
+                                }
+                            }
+                            PlanEvent::Adopt {
+                                shard, node, up, ..
+                            } => EventKind::Adopt {
+                                shard,
+                                node,
+                                pair: fleet.node_homes[node].1,
+                                up,
+                            },
+                        };
+                        sim.push(pe.t(), kind);
+                    }
+                }
+                None => {
+                    for ev in lifecycle::failure_schedule(
+                        fleet.node_homes.len(),
+                        horizon_s,
+                        &c,
+                    ) {
+                        let kind = if ev.up {
+                            EventKind::Rejoin(ev.node)
+                        } else {
+                            EventKind::Crash(ev.node)
+                        };
+                        sim.push(ev.t, kind);
+                    }
+                }
             }
             let gap = c.probe_interval_s.max(1e-6);
             for s in 0..k {
@@ -952,6 +1119,8 @@ pub fn run_frames(
                     c.retry_backoff_s,
                 ),
                 est: vec![None; frames.len()],
+                hedge_pairs: vec![None; frames.len()],
+                hedge_cancel: c.hedge_cancel,
             })
         }
         None => None,
@@ -1091,8 +1260,10 @@ pub fn run_frames(
                 if let Some(ch) = churn.as_mut() {
                     ch.est[idx] = Some((routed.estimate, routed.cost));
                     ch.state.dispatched(idx);
-                    if dup.is_some() {
+                    if let Some(d) = &dup {
                         ch.state.hedge_dispatched(idx);
+                        ch.hedge_pairs[idx] =
+                            Some((routed.pair_id, d.pair_id));
                     }
                 }
                 // batch formation: primary copies without a hedge
@@ -1259,6 +1430,7 @@ pub fn run_frames(
                 // consumed by `finish_with_network` below
                 let (e2e_s, e_mwh) =
                     (ev.t - done.arrival_s, done.resp.energy_mwh);
+                let (r_idx, r_hedge) = (done.idx, done.hedge);
                 let winner = match churn.as_mut() {
                     Some(ch) => ch.state.copy_completed(
                         done.idx,
@@ -1307,6 +1479,30 @@ pub fn run_frames(
                     // a hedge loser burned energy without producing
                     // the answer: attribute the waste where it ran
                     o.hedge_loss(done.idx, ev.t, i64::from(pair.0), e_mwh);
+                }
+                // cancellation-on-first-response: the winning copy's
+                // completion cancels the in-flight sibling, freeing
+                // its slot NOW and charging only accrued energy. A
+                // sibling already gone (crash-lost) is a no-op.
+                let sib = match churn.as_mut() {
+                    Some(ch) if winner && ch.hedge_cancel => ch
+                        .hedge_pairs[r_idx]
+                        .take()
+                        .map(|(p, h)| if r_hedge { p } else { h }),
+                    _ => None,
+                };
+                if let Some(sib) = sib {
+                    cancel_sibling(
+                        &mut fleet.shards[s],
+                        s,
+                        frames,
+                        &mut sim,
+                        &mut churn,
+                        &mut slo,
+                        sib,
+                        r_idx,
+                        ev.t,
+                    )?;
                 }
                 start_next(
                     &mut fleet.shards[s],
@@ -1407,6 +1603,64 @@ pub fn run_frames(
                     o.powered(ev.t, n);
                 }
             }
+            // campaign markers (DESIGN.md §15): the node-level effects
+            // of a domain trip arrive as ordinary Crash/Rejoin events
+            // from the merged plan; these only annotate the trace.
+            EventKind::DomainMark { shard, domain, down } => {
+                if let Some(o) = sim.obs_at(shard) {
+                    o.domain_mark(ev.t, domain, down);
+                }
+            }
+            EventKind::GwDown { shard } => {
+                if let Some(o) = sim.obs_at(shard) {
+                    o.gw_mark(ev.t, false);
+                }
+            }
+            EventKind::GwUp { shard } => {
+                if let Some(o) = sim.obs_at(shard) {
+                    o.gw_mark(ev.t, true);
+                }
+            }
+            // gateway failover: the dying (or ceding) shard releases a
+            // node — everything queued on it drains through the
+            // resilience policy, and the local replica goes dormant.
+            EventKind::Release { shard, node: _, pair } => {
+                let ch =
+                    churn.as_mut().expect("campaign without churn");
+                let gw = &mut fleet.shards[shard];
+                gw.pool_mut().set_health_id(pair, false);
+                if let Some(m) = gw.membership_mut() {
+                    m.power_down(pair);
+                }
+                lose_queued(
+                    gw, shard, &mut sim, &mut ch.state, &mut slo, pair,
+                    None, ev.t,
+                );
+            }
+            // adoption: the surviving shard wakes its dormant replica
+            // of the orphan. Membership re-enters through Warming and
+            // probes from scratch — stale-view realism, the adopting
+            // gateway earns its view of the node (DESIGN.md §15). The
+            // ground truth (`up`) still gates pool health: adopting a
+            // node whose domain is down must not resurrect it.
+            EventKind::Adopt { shard, node, pair, up } => {
+                let ch =
+                    churn.as_mut().expect("campaign without churn");
+                ch.homes[node] = (shard, pair);
+                let gw = &mut fleet.shards[shard];
+                gw.pool_mut().set_health_id(pair, up);
+                if up {
+                    if let Some(n) = gw.pool_mut().get_id(pair) {
+                        n.on_rejoin(ev.t);
+                    }
+                }
+                if let Some(m) = gw.membership_mut() {
+                    m.power_up(pair, ev.t);
+                }
+                if let Some(o) = sim.obs_at(shard) {
+                    o.adopt(node, ev.t, i64::from(pair.0));
+                }
+            }
         }
     }
 
@@ -1457,6 +1711,7 @@ pub fn run_frames(
         churn: churn_report,
         slo: slo.map(|s| s.metrics),
         adapt: adapt_report,
+        campaign: campaign_plan.map(|p| p.report),
     })
 }
 
@@ -1836,6 +2091,69 @@ fn lose_queued(
             o.in_flight(now_s, n_if);
         }
     }
+}
+
+/// Hedge cancellation-on-first-response: pull request `idx`'s
+/// still-pending copy off `sib`'s queue on `shard`. A copy caught
+/// mid-service charges the energy accrued so far (pro-rata by elapsed
+/// service time, its stale Completion dies on the token guard); a
+/// queued copy charges nothing. Either way the slot frees immediately
+/// and the ledger absorbs the copy as hedge waste, never a loss.
+#[allow(clippy::too_many_arguments)]
+fn cancel_sibling(
+    gw: &mut Gateway<'_>,
+    shard: usize,
+    frames: &[Scene],
+    sim: &mut SimState,
+    churn: &mut Option<ChurnDriver>,
+    slo: &mut Option<SloRt>,
+    sib: PairId,
+    idx: usize,
+    now_s: f64,
+) -> Result<()> {
+    enum Hit {
+        Serving(f64),
+        Queued,
+        Gone,
+    }
+    let hit = match sim.queues[shard].get_mut(&sib) {
+        Some(q) => {
+            if q.serving.as_ref().is_some_and(|x| x.idx == idx) {
+                let sv = q.serving.take().expect("just matched");
+                let frac = ((now_s - sv.start_s)
+                    / sv.resp.latency_s.max(1e-12))
+                .clamp(0.0, 1.0);
+                Hit::Serving(sv.resp.energy_mwh * frac)
+            } else if let Some(pos) =
+                q.backlog.iter().position(|b| b.idx == idx)
+            {
+                q.backlog.remove(pos);
+                Hit::Queued
+            } else {
+                Hit::Gone
+            }
+        }
+        None => Hit::Gone,
+    };
+    let (partial, was_serving) = match hit {
+        Hit::Serving(e) => (e, true),
+        Hit::Queued => (0.0, false),
+        Hit::Gone => return Ok(()), // crash-lost before the winner
+    };
+    gw.pool_mut().release_id(sib);
+    sim.in_flight[shard] -= 1;
+    sim.total_in_flight -= 1;
+    let ch = churn.as_mut().expect("hedge without churn");
+    ch.state.copy_cancelled(idx, partial);
+    let n_if = sim.in_flight[shard];
+    if let Some(o) = sim.obs_at(shard) {
+        o.hedge_loss(idx, now_s, i64::from(sib.0), partial);
+        o.in_flight(now_s, n_if);
+    }
+    if was_serving {
+        start_next(gw, shard, frames, sim, churn, slo, sib, now_s)?;
+    }
+    Ok(())
 }
 
 /// Render a dataset up front and drive it through the fleet.
@@ -2290,6 +2608,7 @@ mod tests {
             churn: None,
             slo: None,
             adapt: None,
+            campaign: None,
         };
         assert_eq!(report.requests(), 8);
         assert!((report.shard_imbalance() - 1.5).abs() < 1e-12);
@@ -2342,5 +2661,235 @@ mod tests {
         let plain = run(None);
         assert!(plain.adapt.is_none());
         assert!(!plain.to_json().dump().contains("\"adapt\""));
+    }
+
+    #[test]
+    fn campaign_domain_outages_crash_whole_domains_and_replay() {
+        // pure-campaign churn (mtbf = inf): every crash comes from a
+        // domain trip, so the crash count is exactly domain_size per
+        // outage, the ledger stays exact, and replay is bit-identical.
+        let e = engine();
+        let ds = coco::build(24, 41);
+        let churn = ChurnConfig {
+            mtbf_s: f64::INFINITY,
+            mttr_s: 0.1,
+            probe_interval_s: 0.02,
+            probe_timeout_s: 0.01,
+            suspect_after: 1,
+            warmup_s: 0.05,
+            policy: ResiliencePolicy::Retry { budget: 4 },
+            retry_backoff_s: 0.02,
+            horizon_slack_s: 1.0,
+            seed: 5,
+            ..Default::default()
+        };
+        let camp = CampaignConfig {
+            domain_size: 3,
+            domain_mtbf_s: 0.05,
+            domain_mttr_s: 0.05,
+            ..Default::default()
+        };
+        let run = |e: &Engine| {
+            let cfg = FleetConfig {
+                n_nodes: 6,
+                n_shards: 2,
+                queue_capacity: 2,
+                churn: Some(churn.clone()),
+                campaign: Some(camp.clone()),
+                ..Default::default()
+            };
+            let mut fl = build_fleet(e, "LE", &cfg);
+            let r = run_dataset(
+                &mut fl,
+                &ds,
+                &ArrivalProcess::Poisson { rate_rps: 300.0 },
+                9,
+            )
+            .unwrap();
+            assert_eq!(
+                fl.shards()
+                    .iter()
+                    .map(|g| g.pool().total_in_flight())
+                    .sum::<usize>(),
+                0
+            );
+            r
+        };
+        let a = run(&e);
+        let cr = a.campaign.as_ref().expect("campaign report");
+        assert_eq!(cr.domains, 2);
+        assert_eq!(cr.domain_size, 3);
+        assert!(cr.domain_outages > 0, "no outage within the run");
+        assert_eq!(cr.gw_kills, 0, "gateway process disabled");
+        let c = a.churn.as_ref().expect("churn report");
+        assert_eq!(
+            c.crashes,
+            3 * cr.domain_outages,
+            "a trip crashes every domain member at one instant"
+        );
+        assert_eq!(
+            a.requests() + a.dropped + c.lost,
+            a.offered,
+            "every request must be served, shed, or lost"
+        );
+        let b = run(&e);
+        let (ja, jb) = (a.to_json().dump(), b.to_json().dump());
+        assert_eq!(ja, jb);
+        assert!(ja.contains("\"campaign\""));
+    }
+
+    #[test]
+    fn campaign_gateway_failover_rehomes_orphans_and_recovers() {
+        // gateway kills only: orphans re-home to survivors, recovery
+        // re-adopts, and the request ledger survives the whole dance.
+        let e = engine();
+        let ds = coco::build(30, 59);
+        let churn = ChurnConfig {
+            mtbf_s: f64::INFINITY,
+            policy: ResiliencePolicy::Retry { budget: 6 },
+            retry_backoff_s: 0.02,
+            horizon_slack_s: 1.0,
+            seed: 7,
+            ..Default::default()
+        };
+        let camp = CampaignConfig {
+            domain_mtbf_s: f64::INFINITY,
+            gateway_mtbf_s: 0.06,
+            gateway_mttr_s: 0.08,
+            ..Default::default()
+        };
+        let run = |e: &Engine| {
+            let cfg = FleetConfig {
+                n_nodes: 6,
+                n_shards: 3,
+                queue_capacity: 2,
+                churn: Some(churn.clone()),
+                campaign: Some(camp.clone()),
+                ..Default::default()
+            };
+            let mut fl = build_fleet(e, "LE", &cfg);
+            let r = run_dataset(
+                &mut fl,
+                &ds,
+                &ArrivalProcess::Poisson { rate_rps: 250.0 },
+                31,
+            )
+            .unwrap();
+            assert_eq!(
+                fl.shards()
+                    .iter()
+                    .map(|g| g.pool().total_in_flight())
+                    .sum::<usize>(),
+                0
+            );
+            r
+        };
+        let a = run(&e);
+        let cr = a.campaign.as_ref().expect("campaign report");
+        assert_eq!(cr.domain_outages, 0, "domain process disabled");
+        assert!(cr.gw_kills > 0, "no gateway kill within the run");
+        assert!(cr.adoptions > 0, "kills must re-home orphans");
+        let c = a.churn.as_ref().expect("churn report");
+        assert_eq!(a.requests() + a.dropped + c.lost, a.offered);
+        assert_eq!(a.to_json().dump(), run(&e).to_json().dump());
+    }
+
+    #[test]
+    fn campaign_validation_rejects_unsupported_combos() {
+        let e = engine();
+        let b = FleetBuilder::new(&e, base_store());
+        let spec = router_by_name("LE").unwrap();
+        // campaign without churn
+        let no_churn = FleetConfig {
+            n_nodes: 4,
+            n_shards: 2,
+            campaign: Some(CampaignConfig::default()),
+            ..Default::default()
+        };
+        assert!(b.build(spec, 5.0, &no_churn).is_err());
+        // gateway campaign x autoscaler
+        let gw_adapt = FleetConfig {
+            n_nodes: 4,
+            n_shards: 2,
+            churn: Some(ChurnConfig::default()),
+            adapt: Some(AdaptConfig::default()),
+            campaign: Some(CampaignConfig {
+                gateway_mtbf_s: 10.0,
+                ..Default::default()
+            }),
+            ..Default::default()
+        };
+        assert!(b.build(spec, 5.0, &gw_adapt).is_err());
+        // domain-only campaigns compose with adapt just fine
+        let dom_adapt = FleetConfig {
+            n_nodes: 4,
+            n_shards: 2,
+            churn: Some(ChurnConfig::default()),
+            adapt: Some(AdaptConfig::default()),
+            campaign: Some(CampaignConfig::default()),
+            ..Default::default()
+        };
+        assert!(b.build(spec, 5.0, &dom_adapt).is_ok());
+    }
+
+    #[test]
+    fn hedge_cancellation_cuts_waste_and_keeps_the_ledger_exact() {
+        // gentle load so both runs schedule identically on the winner
+        // side: cancellation must strictly cut hedge waste (losers are
+        // charged pro-rata, not in full) without changing what serves.
+        let e = engine();
+        let ds = coco::build(12, 83);
+        let run = |cancel: bool| {
+            let churn = ChurnConfig {
+                mtbf_s: f64::INFINITY, // no crashes: isolate hedging
+                policy: ResiliencePolicy::Hedge,
+                hedge_cancel: cancel,
+                horizon_slack_s: 1.0,
+                seed: 11,
+                ..Default::default()
+            };
+            let cfg = FleetConfig {
+                n_nodes: 4,
+                n_shards: 2,
+                queue_capacity: 8,
+                churn: Some(churn),
+                ..Default::default()
+            };
+            let mut fl = build_fleet(&e, "LE", &cfg);
+            let r = run_dataset(
+                &mut fl,
+                &ds,
+                &ArrivalProcess::Uniform { gap_s: 0.5 },
+                19,
+            )
+            .unwrap();
+            assert_eq!(
+                fl.shards()
+                    .iter()
+                    .map(|g| g.pool().total_in_flight())
+                    .sum::<usize>(),
+                0,
+                "cancel={cancel}: leaked slots"
+            );
+            r
+        };
+        let off = run(false);
+        let on = run(true);
+        for r in [&off, &on] {
+            let c = r.churn.as_ref().expect("churn report");
+            assert!(c.hedged > 0, "no hedges dispatched");
+            assert_eq!(c.lost, 0, "no crashes, nothing may be lost");
+            assert_eq!(r.requests() + r.dropped + c.lost, r.offered);
+        }
+        assert_eq!(off.requests(), on.requests(), "winners unaffected");
+        let w_off = off.churn.as_ref().unwrap().wasted_energy_mwh;
+        let w_on = on.churn.as_ref().unwrap().wasted_energy_mwh;
+        assert!(w_off > 0.0, "run-to-completion hedges waste energy");
+        assert!(
+            w_on < w_off,
+            "cancellation must cut waste: on={w_on} off={w_off}"
+        );
+        // replay pins the cancellation path bit-identically
+        assert_eq!(run(true).to_json().dump(), on.to_json().dump());
     }
 }

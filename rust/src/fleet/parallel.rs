@@ -83,6 +83,7 @@ use crate::estimators::GatewayCost;
 use crate::gateway::{
     amortize, Gateway, NoEndpoint, RoutedRequest, RouterSpec,
 };
+use crate::lifecycle::campaign::{CampaignPlan, PlanEvent};
 use crate::lifecycle::{
     self, ChurnReport, ChurnState, LossOutcome, Membership,
     ResiliencePolicy,
@@ -96,9 +97,9 @@ use crate::workload::openloop::ArrivalProcess;
 use crate::workload::slo::{SloConfig, SloTag};
 
 use super::{
-    base_models, push_pending, synth_nodes, wire_shard, DispatchPolicy,
-    FleetBuilder, FleetConfig, FleetReport, Forming, InService,
-    NodeQueue, NodeSynth, Pending,
+    base_models, campaign_gateway_mode, push_pending, synth_nodes,
+    wire_shard, DispatchPolicy, FleetBuilder, FleetConfig, FleetReport,
+    Forming, InService, NodeQueue, NodeSynth, Pending,
 };
 
 /// Everything [`run_frames_threads`] needs besides the fleet config:
@@ -159,10 +160,12 @@ struct LEvent {
 }
 
 enum LKind {
-    /// Ground-truth crash of synthesized node `0` (global index).
-    Crash(usize),
-    /// Ground-truth rejoin of synthesized node `0`.
-    Rejoin(usize),
+    /// Ground-truth crash of synthesized node `node`, homed on
+    /// `shard` at the event's time (re-homing is a pure function of
+    /// the campaign plan, so the home is resolved at setup).
+    Crash { node: usize, shard: usize },
+    /// Ground-truth rejoin of synthesized node `node`.
+    Rejoin { node: usize, shard: usize },
     /// Shard `shard`'s periodic health probe fires.
     Probe { shard: usize },
     /// Shard `shard`'s autoscaler decision tick.
@@ -174,6 +177,17 @@ enum LKind {
     ProbeResult { shard: usize, responses: Vec<bool> },
     /// A batch formation window closes (stale if `token` mismatches).
     BatchClose { shard: usize, pair: PairId, token: u64 },
+    /// Campaign trace marker: domain outage flip (DESIGN.md §15).
+    DomainMark { shard: usize, domain: usize, down: bool },
+    /// Campaign trace marker: shard `shard`'s gateway dies.
+    GwDown { shard: usize },
+    /// Campaign trace marker: shard `shard`'s gateway recovers.
+    GwUp { shard: usize },
+    /// Gateway failover: `shard` releases `node` — queued work drains
+    /// through the resilience policy, the local replica goes dormant.
+    Release { shard: usize, node: usize },
+    /// Gateway failover: `shard` adopts `node` (ground truth `up`).
+    Adopt { shard: usize, node: usize, up: bool },
 }
 
 impl LEvent {
@@ -241,6 +255,11 @@ struct ChurnShared {
     state: ChurnState,
     /// Estimator cache: `(estimate, cost)` paid at first placement.
     est: Vec<Option<(usize, GatewayCost)>>,
+    /// `(primary, hedge)` pair ids of each request's live hedge
+    /// split, for cancellation-on-first-response. Both copies live on
+    /// the winning shard, so the cancel itself is worker-local.
+    hedge: Vec<Option<(PairId, PairId)>>,
+    hedge_cancel: bool,
 }
 
 /// All cross-worker mutable state, behind one mutex. Held briefly for
@@ -438,17 +457,94 @@ pub fn run_frames_threads(
             .push(LEvent { t, cls: 0, seq: *gseq, kind });
         *gseq += 1;
     };
+    // the campaign plan is a pure function of the configs, so this
+    // rebuild is bit-identical to the sequential engine's (and its
+    // report rides along for free)
+    let campaign_plan = match (&cfg.churn, &cfg.campaign) {
+        (Some(c), Some(camp)) => Some(CampaignPlan::build(
+            cfg.n_nodes,
+            cfg.n_shards,
+            horizon_s,
+            c,
+            camp,
+        )?),
+        (None, Some(_)) => {
+            anyhow::bail!("campaign requires a churn config")
+        }
+        _ => None,
+    };
     if let Some(c) = &cfg.churn {
-        for ev in
-            lifecycle::failure_schedule(cfg.n_nodes, horizon_s, c)
-        {
-            let kind = if ev.up {
-                LKind::Rejoin(ev.node)
-            } else {
-                LKind::Crash(ev.node)
-            };
-            let shard = ev.node % cfg.n_shards;
-            push_static(&mut statics, &mut gseq, shard, ev.t, kind);
+        match &campaign_plan {
+            Some(plan) => {
+                for pe in &plan.events {
+                    let (shard, kind) = match *pe {
+                        PlanEvent::Truth { t, node, up } => {
+                            // the home at `t` is where the sequential
+                            // engine's runtime `homes[node]` points
+                            // when this event commits
+                            let shard = plan.home_at(node, t);
+                            let kind = if up {
+                                LKind::Rejoin { node, shard }
+                            } else {
+                                LKind::Crash { node, shard }
+                            };
+                            (shard, kind)
+                        }
+                        PlanEvent::DomainMark {
+                            shard,
+                            domain,
+                            down,
+                            ..
+                        } => {
+                            (shard, LKind::DomainMark {
+                                shard,
+                                domain,
+                                down,
+                            })
+                        }
+                        PlanEvent::GwDown { shard, .. } => {
+                            (shard, LKind::GwDown { shard })
+                        }
+                        PlanEvent::GwUp { shard, .. } => {
+                            (shard, LKind::GwUp { shard })
+                        }
+                        PlanEvent::Release { shard, node, .. } => {
+                            (shard, LKind::Release { shard, node })
+                        }
+                        PlanEvent::Adopt {
+                            shard, node, up, ..
+                        } => (shard, LKind::Adopt { shard, node, up }),
+                    };
+                    push_static(
+                        &mut statics,
+                        &mut gseq,
+                        shard,
+                        pe.t(),
+                        kind,
+                    );
+                }
+            }
+            None => {
+                for ev in lifecycle::failure_schedule(
+                    cfg.n_nodes,
+                    horizon_s,
+                    c,
+                ) {
+                    let shard = ev.node % cfg.n_shards;
+                    let kind = if ev.up {
+                        LKind::Rejoin { node: ev.node, shard }
+                    } else {
+                        LKind::Crash { node: ev.node, shard }
+                    };
+                    push_static(
+                        &mut statics,
+                        &mut gseq,
+                        shard,
+                        ev.t,
+                        kind,
+                    );
+                }
+            }
         }
         let gap = c.probe_interval_s.max(1e-6);
         for s in 0..cfg.n_shards {
@@ -521,6 +617,8 @@ pub fn run_frames_threads(
                 c.retry_backoff_s,
             ),
             est: vec![None; frames.len()],
+            hedge: vec![None; frames.len()],
+            hedge_cancel: c.hedge_cancel,
         }),
         slo: ro
             .slo
@@ -536,8 +634,25 @@ pub fn run_frames_threads(
 
     let mut per_worker: Vec<Vec<NodeSynth>> =
         (0..w_count).map(|_| Vec::new()).collect();
-    for ns in synth {
-        per_worker[ns.shard % w_count].push(ns);
+    if campaign_gateway_mode(cfg) {
+        // gateway campaigns pre-provision every node on every shard
+        // (twins: same rows, same seed — see `FleetBuilder::build`);
+        // each worker materializes the full node set per owned shard
+        for ns in synth {
+            for s in 0..cfg.n_shards {
+                per_worker[s % w_count].push(NodeSynth {
+                    shard: s,
+                    pair: ns.pair.clone(),
+                    dev: ns.dev.clone(),
+                    synth_idx: ns.synth_idx,
+                    rows: ns.rows.clone(),
+                });
+            }
+        }
+    } else {
+        for ns in synth {
+            per_worker[ns.shard % w_count].push(ns);
+        }
     }
 
     let results: Vec<Result<Vec<ShardOut>>> =
@@ -634,6 +749,7 @@ pub fn run_frames_threads(
         churn: churn_report,
         slo: coord.slo,
         adapt: adapt_report,
+        campaign: campaign_plan.map(|p| p.report),
     })
 }
 
@@ -670,13 +786,23 @@ fn worker_run(
             keys.push((ns.synth_idx, ns.pair.clone()));
             nodes.push(ns.make_node(&engine, cfg)?);
         }
-        let gw = wire_shard(&engine, spec, delta_map, cfg, s, nodes, rows);
+        let mut gw =
+            wire_shard(&engine, spec, delta_map, cfg, s, nodes, rows);
+        let all_shards = campaign_gateway_mode(cfg);
         for (idx, key) in keys {
             let id = gw
                 .store()
                 .id_of(&key)
                 .expect("synthesized pair interned in its shard");
             homes.insert(idx, (s, id));
+            if all_shards && idx % cfg.n_shards != s {
+                // park the foreign replica dormant, exactly as the
+                // sequential builder does: only an Adopt wakes it
+                gw.pool_mut().set_health_id(id, false);
+                if let Some(m) = gw.membership_mut() {
+                    m.power_down(id);
+                }
+            }
         }
         let pairs = if cfg.churn.is_some() {
             gw.pool()
@@ -1004,9 +1130,11 @@ fn handle_local(
             let i = slot_of(slots, shard);
             on_completion(&mut slots[i], wsim, ro, coord, pair, token, t)
         }
-        LKind::Crash(node) => {
-            let &(shard, pair) =
-                homes.get(&node).expect("crash for unowned node");
+        LKind::Crash { node, shard } => {
+            let pair = homes
+                .get(&node)
+                .expect("crash for unowned node")
+                .1;
             let i = slot_of(slots, shard);
             let sl = &mut slots[i];
             {
@@ -1027,9 +1155,11 @@ fn handle_local(
             lose_queued(sl, ro, coord, pair, None, t);
             Ok(())
         }
-        LKind::Rejoin(node) => {
-            let &(shard, pair) =
-                homes.get(&node).expect("rejoin for unowned node");
+        LKind::Rejoin { node, shard } => {
+            let pair = homes
+                .get(&node)
+                .expect("rejoin for unowned node")
+                .1;
             let i = slot_of(slots, shard);
             let sl = &mut slots[i];
             sl.gw.pool_mut().set_health_id(pair, true);
@@ -1092,6 +1222,64 @@ fn handle_local(
                 (slots[i].obs.as_mut(), powered)
             {
                 o.powered(t, n);
+            }
+            Ok(())
+        }
+        // campaign markers: the node-level effects of a domain trip
+        // arrive as ordinary Crash/Rejoin events from the merged plan
+        LKind::DomainMark { shard, domain, down } => {
+            let i = slot_of(slots, shard);
+            if let Some(o) = slots[i].obs.as_mut() {
+                o.domain_mark(t, domain, down);
+            }
+            Ok(())
+        }
+        LKind::GwDown { shard } => {
+            let i = slot_of(slots, shard);
+            if let Some(o) = slots[i].obs.as_mut() {
+                o.gw_mark(t, false);
+            }
+            Ok(())
+        }
+        LKind::GwUp { shard } => {
+            let i = slot_of(slots, shard);
+            if let Some(o) = slots[i].obs.as_mut() {
+                o.gw_mark(t, true);
+            }
+            Ok(())
+        }
+        LKind::Release { shard, node } => {
+            let pair = homes
+                .get(&node)
+                .expect("release for unowned node")
+                .1;
+            let i = slot_of(slots, shard);
+            let sl = &mut slots[i];
+            sl.gw.pool_mut().set_health_id(pair, false);
+            if let Some(m) = sl.gw.membership_mut() {
+                m.power_down(pair);
+            }
+            lose_queued(sl, ro, coord, pair, None, t);
+            Ok(())
+        }
+        LKind::Adopt { shard, node, up } => {
+            let pair = homes
+                .get(&node)
+                .expect("adopt for unowned node")
+                .1;
+            let i = slot_of(slots, shard);
+            let sl = &mut slots[i];
+            sl.gw.pool_mut().set_health_id(pair, up);
+            if up {
+                if let Some(n) = sl.gw.pool_mut().get_id(pair) {
+                    n.on_rejoin(t);
+                }
+            }
+            if let Some(m) = sl.gw.membership_mut() {
+                m.power_up(pair, t);
+            }
+            if let Some(o) = sl.obs.as_mut() {
+                o.adopt(node, t, i64::from(pair.0));
             }
             Ok(())
         }
@@ -1189,7 +1377,93 @@ fn on_completion(
         // attribute the waste where it ran
         o.hedge_loss(done.idx, t, i64::from(pair.0), e_mwh);
     }
+    // cancellation-on-first-response: the winning copy's completion
+    // cancels the in-flight sibling, freeing its slot NOW and charging
+    // only accrued energy. Both copies live on this shard, so the
+    // cancel itself is worker-local; only the ledger goes via the lock.
+    let sib = if winner {
+        let mut c = coord.lock().expect("coordinator poisoned");
+        match c.churn.as_mut() {
+            Some(ch) if ch.hedge_cancel => ch.hedge[done.idx]
+                .take()
+                .map(|(p, h)| if done.hedge { p } else { h }),
+            _ => None,
+        }
+    } else {
+        None
+    };
+    if let Some(sib) = sib {
+        cancel_sibling(sl, wsim, ro, coord, sib, done.idx, t)?;
+    }
     start_next(sl, wsim, ro, coord, pair, t)
+}
+
+/// Hedge cancellation-on-first-response: pull request `idx`'s
+/// still-pending copy off `sib`'s queue — the worker-local twin of the
+/// sequential `cancel_sibling`. A copy caught mid-service charges the
+/// energy accrued so far (through the time-ordered waste log, like all
+/// cross-worker energy); a queued copy charges nothing.
+fn cancel_sibling(
+    sl: &mut ShardSlot<'_>,
+    wsim: &mut Wsim,
+    ro: &SharedRo<'_>,
+    coord: &Mutex<Coord>,
+    sib: PairId,
+    idx: usize,
+    now_s: f64,
+) -> Result<()> {
+    enum Hit {
+        Serving(f64),
+        Queued,
+        Gone,
+    }
+    let hit = match sl.queues.get_mut(&sib) {
+        Some(q) => {
+            if q.serving.as_ref().is_some_and(|x| x.idx == idx) {
+                let sv = q.serving.take().expect("just matched");
+                let frac = ((now_s - sv.start_s)
+                    / sv.resp.latency_s.max(1e-12))
+                .clamp(0.0, 1.0);
+                Hit::Serving(sv.resp.energy_mwh * frac)
+            } else if let Some(pos) =
+                q.backlog.iter().position(|b| b.idx == idx)
+            {
+                q.backlog.remove(pos);
+                Hit::Queued
+            } else {
+                Hit::Gone
+            }
+        }
+        None => Hit::Gone,
+    };
+    let (partial, was_serving) = match hit {
+        Hit::Serving(e) => (e, true),
+        Hit::Queued => (0.0, false),
+        Hit::Gone => return Ok(()), // crash-lost before the winner
+    };
+    sl.gw.pool_mut().release_id(sib);
+    let n_if = {
+        let mut c = coord.lock().expect("coordinator poisoned");
+        c.in_flight[sl.s] -= 1;
+        c.total_in_flight -= 1;
+        // energy goes through the time-ordered waste log (f64 sums
+        // are order-sensitive), so the ledger sees 0 here
+        c.churn
+            .as_mut()
+            .expect("hedge without churn")
+            .state
+            .copy_cancelled(idx, 0.0);
+        c.waste.push((now_s, partial));
+        c.in_flight[sl.s]
+    };
+    if let Some(o) = sl.obs.as_mut() {
+        o.hedge_loss(idx, now_s, i64::from(sib.0), partial);
+        o.in_flight(now_s, n_if);
+    }
+    if was_serving {
+        start_next(sl, wsim, ro, coord, sib, now_s)?;
+    }
+    Ok(())
 }
 
 /// If `pair` is idle and has backlog, begin serving the head request
@@ -1550,8 +1824,9 @@ fn finalize_arrival(
         if let Some(ch) = c.churn.as_mut() {
             ch.est[idx] = Some((routed.estimate, routed.cost));
             ch.state.dispatched(idx);
-            if dup.is_some() {
+            if let Some(d) = &dup {
                 ch.state.hedge_dispatched(idx);
+                ch.hedge[idx] = Some((routed.pair_id, d.pair_id));
             }
         }
     }

@@ -289,9 +289,21 @@ impl<'e> Gateway<'e> {
                 });
             if let Some(id) = cand {
                 sc.power_up(id, now_s);
-                pool.set_health_id(id, true);
-                if let Some(node) = pool.get_id(id) {
-                    node.on_rejoin(now_s);
+                // ground truth wins over the scaler: a node that
+                // crashed while powered down stays physically dead —
+                // its pending Rejoin event restores pool health when
+                // repair completes. The believed view still flips to
+                // Warming, and the gateway pays for that stale
+                // optimism at dispatch, exactly like any other crash.
+                let truth_up = membership
+                    .as_ref()
+                    .map(|m| !m.truth_down(id))
+                    .unwrap_or(true);
+                pool.set_health_id(id, truth_up);
+                if truth_up {
+                    if let Some(node) = pool.get_id(id) {
+                        node.on_rejoin(now_s);
+                    }
                 }
                 if let Some(m) = membership {
                     m.power_up(id, now_s);
@@ -996,6 +1008,71 @@ mod tests {
         let resp = gw.serve(routed.pair_id, &img, 0.0).unwrap();
         gw.finish_with_network(&routed, resp, &[], 0.0, 0.0, &mut m);
         assert_eq!(gw.adapt().unwrap().telemetry.samples(), 1);
+    }
+
+    #[test]
+    fn scale_tick_power_up_respects_ground_truth_crashes() {
+        // PoweredDown x crash interplay: a node that crashes while the
+        // scaler has it powered off must NOT come back healthy when
+        // the scaler powers it up — membership flips to Warming (the
+        // believed view is allowed to be optimistic) but pool health
+        // stays down until the churn Rejoin event lands.
+        let e = engine();
+        let store = tiny_store();
+        let pool =
+            NodePool::deploy(&e, &store.pairs(), &fleet(), 1).unwrap();
+        let mut gw = Gateway::new(
+            &e,
+            router_by_name("LE").unwrap(),
+            store,
+            pool,
+            5.0,
+            1,
+        );
+        let big = PairKey::new("yolov8n", "pi5_aihat");
+        let big_id = gw.store().id_of(&big).unwrap();
+        gw.enable_adapt(&crate::adapt::AdaptConfig {
+            scale_interval_s: 1.0,
+            rate_alpha: 1.0,
+            down_util: 0.35,
+            up_util: 0.75,
+            warmup_s: 2.0,
+            ..Default::default()
+        });
+        // trough powers the dear pair down
+        gw.adapt_scale_tick(1.0);
+        assert_eq!(
+            gw.membership().unwrap().state(big_id),
+            Some(crate::lifecycle::MemberState::PoweredDown)
+        );
+        // ground-truth crash lands on the powered-down node (the
+        // driver would also set pool health false — already false)
+        gw.pool_mut().set_health_id(big_id, false);
+        gw.membership_mut()
+            .unwrap()
+            .ground_truth_changed(big_id, false, 1.5);
+        // burst forces a power-up of the only off node
+        for _ in 0..400 {
+            gw.adapt_arrival();
+        }
+        gw.adapt_scale_tick(2.0);
+        let sc = gw.adapt().unwrap().scaler.as_ref().unwrap();
+        assert_eq!(sc.power_ups, 1);
+        assert_eq!(
+            gw.membership().unwrap().state(big_id),
+            Some(crate::lifecycle::MemberState::Warming),
+            "believed view re-enters through Warming"
+        );
+        assert!(
+            !gw.pool().is_healthy_id(big_id),
+            "scaler must not resurrect a crashed node"
+        );
+        // repair completes: the driver's Rejoin path restores health
+        gw.pool_mut().set_health_id(big_id, true);
+        gw.membership_mut()
+            .unwrap()
+            .ground_truth_changed(big_id, true, 3.0);
+        assert!(gw.pool().is_healthy_id(big_id));
     }
 
     #[test]

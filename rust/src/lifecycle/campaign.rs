@@ -1,0 +1,691 @@
+//! Correlated failure campaigns (DESIGN.md §15).
+//!
+//! Per-node churn (this module's parent) models *independent* MTBF/MTTR
+//! renewal processes; real edge fleets also fail in *correlated* ways —
+//! a rack PDU trips, a power domain browns out, a shard-gateway host
+//! dies. A campaign composes three seeded processes on top of churn:
+//!
+//! * **Failure domains**: every node belongs to domain
+//!   `node / domain_size` (consecutive synthesis indices — a "rack"
+//!   that spans shards, because the fleet homes node `i` on shard
+//!   `i % n_shards`). Each domain runs its own alternating
+//!   outage/restore renewal process; a domain outage crashes every
+//!   member at one instant.
+//! * **Shard-gateway failure with re-sharding**: each shard gateway
+//!   runs its own kill/recover renewal process. A kill drains the
+//!   gateway's queued work through the resilience policy and re-homes
+//!   its orphaned nodes onto surviving shards in stable hash order;
+//!   recovery pulls the gateway's original nodes back the same way.
+//! * **Ground-truth masking**: a node is down iff its churn process
+//!   *or* its domain says so. The merged timeline emits only
+//!   *effective* flips, so a node that is already independently down
+//!   when its domain trips crashes exactly once, and a domain restore
+//!   does not resurrect a node whose own repair is still pending.
+//!
+//! [`CampaignPlan::build`] folds all of it into one deterministic,
+//! pre-sorted event list both fleet engines (sequential shared-heap and
+//! parallel per-shard) replay identically: the plan is a pure function
+//! of `(n_nodes, n_shards, horizon, churn config, campaign config)`,
+//! which is what keeps campaign reports bit-identical at any
+//! `--threads`.
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::{exp_sample, failure_schedule, ChurnConfig};
+
+/// Salt of the per-domain outage renewal streams.
+const DOMAIN_SALT: u64 = 0x00CA_4411;
+/// Salt of the per-shard gateway kill renewal streams.
+const GATEWAY_SALT: u64 = 0x00CA_9A7E;
+/// Salt of the orphan re-homing hash (stable across campaigns).
+const RESHARD_SALT: u64 = 0x00CA_5EED;
+
+/// SplitMix64 finalizer: the stable re-homing hash. Pure in its input,
+/// so adoption targets are independent of processing order.
+fn mix64(seed: u64) -> u64 {
+    let mut z = seed.wrapping_add(0x9e3779b97f4a7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+/// Parameters of one failure campaign. Composes with (and requires) a
+/// [`ChurnConfig`]: the campaign injects correlated ground-truth
+/// events, while churn's probe/membership/resilience machinery decides
+/// what the gateways believe and what happens to in-flight work.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CampaignConfig {
+    /// Nodes per failure domain (rack / power-domain fan-out); domain
+    /// of node `i` is `i / domain_size`. Must be >= 1.
+    pub domain_size: usize,
+    /// Mean time between outages per domain (s); non-finite or <= 0
+    /// disables domain outages.
+    pub domain_mtbf_s: f64,
+    /// Mean domain outage duration (s).
+    pub domain_mttr_s: f64,
+    /// Mean time between kills per shard gateway (s); non-finite or
+    /// <= 0 disables gateway kills (the openloop driver only supports
+    /// the disabled form — it has no shard gateways).
+    pub gateway_mtbf_s: f64,
+    /// Mean gateway outage duration (s).
+    pub gateway_mttr_s: f64,
+    /// Seed of the campaign processes (independent of churn/arrivals).
+    pub seed: u64,
+}
+
+impl Default for CampaignConfig {
+    fn default() -> Self {
+        Self {
+            domain_size: 4,
+            domain_mtbf_s: 20.0,
+            domain_mttr_s: 2.0,
+            gateway_mtbf_s: f64::INFINITY,
+            gateway_mttr_s: 1.0,
+            seed: 23,
+        }
+    }
+}
+
+impl CampaignConfig {
+    /// Does this campaign schedule domain-wide outages?
+    pub fn domains_enabled(&self) -> bool {
+        self.domain_mtbf_s.is_finite() && self.domain_mtbf_s > 0.0
+    }
+
+    /// Does this campaign kill shard gateways (fleet driver only)?
+    pub fn gateway_enabled(&self) -> bool {
+        self.gateway_mtbf_s.is_finite() && self.gateway_mtbf_s > 0.0
+    }
+
+    /// Shape validation shared by every driver.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.domain_size >= 1,
+            "campaign domain_size must be >= 1"
+        );
+        anyhow::ensure!(
+            self.domain_mttr_s > 0.0,
+            "campaign domain_mttr_s must be > 0"
+        );
+        anyhow::ensure!(
+            self.gateway_mttr_s > 0.0,
+            "campaign gateway_mttr_s must be > 0"
+        );
+        Ok(())
+    }
+}
+
+/// One pre-planned campaign event. The vector order of
+/// [`CampaignPlan::events`] is the canonical injection order: both
+/// fleet engines push these as setup events with consecutive sequence
+/// numbers, so equal-time events process in exactly this order.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PlanEvent {
+    /// A failure domain tripped (`down`) or restored — an
+    /// observability marker anchored to the home shard of the domain's
+    /// first member (the member crashes follow as `Truth` events).
+    DomainMark { t: f64, shard: usize, domain: usize, down: bool },
+    /// An *effective* ground-truth health flip of one node (churn and
+    /// domain masks already folded).
+    Truth { t: f64, node: usize, up: bool },
+    /// Shard `shard`'s gateway dies. Queued work drains through the
+    /// `Release` events that follow immediately.
+    GwDown { t: f64, shard: usize },
+    /// Shard `shard`'s gateway recovers; its original nodes return
+    /// through the `Release`/`Adopt` pairs that follow.
+    GwUp { t: f64, shard: usize },
+    /// Node `node` leaves `shard`: drain its queue through the
+    /// resilience policy and park it dormant (`PoweredDown`).
+    Release { t: f64, shard: usize, node: usize },
+    /// Node `node` is adopted by `shard`; `up` is its ground-truth
+    /// health at adoption. The adopting gateway bootstraps membership
+    /// from scratch (Warming + probes) — stale-view realism, never
+    /// ground-truth teleportation.
+    Adopt { t: f64, shard: usize, node: usize, up: bool },
+}
+
+impl PlanEvent {
+    /// Virtual time of the event.
+    pub fn t(&self) -> f64 {
+        match *self {
+            PlanEvent::DomainMark { t, .. }
+            | PlanEvent::Truth { t, .. }
+            | PlanEvent::GwDown { t, .. }
+            | PlanEvent::GwUp { t, .. }
+            | PlanEvent::Release { t, .. }
+            | PlanEvent::Adopt { t, .. } => t,
+        }
+    }
+}
+
+/// Static campaign summary: a pure function of the plan (identical at
+/// every thread count by construction), serialized into the report.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CampaignReport {
+    /// Number of failure domains.
+    pub domains: usize,
+    /// Configured domain fan-out.
+    pub domain_size: usize,
+    /// Domain-wide outages injected.
+    pub domain_outages: usize,
+    /// Shard-gateway kills injected.
+    pub gw_kills: usize,
+    /// Node adoptions performed by re-sharding (kills + recoveries).
+    pub adoptions: usize,
+    /// Mean domain outage duration (open outages run to the horizon).
+    pub mean_outage_s: f64,
+}
+
+impl CampaignReport {
+    /// Stable JSON block — joins the golden-traced report dumps.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("domains", Json::num(self.domains as f64)),
+            ("domain_size", Json::num(self.domain_size as f64)),
+            ("domain_outages", Json::num(self.domain_outages as f64)),
+            ("gw_kills", Json::num(self.gw_kills as f64)),
+            ("adoptions", Json::num(self.adoptions as f64)),
+            ("mean_outage_s", Json::num(self.mean_outage_s)),
+        ])
+    }
+
+    /// One-line human summary for the CLI paths.
+    pub fn summary(&self) -> String {
+        format!(
+            "campaign: {} domains x {}, {} outages (mean {:.2} s), {} gw kills, {} adoptions",
+            self.domains,
+            self.domain_size,
+            self.domain_outages,
+            self.mean_outage_s,
+            self.gw_kills,
+            self.adoptions
+        )
+    }
+}
+
+/// One raw renewal-process moment, before mask folding.
+#[derive(Clone, Copy, Debug)]
+enum Moment {
+    /// Per-node churn flip (rank 0).
+    Node { node: usize, down: bool },
+    /// Domain-wide flip (rank 1).
+    Domain { domain: usize, down: bool },
+    /// Gateway flip (rank 2).
+    Gateway { shard: usize, down: bool },
+}
+
+impl Moment {
+    fn rank(&self) -> (u8, usize) {
+        match *self {
+            Moment::Node { node, .. } => (0, node),
+            Moment::Domain { domain, .. } => (1, domain),
+            Moment::Gateway { shard, .. } => (2, shard),
+        }
+    }
+}
+
+/// Alternating down/up renewal stream for `n` entities: one seeded
+/// exponential process each, sorted by `(t, id)`.
+fn renewal_stream(
+    n: usize,
+    horizon_s: f64,
+    mtbf_s: f64,
+    mttr_s: f64,
+    base: &Rng,
+) -> Vec<(f64, usize, bool)> {
+    let mut out = Vec::new();
+    for id in 0..n {
+        let mut rng = base.derive(id as u64);
+        let mut t = 0.0;
+        loop {
+            t += exp_sample(&mut rng, mtbf_s);
+            if t >= horizon_s {
+                break;
+            }
+            out.push((t, id, true)); // down
+            t += exp_sample(&mut rng, mttr_s.max(1e-6));
+            if t >= horizon_s {
+                break;
+            }
+            out.push((t, id, false)); // restore
+        }
+    }
+    out
+}
+
+/// The fully folded, deterministic campaign timeline plus the node →
+/// shard homing history the parallel engine needs to statically assign
+/// ground-truth events to workers.
+#[derive(Clone, Debug)]
+pub struct CampaignPlan {
+    /// Canonical injection order (see [`PlanEvent`]).
+    pub events: Vec<PlanEvent>,
+    /// Static summary of the schedule.
+    pub report: CampaignReport,
+    /// Per-node home transitions `(t, shard)`, starting at
+    /// `(0, node % n_shards)`.
+    homes_log: Vec<Vec<(f64, usize)>>,
+}
+
+impl CampaignPlan {
+    /// Fold churn + domain + gateway processes into the canonical
+    /// event list. Pure in its arguments; `n_shards = 1` is the
+    /// openloop (single-gateway) shape, where gateway kills must be
+    /// disabled by the caller.
+    pub fn build(
+        n_nodes: usize,
+        n_shards: usize,
+        horizon_s: f64,
+        churn: &ChurnConfig,
+        cfg: &CampaignConfig,
+    ) -> Result<Self> {
+        cfg.validate()?;
+        anyhow::ensure!(n_shards >= 1, "campaign needs >= 1 shard");
+        let ds = cfg.domain_size;
+        let n_domains = if n_nodes == 0 { 0 } else { n_nodes.div_ceil(ds) };
+
+        // raw moments: per-node churn flips, domain flips, gateway
+        // flips — merged by (t, rank, id); cross-stream time ties are
+        // measure-zero (independent RNG streams)
+        let mut moments: Vec<(f64, Moment)> = Vec::new();
+        for ev in failure_schedule(n_nodes, horizon_s, churn) {
+            moments.push((
+                ev.t,
+                Moment::Node { node: ev.node, down: !ev.up },
+            ));
+        }
+        if cfg.domains_enabled() {
+            let base = Rng::new(cfg.seed ^ DOMAIN_SALT);
+            for (t, d, down) in renewal_stream(
+                n_domains,
+                horizon_s,
+                cfg.domain_mtbf_s,
+                cfg.domain_mttr_s,
+                &base,
+            ) {
+                moments.push((t, Moment::Domain { domain: d, down }));
+            }
+        }
+        if cfg.gateway_enabled() {
+            let base = Rng::new(cfg.seed ^ GATEWAY_SALT);
+            for (t, s, down) in renewal_stream(
+                n_shards,
+                horizon_s,
+                cfg.gateway_mtbf_s,
+                cfg.gateway_mttr_s,
+                &base,
+            ) {
+                moments.push((t, Moment::Gateway { shard: s, down }));
+            }
+        }
+        moments.sort_by(|a, b| {
+            a.0.total_cmp(&b.0).then(a.1.rank().cmp(&b.1.rank()))
+        });
+
+        // fold masks + homing
+        let mut churn_down = vec![false; n_nodes];
+        let mut domain_down = vec![false; n_domains];
+        let mut eff_down = vec![false; n_nodes];
+        let mut gw_up = vec![true; n_shards];
+        let mut home: Vec<usize> =
+            (0..n_nodes).map(|i| i % n_shards).collect();
+        let mut parked = vec![false; n_nodes];
+        let mut homes_log: Vec<Vec<(f64, usize)>> =
+            home.iter().map(|&s| vec![(0.0, s)]).collect();
+        let mut events: Vec<PlanEvent> = Vec::new();
+        let mut domain_outages = 0usize;
+        let mut gw_kills = 0usize;
+        let mut adoptions = 0usize;
+        let mut outage_sum_s = 0.0f64;
+        let mut outage_started: Vec<Option<f64>> = vec![None; n_domains];
+
+        let mut flip =
+            |events: &mut Vec<PlanEvent>,
+             eff_down: &mut Vec<bool>,
+             churn_down: &[bool],
+             domain_down: &[bool],
+             t: f64,
+             node: usize| {
+                let dom = node / ds;
+                let eff = churn_down[node] || domain_down[dom];
+                if eff != eff_down[node] {
+                    eff_down[node] = eff;
+                    events.push(PlanEvent::Truth { t, node, up: !eff });
+                }
+            };
+
+        for (t, m) in moments {
+            match m {
+                Moment::Node { node, down } => {
+                    churn_down[node] = down;
+                    flip(
+                        &mut events,
+                        &mut eff_down,
+                        &churn_down,
+                        &domain_down,
+                        t,
+                        node,
+                    );
+                }
+                Moment::Domain { domain, down } => {
+                    domain_down[domain] = down;
+                    if down {
+                        domain_outages += 1;
+                        outage_started[domain] = Some(t);
+                    } else if let Some(t0) = outage_started[domain].take()
+                    {
+                        outage_sum_s += t - t0;
+                    }
+                    let first = domain * ds;
+                    let last = ((domain + 1) * ds).min(n_nodes);
+                    events.push(PlanEvent::DomainMark {
+                        t,
+                        shard: home[first],
+                        domain,
+                        down,
+                    });
+                    for node in first..last {
+                        flip(
+                            &mut events,
+                            &mut eff_down,
+                            &churn_down,
+                            &domain_down,
+                            t,
+                            node,
+                        );
+                    }
+                }
+                Moment::Gateway { shard, down } => {
+                    if down {
+                        gw_up[shard] = false;
+                        gw_kills += 1;
+                        events.push(PlanEvent::GwDown { t, shard });
+                        let survivors: Vec<usize> = (0..n_shards)
+                            .filter(|&s| gw_up[s])
+                            .collect();
+                        for node in 0..n_nodes {
+                            if home[node] != shard || parked[node] {
+                                continue;
+                            }
+                            events.push(PlanEvent::Release {
+                                t,
+                                shard,
+                                node,
+                            });
+                            if survivors.is_empty() {
+                                parked[node] = true;
+                            } else {
+                                let pick = mix64(
+                                    node as u64 ^ RESHARD_SALT,
+                                )
+                                    as usize
+                                    % survivors.len();
+                                let s2 = survivors[pick];
+                                events.push(PlanEvent::Adopt {
+                                    t,
+                                    shard: s2,
+                                    node,
+                                    up: !eff_down[node],
+                                });
+                                adoptions += 1;
+                                home[node] = s2;
+                                homes_log[node].push((t, s2));
+                            }
+                        }
+                    } else {
+                        gw_up[shard] = true;
+                        events.push(PlanEvent::GwUp { t, shard });
+                        // recovery re-adopts the gateway's ORIGINAL
+                        // nodes from wherever they live now (parked
+                        // nodes of other dead shards stay parked until
+                        // their own gateway returns)
+                        for node in 0..n_nodes {
+                            if node % n_shards != shard {
+                                continue;
+                            }
+                            let cur = home[node];
+                            events.push(PlanEvent::Release {
+                                t,
+                                shard: cur,
+                                node,
+                            });
+                            events.push(PlanEvent::Adopt {
+                                t,
+                                shard,
+                                node,
+                                up: !eff_down[node],
+                            });
+                            adoptions += 1;
+                            parked[node] = false;
+                            if cur != shard {
+                                home[node] = shard;
+                                homes_log[node].push((t, shard));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        // open outages run to the horizon
+        for started in outage_started.into_iter().flatten() {
+            outage_sum_s += horizon_s - started;
+        }
+        let report = CampaignReport {
+            domains: n_domains,
+            domain_size: ds,
+            domain_outages,
+            gw_kills,
+            adoptions,
+            mean_outage_s: if domain_outages > 0 {
+                outage_sum_s / domain_outages as f64
+            } else {
+                0.0
+            },
+        };
+        Ok(Self { events, report, homes_log })
+    }
+
+    /// The shard node `node` is homed on when an event at time `t`
+    /// processes: the last transition strictly before `t` (same-time
+    /// moves sort after ground-truth flips in the canonical order).
+    pub fn home_at(&self, node: usize, t: f64) -> usize {
+        let log = &self.homes_log[node];
+        let mut cur = log[0].1;
+        for &(tt, s) in log.iter() {
+            if tt < t {
+                cur = s;
+            } else {
+                break;
+            }
+        }
+        cur
+    }
+
+    /// Did any re-homing happen (i.e. does the fleet need the
+    /// pre-provisioned all-nodes shard tables)?
+    pub fn re_shards(&self) -> bool {
+        self.homes_log.iter().any(|l| l.len() > 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lifecycle::ResiliencePolicy;
+
+    fn churn() -> ChurnConfig {
+        ChurnConfig {
+            mtbf_s: 5.0,
+            mttr_s: 1.0,
+            policy: ResiliencePolicy::Retry { budget: 2 },
+            seed: 3,
+            ..Default::default()
+        }
+    }
+
+    fn camp() -> CampaignConfig {
+        CampaignConfig {
+            domain_size: 2,
+            domain_mtbf_s: 4.0,
+            domain_mttr_s: 1.0,
+            gateway_mtbf_s: 6.0,
+            gateway_mttr_s: 2.0,
+            seed: 23,
+        }
+    }
+
+    #[test]
+    fn config_gates_and_validation() {
+        let c = CampaignConfig::default();
+        assert!(c.domains_enabled());
+        assert!(!c.gateway_enabled(), "gateway kills default off");
+        assert!(c.validate().is_ok());
+        assert!(
+            CampaignConfig { domain_size: 0, ..camp() }
+                .validate()
+                .is_err()
+        );
+        assert!(
+            CampaignConfig { domain_mttr_s: 0.0, ..camp() }
+                .validate()
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn plan_is_deterministic_and_time_sorted() {
+        let a = CampaignPlan::build(8, 2, 40.0, &churn(), &camp())
+            .unwrap();
+        let b = CampaignPlan::build(8, 2, 40.0, &churn(), &camp())
+            .unwrap();
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.report, b.report);
+        assert!(!a.events.is_empty());
+        assert!(a
+            .events
+            .windows(2)
+            .all(|w| w[0].t() <= w[1].t()));
+        // a different campaign seed moves the correlated events but
+        // leaves the independent churn flips alone
+        let c = CampaignPlan::build(
+            8,
+            2,
+            40.0,
+            &churn(),
+            &CampaignConfig { seed: 99, ..camp() },
+        )
+        .unwrap();
+        assert_ne!(a.events, c.events);
+    }
+
+    #[test]
+    fn masking_emits_each_effective_flip_once() {
+        // pure-campaign (no independent churn): every domain trip
+        // crashes each member exactly once, restore rejoins them
+        let quiet = ChurnConfig {
+            mtbf_s: f64::INFINITY,
+            ..churn()
+        };
+        let plan = CampaignPlan::build(
+            6,
+            1,
+            60.0,
+            &quiet,
+            &CampaignConfig {
+                gateway_mtbf_s: f64::INFINITY,
+                ..camp()
+            },
+        )
+        .unwrap();
+        assert!(plan.report.domain_outages > 0);
+        assert_eq!(plan.report.gw_kills, 0);
+        assert!(plan.report.mean_outage_s > 0.0);
+        // strict per-node alternation: a crash is never followed by
+        // another crash (the whole point of the effective-flip fold)
+        for node in 0..6 {
+            let mut down = false;
+            for ev in &plan.events {
+                if let PlanEvent::Truth { node: n, up, .. } = *ev {
+                    if n == node {
+                        assert_eq!(up, down, "node {node} double flip");
+                        down = !up;
+                    }
+                }
+            }
+        }
+        // with churn composed in, alternation must still hold
+        let plan2 =
+            CampaignPlan::build(6, 1, 60.0, &churn(), &camp()).unwrap();
+        for node in 0..6 {
+            let mut down = false;
+            for ev in &plan2.events {
+                if let PlanEvent::Truth { node: n, up, .. } = *ev {
+                    if n == node {
+                        assert_eq!(up, down, "node {node} double flip");
+                        down = !up;
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gateway_kill_releases_and_rehomes_deterministically() {
+        let plan = CampaignPlan::build(8, 2, 60.0, &churn(), &camp())
+            .unwrap();
+        assert!(plan.report.gw_kills > 0);
+        assert!(plan.report.adoptions > 0);
+        assert!(plan.re_shards());
+        // every Release pairs with an Adopt or a park; adopted shards
+        // are live at adoption time (never the shard just killed)
+        let mut dead: Vec<bool> = vec![false; 2];
+        for ev in &plan.events {
+            match *ev {
+                PlanEvent::GwDown { shard, .. } => dead[shard] = true,
+                PlanEvent::GwUp { shard, .. } => dead[shard] = false,
+                PlanEvent::Adopt { shard, .. } => {
+                    assert!(!dead[shard], "adopted by a dead gateway")
+                }
+                _ => {}
+            }
+        }
+        // home_at follows the log: before any event it is node % 2
+        for node in 0..8 {
+            assert_eq!(plan.home_at(node, 0.0), node % 2);
+        }
+    }
+
+    #[test]
+    fn disabled_campaign_is_churn_plus_empty_extras() {
+        let off = CampaignConfig {
+            domain_mtbf_s: f64::INFINITY,
+            gateway_mtbf_s: f64::INFINITY,
+            ..CampaignConfig::default()
+        };
+        let plan =
+            CampaignPlan::build(4, 2, 40.0, &churn(), &off).unwrap();
+        assert_eq!(plan.report.domain_outages, 0);
+        assert_eq!(plan.report.gw_kills, 0);
+        assert!(!plan.re_shards());
+        // the timeline degenerates to the plain churn schedule
+        let sched = failure_schedule(4, 40.0, &churn());
+        let truths: Vec<(f64, usize, bool)> = plan
+            .events
+            .iter()
+            .filter_map(|e| match *e {
+                PlanEvent::Truth { t, node, up } => Some((t, node, up)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(truths.len(), sched.len());
+        for (got, want) in truths.iter().zip(&sched) {
+            assert_eq!(*got, (want.t, want.node, want.up));
+        }
+        let j = plan.report.to_json();
+        assert_eq!(j.req("gw_kills").unwrap().as_usize(), Some(0));
+        assert!(plan.report.summary().contains("0 gw kills"));
+    }
+}

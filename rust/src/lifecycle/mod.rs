@@ -28,6 +28,8 @@ use crate::router::{PairId, PairTable};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
+pub mod campaign;
+
 /// How the gateway handles a request whose in-flight copy is lost to a
 /// node crash (or that cannot be placed at arrival under churn).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -94,6 +96,12 @@ pub struct ChurnConfig {
     pub policy: ResiliencePolicy,
     /// Delay before a retry re-enters routing (s).
     pub retry_backoff_s: f64,
+    /// Hedge cancellation-on-first-response: when the winning copy of a
+    /// hedged request completes, cancel the in-flight sibling — release
+    /// its node slot immediately and charge only the energy accrued up
+    /// to the cancellation. `false` keeps the run-to-completion
+    /// behavior (the loser serves fully and its whole energy is waste).
+    pub hedge_cancel: bool,
     /// How far past the last arrival the failure/probe timelines extend
     /// (s) — bounds the event heap; late completions past the horizon
     /// simply see a frozen membership view.
@@ -114,6 +122,7 @@ impl Default for ChurnConfig {
             warmup_penalty: 0.5,
             policy: ResiliencePolicy::Retry { budget: 4 },
             retry_backoff_s: 0.25,
+            hedge_cancel: false,
             horizon_slack_s: 30.0,
             seed: 11,
         }
@@ -216,6 +225,11 @@ struct MemberEntry {
     /// them (that is the whole point of the probe layer).
     crashed_at: Option<f64>,
     rejoined_at: Option<f64>,
+    /// Ground-truth down marker mirroring the driver's pool health.
+    /// Never read by routing; the autoscaler consults it so powering a
+    /// node back up cannot resurrect one that is *actually* crashed
+    /// (its pending Rejoin event restores health when repair ends).
+    truth_down: bool,
 }
 
 /// Probe-driven membership: the stale health view one gateway routes
@@ -251,6 +265,7 @@ impl Membership {
                     warmup_until: 0.0,
                     crashed_at: None,
                     rejoined_at: None,
+                    truth_down: false,
                 };
                 table.len()
             ],
@@ -362,6 +377,7 @@ impl Membership {
     /// can be reported. Never read by routing.
     pub fn ground_truth_changed(&mut self, id: PairId, up: bool, now_s: f64) {
         if let Some(e) = self.entries.get_mut(id.index()) {
+            e.truth_down = !up;
             if up {
                 e.rejoined_at = Some(now_s);
             } else {
@@ -369,6 +385,17 @@ impl Membership {
                 e.rejoined_at = None;
             }
         }
+    }
+
+    /// Is `id` crashed in ground truth (last recorded flip was a
+    /// crash)? An accounting/driver hook like
+    /// [`Membership::ground_truth_changed`] — routing never reads it.
+    /// Unknown ids report `false`.
+    pub fn truth_down(&self, id: PairId) -> bool {
+        self.entries
+            .get(id.index())
+            .map(|e| e.truth_down)
+            .unwrap_or(false)
     }
 
     /// Census of believed states: (up, suspect, down, warming).
@@ -557,6 +584,17 @@ impl ChurnState {
             r.done = true;
             self.lost += 1;
         }
+    }
+
+    /// The losing sibling of a hedged request was cancelled on the
+    /// winner's completion (`hedge_cancel`): one outstanding copy
+    /// leaves the system and only its partially accrued energy counts
+    /// as waste. The request stays done — the winner already recorded
+    /// it — so the ledger is untouched.
+    pub fn copy_cancelled(&mut self, idx: usize, energy_mwh: f64) {
+        let r = &mut self.req[idx];
+        r.outstanding = r.outstanding.saturating_sub(1);
+        self.wasted_energy_mwh += energy_mwh;
     }
 
     /// One copy of `idx` completed service. Returns `true` when this
@@ -860,6 +898,45 @@ mod tests {
         // and out-of-table ids never panic
         m.power_down(PairId(9));
         m.power_up(PairId(9), 1.0);
+    }
+
+    #[test]
+    fn truth_down_tracks_ground_truth_across_power_state() {
+        let cfg = ChurnConfig::default();
+        let t = table(1);
+        let p = t.id_of(&pair(0)).unwrap();
+        let mut m = Membership::new(&t, &cfg);
+        assert!(!m.truth_down(p));
+        // a crash landing on a powered-down node still marks ground
+        // truth, so a later scaler power-up cannot resurrect it
+        m.power_down(p);
+        m.ground_truth_changed(p, false, 1.0);
+        assert!(m.truth_down(p));
+        assert_eq!(m.state(p), Some(MemberState::PoweredDown));
+        m.power_up(p, 2.0);
+        assert!(m.truth_down(p), "power_up must not clear ground truth");
+        assert_eq!(m.state(p), Some(MemberState::Warming));
+        // the pending repair clears it
+        m.ground_truth_changed(p, true, 3.0);
+        assert!(!m.truth_down(p));
+        // unknown ids never panic
+        assert!(!m.truth_down(PairId(9)));
+    }
+
+    #[test]
+    fn churn_state_hedge_cancellation_charges_partial_waste() {
+        let mut s = ChurnState::new(1, ResiliencePolicy::Hedge, 0.1);
+        s.dispatched(0);
+        s.hedge_dispatched(0);
+        // primary wins; the sibling is cancelled mid-serve having
+        // accrued 0.1 of its 0.4 mWh
+        assert!(s.copy_completed(0, 0.3, false));
+        s.copy_cancelled(0, 0.1);
+        assert_eq!(s.lost, 0);
+        assert_eq!(s.hedge_wins, 0);
+        assert!((s.wasted_energy_mwh - 0.1).abs() < 1e-12);
+        // the request resolved: a straggler loss event is absorbed
+        assert_eq!(s.copy_lost(0, 2.0), LossOutcome::Absorbed);
     }
 
     #[test]

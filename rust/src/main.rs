@@ -9,6 +9,10 @@
 //!               `--fleet` to sharded multi-gateway fleet serving,
 //!               `--churn` adds node crashes/rejoins with probe-driven
 //!               membership and a resilience policy (either mode),
+//!               `--campaign` layers a correlated failure campaign on
+//!               top — domain-wide outages (either mode) and
+//!               shard-gateway kills with deterministic re-sharding
+//!               (fleet mode),
 //!               `--adapt` turns on telemetry-driven profile correction
 //!               and energy-proportional autoscaling (either mode),
 //!               `--obs` turns on span tracing + virtual-time metrics
@@ -24,9 +28,15 @@
 //! --fleet-sizes a,b --fleet-shards a,b --fleet-routers a,b
 //! --fleet-rate <req/s> --fleet-requests <n> --fleet-perturb <f>;
 //! churn options: --mtbf <s> --mttr <s> --resilience drop|retry|hedge
-//! --retry-budget <n> --probe-interval <s> --warmup <s>, and for the
+//! --retry-budget <n> --probe-interval <s> --warmup <s>
+//! --hedge-cancel, and for the
 //! sweep --churn-availability a,b --churn-policies a,b
 //! --churn-routers a,b --churn-rate <req/s> --churn-requests <n>;
+//! campaign options: --campaign --domain-size <n> --domain-mtbf <s>
+//! --domain-mttr <s> --gateway-mtbf <s> --gateway-mttr <s>, and for
+//! the sweep --campaign-domain-sizes a,b --campaign-outage-rates a,b
+//! --campaign-routers a,b --campaign-policies a,b
+//! --campaign-rate <req/s> --campaign-requests <n> --no-escalate;
 //! slo options: --slo --slo-classes name:d,name:d --batch-window <s>
 //! --max-batch <n>, and for the sweep --slo-rates a,b
 //! --slo-windows a,b --slo-routers a,b --slo-requests <n>;
@@ -60,7 +70,10 @@ USAGE:
                    [--fleet] [--nodes N] [--shards K]
                    [--dispatch hash|least|sticky] [--threads N]
                    [--churn] [--mtbf S] [--mttr S]
-                   [--resilience drop|retry|hedge]
+                   [--resilience drop|retry|hedge] [--hedge-cancel]
+                   [--campaign] [--domain-size N] [--domain-mtbf S]
+                   [--domain-mttr S] [--gateway-mtbf S]
+                   [--gateway-mttr S]
                    [--slo] [--slo-classes name:d,name:d]
                    [--batch-window S] [--max-batch N]
                    [--adapt] [--adapt-alpha F] [--adapt-no-scale]
@@ -70,7 +83,7 @@ USAGE:
   ecore list
 
 experiments: fig2 fig4 fig5 table1 fig6 fig7 fig8 fig9 overhead openloop
-             fleet churn slo adapt
+             fleet churn slo adapt campaign
 ";
 
 fn main() -> Result<()> {
@@ -143,8 +156,21 @@ fn main() -> Result<()> {
                     "unknown dataset '{other}' (coco|balanced; video is fig8)"
                 ),
             };
+            let campaign_cfg = if args.flag("campaign") {
+                Some(h.cfg.campaign_config()?)
+            } else {
+                None
+            };
             let churn_cfg = if args.flag("churn") {
                 Some(h.cfg.churn_config()?)
+            } else if campaign_cfg.is_some() {
+                // --campaign implies probe-driven membership; without
+                // an explicit --churn the per-node crash process is
+                // silenced and only the campaign schedule injects
+                // failures
+                let mut c = h.cfg.churn_config()?;
+                c.mtbf_s = f64::INFINITY;
+                Some(c)
             } else {
                 None
             };
@@ -185,6 +211,7 @@ fn main() -> Result<()> {
                     churn: churn_cfg.clone(),
                     slo: slo_cfg.clone(),
                     adapt: adapt_cfg.clone(),
+                    campaign: campaign_cfg.clone(),
                     obs: obs_cfg.clone(),
                     threads: h.cfg.fleet_threads,
                 };
@@ -243,6 +270,9 @@ fn main() -> Result<()> {
                 if let Some(c) = &report.churn {
                     println!("{}", c.summary());
                 }
+                if let Some(c) = &report.campaign {
+                    println!("{}", c.summary());
+                }
                 if let Some(s) = &report.slo {
                     print_slo(s);
                 }
@@ -261,6 +291,7 @@ fn main() -> Result<()> {
                 || args.flag("slo")
                 || args.flag("adapt")
                 || args.flag("obs")
+                || args.flag("campaign")
             {
                 let mut gw = ecore::experiments::serve::build_gateway(
                     &h,
@@ -281,6 +312,7 @@ fn main() -> Result<()> {
                         churn: churn_cfg,
                         slo: slo_cfg,
                         adapt: adapt_cfg,
+                        campaign: campaign_cfg,
                         obs: obs_cfg.clone(),
                     },
                 )?;
@@ -313,6 +345,9 @@ fn main() -> Result<()> {
                     m.gateway_energy_mwh
                 );
                 if let Some(c) = &report.churn {
+                    println!("{}", c.summary());
+                }
+                if let Some(c) = &report.campaign {
                     println!("{}", c.summary());
                 }
                 if let Some(s) = &report.slo {

@@ -70,6 +70,18 @@ pub enum SpanKind {
     Retry,
     /// Abandoned (retry budget or deadline exhausted).
     Abandon,
+    /// Campaign: a failure domain tripped (v = domain id). Uses the
+    /// sentinel request index (campaign events belong to no request).
+    DomainOut,
+    /// Campaign: a failure domain restored (v = domain id).
+    DomainBack,
+    /// Campaign: this shard's gateway was killed.
+    GwKill,
+    /// Campaign: this shard's gateway recovered.
+    GwRestore,
+    /// Campaign: a node was adopted by this shard after re-sharding
+    /// (v = global node index, pair = its interned id here).
+    Adopt,
 }
 
 /// Every kind in canonical rank order (drives per-kind totals).
@@ -86,11 +98,16 @@ pub const KINDS: [SpanKind; SpanKind::COUNT] = [
     SpanKind::Loss,
     SpanKind::Retry,
     SpanKind::Abandon,
+    SpanKind::DomainOut,
+    SpanKind::DomainBack,
+    SpanKind::GwKill,
+    SpanKind::GwRestore,
+    SpanKind::Adopt,
 ];
 
 impl SpanKind {
     /// Number of kinds (size of the per-kind totals array).
-    pub const COUNT: usize = 12;
+    pub const COUNT: usize = 17;
 
     /// Stable JSON/prom name of the kind.
     pub fn name(self) -> &'static str {
@@ -107,6 +124,11 @@ impl SpanKind {
             SpanKind::Loss => "loss",
             SpanKind::Retry => "retry",
             SpanKind::Abandon => "abandon",
+            SpanKind::DomainOut => "domain_out",
+            SpanKind::DomainBack => "domain_back",
+            SpanKind::GwKill => "gw_kill",
+            SpanKind::GwRestore => "gw_restore",
+            SpanKind::Adopt => "adopt",
         }
     }
 }
@@ -264,7 +286,11 @@ impl ObsShard {
     /// Pure in `(seed, idx)` — no mutable reservoir state, so every
     /// collector agrees without coordination.
     pub fn keep(&self, idx: u64) -> bool {
-        if idx < self.span_head || idx + self.span_tail >= self.n_requests {
+        // saturating: the campaign sentinel index (u64::MAX) always
+        // lands in the tail and is always retained
+        if idx < self.span_head
+            || idx.saturating_add(self.span_tail) >= self.n_requests
+        {
             return true;
         }
         let middle_n = self
@@ -409,6 +435,36 @@ impl ObsShard {
     /// A node of this shard rejoined (series counter only).
     pub fn rejoin(&mut self, t: f64) {
         self.bucket(t).rejoins += 1;
+    }
+
+    /// Campaign: failure domain `domain` tripped (`down = true`) or
+    /// restored, anchored to this shard (home of the domain's first
+    /// member). Span-only — the member crashes feed the series
+    /// crash/rejoin counters individually, so series lines keep their
+    /// fixed field set.
+    pub fn domain_mark(&mut self, t: f64, domain: usize, down: bool) {
+        let kind = if down {
+            SpanKind::DomainOut
+        } else {
+            SpanKind::DomainBack
+        };
+        self.span(usize::MAX, t, kind, -1, domain as f64, 0.0);
+    }
+
+    /// Campaign: this shard's gateway died (`up = false`) or recovered.
+    pub fn gw_mark(&mut self, t: f64, up: bool) {
+        let kind = if up {
+            SpanKind::GwRestore
+        } else {
+            SpanKind::GwKill
+        };
+        self.span(usize::MAX, t, kind, -1, 0.0, 0.0);
+    }
+
+    /// Campaign: global node `node` (interned here as `pair`) was
+    /// adopted by this shard after re-sharding.
+    pub fn adopt(&mut self, node: usize, t: f64, pair: i64) {
+        self.span(usize::MAX, t, SpanKind::Adopt, pair, node as f64, 0.0);
     }
 
     /// Powered-node gauge sample (autoscaler state).

@@ -29,6 +29,9 @@ use crate::dataset::{Dataset, GtBox, Scene};
 use crate::devices;
 use crate::estimators::GatewayCost;
 use crate::gateway::{amortize, Gateway, RoutedRequest};
+use crate::lifecycle::campaign::{
+    CampaignConfig, CampaignPlan, CampaignReport, PlanEvent,
+};
 use crate::lifecycle::{
     self, ChurnConfig, ChurnReport, ChurnState, LossOutcome,
     ResiliencePolicy,
@@ -55,6 +58,14 @@ pub enum ArrivalProcess {
     /// extends with gap `t` (the gap from the implicit origin), so
     /// `[t]` yields `t, 2t, 3t, …`.
     Trace(Vec<f64>),
+    /// Markov-modulated Poisson process: a 2-state phase chain where
+    /// state `i` emits Poisson arrivals at `rates[i]` and dwells for an
+    /// exponential time of mean `dwell_s` before switching. The
+    /// burstiness knob for the churn/campaign sweeps — same mean rate
+    /// as a Poisson process at the dwell-weighted average, but arrivals
+    /// clump while the hot state holds. State switches redraw the
+    /// pending gap (exponentials are memoryless, so this is exact).
+    Mmpp { rates: [f64; 2], dwell_s: f64 },
 }
 
 impl ArrivalProcess {
@@ -97,6 +108,30 @@ impl ArrivalProcess {
                 }
                 out
             }
+            ArrivalProcess::Mmpp { rates, dwell_s } => {
+                let mut rng = Rng::new(seed ^ 0x0330_77A2);
+                let mut t = 0.0;
+                let mut state = 0usize;
+                let mut switch =
+                    -(1.0 - rng.f64()).ln() * dwell_s.max(1e-9);
+                let mut out = Vec::with_capacity(n);
+                while out.len() < n {
+                    let gap =
+                        -(1.0 - rng.f64()).ln() / rates[state].max(1e-9);
+                    if t + gap >= switch {
+                        // phase switch before the next arrival: jump to
+                        // the switch instant and redraw (memoryless)
+                        t = switch;
+                        state ^= 1;
+                        switch = t
+                            + -(1.0 - rng.f64()).ln() * dwell_s.max(1e-9);
+                    } else {
+                        t += gap;
+                        out.push(t);
+                    }
+                }
+                out
+            }
         }
     }
 }
@@ -125,6 +160,13 @@ pub struct OpenLoopConfig {
     /// `None` keeps the event stream bit-identical to the
     /// pre-adaptation driver.
     pub adapt: Option<AdaptConfig>,
+    /// Correlated failure campaign (DESIGN.md §15): domain-wide
+    /// outages folded with per-node churn into one effective
+    /// ground-truth timeline. Requires `churn`; the open loop has a
+    /// single gateway, so gateway kills must be disabled. `None`
+    /// keeps the event stream bit-identical to the pre-campaign
+    /// driver.
+    pub campaign: Option<CampaignConfig>,
     /// Observability (DESIGN.md §14): a passive collector folds every
     /// stage transition into span records and virtual-time series,
     /// exported at end of run. Schedules zero events either way;
@@ -141,6 +183,7 @@ impl Default for OpenLoopConfig {
             churn: None,
             slo: None,
             adapt: None,
+            campaign: None,
             obs: None,
         }
     }
@@ -175,6 +218,9 @@ pub struct OpenLoopReport {
     /// transitions, idle-energy comparison vs a static fleet) —
     /// present exactly when the run had an adapt config.
     pub adapt: Option<AdaptReport>,
+    /// Campaign schedule summary (domains, outages, mean duration) —
+    /// present exactly when the run had a campaign config.
+    pub campaign: Option<CampaignReport>,
 }
 
 impl OpenLoopReport {
@@ -226,6 +272,9 @@ impl OpenLoopReport {
         if let Some(a) = &self.adapt {
             fields.push(("adapt", a.to_json()));
         }
+        if let Some(c) = &self.campaign {
+            fields.push(("campaign", c.to_json()));
+        }
         Json::obj(fields)
     }
 }
@@ -272,6 +321,10 @@ enum EventKind {
     /// `scale` only): close the arrival-rate window and perform at
     /// most one power transition.
     ScaleTick,
+    /// A failure domain tripped (`down`) or restored (campaign runs
+    /// only): a pure observability marker — the member crashes ride
+    /// alongside as ordinary `Crash`/`Rejoin` events.
+    DomainMark { domain: usize, down: bool },
 }
 
 impl PartialEq for Event {
@@ -396,6 +449,11 @@ struct ChurnDriver {
     /// admission; retries route with these instead of re-estimating,
     /// so a request pays GatewayCost exactly once.
     est: Vec<Option<(usize, GatewayCost)>>,
+    /// `(primary, hedge)` pair ids recorded at hedge dispatch;
+    /// consumed by cancellation-on-first-response.
+    hedge_pairs: Vec<Option<(PairId, PairId)>>,
+    /// Cancel the losing sibling the instant the winner completes.
+    hedge_cancel: bool,
 }
 
 /// Driver-side SLO context: the config, each request's absolute
@@ -468,6 +526,7 @@ pub fn run_frames(
     // materialized up front (deterministic), the gateway switches to
     // its probe-driven membership view, and per-request copy accounting
     // starts. Without churn nothing below adds a single event.
+    let mut campaign_plan: Option<CampaignPlan> = None;
     let mut churn = match &cfg.churn {
         Some(c) => {
             gw.enable_churn(c);
@@ -483,15 +542,62 @@ pub fn run_frames(
                     )
                 })
                 .collect();
-            for ev in
-                lifecycle::failure_schedule(pairs.len(), horizon_s, c)
-            {
-                let kind = if ev.up {
-                    EventKind::Rejoin(ev.node)
-                } else {
-                    EventKind::Crash(ev.node)
-                };
-                sim.push(ev.t, kind);
+            match &cfg.campaign {
+                // a campaign folds churn + domain outages into one
+                // effective ground-truth timeline (DESIGN.md §15); the
+                // open loop is single-gateway, so gateway kills are a
+                // fleet-driver feature
+                Some(cc) => {
+                    anyhow::ensure!(
+                        !cc.gateway_enabled(),
+                        "gateway campaigns need the fleet driver \
+                         (the open loop has no shard gateways)"
+                    );
+                    let plan = CampaignPlan::build(
+                        pairs.len(),
+                        1,
+                        horizon_s,
+                        c,
+                        cc,
+                    )?;
+                    for pe in &plan.events {
+                        match *pe {
+                            PlanEvent::Truth { t, node, up } => {
+                                let kind = if up {
+                                    EventKind::Rejoin(node)
+                                } else {
+                                    EventKind::Crash(node)
+                                };
+                                sim.push(t, kind);
+                            }
+                            PlanEvent::DomainMark {
+                                t, domain, down, ..
+                            } => sim.push(
+                                t,
+                                EventKind::DomainMark { domain, down },
+                            ),
+                            _ => anyhow::bail!(
+                                "unexpected gateway event in an \
+                                 open-loop campaign plan"
+                            ),
+                        }
+                    }
+                    campaign_plan = Some(plan);
+                }
+                None => {
+                    for ev in lifecycle::failure_schedule(
+                        pairs.len(),
+                        horizon_s,
+                        c,
+                    ) {
+                        let kind = if ev.up {
+                            EventKind::Rejoin(ev.node)
+                        } else {
+                            EventKind::Crash(ev.node)
+                        };
+                        sim.push(ev.t, kind);
+                    }
+                }
             }
             let gap = c.probe_interval_s.max(1e-6);
             let mut t = gap;
@@ -508,9 +614,18 @@ pub fn run_frames(
                     c.retry_backoff_s,
                 ),
                 est: vec![None; frames.len()],
+                hedge_pairs: vec![None; frames.len()],
+                hedge_cancel: c.hedge_cancel,
             })
         }
-        None => None,
+        None => {
+            anyhow::ensure!(
+                cfg.campaign.is_none(),
+                "campaign requires a churn config (use mtbf_s = inf \
+                 for a pure-campaign run)"
+            );
+            None
+        }
     };
 
     // Online adaptation (DESIGN.md §12): telemetry corrections feed
@@ -664,8 +779,10 @@ pub fn run_frames(
                 // sibling, not declare the request lost.
                 if let Some(ch) = churn.as_mut() {
                     ch.state.dispatched(idx);
-                    if dup.is_some() {
+                    if let Some(d) = &dup {
                         ch.state.hedge_dispatched(idx);
+                        ch.hedge_pairs[idx] =
+                            Some((routed.pair_id, d.pair_id));
                     }
                 }
                 // batch formation: primary copies without a hedge
@@ -787,6 +904,7 @@ pub fn run_frames(
                 if let Some(o) = sim.obs.as_mut() {
                     o.in_flight(ev.t, sim.in_flight);
                 }
+                let (r_idx, r_hedge) = (done.idx, done.hedge);
                 let winner = match churn.as_mut() {
                     Some(ch) => ch.state.copy_completed(
                         done.idx,
@@ -842,6 +960,22 @@ pub fn run_frames(
                         i64::from(pair.0),
                         done.resp.energy_mwh,
                     );
+                }
+                // cancellation-on-first-response: the winner's arrival
+                // makes the sibling pure waste — cancel it now, charge
+                // only the energy it accrued, and free its slot
+                let sib = match churn.as_mut() {
+                    Some(ch) if winner && ch.hedge_cancel => ch
+                        .hedge_pairs[r_idx]
+                        .take()
+                        .map(|(p, h)| if r_hedge { p } else { h }),
+                    _ => None,
+                };
+                if let Some(sib) = sib {
+                    cancel_sibling(
+                        gw, frames, &mut sim, &mut churn, &mut slo,
+                        sib, r_idx, ev.t,
+                    )?;
                 }
                 start_next(
                     gw, frames, &mut sim, &mut churn, &mut slo, pair,
@@ -921,6 +1055,11 @@ pub fn run_frames(
                     o.powered(ev.t, n);
                 }
             }
+            EventKind::DomainMark { domain, down } => {
+                if let Some(o) = sim.obs.as_mut() {
+                    o.domain_mark(ev.t, domain, down);
+                }
+            }
         }
     }
 
@@ -952,6 +1091,7 @@ pub fn run_frames(
         churn: churn_report,
         slo: slo.map(|s| s.metrics),
         adapt: adapt_report,
+        campaign: campaign_plan.map(|p| p.report),
     })
 }
 
@@ -1258,6 +1398,68 @@ fn lose_queued(
     }
 }
 
+/// Cancel the losing hedge sibling the instant the winner completes
+/// (hedge_cancel runs only): release its slot NOW and charge only the
+/// energy it accrued — pro-rated by service progress for an in-service
+/// copy, zero for a queued one. The sibling may already be gone
+/// (crash-lost before the winner returned); then `copy_lost` settled
+/// the ledger and there is nothing to cancel. Taking the in-service
+/// slot stales the sibling's scheduled Completion (token mismatch).
+#[allow(clippy::too_many_arguments)]
+fn cancel_sibling(
+    gw: &mut Gateway<'_>,
+    frames: &[Scene],
+    sim: &mut SimState,
+    churn: &mut Option<ChurnDriver>,
+    slo: &mut Option<SloRt>,
+    sib: PairId,
+    idx: usize,
+    now_s: f64,
+) -> Result<()> {
+    enum Hit {
+        Serving(f64),
+        Queued,
+        Gone,
+    }
+    let hit = match sim.queues.get_mut(&sib) {
+        Some(q) => {
+            if q.serving.as_ref().is_some_and(|x| x.idx == idx) {
+                let sv = q.serving.take().expect("just matched");
+                let frac = ((now_s - sv.start_s)
+                    / sv.resp.latency_s.max(1e-12))
+                .clamp(0.0, 1.0);
+                Hit::Serving(sv.resp.energy_mwh * frac)
+            } else if let Some(pos) =
+                q.backlog.iter().position(|b| b.idx == idx)
+            {
+                q.backlog.remove(pos);
+                Hit::Queued
+            } else {
+                Hit::Gone
+            }
+        }
+        None => Hit::Gone,
+    };
+    let (partial, was_serving) = match hit {
+        Hit::Serving(e) => (e, true),
+        Hit::Queued => (0.0, false),
+        Hit::Gone => return Ok(()),
+    };
+    gw.pool_mut().release_id(sib);
+    sim.in_flight -= 1;
+    let ch = churn.as_mut().expect("hedge without churn");
+    ch.state.copy_cancelled(idx, partial);
+    let n_if = sim.in_flight;
+    if let Some(o) = sim.obs.as_mut() {
+        o.hedge_loss(idx, now_s, i64::from(sib.0), partial);
+        o.in_flight(now_s, n_if);
+    }
+    if was_serving {
+        start_next(gw, frames, sim, churn, slo, sib, now_s)?;
+    }
+    Ok(())
+}
+
 /// Render a dataset up front and drive it open loop (the per-scene
 /// render cost must not sit on the event clock's critical path).
 pub fn run_dataset(
@@ -1384,6 +1586,7 @@ mod tests {
                     churn: None,
                     slo: None,
                     adapt: None,
+                    campaign: None,
                     obs: None,
                 },
             )
@@ -1431,6 +1634,7 @@ mod tests {
                     churn: None,
                     slo: None,
                     adapt: None,
+                    campaign: None,
                     obs: None,
                 },
             )
@@ -1465,6 +1669,7 @@ mod tests {
                 churn: None,
                 slo: None,
                 adapt: None,
+                campaign: None,
                 obs: None,
             },
         )
@@ -1508,6 +1713,7 @@ mod tests {
                 }),
                 slo: None,
                 adapt: None,
+                campaign: None,
                 obs: None,
             },
         )
@@ -1541,6 +1747,7 @@ mod tests {
             churn,
             slo: None,
             adapt: None,
+            campaign: None,
             obs: None,
         };
         let mut base_gw = gateway(&e, "Orc", 3);
@@ -1560,6 +1767,7 @@ mod tests {
                 warmup_penalty: 0.5,
                 policy: ResiliencePolicy::Retry { budget: 8 },
                 retry_backoff_s: 0.2,
+                hedge_cancel: false,
                 horizon_slack_s: 5.0,
                 seed: 11,
             })),
@@ -1608,6 +1816,7 @@ mod tests {
                 }),
                 slo: None,
                 adapt: None,
+                campaign: None,
                 obs: None,
             },
         )
@@ -1658,6 +1867,7 @@ mod tests {
                 }),
                 slo: None,
                 adapt: None,
+                campaign: None,
                 obs: None,
             },
         )
@@ -1707,6 +1917,7 @@ mod tests {
                     }),
                     slo: None,
                     adapt: None,
+                    campaign: None,
                     obs: None,
                 },
             )
@@ -1733,6 +1944,7 @@ mod tests {
                     churn: None,
                     slo: None,
                     adapt: None,
+                    campaign: None,
                     obs: None,
                 },
             )
@@ -1821,6 +2033,7 @@ mod tests {
                     max_batch: 1,
                 }),
                 adapt: None,
+                campaign: None,
                 obs: None,
             },
         )
@@ -1866,6 +2079,7 @@ mod tests {
                         max_batch: 4,
                     }),
                     adapt: None,
+                    campaign: None,
                     obs: None,
                 },
             )
@@ -1921,6 +2135,7 @@ mod tests {
                     churn: None,
                     slo: Some(SloConfig::default()),
                     adapt: None,
+                    campaign: None,
                     obs: None,
                 },
             )
@@ -1929,6 +2144,203 @@ mod tests {
             .dump()
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn mmpp_arrivals_are_deterministic_bursty_and_ordered() {
+        let p = ArrivalProcess::Mmpp {
+            rates: [200.0, 5.0],
+            dwell_s: 0.5,
+        };
+        let a = p.times(400, 9);
+        assert_eq!(a, p.times(400, 9), "same seed must replay");
+        assert_ne!(a, p.times(400, 10), "seed must matter");
+        assert!(a.windows(2).all(|w| w[0] <= w[1]), "nondecreasing");
+        // burstiness: the squared coefficient of variation of the
+        // inter-arrival gaps must exceed a Poisson process's 1.0 —
+        // arrivals clump in the 200 rps phase and starve in the 5 rps
+        // phase
+        let gaps: Vec<f64> = std::iter::once(a[0])
+            .chain(a.windows(2).map(|w| w[1] - w[0]))
+            .collect();
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let var = gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>()
+            / gaps.len() as f64;
+        let cv2 = var / (mean * mean);
+        assert!(cv2 > 1.5, "MMPP not bursty: cv^2 = {cv2}");
+        // degenerate MMPP (equal rates) is just Poisson pacing: still
+        // deterministic and ordered
+        let q = ArrivalProcess::Mmpp {
+            rates: [20.0, 20.0],
+            dwell_s: 0.1,
+        };
+        let b = q.times(50, 3);
+        assert_eq!(b, q.times(50, 3));
+        assert!(b.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn campaign_domain_outage_blacks_out_the_fleet_and_recovers() {
+        // pure-campaign run (infinite node mtbf): both pool nodes sit
+        // in one failure domain, so every outage is a full blackout —
+        // each outage crashes exactly both nodes, restores rejoin
+        // them, and the retry policy claws back what it can. The
+        // ledger must balance and the whole report must replay byte
+        // for byte.
+        let e = engine();
+        let ds = coco::build(40, 27);
+        let run = || {
+            let mut gw = gateway(&e, "LE", 3);
+            run_dataset(
+                &mut gw,
+                &ds,
+                &OpenLoopConfig {
+                    arrivals: ArrivalProcess::Poisson { rate_rps: 60.0 },
+                    queue_capacity: 8,
+                    seed: 15,
+                    churn: Some(ChurnConfig {
+                        mtbf_s: f64::INFINITY,
+                        probe_interval_s: 0.05,
+                        probe_timeout_s: 0.02,
+                        suspect_after: 1,
+                        policy: ResiliencePolicy::Retry { budget: 4 },
+                        retry_backoff_s: 0.05,
+                        horizon_slack_s: 2.0,
+                        ..Default::default()
+                    }),
+                    slo: None,
+                    adapt: None,
+                    campaign: Some(CampaignConfig {
+                        domain_size: 2,
+                        domain_mtbf_s: 0.5,
+                        domain_mttr_s: 0.3,
+                        gateway_mtbf_s: f64::INFINITY,
+                        gateway_mttr_s: 1.0,
+                        seed: 23,
+                    }),
+                    obs: None,
+                },
+            )
+            .unwrap()
+        };
+        let report = run();
+        let camp = report.campaign.as_ref().expect("campaign report");
+        let churn = report.churn.as_ref().expect("churn report");
+        assert_eq!(camp.domains, 1);
+        assert_eq!(camp.domain_size, 2);
+        assert!(camp.domain_outages > 0, "no outages fired");
+        assert_eq!(camp.gw_kills, 0);
+        assert!(camp.mean_outage_s > 0.0);
+        // every outage crashes the whole domain at one instant, and
+        // with infinite node mtbf those are the ONLY crashes
+        assert_eq!(churn.crashes, 2 * camp.domain_outages);
+        assert_eq!(
+            report.metrics.requests + report.dropped + churn.lost,
+            report.offered,
+            "served + dropped + lost must equal offered"
+        );
+        assert!(report.to_json().dump().contains("campaign"));
+        let a = run().to_json().dump();
+        let b = run().to_json().dump();
+        assert_eq!(a, b, "campaign run must replay bit-identically");
+    }
+
+    #[test]
+    fn campaign_validation_rejects_unsupported_combos() {
+        let e = engine();
+        let ds = coco::build(4, 3);
+        // campaign without churn: the resilience machinery the
+        // campaign feeds does not exist
+        let mut gw = gateway(&e, "LE", 3);
+        let err = run_dataset(
+            &mut gw,
+            &ds,
+            &OpenLoopConfig {
+                campaign: Some(CampaignConfig::default()),
+                ..OpenLoopConfig::default()
+            },
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("churn"), "{err}");
+        // gateway kills: the open loop has no shard gateways
+        let mut gw = gateway(&e, "LE", 3);
+        let err = run_dataset(
+            &mut gw,
+            &ds,
+            &OpenLoopConfig {
+                churn: Some(ChurnConfig {
+                    mtbf_s: f64::INFINITY,
+                    ..Default::default()
+                }),
+                campaign: Some(CampaignConfig {
+                    gateway_mtbf_s: 5.0,
+                    ..CampaignConfig::default()
+                }),
+                ..OpenLoopConfig::default()
+            },
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("fleet"), "{err}");
+    }
+
+    #[test]
+    fn hedge_cancellation_cuts_waste_and_keeps_the_ledger_exact() {
+        // gentle load (one request at a time): every request hedges
+        // onto the second pair, the fast pair always wins, and with
+        // cancellation ON the loser is killed mid-service — so its
+        // waste is the pro-rated fraction of its energy, strictly less
+        // than the run-to-completion waste, while served counts and
+        // the ledger stay identical.
+        let e = engine();
+        let ds = coco::build(12, 19);
+        let run = |cancel: bool| {
+            let mut gw = gateway(&e, "LE", 3);
+            run_dataset(
+                &mut gw,
+                &ds,
+                &OpenLoopConfig {
+                    arrivals: ArrivalProcess::Uniform { gap_s: 0.5 },
+                    queue_capacity: 8,
+                    seed: 7,
+                    churn: Some(ChurnConfig {
+                        mtbf_s: f64::INFINITY,
+                        policy: ResiliencePolicy::Hedge,
+                        hedge_cancel: cancel,
+                        horizon_slack_s: 1.0,
+                        ..Default::default()
+                    }),
+                    slo: None,
+                    adapt: None,
+                    campaign: None,
+                    obs: None,
+                },
+            )
+            .unwrap()
+        };
+        let off = run(false);
+        let on = run(true);
+        for (label, r) in [("off", &off), ("on", &on)] {
+            let c = r.churn.as_ref().expect("churn report");
+            assert_eq!(c.hedged, r.offered, "{label}: every req hedges");
+            assert_eq!(c.crashes, 0, "{label}");
+            assert_eq!(c.lost, 0, "{label}");
+            assert_eq!(r.dropped, 0, "{label}");
+            assert_eq!(
+                r.metrics.requests, r.offered,
+                "{label}: each request served exactly once"
+            );
+        }
+        let w_off =
+            off.churn.as_ref().unwrap().wasted_energy_mwh;
+        let w_on = on.churn.as_ref().unwrap().wasted_energy_mwh;
+        assert!(w_off > 0.0, "losing copies must cost something");
+        assert!(
+            w_on < w_off,
+            "cancellation must cut waste: on {w_on} vs off {w_off}"
+        );
+        // cancelled-run replay stays bit-identical
+        let again = run(true);
+        assert_eq!(on.to_json().dump(), again.to_json().dump());
     }
 
     #[test]
@@ -1952,6 +2364,7 @@ mod tests {
                 churn: None,
                 slo: None,
                 adapt: Some(AdaptConfig::default()),
+                campaign: None,
                 obs: None,
             },
         )
@@ -1986,6 +2399,7 @@ mod tests {
                     churn: None,
                     slo: None,
                     adapt: Some(AdaptConfig::default()),
+                    campaign: None,
                     obs: None,
                 },
             )

@@ -16,6 +16,7 @@ use ecore::adapt::AdaptConfig;
 use ecore::devices::drift::DriftConfig;
 use ecore::fleet::{self, DispatchPolicy, FleetBuilder, FleetConfig};
 use ecore::gateway::{router_by_name, Gateway};
+use ecore::lifecycle::campaign::CampaignConfig;
 use ecore::lifecycle::{ChurnConfig, ResiliencePolicy};
 use ecore::nodes::NodePool;
 use ecore::obs::ObsConfig;
@@ -68,6 +69,7 @@ fn openloop_dump(e: &Engine) -> String {
             churn: None,
             slo: None,
             adapt: None,
+            campaign: None,
             obs: None,
         },
     )
@@ -103,11 +105,13 @@ fn churn_dump(e: &Engine) -> String {
                 warmup_penalty: 0.5,
                 policy: ResiliencePolicy::Retry { budget: 3 },
                 retry_backoff_s: 0.04,
+                hedge_cancel: false,
                 horizon_slack_s: 1.5,
                 seed: 29,
             }),
             slo: None,
             adapt: None,
+            campaign: None,
             obs: None,
         },
     )
@@ -142,11 +146,13 @@ fn fleet_churn_dump(e: &Engine) -> String {
                     warmup_penalty: 0.5,
                     policy: ResiliencePolicy::Hedge,
                     retry_backoff_s: 0.04,
+                    hedge_cancel: false,
                     horizon_slack_s: 1.0,
                     seed: 37,
                 }),
                 slo: None,
                 adapt: None,
+                campaign: None,
                 obs: None,
                 threads: 1,
             },
@@ -182,6 +188,7 @@ fn fleet_dump(e: &Engine) -> String {
                 churn: None,
                 slo: None,
                 adapt: None,
+                campaign: None,
                 obs: None,
                 threads: 1,
             },
@@ -218,6 +225,7 @@ fn slo_dump(e: &Engine) -> String {
             churn: None,
             slo: Some(ecore::workload::slo::SloConfig::default()),
             adapt: None,
+            campaign: None,
             obs: None,
         },
     )
@@ -245,6 +253,7 @@ fn fleet_slo_dump(e: &Engine) -> String {
                 churn: None,
                 slo: Some(ecore::workload::slo::SloConfig::default()),
                 adapt: None,
+                campaign: None,
                 obs: None,
                 threads: 1,
             },
@@ -285,6 +294,7 @@ fn adapt_dump(e: &Engine) -> String {
                 scale_interval_s: 0.05,
                 ..Default::default()
             }),
+            campaign: None,
             obs: None,
         },
     )
@@ -315,6 +325,7 @@ fn fleet_adapt_dump(e: &Engine) -> String {
                     scale_interval_s: 0.05,
                     ..Default::default()
                 }),
+                campaign: None,
                 obs: None,
                 threads: 1,
             },
@@ -325,6 +336,112 @@ fn fleet_adapt_dump(e: &Engine) -> String {
         &ds,
         &ArrivalProcess::Poisson { rate_rps: 200.0 },
         59,
+    )
+    .unwrap();
+    report.to_json().pretty()
+}
+
+/// One fixed-seed open-loop campaign run (domain-wide outages layered
+/// on quiet per-node churn; gateway kills disabled — the open loop has
+/// no shards), serialized with its campaign block.
+fn campaign_dump(e: &Engine) -> String {
+    let ds = ecore::dataset::coco::build(16, 47);
+    let store = base_store();
+    let pool =
+        NodePool::deploy(e, &store.pairs(), &ecore::devices::fleet(), 5)
+            .unwrap();
+    let mut gw =
+        Gateway::new(e, router_by_name("ED").unwrap(), store, pool, 5.0, 5);
+    let report = openloop::run_dataset(
+        &mut gw,
+        &ds,
+        &OpenLoopConfig {
+            arrivals: ArrivalProcess::Poisson { rate_rps: 120.0 },
+            queue_capacity: 3,
+            seed: 67,
+            churn: Some(ChurnConfig {
+                mtbf_s: f64::INFINITY,
+                mttr_s: 0.2,
+                probe_interval_s: 0.05,
+                probe_timeout_s: 0.02,
+                suspect_after: 1,
+                warmup_s: 0.1,
+                warmup_penalty: 0.5,
+                policy: ResiliencePolicy::Retry { budget: 3 },
+                retry_backoff_s: 0.04,
+                hedge_cancel: false,
+                horizon_slack_s: 1.5,
+                seed: 71,
+            }),
+            slo: None,
+            adapt: None,
+            campaign: Some(CampaignConfig {
+                domain_size: 2,
+                domain_mtbf_s: 0.15,
+                domain_mttr_s: 0.12,
+                gateway_mtbf_s: f64::INFINITY,
+                gateway_mttr_s: 0.1,
+                seed: 73,
+            }),
+            obs: None,
+        },
+    )
+    .unwrap();
+    report.to_json().pretty()
+}
+
+/// One fixed-seed fleet campaign run (domain outages + gateway kills
+/// with deterministic re-homing over 3 shards), serialized with its
+/// campaign block.
+fn fleet_campaign_dump(e: &Engine) -> String {
+    let ds = ecore::dataset::coco::build(16, 53);
+    let mut fl = FleetBuilder::new(e, base_store())
+        .build(
+            router_by_name("LE").unwrap(),
+            5.0,
+            &FleetConfig {
+                n_nodes: 9,
+                n_shards: 3,
+                perturb: 0.1,
+                queue_capacity: 2,
+                dispatch: DispatchPolicy::LeastLoaded,
+                n_sources: 4,
+                seed: 79,
+                drift: None,
+                churn: Some(ChurnConfig {
+                    mtbf_s: 0.2,
+                    mttr_s: 0.15,
+                    probe_interval_s: 0.04,
+                    probe_timeout_s: 0.02,
+                    suspect_after: 1,
+                    warmup_s: 0.1,
+                    warmup_penalty: 0.5,
+                    policy: ResiliencePolicy::Retry { budget: 3 },
+                    retry_backoff_s: 0.04,
+                    hedge_cancel: false,
+                    horizon_slack_s: 1.0,
+                    seed: 83,
+                }),
+                slo: None,
+                adapt: None,
+                campaign: Some(CampaignConfig {
+                    domain_size: 3,
+                    domain_mtbf_s: 0.3,
+                    domain_mttr_s: 0.12,
+                    gateway_mtbf_s: 0.25,
+                    gateway_mttr_s: 0.12,
+                    seed: 89,
+                }),
+                obs: None,
+                threads: 1,
+            },
+        )
+        .unwrap();
+    let report = fleet::run_dataset(
+        &mut fl,
+        &ds,
+        &ArrivalProcess::Poisson { rate_rps: 200.0 },
+        79,
     )
     .unwrap();
     report.to_json().pretty()
@@ -420,6 +537,37 @@ fn none_adapt_config_leaves_existing_traces_untouched() {
     assert!(!slo_dump(&e).contains("\"adapt\""));
 }
 
+#[test]
+fn campaign_report_serializes_bit_identically_across_runs() {
+    let e = engine();
+    let a = campaign_dump(&e);
+    assert_eq!(a, campaign_dump(&e));
+    // the block only serializes when a campaign ran
+    assert!(a.contains("\"campaign\""));
+    assert!(a.contains("\"domain_outages\""));
+}
+
+#[test]
+fn fleet_campaign_report_serializes_bit_identically_across_runs() {
+    let e = engine();
+    let a = fleet_campaign_dump(&e);
+    assert_eq!(a, fleet_campaign_dump(&e));
+    assert!(a.contains("\"campaign\""));
+    assert!(a.contains("\"gw_kills\""));
+}
+
+/// Same shape contract for campaigns: `campaign: None` injects zero
+/// plan events and adds zero report keys, so every pre-campaign dump —
+/// and therefore every pinned golden above — keeps its exact bytes.
+#[test]
+fn none_campaign_config_leaves_existing_traces_untouched() {
+    let e = engine();
+    assert!(!openloop_dump(&e).contains("\"campaign\""));
+    assert!(!fleet_dump(&e).contains("\"campaign\""));
+    assert!(!churn_dump(&e).contains("\"campaign\""));
+    assert!(!fleet_churn_dump(&e).contains("\"campaign\""));
+}
+
 fn check_golden(name: &str, dump: &str) {
     check_golden_file(&format!("{name}.json"), dump);
 }
@@ -495,6 +643,18 @@ fn golden_fleet_adapt_trace_is_pinned() {
     check_golden("fleet_adapt_trace", &fleet_adapt_dump(&e));
 }
 
+#[test]
+fn golden_campaign_trace_is_pinned() {
+    let e = engine();
+    check_golden("campaign_trace", &campaign_dump(&e));
+}
+
+#[test]
+fn golden_fleet_campaign_trace_is_pinned() {
+    let e = engine();
+    check_golden("fleet_campaign_trace", &fleet_campaign_dump(&e));
+}
+
 /// One fixed-seed churn + SLO open-loop run with the obs layer on,
 /// exported to a scratch dir; returns the `spans.jsonl` and
 /// `series.jsonl` bytes. Small head/tail/sample keep the pinned
@@ -528,11 +688,13 @@ fn obs_export_dump(e: &Engine) -> (String, String) {
                 warmup_penalty: 0.5,
                 policy: ResiliencePolicy::Retry { budget: 3 },
                 retry_backoff_s: 0.04,
+                hedge_cancel: false,
                 horizon_slack_s: 1.5,
                 seed: 29,
             }),
             slo: Some(ecore::workload::slo::SloConfig::default()),
             adapt: None,
+            campaign: None,
             obs: Some(ObsConfig {
                 tick_s: 0.1,
                 span_head: 4,

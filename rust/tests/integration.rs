@@ -278,6 +278,7 @@ fn gateway_cost_is_accounted_exactly_once_per_request() {
                 churn: None,
                 slo: None,
                 adapt: None,
+                campaign: None,
                 obs: None,
             },
         )
@@ -345,11 +346,13 @@ fn retried_requests_pay_gateway_cost_exactly_once() {
                 warmup_penalty: 0.5,
                 policy: ResiliencePolicy::Retry { budget: 8 },
                 retry_backoff_s: 0.02,
+                hedge_cancel: false,
                 horizon_slack_s: 2.0,
                 seed: 11,
             }),
             slo: None,
             adapt: None,
+            campaign: None,
             obs: None,
         },
     )

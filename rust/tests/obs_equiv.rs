@@ -61,6 +61,7 @@ fn churn_cfg() -> ChurnConfig {
         warmup_penalty: 0.5,
         policy: ResiliencePolicy::Retry { budget: 3 },
         retry_backoff_s: 0.04,
+        hedge_cancel: false,
         horizon_slack_s: 1.5,
         seed: 29,
     }
@@ -93,6 +94,7 @@ fn openloop_dump(obs: Option<ObsConfig>) -> String {
             churn: Some(churn_cfg()),
             slo: Some(ecore::workload::slo::SloConfig::default()),
             adapt: None,
+            campaign: None,
             obs,
         },
     )
@@ -128,6 +130,7 @@ fn fleet_dump(threads: usize, obs: Option<ObsConfig>) -> String {
             churn: Some(churn_cfg()),
             slo: Some(ecore::workload::slo::SloConfig::default()),
             adapt: None,
+            campaign: None,
             obs,
             threads,
         },

@@ -14,8 +14,9 @@ use ecore::adapt::AdaptConfig;
 use ecore::dataset::{GtBox, Scene};
 use ecore::devices::drift::DriftConfig;
 use ecore::fleet::parallel::{run_frames_threads, ParallelFleetSpec};
-use ecore::fleet::{DispatchPolicy, FleetConfig};
+use ecore::fleet::{DispatchPolicy, FleetConfig, FleetReport};
 use ecore::gateway::router_by_name;
+use ecore::lifecycle::campaign::CampaignConfig;
 use ecore::lifecycle::{ChurnConfig, ResiliencePolicy};
 use ecore::router::{PairKey, PairProfile, ProfileStore};
 use ecore::workload::openloop::ArrivalProcess;
@@ -45,21 +46,21 @@ fn base_store() -> ProfileStore {
 /// serialized. Frames and the arrival process are derived from the
 /// seeds so every call with equal arguments sees an identical offered
 /// load.
-fn dump(
+fn run_report(
     router: &str,
     images: usize,
     ds_seed: u64,
     cfg: &FleetConfig,
     rate_rps: f64,
     run_seed: u64,
-) -> String {
+) -> FleetReport {
     let ds = ecore::dataset::coco::build(images, ds_seed);
     let frames: Vec<Scene> = ds.iter_scenes().collect();
     let gts: Vec<Vec<GtBox>> =
         frames.iter().map(|s| s.gt.clone()).collect();
     let artifacts = ecore::default_artifacts_dir();
     let base = base_store();
-    let report = run_frames_threads(
+    run_frames_threads(
         &ParallelFleetSpec {
             artifacts_dir: &artifacts,
             base: &base,
@@ -72,8 +73,20 @@ fn dump(
         &ArrivalProcess::Poisson { rate_rps },
         run_seed,
     )
-    .unwrap();
-    report.to_json().pretty()
+    .unwrap()
+}
+
+fn dump(
+    router: &str,
+    images: usize,
+    ds_seed: u64,
+    cfg: &FleetConfig,
+    rate_rps: f64,
+    run_seed: u64,
+) -> String {
+    run_report(router, images, ds_seed, cfg, rate_rps, run_seed)
+        .to_json()
+        .pretty()
 }
 
 /// Assert the `threads: 1` (sequential) dump equals the dump at every
@@ -113,6 +126,7 @@ fn plain_cfg(n_nodes: usize, n_shards: usize) -> FleetConfig {
         churn: None,
         slo: None,
         adapt: None,
+        campaign: None,
         obs: None,
         threads: 1,
     }
@@ -129,6 +143,7 @@ fn churn_cfg(policy: ResiliencePolicy) -> ChurnConfig {
         warmup_penalty: 0.5,
         policy,
         retry_backoff_s: 0.04,
+        hedge_cancel: false,
         horizon_slack_s: 1.0,
         seed: 37,
     }
@@ -234,6 +249,134 @@ fn everything_on_matches_sequential() {
     assert_equiv("everything", "ED", 18, 91, &cfg, 240.0, 61);
 }
 
+fn campaign_cfg(
+    domain_size: usize,
+    domain_mtbf_s: f64,
+    gateway_mtbf_s: f64,
+) -> CampaignConfig {
+    CampaignConfig {
+        domain_size,
+        domain_mtbf_s,
+        domain_mttr_s: 0.1,
+        gateway_mtbf_s,
+        gateway_mttr_s: 0.12,
+        seed: 41,
+    }
+}
+
+#[test]
+fn campaign_domains_match_sequential() {
+    // Domain-wide outages layered on per-node churn: correlated
+    // crash/restore bursts plus the independent flips, merged into
+    // one plan, must replay identically from the per-shard heaps.
+    let cfg = FleetConfig {
+        churn: Some(churn_cfg(ResiliencePolicy::Retry { budget: 2 })),
+        campaign: Some(campaign_cfg(3, 0.2, f64::INFINITY)),
+        ..plain_cfg(9, 3)
+    };
+    assert_equiv("campaign-domains", "LE", 16, 71, &cfg, 200.0, 43);
+}
+
+#[test]
+fn campaign_gateway_failover_matches_sequential() {
+    // Gateway kills force deterministic re-homing: orphans adopted by
+    // surviving shards, membership bootstrapped from scratch, then
+    // re-adopted on recovery — none of which may depend on the worker
+    // count.
+    let cfg = FleetConfig {
+        churn: Some(churn_cfg(ResiliencePolicy::Retry { budget: 2 })),
+        campaign: Some(campaign_cfg(3, 0.35, 0.25)),
+        ..plain_cfg(9, 3)
+    };
+    assert_equiv("campaign-gateway", "ED", 16, 72, &cfg, 200.0, 44);
+}
+
+#[test]
+fn hedge_cancellation_matches_sequential() {
+    // Cancellation-on-first-response mutates the losing sibling's
+    // node mid-flight (slot release + partial energy charge); the
+    // effect order is pinned, so dumps must stay bit-identical.
+    let cfg = FleetConfig {
+        churn: Some(ChurnConfig {
+            hedge_cancel: true,
+            ..churn_cfg(ResiliencePolicy::Hedge)
+        }),
+        ..plain_cfg(6, 2)
+    };
+    assert_equiv("hedge-cancel", "LE", 16, 78, &cfg, 200.0, 32);
+}
+
+#[test]
+fn campaign_ledger_invariant_under_randomized_schedules() {
+    // Property: `offered == served + dropped + lost` survives any
+    // campaign shape (domain-only, gateway-only, both), any
+    // resilience policy, with and without hedge cancellation, at
+    // every worker count. A campaign may black out whole shards but
+    // no request may vanish from the conservation ledger.
+    let mut z: u64 = 0x0CA4_5EED_0BAD_CAFE;
+    let mut next = move || {
+        z ^= z << 13;
+        z ^= z >> 7;
+        z ^= z << 17;
+        z
+    };
+    for round in 0..6u64 {
+        let policy = match round % 3 {
+            0 => ResiliencePolicy::Drop,
+            1 => ResiliencePolicy::Retry { budget: 2 },
+            _ => ResiliencePolicy::Hedge,
+        };
+        let camp = CampaignConfig {
+            domain_size: 2 + (next() % 3) as usize,
+            domain_mtbf_s: if next() % 4 == 0 {
+                f64::INFINITY
+            } else {
+                0.1 + 0.05 * (next() % 4) as f64
+            },
+            domain_mttr_s: 0.08,
+            gateway_mtbf_s: if next() % 2 == 0 {
+                0.3
+            } else {
+                f64::INFINITY
+            },
+            gateway_mttr_s: 0.1,
+            seed: next(),
+        };
+        let n_shards = 2 + (round % 2) as usize;
+        let cfg = FleetConfig {
+            churn: Some(ChurnConfig {
+                hedge_cancel: next() % 2 == 0,
+                ..churn_cfg(policy)
+            }),
+            campaign: Some(camp),
+            ..plain_cfg(4 * n_shards, n_shards)
+        };
+        let ds_seed = next();
+        let run_seed = next();
+        for threads in [1usize, 4] {
+            let report = run_report(
+                "ED",
+                14,
+                ds_seed,
+                &FleetConfig { threads, ..cfg.clone() },
+                180.0,
+                run_seed,
+            );
+            let lost =
+                report.churn.as_ref().map_or(0, |c| c.lost);
+            assert_eq!(
+                report.offered,
+                report.requests() + report.dropped + lost,
+                "round {round} threads {threads}: ledger violated \
+                 (served {} dropped {} lost {lost} of {} offered)",
+                report.requests(),
+                report.dropped,
+                report.offered
+            );
+        }
+    }
+}
+
 #[test]
 fn randomized_config_sweep_matches_sequential() {
     // A deterministic xorshift walk over fleet shapes, dispatch
@@ -277,6 +420,7 @@ fn randomized_config_sweep_matches_sequential() {
                 None
             },
             adapt: None,
+            campaign: None,
             obs: None,
             threads: 1,
         };
